@@ -1,0 +1,51 @@
+//! Quickstart: the public API in ~60 lines.
+//!
+//! Builds the paper's three schemes, simulates one straggler-prone cluster
+//! at N = 40, and prints computation / decode / finishing times — the cells
+//! behind one x-position of Fig. 2.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hcec::rng::default_rng;
+use hcec::sim::{simulate_static, CostModel, SpeedModel, WorkerSpeeds};
+use hcec::tas::{Bicec, Cec, Mlcec, Scheme};
+use hcec::workload::JobSpec;
+
+fn main() {
+    // The paper's Sec. 3 configuration.
+    let job = JobSpec::paper_square(); // A: 2400x2400, B: 2400x2400
+    let n = 40; // available workers
+    let cost = CostModel::paper_default();
+
+    // One cluster draw: each worker straggles w.p. 0.5 (10x slower).
+    let mut rng = default_rng(2021);
+    let speeds = WorkerSpeeds::sample(&SpeedModel::paper_default(), n, &mut rng);
+
+    // The three task-allocation schemes.
+    let cec = Cec::new(10, 20); //                 (K, S)
+    let mlcec = Mlcec::new(10, 20); //             (K, S), linear-ramp d-levels
+    let bicec = Bicec::new(800, 80, n); //         (K_bicec, S_bicec, N_max)
+
+    println!("one cluster draw at N = {n} (uwv = 2400^3, p_straggle = 0.5):\n");
+    println!(
+        "{:<8} {:>14} {:>12} {:>14}",
+        "scheme", "computation_s", "decode_s", "finishing_s"
+    );
+    for scheme in [&cec as &dyn Scheme, &mlcec, &bicec] {
+        let r = simulate_static(scheme, n, job, &cost, &speeds);
+        println!(
+            "{:<8} {:>14.4} {:>12.4} {:>14.4}",
+            scheme.name(),
+            r.computation_time,
+            r.decode_time,
+            r.finishing_time()
+        );
+    }
+
+    // Averages are what the paper plots; see `hcec figure 2a..2d` or
+    // examples/straggler_sweep.rs for the full series.
+    println!("\nallocation snapshot (who holds which recovery set):");
+    let alloc = mlcec.allocate(8.max(20)); // MLCEC at N = 20
+    let d = alloc.contributors_per_set().unwrap();
+    println!("MLCEC d-levels at N = 20: {d:?} (nondecreasing, sum = S*N)");
+}

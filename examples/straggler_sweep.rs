@@ -1,0 +1,31 @@
+//! Straggler-model robustness (Ext-T3): does the paper's conclusion —
+//! BICEC wins Fig. 2c, MLCEC wins Fig. 2d at large N — survive changes to
+//! the (unreported) slowdown factor and straggle probability?
+//!
+//! Run: `cargo run --release --example straggler_sweep`
+
+use hcec::config::ExperimentConfig;
+use hcec::figures::straggler_sweep_table;
+use hcec::metrics::write_csv;
+
+fn main() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.trials = 12;
+
+    println!("Fig. 2c conclusion vs straggler model (square, N = 40):\n");
+    let table = straggler_sweep_table(&cfg, &[2.0, 5.0, 10.0, 20.0], &[0.25, 0.5, 0.75]);
+    println!("{}", table.render());
+
+    let tf = cfg.clone().tall_fat();
+    println!("Fig. 2d conclusion vs straggler model (tall x fat, N = 40):\n");
+    let table_tf = straggler_sweep_table(&tf, &[2.0, 5.0, 10.0, 20.0], &[0.25, 0.5, 0.75]);
+    println!("{}", table_tf.render());
+
+    if let Err(e) = write_csv(&table, "results/ext_t3_square.csv")
+        .and_then(|_| write_csv(&table_tf, "results/ext_t3_tallfat.csv"))
+    {
+        eprintln!("csv write skipped: {e}");
+    } else {
+        println!("wrote results/ext_t3_square.csv and results/ext_t3_tallfat.csv");
+    }
+}

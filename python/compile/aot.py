@@ -1,0 +1,133 @@
+"""AOT lowering: JAX/Pallas (L2+L1) -> HLO text artifacts for the rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is one jitted entry point of `model.py` lowered at the concrete
+shapes the rust coordinator executes. `manifest.txt` describes the I/O
+signature of every artifact in a line format the rust side parses:
+
+    <name>|in=f32[10,10];f32[10,2,240]|out=f32[10,2,240]
+
+All modules are lowered with return_tuple=True, so outputs are 1-tuples on
+the PJRT side (rust unwraps with `to_tuple1`).
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--preset end_to_end]
+"""
+
+import argparse
+import os
+
+import jax
+from jax import numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+_DTYPE_NAMES = {"float32": "f32", "bfloat16": "bf16", "float64": "f64"}
+
+
+def _fmt(s) -> str:
+    dt = _DTYPE_NAMES.get(str(s.dtype), str(s.dtype))
+    return f"{dt}[{','.join(str(d) for d in s.shape)}]"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Artifact presets.
+#
+# `end_to_end` matches examples/end_to_end.rs: (u, w, v) = (240, 240, 240),
+# CEC/MLCEC with K = 10, N_max = 12 (encoded task Â_n: 24 rows -> 12 subtasks
+# of 2 rows), BICEC with K = 24, S = 4 (48 encoded subtasks of 10 rows).
+# `smoke` is a tiny set for fast pytest round-trips.
+# ---------------------------------------------------------------------------
+
+def preset_end_to_end():
+    u = w = v = 240
+    k, n_max = 10, 12
+    rows_task = u // k             # 24 rows per encoded task
+    rows_sub = rows_task // n_max  # 2 rows per CEC/MLCEC subtask
+    kb = 24                        # BICEC code dimension (exact-recovery scale)
+    rows_bic = u // kb             # 10 rows per BICEC subtask
+    return [
+        # (name, fn, example_args)
+        ("subtask_mm_2x240x240", model.subtask_product,
+         (spec(rows_sub, w), spec(w, v))),
+        ("subtask_mm_10x240x240", model.subtask_product,
+         (spec(rows_bic, w), spec(w, v))),
+        ("task_mm_24x240x240", model.subtask_product,
+         (spec(rows_task, w), spec(w, v))),
+        ("direct_mm_240x240x240", model.direct_matmul,
+         (spec(u, w), spec(w, v))),
+        ("decode_k10_r2_v240", model.decode_combine,
+         (spec(k, k), spec(k, rows_sub, v))),
+        ("decode_k24_r10_v240", lambda c, s: model.decode_combine(c, s, mxu=True),
+         (spec(kb, kb), spec(kb, rows_bic, v))),
+        ("encode_n12_k10_r24_w240", model.encode_stack,
+         (spec(n_max, k), spec(k, rows_task, w))),
+        ("fused_encode_mm_n12_k10", model.encode_then_product,
+         (spec(n_max, k), spec(k, rows_task, w), spec(w, v))),
+    ]
+
+
+def preset_smoke():
+    return [
+        ("smoke_mm_4x8x4", model.subtask_product, (spec(4, 8), spec(8, 4))),
+        ("smoke_decode_k3_r2_v4", model.decode_combine,
+         (spec(3, 3), spec(3, 2, 4))),
+    ]
+
+
+PRESETS = {"end_to_end": preset_end_to_end, "smoke": preset_smoke}
+
+
+def build(out_dir: str, preset: str) -> list[str]:
+    artifacts = PRESETS[preset]()
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    for name, fn, args in artifacts:
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shape = jax.eval_shape(fn, *args)
+        ins = ";".join(_fmt(a) for a in args)
+        manifest_lines.append(f"{name}|in={ins}|out={_fmt(out_shape)}")
+        print(f"  {name}: {len(text)} chars -> {path}")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    return manifest_lines
+
+
+def main():
+    p = argparse.ArgumentParser(description="AOT-lower HCEC model entry points")
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--preset", default="end_to_end", choices=sorted(PRESETS))
+    # Back-compat with the original Makefile target signature (--out FILE).
+    p.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = p.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    lines = build(out_dir or ".", args.preset)
+    print(f"wrote {len(lines)} artifacts + manifest to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

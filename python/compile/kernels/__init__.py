@@ -1,0 +1,10 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+`matmul`   — tiled MXU product, the per-subtask hot path.
+`combine`  — coded combine (MDS encode/decode contraction), VPU and MXU forms.
+`ref`      — pure-jnp oracles; pytest asserts kernel == ref.
+`tiling`   — shared tile-size selection + VMEM footprint estimate.
+"""
+
+from .combine import coded_combine, coded_combine_mxu  # noqa: F401
+from .matmul import matmul  # noqa: F401

@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: coded combine — MDS encode and decode.
+
+Encode (generator rows x data blocks) and decode (inverse-Vandermonde rows x
+completed encoded outputs) are the same contraction:
+
+    out[p] = sum_k coeffs[p, k] * stack[k]        stack[k]: (r, c) blocks
+
+On TPU this is VPU work (broadcast scalar x block, accumulate); the grid
+walks (p, r-tiles, k) so each step holds one (br, c-tile) block in VMEM.
+A matmul-shaped alternative (reshape stack to (k, r*c) and hit the MXU) is
+provided as `coded_combine_mxu`; the figure benches compare both (DESIGN.md
+Ext-T2 discussion of decode cost).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiling
+from .matmul import matmul
+
+
+def _combine_kernel(c_ref, s_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # c_ref is a (1, 1) block: one scalar coefficient per grid step.
+    o_ref[...] += c_ref[0, 0].astype(jnp.float32) * s_ref[0].astype(jnp.float32)
+
+
+@jax.jit
+def coded_combine(coeffs, stack):
+    """out[p] = sum_k coeffs[p, k] * stack[k]; (p,k) x (k,r,c) -> (p,r,c)."""
+    p, k = coeffs.shape
+    k2, r, c = stack.shape
+    assert k == k2, f"rank mismatch: {coeffs.shape} vs {stack.shape}"
+    br = tiling.largest_divisor_leq(r, tiling.MXU_TILE)
+    bc = tiling.largest_divisor_leq(c, tiling.MXU_TILE)
+
+    out = pl.pallas_call(
+        _combine_kernel,
+        grid=(p, r // br, k),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, l: (i, l)),
+            pl.BlockSpec((1, br, c), lambda i, j, l: (l, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, br, c), lambda i, j, l: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, r, c), jnp.float32),
+        interpret=True,
+    )(coeffs, stack)
+    return out.astype(stack.dtype)
+
+
+@jax.jit
+def coded_combine_mxu(coeffs, stack):
+    """Matmul-shaped combine: reshape blocks to rows and contract on the MXU.
+
+    Profitable when k is large (BICEC: k = 800) — the VPU version walks the
+    grid k times per output tile while this runs one (p, k) x (k, r*c)
+    product with k-tiled accumulation.
+    """
+    p, k = coeffs.shape
+    k2, r, c = stack.shape
+    assert k == k2
+    flat = stack.reshape(k, r * c)
+    out = matmul(coeffs.astype(stack.dtype), flat)
+    return out.reshape(p, r, c)

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: tiled matrix product — the per-worker hot path.
+
+The paper's unit of work is one encoded subtask `Â_{n,m} @ B`. On TPU this
+is an MXU-bound product; we tile for VMEM with BlockSpecs over a
+(M/bm, N/bn, K/bk) grid and accumulate in f32. `interpret=True` everywhere:
+the CPU PJRT plugin cannot run Mosaic custom-calls, so interpret-mode is the
+correctness path and the TPU numbers in DESIGN.md §Perf are estimated from
+the BlockSpec footprint (see `tiling.vmem_bytes`).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiling
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    # Grid axis 2 walks the contraction; zero the accumulator tile on the
+    # first step, then accumulate an MXU-shaped partial product per step.
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "block_n"))
+def matmul(a, b, *, block_m=None, block_k=None, block_n=None):
+    """Tiled product (m, k) x (k, n) -> (m, n); f32 accumulation.
+
+    Tile sizes default to the MXU-friendly divisors from `tiling`; callers
+    (benches, hypothesis sweeps) may pin them to exercise specific shapes.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch: {a.shape} x {b.shape}"
+    bm0, bk0, bn0 = tiling.matmul_tiles(m, k, n)
+    bm = block_m or bm0
+    bk = block_k or bk0
+    bn = block_n or bn0
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+    return out.astype(a.dtype)

@@ -1,0 +1,44 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an entry here with identical
+semantics; pytest (python/tests/) asserts allclose between the two across a
+hypothesis-driven sweep of shapes and dtypes. These are also the L2
+fallbacks: `model.py` can be built against the references (ref_mode=True) to
+isolate kernel bugs from graph bugs.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(a, b):
+    """Plain product: (m, k) x (k, n) -> (m, n), f32 accumulate."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def coded_combine(coeffs, stack):
+    """Linear combination of a stack of equal-shaped blocks.
+
+    coeffs: (p, k) real combination matrix (encode generator rows or the
+            inverse-Vandermonde rows used for decode).
+    stack:  (k, r, c) the k blocks being combined.
+    returns (p, r, c) with out[i] = sum_j coeffs[i, j] * stack[j].
+
+    Encode and decode in MDS coded computing are the *same* contraction with
+    different coefficient matrices, so one kernel serves both.
+    """
+    return jnp.einsum(
+        "pk,krc->prc", coeffs, stack, preferred_element_type=jnp.float32
+    ).astype(stack.dtype)
+
+
+def encoded_subtask_product(a_block, b):
+    """The per-worker hot path: one encoded subtask `Â_{n,m} @ B`."""
+    return matmul(a_block, b)
+
+
+def encode_then_product(coeffs, a_stack, b):
+    """Fused encode + product: out[p] = (sum_k coeffs[p,k] A_k) @ B."""
+    enc = coded_combine(coeffs, a_stack)  # (p, r, w)
+    return jnp.einsum(
+        "prw,wv->prv", enc, b, preferred_element_type=jnp.float32
+    ).astype(b.dtype)

@@ -1,0 +1,37 @@
+"""Tile-size selection shared by the Pallas kernels.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the MXU wants 128x128
+operand tiles and the VPU lane width is 128, so we tile each dimension with
+the largest divisor not exceeding the MXU-friendly cap. Shapes in this
+project are always divisible by small factors (the coordinator zero-pads per
+the paper), so the divisor search terminates at a sane tile quickly.
+"""
+
+MXU_TILE = 128
+# Contraction-dim cap: 4 MXU passes per block keeps the VMEM working set of
+# an (bm, bk) + (bk, bn) + (bm, bn) triple under ~1 MiB for f32.
+K_TILE_CAP = 512
+
+
+def largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of `n` that is <= `cap` (>=1)."""
+    if n <= cap:
+        return n
+    for d in range(cap, 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def matmul_tiles(m: int, k: int, n: int) -> tuple[int, int, int]:
+    """(bm, bk, bn) tile sizes for an (m, k) x (k, n) product."""
+    return (
+        largest_divisor_leq(m, MXU_TILE),
+        largest_divisor_leq(k, K_TILE_CAP),
+        largest_divisor_leq(n, MXU_TILE),
+    )
+
+
+def vmem_bytes(bm: int, bk: int, bn: int, itemsize: int = 4) -> int:
+    """Estimated VMEM working set of one matmul grid step (operands + acc)."""
+    return itemsize * (bm * bk + bk * bn) + 4 * bm * bn

@@ -1,0 +1,72 @@
+"""L2: the paper's compute graph in JAX, calling the L1 Pallas kernels.
+
+Hierarchical coded elastic computing decomposes `g(x) = A @ B` into linear
+pieces, MDS-encodes them, and recovers from any K completed pieces. The
+graph entry points here are what the rust coordinator executes via PJRT:
+
+  subtask_product      — one encoded subtask `Â_{n,m} @ B` (worker hot path)
+  decode_combine       — inverse-Vandermonde rows x completed outputs
+  encode_stack         — generator rows x data blocks (master, setup path)
+  encode_then_product  — fused encode+product (ablation: skips the encoded-A
+                         materialisation round-trip through HBM)
+  direct_matmul        — uncoded product, the verification baseline
+
+Each is lowered once by `aot.py` at the concrete shapes the coordinator
+needs and never re-traced at runtime. `ref_mode=True` swaps the Pallas
+kernels for the pure-jnp oracles to isolate kernel bugs from graph bugs.
+"""
+
+from . import kernels
+from .kernels import ref
+
+
+def _impl(ref_mode: bool):
+    return ref if ref_mode else kernels
+
+
+def subtask_product(a_block, b, *, ref_mode: bool = False):
+    """One encoded subtask: (r, w) x (w, v) -> (r, v)."""
+    if ref_mode:
+        return ref.matmul(a_block, b)
+    return kernels.matmul(a_block, b)
+
+
+def decode_combine(inv_rows, y_stack, *, ref_mode: bool = False, mxu: bool = False):
+    """Recover original blocks from K completed encoded outputs.
+
+    inv_rows: (k, k) rows of the inverse of the Vandermonde submatrix for
+              the k workers that finished; y_stack: (k, r, v) their outputs.
+    With `mxu=True` uses the matmul-shaped combine (wins for large k, i.e.
+    BICEC's k=800 — see combine.py).
+    """
+    if ref_mode:
+        return ref.coded_combine(inv_rows, y_stack)
+    fn = kernels.coded_combine_mxu if mxu else kernels.coded_combine
+    return fn(inv_rows, y_stack)
+
+
+def encode_stack(gen_rows, a_stack, *, ref_mode: bool = False, mxu: bool = False):
+    """Encode K data blocks into P coded blocks: (p,k) x (k,r,w) -> (p,r,w)."""
+    if ref_mode:
+        return ref.coded_combine(gen_rows, a_stack)
+    fn = kernels.coded_combine_mxu if mxu else kernels.coded_combine
+    return fn(gen_rows, a_stack)
+
+
+def encode_then_product(gen_rows, a_stack, b, *, ref_mode: bool = False):
+    """Fused encode + product: out[p] = (sum_k gen[p,k] A_k) @ B.
+
+    One HLO module instead of two; XLA fuses the combine into the matmul's
+    producer so the encoded Â never round-trips through HBM.
+    """
+    if ref_mode:
+        return ref.encode_then_product(gen_rows, a_stack, b)
+    p, k = gen_rows.shape
+    _, r, w = a_stack.shape
+    enc = kernels.coded_combine(gen_rows, a_stack)  # (p, r, w)
+    return kernels.matmul(enc.reshape(p * r, w), b).reshape(p, r, -1)
+
+
+def direct_matmul(a, b, *, ref_mode: bool = False):
+    """Uncoded A @ B — end-to-end verification baseline."""
+    return subtask_product(a, b, ref_mode=ref_mode)

@@ -1,0 +1,148 @@
+"""Kernel vs ref allclose — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/dtypes of the Pallas kernels (interpret mode)
+against the pure-jnp oracles in kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref, tiling
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Interpret-mode pallas is slow; keep dims small but structurally varied.
+DIMS = st.sampled_from([1, 2, 3, 4, 6, 8, 12, 16])
+SEEDS = st.integers(0, 2**31 - 1)
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- matmul --
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=SEEDS,
+       dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+def test_matmul_matches_ref(m, k, n, seed, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a, b = rand(k1, (m, k), dtype), rand(k2, (k, n), dtype)
+    got = kernels.matmul(a, b)
+    want = ref.matmul(a, b)
+    assert got.shape == (m, n) and got.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype))
+
+
+def test_matmul_tiled_multistep_grid():
+    """Shapes that force >1 grid step on every axis (accumulation path)."""
+    a = jnp.arange(32 * 24, dtype=jnp.float32).reshape(32, 24) / 100.0
+    b = jnp.arange(24 * 40, dtype=jnp.float32).reshape(24, 40) / 100.0
+    got = kernels.matmul(a, b, block_m=8, block_k=6, block_n=10)
+    np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_identity():
+    a = jnp.eye(8, dtype=jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(0), (8, 5), jnp.float32)
+    np.testing.assert_allclose(kernels.matmul(a, b), b, rtol=1e-6, atol=1e-6)
+
+
+def test_matmul_rejects_contraction_mismatch():
+    a = jnp.zeros((4, 5), jnp.float32)
+    b = jnp.zeros((6, 4), jnp.float32)
+    with pytest.raises(AssertionError):
+        kernels.matmul(a, b)
+
+
+def test_matmul_end_to_end_artifact_shape():
+    """The exact shape the rust worker hot path executes: (2,240)x(240,240)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    a, b = rand(k1, (2, 240), jnp.float32), rand(k2, (240, 240), jnp.float32)
+    np.testing.assert_allclose(
+        kernels.matmul(a, b), ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------- combine --
+
+@settings(max_examples=25, deadline=None)
+@given(p=DIMS, k=DIMS, r=DIMS, c=DIMS, seed=SEEDS)
+def test_coded_combine_matches_ref(p, k, r, c, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    coeffs = rand(k1, (p, k), jnp.float32)
+    stack = rand(k2, (k, r, c), jnp.float32)
+    got = kernels.coded_combine(coeffs, stack)
+    np.testing.assert_allclose(
+        got, ref.coded_combine(coeffs, stack), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(p=DIMS, k=DIMS, r=DIMS, c=DIMS, seed=SEEDS)
+def test_coded_combine_mxu_matches_vpu(p, k, r, c, seed):
+    """The MXU (matmul-shaped) and VPU combines are interchangeable."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    coeffs = rand(k1, (p, k), jnp.float32)
+    stack = rand(k2, (k, r, c), jnp.float32)
+    np.testing.assert_allclose(
+        kernels.coded_combine_mxu(coeffs, stack),
+        kernels.coded_combine(coeffs, stack), rtol=1e-4, atol=1e-4)
+
+
+def test_combine_identity_coeffs_is_passthrough():
+    stack = jax.random.normal(jax.random.PRNGKey(1), (4, 3, 5), jnp.float32)
+    out = kernels.coded_combine(jnp.eye(4, dtype=jnp.float32), stack)
+    np.testing.assert_allclose(out, stack, rtol=1e-6, atol=1e-6)
+
+
+def test_combine_single_block_scaling():
+    stack = jnp.ones((1, 2, 2), jnp.float32)
+    out = kernels.coded_combine(jnp.array([[3.0]], jnp.float32), stack)
+    np.testing.assert_allclose(out, 3.0 * stack)
+
+
+def test_combine_is_encode_decode_inverse():
+    """coded_combine(V) then coded_combine(V^-1) recovers the data exactly
+    (up to f32) — the algebraic heart of MDS coded computing."""
+    rng = np.random.default_rng(0)
+    k = 6
+    # Chebyshev-point Vandermonde (what the rust codes/ module uses).
+    pts = np.cos((2 * np.arange(k) + 1) / (2 * k) * np.pi)
+    v = np.vander(pts, k, increasing=True).astype(np.float32)
+    inv = np.linalg.inv(v.astype(np.float64)).astype(np.float32)
+    data = rng.standard_normal((k, 4, 8)).astype(np.float32)
+    enc = kernels.coded_combine(jnp.asarray(v), jnp.asarray(data))
+    dec = kernels.coded_combine(jnp.asarray(inv), enc)
+    np.testing.assert_allclose(dec, data, rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------- tiling --
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 4096), cap=st.integers(1, 512))
+def test_largest_divisor_divides_and_bounded(n, cap):
+    d = tiling.largest_divisor_leq(n, cap)
+    assert 1 <= d <= min(n, cap)
+    assert n % d == 0
+
+
+def test_matmul_tiles_divide_shape():
+    for m, k, n in [(2, 240, 240), (240, 240, 240), (24, 240, 240), (7, 13, 3)]:
+        bm, bk, bn = tiling.matmul_tiles(m, k, n)
+        assert m % bm == 0 and k % bk == 0 and n % bn == 0
+
+
+def test_vmem_budget_for_artifact_shapes():
+    """DESIGN.md §Perf: each grid step's working set stays under 8 MiB."""
+    for m, k, n in [(2, 240, 240), (24, 240, 240), (240, 240, 240)]:
+        bm, bk, bn = tiling.matmul_tiles(m, k, n)
+        assert tiling.vmem_bytes(bm, bk, bn) <= 8 * 2**20

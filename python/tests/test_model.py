@@ -1,0 +1,94 @@
+"""L2 graph tests: entry-point shapes, fused-vs-composed equivalence, and a
+full coded-computing round trip (encode -> subtask products -> decode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def chebyshev_vandermonde(n, k):
+    """(n, k) generator: rows evaluate polynomials at Chebyshev points —
+    mirrors rust/src/codes/vandermonde.rs."""
+    pts = np.cos((2 * np.arange(n) + 1) / (2 * n) * np.pi)
+    return np.vander(pts, k, increasing=True).astype(np.float32)
+
+
+def test_subtask_product_shape_and_value():
+    a = jnp.full((2, 6), 0.5, jnp.float32)
+    b = jnp.full((6, 4), 2.0, jnp.float32)
+    out = model.subtask_product(a, b)
+    assert out.shape == (2, 4)
+    np.testing.assert_allclose(out, jnp.full((2, 4), 6.0))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fused_encode_product_matches_composed(seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    gen = jax.random.normal(k1, (5, 3), jnp.float32)
+    a_stack = jax.random.normal(k2, (3, 4, 6), jnp.float32)
+    b = jax.random.normal(k3, (6, 8), jnp.float32)
+    fused = model.encode_then_product(gen, a_stack, b)
+    enc = model.encode_stack(gen, a_stack)
+    composed = jnp.stack(
+        [model.subtask_product(enc[i], b) for i in range(enc.shape[0])])
+    np.testing.assert_allclose(fused, composed, rtol=1e-4, atol=1e-4)
+
+
+def test_ref_mode_matches_kernel_mode():
+    key = jax.random.PRNGKey(3)
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (8, 12), jnp.float32)
+    b = jax.random.normal(k2, (12, 8), jnp.float32)
+    np.testing.assert_allclose(
+        model.subtask_product(a, b),
+        model.subtask_product(a, b, ref_mode=True), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       k=st.sampled_from([2, 4, 6, 8, 10]),
+       extra=st.integers(0, 4))
+def test_full_coded_round_trip(seed, k, extra):
+    """The paper's pipeline at L2 granularity: partition A into k blocks,
+    encode to n = k + extra coded blocks, multiply each by B, decode from an
+    arbitrary k-subset of completed products, compare against direct A @ B."""
+    n = k + extra
+    rng = np.random.default_rng(seed)
+    u, w, v = 4 * k, 16, 12
+    a = rng.standard_normal((u, w)).astype(np.float32)
+    b = rng.standard_normal((w, v)).astype(np.float32)
+
+    a_stack = jnp.asarray(a.reshape(k, u // k, w))
+    gen = chebyshev_vandermonde(n, k)
+    encoded = model.encode_stack(jnp.asarray(gen), a_stack)  # (n, u/k, w)
+
+    # every worker computes its product; an adversarial subset "finishes"
+    products = jnp.stack(
+        [model.subtask_product(encoded[i], jnp.asarray(b)) for i in range(n)])
+    done = sorted(rng.choice(n, size=k, replace=False).tolist())
+
+    sub = gen[done, :]  # (k, k) Vandermonde submatrix of the finishers
+    inv = np.linalg.inv(sub.astype(np.float64)).astype(np.float32)
+    decoded = model.decode_combine(jnp.asarray(inv), products[jnp.asarray(done)])
+
+    direct = a @ b
+    got = np.asarray(decoded).reshape(u, v)
+    scale = max(1.0, float(np.abs(direct).max()))
+    np.testing.assert_allclose(got / scale, direct / scale, atol=2e-2)
+
+
+def test_decode_mxu_variant_matches():
+    rng = np.random.default_rng(1)
+    inv = rng.standard_normal((6, 6)).astype(np.float32)
+    stack = rng.standard_normal((6, 3, 10)).astype(np.float32)
+    np.testing.assert_allclose(
+        model.decode_combine(jnp.asarray(inv), jnp.asarray(stack), mxu=True),
+        model.decode_combine(jnp.asarray(inv), jnp.asarray(stack)),
+        rtol=1e-4, atol=1e-4)

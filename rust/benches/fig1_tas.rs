@@ -1,0 +1,26 @@
+//! Bench + regeneration for Fig. 1: the TAS grids at N ∈ {8, 6, 4}.
+//!
+//! Correctness of the exact paper layouts is asserted in unit tests
+//! (tas::mlcec, figures::fig1); this target regenerates the figure and
+//! times allocation construction (the operation a master performs at every
+//! elastic event, so it must be cheap).
+
+use hcec::bench::{header, Bench};
+use hcec::figures::{fig1_grid, fig1_table};
+use hcec::tas::{Bicec, Cec, Mlcec, Scheme};
+
+fn main() {
+    header("fig1_tas");
+    for n in [8, 6, 4] {
+        println!("{}", fig1_grid(n));
+    }
+    println!("{}", fig1_table().render());
+
+    println!("allocation construction cost (per elastic event):");
+    Bench::new("cec_allocate_n40").run(|| Cec::new(10, 20).allocate(40)).print();
+    Bench::new("mlcec_allocate_n40 (Alg 1)")
+        .run(|| Mlcec::new(10, 20).allocate(40))
+        .print();
+    Bench::new("bicec_allocate_n40").run(|| Bicec::new(800, 80, 40).allocate(40)).print();
+    Bench::new("mlcec_allocate_n8_fig1").run(|| Mlcec::new(2, 4).allocate(8)).print();
+}

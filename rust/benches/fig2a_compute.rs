@@ -1,0 +1,35 @@
+//! Fig. 2a — average computation time vs N (uwv = 2400^3).
+//!
+//! Paper shape to reproduce: BICEC < MLCEC < CEC for all N, BICEC ≈ 85%
+//! better than CEC at N = 40; times fall with N for every scheme.
+
+use hcec::bench::{header, Bench};
+use hcec::config::ExperimentConfig;
+use hcec::figures::fig2_table;
+use hcec::metrics::write_csv;
+use hcec::rng::default_rng;
+use hcec::sim::{simulate_static, CostModel, SpeedModel, WorkerSpeeds};
+use hcec::tas::Cec;
+
+fn trials() -> usize {
+    std::env::var("HCEC_BENCH_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(20)
+}
+
+fn main() {
+    header("fig2a_compute");
+    let cfg = ExperimentConfig { trials: trials(), ..Default::default() };
+    let table = fig2_table(&cfg, "2a");
+    println!("{}", table.render());
+    println!("paper: BICEC -85% vs CEC at N=40; MLCEC between.\n");
+    let _ = write_csv(&table, "results/fig2a.csv");
+
+    println!("simulator hot path:");
+    let cost = CostModel::paper_default();
+    let job = cfg.job;
+    let mut rng = default_rng(1);
+    let speeds = WorkerSpeeds::sample(&SpeedModel::paper_default(), 40, &mut rng);
+    let cec = Cec::new(10, 20);
+    Bench::new("simulate_static cec n40")
+        .run(|| simulate_static(&cec, 40, job, &cost, &speeds))
+        .print();
+}

@@ -1,0 +1,45 @@
+//! Fig. 2b — average decoding time vs N for (2400,2400,2400) and
+//! (2400,960,6000).
+//!
+//! Paper shape: BICEC decode >> CEC = MLCEC (both negligible); decode
+//! grows with v (the tall x fat case is slower); decode is ~flat in N.
+
+use hcec::bench::{header, Bench};
+use hcec::codes::RealMdsCode;
+use hcec::config::ExperimentConfig;
+use hcec::figures::fig2_table;
+use hcec::linalg::Matrix;
+use hcec::metrics::write_csv;
+use hcec::rng::default_rng;
+
+fn trials() -> usize {
+    std::env::var("HCEC_BENCH_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(20)
+}
+
+fn main() {
+    header("fig2b_decode");
+    let cfg = ExperimentConfig { trials: trials(), ..Default::default() };
+    let sq = fig2_table(&cfg, "2b");
+    println!("square (2400,2400,2400):\n{}", sq.render());
+    let tf_cfg = cfg.clone().tall_fat();
+    let tf = fig2_table(&tf_cfg, "2b");
+    println!("tall x fat (2400,960,6000):\n{}", tf.render());
+    println!("paper: BICEC decode dominates; larger v decodes slower.\n");
+    let _ = write_csv(&sq, "results/fig2b_square.csv");
+    let _ = write_csv(&tf, "results/fig2b_tallfat.csv");
+
+    // Real decode cost at end-to-end scale: the K-way combine is the hot
+    // part; the K x K inverse is amortised.
+    println!("native decode micro-bench (end-to-end scale):");
+    let mut rng = default_rng(2);
+    let code = RealMdsCode::new(12, 10);
+    let data: Vec<Matrix> = (0..10).map(|_| Matrix::random(24, 240, &mut rng)).collect();
+    let coded = code.encode(&data);
+    let completed: Vec<(usize, &Matrix)> = (2..12).map(|i| (i, &coded[i])).collect();
+    Bench::new("decode k10 blocks 24x240")
+        .run(|| code.decode(&completed).unwrap())
+        .print();
+    Bench::new("decode_coeffs only (inverse)")
+        .run(|| code.decode_coeffs_f32(&[2, 3, 4, 5, 6, 7, 8, 9, 10, 11]).unwrap())
+        .print();
+}

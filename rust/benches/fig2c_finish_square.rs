@@ -1,0 +1,22 @@
+//! Fig. 2c — average finishing time vs N, square (2400,2400,2400).
+//!
+//! Paper headline: BICEC is best everywhere and ~45% better than CEC at
+//! N = 40 (computation gain minus its heavy decode).
+
+use hcec::bench::header;
+use hcec::config::ExperimentConfig;
+use hcec::figures::fig2_table;
+use hcec::metrics::write_csv;
+
+fn trials() -> usize {
+    std::env::var("HCEC_BENCH_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(20)
+}
+
+fn main() {
+    header("fig2c_finish_square");
+    let cfg = ExperimentConfig { trials: trials(), ..Default::default() };
+    let table = fig2_table(&cfg, "2c");
+    println!("{}", table.render());
+    println!("paper: BICEC best for all N; -45% vs CEC at N=40.");
+    let _ = write_csv(&table, "results/fig2c.csv");
+}

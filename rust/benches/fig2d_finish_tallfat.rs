@@ -1,0 +1,22 @@
+//! Fig. 2d — average finishing time vs N, tall x fat (2400,960,6000).
+//!
+//! Paper headline: BICEC's decode (∝ K_bicec·u·v) erases its computation
+//! edge at v = 6000; MLCEC is best for N ∈ {32..40} (~15% vs CEC at N=40).
+
+use hcec::bench::header;
+use hcec::config::ExperimentConfig;
+use hcec::figures::fig2_table;
+use hcec::metrics::write_csv;
+
+fn trials() -> usize {
+    std::env::var("HCEC_BENCH_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(20)
+}
+
+fn main() {
+    header("fig2d_finish_tallfat");
+    let cfg = ExperimentConfig { trials: trials(), ..Default::default() }.tall_fat();
+    let table = fig2_table(&cfg, "2d");
+    println!("{}", table.render());
+    println!("paper: MLCEC best for N in 32..40 (-15% at N=40); BICEC loses its edge.");
+    let _ = write_csv(&table, "results/fig2d.csv");
+}

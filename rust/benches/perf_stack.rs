@@ -1,0 +1,93 @@
+//! §Perf — whole-stack micro-benchmarks (EXPERIMENTS.md §Perf records the
+//! before/after of the optimisation pass against these numbers).
+//!
+//! L3 targets (DESIGN.md §8): DES >= 1e6 subtask-events/s; allocation-free
+//! event hot loop; decode dominated by the K·u·v combine, not the K x K
+//! solve; PJRT execute latency small vs a 240-scale subtask.
+
+use hcec::bench::{header, Bench, BenchResult};
+use hcec::codes::RealMdsCode;
+use hcec::linalg::{gemm, gemm_naive, Matrix};
+use hcec::rng::default_rng;
+use hcec::runtime::{artifacts_available, default_artifact_dir, Runtime};
+use hcec::sim::{simulate_static, simulate_trace, CostModel, ElasticTrace, SpeedModel, WorkerSpeeds};
+use hcec::tas::{Bicec, Cec, Mlcec, Scheme};
+use hcec::workload::JobSpec;
+
+fn events_per_sec(r: &BenchResult, events: f64) -> f64 {
+    events / r.summary.mean
+}
+
+fn main() {
+    header("perf_stack");
+    let cost = CostModel::paper_default();
+    let job = JobSpec::paper_square();
+    let mut rng = default_rng(3);
+    let speeds = WorkerSpeeds::sample(&SpeedModel::paper_default(), 40, &mut rng);
+
+    println!("-- L3: DES hot path --");
+    let cec = Cec::new(10, 20);
+    let mlcec = Mlcec::new(10, 20);
+    let bicec = Bicec::new(800, 80, 40);
+    // One static run processes N*S (CEC/MLCEC) or N*S_b (BICEC) events.
+    let r = Bench::new("simulate_static cec n40").run(|| simulate_static(&cec, 40, job, &cost, &speeds));
+    r.print();
+    println!("    -> {:.2e} subtask-events/s (target >= 1e6)", events_per_sec(&r, 800.0));
+    let r = Bench::new("simulate_static mlcec n40").run(|| simulate_static(&mlcec, 40, job, &cost, &speeds));
+    r.print();
+    let r = Bench::new("simulate_static bicec n40").run(|| simulate_static(&bicec, 40, job, &cost, &speeds));
+    r.print();
+    println!("    -> {:.2e} subtask-events/s", events_per_sec(&r, 3200.0));
+
+    println!("\n-- L3: elastic simulator (interval tracking) --");
+    let small_job = JobSpec::new(240, 240, 240);
+    let speeds8 = WorkerSpeeds::sample(&SpeedModel::paper_default(), 8, &mut rng);
+    let tau = cost.worker_time(small_job.ops() / 16, 1.0);
+    let trace = ElasticTrace::fig1(1.5 * tau, 3.0 * tau);
+    let cec_small = Cec::new(2, 4);
+    Bench::new("simulate_trace cec fig1")
+        .run(|| simulate_trace(&cec_small, &trace, small_job, &cost, &speeds8).unwrap())
+        .print();
+
+    println!("\n-- L3: allocation (runs at every elastic event) --");
+    Bench::new("mlcec allocate n40").run(|| mlcec.allocate(40)).print();
+
+    println!("\n-- master decode: combine vs inverse split --");
+    let code = RealMdsCode::new(12, 10);
+    let data: Vec<Matrix> = (0..10).map(|_| Matrix::random(24, 240, &mut rng)).collect();
+    let coded = code.encode(&data);
+    let completed: Vec<(usize, &Matrix)> = (2..12).map(|i| (i, &coded[i])).collect();
+    let r_dec = Bench::new("decode k10 (inverse + combine)").run(|| code.decode(&completed).unwrap());
+    r_dec.print();
+    let subset: Vec<usize> = (2..12).collect();
+    let r_inv = Bench::new("inverse only").run(|| code.decode_coeffs_f32(&subset).unwrap());
+    r_inv.print();
+    println!(
+        "    -> combine share of decode: {:.1}% (target: dominant)",
+        100.0 * (1.0 - r_inv.summary.mean / r_dec.summary.mean)
+    );
+
+    println!("\n-- worker hot path: native gemm --");
+    let a = Matrix::random(2, 240, &mut rng);
+    let b = Matrix::random(240, 240, &mut rng);
+    let r = Bench::new("gemm blocked 2x240x240").run(|| gemm(&a, &b));
+    r.print();
+    println!("    -> {:.2} Gmac/s", 2.0 * 240.0 * 240.0 / r.summary.mean / 1e9);
+    let r = Bench::new("gemm naive   2x240x240").run(|| gemm_naive(&a, &b));
+    r.print();
+    let a2 = Matrix::random(240, 240, &mut rng);
+    let r = Bench::new("gemm blocked 240x240x240").run(|| gemm(&a2, &b));
+    r.print();
+    println!("    -> {:.2} Gmac/s", 240.0f64.powi(3) / r.summary.mean / 1e9);
+
+    if artifacts_available() {
+        println!("\n-- PJRT execute latency (compiled-once artifacts) --");
+        let mut rt = Runtime::open(default_artifact_dir()).unwrap();
+        let _ = rt.matmul("subtask_mm_2x240x240", &a, &b); // compile outside timing
+        Bench::new("pjrt subtask_mm_2x240x240").run(|| rt.matmul("subtask_mm_2x240x240", &a, &b).unwrap()).print();
+        let _ = rt.matmul("direct_mm_240x240x240", &a2, &b);
+        Bench::new("pjrt direct_mm_240x240x240").run(|| rt.matmul("direct_mm_240x240x240", &a2, &b).unwrap()).print();
+    } else {
+        println!("\n(skipping PJRT latency: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,134 @@
+//! Micro-benchmark harness (criterion is not in the vendored crate set).
+//!
+//! Used by the `rust/benches/*.rs` targets (`harness = false`): warmup,
+//! fixed-duration sampling, and a stats line compatible with eyeballing and
+//! with the §Perf records in EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+use crate::metrics::Summary;
+
+/// One benchmark case.
+pub struct Bench {
+    name: String,
+    warmup: Duration,
+    measure: Duration,
+    min_samples: usize,
+    max_samples: usize,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_samples: 10,
+            max_samples: 10_000,
+        }
+    }
+
+    pub fn warmup(mut self, d: Duration) -> Self {
+        self.warmup = d;
+        self
+    }
+
+    pub fn measure(mut self, d: Duration) -> Self {
+        self.measure = d;
+        self
+    }
+
+    pub fn samples(mut self, min: usize, max: usize) -> Self {
+        self.min_samples = min;
+        self.max_samples = max;
+        self
+    }
+
+    /// Run `f` repeatedly; returns per-iteration timing stats (seconds).
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let t1 = Instant::now();
+        while (t1.elapsed() < self.measure || samples.len() < self.min_samples)
+            && samples.len() < self.max_samples
+        {
+            let s = Instant::now();
+            std::hint::black_box(f());
+            samples.push(s.elapsed().as_secs_f64());
+        }
+        BenchResult { name: self.name.clone(), summary: Summary::of(&samples) }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    /// Iterations per second at the mean.
+    pub fn throughput(&self) -> f64 {
+        1.0 / self.summary.mean
+    }
+
+    pub fn print(&self) {
+        println!(
+            "{:<40} {:>12.3} us/iter (p50 {:>10.3}, p95 {:>10.3}, n={})",
+            self.name,
+            self.summary.mean * 1e6,
+            self.summary.p50 * 1e6,
+            self.summary.p95 * 1e6,
+            self.summary.n
+        );
+    }
+}
+
+/// Print the standard bench header used by all targets.
+pub fn header(target: &str) {
+    println!("=== hcec bench: {target} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_cheap_closure_quickly() {
+        let r = Bench::new("noop")
+            .warmup(Duration::from_millis(5))
+            .measure(Duration::from_millis(20))
+            .run(|| 1 + 1);
+        assert!(r.summary.n >= 10);
+        assert!(r.summary.mean >= 0.0);
+        assert!(r.throughput() > 1000.0);
+    }
+
+    #[test]
+    fn respects_max_samples() {
+        let r = Bench::new("capped")
+            .warmup(Duration::from_millis(1))
+            .measure(Duration::from_millis(50))
+            .samples(1, 20)
+            .run(|| ());
+        assert!(r.summary.n <= 20);
+    }
+
+    #[test]
+    fn timing_scales_with_work() {
+        let quick = Bench::new("q")
+            .warmup(Duration::from_millis(5))
+            .measure(Duration::from_millis(30))
+            .run(|| (0..100u64).sum::<u64>());
+        let slow = Bench::new("s")
+            .warmup(Duration::from_millis(5))
+            .measure(Duration::from_millis(30))
+            .run(|| (0..100_000u64).map(std::hint::black_box).sum::<u64>());
+        assert!(slow.summary.mean > quick.summary.mean);
+    }
+}

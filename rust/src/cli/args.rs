@@ -1,0 +1,126 @@
+//! Tiny argv parser: positionals + `--flag value` pairs (+ bare `--flag`).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program name).
+    pub fn parse(argv: &[String]) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("empty flag `--`".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(name.to_string(), String::from("true"));
+                }
+            } else {
+                out.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn command(&self) -> Option<&str> {
+        self.positionals.first().map(|s| s.as_str())
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn flag_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn parse_flag<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| format!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    /// Comma-separated list flag.
+    pub fn parse_list<T: std::str::FromStr>(&self, name: &str) -> Result<Option<Vec<T>>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse::<T>().map_err(|e| format!("--{name} {s:?}: {e}")))
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = Args::parse(&sv(&["figure", "2a", "--trials", "5", "--csv=out"])).unwrap();
+        assert_eq!(a.command(), Some("figure"));
+        assert_eq!(a.positional(1), Some("2a"));
+        assert_eq!(a.flag("trials"), Some("5"));
+        assert_eq!(a.flag("csv"), Some("out"));
+    }
+
+    #[test]
+    fn bare_flag_is_true() {
+        let a = Args::parse(&sv(&["trace", "--waste"])).unwrap();
+        assert!(a.has_flag("waste"));
+        assert_eq!(a.flag("waste"), Some("true"));
+    }
+
+    #[test]
+    fn typed_parsing() {
+        let a = Args::parse(&sv(&["sweep", "--slowdowns", "2,5,10", "--p", "0.5"])).unwrap();
+        assert_eq!(a.parse_list::<f64>("slowdowns").unwrap(), Some(vec![2.0, 5.0, 10.0]));
+        assert_eq!(a.parse_flag::<f64>("p").unwrap(), Some(0.5));
+        assert!(a.parse_flag::<usize>("p").is_err());
+        assert_eq!(a.parse_flag::<usize>("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn negative_number_as_flag_value() {
+        // `--x -3` would look like a flag; use `--x=-3` instead.
+        let a = Args::parse(&sv(&["cmd", "--x=-3"])).unwrap();
+        assert_eq!(a.parse_flag::<i64>("x").unwrap(), Some(-3));
+    }
+}

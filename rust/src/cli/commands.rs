@@ -1,0 +1,264 @@
+//! Subcommand implementations.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{run_job, ExecBackend, JobConfig, SchemeConfig};
+use crate::figures;
+use crate::metrics::write_csv;
+use crate::sim::CostModel;
+use crate::tas::DLevelPolicy;
+
+use super::Args;
+
+fn load_config(args: &Args) -> Result<ExperimentConfig, String> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => ExperimentConfig::from_file(path)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(trials) = args.parse_flag::<usize>("trials")? {
+        cfg.trials = trials;
+    }
+    if let Some(seed) = args.parse_flag::<u64>("seed")? {
+        cfg.seed = seed;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn emit(table: &crate::metrics::Table, name: &str, args: &Args) -> Result<(), String> {
+    println!("== {name} ==\n{}", table.render());
+    if let Some(dir) = args.flag("csv") {
+        let path = format!("{dir}/{name}.csv");
+        write_csv(table, &path).map_err(|e| format!("writing {path}: {e}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+pub fn figure(args: &Args) -> Result<(), String> {
+    let which = args.positional(1).unwrap_or("all");
+    let cfg = load_config(args)?;
+    let ids: Vec<&str> = match which {
+        "all" => vec!["1", "2a", "2b", "2c", "2d"],
+        one => vec![one],
+    };
+    for id in ids {
+        match id {
+            "1" => {
+                for n in [8, 6, 4] {
+                    println!("{}", figures::fig1_grid(n));
+                }
+                emit(&figures::fig1_table(), "fig1", args)?;
+            }
+            "2a" | "2c" | "2d" => {
+                emit(&figures::fig2_table(&cfg, id), &format!("fig{id}"), args)?;
+            }
+            "2b" => {
+                // Fig 2b plots decode for both shapes.
+                emit(&figures::fig2_table(&cfg, "2b"), "fig2b_square", args)?;
+                let tf = cfg.clone().tall_fat();
+                emit(&figures::fig2_table(&tf, "2b"), "fig2b_tallfat", args)?;
+            }
+            other => return Err(format!("unknown figure {other:?}")),
+        }
+    }
+    Ok(())
+}
+
+pub fn run(args: &Args) -> Result<(), String> {
+    let scheme = match args.flag_or("scheme", "bicec") {
+        "cec" => SchemeConfig::Cec { k: 10, s: 12 },
+        "mlcec" => SchemeConfig::Mlcec { k: 10, s: 12, policy: DLevelPolicy::LinearRamp },
+        "bicec" => SchemeConfig::Bicec { k: 24, s_per_worker: 4 },
+        other => return Err(format!("unknown scheme {other:?}")),
+    };
+    let mut cfg = JobConfig::end_to_end(scheme);
+    cfg.backend = match args.flag_or("backend", "pjrt") {
+        "native" => ExecBackend::Native,
+        "pjrt" => ExecBackend::Pjrt,
+        other => return Err(format!("unknown backend {other:?}")),
+    };
+    if let Some(n) = args.parse_flag::<usize>("n")? {
+        cfg.n_workers = n;
+    }
+    if let Some(p) = args.parse_flag::<usize>("preempt")? {
+        cfg.preempt_after_first = p;
+    }
+    if let Some(seed) = args.parse_flag::<u64>("seed")? {
+        cfg.seed = seed;
+    }
+    let report = run_job(&cfg).map_err(|e| e.to_string())?;
+    println!(
+        "scheme={} backend={:?} n={} preempted={}\n\
+         encode      {:>8.4}s\n\
+         computation {:>8.4}s  ({} completions received, {} used)\n\
+         decode      {:>8.4}s\n\
+         finishing   {:>8.4}s\n\
+         max relative error vs uncoded baseline: {:.3e}\n\
+         recovered: {}",
+        report.scheme,
+        cfg.backend,
+        cfg.n_workers,
+        report.workers_preempted,
+        report.encode_wall,
+        report.computation_wall,
+        report.completions_received,
+        report.completions_used,
+        report.decode_wall,
+        report.finishing_wall(),
+        report.max_rel_err,
+        report.recovered
+    );
+    if report.max_rel_err > 1e-2 {
+        return Err(format!("verification failed: rel err {:.3e}", report.max_rel_err));
+    }
+    Ok(())
+}
+
+pub fn trace(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    if let Some(path) = args.flag("file") {
+        return replay_trace_file(path, &cfg);
+    }
+    let rate = args.parse_flag::<f64>("rate")?.unwrap_or(3.0);
+    emit(&figures::transition_waste_table(&cfg, rate), "ext_t1_transition_waste", args)
+}
+
+/// `hcec trace --file <trace.txt>`: replay a recorded elastic trace (format
+/// documented in sim::trace) through all three schemes at Fig. 1 geometry.
+fn replay_trace_file(path: &str, cfg: &ExperimentConfig) -> Result<(), String> {
+    use crate::sim::{simulate_trace, ElasticTrace, WorkerSpeeds};
+    use crate::tas::{Bicec, Cec, Mlcec, Scheme};
+    use crate::workload::JobSpec;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    let trace = ElasticTrace::from_text(&text)?;
+    let n_max = trace.n_max;
+    let job = JobSpec::new(240, 240, 240);
+    let cost = cfg.cost_model();
+    let mut rng = crate::rng::default_rng(cfg.seed);
+    let speeds = WorkerSpeeds::sample(&cfg.speed_model(), n_max, &mut rng);
+    let s = 4.min(trace.n_initial);
+    let schemes: Vec<Box<dyn Scheme>> = vec![
+        Box::new(Cec::new(2.min(s), s)),
+        Box::new(Mlcec::new(2.min(s), s)),
+        Box::new(Bicec::new(600.min(300 * n_max / 2), 300, n_max)),
+    ];
+    println!(
+        "replaying {path}: n_max={n_max}, n_initial={}, {} events",
+        trace.n_initial,
+        trace.events.len()
+    );
+    for scheme in &schemes {
+        match simulate_trace(scheme.as_ref(), &trace, job, &cost, &speeds) {
+            Ok(out) => println!(
+                "{:<8} computation={:.5}s waste={:.4} reallocs={} completions={}",
+                scheme.name(),
+                out.computation_time,
+                out.transition_waste,
+                out.reallocations,
+                out.completions
+            ),
+            Err(e) => println!("{:<8} failed: {e}", scheme.name()),
+        }
+    }
+    Ok(())
+}
+
+pub fn sweep(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let slowdowns = args
+        .parse_list::<f64>("slowdowns")?
+        .unwrap_or_else(|| vec![2.0, 5.0, 10.0]);
+    let probs = args
+        .parse_list::<f64>("probs")?
+        .unwrap_or_else(|| vec![0.25, 0.5, 0.75]);
+    emit(
+        &figures::straggler_sweep_table(&cfg, &slowdowns, &probs),
+        "ext_t3_straggler_sweep",
+        args,
+    )
+}
+
+pub fn dlevels(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    emit(&figures::dlevel_table(&cfg), "ext_t2_dlevels", args)
+}
+
+pub fn visualize(_args: &Args) -> Result<(), String> {
+    for n in [8, 6, 4] {
+        println!("{}", figures::fig1_grid(n));
+    }
+    Ok(())
+}
+
+pub fn calibrate(_args: &Args) -> Result<(), String> {
+    let measured = CostModel::calibrate();
+    let fixed = CostModel::paper_default();
+    println!(
+        "measured on this machine:\n  worker  {:.3e} ops/s\n  decode  {:.3e} ops/s\n  rho = {:.3}\n\
+         figure benches use the fixed calibration:\n  worker  {:.3e} ops/s\n  decode  {:.3e} ops/s\n  rho = {:.3}",
+        measured.worker_ops_per_sec,
+        measured.decode_ops_per_sec,
+        measured.rho(),
+        fixed.worker_ops_per_sec,
+        fixed.decode_ops_per_sec,
+        fixed.rho()
+    );
+    Ok(())
+}
+
+pub fn reassign(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let rate = args.parse_flag::<f64>("rate")?.unwrap_or(3.0);
+    emit(&figures::reassign_table(&cfg, rate), "ext_t4_reassign", args)
+}
+
+pub fn hierarchy(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    emit(&figures::hierarchy_table(&cfg), "ext_t5_hierarchy", args)
+}
+
+pub fn hetero(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    emit(&figures::hetero_table(&cfg), "ext_t6_hetero", args)
+}
+
+pub fn serve(args: &Args) -> Result<(), String> {
+    use crate::coordinator::{serve as run_service, ServiceConfig};
+    use crate::sim::ElasticTrace;
+    let scheme = match args.flag_or("scheme", "bicec") {
+        "cec" => SchemeConfig::Cec { k: 10, s: 12 },
+        "mlcec" => SchemeConfig::Mlcec { k: 10, s: 12, policy: DLevelPolicy::LinearRamp },
+        "bicec" => SchemeConfig::Bicec { k: 24, s_per_worker: 4 },
+        other => return Err(format!("unknown scheme {other:?}")),
+    };
+    let mut template = JobConfig::end_to_end(scheme);
+    template.backend = match args.flag_or("backend", "native") {
+        "native" => ExecBackend::Native,
+        "pjrt" => ExecBackend::Pjrt,
+        other => return Err(format!("unknown backend {other:?}")),
+    };
+    let jobs = args.parse_flag::<usize>("jobs")?.unwrap_or(5);
+    // One leave midway through the stream: the elastic scenario.
+    let mut trace = ElasticTrace::static_n(template.n_max, template.n_max);
+    trace.events.push(crate::sim::ElasticEvent {
+        time: jobs as f64 / 2.0,
+        kind: crate::sim::EventKind::Leave(template.n_max - 1),
+    });
+    let report = run_service(&ServiceConfig { job_template: template, jobs, trace })
+        .map_err(|e| e.to_string())?;
+    println!(
+        "served {} jobs in {:.3}s ({:.2} jobs/s)\nper-job finishing: {}",
+        report.per_job.len(),
+        report.total_wall,
+        report.throughput_jobs_per_sec(),
+        report.finishing_summary()
+    );
+    for (j, (r, w)) in report.per_job.iter().zip(&report.workers_at_job).enumerate() {
+        println!(
+            "  job {j}: workers={w} finishing={:.4}s rel_err={:.2e}",
+            r.finishing_wall(),
+            r.max_rel_err
+        );
+    }
+    Ok(())
+}

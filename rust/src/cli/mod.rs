@@ -1,0 +1,86 @@
+//! CLI: argument parsing and subcommand dispatch (clap is not in the
+//! vendored crate set; this covers what the launcher needs).
+//!
+//! ```text
+//! hcec figure <1|2a|2b|2c|2d|all> [--config F] [--csv DIR] [--trials N]
+//! hcec run [--scheme cec|mlcec|bicec] [--backend native|pjrt]
+//!          [--n N] [--preempt P] [--seed S]
+//! hcec trace [--rate R] [--trials N] [--seed S]
+//! hcec sweep [--slowdowns 2,5,10] [--probs 0.25,0.5,0.75] [--trials N]
+//! hcec dlevels [--trials N]
+//! hcec visualize
+//! hcec calibrate
+//! ```
+
+mod args;
+pub mod commands;
+
+pub use args::Args;
+
+/// Entry point used by `main.rs`. Returns a process exit code.
+pub fn dispatch(argv: &[String]) -> i32 {
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", usage());
+            return 2;
+        }
+    };
+    let result = match args.command() {
+        Some("figure") => commands::figure(&args),
+        Some("run") => commands::run(&args),
+        Some("trace") => commands::trace(&args),
+        Some("sweep") => commands::sweep(&args),
+        Some("dlevels") => commands::dlevels(&args),
+        Some("serve") => commands::serve(&args),
+        Some("hierarchy") => commands::hierarchy(&args),
+        Some("hetero") => commands::hetero(&args),
+        Some("reassign") => commands::reassign(&args),
+        Some("visualize") => commands::visualize(&args),
+        Some("calibrate") => commands::calibrate(&args),
+        Some("help") | None => {
+            println!("{}", usage());
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown command {other:?}")),
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+pub fn usage() -> &'static str {
+    "hcec — hierarchical coded elastic computing (ICASSP 2021 reproduction)
+
+USAGE:
+  hcec figure <1|2a|2b|2c|2d|all> [--config FILE] [--csv DIR] [--trials N]
+      Regenerate a paper figure's series as a table (and CSV).
+  hcec run [--scheme cec|mlcec|bicec] [--backend native|pjrt] [--n N]
+           [--preempt P] [--seed S]
+      Execute a real coded job on the threaded pool (PJRT artifacts on the
+      hot path with --backend pjrt) and verify the recovered product.
+  hcec trace [--rate R] [--trials N] [--seed S] [--file TRACE.txt]
+      Elastic-trace simulation: transition waste + finishing times
+      (Ext-T1); --file replays a recorded trace (format: sim::trace).
+  hcec sweep [--slowdowns 2,5,10] [--probs 0.25,0.5,0.75] [--trials N]
+      Straggler-model robustness ablation (Ext-T3).
+  hcec dlevels [--trials N]
+      MLCEC d-level policy ablation (Ext-T2).
+  hcec reassign [--rate R] [--trials N]
+      Waste-minimising re-assignment ([10]) vs naive (Ext-T4).
+  hcec hierarchy [--trials N]
+      Classic MDS vs MLCC vs elastic schemes, rate-matched (Ext-T5).
+  hcec hetero [--trials N]
+      Heterogeneous-aware allocation ([11,12]) vs uniform CEC (Ext-T6).
+  hcec serve [--jobs J] [--scheme cec|mlcec|bicec] [--backend native|pjrt]
+      Serve a stream of coded jobs on an elastic pool; report latency
+      and throughput.
+  hcec visualize
+      ASCII Fig. 1 allocation grids at N = 8, 6, 4.
+  hcec calibrate
+      Measure this machine's worker/decode rates for the cost model."
+}

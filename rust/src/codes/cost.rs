@@ -1,0 +1,89 @@
+//! Decode-cost model — the paper's own accounting (Sec. 3):
+//!
+//! * CEC / MLCEC: invert one K x K Vandermonde (after the inverse, the
+//!   combine does K·u·v multiply-adds in total across the N sets).
+//! * BICEC: invert one K_bicec x K_bicec Vandermonde, then K_bicec·u·v
+//!   multiply-adds.
+//!
+//! The model returns abstract *operation counts*; `sim::CostModel` converts
+//! them to time with the calibrated decode rate. Fig 2b is this module
+//! swept over N and the two matrix shapes.
+
+/// Operations to invert a k x k system via LU (2/3 k^3 flops, plus k^2 per
+/// RHS for the k RHS columns of the inverse -> k^3 total order).
+pub fn inverse_ops(k: usize) -> u64 {
+    let k = k as u64;
+    (2 * k * k * k) / 3 + k * k * k
+}
+
+/// Combine (coded_combine) multiply-adds to reconstruct the full u x v
+/// output from k completed coded blocks: k · u · v.
+pub fn combine_ops(k: usize, u: usize, v: usize) -> u64 {
+    k as u64 * u as u64 * v as u64
+}
+
+/// Total decode ops for a scheme with code dimension k on a u x v output.
+pub fn decode_ops(k: usize, u: usize, v: usize) -> u64 {
+    inverse_ops(k) + combine_ops(k, u, v)
+}
+
+/// Worker-side computation ops for the whole job: u·w·v multiply-adds.
+pub fn job_ops(u: usize, w: usize, v: usize) -> u64 {
+    u as u64 * w as u64 * v as u64
+}
+
+/// Ops per CEC/MLCEC subtask: the encoded task is u/K rows; each of the N
+/// subtasks is u/(K·N) rows against the full B.
+pub fn cec_subtask_ops(u: usize, w: usize, v: usize, k: usize, n: usize) -> u64 {
+    job_ops(u, w, v) / (k as u64 * n as u64)
+}
+
+/// Ops per BICEC subtask: the job is split into K_bicec computations, each
+/// encoded subtask has the same size.
+pub fn bicec_subtask_ops(u: usize, w: usize, v: usize, k_bicec: usize) -> u64 {
+    job_ops(u, w, v) / k_bicec as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_decode_totals() {
+        // Paper Sec. 3: CEC/MLCEC combine = 10·u·v; BICEC combine = 800·u·v.
+        let (u, v) = (2400, 2400);
+        assert_eq!(combine_ops(10, u, v), 10 * 2400 * 2400);
+        assert_eq!(combine_ops(800, u, v), 800 * 2400 * 2400);
+    }
+
+    #[test]
+    fn bicec_decode_dominates_cec_decode() {
+        let (u, v) = (2400, 2400);
+        assert!(decode_ops(800, u, v) > 50 * decode_ops(10, u, v));
+    }
+
+    #[test]
+    fn decode_grows_with_v() {
+        // Fig 2b: (2400, 960, 6000) decodes slower than (2400, 2400, 2400).
+        assert!(decode_ops(800, 2400, 6000) > decode_ops(800, 2400, 2400));
+    }
+
+    #[test]
+    fn per_worker_budgets_match_paper() {
+        // Sec. 3: every scheme tasks a worker with at most uwv/10 ops.
+        let (u, w, v) = (2400, 2400, 2400);
+        let total = job_ops(u, w, v);
+        // CEC/MLCEC at N=40: S=20 subtasks of uwv/(10·40) each.
+        assert_eq!(20 * cec_subtask_ops(u, w, v, 10, 40), total / 20);
+        // BICEC: S=80 subtasks of uwv/800 each.
+        assert_eq!(80 * bicec_subtask_ops(u, w, v, 800), total / 10);
+    }
+
+    #[test]
+    fn subtask_ops_divide_evenly_for_figure_grid() {
+        for n in (20..=40).step_by(2) {
+            let ops = cec_subtask_ops(2400, 2400, 2400, 10, n);
+            assert!(ops > 0);
+        }
+    }
+}

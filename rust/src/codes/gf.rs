@@ -1,0 +1,176 @@
+//! GF(2^16) arithmetic with log/antilog tables.
+//!
+//! Substrate for the exact Reed–Solomon path (`rs.rs`): BICEC's (800, 3200)
+//! code cannot be decoded in floating point, so payloads are quantised to
+//! u16 fixed point and coded in an exact field.
+//!
+//! Field: GF(2^16) = GF(2)[x] / (x^16 + x^12 + x^3 + x + 1)  (0x1100B,
+//! a standard primitive polynomial).
+
+const POLY: u32 = 0x1100B;
+const ORDER: usize = 1 << 16;
+
+/// Precomputed log/exp tables (built once, lazily).
+struct Tables {
+    exp: Vec<u16>, // exp[i] = g^i, length 2*(ORDER-1) to skip a mod
+    log: Vec<u16>, // log[x] for x != 0
+}
+
+fn tables() -> &'static Tables {
+    use std::sync::OnceLock;
+    static TABLES: OnceLock<Tables> = OnceLock::new();
+    TABLES.get_or_init(|| {
+        let mut exp = vec![0u16; 2 * (ORDER - 1)];
+        let mut log = vec![0u16; ORDER];
+        let mut x: u32 = 1;
+        for i in 0..ORDER - 1 {
+            exp[i] = x as u16;
+            log[x as usize] = i as u16;
+            x <<= 1;
+            if x & (1 << 16) != 0 {
+                x ^= POLY;
+            }
+        }
+        for i in 0..ORDER - 1 {
+            exp[ORDER - 1 + i] = exp[i];
+        }
+        Tables { exp, log }
+    })
+}
+
+/// An element of GF(2^16).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default, Hash)]
+pub struct Gf16(pub u16);
+
+impl Gf16 {
+    pub const ZERO: Gf16 = Gf16(0);
+    pub const ONE: Gf16 = Gf16(1);
+
+    #[inline]
+    pub fn add(self, rhs: Gf16) -> Gf16 {
+        Gf16(self.0 ^ rhs.0)
+    }
+
+    // Subtraction == addition in characteristic 2.
+    #[inline]
+    pub fn sub(self, rhs: Gf16) -> Gf16 {
+        self.add(rhs)
+    }
+
+    #[inline]
+    pub fn mul(self, rhs: Gf16) -> Gf16 {
+        if self.0 == 0 || rhs.0 == 0 {
+            return Gf16::ZERO;
+        }
+        let t = tables();
+        let idx = t.log[self.0 as usize] as usize + t.log[rhs.0 as usize] as usize;
+        Gf16(t.exp[idx])
+    }
+
+    #[inline]
+    pub fn inv(self) -> Gf16 {
+        assert!(self.0 != 0, "inverse of zero in GF(2^16)");
+        let t = tables();
+        let l = t.log[self.0 as usize] as usize;
+        Gf16(t.exp[(ORDER - 1 - l) % (ORDER - 1)])
+    }
+
+    #[inline]
+    pub fn div(self, rhs: Gf16) -> Gf16 {
+        self.mul(rhs.inv())
+    }
+
+    pub fn pow(self, mut e: u64) -> Gf16 {
+        if self.0 == 0 {
+            return if e == 0 { Gf16::ONE } else { Gf16::ZERO };
+        }
+        let mut base = self;
+        let mut acc = Gf16::ONE;
+        while e > 0 {
+            if e & 1 == 1 {
+                acc = acc.mul(base);
+            }
+            base = base.mul(base);
+            e >>= 1;
+        }
+        acc
+    }
+
+    /// The generator alpha (x).
+    pub fn alpha() -> Gf16 {
+        Gf16(2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    #[test]
+    fn additive_identity_and_self_inverse() {
+        let a = Gf16(0x1234);
+        assert_eq!(a.add(Gf16::ZERO), a);
+        assert_eq!(a.add(a), Gf16::ZERO);
+    }
+
+    #[test]
+    fn multiplicative_identity_and_inverse() {
+        for v in [1u16, 2, 3, 0xFFFF, 0x8001, 257] {
+            let a = Gf16(v);
+            assert_eq!(a.mul(Gf16::ONE), a);
+            assert_eq!(a.mul(a.inv()), Gf16::ONE, "v={v:#x}");
+        }
+    }
+
+    #[test]
+    fn alpha_has_full_order() {
+        // alpha^(2^16 - 1) = 1 but alpha^m != 1 for the proper divisors'
+        // quotient checks (65535 = 3 * 5 * 17 * 257).
+        let a = Gf16::alpha();
+        assert_eq!(a.pow(65535), Gf16::ONE);
+        for d in [3u64, 5, 17, 257] {
+            assert_ne!(a.pow(65535 / d), Gf16::ONE, "order divides 65535/{d}");
+        }
+    }
+
+    #[test]
+    fn prop_field_axioms() {
+        prop::check(200, |g| {
+            let a = Gf16(g.u64() as u16);
+            let b = Gf16(g.u64() as u16);
+            let c = Gf16(g.u64() as u16);
+            // commutativity
+            if a.mul(b) != b.mul(a) {
+                return Err("mul not commutative".into());
+            }
+            // associativity
+            if a.mul(b).mul(c) != a.mul(b.mul(c)) {
+                return Err("mul not associative".into());
+            }
+            // distributivity
+            if a.mul(b.add(c)) != a.mul(b).add(a.mul(c)) {
+                return Err("not distributive".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_division_round_trip() {
+        prop::check(200, |g| {
+            let a = Gf16(g.u64() as u16);
+            let b = Gf16((g.u64() as u16).max(1));
+            if a.div(b).mul(b) != a {
+                return Err(format!("(a/b)*b != a for a={:#x} b={:#x}", a.0, b.0));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "inverse of zero")]
+    fn zero_has_no_inverse() {
+        let _ = Gf16::ZERO.inv();
+    }
+}

@@ -1,0 +1,24 @@
+//! MDS coding substrate.
+//!
+//! Two families (DESIGN.md §Substitutions):
+//!
+//! * `RealMdsCode` — Vandermonde over f64 with Chebyshev evaluation points.
+//!   Paper-faithful (polynomial codes, [3]); numerically sound for the
+//!   K ≈ 10–32 range used by CEC/MLCEC and the end-to-end driver.
+//! * `RsCode` over GF(2^16) — exact recovery at any K (BICEC's K = 800),
+//!   operating on fixed-point-quantised payloads. The paper never verified
+//!   numerics at K = 800; we can, because the field is exact.
+//!
+//! `cost` is the decode-cost model used by the figure benches (the paper's
+//! own accounting: Vandermonde inverse + K·u·v combine MACs).
+
+pub mod cost;
+mod gf;
+mod mds;
+mod rs;
+mod vandermonde;
+
+pub use gf::Gf16;
+pub use mds::{DecodeError, RealMdsCode};
+pub use rs::{dequantize, quantize, RsCode};
+pub use vandermonde::{chebyshev_points, vandermonde, Vandermonde};

@@ -1,0 +1,283 @@
+//! Reed–Solomon (n, k) code over GF(2^16) — exact recovery at BICEC scale.
+//!
+//! Encode: evaluate the degree-(k-1) polynomial with the data symbols as
+//! coefficients at n distinct field points (alpha^0 ... alpha^(n-1)).
+//! Decode (no errors, only erasures — finished/unfinished workers): solve
+//! the k x k Vandermonde system over the field via Gaussian elimination.
+//! n is bounded by the field order; BICEC's n = 3200 is comfortable.
+//!
+//! Payloads are `u16` symbols; `quantize`/`dequantize` map f32 matrices to
+//! symbol streams losslessly enough for verification (12-bit mantissa grid).
+
+use super::gf::Gf16;
+
+#[derive(Debug)]
+pub enum RsError {
+    NotEnough { have: usize, need: usize },
+    DuplicateRow(usize),
+    TooLong { n: usize },
+}
+
+impl std::fmt::Display for RsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RsError::NotEnough { have, need } => write!(f, "have {have} < k={need} shares"),
+            RsError::DuplicateRow(r) => write!(f, "duplicate evaluation row {r}"),
+            RsError::TooLong { n } => write!(f, "n={n} exceeds field order - 1"),
+        }
+    }
+}
+
+impl std::error::Error for RsError {}
+
+/// Systematic-free RS code: share i = p(alpha^i), p's coefficients = data.
+#[derive(Clone, Debug)]
+pub struct RsCode {
+    n: usize,
+    k: usize,
+    /// Evaluation points alpha^i.
+    points: Vec<Gf16>,
+}
+
+impl RsCode {
+    pub fn new(n: usize, k: usize) -> Result<Self, RsError> {
+        if n >= (1 << 16) {
+            return Err(RsError::TooLong { n });
+        }
+        assert!(k >= 1 && n >= k, "need n >= k >= 1");
+        let a = Gf16::alpha();
+        let points = (0..n).map(|i| a.pow(i as u64)).collect();
+        Ok(Self { n, k, points })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Encode one share: data is a stream of symbol vectors, each of length
+    /// k (one polynomial per stream position). Output has the same stream
+    /// length, one symbol per position.
+    pub fn encode_share(&self, data: &[Vec<Gf16>], share: usize) -> Vec<Gf16> {
+        assert!(share < self.n);
+        let x = self.points[share];
+        data.iter()
+            .map(|coeffs| {
+                debug_assert_eq!(coeffs.len(), self.k);
+                // Horner at x.
+                coeffs.iter().rev().fold(Gf16::ZERO, |acc, &c| acc.mul(x).add(c))
+            })
+            .collect()
+    }
+
+    /// Decode the k data symbols per stream position from k completed
+    /// shares `(share_index, symbols)`.
+    pub fn decode(
+        &self,
+        completed: &[(usize, &[Gf16])],
+    ) -> Result<Vec<Vec<Gf16>>, RsError> {
+        if completed.len() < self.k {
+            return Err(RsError::NotEnough { have: completed.len(), need: self.k });
+        }
+        let used = &completed[..self.k];
+        {
+            let mut seen = std::collections::HashSet::new();
+            for (i, _) in used {
+                if !seen.insert(*i) {
+                    return Err(RsError::DuplicateRow(*i));
+                }
+            }
+        }
+        let k = self.k;
+        let stream_len = used[0].1.len();
+        assert!(used.iter().all(|(_, s)| s.len() == stream_len));
+
+        // Invert the k x k Vandermonde over GF via Gauss–Jordan once, then
+        // apply to every stream position (same structure as the real decode).
+        let mut aug: Vec<Gf16> = Vec::with_capacity(k * 2 * k);
+        for (i, _) in used {
+            let x = self.points[*i];
+            let mut p = Gf16::ONE;
+            for _ in 0..k {
+                aug.push(p);
+                p = p.mul(x);
+            }
+            // identity part appended after, filled below
+            for _ in 0..k {
+                aug.push(Gf16::ZERO);
+            }
+        }
+        let w = 2 * k;
+        for r in 0..k {
+            aug[r * w + k + r] = Gf16::ONE;
+        }
+        // Gauss–Jordan (field is exact; any nonzero pivot works, and
+        // distinct points guarantee invertibility).
+        for col in 0..k {
+            let pivot_row = (col..k)
+                .find(|&r| aug[r * w + col] != Gf16::ZERO)
+                .expect("Vandermonde over distinct points is invertible");
+            if pivot_row != col {
+                for j in 0..w {
+                    aug.swap(col * w + j, pivot_row * w + j);
+                }
+            }
+            let inv = aug[col * w + col].inv();
+            for j in 0..w {
+                aug[col * w + j] = aug[col * w + j].mul(inv);
+            }
+            for r in 0..k {
+                if r != col && aug[r * w + col] != Gf16::ZERO {
+                    let f = aug[r * w + col];
+                    for j in 0..w {
+                        let sub = f.mul(aug[col * w + j]);
+                        aug[r * w + j] = aug[r * w + j].add(sub);
+                    }
+                }
+            }
+        }
+
+        // out[j][pos] = Σ_l inv[j][l] · used[l][pos]
+        let mut out = vec![vec![Gf16::ZERO; stream_len]; k];
+        for (j, row) in out.iter_mut().enumerate() {
+            for (l, (_, sym)) in used.iter().enumerate() {
+                let c = aug[j * w + k + l];
+                if c == Gf16::ZERO {
+                    continue;
+                }
+                for (o, &s) in row.iter_mut().zip(sym.iter()) {
+                    *o = o.add(c.mul(s));
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Quantise f32 values into u16 symbols on a uniform grid over
+/// [-scale, scale]. Round-trips with absolute error <= scale / 65535.
+pub fn quantize(values: &[f32], scale: f32) -> Vec<Gf16> {
+    assert!(scale > 0.0);
+    values
+        .iter()
+        .map(|&v| {
+            let clamped = v.clamp(-scale, scale);
+            let t = (clamped + scale) / (2.0 * scale); // [0, 1]
+            Gf16((t * 65535.0).round() as u16)
+        })
+        .collect()
+}
+
+/// Inverse of `quantize`.
+pub fn dequantize(symbols: &[Gf16], scale: f32) -> Vec<f32> {
+    symbols
+        .iter()
+        .map(|s| (s.0 as f32 / 65535.0) * 2.0 * scale - scale)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    fn sym(v: u16) -> Gf16 {
+        Gf16(v)
+    }
+
+    #[test]
+    fn encode_decode_small() {
+        let code = RsCode::new(6, 3).unwrap();
+        let data = vec![
+            vec![sym(1), sym(2), sym(3)],
+            vec![sym(100), sym(200), sym(300)],
+        ];
+        let shares: Vec<Vec<Gf16>> =
+            (0..6).map(|i| code.encode_share(&data, i)).collect();
+        let completed: Vec<(usize, &[Gf16])> =
+            vec![(5, &shares[5][..]), (1, &shares[1][..]), (3, &shares[3][..])];
+        let decoded = code.decode(&completed).unwrap();
+        // decoded[j][pos] must equal data[pos][j]
+        for pos in 0..2 {
+            for j in 0..3 {
+                assert_eq!(decoded[j][pos], data[pos][j], "pos={pos} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_duplicates_and_shortage() {
+        let code = RsCode::new(4, 2).unwrap();
+        let data = vec![vec![sym(7), sym(9)]];
+        let s0 = code.encode_share(&data, 0);
+        assert!(matches!(
+            code.decode(&[(0, &s0[..])]),
+            Err(RsError::NotEnough { .. })
+        ));
+        assert!(matches!(
+            code.decode(&[(0, &s0[..]), (0, &s0[..])]),
+            Err(RsError::DuplicateRow(0))
+        ));
+    }
+
+    #[test]
+    fn prop_any_k_subset_recovers() {
+        prop::check(30, |g| {
+            let k = g.usize_in(1, 12);
+            let n = k + g.usize_in(0, 20);
+            let code = RsCode::new(n, k).unwrap();
+            let stream = g.usize_in(1, 8);
+            let data: Vec<Vec<Gf16>> = (0..stream)
+                .map(|_| (0..k).map(|_| Gf16(g.u64() as u16)).collect())
+                .collect();
+            let shares: Vec<Vec<Gf16>> =
+                (0..n).map(|i| code.encode_share(&data, i)).collect();
+            let mut order: Vec<usize> = (0..n).collect();
+            g.shuffle(&mut order);
+            let completed: Vec<(usize, &[Gf16])> =
+                order.iter().take(k).map(|&i| (i, &shares[i][..])).collect();
+            let decoded = code.decode(&completed).map_err(|e| e.to_string())?;
+            for pos in 0..stream {
+                for j in 0..k {
+                    if decoded[j][pos] != data[pos][j] {
+                        return Err(format!("mismatch at pos={pos} j={j} (n={n} k={k})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bicec_scale_code_constructs_and_decodes() {
+        // The paper's BICEC configuration: (3200, 800). Exactness at scale.
+        let code = RsCode::new(3200, 800).unwrap();
+        let data: Vec<Vec<Gf16>> = vec![(0..800).map(|i| Gf16(i as u16 * 7 + 1)).collect()];
+        // Encode a scattered subset of shares and decode from them.
+        let subset: Vec<usize> = (0..800).map(|i| i * 4 % 3200 + i / 800).collect();
+        let shares: Vec<Vec<Gf16>> =
+            subset.iter().map(|&i| code.encode_share(&data, i)).collect();
+        let completed: Vec<(usize, &[Gf16])> = subset
+            .iter()
+            .zip(shares.iter())
+            .map(|(&i, s)| (i, &s[..]))
+            .collect();
+        let decoded = code.decode(&completed).unwrap();
+        for j in 0..800 {
+            assert_eq!(decoded[j][0], data[0][j]);
+        }
+    }
+
+    #[test]
+    fn quantize_round_trip_error_bound() {
+        let vals = [-1.0f32, -0.5, 0.0, 0.25, 0.999, 1.0];
+        let q = quantize(&vals, 1.0);
+        let back = dequantize(&q, 1.0);
+        for (v, b) in vals.iter().zip(&back) {
+            assert!((v - b).abs() <= 1.0 / 65535.0 + 1e-7, "{v} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Real Vandermonde generator matrices.
+//!
+//! The paper encodes with `Â_n = A_1 + n·A_2` style polynomial evaluation at
+//! integer points. Integer nodes make the K x K decode submatrices blow up
+//! (cond grows super-exponentially), so the real-valued code here evaluates
+//! at Chebyshev points on [-1, 1] — the standard fix in real-number coded
+//! computing. Decode quality is monitored via `LuFactors::cond_estimate`.
+
+use crate::linalg::LuFactors;
+
+/// Chebyshev nodes of the first kind: x_i = cos((2i+1)π / 2n), i ∈ [0, n).
+/// Distinct for any n, clustered toward ±1.
+pub fn chebyshev_points(n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| ((2 * i + 1) as f64 * std::f64::consts::PI / (2 * n) as f64).cos())
+        .collect()
+}
+
+/// Row-major (rows x k) Vandermonde: out[i][j] = points[i]^j.
+pub fn vandermonde(points: &[f64], k: usize) -> Vec<f64> {
+    let mut out = Vec::with_capacity(points.len() * k);
+    for &x in points {
+        let mut p = 1.0;
+        for _ in 0..k {
+            out.push(p);
+            p *= x;
+        }
+    }
+    out
+}
+
+/// An (n, k) Vandermonde generator with helpers for submatrix decode.
+#[derive(Clone, Debug)]
+pub struct Vandermonde {
+    n: usize,
+    k: usize,
+    points: Vec<f64>,
+    /// Row-major (n x k) generator.
+    gen: Vec<f64>,
+}
+
+impl Vandermonde {
+    /// Chebyshev-point generator, the default for all real codes.
+    pub fn chebyshev(n: usize, k: usize) -> Self {
+        assert!(k >= 1 && n >= k, "need n >= k >= 1, got n={n} k={k}");
+        let points = chebyshev_points(n);
+        let gen = vandermonde(&points, k);
+        Self { n, k, points, gen }
+    }
+
+    /// Integer-point generator (1, 2, ..., n) — the paper's literal
+    /// construction; exposed for the conditioning ablation.
+    pub fn integer_points(n: usize, k: usize) -> Self {
+        assert!(k >= 1 && n >= k);
+        let points: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+        let gen = vandermonde(&points, k);
+        Self { n, k, points, gen }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn points(&self) -> &[f64] {
+        &self.points
+    }
+
+    /// Generator row for encoded block `i` (length k).
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.gen[i * self.k..(i + 1) * self.k]
+    }
+
+    /// Row-major (k x k) submatrix of the rows in `subset`.
+    pub fn submatrix(&self, subset: &[usize]) -> Vec<f64> {
+        assert_eq!(subset.len(), self.k, "need exactly k rows");
+        let mut out = Vec::with_capacity(self.k * self.k);
+        for &r in subset {
+            assert!(r < self.n, "row {r} out of range (n={})", self.n);
+            out.extend_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// LU-factor the decode submatrix for the completed subset.
+    pub fn factor_subset(&self, subset: &[usize]) -> Result<LuFactors, crate::linalg::LuError> {
+        LuFactors::factor(self.k, &self.submatrix(subset))
+    }
+
+    /// Inverse of the decode submatrix, row-major k x k.
+    pub fn invert_subset(&self, subset: &[usize]) -> Result<Vec<f64>, crate::linalg::LuError> {
+        Ok(self.factor_subset(subset)?.inverse())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    #[test]
+    fn chebyshev_points_distinct_and_bounded() {
+        let pts = chebyshev_points(40);
+        for w in pts.windows(2) {
+            assert!(w[0] > w[1], "points must be strictly decreasing");
+        }
+        assert!(pts.iter().all(|p| p.abs() < 1.0));
+    }
+
+    #[test]
+    fn generator_row_is_powers() {
+        let v = Vandermonde::chebyshev(4, 3);
+        let x = v.points()[2];
+        let row = v.row(2);
+        assert!((row[0] - 1.0).abs() < 1e-15);
+        assert!((row[1] - x).abs() < 1e-15);
+        assert!((row[2] - x * x).abs() < 1e-15);
+    }
+
+    #[test]
+    fn any_k_subset_invertible() {
+        let v = Vandermonde::chebyshev(12, 5);
+        // a few deliberately adversarial subsets
+        for subset in [
+            vec![0, 1, 2, 3, 4],
+            vec![7, 8, 9, 10, 11],
+            vec![0, 3, 6, 9, 11],
+            vec![11, 0, 5, 2, 8], // unsorted
+        ] {
+            let f = v.factor_subset(&subset).expect("must factor");
+            assert!(f.cond_estimate().is_finite());
+        }
+    }
+
+    #[test]
+    fn chebyshev_conditioning_beats_integer_points() {
+        // Compare true inf-norm conditions of the worst (trailing) subset.
+        let k = 10;
+        let cond_inf = |v: &Vandermonde, subset: &[usize]| -> f64 {
+            let sub = v.submatrix(subset);
+            let inv = v.factor_subset(subset).unwrap().inverse();
+            let norm = |m: &[f64]| {
+                (0..k)
+                    .map(|i| m[i * k..(i + 1) * k].iter().map(|x| x.abs()).sum::<f64>())
+                    .fold(0.0, f64::max)
+            };
+            norm(&sub) * norm(&inv)
+        };
+        let che = Vandermonde::chebyshev(40, k);
+        let int = Vandermonde::integer_points(40, k);
+        let worst: Vec<usize> = (30..40).collect();
+        let c_che = cond_inf(&che, &worst);
+        let c_int = cond_inf(&int, &worst);
+        assert!(
+            c_che < c_int / 1e3,
+            "chebyshev {c_che:.3e} should be far better than integer {c_int:.3e}"
+        );
+    }
+
+    #[test]
+    fn prop_subset_decode_recovers_polynomial() {
+        // Encoding a polynomial's coefficients then solving any k-subset
+        // must return the coefficients.
+        prop::check(40, |g| {
+            let k = g.usize_in(1, 10);
+            let n = k + g.usize_in(0, 10);
+            let v = Vandermonde::chebyshev(n, k);
+            let coeffs: Vec<f64> = (0..k).map(|_| g.f64_in(-2.0, 2.0)).collect();
+            // encoded value at row i = sum_j coeffs[j] * gen[i][j]
+            let encoded: Vec<f64> = (0..n)
+                .map(|i| v.row(i).iter().zip(&coeffs).map(|(a, c)| a * c).sum())
+                .collect();
+            let mut rows: Vec<usize> = (0..n).collect();
+            g.shuffle(&mut rows);
+            let subset: Vec<usize> = rows.into_iter().take(k).collect();
+            let f = v.factor_subset(&subset).map_err(|e| e.to_string())?;
+            let rhs: Vec<f64> = subset.iter().map(|&i| encoded[i]).collect();
+            let got = f.solve_vec(&rhs);
+            let err = got
+                .iter()
+                .zip(&coeffs)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            if err < 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("recovery error {err:.3e} (k={k}, n={n})"))
+            }
+        });
+    }
+}

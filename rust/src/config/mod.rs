@@ -1,0 +1,209 @@
+//! Experiment configuration: a typed layer over the TOML-subset parser.
+//!
+//! `ExperimentConfig` is the single knob surface for the figure harness,
+//! the benches, and the CLI — every parameter the paper's Sec. 3 fixes has
+//! a named default here, and config files (`configs/*.toml`) override them.
+
+pub mod toml;
+
+use crate::sim::{CostModel, SpeedModel};
+use crate::workload::JobSpec;
+
+pub use toml::{parse, Doc, Value};
+
+/// Full experiment description (defaults = the paper's Sec. 3 setup).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Workload (u, w, v).
+    pub job: JobSpec,
+    /// Worker grid for the x-axis.
+    pub ns: Vec<usize>,
+    pub n_max: usize,
+    /// CEC/MLCEC code dimension and selections per worker.
+    pub k_cec: usize,
+    pub s_cec: usize,
+    /// BICEC code dimension and subtasks per worker.
+    pub k_bicec: usize,
+    pub s_bicec: usize,
+    /// Straggler model.
+    pub p_straggle: f64,
+    pub slowdown: f64,
+    pub jitter: f64,
+    /// Trials per grid point and base seed.
+    pub trials: usize,
+    pub seed: u64,
+    /// Cost model rates.
+    pub worker_ops_per_sec: f64,
+    pub decode_ops_per_sec: f64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        let cm = CostModel::paper_default();
+        Self {
+            job: JobSpec::paper_square(),
+            ns: (20..=40).step_by(2).collect(),
+            n_max: 40,
+            k_cec: 10,
+            s_cec: 20,
+            k_bicec: 800,
+            s_bicec: 80,
+            p_straggle: 0.5,
+            slowdown: 10.0,
+            jitter: 0.05,
+            trials: 20,
+            seed: 2021,
+            worker_ops_per_sec: cm.worker_ops_per_sec,
+            decode_ops_per_sec: cm.decode_ops_per_sec,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn speed_model(&self) -> SpeedModel {
+        SpeedModel::BernoulliSlowdown {
+            p: self.p_straggle,
+            slowdown: self.slowdown,
+            jitter: self.jitter,
+        }
+    }
+
+    pub fn cost_model(&self) -> CostModel {
+        CostModel {
+            worker_ops_per_sec: self.worker_ops_per_sec,
+            decode_ops_per_sec: self.decode_ops_per_sec,
+        }
+    }
+
+    /// The paper's tall x fat variant (Fig. 2b/2d).
+    pub fn tall_fat(mut self) -> Self {
+        self.job = JobSpec::paper_tall_fat();
+        self
+    }
+
+    /// Apply overrides from a parsed TOML doc. Unknown keys are an error —
+    /// config typos must not silently run the default experiment.
+    pub fn apply(&mut self, doc: &Doc) -> Result<(), String> {
+        for key in doc.keys() {
+            let v = doc.get(key).unwrap();
+            let want_usize =
+                || v.as_usize().ok_or_else(|| format!("{key}: expected integer"));
+            let want_f64 =
+                || v.as_float().ok_or_else(|| format!("{key}: expected number"));
+            match key {
+                "job.u" => self.job.u = want_usize()?,
+                "job.w" => self.job.w = want_usize()?,
+                "job.v" => self.job.v = want_usize()?,
+                "grid.ns" => {
+                    let arr = v.as_array().ok_or(format!("{key}: expected array"))?;
+                    self.ns = arr
+                        .iter()
+                        .map(|x| x.as_usize().ok_or(format!("{key}: expected integers")))
+                        .collect::<Result<Vec<_>, _>>()?;
+                }
+                "grid.n_max" => self.n_max = want_usize()?,
+                "scheme.k_cec" => self.k_cec = want_usize()?,
+                "scheme.s_cec" => self.s_cec = want_usize()?,
+                "scheme.k_bicec" => self.k_bicec = want_usize()?,
+                "scheme.s_bicec" => self.s_bicec = want_usize()?,
+                "straggler.p" => self.p_straggle = want_f64()?,
+                "straggler.slowdown" => self.slowdown = want_f64()?,
+                "straggler.jitter" => self.jitter = want_f64()?,
+                "run.trials" => self.trials = want_usize()?,
+                "run.seed" => self.seed = want_usize()? as u64,
+                "cost.worker_ops_per_sec" => self.worker_ops_per_sec = want_f64()?,
+                "cost.decode_ops_per_sec" => self.decode_ops_per_sec = want_f64()?,
+                other => return Err(format!("unknown config key {other:?}")),
+            }
+        }
+        self.validate()
+    }
+
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        let doc = parse(&text)?;
+        let mut cfg = Self::default();
+        cfg.apply(&doc)?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.k_cec == 0 || self.s_cec < self.k_cec {
+            return Err(format!("need S >= K >= 1 (K={}, S={})", self.k_cec, self.s_cec));
+        }
+        if self.ns.iter().any(|&n| n < self.s_cec || n > self.n_max) {
+            return Err(format!(
+                "every N in {:?} must satisfy S={} <= N <= N_max={}",
+                self.ns, self.s_cec, self.n_max
+            ));
+        }
+        if self.k_bicec > self.s_bicec * self.n_max {
+            return Err(format!(
+                "BICEC code ({}, {}) has n < k",
+                self.k_bicec,
+                self.s_bicec * self.n_max
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.p_straggle) {
+            return Err(format!("p_straggle={} outside [0,1]", self.p_straggle));
+        }
+        if self.slowdown < 1.0 {
+            return Err(format!("slowdown={} < 1", self.slowdown));
+        }
+        if self.trials == 0 {
+            return Err("trials must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_the_paper_setup() {
+        let cfg = ExperimentConfig::default();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.job, JobSpec::new(2400, 2400, 2400));
+        assert_eq!(cfg.ns, (20..=40).step_by(2).collect::<Vec<_>>());
+        assert_eq!((cfg.k_cec, cfg.s_cec), (10, 20));
+        assert_eq!((cfg.k_bicec, cfg.s_bicec), (800, 80));
+        assert_eq!(cfg.p_straggle, 0.5);
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let mut cfg = ExperimentConfig::default();
+        let doc = parse(
+            "[job]\nu = 240\nw = 240\nv = 240\n[run]\ntrials = 3\n[straggler]\nslowdown = 4.0\n",
+        )
+        .unwrap();
+        cfg.apply(&doc).unwrap();
+        assert_eq!(cfg.job, JobSpec::new(240, 240, 240));
+        assert_eq!(cfg.trials, 3);
+        assert_eq!(cfg.slowdown, 4.0);
+    }
+
+    #[test]
+    fn unknown_key_is_error() {
+        let mut cfg = ExperimentConfig::default();
+        let doc = parse("[run]\ntrails = 3\n").unwrap(); // typo
+        assert!(cfg.apply(&doc).unwrap_err().contains("unknown config key"));
+    }
+
+    #[test]
+    fn validation_catches_bad_grid() {
+        let mut cfg = ExperimentConfig::default();
+        let doc = parse("[grid]\nns = [10]\n").unwrap(); // below S = 20
+        assert!(cfg.apply(&doc).is_err());
+    }
+
+    #[test]
+    fn tall_fat_swaps_workload() {
+        let cfg = ExperimentConfig::default().tall_fat();
+        assert_eq!(cfg.job, JobSpec::paper_tall_fat());
+        assert_eq!(cfg.job.ops(), JobSpec::paper_square().ops());
+    }
+}

@@ -1,0 +1,281 @@
+//! Minimal TOML-subset parser (the vendored crate set has no `toml`).
+//!
+//! Supported grammar — everything the experiment configs need:
+//!
+//! * `[section]` and `[section.sub]` headers
+//! * `key = value` with value ∈ integer | float | bool | "string" |
+//!   [array of scalars]
+//! * `#` comments, blank lines
+//!
+//! Unsupported TOML (dates, inline tables, multi-line strings, arrays of
+//! tables) is rejected with a line-numbered error, never mis-parsed.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_int().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: dotted-path key -> value (`section.key`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Doc {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    /// Keys under a section prefix (`prefix.`).
+    pub fn section(&self, prefix: &str) -> impl Iterator<Item = (&str, &Value)> {
+        let want = format!("{prefix}.");
+        self.entries
+            .iter()
+            .filter(move |(k, _)| k.starts_with(&want))
+            .map(|(k, v)| (k.as_str(), v))
+    }
+}
+
+pub fn parse(text: &str) -> Result<Doc, String> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (ln0, raw) in text.lines().enumerate() {
+        let ln = ln0 + 1;
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or(format!("line {ln}: unterminated section header"))?
+                .trim();
+            if name.is_empty() || name.contains(['[', ']', '"']) {
+                return Err(format!("line {ln}: bad section name {name:?}"));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or(format!("line {ln}: expected `key = value`"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() || !key.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '-') {
+            return Err(format!("line {ln}: bad key {key:?}"));
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| format!("line {ln}: {e}"))?;
+        let path = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        if doc.entries.insert(path.clone(), value).is_some() {
+            return Err(format!("line {ln}: duplicate key {path}"));
+        }
+    }
+    Ok(doc)
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote (escapes unsupported)".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items = split_top_level(inner)?
+            .into_iter()
+            .map(|it| parse_value(it.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::Array(items));
+    }
+    // numeric (underscores allowed à la TOML)
+    let clean: String = s.chars().filter(|&c| c != '_').collect();
+    if clean.contains(['.', 'e', 'E']) {
+        clean
+            .parse::<f64>()
+            .map(Value::Float)
+            .map_err(|e| format!("bad float {s:?}: {e}"))
+    } else {
+        clean
+            .parse::<i64>()
+            .map(Value::Int)
+            .map_err(|e| format!("bad value {s:?}: {e}"))
+    }
+}
+
+/// Split an array body on top-level commas (no nested arrays needed, but
+/// strings may contain commas).
+fn split_top_level(s: &str) -> Result<Vec<&str>, String> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    let mut depth = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.checked_sub(1).ok_or("unbalanced ]")?,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str {
+        return Err("unterminated string in array".into());
+    }
+    parts.push(&s[start..]);
+    Ok(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_sections_and_comments() {
+        let doc = parse(
+            r#"
+# experiment config
+seed = 42
+rate = 3.0e9   # ops/s
+name = "fig2a"
+flag = true
+
+[scheme]
+k = 10
+s = 20
+ns = [20, 22, 24]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("seed").unwrap().as_int(), Some(42));
+        assert_eq!(doc.get("rate").unwrap().as_float(), Some(3.0e9));
+        assert_eq!(doc.get("name").unwrap().as_str(), Some("fig2a"));
+        assert_eq!(doc.get("flag").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("scheme.k").unwrap().as_usize(), Some(10));
+        let ns = doc.get("scheme.ns").unwrap().as_array().unwrap();
+        assert_eq!(ns.len(), 3);
+        assert_eq!(ns[2].as_int(), Some(24));
+    }
+
+    #[test]
+    fn int_coerces_to_float_not_reverse() {
+        let doc = parse("x = 3\ny = 3.5\n").unwrap();
+        assert_eq!(doc.get("x").unwrap().as_float(), Some(3.0));
+        assert_eq!(doc.get("y").unwrap().as_int(), None);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = parse("big = 2_400\n").unwrap();
+        assert_eq!(doc.get("big").unwrap().as_int(), Some(2400));
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        for (text, frag) in [
+            ("x 1\n", "expected `key = value`"),
+            ("[sec\nx = 1\n", "unterminated section"),
+            ("x = \"abc\n", "unterminated string"),
+            ("x = [1, 2\n", "unterminated array"),
+            ("x = 1\nx = 2\n", "duplicate key"),
+            ("x = 1901-01-01\n", "bad"),
+        ] {
+            let err = parse(text).unwrap_err();
+            assert!(err.contains(frag), "{text:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn string_array() {
+        let doc = parse("schemes = [\"cec\", \"mlcec\", \"bicec\"]\n").unwrap();
+        let a = doc.get("schemes").unwrap().as_array().unwrap();
+        assert_eq!(a[1].as_str(), Some("mlcec"));
+    }
+}

@@ -1,0 +1,457 @@
+//! The master: encode → dispatch → track recovery → decode → verify.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::codes::RealMdsCode;
+use crate::linalg::{gemm, split_rows, Matrix};
+use crate::rng::default_rng;
+use crate::runtime::{artifacts_available, default_artifact_dir, Runtime};
+use crate::sim::{SpeedModel, WorkerSpeeds};
+use crate::tas::{Bicec, Cec, DLevelPolicy, Mlcec, RecoveryRule, Scheme};
+use crate::workload::JobSpec;
+
+use super::pool::{spawn_worker, Backend, WorkerMsg, WorkerTask};
+use super::recovery::RecoveryTracker;
+
+/// Scheme selection for a job (a parsed form of the CLI/config options).
+#[derive(Clone, Debug)]
+pub enum SchemeConfig {
+    Cec { k: usize, s: usize },
+    Mlcec { k: usize, s: usize, policy: DLevelPolicy },
+    Bicec { k: usize, s_per_worker: usize },
+}
+
+impl SchemeConfig {
+    pub fn build(&self, n_max: usize) -> Box<dyn Scheme> {
+        match self {
+            SchemeConfig::Cec { k, s } => Box::new(Cec::new(*k, *s)),
+            SchemeConfig::Mlcec { k, s, policy } => {
+                Box::new(Mlcec::with_policy(*k, *s, policy.clone()))
+            }
+            SchemeConfig::Bicec { k, s_per_worker } => {
+                Box::new(Bicec::new(*k, *s_per_worker, n_max))
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchemeConfig::Cec { .. } => "cec",
+            SchemeConfig::Mlcec { .. } => "mlcec",
+            SchemeConfig::Bicec { .. } => "bicec",
+        }
+    }
+}
+
+/// Execution backend for the worker hot path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecBackend {
+    /// Native blocked gemm everywhere.
+    Native,
+    /// Workers and decode run the AOT PJRT artifacts (requires
+    /// `make artifacts` and a matching job geometry).
+    Pjrt,
+}
+
+#[derive(Clone, Debug)]
+pub struct JobConfig {
+    pub job: JobSpec,
+    pub scheme: SchemeConfig,
+    /// Available workers at start (slots 0..n_workers).
+    pub n_workers: usize,
+    /// Slots the code is sized for.
+    pub n_max: usize,
+    pub backend: ExecBackend,
+    /// Straggler injection; `None` runs every worker at full speed.
+    pub speed_model: Option<SpeedModel>,
+    /// Preempt this many workers (highest slots) once each has shipped one
+    /// completion — a mid-run elastic event on the real pool.
+    pub preempt_after_first: usize,
+    pub seed: u64,
+}
+
+impl JobConfig {
+    /// The end-to-end driver configuration (matches the AOT artifacts).
+    pub fn end_to_end(scheme: SchemeConfig) -> Self {
+        Self {
+            job: JobSpec::end_to_end(),
+            scheme,
+            n_workers: 12,
+            n_max: 12,
+            backend: ExecBackend::Pjrt,
+            speed_model: Some(SpeedModel::BernoulliSlowdown {
+                p: 0.5,
+                slowdown: 4.0,
+                jitter: 0.05,
+            }),
+            preempt_after_first: 0,
+            seed: 7,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct JobReport {
+    pub scheme: &'static str,
+    pub encode_wall: f64,
+    pub computation_wall: f64,
+    pub decode_wall: f64,
+    pub completions_received: usize,
+    pub completions_used: usize,
+    pub workers_preempted: usize,
+    /// Max relative error of the recovered product vs the uncoded baseline.
+    pub max_rel_err: f32,
+    pub recovered: bool,
+}
+
+impl JobReport {
+    pub fn finishing_wall(&self) -> f64 {
+        self.computation_wall + self.decode_wall
+    }
+}
+
+/// Run one coded job end to end on the threaded worker pool.
+pub fn run_job(cfg: &JobConfig) -> Result<JobReport> {
+    let scheme = cfg.scheme.build(cfg.n_max);
+    let n = cfg.n_workers;
+    assert!(n >= 1 && n <= cfg.n_max);
+    let JobSpec { u, w, v } = cfg.job;
+    let k = scheme.k();
+
+    let mut rng = default_rng(cfg.seed);
+    let (a, b) = cfg.job.generate(&mut rng);
+    let b = Arc::new(b);
+
+    // --- encode ---------------------------------------------------------
+    let t_enc = Instant::now();
+    let (code, total_rows) = match &cfg.scheme {
+        SchemeConfig::Bicec { k, s_per_worker } => {
+            (RealMdsCode::new(s_per_worker * cfg.n_max, *k), u / *k)
+        }
+        _ => (RealMdsCode::new(cfg.n_max, k), u / k),
+    };
+    anyhow::ensure!(
+        u % code.k() == 0,
+        "u={u} must divide by K={} (pad upstream)",
+        code.k()
+    );
+    let data_blocks = split_rows(&a, code.k()); // each (u/K, w)
+    // Worker slot s stores its encoded copy. CEC/MLCEC: coded task s.
+    // BICEC: the s_per_worker coded subtasks of its static range, stacked.
+    let alloc = scheme.allocate(n);
+    let encoded: Vec<Matrix> = match &cfg.scheme {
+        SchemeConfig::Bicec { s_per_worker, .. } => (0..n)
+            .map(|slot| {
+                let blocks: Vec<Matrix> = (slot * s_per_worker..(slot + 1) * s_per_worker)
+                    .map(|id| code.encode_one(&data_blocks, id))
+                    .collect();
+                crate::linalg::stack_rows(&blocks)
+            })
+            .collect(),
+        _ => (0..n).map(|slot| code.encode_one(&data_blocks, slot)).collect(),
+    };
+    let encode_wall = t_enc.elapsed().as_secs_f64();
+
+    // --- pick the PJRT artifacts (or fail early) -------------------------
+    let rows_per_item = match alloc.rule {
+        RecoveryRule::PerSet { sets, .. } => {
+            anyhow::ensure!(
+                total_rows % sets == 0,
+                "task rows {total_rows} not divisible into {sets} subtasks"
+            );
+            total_rows / sets
+        }
+        RecoveryRule::Global { .. } => total_rows,
+    };
+    let backend = match cfg.backend {
+        ExecBackend::Native => Backend::Native,
+        ExecBackend::Pjrt => {
+            anyhow::ensure!(
+                artifacts_available(),
+                "PJRT backend requires `make artifacts`"
+            );
+            let dir = default_artifact_dir();
+            let probe = Runtime::open(&dir)?;
+            let name = probe
+                .find_by_inputs(&[&[rows_per_item, w], &[w, v]])
+                .ok_or_else(|| {
+                    anyhow!(
+                        "no artifact for subtask shape ({rows_per_item},{w})x({w},{v}); \
+                         regenerate with the matching aot.py preset"
+                    )
+                })?
+                .to_string();
+            Backend::Pjrt { artifact: name, dir }
+        }
+    };
+
+    // --- spawn the pool ---------------------------------------------------
+    let speeds = match &cfg.speed_model {
+        Some(model) => WorkerSpeeds::sample(model, cfg.n_max, &mut rng),
+        None => WorkerSpeeds::uniform(cfg.n_max),
+    };
+    let (tx, rx) = mpsc::channel();
+    let mut handles = Vec::with_capacity(n);
+    let t_comp = Instant::now();
+    for (slot, list) in alloc.lists.iter().enumerate() {
+        let tasks: Vec<WorkerTask> = list
+            .iter()
+            .map(|item| {
+                let rows = match alloc.rule {
+                    RecoveryRule::PerSet { .. } => {
+                        item.group * rows_per_item..(item.group + 1) * rows_per_item
+                    }
+                    // BICEC: local offset within this slot's stacked range.
+                    RecoveryRule::Global { .. } => {
+                        let s_per = list.len();
+                        let local = item.group - slot * s_per;
+                        let rows_b = encoded[slot].rows() / s_per;
+                        local * rows_b..(local + 1) * rows_b
+                    }
+                };
+                WorkerTask { group: item.group, rows }
+            })
+            .collect();
+        handles.push(spawn_worker(
+            slot,
+            encoded[slot].clone(),
+            b.clone(),
+            tasks,
+            speeds.multiplier(slot).max(1.0),
+            backend.clone(),
+            tx.clone(),
+        ));
+    }
+    drop(tx);
+
+    // --- collect until recovery -------------------------------------------
+    let mut tracker = RecoveryTracker::new(alloc.rule);
+    // Completion payloads: keyed by (group, slot) for PerSet, group for Global.
+    let mut payloads: Vec<((usize, usize), Vec<f32>)> = Vec::new();
+    let mut received = 0usize;
+    let mut preempted = 0usize;
+    let mut seen_first: std::collections::HashSet<usize> = Default::default();
+    let mut computation_wall = f64::NAN;
+    let mut recovered = false;
+
+    for msg in rx.iter() {
+        match msg {
+            WorkerMsg::Completed { slot, group, data, .. } => {
+                received += 1;
+                let counts = tracker.record(slot, group);
+                payloads.push(((group, slot), data));
+                if counts {
+                    recovered = true;
+                    computation_wall = t_comp.elapsed().as_secs_f64();
+                    break;
+                }
+                // Mid-run elastic event: preempt the highest slots after
+                // their first delivery.
+                if cfg.preempt_after_first > 0
+                    && slot >= n - cfg.preempt_after_first
+                    && seen_first.insert(slot)
+                {
+                    handles[slot].preempt();
+                    preempted += 1;
+                }
+            }
+            WorkerMsg::Done { slot, error } => {
+                if let Some(e) = error {
+                    bail!("worker {slot} failed: {e}");
+                }
+            }
+        }
+    }
+    for h in handles {
+        h.preempt();
+        h.join();
+    }
+    if !recovered {
+        bail!("pool drained before the recovery rule was met");
+    }
+
+    // --- decode ------------------------------------------------------------
+    let t_dec = Instant::now();
+    let recovered_a_b = decode(&code, &tracker, &payloads, u, v, rows_per_item)?;
+    let decode_wall = t_dec.elapsed().as_secs_f64();
+
+    // --- verify -------------------------------------------------------------
+    let baseline = gemm(&a, &b);
+    let scale = baseline.max_abs().max(1.0);
+    let max_rel_err = recovered_a_b.max_abs_diff(&baseline) / scale;
+
+    Ok(JobReport {
+        scheme: cfg.scheme.name(),
+        encode_wall,
+        computation_wall,
+        decode_wall,
+        completions_received: received,
+        completions_used: match alloc.rule {
+            RecoveryRule::PerSet { sets, k } => sets * k,
+            RecoveryRule::Global { k } => k,
+        },
+        workers_preempted: preempted,
+        max_rel_err,
+        recovered,
+    })
+}
+
+/// Decode the recovered product from the tracker's completion sets.
+fn decode(
+    code: &RealMdsCode,
+    tracker: &RecoveryTracker,
+    payloads: &[((usize, usize), Vec<f32>)],
+    u: usize,
+    v: usize,
+    rows_per_item: usize,
+) -> Result<Matrix> {
+    let k = code.k();
+    let mut out = Matrix::zeros(u, v);
+    let fetch = |group: usize, slot: usize| -> Result<&Vec<f32>> {
+        payloads
+            .iter()
+            .find(|((g, s), _)| *g == group && *s == slot)
+            .map(|(_, d)| d)
+            .ok_or_else(|| anyhow!("missing payload for group {group} slot {slot}"))
+    };
+    match tracker.rule() {
+        RecoveryRule::PerSet { sets, .. } => {
+            // Set m: K completed blocks (rows_per_item x v) from distinct
+            // slots; decode -> the m-th slice of each data block A_i·B.
+            for m in 0..sets {
+                let slots = &tracker.set_contributors(m)[..k];
+                let inv = code
+                    .decode_coeffs_f32(slots)
+                    .map_err(|e| anyhow!("set {m}: {e}"))?;
+                let blocks: Vec<&Vec<f32>> = slots
+                    .iter()
+                    .map(|&s| fetch(m, s))
+                    .collect::<Result<Vec<_>>>()?;
+                for j in 0..k {
+                    // Global row offset of data block j's m-th slice.
+                    let base = j * (u / k) + m * rows_per_item;
+                    for r in 0..rows_per_item {
+                        let dst = out.row_mut(base + r);
+                        for (l, blk) in blocks.iter().enumerate() {
+                            let c = inv[j * k + l];
+                            let src = &blk[r * v..(r + 1) * v];
+                            for (d, s) in dst.iter_mut().zip(src) {
+                                *d += c * s;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        RecoveryRule::Global { .. } => {
+            let ids = &tracker.global_ids()[..k];
+            let inv = code.decode_coeffs_f32(ids).map_err(|e| anyhow!("global: {e}"))?;
+            let blocks: Vec<&Vec<f32>> = ids
+                .iter()
+                .map(|&id| {
+                    payloads
+                        .iter()
+                        .find(|((g, _), _)| *g == id)
+                        .map(|(_, d)| d)
+                        .ok_or_else(|| anyhow!("missing payload for id {id}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let rows_b = u / k;
+            debug_assert_eq!(rows_b, rows_per_item / 1.max(1));
+            for j in 0..k {
+                let base = j * rows_b;
+                for r in 0..rows_b {
+                    let dst = out.row_mut(base + r);
+                    for (l, blk) in blocks.iter().enumerate() {
+                        let c = inv[j * k + l];
+                        let src = &blk[r * v..(r + 1) * v];
+                        for (d, s) in dst.iter_mut().zip(src) {
+                            *d += c * s;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn native_cfg(scheme: SchemeConfig) -> JobConfig {
+        JobConfig {
+            job: JobSpec::new(64, 32, 16),
+            scheme,
+            n_workers: 8,
+            n_max: 8,
+            backend: ExecBackend::Native,
+            speed_model: None,
+            preempt_after_first: 0,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn cec_job_recovers_exactly() {
+        let report = run_job(&native_cfg(SchemeConfig::Cec { k: 4, s: 6 })).unwrap();
+        assert!(report.recovered);
+        assert!(report.max_rel_err < 1e-3, "err={}", report.max_rel_err);
+        assert_eq!(report.scheme, "cec");
+    }
+
+    #[test]
+    fn mlcec_job_recovers_exactly() {
+        let report = run_job(&native_cfg(SchemeConfig::Mlcec {
+            k: 4,
+            s: 6,
+            policy: DLevelPolicy::LinearRamp,
+        }))
+        .unwrap();
+        assert!(report.recovered);
+        assert!(report.max_rel_err < 1e-3, "err={}", report.max_rel_err);
+    }
+
+    #[test]
+    fn bicec_job_recovers_exactly() {
+        let report =
+            run_job(&native_cfg(SchemeConfig::Bicec { k: 16, s_per_worker: 3 })).unwrap();
+        assert!(report.recovered);
+        assert!(report.max_rel_err < 1e-2, "err={}", report.max_rel_err);
+        assert_eq!(report.completions_used, 16);
+    }
+
+    #[test]
+    fn bicec_survives_preemption() {
+        let mut cfg = native_cfg(SchemeConfig::Bicec { k: 16, s_per_worker: 3 });
+        cfg.preempt_after_first = 2;
+        let report = run_job(&cfg).unwrap();
+        assert!(report.recovered);
+        assert!(report.max_rel_err < 1e-2);
+    }
+
+    #[test]
+    fn straggler_injection_still_recovers() {
+        let mut cfg = native_cfg(SchemeConfig::Cec { k: 4, s: 6 });
+        cfg.speed_model = Some(SpeedModel::BernoulliSlowdown {
+            p: 0.5,
+            slowdown: 3.0,
+            jitter: 0.0,
+        });
+        let report = run_job(&cfg).unwrap();
+        assert!(report.recovered);
+        assert!(report.max_rel_err < 1e-3);
+    }
+
+    #[test]
+    fn rejects_indivisible_geometry() {
+        let mut cfg = native_cfg(SchemeConfig::Cec { k: 5, s: 6 });
+        cfg.job = JobSpec::new(64, 32, 16); // 64 % 5 != 0
+        assert!(run_job(&cfg).is_err());
+    }
+}

@@ -1,0 +1,23 @@
+//! The elastic master — the paper's system realised with real threads and
+//! real numerics.
+//!
+//! `master::run_job` drives a full coded job: partition + MDS-encode the
+//! input, hand each worker slot its encoded task, let the worker pool chew
+//! through the TAS-selected subtask lists (executing either the native
+//! blocked gemm or the AOT-compiled PJRT artifacts), track recovery,
+//! decode, and verify the recovered product against the uncoded baseline.
+//!
+//! Elasticity in real-execution mode is preemption-style (workers carry a
+//! preempt flag checked between subtasks); re-allocation dynamics across
+//! granularities are exercised exhaustively in `sim::elastic` (DESIGN.md
+//! §Substitutions discusses the split).
+
+pub mod master;
+pub mod pool;
+pub mod recovery;
+pub mod service;
+
+pub use master::{run_job, ExecBackend, JobConfig, JobReport, SchemeConfig};
+pub use service::{serve, ServiceConfig, ServiceReport};
+pub use pool::{WorkerHandle, WorkerMsg, WorkerTask};
+pub use recovery::RecoveryTracker;

@@ -1,0 +1,267 @@
+//! Worker pool: one OS thread per active slot.
+//!
+//! Each worker owns its encoded task (the coded copy stored at that slot in
+//! the paper's model), a shared handle to B, its TAS to-do list, and an
+//! execution backend. It processes the list sequentially, shipping each
+//! completed subtask's output rows to the master over an mpsc channel, and
+//! checks a preempt flag between subtasks (elastic events have short
+//! notice — a worker finishes its in-flight subtask, then leaves).
+//!
+//! Straggling is injected by sleeping `elapsed * (multiplier - 1)` after
+//! each subtask, preserving the relative-speed semantics of the DES.
+//!
+//! PJRT note: the xla crate handles are not Send, so each worker opens its
+//! own `Runtime` inside its thread (CPU client + compile are cheap at the
+//! end-to-end artifact sizes).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::{gemm, Matrix};
+use crate::runtime::Runtime;
+
+/// How workers execute subtask products.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Native blocked gemm (always available).
+    Native,
+    /// AOT-compiled PJRT artifact with the given name.
+    Pjrt { artifact: String, dir: std::path::PathBuf },
+}
+
+/// One unit of work: a contiguous row range of the worker's encoded task.
+#[derive(Clone, Debug)]
+pub struct WorkerTask {
+    /// Recovery group (set index for CEC/MLCEC, global id for BICEC).
+    pub group: usize,
+    /// Row range within this slot's encoded task.
+    pub rows: std::ops::Range<usize>,
+}
+
+/// Completion / lifecycle messages from workers to the master.
+#[derive(Debug)]
+pub enum WorkerMsg {
+    Completed {
+        slot: usize,
+        group: usize,
+        /// Product rows (len = rows.len() * v).
+        data: Vec<f32>,
+        /// Compute seconds (before straggler-injection sleep).
+        elapsed: f64,
+    },
+    /// Worker exited (list exhausted, preempted, or errored).
+    Done { slot: usize, error: Option<String> },
+}
+
+/// Handle to a spawned worker.
+pub struct WorkerHandle {
+    pub slot: usize,
+    preempt: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    /// Ask the worker to stop after its in-flight subtask.
+    pub fn preempt(&self) {
+        self.preempt.store(true, Ordering::Relaxed);
+    }
+
+    pub fn join(mut self) {
+        if let Some(h) = self.join.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Spawn a worker for `slot`.
+///
+/// `encoded_task`: the slot's coded matrix (rows_task x w); `b`: shared B;
+/// `tasks`: sequential to-do list; `multiplier`: straggler slowdown (1.0 =
+/// fast); `backend`: execution engine.
+pub fn spawn_worker(
+    slot: usize,
+    encoded_task: Matrix,
+    b: Arc<Matrix>,
+    tasks: Vec<WorkerTask>,
+    multiplier: f64,
+    backend: Backend,
+    tx: Sender<WorkerMsg>,
+) -> WorkerHandle {
+    assert!(multiplier >= 1.0, "multiplier {multiplier} < 1");
+    let preempt = Arc::new(AtomicBool::new(false));
+    let flag = preempt.clone();
+    let join = std::thread::Builder::new()
+        .name(format!("hcec-worker-{slot}"))
+        .spawn(move || {
+            let err = run_worker(slot, &encoded_task, &b, &tasks, multiplier, &backend, &flag, &tx);
+            let _ = tx.send(WorkerMsg::Done { slot, error: err.err().map(|e| e.to_string()) });
+        })
+        .expect("spawn worker thread");
+    WorkerHandle { slot, preempt, join: Some(join) }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_worker(
+    slot: usize,
+    encoded_task: &Matrix,
+    b: &Matrix,
+    tasks: &[WorkerTask],
+    multiplier: f64,
+    backend: &Backend,
+    preempt: &AtomicBool,
+    tx: &Sender<WorkerMsg>,
+) -> Result<()> {
+    let mut runtime = match backend {
+        Backend::Native => None,
+        Backend::Pjrt { dir, .. } => Some(Runtime::open(dir)?),
+    };
+    for task in tasks {
+        if preempt.load(Ordering::Relaxed) {
+            break;
+        }
+        let t0 = Instant::now();
+        let nrows = task.rows.len();
+        // Slice the row range out of the encoded task.
+        let mut block = Matrix::zeros(nrows, encoded_task.cols());
+        for (i, r) in task.rows.clone().enumerate() {
+            block.row_mut(i).copy_from_slice(encoded_task.row(r));
+        }
+        let product = match backend {
+            Backend::Native => gemm(&block, b),
+            Backend::Pjrt { artifact, .. } => {
+                let rt = runtime.as_mut().expect("runtime opened");
+                rt.matmul(artifact, &block, b)
+                    .map_err(|e| anyhow!("slot {slot} artifact {artifact}: {e}"))?
+            }
+        };
+        let elapsed = t0.elapsed().as_secs_f64();
+        if multiplier > 1.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                elapsed * (multiplier - 1.0),
+            ));
+        }
+        // Master may have hung up after recovery; treat as a stop signal.
+        if tx
+            .send(WorkerMsg::Completed {
+                slot,
+                group: task.group,
+                data: product.into_vec(),
+                elapsed,
+            })
+            .is_err()
+        {
+            break;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::default_rng;
+    use std::sync::mpsc;
+
+    fn setup(rows: usize, w: usize, v: usize) -> (Matrix, Arc<Matrix>) {
+        let mut rng = default_rng(5);
+        (Matrix::random(rows, w, &mut rng), Arc::new(Matrix::random(w, v, &mut rng)))
+    }
+
+    #[test]
+    fn worker_completes_list_in_order() {
+        let (task, b) = setup(8, 16, 4);
+        let (tx, rx) = mpsc::channel();
+        let tasks: Vec<WorkerTask> = (0..4)
+            .map(|m| WorkerTask { group: m, rows: m * 2..(m + 1) * 2 })
+            .collect();
+        let h = spawn_worker(3, task.clone(), b.clone(), tasks, 1.0, Backend::Native, tx);
+        let mut groups = Vec::new();
+        let mut dones = 0;
+        while dones == 0 {
+            match rx.recv().unwrap() {
+                WorkerMsg::Completed { slot, group, data, .. } => {
+                    assert_eq!(slot, 3);
+                    assert_eq!(data.len(), 2 * 4);
+                    groups.push(group);
+                }
+                WorkerMsg::Done { error, .. } => {
+                    assert!(error.is_none());
+                    dones += 1;
+                }
+            }
+        }
+        assert_eq!(groups, vec![0, 1, 2, 3]);
+        h.join();
+    }
+
+    #[test]
+    fn completed_data_matches_native_product() {
+        let (task, b) = setup(4, 8, 6);
+        let (tx, rx) = mpsc::channel();
+        let tasks = vec![WorkerTask { group: 0, rows: 1..3 }];
+        let h = spawn_worker(0, task.clone(), b.clone(), tasks, 1.0, Backend::Native, tx);
+        let msg = rx.recv().unwrap();
+        if let WorkerMsg::Completed { data, .. } = msg {
+            let mut block = Matrix::zeros(2, 8);
+            block.row_mut(0).copy_from_slice(task.row(1));
+            block.row_mut(1).copy_from_slice(task.row(2));
+            let want = gemm(&block, &b);
+            assert_eq!(&data, want.as_slice());
+        } else {
+            panic!("expected completion, got {msg:?}");
+        }
+        h.join();
+    }
+
+    #[test]
+    fn preempt_stops_between_subtasks() {
+        let (task, b) = setup(64, 256, 64);
+        let (tx, rx) = mpsc::channel();
+        let tasks: Vec<WorkerTask> =
+            (0..32).map(|m| WorkerTask { group: m, rows: m * 2..(m + 1) * 2 }).collect();
+        let h = spawn_worker(1, task, b, tasks, 1.0, Backend::Native, tx);
+        // Let one or two subtasks through, then preempt.
+        let first = rx.recv().unwrap();
+        assert!(matches!(first, WorkerMsg::Completed { .. }));
+        h.preempt();
+        let mut completed = 1;
+        loop {
+            match rx.recv().unwrap() {
+                WorkerMsg::Completed { .. } => completed += 1,
+                WorkerMsg::Done { error, .. } => {
+                    assert!(error.is_none());
+                    break;
+                }
+            }
+        }
+        assert!(completed < 32, "preempt must cut the list short ({completed})");
+        h.join();
+    }
+
+    #[test]
+    fn straggler_multiplier_slows_wall_clock() {
+        let (task, b) = setup(16, 128, 64);
+        let tasks: Vec<WorkerTask> =
+            (0..8).map(|m| WorkerTask { group: m, rows: m * 2..(m + 1) * 2 }).collect();
+        let run = |mult: f64| -> f64 {
+            let (tx, rx) = mpsc::channel();
+            let t0 = Instant::now();
+            let h = spawn_worker(0, task.clone(), b.clone(), tasks.clone(), mult, Backend::Native, tx);
+            loop {
+                if matches!(rx.recv().unwrap(), WorkerMsg::Done { .. }) {
+                    break;
+                }
+            }
+            h.join();
+            t0.elapsed().as_secs_f64()
+        };
+        let fast = run(1.0);
+        let slow = run(8.0);
+        assert!(slow > 3.0 * fast, "slowdown not injected: {fast} vs {slow}");
+    }
+}

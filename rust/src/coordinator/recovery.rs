@@ -1,0 +1,155 @@
+//! Recovery tracking: when has the master received enough completed
+//! subtasks to decode?
+//!
+//! * `PerSet` (CEC/MLCEC): each of the `sets` groups needs `k` completions
+//!   from *distinct code slots*.
+//! * `Global` (BICEC): `k` distinct encoded-subtask ids overall.
+//!
+//! The tracker also remembers *which* completions satisfied each group, in
+//! arrival order — exactly what the decoder consumes.
+
+use std::collections::HashSet;
+
+use crate::tas::RecoveryRule;
+
+#[derive(Debug)]
+pub struct RecoveryTracker {
+    rule: RecoveryRule,
+    /// PerSet: per-set list of contributing slots (arrival order).
+    per_set: Vec<Vec<usize>>,
+    /// PerSet: sets that reached k.
+    sets_done: usize,
+    /// Global: distinct completed subtask ids (arrival order).
+    global: Vec<usize>,
+    global_seen: HashSet<usize>,
+}
+
+impl RecoveryTracker {
+    pub fn new(rule: RecoveryRule) -> Self {
+        let sets = match rule {
+            RecoveryRule::PerSet { sets, .. } => sets,
+            RecoveryRule::Global { .. } => 0,
+        };
+        Self {
+            rule,
+            per_set: vec![Vec::new(); sets],
+            sets_done: 0,
+            global: Vec::new(),
+            global_seen: HashSet::new(),
+        }
+    }
+
+    pub fn rule(&self) -> RecoveryRule {
+        self.rule
+    }
+
+    /// Record a completion. For PerSet, `group` is the set index and `slot`
+    /// the code row; for Global, `group` is the encoded-subtask id (slot is
+    /// ignored). Returns true if this completion *newly* satisfied the
+    /// whole rule.
+    pub fn record(&mut self, slot: usize, group: usize) -> bool {
+        if self.is_complete() {
+            return false;
+        }
+        match self.rule {
+            RecoveryRule::PerSet { sets, k } => {
+                assert!(group < sets, "set {group} out of range");
+                let entry = &mut self.per_set[group];
+                if entry.len() >= k || entry.contains(&slot) {
+                    return false; // redundant completion
+                }
+                entry.push(slot);
+                if entry.len() == k {
+                    self.sets_done += 1;
+                }
+                self.sets_done == sets
+            }
+            RecoveryRule::Global { k } => {
+                if !self.global_seen.insert(group) {
+                    return false;
+                }
+                self.global.push(group);
+                self.global.len() == k
+            }
+        }
+    }
+
+    pub fn is_complete(&self) -> bool {
+        match self.rule {
+            RecoveryRule::PerSet { sets, .. } => self.sets_done == sets,
+            RecoveryRule::Global { k } => self.global.len() >= k,
+        }
+    }
+
+    /// Fraction of the rule satisfied (monitoring/progress bars).
+    pub fn progress(&self) -> f64 {
+        match self.rule {
+            RecoveryRule::PerSet { sets, k } => {
+                let have: usize = self.per_set.iter().map(|s| s.len().min(k)).sum();
+                have as f64 / (sets * k) as f64
+            }
+            RecoveryRule::Global { k } => (self.global.len() as f64 / k as f64).min(1.0),
+        }
+    }
+
+    /// Slots that satisfied set `m` (PerSet only), in arrival order.
+    pub fn set_contributors(&self, m: usize) -> &[usize] {
+        &self.per_set[m]
+    }
+
+    /// Ids that satisfied the global rule, in arrival order.
+    pub fn global_ids(&self) -> &[usize] {
+        &self.global
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_set_requires_k_each() {
+        let mut t = RecoveryTracker::new(RecoveryRule::PerSet { sets: 2, k: 2 });
+        assert!(!t.record(0, 0));
+        assert!(!t.record(1, 0)); // set 0 done, set 1 empty
+        assert!(!t.record(3, 1));
+        assert!(t.record(2, 1)); // completes everything
+        assert!(t.is_complete());
+        assert_eq!(t.set_contributors(0), &[0, 1]);
+        assert_eq!(t.set_contributors(1), &[3, 2]);
+    }
+
+    #[test]
+    fn per_set_ignores_duplicate_slots_and_overflow() {
+        let mut t = RecoveryTracker::new(RecoveryRule::PerSet { sets: 1, k: 2 });
+        assert!(!t.record(5, 0));
+        assert!(!t.record(5, 0)); // same slot again: no credit
+        assert!((t.progress() - 0.5).abs() < 1e-12);
+        assert!(t.record(6, 0));
+        assert!(!t.record(7, 0)); // already complete
+        assert_eq!(t.set_contributors(0).len(), 2);
+    }
+
+    #[test]
+    fn global_counts_distinct_ids() {
+        let mut t = RecoveryTracker::new(RecoveryRule::Global { k: 3 });
+        assert!(!t.record(0, 10));
+        assert!(!t.record(1, 10)); // duplicate id
+        assert!(!t.record(0, 11));
+        assert!(t.record(2, 12));
+        assert_eq!(t.global_ids(), &[10, 11, 12]);
+    }
+
+    #[test]
+    fn progress_monotone() {
+        let mut t = RecoveryTracker::new(RecoveryRule::PerSet { sets: 2, k: 2 });
+        let mut last = 0.0;
+        for (slot, set) in [(0, 0), (1, 0), (0, 1), (1, 1)] {
+            t.record(slot, set);
+            let p = t.progress();
+            assert!(p >= last);
+            last = p;
+        }
+        assert_eq!(last, 1.0);
+    }
+}

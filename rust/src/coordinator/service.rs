@@ -1,0 +1,131 @@
+//! Job-stream service: the paper's system as a long-running master.
+//!
+//! A sequence of coded matrix-product jobs is served on a pool whose
+//! availability evolves between jobs per an `ElasticTrace` (spot-market
+//! style). Each job runs on whatever workers are available at its start —
+//! the elastic model of Sec. 2 (events have short notice, so the master
+//! re-allocates at job granularity in real mode; intra-job preemption is
+//! exercised by `JobConfig::preempt_after_first` and, exhaustively, by the
+//! DES). Reports per-job latency plus service throughput.
+
+use anyhow::Result;
+
+use crate::metrics::Summary;
+use crate::sim::trace::{ElasticTrace, EventKind};
+
+use super::master::{run_job, JobConfig, JobReport};
+
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Template for every job (n_workers is overridden per job).
+    pub job_template: JobConfig,
+    pub jobs: usize,
+    /// Availability evolution; event times are interpreted as job indices
+    /// (events with time < j apply before job j).
+    pub trace: ElasticTrace,
+}
+
+#[derive(Debug)]
+pub struct ServiceReport {
+    pub per_job: Vec<JobReport>,
+    pub workers_at_job: Vec<usize>,
+    pub total_wall: f64,
+}
+
+impl ServiceReport {
+    pub fn throughput_jobs_per_sec(&self) -> f64 {
+        self.per_job.len() as f64 / self.total_wall
+    }
+
+    pub fn finishing_summary(&self) -> Summary {
+        Summary::of(&self.per_job.iter().map(|r| r.finishing_wall()).collect::<Vec<_>>())
+    }
+}
+
+/// Run the service loop.
+pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
+    cfg.trace
+        .validate()
+        .map_err(|e| anyhow::anyhow!("trace: {e}"))?;
+    let t0 = std::time::Instant::now();
+    let mut per_job = Vec::with_capacity(cfg.jobs);
+    let mut workers_at_job = Vec::with_capacity(cfg.jobs);
+    let mut active = cfg.trace.n_initial;
+    let mut ev_idx = 0;
+    for j in 0..cfg.jobs {
+        // Apply elastic events scheduled before this job.
+        while ev_idx < cfg.trace.events.len() && cfg.trace.events[ev_idx].time < j as f64 {
+            match cfg.trace.events[ev_idx].kind {
+                EventKind::Leave(_) => active -= 1,
+                EventKind::Join(_) => active += 1,
+            }
+            ev_idx += 1;
+        }
+        let mut job_cfg = cfg.job_template.clone();
+        job_cfg.n_workers = active.min(job_cfg.n_max);
+        job_cfg.seed = cfg.job_template.seed.wrapping_add(j as u64);
+        let report = run_job(&job_cfg)?;
+        anyhow::ensure!(report.recovered, "job {j} failed to recover");
+        per_job.push(report);
+        workers_at_job.push(active);
+    }
+    Ok(ServiceReport { per_job, workers_at_job, total_wall: t0.elapsed().as_secs_f64() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{ExecBackend, SchemeConfig};
+    use crate::sim::trace::ElasticEvent;
+    use crate::workload::JobSpec;
+
+    fn quick_service(jobs: usize, trace: ElasticTrace) -> ServiceConfig {
+        ServiceConfig {
+            job_template: JobConfig {
+                job: JobSpec::new(48, 32, 16),
+                scheme: SchemeConfig::Bicec { k: 12, s_per_worker: 3 },
+                n_workers: 8,
+                n_max: 8,
+                backend: ExecBackend::Native,
+                speed_model: None,
+                preempt_after_first: 0,
+                seed: 5,
+            },
+            jobs,
+            trace,
+        }
+    }
+
+    #[test]
+    fn serves_stream_with_static_pool() {
+        let report = serve(&quick_service(4, ElasticTrace::static_n(8, 8))).unwrap();
+        assert_eq!(report.per_job.len(), 4);
+        assert!(report.per_job.iter().all(|r| r.recovered));
+        assert!(report.throughput_jobs_per_sec() > 0.0);
+        assert_eq!(report.workers_at_job, vec![8, 8, 8, 8]);
+    }
+
+    #[test]
+    fn pool_shrinks_between_jobs() {
+        let trace = ElasticTrace {
+            n_max: 8,
+            n_initial: 8,
+            events: vec![
+                ElasticEvent { time: 0.5, kind: EventKind::Leave(7) },
+                ElasticEvent { time: 1.5, kind: EventKind::Leave(6) },
+            ],
+        };
+        let report = serve(&quick_service(3, trace)).unwrap();
+        assert_eq!(report.workers_at_job, vec![8, 7, 6]);
+        assert!(report.per_job.iter().all(|r| r.recovered));
+    }
+
+    #[test]
+    fn distinct_seeds_per_job() {
+        // Different jobs get different inputs (seeded template + index).
+        let report = serve(&quick_service(2, ElasticTrace::static_n(8, 8))).unwrap();
+        // Just structural: both jobs ran and verified independently.
+        assert!(report.per_job[0].max_rel_err < 1e-2);
+        assert!(report.per_job[1].max_rel_err < 1e-2);
+    }
+}

@@ -1,0 +1,363 @@
+//! Extension ablations (DESIGN.md Ext-T1..T3) — experiments the paper
+//! motivates but does not plot.
+
+use crate::config::ExperimentConfig;
+use crate::metrics::{mean, Table};
+use crate::rng::default_rng;
+use crate::sim::{
+    simulate_static, simulate_trace, simulate_trace_with, ElasticTrace, Reassign, WorkerSpeeds,
+};
+use crate::tas::{Bicec, Cec, DLevelPolicy, HeteroCec, Mlcc, Mlcec, Scheme};
+use crate::workload::JobSpec;
+
+/// Ext-T1: transition waste + finishing time under Poisson elasticity.
+/// BICEC's zero-waste property is the paper's Sec. 2 claim.
+pub fn transition_waste_table(cfg: &ExperimentConfig, event_rate: f64) -> Table {
+    // Small geometry (paper Fig. 1 scale) so traces bite mid-run.
+    let job = JobSpec::new(240, 240, 240);
+    let schemes: Vec<Box<dyn Scheme>> = vec![
+        Box::new(Cec::new(2, 4)),
+        Box::new(Mlcec::new(2, 4)),
+        Box::new(Bicec::new(600, 300, 8)),
+    ];
+    let cost = cfg.cost_model();
+    let mut t = Table::new(&[
+        "scheme",
+        "avg_waste_taskfrac",
+        "avg_reallocs",
+        "avg_computation_s",
+        "failures",
+    ]);
+    for scheme in &schemes {
+        let mut rng = default_rng(cfg.seed);
+        let (mut wastes, mut reallocs, mut comps) = (Vec::new(), Vec::new(), Vec::new());
+        let mut failures = 0usize;
+        for _ in 0..cfg.trials {
+            let speeds = WorkerSpeeds::sample(&cfg.speed_model(), 8, &mut rng);
+            // Scale the horizon to the job so events land mid-run.
+            let horizon = 400.0 * cost.worker_time(job.ops() / 2400, 1.0);
+            let trace = ElasticTrace::poisson(8, 4, 8, event_rate / horizon, horizon, &mut rng);
+            match simulate_trace(scheme.as_ref(), &trace, job, &cost, &speeds) {
+                Ok(out) => {
+                    wastes.push(out.transition_waste);
+                    reallocs.push(out.reallocations as f64);
+                    comps.push(out.computation_time);
+                }
+                Err(_) => failures += 1,
+            }
+        }
+        t.row(vec![
+            scheme.name().to_string(),
+            format!("{:.4}", mean(&wastes)),
+            format!("{:.2}", mean(&reallocs)),
+            format!("{:.4}", mean(&comps)),
+            failures.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Ext-T2: d-level policy sensitivity for MLCEC (Fig. 2a setup).
+pub fn dlevel_table(cfg: &ExperimentConfig) -> Table {
+    let cost = cfg.cost_model();
+    let policies: Vec<(&str, DLevelPolicy)> = vec![
+        ("linear_ramp", DLevelPolicy::LinearRamp),
+        (
+            "equalized",
+            DLevelPolicy::Equalized { p_straggle: cfg.p_straggle, slowdown: cfg.slowdown },
+        ),
+    ];
+    let mut t = Table::new(&["N", "policy", "avg_computation_s", "vs_cec_%"]);
+    for &n in &cfg.ns {
+        let mut rng = default_rng(cfg.seed ^ (n as u64) << 16);
+        let mut speeds_per_trial = Vec::new();
+        for _ in 0..cfg.trials {
+            speeds_per_trial.push(WorkerSpeeds::sample(&cfg.speed_model(), cfg.n_max, &mut rng));
+        }
+        let cec = Cec::new(cfg.k_cec, cfg.s_cec);
+        let cec_mean = mean(
+            &speeds_per_trial
+                .iter()
+                .map(|sp| simulate_static(&cec, n, cfg.job, &cost, sp).computation_time)
+                .collect::<Vec<_>>(),
+        );
+        for (name, policy) in &policies {
+            let scheme = Mlcec::with_policy(cfg.k_cec, cfg.s_cec, policy.clone());
+            let m = mean(
+                &speeds_per_trial
+                    .iter()
+                    .map(|sp| simulate_static(&scheme, n, cfg.job, &cost, sp).computation_time)
+                    .collect::<Vec<_>>(),
+            );
+            t.row(vec![
+                n.to_string(),
+                name.to_string(),
+                format!("{m:.4}"),
+                format!("{:+.1}", 100.0 * (m - cec_mean) / cec_mean),
+            ]);
+        }
+    }
+    t
+}
+
+/// Ext-T3: robustness of the Fig. 2c conclusion to the straggler model.
+pub fn straggler_sweep_table(
+    cfg: &ExperimentConfig,
+    slowdowns: &[f64],
+    probs: &[f64],
+) -> Table {
+    let cost = cfg.cost_model();
+    let n = *cfg.ns.last().unwrap();
+    let cec = Cec::new(cfg.k_cec, cfg.s_cec);
+    let mlcec = Mlcec::new(cfg.k_cec, cfg.s_cec);
+    let bicec = Bicec::new(cfg.k_bicec, cfg.s_bicec, cfg.n_max);
+    let mut t = Table::new(&["slowdown", "p", "cec_s", "mlcec_vs_cec_%", "bicec_vs_cec_%"]);
+    for &slowdown in slowdowns {
+        for &p in probs {
+            let model = crate::sim::SpeedModel::BernoulliSlowdown {
+                p,
+                slowdown,
+                jitter: cfg.jitter,
+            };
+            let mut rng = default_rng(cfg.seed);
+            let (mut c, mut m, mut b) = (Vec::new(), Vec::new(), Vec::new());
+            for _ in 0..cfg.trials {
+                let sp = WorkerSpeeds::sample(&model, cfg.n_max, &mut rng);
+                c.push(simulate_static(&cec, n, cfg.job, &cost, &sp).finishing_time());
+                m.push(simulate_static(&mlcec, n, cfg.job, &cost, &sp).finishing_time());
+                b.push(simulate_static(&bicec, n, cfg.job, &cost, &sp).finishing_time());
+            }
+            let (cm, mm, bm) = (mean(&c), mean(&m), mean(&b));
+            t.row(vec![
+                format!("{slowdown}"),
+                format!("{p}"),
+                format!("{cm:.4}"),
+                format!("{:+.1}", 100.0 * (mm - cm) / cm),
+                format!("{:+.1}", 100.0 * (bm - cm) / cm),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> ExperimentConfig {
+        ExperimentConfig { trials: 4, ns: vec![20, 40], ..Default::default() }
+    }
+
+    #[test]
+    fn transition_waste_bicec_is_zero() {
+        let t = transition_waste_table(&quick_cfg(), 3.0);
+        let rendered = t.render();
+        let bicec_line = rendered.lines().find(|l| l.contains("bicec")).unwrap();
+        // waste column must be exactly 0.0000
+        assert!(bicec_line.contains("0.0000"), "{bicec_line}");
+        let cec_line = rendered.lines().find(|l| l.contains(" cec")).unwrap();
+        assert!(!cec_line.contains(" 0.0000 "), "CEC should pay waste: {cec_line}");
+    }
+
+    #[test]
+    fn dlevel_table_covers_policies() {
+        let t = dlevel_table(&quick_cfg());
+        let r = t.render();
+        assert!(r.contains("linear_ramp") && r.contains("equalized"));
+    }
+
+    #[test]
+    fn straggler_sweep_rows() {
+        let t = straggler_sweep_table(&quick_cfg(), &[2.0, 10.0], &[0.5]);
+        assert_eq!(t.n_rows(), 2);
+    }
+}
+
+/// Ext-T4: waste-minimising re-assignment ([10]) vs the schemes' naive
+/// positional re-assignment, under Poisson elasticity.
+pub fn reassign_table(cfg: &ExperimentConfig, event_rate: f64) -> Table {
+    let job = JobSpec::new(240, 240, 240);
+    let cost = cfg.cost_model();
+    let schemes: Vec<Box<dyn Scheme>> =
+        vec![Box::new(Cec::new(2, 4)), Box::new(Mlcec::new(2, 4))];
+    let mut t = Table::new(&[
+        "scheme",
+        "policy",
+        "avg_waste_taskfrac",
+        "avg_computation_s",
+        "failures",
+    ]);
+    for scheme in &schemes {
+        for (pname, policy) in
+            [("identity", Reassign::Identity), ("max_overlap", Reassign::MaxOverlap)]
+        {
+            let mut rng = default_rng(cfg.seed);
+            let (mut wastes, mut comps) = (Vec::new(), Vec::new());
+            let mut failures = 0usize;
+            for _ in 0..cfg.trials {
+                let speeds = WorkerSpeeds::sample(&cfg.speed_model(), 8, &mut rng);
+                let horizon = 400.0 * cost.worker_time(job.ops() / 2400, 1.0);
+                let trace =
+                    ElasticTrace::poisson(8, 4, 8, event_rate / horizon, horizon, &mut rng);
+                match simulate_trace_with(scheme.as_ref(), &trace, job, &cost, &speeds, policy)
+                {
+                    Ok(out) => {
+                        wastes.push(out.transition_waste);
+                        comps.push(out.computation_time);
+                    }
+                    Err(_) => failures += 1,
+                }
+            }
+            t.row(vec![
+                scheme.name().to_string(),
+                pname.to_string(),
+                format!("{:.4}", mean(&wastes)),
+                format!("{:.4}", mean(&comps)),
+                failures.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// Ext-T5: the hierarchy ladder at fixed N = 40.
+///
+/// Two *rate-matched* groups (same per-worker computation budget within a
+/// group, so times are directly comparable):
+///
+/// * rate 5/8 — classic (25, 40) coding [2] vs MLCC with a 35→15 threshold
+///   ramp (avg 25) [6, 9]: hierarchy exploits stragglers' partial layers
+///   where classic must wait for slow *full-task* completions.
+/// * rate 1/4, elastic — CEC vs MLCEC vs BICEC (the paper's Fig. 2a cell).
+pub fn hierarchy_table(cfg: &ExperimentConfig) -> Table {
+    let cost = cfg.cost_model();
+    let n = *cfg.ns.last().unwrap();
+    let job = cfg.job;
+    let classic = Mlcc::classic(25);
+    let mlcc = Mlcc::ramp(20, 35, 15);
+    let cec = Cec::new(cfg.k_cec, cfg.s_cec);
+    let mlcec = Mlcec::new(cfg.k_cec, cfg.s_cec);
+    let bicec = Bicec::new(cfg.k_bicec, cfg.s_bicec, cfg.n_max);
+    let mut rng = default_rng(cfg.seed);
+    let trials = cfg.trials;
+    let mut rows: Vec<(String, String, Vec<f64>, Vec<f64>)> = vec![
+        ("classic_mds_k25".into(), "5/8".into(), Vec::new(), Vec::new()),
+        ("mlcc_35to15".into(), "5/8".into(), Vec::new(), Vec::new()),
+        ("cec".into(), "1/4".into(), Vec::new(), Vec::new()),
+        ("mlcec".into(), "1/4".into(), Vec::new(), Vec::new()),
+        ("bicec".into(), "1/4".into(), Vec::new(), Vec::new()),
+    ];
+    for _ in 0..trials {
+        let sp = WorkerSpeeds::sample(&cfg.speed_model(), cfg.n_max, &mut rng);
+        rows[0].2.push(classic.computation_time(n, job, &cost, &sp));
+        rows[0].3.push(classic.finishing_time(n, job, &cost, &sp));
+        rows[1].2.push(mlcc.computation_time(n, job, &cost, &sp));
+        rows[1].3.push(mlcc.finishing_time(n, job, &cost, &sp));
+        for (i, s) in [&cec as &dyn Scheme, &mlcec, &bicec].into_iter().enumerate() {
+            let r = simulate_static(s, n, job, &cost, &sp);
+            rows[2 + i].2.push(r.computation_time);
+            rows[2 + i].3.push(r.finishing_time());
+        }
+    }
+    let mut t = Table::new(&["scheme", "rate", "avg_computation_s", "avg_finishing_s"]);
+    for (name, rate, comps, fins) in rows {
+        t.row(vec![
+            name,
+            rate,
+            format!("{:.4}", mean(&comps)),
+            format!("{:.4}", mean(&fins)),
+        ]);
+    }
+    t
+}
+
+/// Ext-T6: heterogeneous-aware allocation ([11, 12]) on a two-tier cluster
+/// with *persistent, known* speeds, vs uniform CEC.
+pub fn hetero_table(cfg: &ExperimentConfig) -> Table {
+    let cost = cfg.cost_model();
+    let job = cfg.job;
+    let mut t = Table::new(&[
+        "N",
+        "slow_frac",
+        "cec_s",
+        "hetero_vs_cec_%",
+    ]);
+    for &n in &[24usize, 32, 40] {
+        for slow_frac in [0.25, 0.5, 0.75] {
+            let slow_count = (n as f64 * slow_frac).round() as usize;
+            let mult: Vec<f64> = (0..n)
+                .map(|i| if i < n - slow_count { 1.0 } else { cfg.slowdown })
+                .collect();
+            let speeds = WorkerSpeeds::from_vec(mult.clone());
+            let known: Vec<f64> = mult.iter().map(|m| 1.0 / m).collect();
+            let uniform = Cec::new(cfg.k_cec, 12.min(n));
+            let hetero = HeteroCec::new(cfg.k_cec, 12.min(n), known);
+            let a = simulate_static(&uniform, n, job, &cost, &speeds).computation_time;
+            let b = simulate_static(&hetero, n, job, &cost, &speeds).computation_time;
+            t.row(vec![
+                n.to_string(),
+                format!("{slow_frac}"),
+                format!("{a:.4}"),
+                format!("{:+.1}", 100.0 * (b - a) / a),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod ext_tests {
+    use super::*;
+
+    fn quick_cfg() -> ExperimentConfig {
+        ExperimentConfig { trials: 4, ns: vec![20, 40], ..Default::default() }
+    }
+
+    #[test]
+    fn reassign_table_max_overlap_never_worse() {
+        let t = reassign_table(&quick_cfg(), 3.0);
+        let r = t.render();
+        let grab = |scheme: &str, policy: &str| -> f64 {
+            r.lines()
+                .find(|l| l.contains(scheme) && l.contains(policy))
+                .and_then(|l| l.split_whitespace().nth(2))
+                .and_then(|v| v.parse().ok())
+                .unwrap()
+        };
+        assert!(grab(" cec", "max_overlap") <= grab(" cec", "identity") + 1e-9, "{r}");
+    }
+
+    #[test]
+    fn hierarchy_ladder_ordering() {
+        let t = hierarchy_table(&quick_cfg());
+        let r = t.render();
+        let grab = |scheme: &str| -> f64 {
+            r.lines()
+                .find(|l| l.trim_start().starts_with(scheme))
+                .and_then(|l| l.split_whitespace().nth(2))
+                .and_then(|v| v.parse().ok())
+                .unwrap()
+        };
+        // Within the rate-5/8 group, hierarchy beats classic coding.
+        assert!(grab("mlcc_35to15") < grab("classic_mds_k25"), "{r}");
+        // Within the elastic group, BICEC has the lowest computation time.
+        assert!(grab("bicec") < grab("cec") && grab("bicec") < grab("mlcec"), "{r}");
+    }
+
+    #[test]
+    fn hetero_table_hetero_wins_at_moderate_skew() {
+        // Speed-proportional selection wins decisively up to 50% slow
+        // workers at any N (and at 75% for N >= 32); the N=24/75% corner
+        // over-concentrates on the 6 fast workers, whose deepened list
+        // positions then bind — kept in the table as an honest limitation.
+        let t = hetero_table(&quick_cfg());
+        for line in t.render().lines().skip(2) {
+            let cols: Vec<&str> = line.split_whitespace().collect();
+            let (n, frac): (usize, f64) = (cols[0].parse().unwrap(), cols[1].parse().unwrap());
+            let pct: f64 = cols[3].parse().unwrap();
+            if frac <= 0.5 || n >= 32 {
+                assert!(pct < 0.0, "hetero should win here: {line}");
+            }
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Fig. 1 — the task-allocation grids for the motivating example
+//! (K = 2, S = 4; BICEC K = 600, S = 300) at N ∈ {8, 6, 4}.
+//!
+//! The paper draws a (worker x subtask) grid with checkmarks on selected
+//! subtasks; `fig1_grid` renders the same as ASCII, and `fig1_table`
+//! summarises the d-levels per scheme so the bench can assert the exact
+//! paper values.
+
+use crate::metrics::Table;
+use crate::tas::{Allocation, Bicec, Cec, DLevelPolicy, Mlcec, Scheme};
+
+/// ASCII checkbox grid of an allocation (PerSet schemes): rows = workers,
+/// columns = sets; `x` marks a selected subtask.
+pub fn render_grid(alloc: &Allocation) -> String {
+    let n = alloc.workers();
+    let sets = match alloc.rule {
+        crate::tas::RecoveryRule::PerSet { sets, .. } => sets,
+        crate::tas::RecoveryRule::Global { .. } => {
+            // BICEC: show per-worker list lengths instead of a set grid.
+            let mut out = String::new();
+            for (w, list) in alloc.lists.iter().enumerate() {
+                out.push_str(&format!(
+                    "worker {w}: subtasks {}..{} (static)\n",
+                    list.first().map(|i| i.group).unwrap_or(0),
+                    list.last().map(|i| i.group + 1).unwrap_or(0)
+                ));
+            }
+            return out;
+        }
+    };
+    let mut out = String::from("        ");
+    for m in 0..sets {
+        out.push_str(&format!("{m:>3}"));
+    }
+    out.push('\n');
+    for w in 0..n {
+        out.push_str(&format!("worker{w:>2}"));
+        for m in 0..sets {
+            let has = alloc.lists[w].iter().any(|i| i.group == m);
+            out.push_str(if has { "  x" } else { "  ." });
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// The three schemes' grids at one N (paper Fig. 1 column).
+pub fn fig1_grid(n: usize) -> String {
+    let cec = Cec::new(2, 4).allocate(n);
+    let mlcec = if n == 8 {
+        Mlcec::with_policy(2, 4, DLevelPolicy::PaperFig1).allocate(n)
+    } else {
+        Mlcec::new(2, 4).allocate(n)
+    };
+    let bicec = Bicec::new(600, 300, 8).allocate(n);
+    format!(
+        "== N = {n} ==\n-- CEC (K=2, S=4) --\n{}\n-- MLCEC (K=2, S=4) --\n{}\n-- BICEC (K=600, S=300) --\n{}",
+        render_grid(&cec),
+        render_grid(&mlcec),
+        render_grid(&bicec)
+    )
+}
+
+/// d-levels per set for CEC vs MLCEC across the Fig. 1 grid.
+pub fn fig1_table() -> Table {
+    let mut t = Table::new(&["N", "scheme", "d_levels", "sum", "transition"]);
+    for n in [8usize, 6, 4] {
+        for (name, alloc) in [
+            ("cec", Cec::new(2, 4).allocate(n)),
+            (
+                "mlcec",
+                if n == 8 {
+                    Mlcec::with_policy(2, 4, DLevelPolicy::PaperFig1).allocate(n)
+                } else {
+                    Mlcec::new(2, 4).allocate(n)
+                },
+            ),
+        ] {
+            let d = alloc.contributors_per_set().unwrap();
+            let sum: usize = d.iter().sum();
+            t.row(vec![
+                n.to_string(),
+                name.to_string(),
+                format!("{d:?}"),
+                sum.to_string(),
+                "realloc".to_string(),
+            ]);
+        }
+        t.row(vec![
+            n.to_string(),
+            "bicec".to_string(),
+            "static ranges".to_string(),
+            (n * 300).to_string(),
+            "zero-waste".to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_fig1_mlcec_levels_in_table() {
+        let t = fig1_table();
+        let rendered = t.render();
+        assert!(rendered.contains("[2, 2, 3, 4, 4, 5, 6, 6]"), "{rendered}");
+    }
+
+    #[test]
+    fn grid_marks_exactly_s_per_worker() {
+        let g = render_grid(&Cec::new(2, 4).allocate(8));
+        for line in g.lines().skip(1) {
+            let marks = line.matches(" x").count();
+            assert_eq!(marks, 4, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn fig1_grid_covers_all_three_schemes() {
+        for n in [8, 6, 4] {
+            let s = fig1_grid(n);
+            assert!(s.contains("CEC") && s.contains("MLCEC") && s.contains("BICEC"));
+        }
+    }
+
+    #[test]
+    fn bicec_grid_shows_static_ranges() {
+        let s = fig1_grid(6);
+        assert!(s.contains("(static)"));
+        assert!(s.contains("subtasks 0..300"));
+    }
+}

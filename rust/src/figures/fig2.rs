@@ -1,0 +1,179 @@
+//! Fig. 2 — the paper's quantitative evaluation.
+//!
+//! (a) average computation time vs N (uwv = 2400³)
+//! (b) average decoding time vs N, square and tall x fat shapes
+//! (c) average finishing time vs N, square
+//! (d) average finishing time vs N, tall x fat
+//!
+//! One trial samples one straggler draw shared by all three schemes
+//! (paired comparison, like the paper's single simulated cluster), then
+//! runs the static DES per scheme.
+
+use crate::config::ExperimentConfig;
+use crate::metrics::{Summary, Table};
+use crate::rng::default_rng;
+use crate::sim::{simulate_static, WorkerSpeeds};
+use crate::tas::{Bicec, Cec, Mlcec, Scheme};
+use crate::workload::JobSpec;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    Computation,
+    Decode,
+    Finishing,
+}
+
+impl Metric {
+    fn of(&self, r: &crate::sim::RunResult) -> f64 {
+        match self {
+            Metric::Computation => r.computation_time,
+            Metric::Decode => r.decode_time,
+            Metric::Finishing => r.finishing_time(),
+        }
+    }
+}
+
+/// Mean metric per (N, scheme) over the config's trials.
+pub struct Fig2Point {
+    pub n: usize,
+    pub cec: Summary,
+    pub mlcec: Summary,
+    pub bicec: Summary,
+}
+
+pub fn fig2_series(cfg: &ExperimentConfig, metric: Metric, job: JobSpec) -> Vec<Fig2Point> {
+    let cost = cfg.cost_model();
+    let cec = Cec::new(cfg.k_cec, cfg.s_cec);
+    let mlcec = Mlcec::new(cfg.k_cec, cfg.s_cec);
+    let bicec = Bicec::new(cfg.k_bicec, cfg.s_bicec, cfg.n_max);
+    cfg.ns
+        .iter()
+        .map(|&n| {
+            let mut rng = default_rng(cfg.seed ^ (n as u64) << 32);
+            let mut xs = [Vec::new(), Vec::new(), Vec::new()];
+            for _ in 0..cfg.trials {
+                let speeds =
+                    WorkerSpeeds::sample(&cfg.speed_model(), cfg.n_max, &mut rng);
+                for (i, scheme) in
+                    [&cec as &dyn Scheme, &mlcec, &bicec].into_iter().enumerate()
+                {
+                    let r = simulate_static(scheme, n, job, &cost, &speeds);
+                    xs[i].push(metric.of(&r));
+                }
+            }
+            Fig2Point {
+                n,
+                cec: Summary::of(&xs[0]),
+                mlcec: Summary::of(&xs[1]),
+                bicec: Summary::of(&xs[2]),
+            }
+        })
+        .collect()
+}
+
+/// Render one subfigure as the paper's series (+ relative improvements).
+pub fn fig2_table(cfg: &ExperimentConfig, which: &str) -> Table {
+    let (metric, job, title_cols): (Metric, JobSpec, [&str; 2]) = match which {
+        "2a" => (Metric::Computation, cfg.job, ["mlcec_vs_cec_%", "bicec_vs_cec_%"]),
+        "2b" => (Metric::Decode, cfg.job, ["mlcec_vs_cec_%", "bicec_vs_cec_%"]),
+        "2c" => (Metric::Finishing, JobSpec::paper_square(), ["mlcec_vs_cec_%", "bicec_vs_cec_%"]),
+        "2d" => {
+            (Metric::Finishing, JobSpec::paper_tall_fat(), ["mlcec_vs_cec_%", "bicec_vs_cec_%"])
+        }
+        other => panic!("unknown figure {other:?} (expected 2a|2b|2c|2d)"),
+    };
+    let job = match which {
+        "2c" => JobSpec::paper_square(),
+        "2d" => JobSpec::paper_tall_fat(),
+        _ => job,
+    };
+    let series = fig2_series(cfg, metric, job);
+    let mut t = Table::new(&[
+        "N",
+        "cec_s",
+        "mlcec_s",
+        "bicec_s",
+        title_cols[0],
+        title_cols[1],
+    ]);
+    for p in &series {
+        let rel = |x: f64| 100.0 * (x - p.cec.mean) / p.cec.mean;
+        t.row(vec![
+            p.n.to_string(),
+            format!("{:.4}", p.cec.mean),
+            format!("{:.4}", p.mlcec.mean),
+            format!("{:.4}", p.bicec.mean),
+            format!("{:+.1}", rel(p.mlcec.mean)),
+            format!("{:+.1}", rel(p.bicec.mean)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> ExperimentConfig {
+        ExperimentConfig { trials: 6, ns: vec![20, 30, 40], ..Default::default() }
+    }
+
+    #[test]
+    fn fig2a_shape_bicec_best_mlcec_between() {
+        let cfg = quick_cfg();
+        let series = fig2_series(&cfg, Metric::Computation, cfg.job);
+        for p in &series {
+            assert!(p.bicec.mean < p.cec.mean, "N={}: BICEC must win computation", p.n);
+            assert!(p.bicec.mean <= p.mlcec.mean, "N={}: BICEC lower-bounds MLCEC", p.n);
+        }
+        // Paper headline: ~85% at N=40 — accept the 70..95 band.
+        let last = series.last().unwrap();
+        let imp = 100.0 * (last.cec.mean - last.bicec.mean) / last.cec.mean;
+        assert!((70.0..=95.0).contains(&imp), "BICEC improvement {imp:.1}% at N=40");
+    }
+
+    #[test]
+    fn fig2b_shape_bicec_decode_dominates_and_grows_with_v() {
+        let cfg = quick_cfg();
+        let sq = fig2_series(&cfg, Metric::Decode, JobSpec::paper_square());
+        let tf = fig2_series(&cfg, Metric::Decode, JobSpec::paper_tall_fat());
+        for (a, b) in sq.iter().zip(&tf) {
+            assert!(a.bicec.mean > 10.0 * a.cec.mean, "BICEC decode must dominate");
+            assert!((a.cec.mean - a.mlcec.mean).abs() < 1e-12, "CEC == MLCEC decode");
+            assert!(b.bicec.mean > a.bicec.mean, "decode grows with v");
+        }
+    }
+
+    #[test]
+    fn fig2c_shape_bicec_best_finishing_square() {
+        let cfg = quick_cfg();
+        let series = fig2_series(&cfg, Metric::Finishing, JobSpec::paper_square());
+        for p in &series {
+            assert!(p.bicec.mean < p.cec.mean, "N={}: BICEC wins Fig 2c", p.n);
+        }
+        let last = series.last().unwrap();
+        let imp = 100.0 * (last.cec.mean - last.bicec.mean) / last.cec.mean;
+        assert!((30.0..=60.0).contains(&imp), "Fig2c headline ~45%, got {imp:.1}%");
+    }
+
+    #[test]
+    fn fig2d_shape_mlcec_wins_at_large_n() {
+        let cfg = quick_cfg();
+        let series = fig2_series(&cfg, Metric::Finishing, JobSpec::paper_tall_fat());
+        let last = series.last().unwrap();
+        assert!(
+            last.mlcec.mean < last.cec.mean && last.mlcec.mean < last.bicec.mean,
+            "N=40: MLCEC must win Fig 2d (cec={:.3} mlcec={:.3} bicec={:.3})",
+            last.cec.mean,
+            last.mlcec.mean,
+            last.bicec.mean
+        );
+    }
+
+    #[test]
+    fn table_has_one_row_per_n() {
+        let cfg = quick_cfg();
+        let t = fig2_table(&cfg, "2a");
+        assert_eq!(t.n_rows(), cfg.ns.len());
+    }
+}

@@ -1,0 +1,16 @@
+//! Figure harness: regenerates every table/figure of the paper's
+//! evaluation (Sec. 3) plus the extension ablations (DESIGN.md §5).
+//!
+//! Each generator returns a `metrics::Table` whose rows are the series the
+//! paper plots; `hcec figure <id>` renders it and optionally writes CSV.
+
+mod ablations;
+mod fig1;
+mod fig2;
+
+pub use ablations::{
+    dlevel_table, hetero_table, hierarchy_table, reassign_table, straggler_sweep_table,
+    transition_waste_table,
+};
+pub use fig1::{fig1_grid, fig1_table};
+pub use fig2::{fig2_table, Metric};

@@ -1,0 +1,25 @@
+//! # hcec — Hierarchical Coded Elastic Computing
+//!
+//! Reproduction of Kiani, Adikari & Draper, *Hierarchical Coded Elastic
+//! Computing* (ICASSP 2021): CEC (baseline), MLCEC and BICEC task-allocation
+//! schemes for elastic, straggler-prone clusters, plus every substrate they
+//! need (MDS codes, discrete-event simulation, an elastic master, a PJRT
+//! runtime executing AOT-compiled JAX/Pallas kernels).
+//!
+//! See DESIGN.md for the system inventory and the per-figure experiment
+//! index; EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod bench;
+pub mod cli;
+pub mod codes;
+pub mod config;
+pub mod figures;
+pub mod coordinator;
+pub mod linalg;
+pub mod prop;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod tas;
+pub mod workload;

@@ -1,0 +1,130 @@
+//! Matrix products: naive reference and the cache-blocked kernel used on the
+//! native worker path (when PJRT execution is disabled) and for decode.
+
+use super::Matrix;
+
+/// Reference product — kept simple on purpose; the blocked kernel is tested
+/// against it.
+pub fn gemm_naive(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "contraction mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        for l in 0..k {
+            let av = a.get(i, l);
+            if av == 0.0 {
+                continue;
+            }
+            let brow = b.row(l);
+            let orow = out.row_mut(i);
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Cache-blocked i-k-j product with f32 accumulation. Block sizes chosen so
+/// the (MC x KC) A-panel plus a KC-row B-panel stay L2-resident.
+pub fn gemm_blocked(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "contraction mismatch");
+    const MC: usize = 64;
+    const KC: usize = 256;
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = Matrix::zeros(m, n);
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + MC).min(m);
+        let mut l0 = 0;
+        while l0 < k {
+            let l1 = (l0 + KC).min(k);
+            for i in i0..i1 {
+                let arow = a.row(i);
+                let orow = out.row_mut(i);
+                for l in l0..l1 {
+                    let av = arow[l];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = b.row(l);
+                    // The inner j-loop is auto-vectorizable: contiguous
+                    // rows, no aliasing (orow/brow disjoint borrows).
+                    for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            l0 = l1;
+        }
+        i0 = i1;
+    }
+    out
+}
+
+/// Default product used by library callers.
+pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
+    gemm_blocked(a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::rng::default_rng;
+
+    #[test]
+    fn blocked_matches_naive() {
+        let mut rng = default_rng(10);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (64, 64, 64), (65, 257, 33)] {
+            let a = Matrix::random(m, k, &mut rng);
+            let b = Matrix::random(k, n, &mut rng);
+            let x = gemm_naive(&a, &b);
+            let y = gemm_blocked(&a, &b);
+            let scale = x.max_abs().max(1.0);
+            assert!(x.max_abs_diff(&y) / scale < 1e-5, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = default_rng(11);
+        let a = Matrix::random(6, 6, &mut rng);
+        let i = Matrix::identity(6);
+        assert!(gemm(&a, &i).max_abs_diff(&a) < 1e-6);
+        assert!(gemm(&i, &a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn prop_gemm_linearity() {
+        // gemm(a1 + a2, b) == gemm(a1, b) + gemm(a2, b)
+        prop::check(40, |g| {
+            let m = g.usize_in(1, 12);
+            let k = g.usize_in(1, 12);
+            let n = g.usize_in(1, 12);
+            let mut rng = g.rng().clone();
+            let a1 = Matrix::random(m, k, &mut rng);
+            let a2 = Matrix::random(m, k, &mut rng);
+            let b = Matrix::random(k, n, &mut rng);
+            let mut sum = a1.clone();
+            sum.axpy(1.0, &a2);
+            let lhs = gemm(&sum, &b);
+            let mut rhs = gemm(&a1, &b);
+            rhs.axpy(1.0, &gemm(&a2, &b));
+            let scale = lhs.max_abs().max(1.0);
+            if lhs.max_abs_diff(&rhs) / scale < 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("linearity violated at ({m},{k},{n})"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "contraction mismatch")]
+    fn rejects_shape_mismatch() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(4, 2);
+        let _ = gemm(&a, &b);
+    }
+}

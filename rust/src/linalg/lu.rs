@@ -1,0 +1,235 @@
+//! LU decomposition with partial pivoting, in f64.
+//!
+//! Used to invert Vandermonde submatrices for MDS decode. Factorization is
+//! done in f64 regardless of payload dtype: the decode coefficients are the
+//! numerically sensitive part (DESIGN.md §Numerical-fidelity).
+
+use super::Matrix;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum LuError {
+    Singular { pivot: usize },
+    NotSquare { rows: usize, cols: usize },
+}
+
+impl std::fmt::Display for LuError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LuError::Singular { pivot } => write!(f, "singular at pivot {pivot}"),
+            LuError::NotSquare { rows, cols } => write!(f, "not square: {rows}x{cols}"),
+        }
+    }
+}
+
+impl std::error::Error for LuError {}
+
+/// Packed LU factors (Doolittle, partial pivoting) of an n x n system.
+#[derive(Debug, Clone)]
+pub struct LuFactors {
+    n: usize,
+    /// L below the diagonal (unit diagonal implicit), U on/above.
+    lu: Vec<f64>,
+    /// Row permutation: solve applies `perm` to the RHS.
+    perm: Vec<usize>,
+    /// Growth diagnostic: max |u_ii| / min |u_ii|.
+    cond_estimate: f64,
+}
+
+impl LuFactors {
+    /// Factor a square matrix given in f64 row-major form.
+    pub fn factor(n: usize, a: &[f64]) -> Result<Self, LuError> {
+        assert_eq!(a.len(), n * n);
+        let mut lu = a.to_vec();
+        let mut perm: Vec<usize> = (0..n).collect();
+        for col in 0..n {
+            // Partial pivot.
+            let mut p = col;
+            let mut best = lu[col * n + col].abs();
+            for r in col + 1..n {
+                let v = lu[r * n + col].abs();
+                if v > best {
+                    best = v;
+                    p = r;
+                }
+            }
+            if best == 0.0 {
+                return Err(LuError::Singular { pivot: col });
+            }
+            if p != col {
+                for j in 0..n {
+                    lu.swap(col * n + j, p * n + j);
+                }
+                perm.swap(col, p);
+            }
+            let piv = lu[col * n + col];
+            for r in col + 1..n {
+                let f = lu[r * n + col] / piv;
+                lu[r * n + col] = f;
+                for j in col + 1..n {
+                    lu[r * n + j] -= f * lu[col * n + j];
+                }
+            }
+        }
+        let mut dmax = f64::MIN_POSITIVE;
+        let mut dmin = f64::MAX;
+        for i in 0..n {
+            let d = lu[i * n + i].abs();
+            dmax = dmax.max(d);
+            dmin = dmin.min(d);
+        }
+        Ok(Self { n, lu, perm, cond_estimate: dmax / dmin })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Cheap conditioning diagnostic (diagonal growth ratio). Not a true
+    /// condition number, but tracks Vandermonde blow-up well enough to
+    /// reject hopeless decodes (codes/mds.rs checks it).
+    pub fn cond_estimate(&self) -> f64 {
+        self.cond_estimate
+    }
+
+    /// Solve `A x = b` for one RHS (length n).
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.n);
+        let n = self.n;
+        // Apply permutation.
+        let mut x: Vec<f64> = self.perm.iter().map(|&p| b[p]).collect();
+        // Forward substitution (unit L).
+        for i in 1..n {
+            let mut s = x[i];
+            for j in 0..i {
+                s -= self.lu[i * n + j] * x[j];
+            }
+            x[i] = s;
+        }
+        // Back substitution (U).
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for j in i + 1..n {
+                s -= self.lu[i * n + j] * x[j];
+            }
+            x[i] = s / self.lu[i * n + i];
+        }
+        x
+    }
+
+    /// Full inverse, row-major f64.
+    pub fn inverse(&self) -> Vec<f64> {
+        let n = self.n;
+        let mut inv = vec![0.0; n * n];
+        let mut e = vec![0.0; n];
+        for col in 0..n {
+            e[col] = 1.0;
+            let x = self.solve_vec(&e);
+            e[col] = 0.0;
+            for row in 0..n {
+                inv[row * n + col] = x[row];
+            }
+        }
+        inv
+    }
+}
+
+/// Solve `A x = b` from a square f32 `Matrix` (convenience wrapper).
+pub fn solve(a: &Matrix, b: &[f64]) -> Result<Vec<f64>, LuError> {
+    if a.rows() != a.cols() {
+        return Err(LuError::NotSquare { rows: a.rows(), cols: a.cols() });
+    }
+    let n = a.rows();
+    let a64: Vec<f64> = a.as_slice().iter().map(|&v| v as f64).collect();
+    Ok(LuFactors::factor(n, &a64)?.solve_vec(b))
+}
+
+/// Invert a square f64 row-major matrix.
+pub fn invert(n: usize, a: &[f64]) -> Result<Vec<f64>, LuError> {
+    Ok(LuFactors::factor(n, a)?.inverse())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    fn matvec(n: usize, a: &[f64], x: &[f64]) -> Vec<f64> {
+        (0..n)
+            .map(|i| (0..n).map(|j| a[i * n + j] * x[j]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn solves_known_system() {
+        // [[2,1],[1,3]] x = [5, 10] -> x = [1, 3]
+        let f = LuFactors::factor(2, &[2.0, 1.0, 1.0, 3.0]).unwrap();
+        let x = f.solve_vec(&[5.0, 10.0]);
+        assert!((x[0] - 1.0).abs() < 1e-12 && (x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_times_matrix_is_identity() {
+        let a = vec![4.0, 7.0, 2.0, 6.0];
+        let inv = invert(2, &a).unwrap();
+        // a * inv
+        for i in 0..2 {
+            for j in 0..2 {
+                let v: f64 = (0..2).map(|l| a[i * 2 + l] * inv[l * 2 + j]).sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((v - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn detects_singular() {
+        let err = LuFactors::factor(2, &[1.0, 2.0, 2.0, 4.0]).unwrap_err();
+        assert!(matches!(err, LuError::Singular { .. }));
+    }
+
+    #[test]
+    fn pivoting_handles_zero_leading_entry() {
+        let f = LuFactors::factor(2, &[0.0, 1.0, 1.0, 0.0]).unwrap();
+        let x = f.solve_vec(&[3.0, 4.0]);
+        assert!((x[0] - 4.0).abs() < 1e-12 && (x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_factor_solve_round_trip() {
+        prop::check(60, |g| {
+            let n = g.usize_in(1, 12);
+            // Diagonally dominant -> well-conditioned, exercises pivoting.
+            let mut a = vec![0.0f64; n * n];
+            for i in 0..n {
+                let mut rowsum = 0.0;
+                for j in 0..n {
+                    if i != j {
+                        a[i * n + j] = g.f64_in(-1.0, 1.0);
+                        rowsum += a[i * n + j].abs();
+                    }
+                }
+                a[i * n + i] = rowsum + g.f64_in(1.0, 2.0);
+            }
+            let x_true: Vec<f64> = (0..n).map(|_| g.f64_in(-5.0, 5.0)).collect();
+            let b = matvec(n, &a, &x_true);
+            let f = LuFactors::factor(n, &a).map_err(|e| e.to_string())?;
+            let x = f.solve_vec(&b);
+            let err: f64 = x
+                .iter()
+                .zip(&x_true)
+                .map(|(u, v)| (u - v).abs())
+                .fold(0.0, f64::max);
+            if err < 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("solve error {err} at n={n}"))
+            }
+        });
+    }
+
+    #[test]
+    fn solve_wrapper_rejects_non_square() {
+        let a = Matrix::zeros(2, 3);
+        assert!(matches!(solve(&a, &[0.0, 0.0]), Err(LuError::NotSquare { .. })));
+    }
+}

@@ -1,0 +1,17 @@
+//! Dense linear-algebra substrate.
+//!
+//! The coordinator needs real matrix arithmetic for: MDS encode/decode on
+//! the native (non-PJRT) path, the end-to-end verification baseline, and the
+//! decode-cost micro-benchmarks that calibrate the DES cost model. Row-major
+//! `f32` payloads (matching the PJRT artifacts) with `f64` accumulation
+//! where precision matters (LU solve of Vandermonde systems).
+
+mod gemm;
+mod lu;
+mod matrix;
+mod partition;
+
+pub use gemm::{gemm, gemm_blocked, gemm_naive};
+pub use lu::{invert, solve, LuError, LuFactors};
+pub use matrix::Matrix;
+pub use partition::{pad_rows_to_multiple, split_rows, stack_rows};

@@ -1,0 +1,119 @@
+//! Row partitioning + zero padding — the paper's job decomposition
+//! (`g(x) = f_k(g_1(x), ..., g_k(x))` by horizontal splits of A).
+
+use super::Matrix;
+
+/// Zero-pad `m` with extra rows so `rows % multiple == 0` (paper: "if the
+/// total number of computations is not divisible by k, we can use
+/// zero-padding"). Returns the padded matrix and the original row count.
+pub fn pad_rows_to_multiple(m: &Matrix, multiple: usize) -> (Matrix, usize) {
+    assert!(multiple > 0);
+    let orig = m.rows();
+    let rem = orig % multiple;
+    if rem == 0 {
+        return (m.clone(), orig);
+    }
+    let padded_rows = orig + (multiple - rem);
+    let mut out = Matrix::zeros(padded_rows, m.cols());
+    for i in 0..orig {
+        out.row_mut(i).copy_from_slice(m.row(i));
+    }
+    (out, orig)
+}
+
+/// Split into `k` equal row blocks. Rows must divide evenly (pad first).
+pub fn split_rows(m: &Matrix, k: usize) -> Vec<Matrix> {
+    assert!(k > 0 && m.rows() % k == 0, "{} rows not divisible by {k}", m.rows());
+    let block = m.rows() / k;
+    (0..k)
+        .map(|b| {
+            let mut out = Matrix::zeros(block, m.cols());
+            for i in 0..block {
+                out.row_mut(i).copy_from_slice(m.row(b * block + i));
+            }
+            out
+        })
+        .collect()
+}
+
+/// Vertically concatenate equal-width blocks; inverse of `split_rows`.
+pub fn stack_rows(blocks: &[Matrix]) -> Matrix {
+    assert!(!blocks.is_empty());
+    let cols = blocks[0].cols();
+    let rows: usize = blocks.iter().map(|b| b.rows()).sum();
+    let mut out = Matrix::zeros(rows, cols);
+    let mut at = 0;
+    for b in blocks {
+        assert_eq!(b.cols(), cols, "inconsistent widths");
+        for i in 0..b.rows() {
+            out.row_mut(at + i).copy_from_slice(b.row(i));
+        }
+        at += b.rows();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::rng::default_rng;
+
+    #[test]
+    fn split_stack_round_trip() {
+        let mut rng = default_rng(21);
+        let m = Matrix::random(12, 5, &mut rng);
+        let blocks = split_rows(&m, 4);
+        assert_eq!(blocks.len(), 4);
+        assert!(blocks.iter().all(|b| b.rows() == 3 && b.cols() == 5));
+        assert_eq!(stack_rows(&blocks), m);
+    }
+
+    #[test]
+    fn pad_makes_divisible_and_preserves_data() {
+        let mut rng = default_rng(22);
+        let m = Matrix::random(10, 3, &mut rng);
+        let (p, orig) = pad_rows_to_multiple(&m, 4);
+        assert_eq!(orig, 10);
+        assert_eq!(p.rows(), 12);
+        for i in 0..10 {
+            assert_eq!(p.row(i), m.row(i));
+        }
+        for i in 10..12 {
+            assert!(p.row(i).iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn pad_noop_when_already_divisible() {
+        let m = Matrix::zeros(8, 2);
+        let (p, orig) = pad_rows_to_multiple(&m, 4);
+        assert_eq!((p.rows(), orig), (8, 8));
+    }
+
+    #[test]
+    fn prop_pad_split_stack_identity_prefix() {
+        prop::check(50, |g| {
+            let rows = g.usize_in(1, 40);
+            let cols = g.usize_in(1, 10);
+            let k = g.usize_in(1, 12);
+            let mut rng = g.rng().clone();
+            let m = Matrix::random(rows, cols, &mut rng);
+            let (p, orig) = pad_rows_to_multiple(&m, k);
+            let back = stack_rows(&split_rows(&p, k));
+            for i in 0..orig {
+                if back.row(i) != m.row(i) {
+                    return Err(format!("row {i} mutated (rows={rows}, k={k})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn split_rejects_indivisible() {
+        let m = Matrix::zeros(10, 2);
+        let _ = split_rows(&m, 3);
+    }
+}

@@ -1,0 +1,6 @@
+//! `hcec` launcher — see `hcec help` / rust/src/cli for the commands.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(hcec::cli::dispatch(&argv));
+}

@@ -1,0 +1,9 @@
+//! Metrics: summary statistics, timers, and table/CSV emitters used by the
+//! figure harness and the benches (criterion is not in the vendored crate
+//! set — `bench` + this module replace it).
+
+mod stats;
+mod table;
+
+pub use stats::{mean, percentile, std_dev, Summary};
+pub use table::{Table, write_csv};

@@ -1,0 +1,187 @@
+//! Property-testing mini-framework.
+//!
+//! `proptest` is not in the vendored crate set, so this module provides the
+//! subset the test suite needs: seeded generators, a case runner that
+//! reports the failing seed, and a greedy input shrinker for integer-vector
+//! cases. Usage:
+//!
+//! ```ignore
+//! prop::check(200, |g| {
+//!     let n = g.usize_in(1, 64);
+//!     let xs = g.vec_f64(n, -1e3, 1e3);
+//!     // ... assert invariant, or return Err(reason)
+//!     Ok(())
+//! });
+//! ```
+
+use crate::rng::{default_rng, Rng, Xoshiro256pp};
+
+/// Per-case generator handed to the property closure.
+pub struct Gen {
+    rng: Xoshiro256pp,
+    /// Seed that produced this case, for reproduction messages.
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: default_rng(seed), seed }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(hi >= lo);
+        lo + self.rng.next_below((hi - lo + 1) as u64) as i64
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, n: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..n).map(|_| self.usize_in(lo, hi)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.rng.next_below(xs.len() as u64) as usize]
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        self.rng.shuffle(xs);
+    }
+
+    pub fn rng(&mut self) -> &mut Xoshiro256pp {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `property`. Panics with the reproducing seed
+/// on the first failure. The base seed is fixed so CI is deterministic;
+/// override with env `HCEC_PROP_SEED` to explore.
+pub fn check<F>(cases: u64, property: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let base = std::env::var("HCEC_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0DEDC0FFEEu64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut gen = Gen::new(seed);
+        if let Err(msg) = property(&mut gen) {
+            panic!(
+                "property failed (case {case}, seed {seed:#x}): {msg}\n\
+                 reproduce with HCEC_PROP_SEED={base} and case index {case}"
+            );
+        }
+    }
+}
+
+/// Greedy shrinker for counterexamples expressed as an integer vector:
+/// repeatedly tries removing elements and halving values while the failure
+/// persists. Returns the smallest failing input found.
+pub fn shrink_ints<F>(mut input: Vec<i64>, still_fails: F) -> Vec<i64>
+where
+    F: Fn(&[i64]) -> bool,
+{
+    debug_assert!(still_fails(&input));
+    loop {
+        let mut changed = false;
+        // Try dropping each element.
+        let mut i = 0;
+        while i < input.len() {
+            let mut cand = input.clone();
+            cand.remove(i);
+            if still_fails(&cand) {
+                input = cand;
+                changed = true;
+            } else {
+                i += 1;
+            }
+        }
+        // Try halving each element toward zero.
+        for i in 0..input.len() {
+            while input[i] != 0 {
+                let mut cand = input.clone();
+                cand[i] /= 2;
+                if cand != input && still_fails(&cand) {
+                    input = cand;
+                    changed = true;
+                } else {
+                    break;
+                }
+            }
+        }
+        if !changed {
+            return input;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check(50, |g| {
+            let n = g.usize_in(0, 100);
+            if n <= 100 {
+                Ok(())
+            } else {
+                Err(format!("{n} > 100"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_reports_failures() {
+        check(50, |g| {
+            let n = g.usize_in(0, 100);
+            if n < 90 {
+                Ok(())
+            } else {
+                Err("n too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn gen_ranges_inclusive() {
+        let mut g = Gen::new(3);
+        for _ in 0..1000 {
+            let v = g.usize_in(5, 7);
+            assert!((5..=7).contains(&v));
+            let w = g.i64_in(-3, 3);
+            assert!((-3..=3).contains(&w));
+        }
+    }
+
+    #[test]
+    fn shrinker_reaches_minimal_example() {
+        // Failure: vector contains any element >= 10.
+        let fails = |xs: &[i64]| xs.iter().any(|&x| x >= 10);
+        let shrunk = shrink_ints(vec![3, 100, 7, 42], fails);
+        assert_eq!(shrunk.len(), 1);
+        assert!(shrunk[0] >= 10 && shrunk[0] <= 12, "shrunk={shrunk:?}");
+    }
+}

@@ -1,0 +1,175 @@
+//! Distributions used by the straggler and elasticity models.
+
+use super::Rng;
+
+/// Uniform over `[lo, hi)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Uniform {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Uniform {
+    pub fn new(lo: f64, hi: f64) -> Self {
+        assert!(hi >= lo, "empty uniform range [{lo}, {hi})");
+        Self { lo, hi }
+    }
+
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> f64 {
+        self.lo + (self.hi - self.lo) * rng.next_f64()
+    }
+}
+
+/// Bernoulli(p) — the paper's straggler coin flip (p = 0.5).
+#[derive(Clone, Copy, Debug)]
+pub struct Bernoulli {
+    pub p: f64,
+}
+
+impl Bernoulli {
+    pub fn new(p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "p={p} outside [0,1]");
+        Self { p }
+    }
+
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> bool {
+        rng.next_f64() < self.p
+    }
+}
+
+/// Exponential(rate) via inverse CDF — shifted-exponential service times
+/// are the standard straggler model in the coded-computing literature
+/// (Lee et al., 2018).
+#[derive(Clone, Copy, Debug)]
+pub struct Exponential {
+    pub rate: f64,
+}
+
+impl Exponential {
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0, "rate must be positive, got {rate}");
+        Self { rate }
+    }
+
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> f64 {
+        // 1 - U avoids ln(0).
+        -(1.0 - rng.next_f64()).ln() / self.rate
+    }
+}
+
+/// LogNormal(mu, sigma) — heavy-tailed per-worker speed jitter.
+#[derive(Clone, Copy, Debug)]
+pub struct LogNormal {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl LogNormal {
+    pub fn new(mu: f64, sigma: f64) -> Self {
+        assert!(sigma >= 0.0);
+        Self { mu, sigma }
+    }
+
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> f64 {
+        // Box–Muller; one normal per call is fine at simulation rates.
+        let u1 = (1.0 - rng.next_f64()).max(f64::MIN_POSITIVE);
+        let u2 = rng.next_f64();
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        (self.mu + self.sigma * z).exp()
+    }
+}
+
+/// Poisson(lambda) via Knuth's method (lambda is small in the elastic-trace
+/// generator: events per window).
+#[derive(Clone, Copy, Debug)]
+pub struct Poisson {
+    pub lambda: f64,
+}
+
+impl Poisson {
+    pub fn new(lambda: f64) -> Self {
+        assert!(lambda >= 0.0);
+        Self { lambda }
+    }
+
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> u64 {
+        let l = (-self.lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= rng.next_f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+            // Numerical guard for large lambda (not expected here).
+            if k > 10_000 {
+                return k;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::default_rng;
+
+    #[test]
+    fn uniform_respects_bounds() {
+        let mut rng = default_rng(1);
+        let d = Uniform::new(2.0, 5.0);
+        for _ in 0..5_000 {
+            let x = d.sample(&mut rng);
+            assert!((2.0..5.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn bernoulli_mean() {
+        let mut rng = default_rng(2);
+        let d = Bernoulli::new(0.5);
+        let hits = (0..100_000).filter(|_| d.sample(&mut rng)).count();
+        let mean = hits as f64 / 100_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn exponential_mean_matches_rate() {
+        let mut rng = default_rng(3);
+        let d = Exponential::new(2.0);
+        let n = 200_000;
+        let sum: f64 = (0..n).map(|_| d.sample(&mut rng)).sum();
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn exponential_nonnegative() {
+        let mut rng = default_rng(4);
+        let d = Exponential::new(0.1);
+        for _ in 0..10_000 {
+            assert!(d.sample(&mut rng) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn lognormal_median_near_exp_mu() {
+        let mut rng = default_rng(5);
+        let d = LogNormal::new(0.0, 0.25);
+        let mut xs: Vec<f64> = (0..50_001).map(|_| d.sample(&mut rng)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[25_000];
+        assert!((median - 1.0).abs() < 0.05, "median={median}");
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut rng = default_rng(6);
+        let d = Poisson::new(3.0);
+        let n = 100_000;
+        let sum: u64 = (0..n).map(|_| d.sample(&mut rng)).sum();
+        let mean = sum as f64 / n as f64;
+        assert!((mean - 3.0).abs() < 0.05, "mean={mean}");
+    }
+}

@@ -1,0 +1,141 @@
+//! Artifact manifest parsing.
+//!
+//! `python/compile/aot.py` writes one line per AOT-lowered entry point:
+//!
+//! ```text
+//! <name>|in=f32[2,240];f32[240,240]|out=f32[2,240]
+//! ```
+//!
+//! The runtime shape-checks every execute call against these signatures —
+//! a wrong-shape buffer must fail loudly before reaching PJRT.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    fn parse(s: &str) -> Result<Self, String> {
+        let open = s.find('[').ok_or_else(|| format!("missing '[' in {s:?}"))?;
+        if !s.ends_with(']') {
+            return Err(format!("missing ']' in {s:?}"));
+        }
+        let dtype = s[..open].to_string();
+        if dtype.is_empty() {
+            return Err(format!("empty dtype in {s:?}"));
+        }
+        let dims = s[open + 1..s.len() - 1]
+            .split(',')
+            .map(|d| d.trim().parse::<usize>().map_err(|e| format!("dim {d:?}: {e}")))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Self { dtype, dims })
+    }
+}
+
+impl std::fmt::Display for TensorSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let dims: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        write!(f, "{}[{}]", self.dtype, dims.join(","))
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactSig {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+}
+
+/// Parse the full manifest text into name -> signature.
+pub fn parse_manifest(text: &str) -> Result<BTreeMap<String, ArtifactSig>, String> {
+    let mut out = BTreeMap::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split('|');
+        let name = parts.next().ok_or(format!("line {ln}: missing name"))?.to_string();
+        let ins = parts
+            .next()
+            .and_then(|p| p.strip_prefix("in="))
+            .ok_or(format!("line {ln}: missing in="))?;
+        let outp = parts
+            .next()
+            .and_then(|p| p.strip_prefix("out="))
+            .ok_or(format!("line {ln}: missing out="))?;
+        let inputs = ins
+            .split(';')
+            .map(TensorSpec::parse)
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(|e| format!("line {ln}: {e}"))?;
+        let output = TensorSpec::parse(outp).map_err(|e| format!("line {ln}: {e}"))?;
+        if out
+            .insert(name.clone(), ArtifactSig { name: name.clone(), inputs, output })
+            .is_some()
+        {
+            return Err(format!("line {ln}: duplicate artifact {name}"));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_single_line() {
+        let m = parse_manifest("mm|in=f32[2,240];f32[240,240]|out=f32[2,240]\n").unwrap();
+        let sig = &m["mm"];
+        assert_eq!(sig.inputs.len(), 2);
+        assert_eq!(sig.inputs[0].dims, vec![2, 240]);
+        assert_eq!(sig.inputs[0].elements(), 480);
+        assert_eq!(sig.output.dtype, "f32");
+    }
+
+    #[test]
+    fn parses_three_dim_tensors_and_comments() {
+        let text = "# comment\n\ndec|in=f32[10,10];f32[10,2,240]|out=f32[10,2,240]\n";
+        let m = parse_manifest(text).unwrap();
+        assert_eq!(m["dec"].inputs[1].dims, vec![10, 2, 240]);
+    }
+
+    #[test]
+    fn display_round_trips() {
+        let spec = TensorSpec { dtype: "f32".into(), dims: vec![3, 4, 5] };
+        assert_eq!(TensorSpec::parse(&spec.to_string()).unwrap(), spec);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_manifest("bad line\n").is_err());
+        assert!(parse_manifest("x|in=f32[2|out=f32[2]\n").is_err());
+        assert!(parse_manifest("x|in=f32[a]|out=f32[2]\n").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        let text = "x|in=f32[1]|out=f32[1]\nx|in=f32[1]|out=f32[1]\n";
+        assert!(parse_manifest(text).unwrap_err().contains("duplicate"));
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // Integration guard: if `make artifacts` has run, its manifest must
+        // parse and contain the end-to-end entry points.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.txt");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let m = parse_manifest(&text).unwrap();
+            assert!(m.contains_key("subtask_mm_2x240x240"));
+            assert!(m.contains_key("decode_k10_r2_v240"));
+        }
+    }
+}

@@ -1,0 +1,472 @@
+//! Elastic-trace simulator: join/leave events mid-run, exact work
+//! retention, transition-waste accounting.
+//!
+//! Semantics (DESIGN.md §Substitutions):
+//!
+//! * Completed subtask outputs are already at the master — they survive the
+//!   departure of their worker and any re-allocation.
+//! * Work on the *current* (incomplete) subtask is abandoned on a
+//!   re-allocation or preemption; that abandonment is what the transition-
+//!   waste metric prices.
+//! * CEC/MLCEC re-subdivide at each event (granularity = current N, as in
+//!   the paper's Fig. 1). Retention across granularities is exact because
+//!   completed work is tracked as *row intervals* per code slot
+//!   (`intervals::IntervalSet`), and a row of the output is recoverable
+//!   once K slots cover it.
+//! * BICEC never re-allocates: slots own static subtask ranges
+//!   (`Scheme::allocate_active`), so its transition waste is identically 0.
+
+use std::collections::HashSet;
+
+use crate::tas::{transition, Allocation, RecoveryRule, Scheme};
+use crate::workload::JobSpec;
+
+use super::intervals::{min_coverage, IntervalSet};
+use super::trace::{ElasticTrace, EventKind};
+use super::{CostModel, WorkerSpeeds};
+
+#[derive(Clone, Debug)]
+pub struct TraceOutcome {
+    pub computation_time: f64,
+    pub decode_time: f64,
+    /// Total transition waste (task-fraction units, see tas::transition).
+    pub transition_waste: f64,
+    /// Number of re-allocations performed (0 for BICEC).
+    pub reallocations: usize,
+    /// Subtask completions delivered to the master.
+    pub completions: u64,
+}
+
+impl TraceOutcome {
+    pub fn finishing_time(&self) -> f64 {
+        self.computation_time + self.decode_time
+    }
+}
+
+/// How surviving workers are matched to the new allocation's lists at an
+/// elastic event.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Reassign {
+    /// Positional: surviving worker `i` takes list `i` (the schemes' naive
+    /// behaviour).
+    #[default]
+    Identity,
+    /// Waste-minimising greedy matching (tas::reassign, after Dau et al.
+    /// [10]); never worse than Identity.
+    MaxOverlap,
+}
+
+#[derive(Debug)]
+pub enum SimError {
+    Unrecoverable { at: f64, reason: String },
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Unrecoverable { at, reason } => {
+                write!(f, "unrecoverable at t={at}: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// Per-active-worker run state within one allocation epoch.
+struct WorkerState {
+    slot: usize,
+    /// Next item index in its epoch list.
+    pointer: usize,
+    /// Completion time of the item currently in flight (f64::INFINITY when
+    /// the list is exhausted).
+    next_done: f64,
+}
+
+pub fn simulate_trace(
+    scheme: &dyn Scheme,
+    trace: &ElasticTrace,
+    job: JobSpec,
+    cost: &CostModel,
+    speeds: &WorkerSpeeds,
+) -> Result<TraceOutcome, SimError> {
+    simulate_trace_with(scheme, trace, job, cost, speeds, Reassign::Identity)
+}
+
+/// `simulate_trace` with an explicit re-assignment policy.
+pub fn simulate_trace_with(
+    scheme: &dyn Scheme,
+    trace: &ElasticTrace,
+    job: JobSpec,
+    cost: &CostModel,
+    speeds: &WorkerSpeeds,
+    reassign: Reassign,
+) -> Result<TraceOutcome, SimError> {
+    trace.validate().map_err(|e| SimError::Unrecoverable { at: 0.0, reason: e })?;
+    assert!(speeds.n_max() >= trace.n_max);
+
+    let mut active: Vec<usize> = (0..trace.n_initial).collect();
+    // Row coverage per slot (PerSet schemes).
+    let mut coverage: Vec<IntervalSet> = vec![IntervalSet::new(); trace.n_max];
+    // Completed global ids (Global schemes).
+    let mut done_ids: HashSet<usize> = HashSet::new();
+
+    let mut waste = 0.0;
+    let mut reallocations = 0usize;
+    let mut completions = 0u64;
+    let mut t = 0.0f64;
+    let mut ev_idx = 0usize;
+
+    let mut alloc = scheme.allocate_active(&active);
+    let mut workers = init_workers(scheme, &alloc, &active, job, cost, speeds, &coverage, &done_ids, t);
+
+    let decode_time = cost.decode_time(scheme.decode_ops(job.u, job.v));
+
+    loop {
+        // Earliest in-flight completion.
+        let (next_t, who) = workers
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.next_done, i))
+            .fold((f64::INFINITY, usize::MAX), |acc, x| if x.0 < acc.0 { x } else { acc });
+        let next_event_t = trace.events.get(ev_idx).map(|e| e.time).unwrap_or(f64::INFINITY);
+
+        if next_t.is_infinite() && next_event_t.is_infinite() {
+            return Err(SimError::Unrecoverable {
+                at: t,
+                reason: "all workers exhausted before recovery".into(),
+            });
+        }
+
+        if next_t <= next_event_t {
+            // A subtask completes.
+            t = next_t;
+            let slot = workers[who].slot;
+            let item = alloc.lists[who][workers[who].pointer];
+            completions += 1;
+            let recovered = match alloc.rule {
+                RecoveryRule::PerSet { sets, k } => {
+                    let g = sets as f64;
+                    coverage[slot]
+                        .insert(item.group as f64 / g, (item.group + 1) as f64 / g);
+                    min_coverage(&coverage) >= k
+                }
+                RecoveryRule::Global { k } => {
+                    done_ids.insert(item.group);
+                    done_ids.len() >= k
+                }
+            };
+            if recovered {
+                return Ok(TraceOutcome {
+                    computation_time: t,
+                    decode_time,
+                    transition_waste: waste,
+                    reallocations,
+                    completions,
+                });
+            }
+            workers[who].pointer += 1;
+            schedule_next(
+                scheme, &alloc, &mut workers[who], who, job, cost, speeds, &coverage,
+                &done_ids, t,
+            );
+        } else {
+            // Apply the batch of elastic events at this timestamp.
+            t = next_event_t;
+            let before_alloc = alloc.clone();
+            let before_active = active.clone();
+            let before_pointers: Vec<usize> = workers.iter().map(|w| w.pointer).collect();
+            while ev_idx < trace.events.len()
+                && (trace.events[ev_idx].time - t).abs() < 1e-12
+            {
+                match trace.events[ev_idx].kind {
+                    EventKind::Leave(s) => active.retain(|&x| x != s),
+                    EventKind::Join(s) => {
+                        active.push(s);
+                        active.sort_unstable();
+                    }
+                }
+                ev_idx += 1;
+            }
+            if active.is_empty() {
+                return Err(SimError::Unrecoverable { at: t, reason: "no active workers".into() });
+            }
+            if active.len() < scheme.min_workers() {
+                return Err(SimError::Unrecoverable {
+                    at: t,
+                    reason: format!(
+                        "{} active workers < scheme minimum {}",
+                        active.len(),
+                        scheme.min_workers()
+                    ),
+                });
+            }
+            alloc = scheme.allocate_active(&active);
+            // Transition waste over surviving workers (plus fresh joiners).
+            let survivors: Vec<(usize, Option<(usize, usize)>)> = active
+                .iter()
+                .enumerate()
+                .map(|(w_new, &slot)| {
+                    match before_active.iter().position(|&s| s == slot) {
+                        Some(w_old) => (w_new, Some((w_old, before_pointers[w_old]))),
+                        None => (w_new, None),
+                    }
+                })
+                .collect();
+            if reassign == Reassign::MaxOverlap
+                && matches!(alloc.rule, RecoveryRule::PerSet { .. })
+            {
+                let assignment = crate::tas::reassign::max_overlap_assignment(
+                    &before_alloc,
+                    &alloc,
+                    &survivors,
+                );
+                alloc = crate::tas::reassign::apply_assignment(&alloc, &assignment);
+            }
+            waste += transition::total_waste(&before_alloc, &alloc, &survivors);
+            if matches!(alloc.rule, RecoveryRule::PerSet { .. }) {
+                reallocations += 1;
+            }
+            workers = init_workers(
+                scheme, &alloc, &active, job, cost, speeds, &coverage, &done_ids, t,
+            );
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn init_workers(
+    scheme: &dyn Scheme,
+    alloc: &Allocation,
+    active: &[usize],
+    job: JobSpec,
+    cost: &CostModel,
+    speeds: &WorkerSpeeds,
+    coverage: &[IntervalSet],
+    done_ids: &HashSet<usize>,
+    now: f64,
+) -> Vec<WorkerState> {
+    active
+        .iter()
+        .enumerate()
+        .map(|(w, &slot)| {
+            let mut st = WorkerState { slot, pointer: 0, next_done: f64::INFINITY };
+            schedule_next(scheme, alloc, &mut st, w, job, cost, speeds, coverage, done_ids, now);
+            st
+        })
+        .collect()
+}
+
+/// Advance `st` past already-covered items and set `next_done` for the
+/// first item with real work left (or INFINITY when exhausted).
+#[allow(clippy::too_many_arguments)]
+fn schedule_next(
+    scheme: &dyn Scheme,
+    alloc: &Allocation,
+    st: &mut WorkerState,
+    w: usize,
+    job: JobSpec,
+    cost: &CostModel,
+    speeds: &WorkerSpeeds,
+    coverage: &[IntervalSet],
+    done_ids: &HashSet<usize>,
+    now: f64,
+) -> bool {
+    let list = &alloc.lists[w];
+    let mult = speeds.multiplier(st.slot);
+    let n = alloc.workers();
+    loop {
+        if st.pointer >= list.len() {
+            st.next_done = f64::INFINITY;
+            return false;
+        }
+        let item = list[st.pointer];
+        match alloc.rule {
+            RecoveryRule::PerSet { sets, .. } => {
+                let g = sets as f64;
+                let (lo, hi) = (item.group as f64 / g, (item.group + 1) as f64 / g);
+                let uncovered = coverage[st.slot].uncovered_in(lo, hi);
+                if uncovered < 1e-12 {
+                    st.pointer += 1; // nothing left to compute; skip free
+                    continue;
+                }
+                // ops for the uncovered fraction of the whole encoded task:
+                // subtask_ops covers 1/g of the task.
+                let ops = scheme.subtask_ops(job.u, job.w, job.v, n) as f64 * uncovered * g;
+                st.next_done = now + cost.worker_time(ops.round() as u64, mult);
+                return true;
+            }
+            RecoveryRule::Global { .. } => {
+                if done_ids.contains(&item.group) {
+                    st.pointer += 1;
+                    continue;
+                }
+                let ops = scheme.subtask_ops(job.u, job.w, job.v, n);
+                st.next_done = now + cost.worker_time(ops, mult);
+                return true;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::default_rng;
+    use crate::sim::{SpeedModel, WorkerSpeeds};
+    use crate::tas::{Bicec, Cec, Mlcec};
+
+    fn cm() -> CostModel {
+        CostModel::paper_default()
+    }
+
+    fn job() -> JobSpec {
+        JobSpec::new(240, 240, 240)
+    }
+
+    #[test]
+    fn static_trace_matches_static_simulator() {
+        let scheme = Cec::new(2, 4);
+        let speeds = WorkerSpeeds::uniform(8);
+        let trace = ElasticTrace::static_n(8, 8);
+        let out = simulate_trace(&scheme, &trace, job(), &cm(), &speeds).unwrap();
+        let st = crate::sim::simulate_static(&scheme, 8, job(), &cm(), &speeds);
+        assert!((out.computation_time - st.computation_time).abs() < 1e-9);
+        assert_eq!(out.reallocations, 0);
+        assert_eq!(out.transition_waste, 0.0);
+    }
+
+    #[test]
+    fn bicec_zero_waste_under_fig1_trace() {
+        let scheme = Bicec::new(600, 300, 8);
+        let speeds = WorkerSpeeds::uniform(8);
+        // Events early enough to interrupt the run.
+        let ops = scheme.subtask_ops(240, 240, 240, 8);
+        let tau = cm().worker_time(ops, 1.0);
+        let trace = ElasticTrace::fig1(10.0 * tau, 20.0 * tau);
+        let out = simulate_trace(&scheme, &trace, job(), &cm(), &speeds).unwrap();
+        assert_eq!(out.transition_waste, 0.0);
+        assert_eq!(out.reallocations, 0);
+    }
+
+    #[test]
+    fn cec_pays_waste_under_fig1_trace() {
+        let scheme = Cec::new(2, 4);
+        let speeds = WorkerSpeeds::uniform(8);
+        let ops = scheme.subtask_ops(240, 240, 240, 8);
+        let tau = cm().worker_time(ops, 1.0);
+        // First event after one subtask each (run still far from done).
+        let trace = ElasticTrace::fig1(1.5 * tau, 1.9 * tau);
+        let out = simulate_trace(&scheme, &trace, job(), &cm(), &speeds).unwrap();
+        assert!(out.transition_waste > 0.0);
+        assert_eq!(out.reallocations, 2);
+    }
+
+    #[test]
+    fn preemption_slows_completion() {
+        let scheme = Bicec::new(600, 300, 8);
+        let speeds = WorkerSpeeds::uniform(8);
+        let ops = scheme.subtask_ops(240, 240, 240, 8);
+        let tau = cm().worker_time(ops, 1.0);
+        let quiet = ElasticTrace::static_n(8, 8);
+        let stormy = ElasticTrace::fig1(5.0 * tau, 10.0 * tau);
+        let a = simulate_trace(&scheme, &quiet, job(), &cm(), &speeds).unwrap();
+        let b = simulate_trace(&scheme, &stormy, job(), &cm(), &speeds).unwrap();
+        assert!(b.computation_time > a.computation_time);
+    }
+
+    #[test]
+    fn join_event_helps() {
+        let scheme = Bicec::new(600, 300, 8);
+        let speeds = WorkerSpeeds::uniform(8);
+        let ops = scheme.subtask_ops(240, 240, 240, 8);
+        let tau = cm().worker_time(ops, 1.0);
+        let mut with_join = ElasticTrace::static_n(8, 4);
+        with_join.events.push(ElasticEvent { time: 5.0 * tau, kind: EventKind::Join(4) });
+        with_join.events.push(ElasticEvent { time: 5.0 * tau, kind: EventKind::Join(5) });
+        let without = ElasticTrace::static_n(8, 4);
+        let a = simulate_trace(&scheme, &with_join, job(), &cm(), &speeds).unwrap();
+        let b = simulate_trace(&scheme, &without, job(), &cm(), &speeds).unwrap();
+        assert!(a.computation_time < b.computation_time);
+    }
+
+    use super::super::trace::ElasticEvent;
+
+    #[test]
+    fn work_retained_across_reallocation() {
+        // A CEC run with an event must not take longer than completely
+        // restarting at the event time plus the pre-event elapsed time
+        // (retention can only help).
+        let scheme = Cec::new(2, 4);
+        let speeds = WorkerSpeeds::uniform(8);
+        let ops = scheme.subtask_ops(240, 240, 240, 8);
+        let tau = cm().worker_time(ops, 1.0);
+        let trace = ElasticTrace::fig1(1.5 * tau, 1000.0 * tau);
+        let out = simulate_trace(&scheme, &trace, job(), &cm(), &speeds).unwrap();
+        // Restart-from-zero bound: 1.5 tau elapsed + full static run at N=6.
+        let fresh6 = crate::sim::simulate_static(&scheme, 6, job(), &cm(), &speeds);
+        assert!(out.computation_time <= 1.5 * tau + fresh6.computation_time + 1e-9);
+    }
+
+    #[test]
+    fn unrecoverable_when_everyone_leaves_early() {
+        let scheme = Cec::new(2, 4);
+        let speeds = WorkerSpeeds::uniform(4);
+        let trace = ElasticTrace {
+            n_max: 4,
+            n_initial: 4,
+            events: (0..4)
+                .map(|s| ElasticEvent { time: 1e-9, kind: EventKind::Leave(s) })
+                .collect(),
+        };
+        match simulate_trace(&scheme, &trace, job(), &cm(), &speeds) {
+            Err(SimError::Unrecoverable { .. }) => {}
+            other => panic!("expected Unrecoverable, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stragglers_with_elasticity_all_schemes_finish() {
+        let mut rng = default_rng(11);
+        let speeds = WorkerSpeeds::sample(&SpeedModel::paper_default(), 8, &mut rng);
+        let trace = ElasticTrace::poisson(8, 4, 8, 0.05, 1e6, &mut rng);
+        let schemes: Vec<Box<dyn Scheme>> = vec![
+            Box::new(Cec::new(2, 4)),
+            Box::new(Mlcec::new(2, 4)),
+            Box::new(Bicec::new(600, 300, 8)),
+        ];
+        for s in &schemes {
+            let out = simulate_trace(s.as_ref(), &trace, job(), &cm(), &speeds);
+            assert!(out.is_ok(), "{} failed: {:?}", s.name(), out.err());
+        }
+    }
+}
+
+#[cfg(test)]
+mod reassign_tests {
+    use super::*;
+    use crate::sim::{CostModel, WorkerSpeeds};
+    use crate::tas::Cec;
+    use crate::workload::JobSpec;
+
+    #[test]
+    fn max_overlap_never_increases_waste_or_time() {
+        let scheme = Cec::new(2, 4);
+        let job = JobSpec::new(240, 240, 240);
+        let cost = CostModel::paper_default();
+        let speeds = WorkerSpeeds::uniform(8);
+        let ops = scheme.subtask_ops(240, 240, 240, 8);
+        let tau = cost.worker_time(ops, 1.0);
+        let trace = ElasticTrace::fig1(1.5 * tau, 2.7 * tau);
+        let naive =
+            simulate_trace_with(&scheme, &trace, job, &cost, &speeds, Reassign::Identity)
+                .unwrap();
+        let opt =
+            simulate_trace_with(&scheme, &trace, job, &cost, &speeds, Reassign::MaxOverlap)
+                .unwrap();
+        assert!(opt.transition_waste <= naive.transition_waste + 1e-9,
+            "waste {} > {}", opt.transition_waste, naive.transition_waste);
+        assert!(opt.computation_time <= naive.computation_time + 1e-9,
+            "time {} > {}", opt.computation_time, naive.computation_time);
+    }
+}

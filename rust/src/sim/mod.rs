@@ -1,0 +1,26 @@
+//! Simulation substrate: worker speed models, the calibrated cost model,
+//! the static discrete-event run used by the figures, and the elastic-trace
+//! simulator with exact cross-granularity work retention.
+//!
+//! Two modes (DESIGN.md §Substitutions):
+//!
+//! * **static** (`statics`) — fixed `N` for the whole run, as in the
+//!   paper's Sec. 3 experiments (the x-axis of Fig. 2 sweeps N; no mid-run
+//!   elasticity). Order-statistics fast path.
+//! * **trace** (`elastic`) — workers join/leave mid-run per an
+//!   `ElasticTrace`. Completed work is tracked as row-intervals of each
+//!   worker's encoded task, so re-subdivision at a new granularity retains
+//!   exactly the rows already computed (the products are row-separable).
+
+pub mod cost;
+pub mod elastic;
+pub mod intervals;
+pub mod statics;
+pub mod straggler;
+pub mod trace;
+
+pub use cost::CostModel;
+pub use elastic::{simulate_trace, simulate_trace_with, Reassign, TraceOutcome};
+pub use statics::{simulate_static, RunResult};
+pub use straggler::{SpeedModel, WorkerSpeeds};
+pub use trace::{ElasticEvent, ElasticTrace, EventKind};

@@ -1,0 +1,121 @@
+//! Worker speed models.
+//!
+//! The paper's experiment: "each available worker becomes straggler with
+//! probability 0.5". The slowdown factor is not reported; we default to
+//! 10x (calibrated in EXPERIMENTS.md §Calibration to reproduce the paper's
+//! relative curves) and sweep {2, 5, 10} in the Ext-T3 ablation. A small
+//! log-normal jitter breaks the deterministic ties a two-point speed
+//! distribution would otherwise produce.
+
+use crate::rng::{Bernoulli, Exponential, LogNormal, Rng};
+
+#[derive(Clone, Copy, Debug)]
+pub enum SpeedModel {
+    /// Paper model: straggle w.p. `p`, stragglers are `slowdown`x slower;
+    /// every worker gets a log-normal(0, `jitter`) multiplicative jitter.
+    BernoulliSlowdown { p: f64, slowdown: f64, jitter: f64 },
+    /// Shifted exponential (Lee et al. 2018): multiplier = 1 + Exp(rate).
+    ShiftedExponential { rate: f64 },
+}
+
+impl SpeedModel {
+    /// The paper's configuration with our calibrated defaults.
+    pub fn paper_default() -> Self {
+        SpeedModel::BernoulliSlowdown { p: 0.5, slowdown: 10.0, jitter: 0.05 }
+    }
+
+    /// Sample one worker's time-per-op multiplier (>= 1 means slower).
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> f64 {
+        match *self {
+            SpeedModel::BernoulliSlowdown { p, slowdown, jitter } => {
+                let base = if Bernoulli::new(p).sample(rng) { slowdown } else { 1.0 };
+                base * LogNormal::new(0.0, jitter).sample(rng)
+            }
+            SpeedModel::ShiftedExponential { rate } => {
+                1.0 + Exponential::new(rate).sample(rng)
+            }
+        }
+    }
+}
+
+/// Per-slot speed multipliers for one trial. Indexed by *slot id* (the code
+/// row the worker stores), not by position in the active list, so elastic
+/// re-joins keep their speed.
+#[derive(Clone, Debug)]
+pub struct WorkerSpeeds {
+    multipliers: Vec<f64>,
+}
+
+impl WorkerSpeeds {
+    pub fn sample<R: Rng>(model: &SpeedModel, n_max: usize, rng: &mut R) -> Self {
+        Self { multipliers: (0..n_max).map(|_| model.sample(rng)).collect() }
+    }
+
+    pub fn uniform(n_max: usize) -> Self {
+        Self { multipliers: vec![1.0; n_max] }
+    }
+
+    pub fn from_vec(multipliers: Vec<f64>) -> Self {
+        assert!(multipliers.iter().all(|&m| m > 0.0));
+        Self { multipliers }
+    }
+
+    pub fn n_max(&self) -> usize {
+        self.multipliers.len()
+    }
+
+    #[inline]
+    pub fn multiplier(&self, slot: usize) -> f64 {
+        self.multipliers[slot]
+    }
+
+    pub fn stragglers(&self, threshold: f64) -> usize {
+        self.multipliers.iter().filter(|&&m| m >= threshold).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::default_rng;
+
+    #[test]
+    fn bernoulli_model_two_modes() {
+        let mut rng = default_rng(1);
+        let model = SpeedModel::BernoulliSlowdown { p: 0.5, slowdown: 10.0, jitter: 0.0 };
+        let speeds = WorkerSpeeds::sample(&model, 10_000, &mut rng);
+        let slow = speeds.stragglers(5.0);
+        // ~half the workers straggle
+        assert!((4_500..5_500).contains(&slow), "slow={slow}");
+        for slot in 0..speeds.n_max() {
+            let m = speeds.multiplier(slot);
+            assert!((m - 1.0).abs() < 1e-9 || (m - 10.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn jitter_separates_equal_speeds() {
+        let mut rng = default_rng(2);
+        let speeds = WorkerSpeeds::sample(&SpeedModel::paper_default(), 40, &mut rng);
+        let mut ms: Vec<f64> = (0..40).map(|s| speeds.multiplier(s)).collect();
+        ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ms.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+        assert_eq!(ms.len(), 40, "jitter must break ties");
+    }
+
+    #[test]
+    fn shifted_exponential_at_least_one() {
+        let mut rng = default_rng(3);
+        let model = SpeedModel::ShiftedExponential { rate: 0.5 };
+        for _ in 0..1_000 {
+            assert!(model.sample(&mut rng) >= 1.0);
+        }
+    }
+
+    #[test]
+    fn speeds_indexed_by_slot_stable() {
+        let speeds = WorkerSpeeds::from_vec(vec![1.0, 10.0, 2.5]);
+        assert_eq!(speeds.multiplier(1), 10.0);
+        assert_eq!(speeds.n_max(), 3);
+    }
+}

@@ -1,0 +1,264 @@
+//! Elastic traces: timed join/leave events over worker slots.
+//!
+//! The paper's target platforms (EC2 Spot, Azure Batch) preempt and grant
+//! nodes with short notice; we model this as a marked point process within
+//! `[n_min, n_max]` and as replayable trace files (one event per line:
+//! `<time> leave|join <slot>`).
+
+use crate::rng::{Exponential, Rng};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Slot is preempted (short notice: takes effect at `time`).
+    Leave(usize),
+    /// Slot becomes available again.
+    Join(usize),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ElasticEvent {
+    pub time: f64,
+    pub kind: EventKind,
+}
+
+/// A validated event sequence starting from slots `0..n_initial` active.
+#[derive(Clone, Debug, Default)]
+pub struct ElasticTrace {
+    pub n_max: usize,
+    pub n_initial: usize,
+    pub events: Vec<ElasticEvent>,
+}
+
+impl ElasticTrace {
+    /// Empty trace: static run with `n_initial` workers.
+    pub fn static_n(n_max: usize, n_initial: usize) -> Self {
+        assert!(n_initial <= n_max);
+        Self { n_max, n_initial, events: Vec::new() }
+    }
+
+    /// Poisson elasticity: exponential inter-event times at `rate`; each
+    /// event is a leave (uniform active slot) or join (uniform inactive
+    /// slot) chosen to stay inside [n_min, n_max], 50/50 when both legal.
+    pub fn poisson<R: Rng>(
+        n_max: usize,
+        n_min: usize,
+        n_initial: usize,
+        rate: f64,
+        horizon: f64,
+        rng: &mut R,
+    ) -> Self {
+        assert!(n_min <= n_initial && n_initial <= n_max && n_min >= 1);
+        let exp = Exponential::new(rate);
+        let mut active: Vec<bool> = (0..n_max).map(|s| s < n_initial).collect();
+        let mut n = n_initial;
+        let mut t = 0.0;
+        let mut events = Vec::new();
+        loop {
+            t += exp.sample(rng);
+            if t >= horizon {
+                break;
+            }
+            let can_leave = n > n_min;
+            let can_join = n < n_max;
+            let leave = match (can_leave, can_join) {
+                (true, true) => rng.next_u64() & 1 == 0,
+                (true, false) => true,
+                (false, true) => false,
+                (false, false) => break,
+            };
+            if leave {
+                let actives: Vec<usize> =
+                    (0..n_max).filter(|&s| active[s]).collect();
+                let slot = actives[rng.next_below(actives.len() as u64) as usize];
+                active[slot] = false;
+                n -= 1;
+                events.push(ElasticEvent { time: t, kind: EventKind::Leave(slot) });
+            } else {
+                let idles: Vec<usize> =
+                    (0..n_max).filter(|&s| !active[s]).collect();
+                let slot = idles[rng.next_below(idles.len() as u64) as usize];
+                active[slot] = true;
+                n += 1;
+                events.push(ElasticEvent { time: t, kind: EventKind::Join(slot) });
+            }
+        }
+        Self { n_max, n_initial, events }
+    }
+
+    /// The paper's Fig. 1 scenario: start with 8, lose two pairs.
+    pub fn fig1(t1: f64, t2: f64) -> Self {
+        Self {
+            n_max: 8,
+            n_initial: 8,
+            events: vec![
+                ElasticEvent { time: t1, kind: EventKind::Leave(6) },
+                ElasticEvent { time: t1, kind: EventKind::Leave(7) },
+                ElasticEvent { time: t2, kind: EventKind::Leave(4) },
+                ElasticEvent { time: t2, kind: EventKind::Leave(5) },
+            ],
+        }
+    }
+
+    /// Validate ordering and slot legality; returns active count over time.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut active: Vec<bool> = (0..self.n_max).map(|s| s < self.n_initial).collect();
+        let mut prev = 0.0f64;
+        for (i, ev) in self.events.iter().enumerate() {
+            if ev.time < prev {
+                return Err(format!("event {i} out of order ({} < {prev})", ev.time));
+            }
+            prev = ev.time;
+            match ev.kind {
+                EventKind::Leave(s) => {
+                    if s >= self.n_max || !active[s] {
+                        return Err(format!("event {i}: leave of inactive slot {s}"));
+                    }
+                    active[s] = false;
+                }
+                EventKind::Join(s) => {
+                    if s >= self.n_max || active[s] {
+                        return Err(format!("event {i}: join of active slot {s}"));
+                    }
+                    active[s] = true;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialise: header line `n_max n_initial`, then one event per line.
+    pub fn to_text(&self) -> String {
+        let mut out = format!("{} {}\n", self.n_max, self.n_initial);
+        for ev in &self.events {
+            let (kind, slot) = match ev.kind {
+                EventKind::Leave(s) => ("leave", s),
+                EventKind::Join(s) => ("join", s),
+            };
+            out.push_str(&format!("{} {} {}\n", ev.time, kind, slot));
+        }
+        out
+    }
+
+    pub fn from_text(text: &str) -> Result<Self, String> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines.next().ok_or("empty trace")?;
+        let mut hp = header.split_whitespace();
+        let n_max: usize = hp
+            .next()
+            .ok_or("missing n_max")?
+            .parse()
+            .map_err(|e| format!("n_max: {e}"))?;
+        let n_initial: usize = hp
+            .next()
+            .ok_or("missing n_initial")?
+            .parse()
+            .map_err(|e| format!("n_initial: {e}"))?;
+        let mut events = Vec::new();
+        for (ln, line) in lines.enumerate() {
+            let mut parts = line.split_whitespace();
+            let time: f64 = parts
+                .next()
+                .ok_or(format!("line {ln}: missing time"))?
+                .parse()
+                .map_err(|e| format!("line {ln}: {e}"))?;
+            let kind = parts.next().ok_or(format!("line {ln}: missing kind"))?;
+            let slot: usize = parts
+                .next()
+                .ok_or(format!("line {ln}: missing slot"))?
+                .parse()
+                .map_err(|e| format!("line {ln}: {e}"))?;
+            let kind = match kind {
+                "leave" => EventKind::Leave(slot),
+                "join" => EventKind::Join(slot),
+                other => return Err(format!("line {ln}: unknown kind {other}")),
+            };
+            events.push(ElasticEvent { time, kind });
+        }
+        let trace = Self { n_max, n_initial, events };
+        trace.validate()?;
+        Ok(trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::rng::default_rng;
+
+    #[test]
+    fn fig1_trace_validates() {
+        let t = ElasticTrace::fig1(1.0, 2.0);
+        t.validate().unwrap();
+        assert_eq!(t.events.len(), 4);
+    }
+
+    #[test]
+    fn poisson_trace_respects_bounds() {
+        let mut rng = default_rng(4);
+        let t = ElasticTrace::poisson(40, 20, 30, 0.5, 100.0, &mut rng);
+        t.validate().unwrap();
+        let mut n = t.n_initial as i64;
+        for ev in &t.events {
+            n += match ev.kind {
+                EventKind::Leave(_) => -1,
+                EventKind::Join(_) => 1,
+            };
+            assert!((20..=40).contains(&(n as usize)), "n={n}");
+        }
+    }
+
+    #[test]
+    fn text_round_trip() {
+        let mut rng = default_rng(5);
+        let t = ElasticTrace::poisson(8, 4, 8, 1.0, 20.0, &mut rng);
+        let text = t.to_text();
+        let back = ElasticTrace::from_text(&text).unwrap();
+        assert_eq!(back.n_max, t.n_max);
+        assert_eq!(back.n_initial, t.n_initial);
+        assert_eq!(back.events.len(), t.events.len());
+        for (a, b) in t.events.iter().zip(&back.events) {
+            assert_eq!(a.kind, b.kind);
+            assert!((a.time - b.time).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_double_leave() {
+        let t = ElasticTrace {
+            n_max: 4,
+            n_initial: 4,
+            events: vec![
+                ElasticEvent { time: 1.0, kind: EventKind::Leave(0) },
+                ElasticEvent { time: 2.0, kind: EventKind::Leave(0) },
+            ],
+        };
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_order() {
+        let t = ElasticTrace {
+            n_max: 4,
+            n_initial: 4,
+            events: vec![
+                ElasticEvent { time: 2.0, kind: EventKind::Leave(0) },
+                ElasticEvent { time: 1.0, kind: EventKind::Leave(1) },
+            ],
+        };
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn prop_poisson_traces_always_valid() {
+        prop::check(30, |g| {
+            let n_min = g.usize_in(1, 5);
+            let n_max = n_min + g.usize_in(0, 10);
+            let n_init = g.usize_in(n_min, n_max);
+            let mut rng = g.rng().clone();
+            let t = ElasticTrace::poisson(n_max, n_min, n_init, 1.0, 50.0, &mut rng);
+            t.validate().map_err(|e| e)?;
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,166 @@
+//! BICEC — bit-interleaved coded elastic computing (paper Example 3).
+//!
+//! The whole job is split into `K_bicec` tiny computations, jointly encoded
+//! by one `(K_bicec, S_bicec·N_max)` MDS code. Worker slot `n` is
+//! pre-assigned the contiguous range `n·S_bicec .. (n+1)·S_bicec` and works
+//! through it sequentially; the master needs any `K_bicec` completions in
+//! total. The allocation never changes on elastic events — zero transition
+//! waste — and stragglers' partial prefixes all count (the hierarchical
+//! completion process of Fig. 1, row 3).
+
+use super::{Allocation, RecoveryRule, Scheme, WorkItem};
+use crate::codes::cost;
+
+#[derive(Clone, Debug)]
+pub struct Bicec {
+    /// Code dimension (paper: 800 for the figures, 600 in Fig. 1).
+    pub k: usize,
+    /// Pre-assigned subtasks per worker slot.
+    pub s_per_worker: usize,
+    /// Worker slots the code was sized for.
+    pub n_max: usize,
+}
+
+impl Bicec {
+    pub fn new(k: usize, s_per_worker: usize, n_max: usize) -> Self {
+        let total = s_per_worker * n_max;
+        assert!(k >= 1 && total >= k, "code ({k}, {total}) must have n >= k");
+        Self { k, s_per_worker, n_max }
+    }
+
+    /// Total encoded subtasks in the code.
+    pub fn total_subtasks(&self) -> usize {
+        self.s_per_worker * self.n_max
+    }
+
+    /// The pre-assigned (static) list of worker slot `w`.
+    pub fn slot_range(&self, w: usize) -> std::ops::Range<usize> {
+        assert!(w < self.n_max);
+        w * self.s_per_worker..(w + 1) * self.s_per_worker
+    }
+}
+
+impl Scheme for Bicec {
+    fn name(&self) -> &'static str {
+        "bicec"
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Allocation for the *first* `n` slots being available. Preempted
+    /// slots' ranges simply go uncomputed; re-joining workers resume their
+    /// own range — the lists themselves never change.
+    fn allocate(&self, n: usize) -> Allocation {
+        assert!(
+            n <= self.n_max,
+            "BICEC sized for N_max={} slots, asked for {n}",
+            self.n_max
+        );
+        assert!(
+            n * self.s_per_worker >= self.k,
+            "{n} workers x {} subtasks cannot reach K={}",
+            self.s_per_worker,
+            self.k
+        );
+        let lists = (0..n)
+            .map(|w| self.slot_range(w).map(|id| WorkItem { group: id }).collect())
+            .collect();
+        Allocation { lists, rule: RecoveryRule::Global { k: self.k } }
+    }
+
+    fn subtask_ops(&self, u: usize, w: usize, v: usize, _n: usize) -> u64 {
+        cost::bicec_subtask_ops(u, w, v, self.k)
+    }
+
+    /// BICEC's defining property: slot `s` always owns the same range, no
+    /// matter which other slots are active.
+    fn allocate_active(&self, active_slots: &[usize]) -> Allocation {
+        let lists = active_slots
+            .iter()
+            .map(|&s| self.slot_range(s).map(|id| WorkItem { group: id }).collect())
+            .collect();
+        Allocation { lists, rule: RecoveryRule::Global { k: self.k } }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::tas::Scheme;
+
+    #[test]
+    fn paper_example3_geometry() {
+        // Fig 1: K=600, S=300 per worker, N_max=8 -> 2400 coded subtasks.
+        let b = Bicec::new(600, 300, 8);
+        assert_eq!(b.total_subtasks(), 2400);
+        let alloc = b.allocate(8);
+        alloc.validate();
+        assert!(alloc.lists.iter().all(|l| l.len() == 300));
+        assert_eq!(alloc.rule, RecoveryRule::Global { k: 600 });
+    }
+
+    #[test]
+    fn figure_configuration() {
+        // Sec. 3: K=800, S=80, N_max=40 -> 3200 coded subtasks.
+        let b = Bicec::new(800, 80, 40);
+        for n in (20..=40).step_by(2) {
+            let alloc = b.allocate(n);
+            alloc.validate();
+            let total: usize = alloc.lists.iter().map(|l| l.len()).sum();
+            assert_eq!(total, n * 80);
+        }
+    }
+
+    #[test]
+    fn allocation_is_static_under_elasticity() {
+        // The first n lists at any n are prefixes of the N_max allocation —
+        // the zero-transition-waste property in structural form.
+        let b = Bicec::new(600, 300, 8);
+        let full = b.allocate(8);
+        for n in [6, 4] {
+            let shrunk = b.allocate(n);
+            for w in 0..n {
+                assert_eq!(shrunk.lists[w], full.lists[w], "slot {w} changed at n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_ids_globally_unique_and_dense() {
+        prop::check(40, |g| {
+            let k = g.usize_in(1, 50);
+            let s = g.usize_in(1, 20);
+            let n_max = g.usize_in(1, 16);
+            if s * n_max < k {
+                return Ok(()); // constructor would reject
+            }
+            let b = Bicec::new(k, s, n_max);
+            let n = g.usize_in(1, n_max);
+            if n * s < k {
+                return Ok(());
+            }
+            let alloc = b.allocate(n);
+            let mut ids: Vec<usize> = alloc
+                .lists
+                .iter()
+                .flat_map(|l| l.iter().map(|i| i.group))
+                .collect();
+            ids.sort_unstable();
+            let want: Vec<usize> = (0..n * s).collect();
+            if ids != want {
+                return Err(format!("ids not dense 0..{} (n={n}, s={s})", n * s));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot reach K")]
+    fn rejects_unreachable_threshold() {
+        // 1 worker x 10 subtasks < K=600.
+        let _ = Bicec::new(600, 10, 80).allocate(1);
+    }
+}

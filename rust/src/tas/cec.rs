@@ -1,0 +1,136 @@
+//! CEC — coded elastic computing (Yang et al., ISIT 2019). The baseline.
+//!
+//! Paper Example 1: with `N` available workers, worker `n` (0-based here)
+//! selects subtasks `m ≡ (n + i) mod N` for `i ∈ [0, S)` and processes its
+//! selections in **ascending set order** ("the selected subtasks in the set
+//! {Â_{n,1}} are started to be completed sooner than the selected subtasks
+//! in the set {Â_{n,N}}"). Every set gets exactly `S` contributors, but the
+//! late sets sit at late positions in *every* holder's list — the paper's
+//! "wasteful of time" observation that motivates MLCEC's d-levels.
+
+use super::{Allocation, RecoveryRule, Scheme, WorkItem};
+use crate::codes::cost;
+
+#[derive(Clone, Debug)]
+pub struct Cec {
+    /// Code dimension (CEC/MLCEC split the job into K tasks).
+    pub k: usize,
+    /// Subtasks each worker selects (K < S ≤ N for straggler robustness).
+    pub s: usize,
+}
+
+impl Cec {
+    pub fn new(k: usize, s: usize) -> Self {
+        assert!(k >= 1 && s >= k, "need S >= K >= 1 (S={s}, K={k})");
+        Self { k, s }
+    }
+}
+
+impl Scheme for Cec {
+    fn name(&self) -> &'static str {
+        "cec"
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn allocate(&self, n: usize) -> Allocation {
+        assert!(n >= self.s, "CEC needs N >= S (N={n}, S={})", self.s);
+        let lists = (0..n)
+            .map(|w| {
+                let mut sets: Vec<usize> = (0..self.s).map(|i| (w + i) % n).collect();
+                sets.sort_unstable(); // ascending processing order (Example 1)
+                sets.into_iter().map(|m| WorkItem { group: m }).collect()
+            })
+            .collect();
+        Allocation { lists, rule: RecoveryRule::PerSet { sets: n, k: self.k } }
+    }
+
+    fn subtask_ops(&self, u: usize, w: usize, v: usize, n: usize) -> u64 {
+        cost::cec_subtask_ops(u, w, v, self.k, n)
+    }
+
+    fn min_workers(&self) -> usize {
+        self.s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    #[test]
+    fn paper_example_n8_s4() {
+        // Fig 1a, first row: every set has exactly 4 contributors; worker n
+        // selects cyclically from its own index and processes ascending.
+        let alloc = Cec::new(2, 4).allocate(8);
+        alloc.validate();
+        assert_eq!(alloc.contributors_per_set().unwrap(), vec![4; 8]);
+        let w3: Vec<usize> = alloc.lists[3].iter().map(|i| i.group).collect();
+        assert_eq!(w3, vec![3, 4, 5, 6]);
+        let w6: Vec<usize> = alloc.lists[6].iter().map(|i| i.group).collect();
+        assert_eq!(w6, vec![0, 1, 6, 7]); // cyclic wrap, ascending order
+    }
+
+    #[test]
+    fn elastic_shrink_keeps_structure() {
+        // Fig 1b/1c: N = 6 and N = 4 re-allocations stay uniform.
+        for n in [6, 4] {
+            let alloc = Cec::new(2, 4).allocate(n);
+            alloc.validate();
+            assert_eq!(alloc.contributors_per_set().unwrap(), vec![4; n]);
+        }
+    }
+
+    #[test]
+    fn figure_configuration_k10_s20() {
+        for n in (20..=40).step_by(2) {
+            let alloc = Cec::new(10, 20).allocate(n);
+            alloc.validate();
+            assert_eq!(alloc.contributors_per_set().unwrap(), vec![20; n]);
+        }
+    }
+
+    #[test]
+    fn prop_middle_sets_staggered_last_set_aligned() {
+        // Under ascending processing, sets held only by non-wrapping
+        // workers (m in [S-1, N-S]) see contributors at every position
+        // 0..S-1 — staggered; the last set sits at position S-1 in *every*
+        // holder's list — the paper's "wasteful" alignment that MLCEC fixes.
+        prop::check(30, |g| {
+            let s = g.usize_in(2, 8);
+            let n = s + g.usize_in(0, 8);
+            let alloc = Cec::new(2.min(s), s).allocate(n);
+            for m in (s - 1)..=(n.saturating_sub(s)) {
+                let mut positions: Vec<usize> = alloc
+                    .lists
+                    .iter()
+                    .filter_map(|list| list.iter().position(|it| it.group == m))
+                    .collect();
+                positions.sort_unstable();
+                if positions != (0..s).collect::<Vec<_>>() {
+                    return Err(format!(
+                        "middle set {m} positions {positions:?} != 0..{s} (n={n})"
+                    ));
+                }
+            }
+            let last: Vec<usize> = alloc
+                .lists
+                .iter()
+                .filter_map(|list| list.iter().position(|it| it.group == n - 1))
+                .collect();
+            if !last.iter().all(|&p| p == s - 1) {
+                return Err(format!("last set positions {last:?} != all {}", s - 1));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "CEC needs N >= S")]
+    fn rejects_too_few_workers() {
+        let _ = Cec::new(2, 6).allocate(4);
+    }
+}

@@ -1,0 +1,269 @@
+//! d-level selection for MLCEC: how many workers contribute to each set.
+//!
+//! The paper requires `d_1 ≤ … ≤ d_N`, `Σ d_m = S·N`, and (implicitly)
+//! `K ≤ d_m ≤ N`, but leaves the optimisation of `{d_m}` to future work.
+//! We provide:
+//!
+//! * `PaperFig1` — the exact example values from Fig. 1 (N=8, S=4, K=2).
+//! * `LinearRamp` — the default: a rounded linear ramp from
+//!   `lo = max(K, S−Δ)` to `hi = min(N, S+Δ)` with `Δ = min(S−K, N−S)`,
+//!   repaired to the exact sum. Reduces to the paper's example shape.
+//! * `Equalized` — the "future work" extension: hill-climbs the ramp using
+//!   an order-statistics model of expected set completion time under the
+//!   Bernoulli-straggler model (see `expected_set_time`).
+//! * `Custom` — explicit values (validated).
+
+use crate::rng::{default_rng, Rng};
+
+#[derive(Clone, Debug)]
+pub enum DLevelPolicy {
+    PaperFig1,
+    LinearRamp,
+    Equalized {
+        /// Straggler probability for the order-statistics model.
+        p_straggle: f64,
+        /// Straggler slowdown factor.
+        slowdown: f64,
+    },
+    Custom(Vec<usize>),
+}
+
+impl DLevelPolicy {
+    /// Produce `{d_m}` for `n` available workers, `s` selections per worker,
+    /// code dimension `k`. Guarantees: len == n, nondecreasing, every value
+    /// in [k, n], sum == s*n.
+    pub fn levels(&self, n: usize, s: usize, k: usize) -> Vec<usize> {
+        assert!(k >= 1 && s >= k && n >= s, "need N >= S >= K (n={n}, s={s}, k={k})");
+        let d = match self {
+            DLevelPolicy::PaperFig1 => {
+                assert_eq!((n, s, k), (8, 4, 2), "PaperFig1 is the N=8,S=4,K=2 example");
+                vec![2, 2, 3, 4, 4, 5, 6, 6]
+            }
+            DLevelPolicy::LinearRamp => linear_ramp(n, s, k),
+            DLevelPolicy::Equalized { p_straggle, slowdown } => {
+                equalized(n, s, k, *p_straggle, *slowdown)
+            }
+            DLevelPolicy::Custom(d) => d.clone(),
+        };
+        validate_levels(&d, n, s, k);
+        d
+    }
+}
+
+pub fn validate_levels(d: &[usize], n: usize, s: usize, k: usize) {
+    assert_eq!(d.len(), n, "need one level per set");
+    let sum: usize = d.iter().sum();
+    assert_eq!(sum, s * n, "levels must sum to S*N = {} (got {sum})", s * n);
+    for w in d.windows(2) {
+        assert!(w[0] <= w[1], "levels must be nondecreasing: {d:?}");
+    }
+    assert!(d[0] >= k, "d_1 = {} < K = {k}", d[0]);
+    assert!(d[n - 1] <= n, "d_N = {} > N = {n}", d[n - 1]);
+}
+
+/// Rounded linear ramp with exact-sum repair.
+fn linear_ramp(n: usize, s: usize, k: usize) -> Vec<usize> {
+    let delta = (s - k).min(n - s);
+    let lo = (s - delta) as f64;
+    let hi = (s + delta) as f64;
+    let mut d: Vec<usize> = (0..n)
+        .map(|m| {
+            let t = if n == 1 { 0.0 } else { m as f64 / (n - 1) as f64 };
+            (lo + (hi - lo) * t).round() as usize
+        })
+        .map(|v| v.clamp(k, n))
+        .collect();
+    repair_sum(&mut d, n, s, k);
+    d
+}
+
+/// Adjust `d` in-place until Σd = S·N, preserving monotonicity and bounds.
+fn repair_sum(d: &mut [usize], n: usize, s: usize, k: usize) {
+    let target = s * n;
+    loop {
+        let sum: usize = d.iter().sum();
+        if sum == target {
+            return;
+        }
+        if sum < target {
+            // Increment the rightmost slot that stays <= its right
+            // neighbour (or <= n for the last slot).
+            let mut bumped = false;
+            for m in (0..n).rev() {
+                let cap = if m + 1 < n { d[m + 1] } else { n };
+                if d[m] < cap {
+                    d[m] += 1;
+                    bumped = true;
+                    break;
+                }
+            }
+            assert!(bumped, "cannot reach sum {target} from {d:?}");
+        } else {
+            // Decrement the leftmost slot that stays >= its left
+            // neighbour (or >= k for the first slot).
+            let mut cut = false;
+            for m in 0..n {
+                let floor = if m > 0 { d[m - 1] } else { k };
+                if d[m] > floor {
+                    d[m] -= 1;
+                    cut = true;
+                    break;
+                }
+            }
+            assert!(cut, "cannot reach sum {target} from {d:?}");
+        }
+    }
+}
+
+/// Order-statistics model: expected completion time of a set whose `d`
+/// contributors hold it at (average) list position `pos` (1-based), needing
+/// `k` finishers, each fast (unit time/subtask) w.p. `1-p` or `slowdown`x
+/// slower w.p. `p`. Monte-Carlo with a fixed seed — this runs once per
+/// figure point, not in any hot loop.
+pub fn expected_set_time(d: usize, pos: f64, k: usize, p: f64, slowdown: f64) -> f64 {
+    let mut rng = default_rng(0xD1E5EED ^ (d as u64) << 24 ^ (k as u64));
+    let trials = 256;
+    let mut acc = 0.0;
+    let mut times = Vec::with_capacity(d);
+    for _ in 0..trials {
+        times.clear();
+        for _ in 0..d {
+            let slow = rng.next_f64() < p;
+            let rate = if slow { slowdown } else { 1.0 };
+            times.push(pos * rate);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        acc += times[k.min(d) - 1];
+    }
+    acc / trials as f64
+}
+
+/// Hill-climb from the linear ramp: move a unit of contribution from the
+/// set with the earliest expected completion to the one with the latest,
+/// while the max expected completion improves.
+fn equalized(n: usize, s: usize, k: usize, p: f64, slowdown: f64) -> Vec<usize> {
+    let mut d = linear_ramp(n, s, k);
+    let eval = |d: &[usize]| -> (f64, usize, usize) {
+        // Average list position of set m: with nondecreasing levels, set m
+        // sits near position Σ_{j<=m} d_j / (S·…) — approximate by its rank
+        // among selections: pos_m = 1 + (m as share of the list length).
+        let mut worst = f64::MIN;
+        let mut best = f64::MAX;
+        let (mut argw, mut argb) = (0, 0);
+        let mut cum = 0usize;
+        for (m, &dm) in d.iter().enumerate() {
+            cum += dm;
+            // average position of set m within its holders' S-length lists
+            let pos = cum as f64 / (d.iter().sum::<usize>() as f64) * s as f64;
+            let t = expected_set_time(dm, pos.max(1.0), k, p, slowdown);
+            if t > worst {
+                worst = t;
+                argw = m;
+            }
+            if t < best {
+                best = t;
+                argb = m;
+            }
+        }
+        (worst, argw, argb)
+    };
+    let (mut current, _, _) = eval(&d);
+    for _ in 0..4 * n {
+        let (_, slowest, fastest) = eval(&d);
+        if slowest == fastest {
+            break;
+        }
+        let mut cand = d.clone();
+        // Move one contributor from the fastest set to the slowest.
+        if cand[fastest] <= k || cand[slowest] >= n {
+            break;
+        }
+        cand[fastest] -= 1;
+        cand[slowest] += 1;
+        cand.sort_unstable(); // keep nondecreasing (relabelling sets is free)
+        let (w, _, _) = eval(&cand);
+        if w < current {
+            current = w;
+            d = cand;
+        } else {
+            break;
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    #[test]
+    fn paper_fig1_exact_values() {
+        let d = DLevelPolicy::PaperFig1.levels(8, 4, 2);
+        assert_eq!(d, vec![2, 2, 3, 4, 4, 5, 6, 6]);
+        assert_eq!(d.iter().sum::<usize>(), 32);
+    }
+
+    #[test]
+    fn linear_ramp_matches_paper_shape() {
+        let d = DLevelPolicy::LinearRamp.levels(8, 4, 2);
+        validate_levels(&d, 8, 4, 2);
+        assert_eq!(*d.first().unwrap(), 2);
+        assert_eq!(*d.last().unwrap(), 6);
+    }
+
+    #[test]
+    fn figure_grid_levels_valid() {
+        for n in (20..=40).step_by(2) {
+            let d = DLevelPolicy::LinearRamp.levels(n, 20, 10);
+            validate_levels(&d, n, 20, 10);
+        }
+    }
+
+    #[test]
+    fn degenerate_s_equals_n_gives_flat_levels() {
+        // N=S: every worker selects every set, so all d_m = N.
+        let d = DLevelPolicy::LinearRamp.levels(20, 20, 10);
+        assert!(d.iter().all(|&x| x == 20));
+    }
+
+    #[test]
+    fn prop_linear_ramp_always_valid() {
+        prop::check(100, |g| {
+            let k = g.usize_in(1, 10);
+            let s = k + g.usize_in(0, 10);
+            let n = s + g.usize_in(0, 20);
+            let d = DLevelPolicy::LinearRamp.levels(n, s, k);
+            // validate_levels panics on violation; reaching here is a pass.
+            validate_levels(&d, n, s, k);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn equalized_levels_valid_and_monotone() {
+        let d = DLevelPolicy::Equalized { p_straggle: 0.5, slowdown: 10.0 }
+            .levels(20, 10, 5);
+        validate_levels(&d, 20, 10, 5);
+    }
+
+    #[test]
+    fn expected_set_time_increases_with_position() {
+        let a = expected_set_time(10, 1.0, 5, 0.5, 10.0);
+        let b = expected_set_time(10, 4.0, 5, 0.5, 10.0);
+        assert!(b > a, "later positions must finish later ({a} vs {b})");
+    }
+
+    #[test]
+    fn expected_set_time_decreases_with_contributors() {
+        let few = expected_set_time(6, 2.0, 5, 0.5, 10.0);
+        let many = expected_set_time(16, 2.0, 5, 0.5, 10.0);
+        assert!(many < few, "more contributors must help ({many} vs {few})");
+    }
+
+    #[test]
+    #[should_panic(expected = "sum to")]
+    fn custom_levels_validated() {
+        let _ = DLevelPolicy::Custom(vec![2, 2, 2, 2]).levels(4, 3, 2);
+    }
+}

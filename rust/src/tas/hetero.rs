@@ -1,0 +1,219 @@
+//! Heterogeneous coded elastic computing — the extension direction of
+//! Woolsey et al. [11, 12] (workers with unequal, *known* computation
+//! speeds).
+//!
+//! Uniform CEC gives every worker `S` subtasks; with persistent speed
+//! differences that leaves fast workers idle while the run waits on slow
+//! ones. `HeteroCec` sizes each worker's selection proportionally to its
+//! speed (floor at the code dimension's needs, cap at N), keeping the same
+//! total `S·N` selections and the same per-set recovery rule, and spreads
+//! selections cyclically weighted by length so per-set contributor counts
+//! stay balanced (within rounding).
+
+use super::{Allocation, RecoveryRule, Scheme, WorkItem};
+use crate::codes::cost;
+
+#[derive(Clone, Debug)]
+pub struct HeteroCec {
+    pub k: usize,
+    /// Average selections per worker (the uniform CEC's S).
+    pub s_avg: usize,
+    /// Relative speeds (ops/s, any scale), indexed by slot. len >= any N
+    /// this scheme is asked to allocate for.
+    pub speeds: Vec<f64>,
+}
+
+impl HeteroCec {
+    pub fn new(k: usize, s_avg: usize, speeds: Vec<f64>) -> Self {
+        assert!(k >= 1 && s_avg >= k, "need S >= K >= 1");
+        assert!(speeds.iter().all(|&s| s > 0.0), "speeds must be positive");
+        Self { k, s_avg, speeds }
+    }
+
+    /// Per-worker selection counts for `n` workers: proportional to speed,
+    /// clamped to [1, n], repaired to sum exactly S_avg * n.
+    pub fn selection_counts(&self, n: usize) -> Vec<usize> {
+        assert!(self.speeds.len() >= n, "need speeds for {n} slots");
+        let total = self.s_avg * n;
+        let speed_sum: f64 = self.speeds[..n].iter().sum();
+        let mut counts: Vec<usize> = self.speeds[..n]
+            .iter()
+            .map(|&sp| ((sp / speed_sum * total as f64).round() as usize).clamp(1, n))
+            .collect();
+        // Repair rounding drift while respecting [1, n].
+        loop {
+            let sum: usize = counts.iter().sum();
+            if sum == total {
+                break;
+            }
+            if sum < total {
+                // add to the fastest worker with headroom
+                let i = (0..n)
+                    .filter(|&i| counts[i] < n)
+                    .max_by(|&a, &b| self.speeds[a].partial_cmp(&self.speeds[b]).unwrap())
+                    .expect("total <= n*n is guaranteed by S <= N");
+                counts[i] += 1;
+            } else {
+                let i = (0..n)
+                    .filter(|&i| counts[i] > 1)
+                    .min_by(|&a, &b| self.speeds[a].partial_cmp(&self.speeds[b]).unwrap())
+                    .expect("total >= n is guaranteed by S >= 1");
+                counts[i] -= 1;
+            }
+        }
+        counts
+    }
+}
+
+impl Scheme for HeteroCec {
+    fn name(&self) -> &'static str {
+        "hetero-cec"
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn allocate(&self, n: usize) -> Allocation {
+        assert!(n >= self.s_avg, "need N >= S_avg (N={n}, S={})", self.s_avg);
+        let counts = self.selection_counts(n);
+        // Round-robin deal: walk sets cyclically, dealing each worker its
+        // quota starting at its own offset — this keeps per-set contributor
+        // counts within +-1 of S_avg while honouring unequal quotas.
+        let mut lists: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (w, &c) in counts.iter().enumerate() {
+            for i in 0..c {
+                lists[w].push((w + i * n / c.max(1)) % n);
+            }
+            lists[w].sort_unstable();
+            lists[w].dedup();
+            // Dedup may shrink the list (stride collisions); refill from
+            // the cyclic successor sets.
+            let mut next = (w + 1) % n;
+            while lists[w].len() < c {
+                if !lists[w].contains(&next) {
+                    lists[w].push(next);
+                    lists[w].sort_unstable();
+                }
+                next = (next + 1) % n;
+            }
+        }
+        // Per-set floor: every set needs at least K contributors; steal
+        // from the most-covered sets if rounding left a set short.
+        let mut per_set = vec![0usize; n];
+        for l in &lists {
+            for &m in l {
+                per_set[m] += 1;
+            }
+        }
+        for m in 0..n {
+            while per_set[m] < self.k {
+                // move a unit from the richest set to set m, via a worker
+                // that has the rich set but not m
+                let rich = (0..n).max_by_key(|&x| per_set[x]).unwrap();
+                let donor = (0..n)
+                    .find(|&w| lists[w].contains(&rich) && !lists[w].contains(&m))
+                    .expect("some donor exists while sums are balanced");
+                lists[donor].retain(|&x| x != rich);
+                lists[donor].push(m);
+                lists[donor].sort_unstable();
+                per_set[rich] -= 1;
+                per_set[m] += 1;
+            }
+        }
+        let lists = lists
+            .into_iter()
+            .map(|l| l.into_iter().map(|m| WorkItem { group: m }).collect())
+            .collect();
+        Allocation { lists, rule: RecoveryRule::PerSet { sets: n, k: self.k } }
+    }
+
+    fn subtask_ops(&self, u: usize, w: usize, v: usize, n: usize) -> u64 {
+        cost::cec_subtask_ops(u, w, v, self.k, n)
+    }
+
+    fn min_workers(&self) -> usize {
+        self.s_avg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::rng::default_rng;
+    use crate::sim::{simulate_static, CostModel, WorkerSpeeds};
+    use crate::tas::Cec;
+    use crate::workload::JobSpec;
+
+    fn speeds_two_tier(n: usize, fast_frac: f64, slow: f64) -> Vec<f64> {
+        (0..n)
+            .map(|i| if (i as f64) < fast_frac * n as f64 { 1.0 } else { 1.0 / slow })
+            .collect()
+    }
+
+    #[test]
+    fn counts_sum_and_ordering() {
+        let h = HeteroCec::new(2, 4, speeds_two_tier(8, 0.5, 4.0));
+        let counts = h.selection_counts(8);
+        assert_eq!(counts.iter().sum::<usize>(), 32);
+        // fast workers (first half) get at least as many as slow ones
+        let fast_min = counts[..4].iter().min().unwrap();
+        let slow_max = counts[4..].iter().max().unwrap();
+        assert!(fast_min >= slow_max, "{counts:?}");
+    }
+
+    #[test]
+    fn allocation_valid_with_unequal_quotas() {
+        let h = HeteroCec::new(2, 4, speeds_two_tier(8, 0.5, 4.0));
+        let alloc = h.allocate(8);
+        alloc.validate();
+        let total: usize = alloc.lists.iter().map(|l| l.len()).sum();
+        assert_eq!(total, 32);
+    }
+
+    #[test]
+    fn hetero_beats_uniform_cec_under_persistent_skew() {
+        // Two-tier cluster, speeds known: the hetero allocation should cut
+        // average computation time vs uniform CEC.
+        let n = 24;
+        let job = JobSpec::paper_square();
+        let cost = CostModel::paper_default();
+        let mult: Vec<f64> = (0..n).map(|i| if i < n / 2 { 1.0 } else { 5.0 }).collect();
+        let speeds_rt = WorkerSpeeds::from_vec(mult.clone());
+        let inv_speed: Vec<f64> = mult.iter().map(|m| 1.0 / m).collect();
+        let uniform = Cec::new(10, 12);
+        let hetero = HeteroCec::new(10, 12, inv_speed);
+        let a = simulate_static(&uniform, n, job, &cost, &speeds_rt).computation_time;
+        let b = simulate_static(&hetero, n, job, &cost, &speeds_rt).computation_time;
+        assert!(b < a, "hetero {b} must beat uniform {a}");
+    }
+
+    #[test]
+    fn uniform_speeds_reduce_to_cec_counts() {
+        let h = HeteroCec::new(10, 20, vec![1.0; 40]);
+        let counts = h.selection_counts(40);
+        assert!(counts.iter().all(|&c| c == 20), "{counts:?}");
+    }
+
+    #[test]
+    fn prop_allocation_always_valid() {
+        prop::check(30, |g| {
+            let k = g.usize_in(1, 4);
+            let s = k + g.usize_in(0, 4);
+            let n = s + g.usize_in(0, 10);
+            let mut rng = g.rng().clone();
+            use crate::rng::Rng;
+            let speeds: Vec<f64> = (0..n).map(|_| 0.2 + rng.next_f64() * 5.0).collect();
+            let h = HeteroCec::new(k, s, speeds);
+            let alloc = h.allocate(n);
+            // validate() panics on violation; per-set floor must hold.
+            alloc.validate();
+            let total: usize = alloc.lists.iter().map(|l| l.len()).sum();
+            if total != s * n {
+                return Err(format!("total {total} != {}", s * n));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,201 @@
+//! MLCC — multilevel coded computing (Ferdinand & Draper [6], Kiani et al.
+//! [7, 9]): the *static* hierarchical baseline MLCEC builds on.
+//!
+//! Every worker's computation is split into `L` equal layers, processed in
+//! order; layer `ℓ` is coded across the `n` workers with its own
+//! `(k_ℓ, n)` MDS code, `k_1 ≥ k_2 ≥ …` (deeper layers, which fewer
+//! workers reach, carry more redundancy). The job is fully recovered when
+//! every layer has its `k_ℓ` completions. With one layer this degenerates
+//! to classic coded computing (Lee et al. [2]) — so this module also
+//! provides the non-hierarchical baseline.
+//!
+//! MLCC is not elastic (no selection, no re-allocation), so it does not
+//! implement `Scheme`; the figure ablation (`ext_hierarchy`) compares it
+//! against CEC/MLCEC/BICEC at fixed N.
+
+use crate::codes::cost;
+use crate::sim::{CostModel, WorkerSpeeds};
+use crate::workload::JobSpec;
+
+#[derive(Clone, Debug)]
+pub struct Mlcc {
+    /// Per-layer recovery thresholds, nonincreasing, each in [1, n].
+    pub thresholds: Vec<usize>,
+}
+
+impl Mlcc {
+    pub fn new(thresholds: Vec<usize>) -> Self {
+        assert!(!thresholds.is_empty(), "need at least one layer");
+        assert!(thresholds.iter().all(|&k| k >= 1), "thresholds must be >= 1");
+        for w in thresholds.windows(2) {
+            assert!(w[0] >= w[1], "thresholds must be nonincreasing: {thresholds:?}");
+        }
+        Self { thresholds }
+    }
+
+    /// Classic (k, n) coded computing: a single layer.
+    pub fn classic(k: usize) -> Self {
+        Self::new(vec![k])
+    }
+
+    /// Linearly interpolated thresholds from `k_top` (layer 1) down to
+    /// `k_bottom` (layer L).
+    pub fn ramp(layers: usize, k_top: usize, k_bottom: usize) -> Self {
+        assert!(layers >= 1 && k_top >= k_bottom && k_bottom >= 1);
+        let t = (0..layers)
+            .map(|l| {
+                if layers == 1 {
+                    k_top
+                } else {
+                    let f = l as f64 / (layers - 1) as f64;
+                    (k_top as f64 + (k_bottom as f64 - k_top as f64) * f).round() as usize
+                }
+            })
+            .collect();
+        Self::new(t)
+    }
+
+    pub fn layers(&self) -> usize {
+        self.thresholds.len()
+    }
+
+    /// Σ k_ℓ — the number of data chunks the code carries.
+    pub fn sum_k(&self) -> usize {
+        self.thresholds.iter().sum()
+    }
+
+    /// Multiply-adds of one layer chunk: the job is `Σk` data chunks, each
+    /// worker's layer is one coded chunk of the same size.
+    pub fn chunk_ops(&self, job: JobSpec) -> u64 {
+        job.ops() / self.sum_k() as u64
+    }
+
+    /// Computation time with `n` workers: layer ℓ completes at the k_ℓ-th
+    /// smallest of `(ℓ+1) · chunk_time(w)`; the job at the max over layers.
+    pub fn computation_time(
+        &self,
+        n: usize,
+        job: JobSpec,
+        cost: &CostModel,
+        speeds: &WorkerSpeeds,
+    ) -> f64 {
+        assert!(speeds.n_max() >= n);
+        assert!(
+            self.thresholds.iter().all(|&k| k <= n),
+            "thresholds {:?} exceed n={n}",
+            self.thresholds
+        );
+        let ops = self.chunk_ops(job);
+        let mut worst = 0.0f64;
+        let mut times: Vec<f64> = Vec::with_capacity(n);
+        for (l, &k) in self.thresholds.iter().enumerate() {
+            times.clear();
+            times.extend(
+                (0..n).map(|w| (l + 1) as f64 * cost.worker_time(ops, speeds.multiplier(w))),
+            );
+            let (_, kth, _) =
+                times.select_nth_unstable_by(k - 1, |a, b| a.partial_cmp(b).unwrap());
+            worst = worst.max(*kth);
+        }
+        worst
+    }
+
+    /// Decode ops: one k_ℓ x k_ℓ inverse per layer plus the combine over
+    /// that layer's share of the output rows (u · k_ℓ / Σk).
+    pub fn decode_ops(&self, u: usize, v: usize) -> u64 {
+        let sum_k = self.sum_k();
+        self.thresholds
+            .iter()
+            .map(|&k| {
+                let u_l = u * k / sum_k;
+                cost::inverse_ops(k) + cost::combine_ops(k, u_l, v)
+            })
+            .sum()
+    }
+
+    pub fn finishing_time(
+        &self,
+        n: usize,
+        job: JobSpec,
+        cost: &CostModel,
+        speeds: &WorkerSpeeds,
+    ) -> f64 {
+        self.computation_time(n, job, cost, speeds) + cost.decode_time(self.decode_ops(job.u, job.v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::default_rng;
+    use crate::sim::SpeedModel;
+
+    fn cm() -> CostModel {
+        CostModel::paper_default()
+    }
+
+    #[test]
+    fn classic_single_layer_closed_form() {
+        // Classic (k, n) coding, uniform speeds: completion = chunk time.
+        let m = Mlcc::classic(10);
+        let job = JobSpec::paper_square();
+        let speeds = WorkerSpeeds::uniform(40);
+        let t = m.computation_time(40, job, &cm(), &speeds);
+        let want = cm().worker_time(job.ops() / 10, 1.0);
+        assert!((t - want).abs() / want < 1e-12);
+    }
+
+    #[test]
+    fn ramp_constructor_shapes() {
+        let m = Mlcc::ramp(4, 20, 8);
+        assert_eq!(m.layers(), 4);
+        assert_eq!(m.thresholds.first(), Some(&20));
+        assert_eq!(m.thresholds.last(), Some(&8));
+        for w in m.thresholds.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+
+    #[test]
+    fn hierarchy_beats_classic_under_stragglers() {
+        // The headline of [6, 9]: exploiting stragglers' partial work
+        // (layers) beats waiting for k full-task completions.
+        let job = JobSpec::paper_square();
+        let mut rng = default_rng(17);
+        let layers = Mlcc::ramp(20, 32, 10);
+        let classic = Mlcc::classic(20);
+        let trials = 30;
+        let (mut h, mut c) = (0.0, 0.0);
+        for _ in 0..trials {
+            let sp = WorkerSpeeds::sample(&SpeedModel::paper_default(), 40, &mut rng);
+            h += layers.computation_time(40, job, &cm(), &sp);
+            c += classic.computation_time(40, job, &cm(), &sp);
+        }
+        assert!(h < c, "hierarchical {h} must beat classic {c}");
+    }
+
+    #[test]
+    fn deeper_layers_cost_more_decode() {
+        let one = Mlcc::classic(10);
+        let many = Mlcc::ramp(10, 14, 6);
+        assert!(many.decode_ops(2400, 2400) > one.decode_ops(2400, 2400) / 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "nonincreasing")]
+    fn rejects_increasing_thresholds() {
+        let _ = Mlcc::new(vec![4, 6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed n")]
+    fn rejects_thresholds_above_n() {
+        let m = Mlcc::classic(50);
+        let _ = m.computation_time(
+            40,
+            JobSpec::paper_square(),
+            &cm(),
+            &WorkerSpeeds::uniform(40),
+        );
+    }
+}

@@ -1,0 +1,170 @@
+//! MLCEC — multilevel coded elastic computing (paper Example 2 + Alg. 1).
+//!
+//! Same geometry as CEC, but set `m` receives `d_m` contributors with
+//! `d_1 ≤ … ≤ d_N`: since workers complete their selected subtasks
+//! sequentially, later sets start later, so they get more workers to
+//! equalise set completion times.
+//!
+//! Alg. 1 (task allocation given `{d_m}`): walk sets from `N` down to `1`;
+//! for each set, find the first worker with the minimum number of already-
+//! assigned subtasks (sets l+1..N) and give the set to that worker and the
+//! next `d_l − 1` workers cyclically. Each worker ends up with exactly `S`
+//! subtasks (Σ d_m = S·N and the balancing rule keep loads uniform).
+
+use super::{dlevels::DLevelPolicy, Allocation, RecoveryRule, Scheme, WorkItem};
+use crate::codes::cost;
+
+#[derive(Clone, Debug)]
+pub struct Mlcec {
+    pub k: usize,
+    pub s: usize,
+    pub policy: DLevelPolicy,
+}
+
+impl Mlcec {
+    pub fn new(k: usize, s: usize) -> Self {
+        Self::with_policy(k, s, DLevelPolicy::LinearRamp)
+    }
+
+    pub fn with_policy(k: usize, s: usize, policy: DLevelPolicy) -> Self {
+        assert!(k >= 1 && s >= k, "need S >= K >= 1 (S={s}, K={k})");
+        Self { k, s, policy }
+    }
+
+    /// Alg. 1: per-worker selected set lists from the d-levels.
+    pub fn algorithm1(n: usize, d: &[usize]) -> Vec<Vec<usize>> {
+        assert_eq!(d.len(), n);
+        // selected[w] accumulates set indices; loads[w] counts them.
+        let mut selected: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for l in (0..n).rev() {
+            // First worker with minimum load among sets l+1..N (everything
+            // assigned so far).
+            let min_load = selected.iter().map(|s| s.len()).min().unwrap();
+            let start = selected
+                .iter()
+                .position(|s| s.len() == min_load)
+                .expect("nonempty");
+            for off in 0..d[l] {
+                selected[(start + off) % n].push(l);
+            }
+        }
+        // Processing order is ascending set index (sets with smaller m
+        // start earlier); Alg. 1 assigned descending.
+        for list in &mut selected {
+            list.reverse();
+        }
+        selected
+    }
+}
+
+impl Scheme for Mlcec {
+    fn name(&self) -> &'static str {
+        "mlcec"
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn allocate(&self, n: usize) -> Allocation {
+        assert!(n >= self.s, "MLCEC needs N >= S (N={n}, S={})", self.s);
+        let d = self.policy.levels(n, self.s, self.k);
+        let lists = Self::algorithm1(n, &d)
+            .into_iter()
+            .map(|sets| sets.into_iter().map(|m| WorkItem { group: m }).collect())
+            .collect();
+        Allocation { lists, rule: RecoveryRule::PerSet { sets: n, k: self.k } }
+    }
+
+    fn subtask_ops(&self, u: usize, w: usize, v: usize, n: usize) -> u64 {
+        cost::cec_subtask_ops(u, w, v, self.k, n)
+    }
+
+    fn min_workers(&self) -> usize {
+        self.s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::tas::Scheme;
+
+    #[test]
+    fn paper_fig1_levels_realised() {
+        let scheme = Mlcec::with_policy(2, 4, DLevelPolicy::PaperFig1);
+        let alloc = scheme.allocate(8);
+        alloc.validate();
+        assert_eq!(
+            alloc.contributors_per_set().unwrap(),
+            vec![2, 2, 3, 4, 4, 5, 6, 6]
+        );
+        // Every worker has exactly S = 4 subtasks.
+        assert!(alloc.lists.iter().all(|l| l.len() == 4));
+    }
+
+    #[test]
+    fn processing_order_is_ascending_sets() {
+        let alloc = Mlcec::new(2, 4).allocate(8);
+        for list in &alloc.lists {
+            let groups: Vec<usize> = list.iter().map(|i| i.group).collect();
+            let mut sorted = groups.clone();
+            sorted.sort_unstable();
+            assert_eq!(groups, sorted, "to-do lists must be ascending");
+        }
+    }
+
+    #[test]
+    fn figure_configuration_valid_across_grid() {
+        for n in (20..=40).step_by(2) {
+            let alloc = Mlcec::new(10, 20).allocate(n);
+            alloc.validate();
+            let d = alloc.contributors_per_set().unwrap();
+            let mut sorted = d.clone();
+            sorted.sort_unstable();
+            assert_eq!(d, sorted, "d-levels must be realised nondecreasing");
+            assert_eq!(d.iter().sum::<usize>(), 20 * n);
+        }
+    }
+
+    #[test]
+    fn alg1_balances_loads_exactly() {
+        prop::check(60, |g| {
+            let k = g.usize_in(1, 6);
+            let s = k + g.usize_in(0, 6);
+            let n = s + g.usize_in(0, 16);
+            let d = DLevelPolicy::LinearRamp.levels(n, s, k);
+            let lists = Mlcec::algorithm1(n, &d);
+            for (w, list) in lists.iter().enumerate() {
+                if list.len() != s {
+                    return Err(format!(
+                        "worker {w} got {} subtasks != S={s} (n={n}, d={d:?})",
+                        list.len()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn later_sets_never_have_fewer_contributors() {
+        let alloc = Mlcec::new(10, 20).allocate(30);
+        let d = alloc.contributors_per_set().unwrap();
+        for w in d.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        assert!(d[0] < *d.last().unwrap(), "ramp must be non-trivial");
+    }
+
+    #[test]
+    fn elastic_shrink_reallocates_cleanly() {
+        let scheme = Mlcec::new(2, 4);
+        for n in [8, 6, 4] {
+            let alloc = scheme.allocate(n);
+            alloc.validate();
+            assert!(alloc.lists.iter().all(|l| l.len() == 4));
+        }
+    }
+}

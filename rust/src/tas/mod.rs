@@ -1,0 +1,184 @@
+//! Task-allocation schemes (TAS) — the paper's contribution.
+//!
+//! Three schemes over an elastic pool of at most `N_max` workers, each
+//! storing one MDS-coded copy of its share of the job:
+//!
+//! * **CEC** (baseline, Yang et al. ISIT'19): with `N` available workers,
+//!   each subdivides its encoded task into `N` subtasks and selects `S` of
+//!   them cyclically; recovery set `m` needs `K` of its `S` contributors.
+//! * **MLCEC** (this paper): same geometry, but set `m` gets `d_m`
+//!   contributors with `d_1 ≤ … ≤ d_N` (Alg. 1), matching the sequential
+//!   completion order — later-started sets get more workers.
+//! * **BICEC** (this paper): one `(K_bicec, S_bicec·N_max)` code over the
+//!   whole job; workers chew through their pre-assigned subtask lists and
+//!   the master needs any `K_bicec` completions. Zero transition waste.
+//!
+//! `allocate(n)` produces per-worker ordered to-do lists plus the recovery
+//! rule; `sim::des` turns them into completion times, `coordinator` turns
+//! them into real work.
+
+mod bicec;
+mod cec;
+pub mod dlevels;
+mod hetero;
+mod mlcc;
+mod mlcec;
+pub mod reassign;
+pub mod transition;
+
+pub use bicec::Bicec;
+pub use cec::Cec;
+pub use dlevels::DLevelPolicy;
+pub use hetero::HeteroCec;
+pub use mlcc::Mlcc;
+pub use mlcec::Mlcec;
+
+/// One entry in a worker's to-do list.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkItem {
+    /// Recovery group: the set index `m` for CEC/MLCEC (0-based), or the
+    /// globally unique encoded-subtask id for BICEC.
+    pub group: usize,
+}
+
+/// How the master decides the computation phase is complete.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryRule {
+    /// Every one of `sets` groups needs `k` completed items (CEC/MLCEC).
+    PerSet { sets: usize, k: usize },
+    /// Any `k` completed items overall (BICEC).
+    Global { k: usize },
+}
+
+/// A concrete allocation for `lists.len()` available workers.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    /// `lists[w]` = ordered to-do list of worker slot `w` (processing order).
+    pub lists: Vec<Vec<WorkItem>>,
+    pub rule: RecoveryRule,
+}
+
+impl Allocation {
+    /// Number of available worker slots.
+    pub fn workers(&self) -> usize {
+        self.lists.len()
+    }
+
+    /// Contributor count per set (PerSet rules only).
+    pub fn contributors_per_set(&self) -> Option<Vec<usize>> {
+        let RecoveryRule::PerSet { sets, .. } = self.rule else {
+            return None;
+        };
+        let mut d = vec![0usize; sets];
+        for list in &self.lists {
+            for item in list {
+                d[item.group] += 1;
+            }
+        }
+        Some(d)
+    }
+
+    /// Sanity checks shared by all schemes; panics describe the violation
+    /// (used by tests and by the coordinator in debug builds).
+    pub fn validate(&self) {
+        match self.rule {
+            RecoveryRule::PerSet { sets, k } => {
+                let d = self.contributors_per_set().unwrap();
+                for (m, &dm) in d.iter().enumerate() {
+                    assert!(
+                        dm >= k,
+                        "set {m} has {dm} contributors < recovery threshold {k}"
+                    );
+                }
+                for (w, list) in self.lists.iter().enumerate() {
+                    let mut seen = std::collections::HashSet::new();
+                    for item in list {
+                        assert!(item.group < sets, "worker {w}: set out of range");
+                        assert!(seen.insert(item.group), "worker {w}: duplicate set");
+                    }
+                }
+            }
+            RecoveryRule::Global { k } => {
+                let total: usize = self.lists.iter().map(|l| l.len()).sum();
+                assert!(total >= k, "only {total} items allocated, need {k}");
+                let mut seen = std::collections::HashSet::new();
+                for list in &self.lists {
+                    for item in list {
+                        assert!(seen.insert(item.group), "duplicate global subtask");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A task-allocation scheme: everything `sim::des` and the coordinator need.
+pub trait Scheme {
+    fn name(&self) -> &'static str;
+
+    /// Code dimension (recovery threshold of the underlying MDS code).
+    fn k(&self) -> usize;
+
+    /// Allocation for `n` available workers.
+    fn allocate(&self, n: usize) -> Allocation;
+
+    /// Allocation for an explicit set of active slots (elastic trace mode).
+    /// CEC/MLCEC allocations depend only on the count — `lists[i]` belongs
+    /// to `active_slots[i]`. BICEC overrides this: slots own static ranges.
+    fn allocate_active(&self, active_slots: &[usize]) -> Allocation {
+        self.allocate(active_slots.len())
+    }
+
+    /// Fewest available workers the scheme can re-allocate for (CEC/MLCEC
+    /// need `N >= S`).
+    fn min_workers(&self) -> usize {
+        1
+    }
+
+    /// Multiply-add count of one subtask for an (u, w, v) job with `n`
+    /// available workers.
+    fn subtask_ops(&self, u: usize, w: usize, v: usize, n: usize) -> u64;
+
+    /// Decode op count (after the computation phase) for a u x v output.
+    fn decode_ops(&self, u: usize, v: usize) -> u64 {
+        crate::codes::cost::decode_ops(self.k(), u, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_accepts_minimal_per_set() {
+        let alloc = Allocation {
+            lists: vec![
+                vec![WorkItem { group: 0 }, WorkItem { group: 1 }],
+                vec![WorkItem { group: 0 }, WorkItem { group: 1 }],
+            ],
+            rule: RecoveryRule::PerSet { sets: 2, k: 2 },
+        };
+        alloc.validate();
+        assert_eq!(alloc.contributors_per_set().unwrap(), vec![2, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "contributors < recovery threshold")]
+    fn validate_rejects_underfilled_set() {
+        let alloc = Allocation {
+            lists: vec![vec![WorkItem { group: 0 }]],
+            rule: RecoveryRule::PerSet { sets: 1, k: 2 },
+        };
+        alloc.validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate global subtask")]
+    fn validate_rejects_duplicate_global_ids() {
+        let alloc = Allocation {
+            lists: vec![vec![WorkItem { group: 3 }], vec![WorkItem { group: 3 }]],
+            rule: RecoveryRule::Global { k: 1 },
+        };
+        alloc.validate();
+    }
+}

@@ -1,0 +1,190 @@
+//! Waste-minimising re-assignment — the direction of Dau et al. [10]
+//! ("Optimizing the transition waste in coded elastic computing").
+//!
+//! When CEC/MLCEC re-allocate after an elastic event, the *multiset* of
+//! to-do lists is fixed by the scheme, but **which surviving worker gets
+//! which list** is free: any permutation preserves per-set contributor
+//! counts (validity) while changing how much of each worker's remaining
+//! work is kept. We assign lists to workers greedily by descending
+//! row-interval overlap with the worker's old selection — a 1/2-ish
+//! approximation of the max-weight assignment that is exact in the common
+//! single-leave/single-join case.
+
+use super::{transition, Allocation};
+
+/// Overlap (retained work measure) if `w_old`'s surviving worker takes
+/// `after.lists[list_idx]`: new-list measure minus the waste it would pay.
+fn overlap(
+    before: &Allocation,
+    completed: usize,
+    w_old: usize,
+    after: &Allocation,
+    list_idx: usize,
+) -> f64 {
+    // waste = abandoned + newly-taken; smaller waste = better fit.
+    -transition::worker_waste(before, completed, w_old, after, list_idx)
+}
+
+/// Choose which new list each surviving worker takes.
+///
+/// `survivors[i] = (w_after_default, Option<(w_before, completed)>)` as in
+/// `transition::total_waste`. Returns `assignment[i] = list index in
+/// after` such that the assignment is a permutation of `0..after.workers()`
+/// and fresh joiners get the lists nobody wanted.
+pub fn max_overlap_assignment(
+    before: &Allocation,
+    after: &Allocation,
+    survivors: &[(usize, Option<(usize, usize)>)],
+) -> Vec<usize> {
+    let n_new = after.workers();
+    assert_eq!(survivors.len(), n_new);
+
+    // Score every (survivor with history, list) pair.
+    let mut pairs: Vec<(f64, usize, usize)> = Vec::new(); // (score, survivor idx, list)
+    for (i, &(_, prior)) in survivors.iter().enumerate() {
+        if let Some((w_before, completed)) = prior {
+            for list_idx in 0..n_new {
+                pairs.push((overlap(before, completed, w_before, after, list_idx), i, list_idx));
+            }
+        }
+    }
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut assignment = vec![usize::MAX; n_new];
+    let mut list_taken = vec![false; n_new];
+    let mut worker_done = vec![false; n_new];
+    for (_, i, list_idx) in pairs {
+        if !worker_done[i] && !list_taken[list_idx] {
+            assignment[i] = list_idx;
+            worker_done[i] = true;
+            list_taken[list_idx] = true;
+        }
+    }
+    // Fresh joiners (and any unmatched survivor) take the leftover lists.
+    let mut free: Vec<usize> = (0..n_new).filter(|&l| !list_taken[l]).collect();
+    for slot in assignment.iter_mut() {
+        if *slot == usize::MAX {
+            *slot = free.pop().expect("counts match");
+        }
+    }
+    // Greedy maximises pairwise overlap but is not optimal for the *total*;
+    // the identity assignment is always feasible, so return the better of
+    // the two (never worse than no optimisation).
+    let total = |asg: &[usize]| {
+        let permuted = apply_assignment(after, asg);
+        transition::total_waste(before, &permuted, survivors)
+    };
+    let identity: Vec<usize> = (0..n_new).collect();
+    if total(&identity) <= total(&assignment) {
+        identity
+    } else {
+        assignment
+    }
+}
+
+/// Permute `after.lists` so worker `i` receives its assigned list.
+pub fn apply_assignment(after: &Allocation, assignment: &[usize]) -> Allocation {
+    let lists = assignment.iter().map(|&l| after.lists[l].clone()).collect();
+    Allocation { lists, rule: after.rule }
+}
+
+/// Total waste under the greedy max-overlap assignment (for comparison
+/// against the identity assignment of `transition::total_waste`).
+pub fn optimized_waste(
+    before: &Allocation,
+    after: &Allocation,
+    survivors: &[(usize, Option<(usize, usize)>)],
+) -> f64 {
+    let assignment = max_overlap_assignment(before, after, survivors);
+    let permuted = apply_assignment(after, &assignment);
+    transition::total_waste(before, &permuted, survivors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::tas::{Cec, Mlcec, Scheme};
+
+    fn survivors_identity(n: usize, completed: usize) -> Vec<(usize, Option<(usize, usize)>)> {
+        (0..n).map(|w| (w, Some((w, completed)))).collect()
+    }
+
+    #[test]
+    fn assignment_is_a_permutation() {
+        let c = Cec::new(2, 4);
+        let before = c.allocate(8);
+        let after = c.allocate(6);
+        let a = max_overlap_assignment(&before, &after, &survivors_identity(6, 1));
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn optimized_never_worse_than_identity() {
+        for (s, n1, n2) in [(4usize, 8usize, 6usize), (4, 6, 8), (4, 8, 4)] {
+            let c = Cec::new(2, s);
+            let before = c.allocate(n1);
+            let after = c.allocate(n2);
+            let surv: Vec<_> = (0..n2.min(n1))
+                .map(|w| (w, Some((w, 1))))
+                .chain((n1.min(n2)..n2).map(|w| (w, None)))
+                .collect();
+            let naive = crate::tas::transition::total_waste(&before, &after, &surv);
+            let opt = optimized_waste(&before, &after, &surv);
+            assert!(
+                opt <= naive + 1e-9,
+                "optimized {opt} > naive {naive} for {n1}->{n2}"
+            );
+        }
+    }
+
+    #[test]
+    fn permuted_allocation_stays_valid() {
+        let m = Mlcec::new(2, 4);
+        let before = m.allocate(8);
+        let after = m.allocate(6);
+        let surv = survivors_identity(6, 0);
+        let assignment = max_overlap_assignment(&before, &after, &surv);
+        let permuted = apply_assignment(&after, &assignment);
+        permuted.validate();
+        assert_eq!(
+            permuted.contributors_per_set(),
+            after.contributors_per_set(),
+            "per-set counts must be preserved"
+        );
+    }
+
+    #[test]
+    fn identity_when_nothing_changed() {
+        // Same allocation before and after: greedy must find zero waste.
+        let c = Cec::new(2, 4);
+        let a = c.allocate(8);
+        let w = optimized_waste(&a, &a, &survivors_identity(8, 0));
+        assert!(w.abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_optimized_waste_bounded_by_naive() {
+        prop::check(40, |g| {
+            let s = g.usize_in(2, 6);
+            let n1 = s + g.usize_in(0, 6);
+            let n2 = s + g.usize_in(0, 6);
+            let c = Cec::new(2.min(s), s);
+            let before = c.allocate(n1);
+            let after = c.allocate(n2);
+            let keep = n1.min(n2);
+            let surv: Vec<_> = (0..keep)
+                .map(|w| (w, Some((w, g.usize_in(0, s)))))
+                .chain((keep..n2).map(|w| (w, None)))
+                .collect();
+            let naive = crate::tas::transition::total_waste(&before, &after, &surv);
+            let opt = optimized_waste(&before, &after, &surv);
+            if opt > naive + 1e-9 {
+                return Err(format!("opt {opt} > naive {naive} ({n1}->{n2}, s={s})"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,185 @@
+//! Transition waste — the re-allocation cost criterion of Dau et al.
+//! (ISIT 2020, ref [10] of the paper).
+//!
+//! When an elastic event changes the available worker count from `n1` to
+//! `n2`, CEC/MLCEC re-subdivide every encoded task into `n2` subtasks and
+//! re-select: existing workers abandon work they had remaining and take on
+//! work they did not previously hold. BICEC's allocation is static, so its
+//! transition waste is identically zero.
+//!
+//! Because the subdivision granularity itself changes with `n` (the paper's
+//! formulation), we measure waste in *row-fraction units* of one worker's
+//! encoded task: each selected subtask `m` of granularity `g` covers the
+//! interval `[m/g, (m+1)/g)`. For a surviving worker,
+//!
+//!   waste = |remaining_old \ new| + |new \ remaining_old|
+//!
+//! (measure of the symmetric difference), and the total is the sum over
+//! surviving workers. At fixed granularity this reduces exactly to [10]'s
+//! subtask-count metric (divided by g).
+
+use super::Allocation;
+
+/// Selected row-intervals of one worker's task under `alloc`, skipping the
+/// first `completed` items of its list (already done, not "remaining").
+fn remaining_intervals(alloc: &Allocation, worker: usize, completed: usize) -> Vec<(f64, f64)> {
+    let g = match alloc.rule {
+        super::RecoveryRule::PerSet { sets, .. } => sets,
+        super::RecoveryRule::Global { .. } => return Vec::new(), // static lists
+    } as f64;
+    alloc.lists[worker]
+        .iter()
+        .skip(completed)
+        .map(|item| (item.group as f64 / g, (item.group + 1) as f64 / g))
+        .collect()
+}
+
+/// Measure of `a \ b` for two interval unions (each a set of disjoint
+/// [lo, hi) intervals; inputs need not be sorted).
+fn difference_measure(a: &[(f64, f64)], b: &[(f64, f64)]) -> f64 {
+    // Sweep over all boundary points.
+    let mut cuts: Vec<f64> = a
+        .iter()
+        .chain(b.iter())
+        .flat_map(|&(lo, hi)| [lo, hi])
+        .collect();
+    cuts.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    cuts.dedup();
+    let covered = |ivs: &[(f64, f64)], x: f64| ivs.iter().any(|&(lo, hi)| lo <= x && x < hi);
+    let mut total = 0.0;
+    for w in cuts.windows(2) {
+        let mid = 0.5 * (w[0] + w[1]);
+        if covered(a, mid) && !covered(b, mid) {
+            total += w[1] - w[0];
+        }
+    }
+    total
+}
+
+/// Measure of the symmetric difference (exposed for waste diagnostics).
+pub fn symmetric_difference(a: &[(f64, f64)], b: &[(f64, f64)]) -> f64 {
+    difference_measure(a, b) + difference_measure(b, a)
+}
+
+/// Transition waste of moving worker `w` (having completed `completed`
+/// items of `before.lists[w]`) to `after.lists[w_after]`, per [10]:
+///
+///   abandoned = remaining old work not in the new selection
+///   taken on  = new work the worker had not been assigned at all before
+///
+/// Units: fraction of one worker's encoded task.
+pub fn worker_waste(
+    before: &Allocation,
+    completed: usize,
+    w_before: usize,
+    after: &Allocation,
+    w_after: usize,
+) -> f64 {
+    let old_remaining = remaining_intervals(before, w_before, completed);
+    let old_full = remaining_intervals(before, w_before, 0);
+    let new = remaining_intervals(after, w_after, 0);
+    difference_measure(&old_remaining, &new) + difference_measure(&new, &old_full)
+}
+
+/// Total transition waste over surviving workers when the pool shrinks or
+/// grows from `before` to `after`. `survivors` maps each surviving worker's
+/// slot in `after` to `(slot_in_before, items_completed_before_event)`.
+/// Workers joining fresh (no `before` slot) contribute their entire new
+/// list (they must take it on anew), matching [10]'s accounting.
+pub fn total_waste(
+    before: &Allocation,
+    after: &Allocation,
+    survivors: &[(usize, Option<(usize, usize)>)],
+) -> f64 {
+    let mut total = 0.0;
+    for &(w_after, prior) in survivors {
+        match prior {
+            Some((w_before, completed)) => {
+                total += worker_waste(before, completed, w_before, after, w_after);
+            }
+            None => {
+                let new = remaining_intervals(after, w_after, 0);
+                total += new.iter().map(|&(lo, hi)| hi - lo).sum::<f64>();
+            }
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tas::{Bicec, Cec, Mlcec, Scheme};
+
+    fn survivors_identity(n: usize, completed: usize) -> Vec<(usize, Option<(usize, usize)>)> {
+        (0..n).map(|w| (w, Some((w, completed)))).collect()
+    }
+
+    #[test]
+    fn bicec_has_zero_transition_waste() {
+        let b = Bicec::new(600, 300, 8);
+        let before = b.allocate(8);
+        let after = b.allocate(6);
+        let waste = total_waste(&before, &after, &survivors_identity(6, 10));
+        assert_eq!(waste, 0.0, "BICEC must be zero-waste by construction");
+    }
+
+    #[test]
+    fn cec_shrink_produces_positive_waste() {
+        let c = Cec::new(2, 4);
+        let before = c.allocate(8);
+        let after = c.allocate(6);
+        let waste = total_waste(&before, &after, &survivors_identity(6, 0));
+        assert!(waste > 0.0, "granularity change must cost something");
+    }
+
+    #[test]
+    fn mlcec_shrink_produces_positive_waste() {
+        let m = Mlcec::new(2, 4);
+        let before = m.allocate(8);
+        let after = m.allocate(6);
+        let waste = total_waste(&before, &after, &survivors_identity(6, 0));
+        assert!(waste > 0.0);
+    }
+
+    #[test]
+    fn identical_allocations_have_zero_waste() {
+        let c = Cec::new(2, 4);
+        let a = c.allocate(8);
+        let waste = total_waste(&a, &a, &survivors_identity(8, 0));
+        assert!(waste.abs() < 1e-12);
+    }
+
+    #[test]
+    fn completed_prefix_reduces_old_side_waste() {
+        // Having completed items cannot increase waste: the remaining-old
+        // set shrinks.
+        let c = Cec::new(2, 4);
+        let before = c.allocate(8);
+        let after = c.allocate(6);
+        let w0 = total_waste(&before, &after, &survivors_identity(6, 0));
+        let w2 = total_waste(&before, &after, &survivors_identity(6, 2));
+        assert!(w2 <= w0 + 1e-12, "completed work must not add waste ({w2} > {w0})");
+    }
+
+    #[test]
+    fn joining_worker_counts_full_new_list() {
+        let c = Cec::new(2, 4);
+        let before = c.allocate(4);
+        let after = c.allocate(6);
+        // Workers 0..4 survive; 4 and 5 join fresh.
+        let mut survivors = survivors_identity(4, 0);
+        survivors.push((4, None));
+        survivors.push((5, None));
+        let waste = total_waste(&before, &after, &survivors);
+        // Each fresh worker takes on S=4 subtasks of measure 1/6 each.
+        assert!(waste >= 2.0 * 4.0 / 6.0 - 1e-9);
+    }
+
+    #[test]
+    fn symmetric_difference_basics() {
+        assert!((symmetric_difference(&[(0.0, 0.5)], &[(0.0, 0.5)])).abs() < 1e-12);
+        assert!((symmetric_difference(&[(0.0, 0.5)], &[(0.5, 1.0)]) - 1.0).abs() < 1e-12);
+        assert!((symmetric_difference(&[(0.0, 0.75)], &[(0.25, 1.0)]) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,67 @@
+//! Workload definitions and generators.
+
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// A matrix-product job `A (u x w) @ B (w x v)` — the paper's computation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JobSpec {
+    pub u: usize,
+    pub w: usize,
+    pub v: usize,
+}
+
+impl JobSpec {
+    pub const fn new(u: usize, w: usize, v: usize) -> Self {
+        Self { u, w, v }
+    }
+
+    /// Fig. 2a/2c workload: square 2400^3.
+    pub const fn paper_square() -> Self {
+        Self::new(2400, 2400, 2400)
+    }
+
+    /// Fig. 2b/2d workload: tall A x fat B, same uwv.
+    pub const fn paper_tall_fat() -> Self {
+        Self::new(2400, 960, 6000)
+    }
+
+    /// End-to-end driver workload (real PJRT execution).
+    pub const fn end_to_end() -> Self {
+        Self::new(240, 240, 240)
+    }
+
+    /// Total multiply-add count.
+    pub fn ops(&self) -> u64 {
+        crate::codes::cost::job_ops(self.u, self.w, self.v)
+    }
+
+    /// Materialise random operands (for real-execution modes).
+    pub fn generate<R: Rng>(&self, rng: &mut R) -> (Matrix, Matrix) {
+        (
+            Matrix::random(self.u, self.w, rng),
+            Matrix::random(self.w, self.v, rng),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::default_rng;
+
+    #[test]
+    fn paper_workloads_share_op_count() {
+        assert_eq!(JobSpec::paper_square().ops(), JobSpec::paper_tall_fat().ops());
+        assert_eq!(JobSpec::paper_square().ops(), 2400u64.pow(3));
+    }
+
+    #[test]
+    fn generate_shapes() {
+        let mut rng = default_rng(1);
+        let spec = JobSpec::new(6, 4, 10);
+        let (a, b) = spec.generate(&mut rng);
+        assert_eq!((a.rows(), a.cols()), (6, 4));
+        assert_eq!((b.rows(), b.cols()), (4, 10));
+    }
+}

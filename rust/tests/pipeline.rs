@@ -1,0 +1,174 @@
+//! Cross-module integration: full coded pipeline on the native backend,
+//! simulator cross-checks, trace/config file round trips.
+
+use hcec::config::ExperimentConfig;
+use hcec::coordinator::{run_job, ExecBackend, JobConfig, SchemeConfig};
+use hcec::rng::default_rng;
+use hcec::sim::{
+    simulate_static, simulate_trace, CostModel, ElasticTrace, SpeedModel, WorkerSpeeds,
+};
+use hcec::tas::{Bicec, Cec, DLevelPolicy, Mlcec, Scheme};
+use hcec::workload::JobSpec;
+
+fn native_cfg(scheme: SchemeConfig) -> JobConfig {
+    JobConfig {
+        job: JobSpec::new(120, 64, 48),
+        scheme,
+        n_workers: 10,
+        n_max: 10,
+        backend: ExecBackend::Native,
+        speed_model: Some(SpeedModel::BernoulliSlowdown { p: 0.5, slowdown: 3.0, jitter: 0.05 }),
+        preempt_after_first: 0,
+        seed: 11,
+    }
+}
+
+#[test]
+fn full_pipeline_all_schemes_with_stragglers() {
+    let schemes = [
+        SchemeConfig::Cec { k: 6, s: 8 },
+        SchemeConfig::Mlcec { k: 6, s: 8, policy: DLevelPolicy::LinearRamp },
+        SchemeConfig::Bicec { k: 24, s_per_worker: 4 },
+    ];
+    for scheme in schemes {
+        let report = run_job(&native_cfg(scheme)).unwrap();
+        assert!(report.recovered, "{} failed to recover", report.scheme);
+        assert!(
+            report.max_rel_err < 1e-2,
+            "{}: rel err {}",
+            report.scheme,
+            report.max_rel_err
+        );
+        assert!(report.completions_received >= report.completions_used / 2);
+    }
+}
+
+#[test]
+fn pipeline_with_preemption_all_schemes() {
+    for scheme in [
+        SchemeConfig::Cec { k: 6, s: 10 }, // extra slack so preemption survives
+        SchemeConfig::Bicec { k: 24, s_per_worker: 4 },
+    ] {
+        let mut cfg = native_cfg(scheme);
+        cfg.preempt_after_first = 2;
+        let report = run_job(&cfg).unwrap();
+        assert!(report.recovered);
+        // Preemption is best-effort before recovery: at small job sizes the
+        // run may finish before both targeted slots deliver a first result.
+        assert!(report.workers_preempted <= 2);
+        assert!(report.max_rel_err < 1e-2);
+    }
+}
+
+#[test]
+fn static_trace_and_static_sim_agree_for_all_schemes() {
+    // The elastic simulator with an empty trace must match the
+    // order-statistics fast path exactly.
+    let job = JobSpec::new(240, 240, 240);
+    let cost = CostModel::paper_default();
+    let mut rng = default_rng(5);
+    let speeds = WorkerSpeeds::sample(&SpeedModel::paper_default(), 8, &mut rng);
+    let schemes: Vec<Box<dyn Scheme>> = vec![
+        Box::new(Cec::new(2, 4)),
+        Box::new(Mlcec::new(2, 4)),
+        Box::new(Bicec::new(600, 300, 8)),
+    ];
+    for s in &schemes {
+        let st = simulate_static(s.as_ref(), 8, job, &cost, &speeds);
+        let tr = simulate_trace(
+            s.as_ref(),
+            &ElasticTrace::static_n(8, 8),
+            job,
+            &cost,
+            &speeds,
+        )
+        .unwrap();
+        let rel = (st.computation_time - tr.computation_time).abs() / st.computation_time;
+        assert!(rel < 1e-9, "{}: static {} vs trace {}", s.name(), st.computation_time, tr.computation_time);
+    }
+}
+
+#[test]
+fn elastic_more_workers_never_hurts_bicec() {
+    // Monotonicity: a join-only trace must not be slower than no trace.
+    let job = JobSpec::new(240, 240, 240);
+    let cost = CostModel::paper_default();
+    let scheme = Bicec::new(600, 300, 8);
+    let speeds = WorkerSpeeds::uniform(8);
+    let base = simulate_trace(&scheme, &ElasticTrace::static_n(8, 4), job, &cost, &speeds)
+        .unwrap()
+        .computation_time;
+    let tau = cost.worker_time(scheme.subtask_ops(240, 240, 240, 8), 1.0);
+    let mut trace = ElasticTrace::static_n(8, 4);
+    for (i, slot) in (4..8).enumerate() {
+        trace.events.push(hcec::sim::ElasticEvent {
+            time: (i as f64 + 1.0) * tau,
+            kind: hcec::sim::EventKind::Join(slot),
+        });
+    }
+    let joined = simulate_trace(&scheme, &trace, job, &cost, &speeds)
+        .unwrap()
+        .computation_time;
+    assert!(joined <= base + 1e-12, "joins must help: {joined} vs {base}");
+}
+
+#[test]
+fn trace_file_round_trip_via_disk() {
+    let mut rng = default_rng(1);
+    let trace = ElasticTrace::poisson(8, 4, 6, 0.5, 50.0, &mut rng);
+    let path = std::env::temp_dir().join("hcec_trace_test.txt");
+    std::fs::write(&path, trace.to_text()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let back = ElasticTrace::from_text(&text).unwrap();
+    assert_eq!(back.events.len(), trace.events.len());
+    assert_eq!(back.n_initial, 6);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn config_file_round_trip_via_disk() {
+    let path = std::env::temp_dir().join("hcec_config_test.toml");
+    std::fs::write(
+        &path,
+        "[job]\nu = 1200\nw = 480\nv = 3000\n[run]\ntrials = 5\nseed = 99\n\
+         [straggler]\nslowdown = 6.0\n[grid]\nns = [20, 30, 40]\n",
+    )
+    .unwrap();
+    let cfg = ExperimentConfig::from_file(path.to_str().unwrap()).unwrap();
+    assert_eq!(cfg.job, JobSpec::new(1200, 480, 3000));
+    assert_eq!(cfg.trials, 5);
+    assert_eq!(cfg.seed, 99);
+    assert_eq!(cfg.slowdown, 6.0);
+    assert_eq!(cfg.ns, vec![20, 30, 40]);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn figure_conclusions_hold_at_integration_scale() {
+    // A fast (trials = 4) end-to-end run of the figure engine, asserting
+    // the paper's cross-figure conclusions jointly.
+    let cfg = ExperimentConfig { trials: 4, ns: vec![24, 40], ..Default::default() };
+    let cost = cfg.cost_model();
+    let mut rng = default_rng(cfg.seed);
+    let (cec, mlcec, bicec) =
+        (Cec::new(10, 20), Mlcec::new(10, 20), Bicec::new(800, 80, 40));
+    let mut cec_fin = 0.0;
+    let mut mlcec_fin = 0.0;
+    let mut bicec_fin = 0.0;
+    let mut bicec_fin_tf = 0.0;
+    let mut mlcec_fin_tf = 0.0;
+    for _ in 0..cfg.trials {
+        let sp = WorkerSpeeds::sample(&cfg.speed_model(), 40, &mut rng);
+        let sq = JobSpec::paper_square();
+        let tf = JobSpec::paper_tall_fat();
+        cec_fin += simulate_static(&cec, 40, sq, &cost, &sp).finishing_time();
+        mlcec_fin += simulate_static(&mlcec, 40, sq, &cost, &sp).finishing_time();
+        bicec_fin += simulate_static(&bicec, 40, sq, &cost, &sp).finishing_time();
+        mlcec_fin_tf += simulate_static(&mlcec, 40, tf, &cost, &sp).finishing_time();
+        bicec_fin_tf += simulate_static(&bicec, 40, tf, &cost, &sp).finishing_time();
+    }
+    // Fig 2c: BICEC best on square.
+    assert!(bicec_fin < cec_fin && bicec_fin < mlcec_fin);
+    // Fig 2d: MLCEC beats BICEC on tall x fat at N = 40.
+    assert!(mlcec_fin_tf < bicec_fin_tf);
+}
