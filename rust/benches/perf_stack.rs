@@ -1,16 +1,24 @@
-//! §Perf — whole-stack micro-benchmarks (EXPERIMENTS.md §Perf records the
-//! before/after of the optimisation pass against these numbers).
+//! §Perf — whole-stack micro-benchmarks. Before/after numbers for each
+//! optimisation pass are recorded in rust/EXPERIMENTS.md §Perf, and every
+//! run emits machine-readable `BENCH_perf_stack.json` (repo root, override
+//! with `HCEC_BENCH_JSON`) so the perf trajectory is tracked across PRs.
 //!
-//! L3 targets (DESIGN.md §8): DES >= 1e6 subtask-events/s; allocation-free
-//! event hot loop; decode dominated by the K·u·v combine, not the K x K
-//! solve; PJRT execute latency small vs a 240-scale subtask.
+//! L3 targets (rust/EXPERIMENTS.md §Perf-targets): DES >= 1e6
+//! subtask-events/s; allocation-free event hot loop; decode dominated by
+//! the K·u·v combine, not the K x K solve; PJRT execute latency small vs a
+//! 240-scale subtask.
+//!
+//! CI smoke: `HCEC_BENCH_QUICK=1` shrinks the sampling windows ~20x.
 
-use hcec::bench::{header, Bench, BenchResult};
+use hcec::bench::{header, Bench, BenchResult, JsonReport};
 use hcec::codes::RealMdsCode;
-use hcec::linalg::{gemm, gemm_naive, Matrix};
-use hcec::rng::default_rng;
+use hcec::linalg::{gemm, gemm_naive, gemm_single_thread, Matrix};
+use hcec::rng::{default_rng, Rng};
 use hcec::runtime::{artifacts_available, default_artifact_dir, Runtime};
-use hcec::sim::{simulate_static, simulate_trace, CostModel, ElasticTrace, SpeedModel, WorkerSpeeds};
+use hcec::sim::{
+    simulate_many, simulate_static, CostModel, ElasticTrace, SpeedModel, TraceSimulator,
+    WorkerSpeeds,
+};
 use hcec::tas::{Bicec, Cec, Mlcec, Scheme};
 use hcec::workload::JobSpec;
 
@@ -20,6 +28,7 @@ fn events_per_sec(r: &BenchResult, events: f64) -> f64 {
 
 fn main() {
     header("perf_stack");
+    let mut report = JsonReport::new("perf_stack");
     let cost = CostModel::paper_default();
     let job = JobSpec::paper_square();
     let mut rng = default_rng(3);
@@ -33,11 +42,28 @@ fn main() {
     let r = Bench::new("simulate_static cec n40").run(|| simulate_static(&cec, 40, job, &cost, &speeds));
     r.print();
     println!("    -> {:.2e} subtask-events/s (target >= 1e6)", events_per_sec(&r, 800.0));
+    report.push(&r, &[("subtask_events_per_sec", events_per_sec(&r, 800.0))]);
     let r = Bench::new("simulate_static mlcec n40").run(|| simulate_static(&mlcec, 40, job, &cost, &speeds));
     r.print();
+    report.push(&r, &[("subtask_events_per_sec", events_per_sec(&r, 800.0))]);
     let r = Bench::new("simulate_static bicec n40").run(|| simulate_static(&bicec, 40, job, &cost, &speeds));
     r.print();
     println!("    -> {:.2e} subtask-events/s", events_per_sec(&r, 3200.0));
+    report.push(&r, &[("subtask_events_per_sec", events_per_sec(&r, 3200.0))]);
+
+    // Batch driver: allocation + scratch amortised across a 32-trial sweep
+    // (the Monte-Carlo shape every figure actually runs).
+    let sweep: Vec<WorkerSpeeds> = (0..32)
+        .map(|_| WorkerSpeeds::sample(&SpeedModel::paper_default(), 40, &mut rng))
+        .collect();
+    let r = Bench::new("simulate_many bicec n40 x32")
+        .run(|| simulate_many(&bicec, 40, job, &cost, &sweep));
+    r.print();
+    println!(
+        "    -> {:.2e} subtask-events/s (amortised)",
+        events_per_sec(&r, 32.0 * 3200.0)
+    );
+    report.push(&r, &[("subtask_events_per_sec", events_per_sec(&r, 32.0 * 3200.0))]);
 
     println!("\n-- L3: elastic simulator (interval tracking) --");
     let small_job = JobSpec::new(240, 240, 240);
@@ -45,27 +71,50 @@ fn main() {
     let tau = cost.worker_time(small_job.ops() / 16, 1.0);
     let trace = ElasticTrace::fig1(1.5 * tau, 3.0 * tau);
     let cec_small = Cec::new(2, 4);
-    Bench::new("simulate_trace cec fig1")
-        .run(|| simulate_trace(&cec_small, &trace, small_job, &cost, &speeds8).unwrap())
-        .print();
+    let r = Bench::new("simulate_trace cec fig1")
+        .run(|| hcec::sim::simulate_trace(&cec_small, &trace, small_job, &cost, &speeds8).unwrap());
+    r.print();
+    report.push(&r, &[]);
+    // Reused simulator: the allocation-free steady state.
+    let mut tsim = TraceSimulator::new(&cec_small);
+    let r = Bench::new("simulate_trace cec fig1 (reused sim)").run(|| {
+        tsim.run(&trace, small_job, &cost, &speeds8, hcec::sim::Reassign::Identity).unwrap()
+    });
+    r.print();
+    report.push(&r, &[]);
 
     println!("\n-- L3: allocation (runs at every elastic event) --");
-    Bench::new("mlcec allocate n40").run(|| mlcec.allocate(40)).print();
+    let r = Bench::new("mlcec allocate n40").run(|| mlcec.allocate(40));
+    r.print();
+    report.push(&r, &[]);
 
     println!("\n-- master decode: combine vs inverse split --");
     let code = RealMdsCode::new(12, 10);
     let data: Vec<Matrix> = (0..10).map(|_| Matrix::random(24, 240, &mut rng)).collect();
     let coded = code.encode(&data);
     let completed: Vec<(usize, &Matrix)> = (2..12).map(|i| (i, &coded[i])).collect();
-    let r_dec = Bench::new("decode k10 (inverse + combine)").run(|| code.decode(&completed).unwrap());
+    // Share metric measured on the cache-DISABLED code so both timings
+    // cover the same pipeline (inverse + combine vs inverse only); the
+    // cached decode is reported separately to show the LRU amortisation.
+    let uncached = code.clone().with_inverse_cache_capacity(0);
+    let r_dec = Bench::new("decode k10 (fresh inv + combine)").run(|| uncached.decode(&completed).unwrap());
     r_dec.print();
+    report.push(&r_dec, &[]);
     let subset: Vec<usize> = (2..12).collect();
-    let r_inv = Bench::new("inverse only").run(|| code.decode_coeffs_f32(&subset).unwrap());
+    let r_inv = Bench::new("inverse only (fresh)").run(|| uncached.decode_coeffs_f32(&subset).unwrap());
     r_inv.print();
     println!(
         "    -> combine share of decode: {:.1}% (target: dominant)",
         100.0 * (1.0 - r_inv.summary.mean / r_dec.summary.mean)
     );
+    report.push(&r_inv, &[]);
+    let r_hot = Bench::new("decode k10 (LRU-cached inv)").run(|| code.decode(&completed).unwrap());
+    r_hot.print();
+    println!(
+        "    -> cached decode at {:.1}% of fresh (inverse amortised by the LRU)",
+        100.0 * r_hot.summary.mean / r_dec.summary.mean
+    );
+    report.push(&r_hot, &[]);
 
     println!("\n-- worker hot path: native gemm --");
     let a = Matrix::random(2, 240, &mut rng);
@@ -73,12 +122,33 @@ fn main() {
     let r = Bench::new("gemm blocked 2x240x240").run(|| gemm(&a, &b));
     r.print();
     println!("    -> {:.2} Gmac/s", 2.0 * 240.0 * 240.0 / r.summary.mean / 1e9);
+    report.push(&r, &[("gmacs", 2.0 * 240.0 * 240.0 / r.summary.mean / 1e9)]);
     let r = Bench::new("gemm naive   2x240x240").run(|| gemm_naive(&a, &b));
     r.print();
+    report.push(&r, &[]);
     let a2 = Matrix::random(240, 240, &mut rng);
     let r = Bench::new("gemm blocked 240x240x240").run(|| gemm(&a2, &b));
     r.print();
-    println!("    -> {:.2} Gmac/s", 240.0f64.powi(3) / r.summary.mean / 1e9);
+    println!("    -> {:.2} Gmac/s (parallel)", 240.0f64.powi(3) / r.summary.mean / 1e9);
+    report.push(&r, &[("gmacs", 240.0f64.powi(3) / r.summary.mean / 1e9)]);
+    let r = Bench::new("gemm 1-thread 240x240x240").run(|| gemm_single_thread(&a2, &b));
+    r.print();
+    println!("    -> {:.2} Gmac/s (micro-kernel only)", 240.0f64.powi(3) / r.summary.mean / 1e9);
+    report.push(&r, &[("gmacs", 240.0f64.powi(3) / r.summary.mean / 1e9)]);
+
+    println!("\n-- exact codec: bulk GF(2^16) kernels --");
+    let rs = hcec::codes::RsCode::new(3200, 800).unwrap();
+    let stream = 64usize;
+    let gf_data: Vec<Vec<hcec::codes::Gf16>> = (0..stream)
+        .map(|_| (0..800).map(|_| hcec::codes::Gf16(rng.next_u64() as u16)).collect())
+        .collect();
+    let r = Bench::new("rs encode_share k800 x64").run(|| rs.encode_share(&gf_data, 17));
+    r.print();
+    println!(
+        "    -> {:.2e} symbol-MACs/s",
+        800.0 * stream as f64 / r.summary.mean
+    );
+    report.push(&r, &[("symbol_macs_per_sec", 800.0 * stream as f64 / r.summary.mean)]);
 
     if artifacts_available() {
         println!("\n-- PJRT execute latency (compiled-once artifacts) --");
@@ -88,6 +158,14 @@ fn main() {
         let _ = rt.matmul("direct_mm_240x240x240", &a2, &b);
         Bench::new("pjrt direct_mm_240x240x240").run(|| rt.matmul("direct_mm_240x240x240", &a2, &b).unwrap()).print();
     } else {
-        println!("\n(skipping PJRT latency: run `make artifacts`)");
+        println!("\n(skipping PJRT latency: run `make artifacts` and build with --features pjrt)");
+    }
+
+    let json_path = std::env::var("HCEC_BENCH_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf_stack.json").to_string()
+    });
+    match report.write(&json_path) {
+        Ok(()) => println!("\nwrote {json_path}"),
+        Err(e) => eprintln!("\ncould not write {json_path}: {e}"),
     }
 }

@@ -1,12 +1,23 @@
 //! Micro-benchmark harness (criterion is not in the vendored crate set).
 //!
 //! Used by the `rust/benches/*.rs` targets (`harness = false`): warmup,
-//! fixed-duration sampling, and a stats line compatible with eyeballing and
-//! with the §Perf records in EXPERIMENTS.md.
+//! fixed-duration sampling, a stats line compatible with eyeballing and
+//! with the §Perf records in rust/EXPERIMENTS.md, and a machine-readable
+//! JSON emitter (`JsonReport`) so the perf trajectory is tracked as
+//! `BENCH_<target>.json` from PR 1 onward.
+//!
+//! Set `HCEC_BENCH_QUICK=1` for CI smoke runs: warmup/measure windows
+//! shrink ~20x so every target finishes in seconds (numbers are then noisy
+//! and must not be recorded as baselines).
 
 use std::time::{Duration, Instant};
 
 use crate::metrics::Summary;
+
+/// True when the CI smoke mode is requested via `HCEC_BENCH_QUICK`.
+pub fn quick_mode() -> bool {
+    std::env::var("HCEC_BENCH_QUICK").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
 
 /// One benchmark case.
 pub struct Bench {
@@ -19,10 +30,11 @@ pub struct Bench {
 
 impl Bench {
     pub fn new(name: impl Into<String>) -> Self {
+        let (warmup_ms, measure_ms) = if quick_mode() { (10, 40) } else { (200, 800) };
         Self {
             name: name.into(),
-            warmup: Duration::from_millis(200),
-            measure: Duration::from_millis(800),
+            warmup: Duration::from_millis(warmup_ms),
+            measure: Duration::from_millis(measure_ms),
             min_samples: 10,
             max_samples: 10_000,
         }
@@ -94,6 +106,83 @@ pub fn header(target: &str) {
     println!("=== hcec bench: {target} ===");
 }
 
+/// Render an f64 as a JSON number token (`null` for non-finite values).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Machine-readable results for one bench target. Each entry carries the
+/// timing summary plus any derived throughput metrics the target computes
+/// (events/s, Gmac/s, ...). Serialised by hand — no serde in the offline
+/// crate set.
+pub struct JsonReport {
+    target: String,
+    quick: bool,
+    entries: Vec<String>,
+}
+
+impl JsonReport {
+    pub fn new(target: impl Into<String>) -> Self {
+        Self { target: target.into(), quick: quick_mode(), entries: Vec::new() }
+    }
+
+    /// Record a result with optional named derived metrics.
+    pub fn push(&mut self, r: &BenchResult, metrics: &[(&str, f64)]) {
+        let mut obj = format!(
+            "{{\"name\": {}, \"mean_s\": {}, \"p50_s\": {}, \"p95_s\": {}, \"samples\": {}",
+            json_str(&r.name),
+            json_num(r.summary.mean),
+            json_num(r.summary.p50),
+            json_num(r.summary.p95),
+            r.summary.n
+        );
+        for (key, value) in metrics {
+            obj.push_str(&format!(", {}: {}", json_str(key), json_num(*value)));
+        }
+        obj.push('}');
+        self.entries.push(obj);
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"target\": {},\n", json_str(&self.target)));
+        out.push_str(&format!("  \"quick_mode\": {},\n", self.quick));
+        out.push_str("  \"results\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            let sep = if i + 1 < self.entries.len() { "," } else { "" };
+            out.push_str(&format!("    {e}{sep}\n"));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write `BENCH_<target>.json` at `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,6 +206,25 @@ mod tests {
             .samples(1, 20)
             .run(|| ());
         assert!(r.summary.n <= 20);
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let r = Bench::new("case \"a\"")
+            .warmup(Duration::from_millis(1))
+            .measure(Duration::from_millis(5))
+            .run(|| 1 + 1);
+        let mut rep = JsonReport::new("unit");
+        rep.push(&r, &[("events_per_sec", 1.5e6), ("bogus", f64::NAN)]);
+        let json = rep.to_json();
+        assert!(json.contains("\"target\": \"unit\""), "{json}");
+        assert!(json.contains("\"case \\\"a\\\"\""), "{json}");
+        assert!(json.contains("\"events_per_sec\": 1.5e6"), "{json}");
+        assert!(json.contains("\"bogus\": null"), "{json}");
+        assert!(json.contains("\"mean_s\": "), "{json}");
+        // Balanced braces/brackets as a cheap well-formedness check.
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
     }
 
     #[test]

@@ -1,0 +1,98 @@
+//! Small LRU of inverted decode matrices, shared by the exact (GF) and
+//! real-valued codecs. Keyed by the ordered survivor-index subset: the
+//! master decodes many symbol streams / Monte-Carlo trials against the
+//! same completed worker set, and re-running the O(k³) inversion per
+//! decode would dominate at BICEC's k = 800.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+#[derive(Debug)]
+pub(crate) struct LruCache<V> {
+    capacity: usize,
+    /// Monotone access stamp for least-recently-used eviction.
+    stamp: u64,
+    entries: HashMap<Vec<usize>, (u64, Arc<V>)>,
+    hits: u64,
+    misses: u64,
+}
+
+impl<V> LruCache<V> {
+    pub fn new(capacity: usize) -> Self {
+        Self { capacity, stamp: 0, entries: HashMap::new(), hits: 0, misses: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    pub fn get(&mut self, key: &[usize]) -> Option<Arc<V>> {
+        self.stamp += 1;
+        let stamp = self.stamp;
+        match self.entries.get_mut(key) {
+            Some((last, value)) => {
+                *last = stamp;
+                self.hits += 1;
+                Some(value.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn insert(&mut self, key: Vec<usize>, value: Arc<V>) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.stamp += 1;
+        self.entries.insert(key, (self.stamp, value));
+        while self.entries.len() > self.capacity {
+            let oldest = self
+                .entries
+                .iter()
+                .min_by_key(|(_, (t, _))| *t)
+                .map(|(k, _)| k.clone())
+                .expect("nonempty while over capacity");
+            self.entries.remove(&oldest);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c: LruCache<u32> = LruCache::new(2);
+        c.insert(vec![1], Arc::new(10));
+        c.insert(vec![2], Arc::new(20));
+        assert!(c.get(&[1]).is_some()); // refresh 1
+        c.insert(vec![3], Arc::new(30)); // evicts 2
+        assert!(c.get(&[2]).is_none());
+        assert!(c.get(&[1]).is_some());
+        assert!(c.get(&[3]).is_some());
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn capacity_zero_never_stores() {
+        let mut c: LruCache<u32> = LruCache::new(0);
+        c.insert(vec![1], Arc::new(10));
+        assert!(c.get(&[1]).is_none());
+        assert_eq!(c.len(), 0);
+        let (hits, misses) = c.stats();
+        assert_eq!(hits, 0);
+        assert_eq!(misses, 1);
+    }
+}

@@ -17,9 +17,12 @@
 //! * `integer_points`: the paper's literal `Â_n = A_1 + n·A_2` construction —
 //!   subset condition up to 1e21; decodes are *always* rejected at K = 10.
 
-use crate::linalg::{LuFactors, Matrix};
+use std::sync::{Arc, Mutex};
+
+use crate::linalg::{combine, LuFactors, Matrix};
 use crate::rng::{default_rng, Rng};
 
+use super::cache::LruCache;
 use super::Vandermonde;
 
 #[derive(Debug)]
@@ -49,9 +52,13 @@ impl std::fmt::Display for DecodeError {
 
 impl std::error::Error for DecodeError {}
 
+/// Inverted decode matrices kept per code (each is k² f64 plus its
+/// measured condition estimate).
+const DEFAULT_INVERSE_CACHE: usize = 8;
+
 /// Real MDS code: any `k` of the `n` encoded blocks recover the `k` data
 /// blocks (subject to the conditioning guard).
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct RealMdsCode {
     n: usize,
     k: usize,
@@ -59,9 +66,36 @@ pub struct RealMdsCode {
     gen: Vec<f64>,
     /// Reject decodes whose inf-norm condition estimate exceeds this.
     cond_limit: f64,
+    /// Memoised `(inverse, cond)` per survivor subset. The cond is stored
+    /// alongside so a cached entry is re-validated against the *current*
+    /// `cond_limit` on every hit.
+    inverse_cache: Mutex<LruCache<(Vec<f64>, f64)>>,
+}
+
+impl Clone for RealMdsCode {
+    fn clone(&self) -> Self {
+        let capacity = self.inverse_cache.lock().expect("mds cache lock").capacity();
+        Self {
+            n: self.n,
+            k: self.k,
+            gen: self.gen.clone(),
+            cond_limit: self.cond_limit,
+            inverse_cache: Mutex::new(LruCache::new(capacity)),
+        }
+    }
 }
 
 impl RealMdsCode {
+    fn from_gen(n: usize, k: usize, gen: Vec<f64>) -> Self {
+        Self {
+            n,
+            k,
+            gen,
+            cond_limit: 1e7,
+            inverse_cache: Mutex::new(LruCache::new(DEFAULT_INVERSE_CACHE)),
+        }
+    }
+
     /// Default: seeded Gaussian generator (seed fixed for artifact
     /// reproducibility across master and workers).
     pub fn new(n: usize, k: usize) -> Self {
@@ -75,7 +109,7 @@ impl RealMdsCode {
         let gen = (0..n * k)
             .map(|_| (0..12).map(|_| rng.next_f64()).sum::<f64>() - 6.0)
             .collect();
-        Self { n, k, gen, cond_limit: 1e7 }
+        Self::from_gen(n, k, gen)
     }
 
     /// Chebyshev-point Vandermonde (polynomial-code ablation).
@@ -85,7 +119,7 @@ impl RealMdsCode {
         for i in 0..n {
             gen.extend_from_slice(v.row(i));
         }
-        Self { n, k, gen, cond_limit: 1e7 }
+        Self::from_gen(n, k, gen)
     }
 
     /// Systematic variant: the first `k` coded blocks are the data blocks
@@ -109,12 +143,24 @@ impl RealMdsCode {
         for i in 0..n {
             gen.extend_from_slice(v.row(i));
         }
-        Self { n, k, gen, cond_limit: 1e7 }
+        Self::from_gen(n, k, gen)
     }
 
     pub fn with_cond_limit(mut self, limit: f64) -> Self {
         self.cond_limit = limit;
         self
+    }
+
+    /// Override the decode-inverse LRU capacity (0 disables caching —
+    /// every decode re-runs the LU factorisation, the reference path).
+    pub fn with_inverse_cache_capacity(self, capacity: usize) -> Self {
+        *self.inverse_cache.lock().expect("mds cache lock") = LruCache::new(capacity);
+        self
+    }
+
+    /// (hits, misses) of the decode-inverse cache since construction.
+    pub fn inverse_cache_stats(&self) -> (u64, u64) {
+        self.inverse_cache.lock().expect("mds cache lock").stats()
     }
 
     pub fn n(&self) -> usize {
@@ -157,8 +203,11 @@ impl RealMdsCode {
     }
 
     /// Inverse of the k x k decode submatrix for `subset`, with an inf-norm
-    /// condition check (‖A‖_∞ · ‖A⁻¹‖_∞).
-    fn checked_inverse(&self, subset: &[usize]) -> Result<Vec<f64>, DecodeError> {
+    /// condition check (‖A‖_∞ · ‖A⁻¹‖_∞). Served from the per-code LRU when
+    /// the same survivor subset was inverted before; the condition estimate
+    /// travels with the cached inverse and is re-checked against the
+    /// current limit on every hit, so caching never widens acceptance.
+    fn checked_inverse(&self, subset: &[usize]) -> Result<Arc<(Vec<f64>, f64)>, DecodeError> {
         if subset.len() != self.k {
             return Err(DecodeError::NotEnough { have: subset.len(), need: self.k });
         }
@@ -171,6 +220,29 @@ impl RealMdsCode {
                 }
             }
         }
+        let cached = self.inverse_cache.lock().expect("mds cache lock").get(subset);
+        let entry = match cached {
+            Some(entry) => entry,
+            None => {
+                // Factor outside the lock: the O(k³) solve must not
+                // serialise concurrent decodes of different subsets.
+                let entry = Arc::new(self.invert_subset_fresh(subset)?);
+                self.inverse_cache
+                    .lock()
+                    .expect("mds cache lock")
+                    .insert(subset.to_vec(), entry.clone());
+                entry
+            }
+        };
+        let cond = entry.1;
+        if cond > self.cond_limit {
+            return Err(DecodeError::IllConditioned { cond, limit: self.cond_limit });
+        }
+        Ok(entry)
+    }
+
+    /// Uncached inversion + condition estimate (the reference solve path).
+    fn invert_subset_fresh(&self, subset: &[usize]) -> Result<(Vec<f64>, f64), DecodeError> {
         let k = self.k;
         let mut sub = Vec::with_capacity(k * k);
         for &r in subset {
@@ -184,10 +256,7 @@ impl RealMdsCode {
                 .fold(0.0, f64::max)
         };
         let cond = norm_inf(&sub) * norm_inf(&inv);
-        if cond > self.cond_limit {
-            return Err(DecodeError::IllConditioned { cond, limit: self.cond_limit });
-        }
-        Ok(inv)
+        Ok((inv, cond))
     }
 
     /// Decode the `k` data blocks from completed coded blocks.
@@ -215,15 +284,22 @@ impl RealMdsCode {
             }
             return Ok(out);
         }
-        let inv = self.checked_inverse(&subset)?;
+        let entry = self.checked_inverse(&subset)?;
+        let inv = &entry.0;
 
-        // out[j] = Σ_l inv[j][l] · used[l]  — the coded_combine contraction.
-        let mut out = vec![Matrix::zeros(r, c); k];
-        for (j, block) in out.iter_mut().enumerate() {
-            for (l, (_, y)) in used.iter().enumerate() {
-                block.axpy(inv[j * k + l] as f32, y);
-            }
-        }
+        // out[j] = Σ_l inv[j][l] · used[l] — the coded_combine contraction,
+        // fused row-wise (linalg::combine) so each output block is built in
+        // one pass instead of k whole-matrix axpy sweeps.
+        let blocks: Vec<&Matrix> = used.iter().map(|(_, y)| *y).collect();
+        let mut coeffs = vec![0.0f32; k];
+        let out = (0..k)
+            .map(|j| {
+                for (l, c) in coeffs.iter_mut().enumerate() {
+                    *c = inv[j * k + l] as f32;
+                }
+                combine(&coeffs, &blocks)
+            })
+            .collect();
         Ok(out)
     }
 
@@ -249,8 +325,9 @@ impl RealMdsCode {
     pub fn decode_coeffs_f32(&self, subset: &[usize]) -> Result<Vec<f32>, DecodeError> {
         Ok(self
             .checked_inverse(subset)?
-            .into_iter()
-            .map(|v| v as f32)
+            .0
+            .iter()
+            .map(|&v| v as f32)
             .collect())
     }
 }
@@ -412,6 +489,79 @@ mod tests {
         let decoded = code.decode(&completed).unwrap();
         for (d, want) in decoded.iter().zip(&data) {
             assert!(d.max_abs_diff(want) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn prop_cached_inverse_decode_equals_fresh_solve() {
+        // The inverse LRU must be semantically invisible across random
+        // survivor subsets; a cache-disabled clone is the reference.
+        let cached = RealMdsCode::new(24, 6);
+        let fresh = cached.clone().with_inverse_cache_capacity(0);
+        let data = random_blocks(6, 3, 5, 21);
+        let coded = cached.encode(&data);
+        prop::check(30, |g| {
+            let mut rows: Vec<usize> = (0..24).collect();
+            g.shuffle(&mut rows);
+            let subset: Vec<usize> = rows.into_iter().take(6).collect();
+            let completed: Vec<(usize, &Matrix)> =
+                subset.iter().map(|&i| (i, &coded[i])).collect();
+            // Twice on the caching code: the second decode is an LRU hit.
+            let warm = cached.decode(&completed).map_err(|e| e.to_string())?;
+            let hit = cached.decode(&completed).map_err(|e| e.to_string())?;
+            let reference = fresh.decode(&completed).map_err(|e| e.to_string())?;
+            for j in 0..6 {
+                if warm[j].max_abs_diff(&reference[j]) != 0.0
+                    || hit[j].max_abs_diff(&reference[j]) != 0.0
+                {
+                    return Err(format!("cached decode diverged at block {j}"));
+                }
+            }
+            Ok(())
+        });
+        let (hits, _) = cached.inverse_cache_stats();
+        assert!(hits > 0, "repeat decodes must hit the cache");
+        let (fresh_hits, _) = fresh.inverse_cache_stats();
+        assert_eq!(fresh_hits, 0, "capacity-0 cache can never hit");
+    }
+
+    #[test]
+    fn cache_eviction_never_changes_results() {
+        let code = RealMdsCode::new(12, 3).with_inverse_cache_capacity(2);
+        let reference = code.clone().with_inverse_cache_capacity(0);
+        let data = random_blocks(3, 2, 4, 22);
+        let coded = code.encode(&data);
+        // 5 subsets cycled twice through a capacity-2 cache: constant
+        // eviction, results must stay equal to the uncached path.
+        let subsets: [[usize; 3]; 5] =
+            [[11, 4, 7], [3, 9, 5], [10, 6, 8], [4, 11, 9], [5, 7, 3]];
+        for round in 0..2 {
+            for subset in &subsets {
+                let completed: Vec<(usize, &Matrix)> =
+                    subset.iter().map(|&i| (i, &coded[i])).collect();
+                let got = code.decode(&completed).unwrap();
+                let want = reference.decode(&completed).unwrap();
+                for j in 0..3 {
+                    assert_eq!(
+                        got[j].max_abs_diff(&want[j]),
+                        0.0,
+                        "round {round} subset {subset:?} block {j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cached_rejections_stay_rejections() {
+        // An ill-conditioned subset must be rejected on the cache hit too.
+        let code = RealMdsCode::with_integer_points(40, 10);
+        let subset: Vec<usize> = (30..40).collect();
+        for _ in 0..2 {
+            assert!(matches!(
+                code.decode_coeffs_f32(&subset),
+                Err(DecodeError::IllConditioned { .. })
+            ));
         }
     }
 

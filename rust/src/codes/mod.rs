@@ -12,13 +12,14 @@
 //! `cost` is the decode-cost model used by the figure benches (the paper's
 //! own accounting: Vandermonde inverse + K·u·v combine MACs).
 
+mod cache;
 pub mod cost;
 mod gf;
 mod mds;
 mod rs;
 mod vandermonde;
 
-pub use gf::Gf16;
+pub use gf::{addmul_slice, dot, mul_slice, Gf16};
 pub use mds::{DecodeError, RealMdsCode};
 pub use rs::{dequantize, quantize, RsCode};
 pub use vandermonde::{chebyshev_points, vandermonde, Vandermonde};

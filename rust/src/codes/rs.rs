@@ -6,10 +6,26 @@
 //! the k x k Vandermonde system over the field via Gaussian elimination.
 //! n is bounded by the field order; BICEC's n = 3200 is comfortable.
 //!
+//! Hot-path structure (the batch-throughput pass):
+//!
+//! * `encode_share` materialises the share's evaluation-point power row
+//!   once, then each stream position is one bulk `gf::dot` — table lookups
+//!   are hoisted out of the per-symbol loop.
+//! * `decode` splits into (a) obtaining the inverted k x k decode matrix
+//!   and (b) the combine, `out[j] = Σ_l inv[j][l] · share_l`, written with
+//!   `gf::addmul_slice` so long symbol streams amortise every lookup.
+//! * Inverted decode matrices are memoised in a small LRU keyed by the
+//!   survivor-index subset: the master decodes many streams (and many
+//!   Monte-Carlo trials) against the *same* completed set, and the O(k³)
+//!   Gauss–Jordan at k = 800 would otherwise dominate every decode.
+//!
 //! Payloads are `u16` symbols; `quantize`/`dequantize` map f32 matrices to
 //! symbol streams losslessly enough for verification (12-bit mantissa grid).
 
-use super::gf::Gf16;
+use std::sync::{Arc, Mutex};
+
+use super::cache::LruCache;
+use super::gf::{addmul_slice, dot, Gf16};
 
 #[derive(Debug)]
 pub enum RsError {
@@ -30,13 +46,31 @@ impl std::fmt::Display for RsError {
 
 impl std::error::Error for RsError {}
 
+/// Default number of inverted decode matrices kept per code. Each entry is
+/// k² symbols (1.25 MiB at k = 800), so the cap stays small; the master
+/// only ever cycles through a handful of live completed sets at a time.
+const DEFAULT_DECODE_CACHE: usize = 8;
+
 /// Systematic-free RS code: share i = p(alpha^i), p's coefficients = data.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct RsCode {
     n: usize,
     k: usize,
     /// Evaluation points alpha^i.
     points: Vec<Gf16>,
+    cache: Mutex<LruCache<Vec<Gf16>>>,
+}
+
+impl Clone for RsCode {
+    fn clone(&self) -> Self {
+        let capacity = self.cache.lock().expect("rs cache lock").capacity();
+        Self {
+            n: self.n,
+            k: self.k,
+            points: self.points.clone(),
+            cache: Mutex::new(LruCache::new(capacity)),
+        }
+    }
 }
 
 impl RsCode {
@@ -47,7 +81,24 @@ impl RsCode {
         assert!(k >= 1 && n >= k, "need n >= k >= 1");
         let a = Gf16::alpha();
         let points = (0..n).map(|i| a.pow(i as u64)).collect();
-        Ok(Self { n, k, points })
+        Ok(Self { n, k, points, cache: Mutex::new(LruCache::new(DEFAULT_DECODE_CACHE)) })
+    }
+
+    /// Override the decode-matrix LRU capacity (0 disables caching — every
+    /// decode re-runs the Gauss–Jordan, the reference behaviour).
+    pub fn with_decode_cache_capacity(self, capacity: usize) -> Self {
+        *self.cache.lock().expect("rs cache lock") = LruCache::new(capacity);
+        self
+    }
+
+    /// (hits, misses) of the decode-matrix cache since construction.
+    pub fn decode_cache_stats(&self) -> (u64, u64) {
+        self.cache.lock().expect("rs cache lock").stats()
+    }
+
+    /// Number of inverted matrices currently cached.
+    pub fn decode_cache_len(&self) -> usize {
+        self.cache.lock().expect("rs cache lock").len()
     }
 
     pub fn n(&self) -> usize {
@@ -64,13 +115,99 @@ impl RsCode {
     pub fn encode_share(&self, data: &[Vec<Gf16>], share: usize) -> Vec<Gf16> {
         assert!(share < self.n);
         let x = self.points[share];
+        // Power row x^0 .. x^(k-1), built once per share; every stream
+        // position is then a bulk dot product against it.
+        let mut powers = Vec::with_capacity(self.k);
+        let mut p = Gf16::ONE;
+        for _ in 0..self.k {
+            powers.push(p);
+            p = p.mul(x);
+        }
         data.iter()
             .map(|coeffs| {
                 debug_assert_eq!(coeffs.len(), self.k);
-                // Horner at x.
-                coeffs.iter().rev().fold(Gf16::ZERO, |acc, &c| acc.mul(x).add(c))
+                dot(coeffs, &powers)
             })
             .collect()
+    }
+
+    /// Invert the k x k Vandermonde of the given evaluation rows via
+    /// Gauss–Jordan over the field (exact; any nonzero pivot works, and
+    /// distinct points guarantee invertibility). Row-major k x k output.
+    /// This is the uncached reference path.
+    pub fn invert_rows_fresh(&self, rows: &[usize]) -> Vec<Gf16> {
+        let k = self.k;
+        assert_eq!(rows.len(), k, "need exactly k rows");
+        let w = 2 * k;
+        let mut aug: Vec<Gf16> = Vec::with_capacity(k * w);
+        for &i in rows {
+            let x = self.points[i];
+            let mut p = Gf16::ONE;
+            for _ in 0..k {
+                aug.push(p);
+                p = p.mul(x);
+            }
+            for _ in 0..k {
+                aug.push(Gf16::ZERO);
+            }
+        }
+        for r in 0..k {
+            aug[r * w + k + r] = Gf16::ONE;
+        }
+        for col in 0..k {
+            let pivot_row = (col..k)
+                .find(|&r| aug[r * w + col] != Gf16::ZERO)
+                .expect("Vandermonde over distinct points is invertible");
+            if pivot_row != col {
+                for j in 0..w {
+                    aug.swap(col * w + j, pivot_row * w + j);
+                }
+            }
+            let inv = aug[col * w + col].inv();
+            {
+                let row = &mut aug[col * w..col * w + w];
+                super::gf::mul_slice(inv, row);
+            }
+            for r in 0..k {
+                if r != col && aug[r * w + col] != Gf16::ZERO {
+                    let f = aug[r * w + col];
+                    // row_r += f * row_col (XOR add); split_at_mut gives the
+                    // two disjoint rows.
+                    let (lo, hi) = aug.split_at_mut(col.max(r) * w);
+                    let (src, dst) = if r > col {
+                        (&lo[col * w..col * w + w], &mut hi[..w])
+                    } else {
+                        (&hi[..w], &mut lo[r * w..r * w + w])
+                    };
+                    addmul_slice(dst, f, src);
+                }
+            }
+        }
+        // Extract the right half (the inverse).
+        let mut out = Vec::with_capacity(k * k);
+        for r in 0..k {
+            out.extend_from_slice(&aug[r * w + k..r * w + w]);
+        }
+        out
+    }
+
+    /// The inverted decode matrix for `rows`, served from the LRU when the
+    /// same survivor subset was inverted before.
+    pub fn decode_matrix(&self, rows: &[usize]) -> Arc<Vec<Gf16>> {
+        {
+            let mut cache = self.cache.lock().expect("rs cache lock");
+            if let Some(inv) = cache.get(rows) {
+                return inv;
+            }
+        }
+        // Invert outside the lock: the O(k³) solve must not serialise
+        // concurrent decodes of different subsets.
+        let inv = Arc::new(self.invert_rows_fresh(rows));
+        self.cache
+            .lock()
+            .expect("rs cache lock")
+            .insert(rows.to_vec(), inv.clone());
+        inv
     }
 
     /// Decode the k data symbols per stream position from k completed
@@ -95,62 +232,15 @@ impl RsCode {
         let stream_len = used[0].1.len();
         assert!(used.iter().all(|(_, s)| s.len() == stream_len));
 
-        // Invert the k x k Vandermonde over GF via Gauss–Jordan once, then
-        // apply to every stream position (same structure as the real decode).
-        let mut aug: Vec<Gf16> = Vec::with_capacity(k * 2 * k);
-        for (i, _) in used {
-            let x = self.points[*i];
-            let mut p = Gf16::ONE;
-            for _ in 0..k {
-                aug.push(p);
-                p = p.mul(x);
-            }
-            // identity part appended after, filled below
-            for _ in 0..k {
-                aug.push(Gf16::ZERO);
-            }
-        }
-        let w = 2 * k;
-        for r in 0..k {
-            aug[r * w + k + r] = Gf16::ONE;
-        }
-        // Gauss–Jordan (field is exact; any nonzero pivot works, and
-        // distinct points guarantee invertibility).
-        for col in 0..k {
-            let pivot_row = (col..k)
-                .find(|&r| aug[r * w + col] != Gf16::ZERO)
-                .expect("Vandermonde over distinct points is invertible");
-            if pivot_row != col {
-                for j in 0..w {
-                    aug.swap(col * w + j, pivot_row * w + j);
-                }
-            }
-            let inv = aug[col * w + col].inv();
-            for j in 0..w {
-                aug[col * w + j] = aug[col * w + j].mul(inv);
-            }
-            for r in 0..k {
-                if r != col && aug[r * w + col] != Gf16::ZERO {
-                    let f = aug[r * w + col];
-                    for j in 0..w {
-                        let sub = f.mul(aug[col * w + j]);
-                        aug[r * w + j] = aug[r * w + j].add(sub);
-                    }
-                }
-            }
-        }
+        let rows: Vec<usize> = used.iter().map(|(i, _)| *i).collect();
+        let inv = self.decode_matrix(&rows);
 
-        // out[j][pos] = Σ_l inv[j][l] · used[l][pos]
+        // Combine: out[j][pos] = Σ_l inv[j][l] · used[l][pos], one bulk
+        // addmul per (j, l) so the stream loop never re-reads the tables.
         let mut out = vec![vec![Gf16::ZERO; stream_len]; k];
         for (j, row) in out.iter_mut().enumerate() {
             for (l, (_, sym)) in used.iter().enumerate() {
-                let c = aug[j * w + k + l];
-                if c == Gf16::ZERO {
-                    continue;
-                }
-                for (o, &s) in row.iter_mut().zip(sym.iter()) {
-                    *o = o.add(c.mul(s));
-                }
+                addmul_slice(row, inv[j * k + l], sym);
             }
         }
         Ok(out)
@@ -279,5 +369,122 @@ mod tests {
         for (v, b) in vals.iter().zip(&back) {
             assert!((v - b).abs() <= 1.0 / 65535.0 + 1e-7, "{v} vs {b}");
         }
+    }
+
+    // ---- decode-matrix cache -------------------------------------------
+
+    #[test]
+    fn repeated_decode_hits_cache() {
+        let code = RsCode::new(8, 3).unwrap();
+        let data = vec![vec![sym(11), sym(22), sym(33)]];
+        let shares: Vec<Vec<Gf16>> =
+            (0..8).map(|i| code.encode_share(&data, i)).collect();
+        let completed: Vec<(usize, &[Gf16])> =
+            vec![(7, &shares[7][..]), (2, &shares[2][..]), (4, &shares[4][..])];
+        let a = code.decode(&completed).unwrap();
+        let b = code.decode(&completed).unwrap();
+        assert_eq!(a, b);
+        let (hits, misses) = code.decode_cache_stats();
+        assert_eq!(misses, 1, "first decode populates the cache");
+        assert!(hits >= 1, "second decode must be served from cache");
+        assert_eq!(code.decode_cache_len(), 1);
+    }
+
+    #[test]
+    fn prop_cached_decode_equals_fresh_solve() {
+        // The cache must be semantically invisible: for random codes and
+        // random survivor subsets, a cached decode (second call, same
+        // subset) equals a cache-disabled fresh solve.
+        prop::check(25, |g| {
+            let k = g.usize_in(1, 10);
+            let n = k + g.usize_in(0, 12);
+            let cached = RsCode::new(n, k).unwrap();
+            let fresh = cached.clone().with_decode_cache_capacity(0);
+            let stream = g.usize_in(1, 4);
+            let data: Vec<Vec<Gf16>> = (0..stream)
+                .map(|_| (0..k).map(|_| Gf16(g.u64() as u16)).collect())
+                .collect();
+            let shares: Vec<Vec<Gf16>> =
+                (0..n).map(|i| cached.encode_share(&data, i)).collect();
+            for _ in 0..3 {
+                let mut order: Vec<usize> = (0..n).collect();
+                g.shuffle(&mut order);
+                let completed: Vec<(usize, &[Gf16])> =
+                    order.iter().take(k).map(|&i| (i, &shares[i][..])).collect();
+                // Decode twice on the caching code (second hit comes from
+                // the LRU) and once on the cache-free reference.
+                let warm = cached.decode(&completed).map_err(|e| e.to_string())?;
+                let hit = cached.decode(&completed).map_err(|e| e.to_string())?;
+                let reference = fresh.decode(&completed).map_err(|e| e.to_string())?;
+                if warm != reference || hit != reference {
+                    return Err(format!(
+                        "cached decode diverged from fresh solve (n={n} k={k})"
+                    ));
+                }
+            }
+            let (_, fresh_misses) = fresh.decode_cache_stats();
+            if fresh.decode_cache_len() != 0 || fresh_misses == 0 {
+                return Err("capacity-0 cache must stay empty and always miss".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_cache_eviction_never_changes_results() {
+        // A capacity-2 cache cycled over >2 subsets evicts constantly;
+        // every decode must still equal the uncached reference.
+        prop::check(15, |g| {
+            let k = g.usize_in(2, 6);
+            let n = k + g.usize_in(2, 10);
+            let code = RsCode::new(n, k)
+                .unwrap()
+                .with_decode_cache_capacity(2);
+            let reference = code.clone().with_decode_cache_capacity(0);
+            let data = vec![(0..k).map(|_| Gf16(g.u64() as u16)).collect::<Vec<_>>()];
+            let shares: Vec<Vec<Gf16>> =
+                (0..n).map(|i| code.encode_share(&data, i)).collect();
+            // Cycle through 5 distinct-ish subsets twice.
+            let mut subsets: Vec<Vec<usize>> = Vec::new();
+            for _ in 0..5 {
+                let mut order: Vec<usize> = (0..n).collect();
+                g.shuffle(&mut order);
+                subsets.push(order.into_iter().take(k).collect());
+            }
+            for round in 0..2 {
+                for (si, subset) in subsets.iter().enumerate() {
+                    let completed: Vec<(usize, &[Gf16])> =
+                        subset.iter().map(|&i| (i, &shares[i][..])).collect();
+                    let got = code.decode(&completed).map_err(|e| e.to_string())?;
+                    let want = reference.decode(&completed).map_err(|e| e.to_string())?;
+                    if got != want {
+                        return Err(format!(
+                            "eviction changed results (round {round}, subset {si})"
+                        ));
+                    }
+                    if code.decode_cache_len() > 2 {
+                        return Err(format!(
+                            "cache exceeded capacity: {}",
+                            code.decode_cache_len()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decode_matrix_matches_fresh_inversion() {
+        let code = RsCode::new(12, 5).unwrap();
+        let rows = [9usize, 0, 3, 11, 6];
+        let cached = code.decode_matrix(&rows);
+        let fresh = code.invert_rows_fresh(&rows);
+        assert_eq!(*cached, fresh);
+        // Same subset again: identical Arc contents, one more hit.
+        let again = code.decode_matrix(&rows);
+        assert_eq!(*again, fresh);
+        let (hits, misses) = code.decode_cache_stats();
+        assert_eq!((hits, misses), (1, 1));
     }
 }

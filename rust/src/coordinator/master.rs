@@ -7,7 +7,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::codes::RealMdsCode;
-use crate::linalg::{gemm, split_rows, Matrix};
+use crate::linalg::{combine_into_rows, gemm, split_rows, Matrix};
 use crate::rng::default_rng;
 use crate::runtime::{artifacts_available, default_artifact_dir, Runtime};
 use crate::sim::{SpeedModel, WorkerSpeeds};
@@ -172,7 +172,9 @@ pub fn run_job(cfg: &JobConfig) -> Result<JobReport> {
         ExecBackend::Pjrt => {
             anyhow::ensure!(
                 artifacts_available(),
-                "PJRT backend requires `make artifacts`"
+                "PJRT backend requires `make artifacts` AND a build with the \
+                 `pjrt` cargo feature (artifacts_available() reports false \
+                 in stub builds even when the manifest exists)"
             );
             let dir = default_artifact_dir();
             let probe = Runtime::open(&dir)?;
@@ -327,53 +329,40 @@ fn decode(
                 let inv = code
                     .decode_coeffs_f32(slots)
                     .map_err(|e| anyhow!("set {m}: {e}"))?;
-                let blocks: Vec<&Vec<f32>> = slots
+                let blocks: Vec<&[f32]> = slots
                     .iter()
-                    .map(|&s| fetch(m, s))
+                    .map(|&s| fetch(m, s).map(|b| b.as_slice()))
                     .collect::<Result<Vec<_>>>()?;
                 for j in 0..k {
                     // Global row offset of data block j's m-th slice.
                     let base = j * (u / k) + m * rows_per_item;
-                    for r in 0..rows_per_item {
-                        let dst = out.row_mut(base + r);
-                        for (l, blk) in blocks.iter().enumerate() {
-                            let c = inv[j * k + l];
-                            let src = &blk[r * v..(r + 1) * v];
-                            for (d, s) in dst.iter_mut().zip(src) {
-                                *d += c * s;
-                            }
-                        }
-                    }
+                    combine_into_rows(
+                        &mut out,
+                        base,
+                        rows_per_item,
+                        &inv[j * k..(j + 1) * k],
+                        &blocks,
+                    );
                 }
             }
         }
         RecoveryRule::Global { .. } => {
             let ids = &tracker.global_ids()[..k];
             let inv = code.decode_coeffs_f32(ids).map_err(|e| anyhow!("global: {e}"))?;
-            let blocks: Vec<&Vec<f32>> = ids
+            let blocks: Vec<&[f32]> = ids
                 .iter()
                 .map(|&id| {
                     payloads
                         .iter()
                         .find(|((g, _), _)| *g == id)
-                        .map(|(_, d)| d)
+                        .map(|(_, d)| d.as_slice())
                         .ok_or_else(|| anyhow!("missing payload for id {id}"))
                 })
                 .collect::<Result<Vec<_>>>()?;
             let rows_b = u / k;
-            debug_assert_eq!(rows_b, rows_per_item / 1.max(1));
+            debug_assert_eq!(rows_b, rows_per_item);
             for j in 0..k {
-                let base = j * rows_b;
-                for r in 0..rows_b {
-                    let dst = out.row_mut(base + r);
-                    for (l, blk) in blocks.iter().enumerate() {
-                        let c = inv[j * k + l];
-                        let src = &blk[r * v..(r + 1) * v];
-                        for (d, s) in dst.iter_mut().zip(src) {
-                            *d += c * s;
-                        }
-                    }
-                }
+                combine_into_rows(&mut out, j * rows_b, rows_b, &inv[j * k..(j + 1) * k], &blocks);
             }
         }
     }

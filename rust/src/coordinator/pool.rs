@@ -22,7 +22,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::linalg::{gemm, Matrix};
+use crate::linalg::{gemm_single_thread, Matrix};
 use crate::runtime::Runtime;
 
 /// How workers execute subtask products.
@@ -132,7 +132,11 @@ fn run_worker(
             block.row_mut(i).copy_from_slice(encoded_task.row(r));
         }
         let product = match backend {
-            Backend::Native => gemm(&block, b),
+            // Forced single-thread: the pool already runs one OS thread per
+            // worker slot, and nested gemm fan-out would oversubscribe the
+            // machine and distort the straggler-emulation sleep (which
+            // scales off measured elapsed time).
+            Backend::Native => gemm_single_thread(&block, b),
             Backend::Pjrt { artifact, .. } => {
                 let rt = runtime.as_mut().expect("runtime opened");
                 rt.matmul(artifact, &block, b)
@@ -210,7 +214,7 @@ mod tests {
             let mut block = Matrix::zeros(2, 8);
             block.row_mut(0).copy_from_slice(task.row(1));
             block.row_mut(1).copy_from_slice(task.row(2));
-            let want = gemm(&block, &b);
+            let want = gemm_single_thread(&block, &b);
             assert_eq!(&data, want.as_slice());
         } else {
             panic!("expected completion, got {msg:?}");

@@ -5,7 +5,7 @@ use crate::config::ExperimentConfig;
 use crate::metrics::{mean, Table};
 use crate::rng::default_rng;
 use crate::sim::{
-    simulate_static, simulate_trace, simulate_trace_with, ElasticTrace, Reassign, WorkerSpeeds,
+    simulate_many, simulate_static, ElasticTrace, Reassign, TraceSimulator, WorkerSpeeds,
 };
 use crate::tas::{Bicec, Cec, DLevelPolicy, HeteroCec, Mlcc, Mlcec, Scheme};
 use crate::workload::JobSpec;
@@ -32,12 +32,14 @@ pub fn transition_waste_table(cfg: &ExperimentConfig, event_rate: f64) -> Table 
         let mut rng = default_rng(cfg.seed);
         let (mut wastes, mut reallocs, mut comps) = (Vec::new(), Vec::new(), Vec::new());
         let mut failures = 0usize;
+        // One simulator per scheme: scratch buffers recycle across trials.
+        let mut sim = TraceSimulator::new(scheme.as_ref());
         for _ in 0..cfg.trials {
             let speeds = WorkerSpeeds::sample(&cfg.speed_model(), 8, &mut rng);
             // Scale the horizon to the job so events land mid-run.
             let horizon = 400.0 * cost.worker_time(job.ops() / 2400, 1.0);
             let trace = ElasticTrace::poisson(8, 4, 8, event_rate / horizon, horizon, &mut rng);
-            match simulate_trace(scheme.as_ref(), &trace, job, &cost, &speeds) {
+            match sim.run(&trace, job, &cost, &speeds, Reassign::Identity) {
                 Ok(out) => {
                     wastes.push(out.transition_waste);
                     reallocs.push(out.reallocations as f64);
@@ -76,17 +78,17 @@ pub fn dlevel_table(cfg: &ExperimentConfig) -> Table {
         }
         let cec = Cec::new(cfg.k_cec, cfg.s_cec);
         let cec_mean = mean(
-            &speeds_per_trial
+            &simulate_many(&cec, n, cfg.job, &cost, &speeds_per_trial)
                 .iter()
-                .map(|sp| simulate_static(&cec, n, cfg.job, &cost, sp).computation_time)
+                .map(|r| r.computation_time)
                 .collect::<Vec<_>>(),
         );
         for (name, policy) in &policies {
             let scheme = Mlcec::with_policy(cfg.k_cec, cfg.s_cec, policy.clone());
             let m = mean(
-                &speeds_per_trial
+                &simulate_many(&scheme, n, cfg.job, &cost, &speeds_per_trial)
                     .iter()
-                    .map(|sp| simulate_static(&scheme, n, cfg.job, &cost, sp).computation_time)
+                    .map(|r| r.computation_time)
                     .collect::<Vec<_>>(),
             );
             t.row(vec![
@@ -120,14 +122,16 @@ pub fn straggler_sweep_table(
                 jitter: cfg.jitter,
             };
             let mut rng = default_rng(cfg.seed);
-            let (mut c, mut m, mut b) = (Vec::new(), Vec::new(), Vec::new());
-            for _ in 0..cfg.trials {
-                let sp = WorkerSpeeds::sample(&model, cfg.n_max, &mut rng);
-                c.push(simulate_static(&cec, n, cfg.job, &cost, &sp).finishing_time());
-                m.push(simulate_static(&mlcec, n, cfg.job, &cost, &sp).finishing_time());
-                b.push(simulate_static(&bicec, n, cfg.job, &cost, &sp).finishing_time());
-            }
-            let (cm, mm, bm) = (mean(&c), mean(&m), mean(&b));
+            let speeds: Vec<WorkerSpeeds> = (0..cfg.trials)
+                .map(|_| WorkerSpeeds::sample(&model, cfg.n_max, &mut rng))
+                .collect();
+            let fin = |scheme: &dyn Scheme| {
+                simulate_many(scheme, n, cfg.job, &cost, &speeds)
+                    .iter()
+                    .map(|r| r.finishing_time())
+                    .collect::<Vec<_>>()
+            };
+            let (cm, mm, bm) = (mean(&fin(&cec)), mean(&fin(&mlcec)), mean(&fin(&bicec)));
             t.row(vec![
                 format!("{slowdown}"),
                 format!("{p}"),
@@ -194,13 +198,13 @@ pub fn reassign_table(cfg: &ExperimentConfig, event_rate: f64) -> Table {
             let mut rng = default_rng(cfg.seed);
             let (mut wastes, mut comps) = (Vec::new(), Vec::new());
             let mut failures = 0usize;
+            let mut sim = TraceSimulator::new(scheme.as_ref());
             for _ in 0..cfg.trials {
                 let speeds = WorkerSpeeds::sample(&cfg.speed_model(), 8, &mut rng);
                 let horizon = 400.0 * cost.worker_time(job.ops() / 2400, 1.0);
                 let trace =
                     ElasticTrace::poisson(8, 4, 8, event_rate / horizon, horizon, &mut rng);
-                match simulate_trace_with(scheme.as_ref(), &trace, job, &cost, &speeds, policy)
-                {
+                match sim.run(&trace, job, &cost, &speeds, policy) {
                     Ok(out) => {
                         wastes.push(out.transition_waste);
                         comps.push(out.computation_time);

@@ -12,7 +12,7 @@
 use crate::config::ExperimentConfig;
 use crate::metrics::{Summary, Table};
 use crate::rng::default_rng;
-use crate::sim::{simulate_static, WorkerSpeeds};
+use crate::sim::{simulate_many, WorkerSpeeds};
 use crate::tas::{Bicec, Cec, Mlcec, Scheme};
 use crate::workload::JobSpec;
 
@@ -50,16 +50,20 @@ pub fn fig2_series(cfg: &ExperimentConfig, metric: Metric, job: JobSpec) -> Vec<
         .iter()
         .map(|&n| {
             let mut rng = default_rng(cfg.seed ^ (n as u64) << 32);
+            // One straggler draw per trial, shared across schemes (paired
+            // comparison); the batch driver then amortises each scheme's
+            // allocate(n) and scratch across the whole sweep.
+            let speeds: Vec<WorkerSpeeds> = (0..cfg.trials)
+                .map(|_| WorkerSpeeds::sample(&cfg.speed_model(), cfg.n_max, &mut rng))
+                .collect();
             let mut xs = [Vec::new(), Vec::new(), Vec::new()];
-            for _ in 0..cfg.trials {
-                let speeds =
-                    WorkerSpeeds::sample(&cfg.speed_model(), cfg.n_max, &mut rng);
-                for (i, scheme) in
-                    [&cec as &dyn Scheme, &mlcec, &bicec].into_iter().enumerate()
-                {
-                    let r = simulate_static(scheme, n, job, &cost, &speeds);
-                    xs[i].push(metric.of(&r));
-                }
+            for (i, scheme) in
+                [&cec as &dyn Scheme, &mlcec, &bicec].into_iter().enumerate()
+            {
+                xs[i] = simulate_many(scheme, n, job, &cost, &speeds)
+                    .iter()
+                    .map(|r| metric.of(r))
+                    .collect();
             }
             Fig2Point {
                 n,

@@ -1,0 +1,133 @@
+//! Fused decode combine: `out = Σ_l coeffs[l] · blocks[l]`.
+//!
+//! The master's decode contraction was previously k sequential whole-matrix
+//! `axpy` passes, i.e. k full sweeps of the (r x c) output through cache.
+//! Here the accumulation is fused row-wise: each output row is produced in
+//! one pass over the k source rows, so the output block stays resident and
+//! the k source rows (contiguous, read-once) stream through. For the
+//! decode shapes that dominate the figures (k = 10..800, wide rows) this is
+//! the combine layout the L3 target ("decode dominated by the combine, not
+//! the K x K solve") is measured against.
+
+use super::Matrix;
+
+/// `Σ_l coeffs[l] · blocks[l]`, all blocks the same shape.
+///
+/// Panics when `coeffs` and `blocks` differ in length, when `blocks` is
+/// empty, or when shapes are inconsistent.
+pub fn combine(coeffs: &[f32], blocks: &[&Matrix]) -> Matrix {
+    assert_eq!(coeffs.len(), blocks.len(), "one coefficient per block");
+    assert!(!blocks.is_empty(), "need at least one block");
+    let (r, c) = (blocks[0].rows(), blocks[0].cols());
+    assert!(
+        blocks.iter().all(|b| b.rows() == r && b.cols() == c),
+        "inconsistent block shapes"
+    );
+    let mut out = Matrix::zeros(r, c);
+    for i in 0..r {
+        let orow = out.row_mut(i);
+        for (&coef, block) in coeffs.iter().zip(blocks) {
+            if coef == 0.0 {
+                continue;
+            }
+            for (o, &s) in orow.iter_mut().zip(block.row(i)) {
+                *o += coef * s;
+            }
+        }
+    }
+    out
+}
+
+/// Flat-slice variant for payloads that never became `Matrix` values
+/// (the coordinator's worker messages are `Vec<f32>`): each block is a
+/// `rows x cols` row-major slice; the result is accumulated into `out`
+/// starting at row offset `row0`.
+pub fn combine_into_rows(
+    out: &mut Matrix,
+    row0: usize,
+    rows: usize,
+    coeffs: &[f32],
+    blocks: &[&[f32]],
+) {
+    assert_eq!(coeffs.len(), blocks.len(), "one coefficient per block");
+    let cols = out.cols();
+    for b in blocks {
+        assert_eq!(b.len(), rows * cols, "block shape mismatch");
+    }
+    for i in 0..rows {
+        let orow = out.row_mut(row0 + i);
+        for (&coef, block) in coeffs.iter().zip(blocks) {
+            if coef == 0.0 {
+                continue;
+            }
+            let src = &block[i * cols..(i + 1) * cols];
+            for (o, &s) in orow.iter_mut().zip(src) {
+                *o += coef * s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::rng::default_rng;
+
+    /// Reference: the old k-pass axpy accumulation.
+    fn combine_axpy(coeffs: &[f32], blocks: &[&Matrix]) -> Matrix {
+        let mut out = Matrix::zeros(blocks[0].rows(), blocks[0].cols());
+        for (&c, b) in coeffs.iter().zip(blocks) {
+            out.axpy(c, b);
+        }
+        out
+    }
+
+    #[test]
+    fn prop_fused_combine_matches_axpy_reference() {
+        prop::check(50, |g| {
+            let k = g.usize_in(1, 12);
+            let r = g.usize_in(1, 16);
+            let c = g.usize_in(1, 32);
+            let mut rng = g.rng().clone();
+            let blocks: Vec<Matrix> =
+                (0..k).map(|_| Matrix::random(r, c, &mut rng)).collect();
+            let refs: Vec<&Matrix> = blocks.iter().collect();
+            let coeffs: Vec<f32> = (0..k)
+                .map(|i| if i % 3 == 0 { 0.0 } else { g.f64_in(-2.0, 2.0) as f32 })
+                .collect();
+            let fused = combine(&coeffs, &refs);
+            let reference = combine_axpy(&coeffs, &refs);
+            // Identical operation order per element -> bitwise equal.
+            if fused != reference {
+                return Err(format!("fused combine diverged (k={k}, {r}x{c})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn combine_into_rows_matches_matrix_combine() {
+        let mut rng = default_rng(17);
+        let blocks: Vec<Matrix> =
+            (0..4).map(|_| Matrix::random(3, 8, &mut rng)).collect();
+        let flat: Vec<&[f32]> = blocks.iter().map(|m| m.as_slice()).collect();
+        let refs: Vec<&Matrix> = blocks.iter().collect();
+        let coeffs = [0.5f32, -1.25, 0.0, 2.0];
+        let whole = combine(&coeffs, &refs);
+        let mut out = Matrix::zeros(5, 8);
+        combine_into_rows(&mut out, 1, 3, &coeffs, &flat);
+        for i in 0..3 {
+            assert_eq!(out.row(1 + i), whole.row(i), "row {i}");
+        }
+        assert!(out.row(0).iter().all(|&v| v == 0.0));
+        assert!(out.row(4).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "one coefficient per block")]
+    fn combine_rejects_mismatched_lengths() {
+        let m = Matrix::zeros(2, 2);
+        let _ = combine(&[1.0, 2.0], &[&m]);
+    }
+}

@@ -1,5 +1,10 @@
 //! Matrix products: naive reference and the cache-blocked kernel used on the
 //! native worker path (when PJRT execution is disabled) and for decode.
+//!
+//! The blocked kernel is row-deterministic: each output row accumulates over
+//! the contraction index in ascending order regardless of blocking or thread
+//! count, so results are bit-identical between the single-threaded and
+//! parallel paths (and match the pre-parallel kernel exactly).
 
 use super::Matrix;
 
@@ -25,40 +30,134 @@ pub fn gemm_naive(a: &Matrix, b: &Matrix) -> Matrix {
     out
 }
 
-/// Cache-blocked i-k-j product with f32 accumulation. Block sizes chosen so
-/// the (MC x KC) A-panel plus a KC-row B-panel stay L2-resident.
-pub fn gemm_blocked(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols(), b.rows(), "contraction mismatch");
-    const MC: usize = 64;
-    const KC: usize = 256;
-    let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    let mut out = Matrix::zeros(m, n);
-    let mut i0 = 0;
-    while i0 < m {
-        let i1 = (i0 + MC).min(m);
-        let mut l0 = 0;
-        while l0 < k {
-            let l1 = (l0 + KC).min(k);
-            for i in i0..i1 {
-                let arow = a.row(i);
-                let orow = out.row_mut(i);
-                for l in l0..l1 {
-                    let av = arow[l];
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let brow = b.row(l);
-                    // The inner j-loop is auto-vectorizable: contiguous
-                    // rows, no aliasing (orow/brow disjoint borrows).
-                    for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                        *o += av * bv;
-                    }
+/// Contraction-dimension block: one KC-row panel of B plus the in-flight
+/// output rows stay cache-resident.
+const KC: usize = 256;
+
+/// Below this many multiply-adds the product stays single-threaded: thread
+/// spawn/join overhead swamps the win, and the elastic subtask shape
+/// (2 x 240 x 240 = ~115k MACs) must not fan out from inside worker
+/// threads that are themselves parallel.
+const PAR_MIN_OPS: usize = 2_000_000;
+
+/// Worker threads for an (m, k, n) product. 1 = run on the caller.
+fn plan_threads(m: usize, k: usize, n: usize) -> usize {
+    let ops = m.saturating_mul(k).saturating_mul(n);
+    if ops < PAR_MIN_OPS || m < 8 {
+        return 1;
+    }
+    let hw = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    // At least 4 rows (one micro-kernel quad) per band, capped to keep the
+    // fan-out sane on very wide machines.
+    hw.min(m / 4).min(8).max(1)
+}
+
+/// Compute output rows `i0 .. i0 + rows` into `out` (a `rows * n` slice).
+///
+/// `a` is the full row-major A buffer (row stride `k`). The panel walks KC
+/// contraction blocks; within each block a 4-row micro-kernel amortises
+/// every read of B's row across four output rows, with the zero test
+/// lifted to once per (quad, l) instead of once per element.
+fn panel_kernel(a: &[f32], i0: usize, rows: usize, k: usize, b: &Matrix, out: &mut [f32]) {
+    let n = b.cols();
+    debug_assert_eq!(out.len(), rows * n);
+    let mut l0 = 0;
+    while l0 < k {
+        let l1 = (l0 + KC).min(k);
+        let mut cursor: &mut [f32] = &mut out[..];
+        let mut i = 0;
+        // 4-row micro-kernel.
+        while i + 4 <= rows {
+            let taken = std::mem::take(&mut cursor);
+            let (quad, tail) = taken.split_at_mut(4 * n);
+            cursor = tail;
+            let (r0, q1) = quad.split_at_mut(n);
+            let (r1, q2) = q1.split_at_mut(n);
+            let (r2, r3) = q2.split_at_mut(n);
+            let base = (i0 + i) * k;
+            let ar0 = &a[base..base + k];
+            let ar1 = &a[base + k..base + 2 * k];
+            let ar2 = &a[base + 2 * k..base + 3 * k];
+            let ar3 = &a[base + 3 * k..base + 4 * k];
+            for l in l0..l1 {
+                let (a0, a1, a2, a3) = (ar0[l], ar1[l], ar2[l], ar3[l]);
+                if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                    continue;
+                }
+                let brow = b.row(l);
+                // Contiguous, disjoint rows: auto-vectorizable.
+                for ((((o0, o1), o2), o3), &bv) in r0
+                    .iter_mut()
+                    .zip(r1.iter_mut())
+                    .zip(r2.iter_mut())
+                    .zip(r3.iter_mut())
+                    .zip(brow.iter())
+                {
+                    *o0 += a0 * bv;
+                    *o1 += a1 * bv;
+                    *o2 += a2 * bv;
+                    *o3 += a3 * bv;
                 }
             }
-            l0 = l1;
+            i += 4;
         }
-        i0 = i1;
+        // Remainder rows, one at a time.
+        while i < rows {
+            let taken = std::mem::take(&mut cursor);
+            let (row, tail) = taken.split_at_mut(n);
+            cursor = tail;
+            let arow = &a[(i0 + i) * k..(i0 + i) * k + k];
+            for l in l0..l1 {
+                let av = arow[l];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = b.row(l);
+                for (o, &bv) in row.iter_mut().zip(brow.iter()) {
+                    *o += av * bv;
+                }
+            }
+            i += 1;
+        }
+        l0 = l1;
     }
+}
+
+/// Cache-blocked product, forced onto the calling thread (no fan-out).
+/// Used by callers that are already running inside a thread pool, and by
+/// benches to isolate the micro-kernel from the parallel speedup.
+pub fn gemm_single_thread(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "contraction mismatch");
+    let (m, n) = (a.rows(), b.cols());
+    let k = a.cols();
+    let mut out = Matrix::zeros(m, n);
+    panel_kernel(a.as_slice(), 0, m, k, b, out.as_mut_slice());
+    out
+}
+
+/// Cache-blocked i-k-j product with f32 accumulation, parallelised across
+/// row bands with `std::thread::scope` when the product is large enough
+/// (small elastic subtasks stay on the calling thread — see
+/// `PAR_MIN_OPS`). Bit-identical to `gemm_single_thread`.
+pub fn gemm_blocked(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "contraction mismatch");
+    let (m, n) = (a.rows(), b.cols());
+    let k = a.cols();
+    let threads = plan_threads(m, k, n);
+    if threads <= 1 {
+        return gemm_single_thread(a, b);
+    }
+    let mut out = Matrix::zeros(m, n);
+    let band = (m + threads - 1) / threads;
+    let a_data = a.as_slice();
+    let out_data = out.as_mut_slice();
+    std::thread::scope(|scope| {
+        for (idx, chunk) in out_data.chunks_mut(band * n).enumerate() {
+            let rows = chunk.len() / n;
+            let i0 = idx * band;
+            scope.spawn(move || panel_kernel(a_data, i0, rows, k, b, chunk));
+        }
+    });
     out
 }
 
@@ -83,6 +182,49 @@ mod tests {
             let y = gemm_blocked(&a, &b);
             let scale = x.max_abs().max(1.0);
             assert!(x.max_abs_diff(&y) / scale < 1e-5, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn parallel_path_is_bit_identical_to_single_thread() {
+        // 128x300x96 = ~3.7M MACs: crosses PAR_MIN_OPS, so gemm_blocked
+        // takes the threaded path on multicore machines.
+        let mut rng = default_rng(12);
+        let a = Matrix::random(128, 300, &mut rng);
+        let b = Matrix::random(300, 96, &mut rng);
+        let single = gemm_single_thread(&a, &b);
+        let parallel = gemm_blocked(&a, &b);
+        assert_eq!(single.max_abs_diff(&parallel), 0.0, "row determinism violated");
+    }
+
+    #[test]
+    fn micro_kernel_handles_all_row_remainders() {
+        // 1..6 rows exercises the quad kernel plus 0..3 remainder rows.
+        let mut rng = default_rng(13);
+        let b = Matrix::random(19, 11, &mut rng);
+        for m in 1..=6 {
+            let a = Matrix::random(m, 19, &mut rng);
+            let x = gemm_naive(&a, &b);
+            let y = gemm_single_thread(&a, &b);
+            let scale = x.max_abs().max(1.0);
+            assert!(x.max_abs_diff(&y) / scale < 1e-5, "m={m}");
+        }
+    }
+
+    #[test]
+    fn zero_rows_are_skipped_correctly() {
+        // Whole-quad and partial-quad zero A rows hit the lifted zero test.
+        let mut rng = default_rng(14);
+        let mut a = Matrix::zeros(8, 32);
+        for j in 0..32 {
+            a.set(5, j, (j as f32) * 0.25 - 3.0);
+        }
+        let b = Matrix::random(32, 12, &mut rng);
+        let x = gemm_naive(&a, &b);
+        let y = gemm_blocked(&a, &b);
+        assert!(x.max_abs_diff(&y) < 1e-6);
+        for i in [0usize, 1, 2, 3, 4, 6, 7] {
+            assert!(y.row(i).iter().all(|&v| v == 0.0), "row {i} must stay zero");
         }
     }
 

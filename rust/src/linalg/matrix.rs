@@ -84,6 +84,12 @@ impl Matrix {
         &self.data
     }
 
+    /// Mutable view of the full row-major buffer. The parallel gemm splits
+    /// this into disjoint row bands, one per worker thread.
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
     pub fn into_vec(self) -> Vec<f32> {
         self.data
     }

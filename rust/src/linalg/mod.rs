@@ -6,12 +6,14 @@
 //! `f32` payloads (matching the PJRT artifacts) with `f64` accumulation
 //! where precision matters (LU solve of Vandermonde systems).
 
+mod combine;
 mod gemm;
 mod lu;
 mod matrix;
 mod partition;
 
-pub use gemm::{gemm, gemm_blocked, gemm_naive};
+pub use combine::{combine, combine_into_rows};
+pub use gemm::{gemm, gemm_blocked, gemm_naive, gemm_single_thread};
 pub use lu::{invert, solve, LuError, LuFactors};
 pub use matrix::Matrix;
 pub use partition::{pad_rows_to_multiple, split_rows, stack_rows};

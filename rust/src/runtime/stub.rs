@@ -1,0 +1,70 @@
+//! Stub runtime for builds without the `pjrt` feature (the `xla` crate is
+//! unavailable offline). Mirrors the real `Runtime` API exactly so every
+//! caller compiles; construction fails with an actionable message, and the
+//! `artifacts_available()` gate keeps tests/benches on the skip path.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::ArtifactSig;
+
+/// A runtime bound to an artifact directory (stub: never constructible).
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    /// Open the artifact directory. Always fails in a stub build.
+    pub fn open(_dir: impl AsRef<Path>) -> Result<Self> {
+        bail!(
+            "PJRT runtime unavailable: hcec was built without the `pjrt` \
+             feature (the xla crate is not in the offline crate set); \
+             use the native backend instead"
+        );
+    }
+
+    pub fn artifact_names(&self) -> impl Iterator<Item = &str> {
+        std::iter::empty()
+    }
+
+    pub fn signature(&self, _name: &str) -> Option<&ArtifactSig> {
+        None
+    }
+
+    /// Execute an artifact with shape-checked f32 inputs.
+    pub fn execute(&mut self, name: &str, _inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        bail!("stub runtime cannot execute {name:?} (built without `pjrt`)");
+    }
+
+    /// Find an artifact whose input signature matches `in_shapes` exactly.
+    pub fn find_by_inputs(&self, _in_shapes: &[&[usize]]) -> Option<&str> {
+        None
+    }
+
+    /// Convenience: matrix product via a `*_mm_*` artifact.
+    pub fn matmul(
+        &mut self,
+        name: &str,
+        _a: &crate::linalg::Matrix,
+        _b: &crate::linalg::Matrix,
+    ) -> Result<crate::linalg::Matrix> {
+        bail!("stub runtime cannot execute {name:?} (built without `pjrt`)");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_open_fails_with_pointer_to_feature() {
+        let err = Runtime::open("/nonexistent").err().expect("stub must fail");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn artifacts_never_available_in_stub_builds() {
+        assert!(!crate::runtime::artifacts_available());
+    }
+}

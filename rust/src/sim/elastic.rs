@@ -15,13 +15,23 @@
 //!   once K slots cover it.
 //! * BICEC never re-allocates: slots own static subtask ranges
 //!   (`Scheme::allocate_active`), so its transition waste is identically 0.
+//!
+//! Hot-path structure (EXPERIMENTS.md §Perf): all per-run state lives in a
+//! reusable [`TraceSimulator`], so Monte-Carlo loops allocate nothing per
+//! trial in steady state; the next-completion lookup is a lazy-invalidated
+//! binary heap instead of an O(N) scan per event; the PerSet recovery
+//! check is gated on a running covered-measure total (the O(sets · log)
+//! endpoint sweep only runs once enough measure exists for recovery to be
+//! possible); and the Global completed-set is a flat bit vector rather
+//! than a `HashSet`.
 
-use std::collections::HashSet;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
 
 use crate::tas::{transition, Allocation, RecoveryRule, Scheme};
 use crate::workload::JobSpec;
 
-use super::intervals::{min_coverage, IntervalSet};
+use super::intervals::{min_coverage_with, IntervalSet};
 use super::trace::{ElasticTrace, EventKind};
 use super::{CostModel, WorkerSpeeds};
 
@@ -81,6 +91,42 @@ struct WorkerState {
     /// Completion time of the item currently in flight (f64::INFINITY when
     /// the list is exhausted).
     next_done: f64,
+    /// Bumped on every (re)schedule; heap entries carrying an older
+    /// generation are stale and skipped on pop.
+    gen: u32,
+}
+
+/// Calendar entry: comparison is REVERSED (min time, then min worker index,
+/// at the top of std's max-heap), reproducing the old linear scan's
+/// first-lowest-index tie-break exactly.
+#[derive(Clone, Copy)]
+struct Pending {
+    time: f64,
+    who: u32,
+    gen: u32,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Pending {}
+
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.who.cmp(&self.who))
+    }
 }
 
 pub fn simulate_trace(
@@ -102,208 +148,295 @@ pub fn simulate_trace_with(
     speeds: &WorkerSpeeds,
     reassign: Reassign,
 ) -> Result<TraceOutcome, SimError> {
-    trace.validate().map_err(|e| SimError::Unrecoverable { at: 0.0, reason: e })?;
-    assert!(speeds.n_max() >= trace.n_max);
+    TraceSimulator::new(scheme).run(trace, job, cost, speeds, reassign)
+}
 
-    let mut active: Vec<usize> = (0..trace.n_initial).collect();
-    // Row coverage per slot (PerSet schemes).
-    let mut coverage: Vec<IntervalSet> = vec![IntervalSet::new(); trace.n_max];
-    // Completed global ids (Global schemes).
-    let mut done_ids: HashSet<usize> = HashSet::new();
+/// Reusable elastic-trace driver. All run state (worker table, coverage
+/// interval sets, completed-id bits, the event calendar, and the sweep
+/// scratch) is owned here and recycled, so Monte-Carlo loops pay the
+/// allocations once — construct one per scheme and call [`run`] per trial.
+///
+/// [`run`]: TraceSimulator::run
+pub struct TraceSimulator<'a> {
+    scheme: &'a dyn Scheme,
+    workers: Vec<WorkerState>,
+    /// Event calendar with lazy invalidation (see `Pending`).
+    calendar: BinaryHeap<Pending>,
+    /// Row coverage per slot (PerSet schemes) — indexed by slot id.
+    coverage: Vec<IntervalSet>,
+    /// Running Σ of newly-covered measure across all slots. Recovery needs
+    /// min-coverage >= K, which requires total measure >= K: the expensive
+    /// sweep is skipped until this cheap necessary condition holds.
+    covered_total: f64,
+    /// Completed global ids (Global schemes), flat bits + count.
+    done_flags: Vec<bool>,
+    done_count: usize,
+    /// Scratch for `min_coverage_with`.
+    sweep: Vec<(f64, i32)>,
+    active: Vec<usize>,
+    /// Event-transition scratch.
+    before_active: Vec<usize>,
+    before_pointers: Vec<usize>,
+    survivors: Vec<(usize, Option<(usize, usize)>)>,
+}
 
-    let mut waste = 0.0;
-    let mut reallocations = 0usize;
-    let mut completions = 0u64;
-    let mut t = 0.0f64;
-    let mut ev_idx = 0usize;
-
-    let mut alloc = scheme.allocate_active(&active);
-    let mut workers = init_workers(scheme, &alloc, &active, job, cost, speeds, &coverage, &done_ids, t);
-
-    let decode_time = cost.decode_time(scheme.decode_ops(job.u, job.v));
-
-    loop {
-        // Earliest in-flight completion.
-        let (next_t, who) = workers
-            .iter()
-            .enumerate()
-            .map(|(i, w)| (w.next_done, i))
-            .fold((f64::INFINITY, usize::MAX), |acc, x| if x.0 < acc.0 { x } else { acc });
-        let next_event_t = trace.events.get(ev_idx).map(|e| e.time).unwrap_or(f64::INFINITY);
-
-        if next_t.is_infinite() && next_event_t.is_infinite() {
-            return Err(SimError::Unrecoverable {
-                at: t,
-                reason: "all workers exhausted before recovery".into(),
-            });
-        }
-
-        if next_t <= next_event_t {
-            // A subtask completes.
-            t = next_t;
-            let slot = workers[who].slot;
-            let item = alloc.lists[who][workers[who].pointer];
-            completions += 1;
-            let recovered = match alloc.rule {
-                RecoveryRule::PerSet { sets, k } => {
-                    let g = sets as f64;
-                    coverage[slot]
-                        .insert(item.group as f64 / g, (item.group + 1) as f64 / g);
-                    min_coverage(&coverage) >= k
-                }
-                RecoveryRule::Global { k } => {
-                    done_ids.insert(item.group);
-                    done_ids.len() >= k
-                }
-            };
-            if recovered {
-                return Ok(TraceOutcome {
-                    computation_time: t,
-                    decode_time,
-                    transition_waste: waste,
-                    reallocations,
-                    completions,
-                });
-            }
-            workers[who].pointer += 1;
-            schedule_next(
-                scheme, &alloc, &mut workers[who], who, job, cost, speeds, &coverage,
-                &done_ids, t,
-            );
-        } else {
-            // Apply the batch of elastic events at this timestamp.
-            t = next_event_t;
-            let before_alloc = alloc.clone();
-            let before_active = active.clone();
-            let before_pointers: Vec<usize> = workers.iter().map(|w| w.pointer).collect();
-            while ev_idx < trace.events.len()
-                && (trace.events[ev_idx].time - t).abs() < 1e-12
-            {
-                match trace.events[ev_idx].kind {
-                    EventKind::Leave(s) => active.retain(|&x| x != s),
-                    EventKind::Join(s) => {
-                        active.push(s);
-                        active.sort_unstable();
-                    }
-                }
-                ev_idx += 1;
-            }
-            if active.is_empty() {
-                return Err(SimError::Unrecoverable { at: t, reason: "no active workers".into() });
-            }
-            if active.len() < scheme.min_workers() {
-                return Err(SimError::Unrecoverable {
-                    at: t,
-                    reason: format!(
-                        "{} active workers < scheme minimum {}",
-                        active.len(),
-                        scheme.min_workers()
-                    ),
-                });
-            }
-            alloc = scheme.allocate_active(&active);
-            // Transition waste over surviving workers (plus fresh joiners).
-            let survivors: Vec<(usize, Option<(usize, usize)>)> = active
-                .iter()
-                .enumerate()
-                .map(|(w_new, &slot)| {
-                    match before_active.iter().position(|&s| s == slot) {
-                        Some(w_old) => (w_new, Some((w_old, before_pointers[w_old]))),
-                        None => (w_new, None),
-                    }
-                })
-                .collect();
-            if reassign == Reassign::MaxOverlap
-                && matches!(alloc.rule, RecoveryRule::PerSet { .. })
-            {
-                let assignment = crate::tas::reassign::max_overlap_assignment(
-                    &before_alloc,
-                    &alloc,
-                    &survivors,
-                );
-                alloc = crate::tas::reassign::apply_assignment(&alloc, &assignment);
-            }
-            waste += transition::total_waste(&before_alloc, &alloc, &survivors);
-            if matches!(alloc.rule, RecoveryRule::PerSet { .. }) {
-                reallocations += 1;
-            }
-            workers = init_workers(
-                scheme, &alloc, &active, job, cost, speeds, &coverage, &done_ids, t,
-            );
+impl<'a> TraceSimulator<'a> {
+    pub fn new(scheme: &'a dyn Scheme) -> Self {
+        Self {
+            scheme,
+            workers: Vec::new(),
+            calendar: BinaryHeap::new(),
+            coverage: Vec::new(),
+            covered_total: 0.0,
+            done_flags: Vec::new(),
+            done_count: 0,
+            sweep: Vec::new(),
+            active: Vec::new(),
+            before_active: Vec::new(),
+            before_pointers: Vec::new(),
+            survivors: Vec::new(),
         }
     }
-}
 
-#[allow(clippy::too_many_arguments)]
-fn init_workers(
-    scheme: &dyn Scheme,
-    alloc: &Allocation,
-    active: &[usize],
-    job: JobSpec,
-    cost: &CostModel,
-    speeds: &WorkerSpeeds,
-    coverage: &[IntervalSet],
-    done_ids: &HashSet<usize>,
-    now: f64,
-) -> Vec<WorkerState> {
-    active
-        .iter()
-        .enumerate()
-        .map(|(w, &slot)| {
-            let mut st = WorkerState { slot, pointer: 0, next_done: f64::INFINITY };
-            schedule_next(scheme, alloc, &mut st, w, job, cost, speeds, coverage, done_ids, now);
-            st
-        })
-        .collect()
-}
+    fn reset(&mut self, trace: &ElasticTrace) {
+        self.workers.clear();
+        self.calendar.clear();
+        for set in &mut self.coverage {
+            set.clear();
+        }
+        if self.coverage.len() < trace.n_max {
+            self.coverage.resize_with(trace.n_max, IntervalSet::new);
+        }
+        self.covered_total = 0.0;
+        self.done_flags.clear();
+        self.done_count = 0;
+        self.active.clear();
+        self.active.extend(0..trace.n_initial);
+    }
 
-/// Advance `st` past already-covered items and set `next_done` for the
-/// first item with real work left (or INFINITY when exhausted).
-#[allow(clippy::too_many_arguments)]
-fn schedule_next(
-    scheme: &dyn Scheme,
-    alloc: &Allocation,
-    st: &mut WorkerState,
-    w: usize,
-    job: JobSpec,
-    cost: &CostModel,
-    speeds: &WorkerSpeeds,
-    coverage: &[IntervalSet],
-    done_ids: &HashSet<usize>,
-    now: f64,
-) -> bool {
-    let list = &alloc.lists[w];
-    let mult = speeds.multiplier(st.slot);
-    let n = alloc.workers();
-    loop {
-        if st.pointer >= list.len() {
-            st.next_done = f64::INFINITY;
+    /// Record a completed global id; returns true when newly completed.
+    fn mark_done(&mut self, id: usize) -> bool {
+        if id >= self.done_flags.len() {
+            self.done_flags.resize(id + 1, false);
+        }
+        if self.done_flags[id] {
             return false;
         }
-        let item = list[st.pointer];
-        match alloc.rule {
-            RecoveryRule::PerSet { sets, .. } => {
-                let g = sets as f64;
-                let (lo, hi) = (item.group as f64 / g, (item.group + 1) as f64 / g);
-                let uncovered = coverage[st.slot].uncovered_in(lo, hi);
-                if uncovered < 1e-12 {
-                    st.pointer += 1; // nothing left to compute; skip free
-                    continue;
-                }
-                // ops for the uncovered fraction of the whole encoded task:
-                // subtask_ops covers 1/g of the task.
-                let ops = scheme.subtask_ops(job.u, job.w, job.v, n) as f64 * uncovered * g;
-                st.next_done = now + cost.worker_time(ops.round() as u64, mult);
-                return true;
+        self.done_flags[id] = true;
+        self.done_count += 1;
+        true
+    }
+
+    /// (Re)compute worker `w`'s next completion and push it on the
+    /// calendar. Advances past already-covered items.
+    fn schedule(&mut self, alloc: &Allocation, w: usize, job: JobSpec, cost: &CostModel, speeds: &WorkerSpeeds, now: f64) {
+        let st = &mut self.workers[w];
+        st.gen = st.gen.wrapping_add(1);
+        let list = &alloc.lists[w];
+        let mult = speeds.multiplier(st.slot);
+        let n = alloc.workers();
+        loop {
+            if st.pointer >= list.len() {
+                st.next_done = f64::INFINITY;
+                return; // exhausted: never on the calendar
             }
-            RecoveryRule::Global { .. } => {
-                if done_ids.contains(&item.group) {
-                    st.pointer += 1;
-                    continue;
+            let item = list[st.pointer];
+            match alloc.rule {
+                RecoveryRule::PerSet { sets, .. } => {
+                    let g = sets as f64;
+                    let (lo, hi) = (item.group as f64 / g, (item.group + 1) as f64 / g);
+                    let uncovered = self.coverage[st.slot].uncovered_in(lo, hi);
+                    if uncovered < 1e-12 {
+                        st.pointer += 1; // nothing left to compute; skip free
+                        continue;
+                    }
+                    // ops for the uncovered fraction of the whole encoded
+                    // task: subtask_ops covers 1/g of the task.
+                    let ops =
+                        self.scheme.subtask_ops(job.u, job.w, job.v, n) as f64 * uncovered * g;
+                    st.next_done = now + cost.worker_time(ops.round() as u64, mult);
                 }
-                let ops = scheme.subtask_ops(job.u, job.w, job.v, n);
-                st.next_done = now + cost.worker_time(ops, mult);
-                return true;
+                RecoveryRule::Global { .. } => {
+                    if item.group < self.done_flags.len() && self.done_flags[item.group] {
+                        st.pointer += 1;
+                        continue;
+                    }
+                    let ops = self.scheme.subtask_ops(job.u, job.w, job.v, n);
+                    st.next_done = now + cost.worker_time(ops, mult);
+                }
+            }
+            self.calendar.push(Pending { time: st.next_done, who: w as u32, gen: st.gen });
+            return;
+        }
+    }
+
+    /// Rebuild the worker table for a fresh allocation epoch.
+    fn init_epoch(&mut self, alloc: &Allocation, job: JobSpec, cost: &CostModel, speeds: &WorkerSpeeds, now: f64) {
+        self.workers.clear();
+        self.calendar.clear();
+        for &slot in self.active.iter() {
+            self.workers.push(WorkerState {
+                slot,
+                pointer: 0,
+                next_done: f64::INFINITY,
+                gen: 0,
+            });
+        }
+        for w in 0..self.workers.len() {
+            self.schedule(alloc, w, job, cost, speeds, now);
+        }
+    }
+
+    /// Earliest live calendar entry, discarding stale ones.
+    fn peek_next(&mut self) -> Option<(f64, usize)> {
+        while let Some(p) = self.calendar.peek() {
+            let who = p.who as usize;
+            if self.workers[who].gen == p.gen {
+                return Some((p.time, who));
+            }
+            self.calendar.pop();
+        }
+        None
+    }
+
+    /// Simulate one trace. State from previous runs is fully recycled.
+    pub fn run(
+        &mut self,
+        trace: &ElasticTrace,
+        job: JobSpec,
+        cost: &CostModel,
+        speeds: &WorkerSpeeds,
+        reassign: Reassign,
+    ) -> Result<TraceOutcome, SimError> {
+        trace
+            .validate()
+            .map_err(|e| SimError::Unrecoverable { at: 0.0, reason: e })?;
+        assert!(speeds.n_max() >= trace.n_max);
+        self.reset(trace);
+
+        let mut waste = 0.0;
+        let mut reallocations = 0usize;
+        let mut completions = 0u64;
+        let mut t = 0.0f64;
+        let mut ev_idx = 0usize;
+
+        let mut alloc = self.scheme.allocate_active(&self.active);
+        self.init_epoch(&alloc, job, cost, speeds, t);
+
+        let decode_time = cost.decode_time(self.scheme.decode_ops(job.u, job.v));
+
+        loop {
+            // Earliest in-flight completion (lazy-heap lookup).
+            let (next_t, who) = self.peek_next().unwrap_or((f64::INFINITY, usize::MAX));
+            let next_event_t =
+                trace.events.get(ev_idx).map(|e| e.time).unwrap_or(f64::INFINITY);
+
+            if next_t.is_infinite() && next_event_t.is_infinite() {
+                return Err(SimError::Unrecoverable {
+                    at: t,
+                    reason: "all workers exhausted before recovery".into(),
+                });
+            }
+
+            if next_t <= next_event_t {
+                // A subtask completes.
+                self.calendar.pop();
+                t = next_t;
+                let slot = self.workers[who].slot;
+                let item = alloc.lists[who][self.workers[who].pointer];
+                completions += 1;
+                let recovered = match alloc.rule {
+                    RecoveryRule::PerSet { sets, k } => {
+                        let g = sets as f64;
+                        let added = self.coverage[slot]
+                            .insert(item.group as f64 / g, (item.group + 1) as f64 / g);
+                        self.covered_total += added;
+                        // Cheap necessary condition first: min-coverage
+                        // >= K forces total covered measure >= K.
+                        self.covered_total >= k as f64 - 1e-9
+                            && min_coverage_with(&self.coverage, &mut self.sweep) >= k
+                    }
+                    RecoveryRule::Global { k } => {
+                        self.mark_done(item.group);
+                        self.done_count >= k
+                    }
+                };
+                if recovered {
+                    return Ok(TraceOutcome {
+                        computation_time: t,
+                        decode_time,
+                        transition_waste: waste,
+                        reallocations,
+                        completions,
+                    });
+                }
+                self.workers[who].pointer += 1;
+                self.schedule(&alloc, who, job, cost, speeds, t);
+            } else {
+                // Apply the batch of elastic events at this timestamp.
+                t = next_event_t;
+                self.before_active.clear();
+                self.before_active.extend_from_slice(&self.active);
+                self.before_pointers.clear();
+                self.before_pointers.extend(self.workers.iter().map(|w| w.pointer));
+                while ev_idx < trace.events.len()
+                    && (trace.events[ev_idx].time - t).abs() < 1e-12
+                {
+                    match trace.events[ev_idx].kind {
+                        EventKind::Leave(s) => self.active.retain(|&x| x != s),
+                        EventKind::Join(s) => {
+                            self.active.push(s);
+                            self.active.sort_unstable();
+                        }
+                    }
+                    ev_idx += 1;
+                }
+                if self.active.is_empty() {
+                    return Err(SimError::Unrecoverable {
+                        at: t,
+                        reason: "no active workers".into(),
+                    });
+                }
+                if self.active.len() < self.scheme.min_workers() {
+                    return Err(SimError::Unrecoverable {
+                        at: t,
+                        reason: format!(
+                            "{} active workers < scheme minimum {}",
+                            self.active.len(),
+                            self.scheme.min_workers()
+                        ),
+                    });
+                }
+                // Hand the old allocation off without a deep clone.
+                let before_alloc = std::mem::replace(
+                    &mut alloc,
+                    self.scheme.allocate_active(&self.active),
+                );
+                // Transition waste over surviving workers (plus joiners).
+                self.survivors.clear();
+                for (w_new, &slot) in self.active.iter().enumerate() {
+                    let prior = self
+                        .before_active
+                        .iter()
+                        .position(|&s| s == slot)
+                        .map(|w_old| (w_old, self.before_pointers[w_old]));
+                    self.survivors.push((w_new, prior));
+                }
+                if reassign == Reassign::MaxOverlap
+                    && matches!(alloc.rule, RecoveryRule::PerSet { .. })
+                {
+                    let assignment = crate::tas::reassign::max_overlap_assignment(
+                        &before_alloc,
+                        &alloc,
+                        &self.survivors,
+                    );
+                    alloc = crate::tas::reassign::apply_assignment(&alloc, &assignment);
+                }
+                waste += transition::total_waste(&before_alloc, &alloc, &self.survivors);
+                if matches!(alloc.rule, RecoveryRule::PerSet { .. }) {
+                    reallocations += 1;
+                }
+                self.init_epoch(&alloc, job, cost, speeds, t);
             }
         }
     }
@@ -438,6 +571,46 @@ mod tests {
         for s in &schemes {
             let out = simulate_trace(s.as_ref(), &trace, job(), &cm(), &speeds);
             assert!(out.is_ok(), "{} failed: {:?}", s.name(), out.err());
+        }
+    }
+
+    #[test]
+    fn reused_simulator_matches_fresh_runs() {
+        // One TraceSimulator across many trials must equal one-off calls —
+        // state recycling may not leak between runs.
+        let scheme = Cec::new(2, 4);
+        let mut rng = default_rng(77);
+        let mut sim = TraceSimulator::new(&scheme);
+        for trial in 0..6 {
+            let speeds = WorkerSpeeds::sample(&SpeedModel::paper_default(), 8, &mut rng);
+            let trace = ElasticTrace::poisson(8, 4, 8, 0.05, 1e6, &mut rng);
+            let reused = sim.run(&trace, job(), &cm(), &speeds, Reassign::Identity);
+            let fresh = simulate_trace(&scheme, &trace, job(), &cm(), &speeds);
+            match (reused, fresh) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.computation_time, b.computation_time, "trial {trial}");
+                    assert_eq!(a.completions, b.completions, "trial {trial}");
+                    assert_eq!(a.transition_waste, b.transition_waste, "trial {trial}");
+                }
+                (Err(_), Err(_)) => {}
+                (a, b) => panic!("trial {trial}: reused {a:?} vs fresh {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bicec_reused_simulator_matches_fresh_runs() {
+        // Global-rule path: the done-bits must be recycled correctly.
+        let scheme = Bicec::new(600, 300, 8);
+        let mut rng = default_rng(78);
+        let mut sim = TraceSimulator::new(&scheme);
+        for trial in 0..4 {
+            let speeds = WorkerSpeeds::sample(&SpeedModel::paper_default(), 8, &mut rng);
+            let trace = ElasticTrace::poisson(8, 4, 8, 0.05, 1e6, &mut rng);
+            let a = sim.run(&trace, job(), &cm(), &speeds, Reassign::Identity).unwrap();
+            let b = simulate_trace(&scheme, &trace, job(), &cm(), &speeds).unwrap();
+            assert_eq!(a.computation_time, b.computation_time, "trial {trial}");
+            assert_eq!(a.completions, b.completions, "trial {trial}");
         }
     }
 }

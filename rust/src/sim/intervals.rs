@@ -22,33 +22,42 @@ impl IntervalSet {
         &self.ivs
     }
 
-    /// Insert [lo, hi), merging overlaps/adjacency.
-    pub fn insert(&mut self, lo: f64, hi: f64) {
+    /// Insert [lo, hi), merging overlaps/adjacency. Returns the measure of
+    /// [lo, hi) that was *newly* covered by this insert (0 when the range
+    /// was already fully covered) — the elastic simulator accumulates this
+    /// into a running total so the recovery check has a cheap O(1) gate.
+    ///
+    /// In-place merge: no allocation beyond occasional `Vec` growth, unlike
+    /// the previous rebuild-into-a-fresh-`Vec` implementation (this runs
+    /// once per completed subtask in the DES hot loop).
+    pub fn insert(&mut self, lo: f64, hi: f64) -> f64 {
         assert!(lo <= hi, "bad interval [{lo}, {hi})");
         if lo == hi {
-            return;
+            return 0.0;
         }
-        let mut merged = Vec::with_capacity(self.ivs.len() + 1);
-        let (mut lo, mut hi) = (lo, hi);
-        let mut placed = false;
-        for &(a, b) in &self.ivs {
-            if b < lo - 1e-12 {
-                merged.push((a, b));
-            } else if a > hi + 1e-12 {
-                if !placed {
-                    merged.push((lo, hi));
-                    placed = true;
-                }
-                merged.push((a, b));
-            } else {
-                lo = lo.min(a);
-                hi = hi.max(b);
-            }
+        // Intervals strictly left of the merge window.
+        let mut start = 0;
+        while start < self.ivs.len() && self.ivs[start].1 < lo - 1e-12 {
+            start += 1;
         }
-        if !placed {
-            merged.push((lo, hi));
+        // Intervals touching the merge window [lo - eps, hi + eps].
+        let mut end = start;
+        let (mut new_lo, mut new_hi) = (lo, hi);
+        let mut overlap = 0.0;
+        while end < self.ivs.len() && self.ivs[end].0 <= hi + 1e-12 {
+            let (a, b) = self.ivs[end];
+            overlap += (b.min(hi) - a.max(lo)).max(0.0);
+            new_lo = new_lo.min(a);
+            new_hi = new_hi.max(b);
+            end += 1;
         }
-        self.ivs = merged;
+        if start == end {
+            self.ivs.insert(start, (new_lo, new_hi));
+        } else {
+            self.ivs[start] = (new_lo, new_hi);
+            self.ivs.drain(start + 1..end);
+        }
+        ((hi - lo) - overlap).max(0.0)
     }
 
     pub fn measure(&self) -> f64 {
@@ -73,14 +82,26 @@ impl IntervalSet {
     pub fn is_empty(&self) -> bool {
         self.ivs.is_empty()
     }
+
+    /// Drop all intervals, keeping the allocation (trial-reuse hot path).
+    pub fn clear(&mut self) {
+        self.ivs.clear();
+    }
 }
 
 /// Minimum coverage multiplicity over [0, 1): how many of the given sets
 /// cover the least-covered point. Recovery for a (·, K) MDS code over row
 /// blocks requires `min_coverage(...) >= K`.
 pub fn min_coverage(sets: &[IntervalSet]) -> usize {
+    min_coverage_with(sets, &mut Vec::new())
+}
+
+/// `min_coverage` with a caller-owned scratch buffer for the endpoint
+/// sweep, so the per-completion recovery check in the elastic simulator
+/// allocates nothing in steady state.
+pub fn min_coverage_with(sets: &[IntervalSet], deltas: &mut Vec<(f64, i32)>) -> usize {
     // Endpoint sweep with +1/-1 deltas.
-    let mut deltas: Vec<(f64, i32)> = Vec::new();
+    deltas.clear();
     for s in sets {
         for &(a, b) in s.intervals() {
             deltas.push((a.max(0.0), 1));
@@ -93,7 +114,7 @@ pub fn min_coverage(sets: &[IntervalSet]) -> usize {
     let mut depth = 0i32;
     let mut min_depth = i32::MAX;
     let mut prev = 0.0f64;
-    for &(x, d) in &deltas {
+    for &(x, d) in deltas.iter() {
         if x > prev + 1e-12 && prev < 1.0 {
             min_depth = min_depth.min(depth);
         }
@@ -167,6 +188,47 @@ mod tests {
         let mut c = IntervalSet::new();
         c.insert(0.0, 0.4);
         assert_eq!(min_coverage(&[c, b]), 0);
+    }
+
+    #[test]
+    fn insert_returns_newly_covered_measure() {
+        let mut s = IntervalSet::new();
+        assert!((s.insert(0.2, 0.6) - 0.4).abs() < 1e-12);
+        // Fully inside existing coverage: nothing new.
+        assert!(s.insert(0.3, 0.5).abs() < 1e-12);
+        // Half overlapping: only the uncovered half counts.
+        assert!((s.insert(0.5, 0.8) - 0.2).abs() < 1e-12);
+        // Degenerate insert.
+        assert_eq!(s.insert(0.1, 0.1), 0.0);
+    }
+
+    #[test]
+    fn prop_insert_return_sums_to_measure() {
+        prop::check(60, |g| {
+            let mut s = IntervalSet::new();
+            let mut acc = 0.0;
+            for _ in 0..g.usize_in(1, 25) {
+                let lo = g.f64_in(0.0, 1.0);
+                let hi = lo + g.f64_in(0.0, 1.0 - lo);
+                acc += s.insert(lo, hi);
+            }
+            if (acc - s.measure()).abs() > 1e-9 {
+                return Err(format!("sum of inserts {acc} != measure {}", s.measure()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn min_coverage_with_reuses_dirty_scratch() {
+        let mut a = IntervalSet::new();
+        a.insert(0.0, 1.0);
+        let mut b = IntervalSet::new();
+        b.insert(0.0, 0.5);
+        let sets = [a, b];
+        let mut scratch = vec![(99.0, 7); 32]; // deliberately dirty
+        assert_eq!(min_coverage_with(&sets, &mut scratch), min_coverage(&sets));
+        assert_eq!(min_coverage_with(&sets, &mut scratch), 1);
     }
 
     #[test]

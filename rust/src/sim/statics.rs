@@ -5,6 +5,13 @@
 //! speeds the completion time of worker `w`'s `j`-th item is
 //! `(j+1) · subtask_time(w)`, so set completion times are order statistics —
 //! no event queue needed.
+//!
+//! Hot-path structure (EXPERIMENTS.md §Perf): every per-run allocation is
+//! hoisted into [`SimScratch`]; the Global (BICEC) order statistic is found
+//! by bisecting the f64 bit lattice against an O(N) counting function
+//! instead of materialising all `N·S` event times; and
+//! [`StaticSimulator`] / [`simulate_many`] amortise the scheme's
+//! `allocate(n)` across Monte-Carlo trials.
 
 use crate::tas::{Allocation, RecoveryRule, Scheme};
 use crate::workload::JobSpec;
@@ -32,6 +39,216 @@ impl RunResult {
     }
 }
 
+/// Reusable buffers for the order-statistics fast path. One instance per
+/// simulator (or per thread); `Default` starts empty and every buffer grows
+/// to its high-water mark, after which runs allocate nothing.
+#[derive(Debug, Default)]
+pub struct SimScratch {
+    /// Per-worker subtask duration for the current run.
+    taus: Vec<f64>,
+    /// Per-worker list length (Global rule).
+    lens: Vec<usize>,
+    /// PerSet: holders per set.
+    counts: Vec<usize>,
+    /// PerSet: prefix offsets into `times` (len = sets + 1).
+    offsets: Vec<usize>,
+    /// PerSet: write cursor per set during the scatter pass.
+    cursor: Vec<usize>,
+    /// PerSet: flat per-set completion-time buckets.
+    times: Vec<f64>,
+}
+
+/// Count events `(j+1) · taus[w] <= t` for `j < lens[w]`, exactly on the
+/// f64 multiplication lattice (the same expression the event times are
+/// generated from, so no epsilon is involved).
+fn count_events_at(lens: &[usize], taus: &[f64], t: f64) -> u64 {
+    let mut count = 0u64;
+    for (&len, &tau) in lens.iter().zip(taus) {
+        if len == 0 {
+            continue;
+        }
+        if tau <= 0.0 {
+            // Degenerate: every event at time 0.
+            if t >= 0.0 {
+                count += len as u64;
+            }
+            continue;
+        }
+        let mut q = ((t / tau).floor() as i64).clamp(0, len as i64);
+        // Repair fp division drift against the multiplication lattice.
+        while q < len as i64 && ((q + 1) as f64) * tau <= t {
+            q += 1;
+        }
+        while q > 0 && (q as f64) * tau > t {
+            q -= 1;
+        }
+        count += q as u64;
+    }
+    count
+}
+
+/// k-th smallest event time over all workers' arithmetic event sequences,
+/// via bisection on the f64 bit lattice: O(N · 64) instead of
+/// materialising and selecting over N·S event times. Exact — the result is
+/// the smallest representable time with `count >= k`, which is the k-th
+/// event time itself.
+fn kth_event_time(lens: &[usize], taus: &[f64], k: usize) -> f64 {
+    let total: u64 = lens.iter().map(|&l| l as u64).sum();
+    assert!(total >= k as u64, "only {total} events < K={k}");
+    if count_events_at(lens, taus, 0.0) >= k as u64 {
+        return 0.0;
+    }
+    let mut hi = 0.0f64;
+    for (&len, &tau) in lens.iter().zip(taus) {
+        hi = hi.max(len as f64 * tau.max(0.0));
+    }
+    debug_assert!(count_events_at(lens, taus, hi) >= k as u64);
+    // Positive finite f64s are ordered like their bit patterns.
+    let mut lo_bits = 0u64;
+    let mut hi_bits = hi.to_bits();
+    while lo_bits + 1 < hi_bits {
+        let mid = lo_bits + (hi_bits - lo_bits) / 2;
+        if count_events_at(lens, taus, f64::from_bits(mid)) >= k as u64 {
+            hi_bits = mid;
+        } else {
+            lo_bits = mid;
+        }
+    }
+    f64::from_bits(hi_bits)
+}
+
+/// Time until the recovery rule of `alloc` is met, given each worker's
+/// per-subtask duration `tau(w)`.
+pub fn computation_time(alloc: &Allocation, tau: impl Fn(usize) -> f64) -> f64 {
+    computation_time_with(alloc, tau, &mut SimScratch::default())
+}
+
+/// `computation_time` against caller-owned scratch (the figure harness's
+/// hot loop — §Perf).
+pub fn computation_time_with(
+    alloc: &Allocation,
+    tau: impl Fn(usize) -> f64,
+    scratch: &mut SimScratch,
+) -> f64 {
+    let n_workers = alloc.lists.len();
+    scratch.taus.clear();
+    scratch.taus.extend((0..n_workers).map(&tau));
+    match alloc.rule {
+        RecoveryRule::PerSet { sets, k } => {
+            // Bucket the per-set completion times into one flat buffer:
+            // count, prefix, scatter, then k-th selection per segment.
+            scratch.counts.clear();
+            scratch.counts.resize(sets, 0);
+            for list in &alloc.lists {
+                for item in list {
+                    scratch.counts[item.group] += 1;
+                }
+            }
+            scratch.offsets.clear();
+            scratch.offsets.reserve(sets + 1);
+            let mut acc = 0usize;
+            scratch.offsets.push(0);
+            for &c in &scratch.counts {
+                acc += c;
+                scratch.offsets.push(acc);
+            }
+            scratch.cursor.clear();
+            scratch.cursor.extend_from_slice(&scratch.offsets[..sets]);
+            scratch.times.clear();
+            scratch.times.resize(acc, 0.0);
+            for (w, list) in alloc.lists.iter().enumerate() {
+                let t = scratch.taus[w];
+                for (pos, item) in list.iter().enumerate() {
+                    let at = scratch.cursor[item.group];
+                    scratch.times[at] = (pos + 1) as f64 * t;
+                    scratch.cursor[item.group] += 1;
+                }
+            }
+            let mut worst = 0.0f64;
+            for m in 0..sets {
+                let seg = &mut scratch.times[scratch.offsets[m]..scratch.offsets[m + 1]];
+                assert!(
+                    seg.len() >= k,
+                    "set {m} has only {} holders < K={k}",
+                    seg.len()
+                );
+                // k-th order statistic via selection (O(d) vs O(d log d)
+                // sort) — this is the figure harness's hot loop (§Perf).
+                let (_, kth, _) =
+                    seg.select_nth_unstable_by(k - 1, |a, b| a.partial_cmp(b).unwrap());
+                worst = worst.max(*kth);
+            }
+            worst
+        }
+        RecoveryRule::Global { k } => {
+            scratch.lens.clear();
+            scratch.lens.extend(alloc.lists.iter().map(|l| l.len()));
+            kth_event_time(&scratch.lens, &scratch.taus, k)
+        }
+    }
+}
+
+/// Reusable static-run driver: caches the allocation per (scheme, n, job)
+/// and owns the scratch, so Monte-Carlo sweeps pay `allocate(n)` and the
+/// buffer allocations once instead of per trial.
+pub struct StaticSimulator<'a> {
+    scheme: &'a dyn Scheme,
+    /// (n, job, allocation, subtask ops) of the last-used geometry.
+    cached: Option<(usize, JobSpec, Allocation, u64)>,
+    scratch: SimScratch,
+}
+
+impl<'a> StaticSimulator<'a> {
+    pub fn new(scheme: &'a dyn Scheme) -> Self {
+        Self { scheme, cached: None, scratch: SimScratch::default() }
+    }
+
+    /// Simulate one static run of the scheme with `n` available workers.
+    pub fn run(
+        &mut self,
+        n: usize,
+        job: JobSpec,
+        cost: &CostModel,
+        speeds: &WorkerSpeeds,
+    ) -> RunResult {
+        assert!(speeds.n_max() >= n, "need speeds for {n} slots");
+        let rebuild = match &self.cached {
+            Some((cn, cjob, _, _)) => *cn != n || *cjob != job,
+            None => true,
+        };
+        if rebuild {
+            let alloc = self.scheme.allocate(n);
+            let ops = self.scheme.subtask_ops(job.u, job.w, job.v, n);
+            self.cached = Some((n, job, alloc, ops));
+        }
+        let (_, _, alloc, ops) = self.cached.as_ref().expect("cached above");
+        let (alloc, ops) = (alloc, *ops);
+        let comp = computation_time_with(
+            alloc,
+            |w| cost.worker_time(ops, speeds.multiplier(w)),
+            &mut self.scratch,
+        );
+        let decode = cost.decode_time(self.scheme.decode_ops(job.u, job.v));
+        let mut total = 0u64;
+        for (w, list) in alloc.lists.iter().enumerate() {
+            let tau = cost.worker_time(ops, speeds.multiplier(w));
+            let done = ((comp / tau).floor() as usize).min(list.len());
+            total += done as u64;
+        }
+        // completions consumed: K per set, or K overall.
+        let used = match alloc.rule {
+            RecoveryRule::PerSet { sets, k } => (sets * k) as u64,
+            RecoveryRule::Global { k } => k as u64,
+        };
+        RunResult {
+            computation_time: comp,
+            decode_time: decode,
+            completions_used: used,
+            completions_total: total,
+        }
+    }
+}
+
 /// Simulate one static run of `scheme` with `n` available workers
 /// (slots `0..n` active).
 pub fn simulate_static(
@@ -41,67 +258,23 @@ pub fn simulate_static(
     cost: &CostModel,
     speeds: &WorkerSpeeds,
 ) -> RunResult {
-    assert!(speeds.n_max() >= n, "need speeds for {n} slots");
-    let alloc = scheme.allocate(n);
-    let ops = scheme.subtask_ops(job.u, job.w, job.v, n);
-    let comp = computation_time(&alloc, |w| cost.worker_time(ops, speeds.multiplier(w)));
-    let decode = cost.decode_time(scheme.decode_ops(job.u, job.v));
-    let mut total = 0u64;
-    for (w, list) in alloc.lists.iter().enumerate() {
-        let tau = cost.worker_time(ops, speeds.multiplier(w));
-        let done = ((comp / tau).floor() as usize).min(list.len());
-        total += done as u64;
-    }
-    // completions consumed: K per set, or K overall.
-    let used = match alloc.rule {
-        RecoveryRule::PerSet { sets, k } => (sets * k) as u64,
-        RecoveryRule::Global { k } => k as u64,
-    };
-    RunResult { computation_time: comp, decode_time: decode, completions_used: used, completions_total: total }
+    StaticSimulator::new(scheme).run(n, job, cost, speeds)
 }
 
-/// Time until the recovery rule of `alloc` is met, given each worker's
-/// per-subtask duration `tau(w)`.
-pub fn computation_time(alloc: &Allocation, tau: impl Fn(usize) -> f64) -> f64 {
-    match alloc.rule {
-        RecoveryRule::PerSet { sets, k } => {
-            // completion of set m = k-th smallest over holders' item times.
-            let mut set_times: Vec<Vec<f64>> = vec![Vec::new(); sets];
-            for (w, list) in alloc.lists.iter().enumerate() {
-                let t = tau(w);
-                for (pos, item) in list.iter().enumerate() {
-                    set_times[item.group].push((pos + 1) as f64 * t);
-                }
-            }
-            let mut worst = 0.0f64;
-            for (m, times) in set_times.iter_mut().enumerate() {
-                assert!(
-                    times.len() >= k,
-                    "set {m} has only {} holders < K={k}",
-                    times.len()
-                );
-                // k-th order statistic via selection (O(d) vs O(d log d)
-                // sort) — this is the figure harness's hot loop (§Perf).
-                let (_, kth, _) = times
-                    .select_nth_unstable_by(k - 1, |a, b| a.partial_cmp(b).unwrap());
-                worst = worst.max(*kth);
-            }
-            worst
-        }
-        RecoveryRule::Global { k } => {
-            let mut events: Vec<f64> = Vec::new();
-            for (w, list) in alloc.lists.iter().enumerate() {
-                let t = tau(w);
-                for pos in 0..list.len() {
-                    events.push((pos + 1) as f64 * t);
-                }
-            }
-            assert!(events.len() >= k, "only {} events < K={k}", events.len());
-            let (_, kth, _) =
-                events.select_nth_unstable_by(k - 1, |a, b| a.partial_cmp(b).unwrap());
-            *kth
-        }
-    }
+/// Batch driver: one run per entry of `speeds_per_trial`, amortising the
+/// allocation and scratch across the whole Monte-Carlo sweep.
+pub fn simulate_many(
+    scheme: &dyn Scheme,
+    n: usize,
+    job: JobSpec,
+    cost: &CostModel,
+    speeds_per_trial: &[WorkerSpeeds],
+) -> Vec<RunResult> {
+    let mut sim = StaticSimulator::new(scheme);
+    speeds_per_trial
+        .iter()
+        .map(|speeds| sim.run(n, job, cost, speeds))
+        .collect()
 }
 
 #[cfg(test)]
@@ -140,6 +313,70 @@ mod tests {
         let ops = scheme.subtask_ops(240, 240, 240, 8);
         let tau = cm().worker_time(ops, 1.0);
         assert!((r.computation_time - 75.0 * tau).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kth_event_time_matches_materialised_selection() {
+        // Cross-check the bit-lattice bisection against the sort-everything
+        // reference on irregular speeds and list lengths.
+        let mut rng = default_rng(40);
+        for trial in 0..50 {
+            let n = 1 + (trial % 7);
+            let lens: Vec<usize> = (0..n).map(|_| (rng.next_u64() % 9) as usize).collect();
+            let taus: Vec<f64> = (0..n)
+                .map(|_| 0.25 + (rng.next_u64() % 1000) as f64 / 250.0)
+                .collect();
+            let mut events: Vec<f64> = Vec::new();
+            for (&len, &tau) in lens.iter().zip(&taus) {
+                for pos in 0..len {
+                    events.push((pos + 1) as f64 * tau);
+                }
+            }
+            if events.is_empty() {
+                continue;
+            }
+            events.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for k in [1, events.len() / 2 + 1, events.len()] {
+                let fast = kth_event_time(&lens, &taus, k);
+                let want = events[k - 1];
+                assert_eq!(fast, want, "trial {trial} k={k}: {fast} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn simulate_many_matches_one_off_runs() {
+        let scheme = Bicec::new(800, 80, 40);
+        let job = JobSpec::paper_square();
+        let mut rng = default_rng(41);
+        let speeds: Vec<WorkerSpeeds> = (0..8)
+            .map(|_| WorkerSpeeds::sample(&SpeedModel::paper_default(), 40, &mut rng))
+            .collect();
+        let batch = simulate_many(&scheme, 40, job, &cm(), &speeds);
+        assert_eq!(batch.len(), 8);
+        for (i, sp) in speeds.iter().enumerate() {
+            let single = simulate_static(&scheme, 40, job, &cm(), sp);
+            assert_eq!(
+                batch[i].computation_time, single.computation_time,
+                "trial {i} diverged"
+            );
+            assert_eq!(batch[i].completions_total, single.completions_total);
+        }
+    }
+
+    #[test]
+    fn static_simulator_reuse_across_n_and_job() {
+        // Geometry changes must invalidate the cached allocation.
+        let scheme = Cec::new(2, 4);
+        let speeds = WorkerSpeeds::uniform(10);
+        let mut sim = StaticSimulator::new(&scheme);
+        let a = sim.run(8, JobSpec::new(240, 240, 240), &cm(), &speeds);
+        let b = sim.run(10, JobSpec::new(240, 240, 240), &cm(), &speeds);
+        let c = sim.run(8, JobSpec::new(480, 240, 240), &cm(), &speeds);
+        let a2 = sim.run(8, JobSpec::new(240, 240, 240), &cm(), &speeds);
+        assert_eq!(a.computation_time, a2.computation_time);
+        assert_ne!(a.computation_time, b.computation_time);
+        assert_ne!(a.computation_time, c.computation_time);
     }
 
     #[test]
