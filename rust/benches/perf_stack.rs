@@ -13,11 +13,11 @@
 use hcec::bench::{header, Bench, BenchResult, JsonReport};
 use hcec::codes::RealMdsCode;
 use hcec::linalg::{gemm, gemm_naive, gemm_single_thread, Matrix};
-use hcec::rng::{default_rng, Rng};
+use hcec::rng::{default_rng, trial_rng, Rng};
 use hcec::runtime::{artifacts_available, default_artifact_dir, Runtime};
 use hcec::sim::{
-    simulate_many, simulate_static, CostModel, ElasticTrace, SpeedModel, TraceSimulator,
-    WorkerSpeeds,
+    simulate_many, simulate_static, CostModel, ElasticTrace, Reassign, SpeedModel,
+    TraceMonteCarlo, TraceSimulator, WorkerSpeeds,
 };
 use hcec::tas::{Bicec, Cec, Mlcec, Scheme};
 use hcec::workload::JobSpec;
@@ -149,6 +149,79 @@ fn main() {
         800.0 * stream as f64 / r.summary.mean
     );
     report.push(&r, &[("symbol_macs_per_sec", 800.0 * stream as f64 / r.summary.mean)]);
+    // Tiled multi-share encode: one pass over the data per 8 shares, for
+    // the (800, 3200) encode sweep.
+    let share_ids: Vec<usize> = (0..8).map(|i| i * 397 + 17).collect();
+    let r = Bench::new("rs encode_shares k800 x64 tile8")
+        .run(|| rs.encode_shares(&gf_data, &share_ids));
+    r.print();
+    let tiled_macs = 8.0 * 800.0 * stream as f64;
+    println!("    -> {:.2e} symbol-MACs/s (tiled)", tiled_macs / r.summary.mean);
+    report.push(&r, &[("symbol_macs_per_sec", tiled_macs / r.summary.mean)]);
+
+    println!(
+        "\n-- N-sweep: deterministic parallel Monte-Carlo ({} thread budget) --",
+        hcec::threads::max_threads()
+    );
+    // Quick mode trims the grid: one N=2560 trace trial costs whole
+    // seconds, which would defeat the smoke's ~20x shrink. The large-N
+    // rows belong to full (baseline) runs only.
+    let sweep_ns: &[usize] = if hcec::bench::quick_mode() {
+        println!("(quick mode: N-sweep limited to {{40, 160}}; run without HCEC_BENCH_QUICK for the full grid)");
+        &[40, 160]
+    } else {
+        &[40, 160, 640, 2560]
+    };
+    for &n in sweep_ns {
+        let cec_n = Cec::new(10, 20);
+        let trials = 32;
+        // Counter-derived per-trial streams: the sweep inputs are
+        // reproducible regardless of thread count or trial order.
+        let speeds_n: Vec<WorkerSpeeds> = (0..trials)
+            .map(|i| {
+                let mut rng = trial_rng(11, i as u64);
+                WorkerSpeeds::sample(&SpeedModel::paper_default(), n, &mut rng)
+            })
+            .collect();
+        let r = Bench::new(format!("mc static cec n{n} x{trials}"))
+            .run(|| simulate_many(&cec_n, n, job, &cost, &speeds_n));
+        r.print();
+        let events = (trials * n * 20) as f64;
+        println!("    -> {:.2e} subtask-events/s", events_per_sec(&r, events));
+        report.push(
+            &r,
+            &[("n", n as f64), ("subtask_events_per_sec", events_per_sec(&r, events))],
+        );
+
+        // Elastic churn scaled with the fleet: fixed per-node event rate,
+        // horizon tracking the (shrinking) run length; trace trials taper
+        // with N to keep the smoke affordable.
+        let tau_n = cost.worker_time(cec_n.subtask_ops(job.u, job.w, job.v, n), 1.0);
+        let horizon = 2.0 * 20.0 * tau_n;
+        let mc = TraceMonteCarlo {
+            n_max: n,
+            n_min: (n / 2).max(20),
+            n_initial: n,
+            rate: 0.25 * n as f64 / horizon,
+            horizon,
+            speed_model: SpeedModel::paper_default(),
+            reassign: Reassign::Identity,
+            seed: 12,
+        };
+        let trace_trials = match n {
+            40 => 16,
+            160 => 8,
+            640 => 4,
+            _ => 2,
+        };
+        // Trace trials are seconds-scale at large N: lower the sample
+        // floor so one row never dominates the run.
+        let r = Bench::new(format!("mc trace cec n{n} x{trace_trials}"))
+            .samples(5, 10_000)
+            .run(|| mc.run(&cec_n, job, &cost, trace_trials));
+        r.print();
+        report.push(&r, &[("n", n as f64)]);
+    }
 
     if artifacts_available() {
         println!("\n-- PJRT execute latency (compiled-once artifacts) --");

@@ -183,6 +183,24 @@ pub fn dlevels(args: &Args) -> Result<(), String> {
     emit(&figures::dlevel_table(&cfg), "ext_t2_dlevels", args)
 }
 
+/// `hcec scaling`: the large-N scenario sweep (static + elastic trace)
+/// with fleet-proportional churn. N = 2560 with the default 20 trials
+/// takes minutes; trim with `--ns` / `--trials` for a quick look.
+pub fn scaling(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let ns = args
+        .parse_list::<usize>("ns")?
+        .unwrap_or_else(|| figures::SCALING_NS.to_vec());
+    if let Some(&bad) = ns.iter().find(|&&n| n < cfg.s_cec) {
+        return Err(format!(
+            "--ns {bad} below S={} (CEC/MLCEC need N >= S)",
+            cfg.s_cec
+        ));
+    }
+    let rate = args.parse_flag::<f64>("rate")?.unwrap_or(1.0);
+    emit(&figures::scaling_table(&cfg, &ns, rate, cfg.trials), "scaling_nsweep", args)
+}
+
 pub fn visualize(_args: &Args) -> Result<(), String> {
     for n in [8, 6, 4] {
         println!("{}", figures::fig1_grid(n));

@@ -31,6 +31,7 @@ pub fn dispatch(argv: &[String]) -> i32 {
         Some("run") => commands::run(&args),
         Some("trace") => commands::trace(&args),
         Some("sweep") => commands::sweep(&args),
+        Some("scaling") => commands::scaling(&args),
         Some("dlevels") => commands::dlevels(&args),
         Some("serve") => commands::serve(&args),
         Some("hierarchy") => commands::hierarchy(&args),
@@ -68,6 +69,10 @@ USAGE:
       (Ext-T1); --file replays a recorded trace (format: sim::trace).
   hcec sweep [--slowdowns 2,5,10] [--probs 0.25,0.5,0.75] [--trials N]
       Straggler-model robustness ablation (Ext-T3).
+  hcec scaling [--ns 40,160,640,2560] [--rate R] [--trials N]
+      Large-N scenario sweep: static + elastic-trace computation means
+      with fleet-proportional churn (R events per node per horizon),
+      on the deterministic parallel Monte-Carlo engine (HCEC_THREADS).
   hcec dlevels [--trials N]
       MLCEC d-level policy ablation (Ext-T2).
   hcec reassign [--rate R] [--trials N]

@@ -154,6 +154,40 @@ pub fn addmul_slice(acc: &mut [Gf16], c: Gf16, xs: &[Gf16]) {
     }
 }
 
+/// Discrete log base alpha of a nonzero element. Panics on zero (zero has
+/// no log); used to build log-domain power tables for the tiled encoder.
+#[inline]
+pub fn discrete_log(x: Gf16) -> u16 {
+    assert!(x.0 != 0, "discrete log of zero in GF(2^16)");
+    tables().log[x.0 as usize]
+}
+
+/// Tiled polynomial evaluation — the multi-share encode kernel.
+///
+/// `lpow[l * tile + t]` must hold the discrete log of `x_t^l` for the
+/// tile's (nonzero) evaluation points `x_0 .. x_{tile-1}`; `out[t]`
+/// accumulates `Σ_l coeffs[l] · x_t^l` (XOR sum) on top of its current
+/// contents, so callers zero `out` first. The coefficient's log is looked
+/// up once per `l` and shared by the whole tile: evaluating `tile` shares
+/// makes ONE pass over the coefficients where per-share [`dot`] calls
+/// make `tile`, and the per-element work drops to a single exp-table read.
+pub fn poly_eval_tile(coeffs: &[Gf16], lpow: &[u16], tile: usize, out: &mut [Gf16]) {
+    assert_eq!(out.len(), tile, "output/tile mismatch");
+    assert_eq!(lpow.len(), coeffs.len() * tile, "power table/tile mismatch");
+    let t = tables();
+    for (l, c) in coeffs.iter().enumerate() {
+        if c.0 == 0 {
+            continue;
+        }
+        let lc = t.log[c.0 as usize] as usize;
+        let row = &lpow[l * tile..(l + 1) * tile];
+        for (o, &lp) in out.iter_mut().zip(row) {
+            // lc + lp < 2 * (2^16 - 1): covered by the doubled exp table.
+            o.0 ^= t.exp[lc + lp as usize];
+        }
+    }
+}
+
 /// Inner product `Σ_i a[i] · b[i]` over the field (sum is XOR).
 ///
 /// Panics if the slices have different lengths.
@@ -321,6 +355,64 @@ mod tests {
             let got = dot(&a, &b);
             if got != want {
                 return Err(format!("dot mismatch: got {:#x} want {:#x}", got.0, want.0));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn discrete_log_round_trips_through_pow() {
+        let a = Gf16::alpha();
+        for e in [0u64, 1, 2, 7, 1000, 65534] {
+            assert_eq!(discrete_log(a.pow(e)) as u64, e % 65535, "e={e}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "discrete log of zero")]
+    fn discrete_log_rejects_zero() {
+        let _ = discrete_log(Gf16::ZERO);
+    }
+
+    #[test]
+    fn prop_poly_eval_tile_matches_per_point_dot() {
+        prop::check(60, |g| {
+            let k = g.usize_in(1, 24);
+            let tile = g.usize_in(1, 9);
+            // Nonzero evaluation points with their log-domain power rows,
+            // interleaved as [l][t].
+            let points: Vec<Gf16> =
+                (0..tile).map(|_| Gf16((g.u64() as u16).max(1))).collect();
+            let mut lpow = vec![0u16; k * tile];
+            for (t, &x) in points.iter().enumerate() {
+                let lx = discrete_log(x) as u32;
+                let mut cur = 0u32;
+                for l in 0..k {
+                    lpow[l * tile + t] = cur as u16;
+                    cur += lx;
+                    if cur >= 65535 {
+                        cur -= 65535;
+                    }
+                }
+            }
+            let coeffs = stream_with_zeros(g, k);
+            let mut got = vec![Gf16::ZERO; tile];
+            poly_eval_tile(&coeffs, &lpow, tile, &mut got);
+            for (t, &x) in points.iter().enumerate() {
+                // Reference: explicit power row + dot.
+                let mut powers = Vec::with_capacity(k);
+                let mut p = Gf16::ONE;
+                for _ in 0..k {
+                    powers.push(p);
+                    p = p.mul(x);
+                }
+                let want = dot(&coeffs, &powers);
+                if got[t] != want {
+                    return Err(format!(
+                        "tile eval mismatch at t={t}: got {:#x} want {:#x} (k={k})",
+                        got[t].0, want.0
+                    ));
+                }
             }
             Ok(())
         });

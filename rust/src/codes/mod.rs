@@ -19,7 +19,7 @@ mod mds;
 mod rs;
 mod vandermonde;
 
-pub use gf::{addmul_slice, dot, mul_slice, Gf16};
+pub use gf::{addmul_slice, discrete_log, dot, mul_slice, poly_eval_tile, Gf16};
 pub use mds::{DecodeError, RealMdsCode};
-pub use rs::{dequantize, quantize, RsCode};
+pub use rs::{dequantize, quantize, RsCode, ENCODE_TILE};
 pub use vandermonde::{chebyshev_points, vandermonde, Vandermonde};

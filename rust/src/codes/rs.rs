@@ -8,9 +8,11 @@
 //!
 //! Hot-path structure (the batch-throughput pass):
 //!
-//! * `encode_share` materialises the share's evaluation-point power row
-//!   once, then each stream position is one bulk `gf::dot` — table lookups
-//!   are hoisted out of the per-symbol loop.
+//! * `encode_shares` tiles the encode: a tile of [`ENCODE_TILE`] shares is
+//!   evaluated per pass over the data through log-domain power rows
+//!   (`gf::poly_eval_tile`), so each stream position's coefficient logs
+//!   are looked up once and shared by every share in the tile —
+//!   `encode_share` is the tile-of-one special case.
 //! * `decode` splits into (a) obtaining the inverted k x k decode matrix
 //!   and (b) the combine, `out[j] = Σ_l inv[j][l] · share_l`, written with
 //!   `gf::addmul_slice` so long symbol streams amortise every lookup.
@@ -25,7 +27,7 @@
 use std::sync::{Arc, Mutex};
 
 use super::cache::LruCache;
-use super::gf::{addmul_slice, dot, Gf16};
+use super::gf::{addmul_slice, discrete_log, poly_eval_tile, Gf16};
 
 #[derive(Debug)]
 pub enum RsError {
@@ -50,6 +52,11 @@ impl std::error::Error for RsError {}
 /// k² symbols (1.25 MiB at k = 800), so the cap stays small; the master
 /// only ever cycles through a handful of live completed sets at a time.
 const DEFAULT_DECODE_CACHE: usize = 8;
+
+/// Shares encoded per pass over the data by `encode_shares`: the tile's
+/// log-power rows (`ENCODE_TILE` u16s per coefficient) plus the
+/// coefficient stream stay cache-resident at the BICEC scale (k = 800).
+pub const ENCODE_TILE: usize = 8;
 
 /// Systematic-free RS code: share i = p(alpha^i), p's coefficients = data.
 #[derive(Debug)]
@@ -111,24 +118,55 @@ impl RsCode {
 
     /// Encode one share: data is a stream of symbol vectors, each of length
     /// k (one polynomial per stream position). Output has the same stream
-    /// length, one symbol per position.
+    /// length, one symbol per position. Tile-of-one case of
+    /// [`encode_shares`](Self::encode_shares).
     pub fn encode_share(&self, data: &[Vec<Gf16>], share: usize) -> Vec<Gf16> {
-        assert!(share < self.n);
-        let x = self.points[share];
-        // Power row x^0 .. x^(k-1), built once per share; every stream
-        // position is then a bulk dot product against it.
-        let mut powers = Vec::with_capacity(self.k);
-        let mut p = Gf16::ONE;
-        for _ in 0..self.k {
-            powers.push(p);
-            p = p.mul(x);
-        }
-        data.iter()
-            .map(|coeffs| {
+        self.encode_shares(data, &[share]).pop().expect("one share requested")
+    }
+
+    /// Encode several shares with shared power-row tiling: each tile of
+    /// [`ENCODE_TILE`] shares is evaluated in ONE pass over the data. The
+    /// tile's evaluation-point powers are precomputed in the log domain
+    /// (`lpow[l][t] = log(x_t^l)`, an arithmetic progression mod 2^16 - 1),
+    /// so per stream position each coefficient's log is read once and
+    /// combined with every share's power by a single exp-table lookup —
+    /// where per-share encodes re-walk the data (and the log table) once
+    /// per share. Entry `i` equals `encode_share(data, shares[i])` exactly.
+    pub fn encode_shares(&self, data: &[Vec<Gf16>], shares: &[usize]) -> Vec<Vec<Gf16>> {
+        let mut out: Vec<Vec<Gf16>> =
+            shares.iter().map(|_| vec![Gf16::ZERO; data.len()]).collect();
+        let mut lpow: Vec<u16> = Vec::new();
+        let mut acc = [Gf16::ZERO; ENCODE_TILE];
+        for (chunk_idx, tile_shares) in shares.chunks(ENCODE_TILE).enumerate() {
+            let tile_start = chunk_idx * ENCODE_TILE;
+            let tile = tile_shares.len();
+            // lpow[l * tile + t] = log(points[share_t]^l), interleaved so
+            // the kernel's inner loop over the tile is contiguous.
+            lpow.clear();
+            lpow.resize(self.k * tile, 0);
+            for (t, &share) in tile_shares.iter().enumerate() {
+                assert!(share < self.n, "share {share} out of range (n = {})", self.n);
+                let lx = discrete_log(self.points[share]) as u32;
+                let mut cur = 0u32;
+                for l in 0..self.k {
+                    lpow[l * tile + t] = cur as u16;
+                    cur += lx;
+                    if cur >= 65535 {
+                        cur -= 65535;
+                    }
+                }
+            }
+            for (pos, coeffs) in data.iter().enumerate() {
                 debug_assert_eq!(coeffs.len(), self.k);
-                dot(coeffs, &powers)
-            })
-            .collect()
+                let acc = &mut acc[..tile];
+                acc.fill(Gf16::ZERO);
+                poly_eval_tile(coeffs, &lpow, tile, acc);
+                for (t, &sym) in acc.iter().enumerate() {
+                    out[tile_start + t][pos] = sym;
+                }
+            }
+        }
+        out
     }
 
     /// Invert the k x k Vandermonde of the given evaluation rows via
@@ -342,14 +380,55 @@ mod tests {
     }
 
     #[test]
+    fn prop_encode_shares_matches_per_share_encode() {
+        // The tiled encoder must be bit-identical to per-share evaluation,
+        // across tile-boundary lengths, duplicates, and arbitrary order.
+        prop::check(25, |g| {
+            let k = g.usize_in(1, 12);
+            let n = k + g.usize_in(0, 20);
+            let code = RsCode::new(n, k).unwrap();
+            let stream = g.usize_in(0, 6);
+            let data: Vec<Vec<Gf16>> = (0..stream)
+                .map(|_| (0..k).map(|_| Gf16(g.u64() as u16)).collect())
+                .collect();
+            // 0..=2*ENCODE_TILE+1 shares crosses whole-tile and remainder
+            // paths; duplicates are legal.
+            let count = g.usize_in(0, 2 * ENCODE_TILE + 1);
+            let shares: Vec<usize> = (0..count).map(|_| g.usize_in(0, n - 1)).collect();
+            let tiled = code.encode_shares(&data, &shares);
+            if tiled.len() != shares.len() {
+                return Err(format!("{} outputs for {} shares", tiled.len(), shares.len()));
+            }
+            for (i, &s) in shares.iter().enumerate() {
+                // Reference: the original power-row + dot evaluation.
+                let x = code.points[s];
+                let mut powers = Vec::with_capacity(k);
+                let mut p = Gf16::ONE;
+                for _ in 0..k {
+                    powers.push(p);
+                    p = p.mul(x);
+                }
+                let want: Vec<Gf16> =
+                    data.iter().map(|coeffs| super::super::gf::dot(coeffs, &powers)).collect();
+                if tiled[i] != want {
+                    return Err(format!(
+                        "share {s} (slot {i}) diverged from reference (n={n} k={k})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn bicec_scale_code_constructs_and_decodes() {
-        // The paper's BICEC configuration: (3200, 800). Exactness at scale.
+        // The paper's BICEC configuration: (3200, 800). Exactness at scale,
+        // through the tiled multi-share encoder.
         let code = RsCode::new(3200, 800).unwrap();
         let data: Vec<Vec<Gf16>> = vec![(0..800).map(|i| Gf16(i as u16 * 7 + 1)).collect()];
         // Encode a scattered subset of shares and decode from them.
         let subset: Vec<usize> = (0..800).map(|i| i * 4 % 3200 + i / 800).collect();
-        let shares: Vec<Vec<Gf16>> =
-            subset.iter().map(|&i| code.encode_share(&data, i)).collect();
+        let shares: Vec<Vec<Gf16>> = code.encode_shares(&data, &subset);
         let completed: Vec<(usize, &[Gf16])> = subset
             .iter()
             .zip(shares.iter())

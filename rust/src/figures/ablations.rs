@@ -4,11 +4,29 @@
 use crate::config::ExperimentConfig;
 use crate::metrics::{mean, Table};
 use crate::rng::default_rng;
-use crate::sim::{
-    simulate_many, simulate_static, ElasticTrace, Reassign, TraceSimulator, WorkerSpeeds,
-};
+use crate::sim::{simulate_many, simulate_static, Reassign, TraceMonteCarlo, WorkerSpeeds};
 use crate::tas::{Bicec, Cec, DLevelPolicy, HeteroCec, Mlcc, Mlcec, Scheme};
 use crate::workload::JobSpec;
+
+/// The Ext-T1/T4 elastic experiment: Fig. 1 geometry (8 slots, floor 4),
+/// ~`event_rate` Poisson events per horizon, horizon scaled to the job so
+/// events land mid-run. Counter-derived trial streams → the trial pool is
+/// parallel yet bit-identical to serial, and every scheme/policy sees the
+/// same per-trial (speeds, trace) — the paired comparison.
+fn fig1_scale_mc(cfg: &ExperimentConfig, job: JobSpec, event_rate: f64) -> TraceMonteCarlo {
+    let cost = cfg.cost_model();
+    let horizon = 400.0 * cost.worker_time(job.ops() / 2400, 1.0);
+    TraceMonteCarlo {
+        n_max: 8,
+        n_min: 4,
+        n_initial: 8,
+        rate: event_rate / horizon,
+        horizon,
+        speed_model: cfg.speed_model(),
+        reassign: Reassign::Identity,
+        seed: cfg.seed,
+    }
+}
 
 /// Ext-T1: transition waste + finishing time under Poisson elasticity.
 /// BICEC's zero-waste property is the paper's Sec. 2 claim.
@@ -21,6 +39,7 @@ pub fn transition_waste_table(cfg: &ExperimentConfig, event_rate: f64) -> Table 
         Box::new(Bicec::new(600, 300, 8)),
     ];
     let cost = cfg.cost_model();
+    let mc = fig1_scale_mc(cfg, job, event_rate);
     let mut t = Table::new(&[
         "scheme",
         "avg_waste_taskfrac",
@@ -29,17 +48,10 @@ pub fn transition_waste_table(cfg: &ExperimentConfig, event_rate: f64) -> Table 
         "failures",
     ]);
     for scheme in &schemes {
-        let mut rng = default_rng(cfg.seed);
         let (mut wastes, mut reallocs, mut comps) = (Vec::new(), Vec::new(), Vec::new());
         let mut failures = 0usize;
-        // One simulator per scheme: scratch buffers recycle across trials.
-        let mut sim = TraceSimulator::new(scheme.as_ref());
-        for _ in 0..cfg.trials {
-            let speeds = WorkerSpeeds::sample(&cfg.speed_model(), 8, &mut rng);
-            // Scale the horizon to the job so events land mid-run.
-            let horizon = 400.0 * cost.worker_time(job.ops() / 2400, 1.0);
-            let trace = ElasticTrace::poisson(8, 4, 8, event_rate / horizon, horizon, &mut rng);
-            match sim.run(&trace, job, &cost, &speeds, Reassign::Identity) {
+        for r in mc.run(scheme.as_ref(), job, &cost, cfg.trials) {
+            match r {
                 Ok(out) => {
                     wastes.push(out.transition_waste);
                     reallocs.push(out.reallocations as f64);
@@ -154,7 +166,11 @@ mod tests {
 
     #[test]
     fn transition_waste_bicec_is_zero() {
-        let t = transition_waste_table(&quick_cfg(), 3.0);
+        // 12 trials: P(zero elastic events in every CEC trial) ~ e^-36.
+        let t = transition_waste_table(
+            &ExperimentConfig { trials: 12, ..quick_cfg() },
+            3.0,
+        );
         let rendered = t.render();
         let bicec_line = rendered.lines().find(|l| l.contains("bicec")).unwrap();
         // waste column must be exactly 0.0000
@@ -195,16 +211,15 @@ pub fn reassign_table(cfg: &ExperimentConfig, event_rate: f64) -> Table {
         for (pname, policy) in
             [("identity", Reassign::Identity), ("max_overlap", Reassign::MaxOverlap)]
         {
-            let mut rng = default_rng(cfg.seed);
+            // Same seed for both policies: reassign is not part of the
+            // stream derivation, so each trial replays the identical
+            // (speeds, trace) under the other policy.
+            let mc =
+                TraceMonteCarlo { reassign: policy, ..fig1_scale_mc(cfg, job, event_rate) };
             let (mut wastes, mut comps) = (Vec::new(), Vec::new());
             let mut failures = 0usize;
-            let mut sim = TraceSimulator::new(scheme.as_ref());
-            for _ in 0..cfg.trials {
-                let speeds = WorkerSpeeds::sample(&cfg.speed_model(), 8, &mut rng);
-                let horizon = 400.0 * cost.worker_time(job.ops() / 2400, 1.0);
-                let trace =
-                    ElasticTrace::poisson(8, 4, 8, event_rate / horizon, horizon, &mut rng);
-                match sim.run(&trace, job, &cost, &speeds, policy) {
+            for r in mc.run(scheme.as_ref(), job, &cost, cfg.trials) {
+                match r {
                     Ok(out) => {
                         wastes.push(out.transition_waste);
                         comps.push(out.computation_time);

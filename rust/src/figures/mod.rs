@@ -7,6 +7,7 @@
 mod ablations;
 mod fig1;
 mod fig2;
+mod sweep;
 
 pub use ablations::{
     dlevel_table, hetero_table, hierarchy_table, reassign_table, straggler_sweep_table,
@@ -14,3 +15,4 @@ pub use ablations::{
 };
 pub use fig1::{fig1_grid, fig1_table};
 pub use fig2::{fig2_table, Metric};
+pub use sweep::{scaling_table, SCALING_NS};

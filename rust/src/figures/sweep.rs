@@ -1,0 +1,184 @@
+//! Large-N scenario sweep — the scaling study behind ROADMAP's
+//! "trace-driven service benchmarks at N >> 40".
+//!
+//! The paper evaluates N ∈ [20, 40] (Fig. 2); the regimes studied in the
+//! CEC baseline (Yang et al.) and the transition-waste follow-up (Dau et
+//! al.) motivate much larger fleets with proportionally more elastic
+//! churn. The sweep holds the paper's code geometry fixed (CEC/MLCEC
+//! (K, S) = (10, 20); BICEC (800, 80·N)) and scales three things together:
+//!
+//! * worker count N over powers of 4 ([`SCALING_NS`] = {40, 160, 640,
+//!   2560} by default),
+//! * fleet-wide elastic event rate ∝ N (fixed per-node churn, like
+//!   spot-market preemption), and
+//! * the trace horizon ∝ 1/N — runs finish faster with more workers, so
+//!   the churn window tracks the shrinking run.
+//!
+//! All randomness is counter-derived per trial (`rng::trial_rng` keyed by
+//! `fold_in(cfg.seed, N)`), so every cell is reproducible in isolation and
+//! the parallel trial pools are bit-identical to serial. The static
+//! columns use one straggler draw per trial shared by all three schemes
+//! (paired comparison, as in Fig. 2); the trace columns pair trials the
+//! same way through the shared per-trial stream.
+//!
+//! Reported metric is mean *computation* time (Fig. 2a's axis): BICEC's
+//! K = 800 decode is N-independent and would swamp the scaling signal.
+
+use crate::config::ExperimentConfig;
+use crate::metrics::{mean, Table};
+use crate::rng::{fold_in, trial_rng};
+use crate::sim::{simulate_many, Reassign, TraceMonteCarlo, WorkerSpeeds};
+use crate::tas::{Bicec, Cec, Mlcec, Scheme};
+
+/// Default worker-count grid for the scaling sweep.
+pub const SCALING_NS: [usize; 4] = [40, 160, 640, 2560];
+
+/// One row per N: paired static computation means and paired elastic-trace
+/// computation means, plus CEC's transition waste and the failure count.
+/// `events_per_node` is the expected number of elastic events per worker
+/// slot within one trace horizon (fleet-wide rate = events_per_node · N /
+/// horizon).
+pub fn scaling_table(
+    cfg: &ExperimentConfig,
+    ns: &[usize],
+    events_per_node: f64,
+    trials: usize,
+) -> Table {
+    let cost = cfg.cost_model();
+    let job = cfg.job;
+    let cec = Cec::new(cfg.k_cec, cfg.s_cec);
+    let mlcec = Mlcec::new(cfg.k_cec, cfg.s_cec);
+    let mut t = Table::new(&[
+        "N",
+        "static_cec_s",
+        "static_mlcec_%",
+        "static_bicec_%",
+        "trace_cec_s",
+        "trace_mlcec_%",
+        "trace_bicec_%",
+        "cec_waste",
+        "failures",
+    ]);
+    for &n in ns {
+        assert!(n >= cfg.s_cec, "sweep N={n} below S={}", cfg.s_cec);
+        let bicec = Bicec::new(cfg.k_bicec, cfg.s_bicec, n);
+        let seed_n = fold_in(cfg.seed, n as u64);
+
+        // -- static: paired straggler draws from counter streams.
+        let speeds: Vec<WorkerSpeeds> = (0..trials)
+            .map(|i| {
+                let mut rng = trial_rng(seed_n, i as u64);
+                WorkerSpeeds::sample(&cfg.speed_model(), n, &mut rng)
+            })
+            .collect();
+        let comp_mean = |scheme: &dyn Scheme| -> f64 {
+            mean(
+                &simulate_many(scheme, n, job, &cost, &speeds)
+                    .iter()
+                    .map(|r| r.computation_time)
+                    .collect::<Vec<_>>(),
+            )
+        };
+        let (sc, sm, sb) = (comp_mean(&cec), comp_mean(&mlcec), comp_mean(&bicec));
+
+        // -- trace: fixed per-node churn; horizon tracks the faster run
+        // (~2 unstraggled CEC sweeps).
+        let tau = cost.worker_time(cec.subtask_ops(job.u, job.w, job.v, n), 1.0);
+        let horizon = 2.0 * cfg.s_cec as f64 * tau;
+        let mc = TraceMonteCarlo {
+            n_max: n,
+            n_min: (n / 2).max(cfg.s_cec),
+            n_initial: n,
+            rate: events_per_node * n as f64 / horizon,
+            horizon,
+            speed_model: cfg.speed_model(),
+            reassign: Reassign::Identity,
+            seed: seed_n,
+        };
+        let mut failures = 0usize;
+        let mut waste = Vec::new();
+        let mut tmean = [0.0f64; 3];
+        for (si, scheme) in
+            [&cec as &dyn Scheme, &mlcec, &bicec].into_iter().enumerate()
+        {
+            let mut comps = Vec::new();
+            for r in mc.run(scheme, job, &cost, trials) {
+                match r {
+                    Ok(out) => {
+                        comps.push(out.computation_time);
+                        if si == 0 {
+                            waste.push(out.transition_waste);
+                        }
+                    }
+                    Err(_) => failures += 1,
+                }
+            }
+            tmean[si] = mean(&comps);
+        }
+
+        t.row(vec![
+            n.to_string(),
+            format!("{sc:.4}"),
+            format!("{:+.1}", 100.0 * (sm - sc) / sc),
+            format!("{:+.1}", 100.0 * (sb - sc) / sc),
+            format!("{:.4}", tmean[0]),
+            format!("{:+.1}", 100.0 * (tmean[1] - tmean[0]) / tmean[0]),
+            format!("{:+.1}", 100.0 * (tmean[2] - tmean[0]) / tmean[0]),
+            format!("{:.4}", mean(&waste)),
+            failures.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> ExperimentConfig {
+        ExperimentConfig { trials: 5, ..Default::default() }
+    }
+
+    fn grab(table_render: &str, row: usize, col: usize) -> f64 {
+        table_render
+            .lines()
+            .nth(2 + row) // skip header + rule
+            .and_then(|l| l.split_whitespace().nth(col))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("cell ({row}, {col}) of:\n{table_render}"))
+    }
+
+    #[test]
+    fn scaling_table_static_time_shrinks_with_n() {
+        let cfg = quick_cfg();
+        let t = scaling_table(&cfg, &[40, 160], 1.0, 5);
+        assert_eq!(t.n_rows(), 2);
+        let r = t.render();
+        let (t40, t160) = (grab(&r, 0, 1), grab(&r, 1, 1));
+        assert!(
+            t40 > 2.0 * t160,
+            "4x the workers must shrink CEC computation well past 2x: {t40} vs {t160}"
+        );
+    }
+
+    #[test]
+    fn scaling_table_is_deterministic() {
+        let cfg = quick_cfg();
+        let a = scaling_table(&cfg, &[40, 160], 1.0, 4).render();
+        let b = scaling_table(&cfg, &[40, 160], 1.0, 4).render();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scaling_table_trace_survives_churn() {
+        // Per-node churn of 1 event/horizon at N=40: some trials realloc,
+        // and the sweep must not fail wholesale.
+        let cfg = quick_cfg();
+        let t = scaling_table(&cfg, &[40], 1.0, 5);
+        let r = t.render();
+        let failures = grab(&r, 0, 8);
+        assert!(failures <= 3.0, "too many failed trials:\n{r}");
+        let trace_cec = grab(&r, 0, 4);
+        assert!(trace_cec.is_finite() && trace_cec > 0.0, "{r}");
+    }
+}

@@ -9,6 +9,15 @@
 //! See DESIGN.md for the system inventory and the per-figure experiment
 //! index; EXPERIMENTS.md for paper-vs-measured results.
 
+// Centralised opt-outs for the style lints CI enforces with `clippy -D
+// warnings`: explicit index loops and long argument lists are the local
+// idiom in the numerical kernels and the simulator plumbing.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_div_ceil
+)]
+
 pub mod bench;
 pub mod cli;
 pub mod codes;
@@ -22,4 +31,5 @@ pub mod rng;
 pub mod runtime;
 pub mod sim;
 pub mod tas;
+pub mod threads;
 pub mod workload;

@@ -41,15 +41,18 @@ const KC: usize = 256;
 const PAR_MIN_OPS: usize = 2_000_000;
 
 /// Worker threads for an (m, k, n) product. 1 = run on the caller.
+///
+/// Routed through the shared budget (`crate::threads`): a gemm issued from
+/// inside a simulation trial worker stays single-threaded instead of
+/// multiplying the fan-out, and `HCEC_THREADS` caps the top level.
 fn plan_threads(m: usize, k: usize, n: usize) -> usize {
     let ops = m.saturating_mul(k).saturating_mul(n);
     if ops < PAR_MIN_OPS || m < 8 {
         return 1;
     }
-    let hw = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
     // At least 4 rows (one micro-kernel quad) per band, capped to keep the
     // fan-out sane on very wide machines.
-    hw.min(m / 4).min(8).max(1)
+    crate::threads::plan((m / 4).min(8))
 }
 
 /// Compute output rows `i0 .. i0 + rows` into `out` (a `rows * n` slice).
@@ -155,7 +158,10 @@ pub fn gemm_blocked(a: &Matrix, b: &Matrix) -> Matrix {
         for (idx, chunk) in out_data.chunks_mut(band * n).enumerate() {
             let rows = chunk.len() / n;
             let i0 = idx * band;
-            scope.spawn(move || panel_kernel(a_data, i0, rows, k, b, chunk));
+            scope.spawn(move || {
+                let _worker = crate::threads::enter_pool();
+                panel_kernel(a_data, i0, rows, k, b, chunk)
+            });
         }
     });
     out
@@ -226,6 +232,20 @@ mod tests {
         for i in [0usize, 1, 2, 3, 4, 6, 7] {
             assert!(y.row(i).iter().all(|&v| v == 0.0), "row {i} must stay zero");
         }
+    }
+
+    #[test]
+    fn nested_callers_stay_single_threaded() {
+        // From inside a pool worker the planner must refuse to fan out,
+        // whatever the product size.
+        let _worker = crate::threads::enter_pool();
+        assert_eq!(plan_threads(128, 300, 96), 1);
+        assert_eq!(plan_threads(4096, 4096, 4096), 1);
+        // ... and the result stays bit-identical on the forced-serial path.
+        let mut rng = default_rng(15);
+        let a = Matrix::random(128, 300, &mut rng);
+        let b = Matrix::random(300, 96, &mut rng);
+        assert_eq!(gemm_blocked(&a, &b).max_abs_diff(&gemm_single_thread(&a, &b)), 0.0);
     }
 
     #[test]

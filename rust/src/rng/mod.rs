@@ -7,9 +7,11 @@
 //! record their seed in EXPERIMENTS.md.
 
 mod distributions;
+mod stream;
 mod xoshiro;
 
 pub use distributions::{Bernoulli, Exponential, LogNormal, Poisson, Uniform};
+pub use stream::{fold_in, trial_rng};
 pub use xoshiro::Xoshiro256pp;
 
 /// Minimal RNG interface: a source of uniform `u64`s plus the derived
@@ -27,13 +29,25 @@ pub trait Rng {
         (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
     }
 
-    /// Uniform integer in `[0, n)` via Lemire's multiply-shift (unbiased
-    /// enough for simulation use; n must be > 0).
+    /// Uniform integer in `[0, n)` via Lemire's multiply-shift WITH the
+    /// rejection step, so every residue is exactly equally likely (n > 0).
+    ///
+    /// The old variant skipped the rejection, leaving a <= n/2^64 bias.
+    /// The redraw fires with that same vanishing probability, so existing
+    /// seeded streams are unchanged except on the (never yet observed)
+    /// rejecting draws.
     fn next_below(&mut self, n: u64) -> u64 {
         debug_assert!(n > 0);
-        // 128-bit multiply keeps the bias below 2^-64 for any n << 2^64.
-        let r = self.next_u64() as u128;
-        ((r * n as u128) >> 64) as u64
+        let mut m = self.next_u64() as u128 * n as u128;
+        if (m as u64) < n {
+            // Low product word small enough that this draw could fall in
+            // the biased window: reject everything below 2^64 mod n.
+            let threshold = n.wrapping_neg() % n;
+            while (m as u64) < threshold {
+                m = self.next_u64() as u128 * n as u128;
+            }
+        }
+        (m >> 64) as u64
     }
 
     /// Fisher–Yates shuffle.
@@ -120,6 +134,49 @@ mod tests {
             seen[v] = true;
         }
         assert!(seen.iter().all(|&s| s), "all residues should appear");
+    }
+
+    #[test]
+    fn next_below_rejects_the_biased_window() {
+        // Scripted source: for n = 6, 2^64 mod 6 = 4, so a draw whose low
+        // product word lands below 4 must be rejected and redrawn.
+        struct Script {
+            vals: Vec<u64>,
+            at: usize,
+        }
+        impl Rng for Script {
+            fn next_u64(&mut self) -> u64 {
+                let v = self.vals[self.at];
+                self.at += 1;
+                v
+            }
+        }
+        // x = 0: m = 0, low word 0 < 4 -> reject. x = 1: m = 6, low word
+        // 6 >= 4 -> accept, high word 0.
+        let mut s = Script { vals: vec![0, 1], at: 0 };
+        assert_eq!(s.next_below(6), 0);
+        assert_eq!(s.at, 2, "draw below the rejection threshold must redraw");
+        // x = 2^64 - 1: m = 6*2^64 - 6, low word huge -> accept, result 5.
+        let mut s = Script { vals: vec![u64::MAX], at: 0 };
+        assert_eq!(s.next_below(6), 5);
+        assert_eq!(s.at, 1);
+    }
+
+    #[test]
+    fn next_below_residues_are_uniform() {
+        // Distribution check on a non-power-of-two modulus: each residue of
+        // 60_000 draws should land near 10_000 (4 sigma ~ 365).
+        let mut rng = default_rng(2024);
+        let mut counts = [0u64; 6];
+        for _ in 0..60_000 {
+            counts[rng.next_below(6) as usize] += 1;
+        }
+        for (r, &c) in counts.iter().enumerate() {
+            assert!(
+                (9_500..=10_500).contains(&c),
+                "residue {r} count {c} outside uniform band: {counts:?}"
+            );
+        }
     }
 
     #[test]

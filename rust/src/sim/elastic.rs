@@ -23,15 +23,19 @@
 //! check is gated on a running covered-measure total (the O(sets · log)
 //! endpoint sweep only runs once enough measure exists for recovery to be
 //! possible); and the Global completed-set is a flat bit vector rather
-//! than a `HashSet`.
+//! than a `HashSet`. [`TraceMonteCarlo`] fans whole trial batches out
+//! across a worker pool with counter-derived per-trial RNG streams, so
+//! parallel results are bit-identical to serial.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+use crate::rng::trial_rng;
 use crate::tas::{transition, Allocation, RecoveryRule, Scheme};
 use crate::workload::JobSpec;
 
 use super::intervals::{min_coverage_with, IntervalSet};
+use super::straggler::SpeedModel;
 use super::trace::{ElasticTrace, EventKind};
 use super::{CostModel, WorkerSpeeds};
 
@@ -442,6 +446,91 @@ impl<'a> TraceSimulator<'a> {
     }
 }
 
+/// One elastic Monte-Carlo experiment over Poisson traces.
+///
+/// Every trial's randomness is a counter-derived stream from
+/// `(seed, trial_index)` ([`crate::rng::trial_rng`]): a trial's straggler
+/// draw and its elastic trace depend only on the trial index — never on
+/// which worker thread runs it or in what order. That makes the parallel
+/// driver bit-identical to the serial one, and any single trial
+/// reproducible in isolation.
+///
+/// For large-N sweeps, hold the *per-node* churn fixed while `n_max`
+/// grows (fleet-wide event rate scales with fleet size, as in spot-market
+/// traces): `rate = events_per_node * n_max as f64 / horizon`.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceMonteCarlo {
+    pub n_max: usize,
+    pub n_min: usize,
+    pub n_initial: usize,
+    /// Fleet-wide elastic event rate (events per simulated second).
+    pub rate: f64,
+    /// Elastic events stop after this simulated time.
+    pub horizon: f64,
+    pub speed_model: SpeedModel,
+    pub reassign: Reassign,
+    /// Experiment seed; trial `i` uses the stream `trial_rng(seed, i)`.
+    pub seed: u64,
+}
+
+impl TraceMonteCarlo {
+    /// Run one trial by index against caller-owned simulator state.
+    pub fn trial(
+        &self,
+        sim: &mut TraceSimulator<'_>,
+        job: JobSpec,
+        cost: &CostModel,
+        trial: u64,
+    ) -> Result<TraceOutcome, SimError> {
+        let mut rng = trial_rng(self.seed, trial);
+        let speeds = WorkerSpeeds::sample(&self.speed_model, self.n_max, &mut rng);
+        let trace = ElasticTrace::poisson(
+            self.n_max,
+            self.n_min,
+            self.n_initial,
+            self.rate,
+            self.horizon,
+            &mut rng,
+        );
+        sim.run(&trace, job, cost, &speeds, self.reassign)
+    }
+
+    /// `trials` runs of `scheme`, fanned out across the worker pool with
+    /// one recycled [`TraceSimulator`] per worker (no steady-state
+    /// allocation inside the trial loop). Slot `i` of the result is always
+    /// trial index `i`, for any thread count.
+    pub fn run(
+        &self,
+        scheme: &dyn Scheme,
+        job: JobSpec,
+        cost: &CostModel,
+        trials: usize,
+    ) -> Vec<Result<TraceOutcome, SimError>> {
+        let threads = crate::threads::plan_units(trials);
+        self.run_threaded(scheme, job, cost, trials, threads)
+    }
+
+    /// [`run`](Self::run) with an explicit worker count (1 = caller).
+    fn run_threaded(
+        &self,
+        scheme: &dyn Scheme,
+        job: JobSpec,
+        cost: &CostModel,
+        trials: usize,
+        threads: usize,
+    ) -> Vec<Result<TraceOutcome, SimError>> {
+        let mut out: Vec<Option<Result<TraceOutcome, SimError>>> =
+            (0..trials).map(|_| None).collect();
+        crate::threads::scatter_chunks(&mut out, threads, |start, slots| {
+            let mut sim = TraceSimulator::new(scheme);
+            for (off, slot) in slots.iter_mut().enumerate() {
+                *slot = Some(self.trial(&mut sim, job, cost, (start + off) as u64));
+            }
+        });
+        out.into_iter().map(|r| r.expect("every trial filled by its worker")).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -594,6 +683,95 @@ mod tests {
                 }
                 (Err(_), Err(_)) => {}
                 (a, b) => panic!("trial {trial}: reused {a:?} vs fresh {b:?}"),
+            }
+        }
+    }
+
+    /// A Fig.-1-scale Poisson experiment whose events land mid-run.
+    fn small_mc(seed: u64) -> TraceMonteCarlo {
+        let horizon = 400.0 * cm().worker_time(job().ops() / 2400, 1.0);
+        TraceMonteCarlo {
+            n_max: 8,
+            n_min: 4,
+            n_initial: 8,
+            rate: 3.0 / horizon,
+            horizon,
+            speed_model: SpeedModel::paper_default(),
+            reassign: Reassign::Identity,
+            seed,
+        }
+    }
+
+    #[test]
+    fn trace_monte_carlo_parallel_bit_identical_to_serial() {
+        // The acceptance bar: every per-trial outcome equal across thread
+        // counts, on both recovery rules.
+        for scheme in [&Cec::new(2, 4) as &dyn Scheme, &Bicec::new(600, 300, 8)] {
+            let mc = small_mc(2021);
+            let trials = 17;
+            let serial = mc.run_threaded(scheme, job(), &cm(), trials, 1);
+            for threads in [2, 4, 5] {
+                let parallel = mc.run_threaded(scheme, job(), &cm(), trials, threads);
+                assert_eq!(serial.len(), parallel.len());
+                for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+                    match (a, b) {
+                        (Ok(x), Ok(y)) => {
+                            assert_eq!(x.computation_time, y.computation_time,
+                                "trial {i} at {threads} threads");
+                            assert_eq!(x.transition_waste, y.transition_waste, "trial {i}");
+                            assert_eq!(x.reallocations, y.reallocations, "trial {i}");
+                            assert_eq!(x.completions, y.completions, "trial {i}");
+                        }
+                        (Err(_), Err(_)) => {}
+                        other => panic!("trial {i} diverged across thread counts: {other:?}"),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trace_monte_carlo_trials_are_order_free() {
+        // Trial i's outcome is a pure function of (seed, i): running it
+        // alone must equal slot i of a batch.
+        let scheme = Cec::new(2, 4);
+        let mc = small_mc(99);
+        let batch = mc.run_threaded(&scheme, job(), &cm(), 8, 1);
+        let mut sim = TraceSimulator::new(&scheme);
+        for i in [0u64, 3, 7] {
+            let lone = mc.trial(&mut sim, job(), &cm(), i);
+            match (&batch[i as usize], &lone) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.computation_time, b.computation_time, "trial {i}");
+                    assert_eq!(a.completions, b.completions, "trial {i}");
+                }
+                (Err(_), Err(_)) => {}
+                other => panic!("trial {i} depends on batch context: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn trace_monte_carlo_pairs_policies_on_the_same_traces() {
+        // reassign is not part of the stream derivation, so the two
+        // policies see identical (speeds, trace) per trial — the paired
+        // comparison the Ext-T4 table relies on.
+        let scheme = Cec::new(2, 4);
+        let naive = small_mc(5);
+        let opt = TraceMonteCarlo { reassign: Reassign::MaxOverlap, ..naive };
+        for (i, (a, b)) in naive
+            .run_threaded(&scheme, job(), &cm(), 10, 1)
+            .iter()
+            .zip(&opt.run_threaded(&scheme, job(), &cm(), 10, 1))
+            .enumerate()
+        {
+            if let (Ok(x), Ok(y)) = (a, b) {
+                assert!(
+                    y.transition_waste <= x.transition_waste + 1e-9,
+                    "trial {i}: max_overlap waste {} > identity {}",
+                    y.transition_waste,
+                    x.transition_waste
+                );
             }
         }
     }

@@ -203,6 +203,92 @@ mod tests {
     }
 
     #[test]
+    fn insert_measure_accounting_adjacent_contained_bridging() {
+        // Dyadic endpoints: every arithmetic step below is exact in f64,
+        // so the returned measures can be compared with `==`.
+        let mut s = IntervalSet::new();
+        assert_eq!(s.insert(0.25, 0.5), 0.25);
+        // Exactly adjacent on the right: coalesces, counts only new span.
+        assert_eq!(s.insert(0.5, 0.625), 0.125);
+        assert_eq!(s.intervals().len(), 1);
+        // Exactly adjacent on the left.
+        assert_eq!(s.insert(0.125, 0.25), 0.125);
+        assert_eq!(s.intervals().len(), 1);
+        // Fully contained: zero new measure, no structural change.
+        assert_eq!(s.insert(0.25, 0.5), 0.0);
+        assert_eq!(s.intervals(), &[(0.125, 0.625)]);
+        // Disjoint island.
+        assert_eq!(s.insert(0.75, 0.875), 0.125);
+        assert_eq!(s.intervals().len(), 2);
+        // Bridge across both intervals and the gaps between them.
+        assert_eq!(s.insert(0.0, 1.0), 1.0 - 0.5 - 0.125);
+        assert_eq!(s.intervals(), &[(0.0, 1.0)]);
+        assert_eq!(s.measure(), 1.0);
+    }
+
+    /// Recompute-from-scratch oracle: merged measure of a raw interval
+    /// list via sort + sweep, independent of `IntervalSet`'s bookkeeping.
+    fn merged_measure(ivs: &[(f64, f64)]) -> f64 {
+        let mut sorted = ivs.to_vec();
+        sorted.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+        let (mut total, mut open) = (0.0f64, None::<(f64, f64)>);
+        for &(lo, hi) in &sorted {
+            match open {
+                Some((s, e)) if lo <= e => open = Some((s, e.max(hi))),
+                Some((s, e)) => {
+                    total += e - s;
+                    open = Some((lo, hi));
+                }
+                None => open = Some((lo, hi)),
+            }
+        }
+        if let Some((s, e)) = open {
+            total += e - s;
+        }
+        total
+    }
+
+    #[test]
+    fn prop_insert_running_measure_matches_oracle() {
+        // The elastic simulator's covered-measure gate accumulates the
+        // per-insert returns; any drift vs the true merged measure would
+        // silently skip (or force) recovery sweeps. Grid-aligned endpoints
+        // force exact adjacency, containment, and multi-interval bridging;
+        // occasional off-grid inserts exercise the epsilon paths.
+        prop::check(80, |g| {
+            const GRID: usize = 32;
+            let mut s = IntervalSet::new();
+            let mut inserted: Vec<(f64, f64)> = Vec::new();
+            let mut running = 0.0f64;
+            for _ in 0..g.usize_in(1, 40) {
+                let (lo, hi) = if g.u64() % 8 == 0 {
+                    let lo = g.f64_in(0.0, 1.0);
+                    (lo, lo + g.f64_in(0.0, 1.0 - lo))
+                } else {
+                    let a = g.usize_in(0, GRID - 1);
+                    let b = g.usize_in(a + 1, GRID);
+                    (a as f64 / GRID as f64, b as f64 / GRID as f64)
+                };
+                running += s.insert(lo, hi);
+                inserted.push((lo, hi));
+                let oracle = merged_measure(&inserted);
+                if (running - oracle).abs() > 1e-9 {
+                    return Err(format!(
+                        "running sum {running} != oracle {oracle} after {inserted:?}"
+                    ));
+                }
+                if (s.measure() - oracle).abs() > 1e-9 {
+                    return Err(format!(
+                        "measure {} != oracle {oracle} after {inserted:?}",
+                        s.measure()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn prop_insert_return_sums_to_measure() {
         prop::check(60, |g| {
             let mut s = IntervalSet::new();

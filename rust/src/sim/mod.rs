@@ -20,7 +20,10 @@ pub mod straggler;
 pub mod trace;
 
 pub use cost::CostModel;
-pub use elastic::{simulate_trace, simulate_trace_with, Reassign, TraceOutcome, TraceSimulator};
+pub use elastic::{
+    simulate_trace, simulate_trace_with, Reassign, TraceMonteCarlo, TraceOutcome,
+    TraceSimulator,
+};
 pub use statics::{simulate_many, simulate_static, RunResult, SimScratch, StaticSimulator};
 pub use straggler::{SpeedModel, WorkerSpeeds};
 pub use trace::{ElasticEvent, ElasticTrace, EventKind};

@@ -9,9 +9,12 @@
 //! Hot-path structure (EXPERIMENTS.md §Perf): every per-run allocation is
 //! hoisted into [`SimScratch`]; the Global (BICEC) order statistic is found
 //! by bisecting the f64 bit lattice against an O(N) counting function
-//! instead of materialising all `N·S` event times; and
-//! [`StaticSimulator`] / [`simulate_many`] amortise the scheme's
-//! `allocate(n)` across Monte-Carlo trials.
+//! instead of materialising all `N·S` event times; the PerSet (CEC/MLCEC)
+//! max-of-k-th uses the same bisection, gated behind a counting pass so
+//! only binding sets pay for it; and [`StaticSimulator`] /
+//! [`simulate_many`] amortise the scheme's `allocate(n)` across
+//! Monte-Carlo trials and fan the trials out across a worker pool
+//! (bit-identical to serial — see `crate::threads` for the budget).
 
 use crate::tas::{Allocation, RecoveryRule, Scheme};
 use crate::workload::JobSpec;
@@ -87,34 +90,53 @@ fn count_events_at(lens: &[usize], taus: &[f64], t: f64) -> u64 {
     count
 }
 
-/// k-th smallest event time over all workers' arithmetic event sequences,
-/// via bisection on the f64 bit lattice: O(N · 64) instead of
-/// materialising and selecting over N·S event times. Exact — the result is
-/// the smallest representable time with `count >= k`, which is the k-th
-/// event time itself.
-fn kth_event_time(lens: &[usize], taus: &[f64], k: usize) -> f64 {
-    let total: u64 = lens.iter().map(|&l| l as u64).sum();
-    assert!(total >= k as u64, "only {total} events < K={k}");
-    if count_events_at(lens, taus, 0.0) >= k as u64 {
+/// Smallest non-negative f64 `t` with `count(t) >= k`, by bisection on the
+/// f64 bit lattice (non-negative finite f64s are ordered like their bit
+/// patterns). `count` must be monotone with `count(hi) >= k`. Exact: since
+/// `count` only steps at event times, the result IS the k-th event time.
+/// Shared by the Global (BICEC) order statistic and the PerSet binding-set
+/// selection below.
+fn bisect_event_time(hi: f64, k: u64, count: impl Fn(f64) -> u64) -> f64 {
+    if count(0.0) >= k {
         return 0.0;
     }
-    let mut hi = 0.0f64;
-    for (&len, &tau) in lens.iter().zip(taus) {
-        hi = hi.max(len as f64 * tau.max(0.0));
-    }
-    debug_assert!(count_events_at(lens, taus, hi) >= k as u64);
-    // Positive finite f64s are ordered like their bit patterns.
+    debug_assert!(count(hi) >= k, "bisection bracket must contain the answer");
     let mut lo_bits = 0u64;
     let mut hi_bits = hi.to_bits();
     while lo_bits + 1 < hi_bits {
         let mid = lo_bits + (hi_bits - lo_bits) / 2;
-        if count_events_at(lens, taus, f64::from_bits(mid)) >= k as u64 {
+        if count(f64::from_bits(mid)) >= k {
             hi_bits = mid;
         } else {
             lo_bits = mid;
         }
     }
     f64::from_bits(hi_bits)
+}
+
+/// k-th smallest event time over all workers' arithmetic event sequences,
+/// via the bit-lattice bisection: O(N · 64) instead of materialising and
+/// selecting over N·S event times.
+fn kth_event_time(lens: &[usize], taus: &[f64], k: usize) -> f64 {
+    let total: u64 = lens.iter().map(|&l| l as u64).sum();
+    assert!(total >= k as u64, "only {total} events < K={k}");
+    let mut hi = 0.0f64;
+    for (&len, &tau) in lens.iter().zip(taus) {
+        hi = hi.max(len as f64 * tau.max(0.0));
+    }
+    bisect_event_time(hi, k as u64, |t| count_events_at(lens, taus, t))
+}
+
+/// k-th smallest of `xs` (k >= 1, counted from the minimum) over
+/// non-negative finite values, via the same bit-lattice bisection as the
+/// Global path. Exact: returns the k-th order statistic itself.
+fn kth_smallest(xs: &[f64], k: usize) -> f64 {
+    debug_assert!(k >= 1 && k <= xs.len());
+    let mut hi = 0.0f64;
+    for &x in xs {
+        hi = hi.max(x);
+    }
+    bisect_event_time(hi, k as u64, |t| xs.iter().filter(|&&x| x <= t).count() as u64)
 }
 
 /// Time until the recovery rule of `alloc` is met, given each worker's
@@ -136,7 +158,7 @@ pub fn computation_time_with(
     match alloc.rule {
         RecoveryRule::PerSet { sets, k } => {
             // Bucket the per-set completion times into one flat buffer:
-            // count, prefix, scatter, then k-th selection per segment.
+            // count, prefix, scatter, then the gated max-of-kth sweep.
             scratch.counts.clear();
             scratch.counts.resize(sets, 0);
             for list in &alloc.lists {
@@ -164,19 +186,27 @@ pub fn computation_time_with(
                     scratch.cursor[item.group] += 1;
                 }
             }
+            // Max of per-set k-th order statistics. A set whose first k
+            // completions all land by the running max cannot move it, and
+            // that test is one branchless counting pass over d values —
+            // the same count-vs-threshold predicate the Global rule
+            // bisects on. Only the few *binding* sets pay the exact
+            // bit-lattice bisection; this replaces the old
+            // `select_nth_unstable_by` (with its swaps and per-element
+            // `partial_cmp`) on every set (§Perf).
             let mut worst = 0.0f64;
             for m in 0..sets {
-                let seg = &mut scratch.times[scratch.offsets[m]..scratch.offsets[m + 1]];
+                let seg = &scratch.times[scratch.offsets[m]..scratch.offsets[m + 1]];
                 assert!(
                     seg.len() >= k,
                     "set {m} has only {} holders < K={k}",
                     seg.len()
                 );
-                // k-th order statistic via selection (O(d) vs O(d log d)
-                // sort) — this is the figure harness's hot loop (§Perf).
-                let (_, kth, _) =
-                    seg.select_nth_unstable_by(k - 1, |a, b| a.partial_cmp(b).unwrap());
-                worst = worst.max(*kth);
+                let done_by_worst = seg.iter().filter(|&&x| x <= worst).count();
+                if done_by_worst >= k {
+                    continue;
+                }
+                worst = kth_smallest(seg, k);
             }
             worst
         }
@@ -262,7 +292,15 @@ pub fn simulate_static(
 }
 
 /// Batch driver: one run per entry of `speeds_per_trial`, amortising the
-/// allocation and scratch across the whole Monte-Carlo sweep.
+/// allocation and scratch across the whole Monte-Carlo sweep and fanning
+/// the trials out across a `std::thread::scope` worker pool (one
+/// `StaticSimulator` per worker, no steady-state allocation inside the
+/// trial loop).
+///
+/// Bit-identical to the serial driver for any thread count: each trial is
+/// a pure function of `(scheme, n, job, cost, speeds)` and lands in its
+/// own output slot by index. Thread budget comes from `crate::threads`
+/// (`HCEC_THREADS`, nested-region guard).
 pub fn simulate_many(
     scheme: &dyn Scheme,
     n: usize,
@@ -270,11 +308,35 @@ pub fn simulate_many(
     cost: &CostModel,
     speeds_per_trial: &[WorkerSpeeds],
 ) -> Vec<RunResult> {
-    let mut sim = StaticSimulator::new(scheme);
-    speeds_per_trial
-        .iter()
-        .map(|speeds| sim.run(n, job, cost, speeds))
-        .collect()
+    let threads = crate::threads::plan_units(speeds_per_trial.len());
+    simulate_many_threaded(scheme, n, job, cost, speeds_per_trial, threads)
+}
+
+/// `simulate_many` with an explicit worker count (1 = run on the caller).
+fn simulate_many_threaded(
+    scheme: &dyn Scheme,
+    n: usize,
+    job: JobSpec,
+    cost: &CostModel,
+    speeds_per_trial: &[WorkerSpeeds],
+    threads: usize,
+) -> Vec<RunResult> {
+    let zero = RunResult {
+        computation_time: 0.0,
+        decode_time: 0.0,
+        completions_used: 0,
+        completions_total: 0,
+    };
+    let mut out = vec![zero; speeds_per_trial.len()];
+    // Contiguous chunks: trial i lands in out[i] regardless of the worker
+    // count, so the fan-out is invisible in the results.
+    crate::threads::scatter_chunks(&mut out, threads, |start, slots| {
+        let mut sim = StaticSimulator::new(scheme);
+        for (off, slot) in slots.iter_mut().enumerate() {
+            *slot = sim.run(n, job, cost, &speeds_per_trial[start + off]);
+        }
+    });
+    out
 }
 
 #[cfg(test)]
@@ -340,6 +402,96 @@ mod tests {
                 let fast = kth_event_time(&lens, &taus, k);
                 let want = events[k - 1];
                 assert_eq!(fast, want, "trial {trial} k={k}: {fast} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn kth_smallest_matches_sorted_reference() {
+        let mut rng = default_rng(42);
+        for trial in 0..60 {
+            let len = 1 + (trial % 9);
+            let xs: Vec<f64> = (0..len)
+                .map(|_| (rng.next_u64() % 4000) as f64 / 128.0)
+                .collect();
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for k in 1..=len {
+                assert_eq!(
+                    kth_smallest(&xs, k),
+                    sorted[k - 1],
+                    "trial {trial} k={k} xs={xs:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn perset_max_of_kth_matches_selection_reference() {
+        // The gated bisection must reproduce the old select-per-set result
+        // bit for bit, on irregular speeds across CEC geometries.
+        let mut rng = default_rng(55);
+        for trial in 0..40 {
+            let s = 2 + (trial % 5);
+            let k = 1 + trial % s;
+            let scheme = Cec::new(k, s);
+            let n = s + (trial % 7);
+            let alloc = scheme.allocate(n);
+            let taus: Vec<f64> = (0..n)
+                .map(|_| 0.25 + (rng.next_u64() % 1000) as f64 / 300.0)
+                .collect();
+            let fast = computation_time(&alloc, |w| taus[w]);
+            let RecoveryRule::PerSet { sets, k } = alloc.rule else {
+                panic!("CEC is PerSet")
+            };
+            let mut worst = 0.0f64;
+            for m in 0..sets {
+                let mut times: Vec<f64> = alloc
+                    .lists
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(w, list)| {
+                        list.iter()
+                            .position(|it| it.group == m)
+                            .map(|p| (p + 1) as f64 * taus[w])
+                    })
+                    .collect();
+                times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                worst = worst.max(times[k - 1]);
+            }
+            assert_eq!(fast, worst, "trial {trial} (n={n}, s={s}, k={k})");
+        }
+    }
+
+    #[test]
+    fn parallel_simulate_many_bit_identical_to_serial() {
+        // The acceptance bar: every per-trial result equal, not just the
+        // means. Exercised on both recovery rules.
+        let job = JobSpec::paper_square();
+        let mut rng = default_rng(808);
+        let speeds: Vec<WorkerSpeeds> = (0..33)
+            .map(|_| WorkerSpeeds::sample(&SpeedModel::paper_default(), 40, &mut rng))
+            .collect();
+        let schemes = [
+            &Cec::new(10, 20) as &dyn Scheme,
+            &Mlcec::new(10, 20),
+            &Bicec::new(800, 80, 40),
+        ];
+        for scheme in schemes {
+            let serial = simulate_many_threaded(scheme, 40, job, &cm(), &speeds, 1);
+            for threads in [2, 4, 7] {
+                let parallel =
+                    simulate_many_threaded(scheme, 40, job, &cm(), &speeds, threads);
+                assert_eq!(serial.len(), parallel.len());
+                for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+                    assert_eq!(
+                        a.computation_time, b.computation_time,
+                        "trial {i} at {threads} threads"
+                    );
+                    assert_eq!(a.decode_time, b.decode_time, "trial {i}");
+                    assert_eq!(a.completions_used, b.completions_used, "trial {i}");
+                    assert_eq!(a.completions_total, b.completions_total, "trial {i}");
+                }
             }
         }
     }

@@ -113,7 +113,12 @@ impl Allocation {
 }
 
 /// A task-allocation scheme: everything `sim::des` and the coordinator need.
-pub trait Scheme {
+///
+/// `Sync` is a supertrait so one scheme instance can be shared by the
+/// Monte-Carlo trial pools (`sim::statics::simulate_many`,
+/// `sim::elastic::TraceMonteCarlo`); schemes are immutable descriptions,
+/// so every implementation is plain `Sync` data.
+pub trait Scheme: Sync {
     fn name(&self) -> &'static str;
 
     /// Code dimension (recovery threshold of the underlying MDS code).

@@ -1,0 +1,215 @@
+//! Shared thread-budget accounting for the crate's parallel regions: the
+//! Monte-Carlo trial pools (`sim::statics::simulate_many`,
+//! `sim::elastic::TraceMonteCarlo`) and the row-band gemm
+//! (`linalg::gemm::gemm_blocked`).
+//!
+//! Without coordination the fan-outs multiply: an 8-worker trial pool whose
+//! trials each spawn an 8-band gemm oversubscribes the machine 8x. The rule
+//! here is ONE level of parallelism — whichever region fans out first marks
+//! its worker threads ([`enter_pool`]), and any [`plan`] call made from
+//! inside a marked worker gets a budget of 1 (run on the caller).
+//!
+//! `HCEC_THREADS` caps the top-level budget (unset or `0` = all hardware
+//! threads). `HCEC_THREADS=1` forces every region serial — the reference
+//! execution for the bit-identity guarantees. The cap is purely a resource
+//! knob: results never depend on the thread count, because every parallel
+//! consumer maps work to output slots by index.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+thread_local! {
+    /// True on threads spawned by one of the crate's worker pools.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// `HCEC_THREADS` semantics over a raw env value and the hardware count.
+fn cap_from(var: Option<&str>, hw: usize) -> usize {
+    match var.and_then(|v| v.trim().parse::<usize>().ok()) {
+        Some(0) | None => hw.max(1),
+        Some(cap) => cap,
+    }
+}
+
+/// Top-level thread budget: hardware parallelism with the `HCEC_THREADS`
+/// override applied (always >= 1). Read once per process.
+pub fn max_threads() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| {
+        let hw = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+        cap_from(std::env::var("HCEC_THREADS").ok().as_deref(), hw)
+    })
+}
+
+/// True when the current thread is a pool worker: a parallel region opened
+/// here would nest inside an existing fan-out.
+pub fn in_worker() -> bool {
+    IN_POOL.with(|c| c.get())
+}
+
+/// Mark the current thread as a pool worker until the guard drops. Every
+/// pool worker closure takes one of these as its first statement.
+pub fn enter_pool() -> PoolGuard {
+    let prev = IN_POOL.with(|c| c.replace(true));
+    PoolGuard { prev }
+}
+
+/// RAII token from [`enter_pool`]; restores the previous marking on drop
+/// (so nested guards are harmless).
+pub struct PoolGuard {
+    prev: bool,
+}
+
+impl Drop for PoolGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        IN_POOL.with(|c| c.set(prev));
+    }
+}
+
+/// Thread budget for a region that could use up to `want` threads: 1 from
+/// inside a pool worker (no nested fan-out), otherwise `want` clamped to
+/// `[1, max_threads()]`.
+pub fn plan(want: usize) -> usize {
+    if in_worker() {
+        return 1;
+    }
+    want.clamp(1, max_threads())
+}
+
+/// Independent work units (Monte-Carlo trials) below which a worker thread
+/// is not worth spawning: spawn/join overhead beats the win.
+pub const MIN_UNITS_PER_WORKER: usize = 4;
+
+/// Budget for `units` equal-cost independent work units: at most one
+/// thread per [`MIN_UNITS_PER_WORKER`] units, so small sweeps stay serial.
+pub fn plan_units(units: usize) -> usize {
+    plan(units / MIN_UNITS_PER_WORKER)
+}
+
+/// Fan contiguous chunks of `out` across up to `threads` scoped workers —
+/// the one copy of the trial-pool index math, shared by
+/// `sim::statics::simulate_many` and `sim::elastic::TraceMonteCarlo`.
+///
+/// `work(start, slots)` must fill `slots`, which aliases
+/// `out[start .. start + slots.len()]`. Chunk boundaries depend only on
+/// `(out.len(), threads)` and results land by index, so the output is
+/// identical for any thread count. With `threads <= 1` the single chunk
+/// runs on the caller (and is not marked as a pool worker); spawned
+/// workers are marked via [`enter_pool`] so nested regions stay serial.
+pub fn scatter_chunks<T: Send, F>(out: &mut [T], threads: usize, work: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let units = out.len();
+    if threads <= 1 || units <= 1 {
+        work(0, out);
+        return;
+    }
+    let chunk = (units + threads - 1) / threads;
+    std::thread::scope(|scope| {
+        for (ci, slots) in out.chunks_mut(chunk).enumerate() {
+            let work = &work;
+            scope.spawn(move || {
+                let _worker = enter_pool();
+                work(ci * chunk, slots);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_clamps_and_respects_pool_flag() {
+        assert_eq!(plan(0), 1);
+        assert!(plan(usize::MAX) >= 1);
+        assert!(plan(usize::MAX) <= max_threads());
+        let g = enter_pool();
+        assert!(in_worker());
+        assert_eq!(plan(64), 1, "no fan-out from inside a pool worker");
+        drop(g);
+        assert!(!in_worker());
+    }
+
+    #[test]
+    fn pool_guards_nest_and_restore() {
+        let outer = enter_pool();
+        {
+            let inner = enter_pool();
+            assert!(in_worker());
+            drop(inner);
+        }
+        assert!(in_worker(), "inner guard must restore, not clear");
+        drop(outer);
+        assert!(!in_worker());
+    }
+
+    #[test]
+    fn fresh_threads_are_not_pool_workers() {
+        let _g = enter_pool();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                assert!(!in_worker(), "pool marking is per-thread");
+                let _w = enter_pool();
+                assert_eq!(plan(8), 1);
+            });
+        });
+        assert!(in_worker(), "spawned thread must not disturb the parent");
+    }
+
+    #[test]
+    fn cap_parsing() {
+        assert_eq!(cap_from(None, 8), 8);
+        assert_eq!(cap_from(Some("0"), 8), 8, "0 means uncapped");
+        assert_eq!(cap_from(Some("3"), 8), 3);
+        assert_eq!(cap_from(Some("12"), 8), 12, "oversubscription is the operator's call");
+        assert_eq!(cap_from(Some("nonsense"), 8), 8);
+        assert_eq!(cap_from(None, 0), 1);
+    }
+
+    #[test]
+    fn plan_units_scales_by_min_units() {
+        assert_eq!(plan_units(0), 1);
+        assert_eq!(plan_units(MIN_UNITS_PER_WORKER - 1), 1);
+        assert!(plan_units(MIN_UNITS_PER_WORKER * 2) <= 2);
+    }
+
+    #[test]
+    fn scatter_chunks_covers_every_slot_exactly_once() {
+        // Each slot must see its own global index, for any thread count
+        // (including ones that don't divide the length).
+        for &threads in &[1usize, 2, 3, 5, 8, 64] {
+            let mut out = vec![usize::MAX; 23];
+            scatter_chunks(&mut out, threads, |start, slots| {
+                for (off, slot) in slots.iter_mut().enumerate() {
+                    assert_eq!(*slot, usize::MAX, "slot visited twice");
+                    *slot = start + off;
+                }
+            });
+            let want: Vec<usize> = (0..23).collect();
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn scatter_chunks_marks_spawned_workers_only() {
+        let mut out = [false; 9];
+        scatter_chunks(&mut out, 3, |_, slots| {
+            for slot in slots.iter_mut() {
+                *slot = in_worker();
+            }
+        });
+        assert!(out.iter().all(|&w| w), "spawned workers must be marked");
+        assert!(!in_worker(), "caller must be unmarked after the fan-out");
+        let mut serial = [true; 2];
+        scatter_chunks(&mut serial, 1, |_, slots| {
+            for slot in slots.iter_mut() {
+                *slot = in_worker();
+            }
+        });
+        assert!(serial.iter().all(|&w| !w), "serial chunk runs unmarked on the caller");
+    }
+}
