@@ -8,16 +8,25 @@
 //! the K·u·v combine, not the K x K solve; PJRT execute latency small vs a
 //! 240-scale subtask.
 //!
+//! Experiment-shaped rows (the Monte-Carlo batches) are constructed via
+//! `scenario::Scenario` + `Engine::run` — the same surface the figures and
+//! CLI use, so a bench row IS a reproducible scenario. Single-call rows
+//! (one DES run, gemm, codec, decode) stay raw micro-benchmarks of the
+//! hot paths underneath that surface.
+//!
 //! CI smoke: `HCEC_BENCH_QUICK=1` shrinks the sampling windows ~20x.
 
 use hcec::bench::{header, Bench, BenchResult, JsonReport};
 use hcec::codes::RealMdsCode;
 use hcec::linalg::{gemm, gemm_naive, gemm_single_thread, Matrix};
-use hcec::rng::{default_rng, trial_rng, Rng};
+use hcec::rng::{default_rng, Rng};
 use hcec::runtime::{artifacts_available, default_artifact_dir, Runtime};
+use hcec::scenario::{
+    ElasticitySpec, Engine, Scenario, SchemeConfig, SeedMode,
+};
 use hcec::sim::{
-    simulate_many, simulate_static, CostModel, ElasticTrace, Reassign, SpeedModel,
-    TraceMonteCarlo, TraceSimulator, WorkerSpeeds,
+    simulate_static, CostModel, ElasticTrace, Reassign, SpeedModel, TraceSimulator,
+    WorkerSpeeds,
 };
 use hcec::tas::{Bicec, Cec, Mlcec, Scheme};
 use hcec::workload::JobSpec;
@@ -51,13 +60,21 @@ fn main() {
     println!("    -> {:.2e} subtask-events/s", events_per_sec(&r, 3200.0));
     report.push(&r, &[("subtask_events_per_sec", events_per_sec(&r, 3200.0))]);
 
-    // Batch driver: allocation + scratch amortised across a 32-trial sweep
-    // (the Monte-Carlo shape every figure actually runs).
-    let sweep: Vec<WorkerSpeeds> = (0..32)
-        .map(|_| WorkerSpeeds::sample(&SpeedModel::paper_default(), 40, &mut rng))
-        .collect();
-    let r = Bench::new("simulate_many bicec n40 x32")
-        .run(|| simulate_many(&bicec, 40, job, &cost, &sweep));
+    // Batch driver through the unified scenario surface: allocation +
+    // scratch amortised across a 32-trial sweep (the Monte-Carlo shape
+    // every figure actually runs). Engine::run includes the per-trial
+    // speed sampling — negligible next to the DES itself.
+    let sweep_sc = Scenario::builder("bench_static_bicec_n40")
+        .engine(Engine::Statics)
+        .job(job)
+        .fleet(40, 40)
+        .schemes(vec![SchemeConfig::Bicec { k: 800, s_per_worker: 80 }])
+        .trials(32)
+        .seed(3)
+        .build()
+        .expect("valid bench scenario");
+    let r = Bench::new("scenario statics bicec n40 x32")
+        .run(|| sweep_sc.run().expect("statics engine cannot fail"));
     r.print();
     println!(
         "    -> {:.2e} subtask-events/s (amortised)",
@@ -175,16 +192,21 @@ fn main() {
     for &n in sweep_ns {
         let cec_n = Cec::new(10, 20);
         let trials = 32;
-        // Counter-derived per-trial streams: the sweep inputs are
-        // reproducible regardless of thread count or trial order.
-        let speeds_n: Vec<WorkerSpeeds> = (0..trials)
-            .map(|i| {
-                let mut rng = trial_rng(11, i as u64);
-                WorkerSpeeds::sample(&SpeedModel::paper_default(), n, &mut rng)
-            })
-            .collect();
+        // Counter-derived per-trial streams (SeedMode::PerTrial keyed at
+        // seed 11 — the exact pre-Scenario derivation): the sweep inputs
+        // are reproducible regardless of thread count or trial order.
+        let static_sc = Scenario::builder(&format!("bench_mc_static_n{n}"))
+            .engine(Engine::Statics)
+            .job(job)
+            .fleet(n, n)
+            .schemes(vec![SchemeConfig::Cec { k: 10, s: 20 }])
+            .trials(trials)
+            .seed(11)
+            .seed_mode(SeedMode::PerTrial)
+            .build()
+            .expect("valid static sweep scenario");
         let r = Bench::new(format!("mc static cec n{n} x{trials}"))
-            .run(|| simulate_many(&cec_n, n, job, &cost, &speeds_n));
+            .run(|| static_sc.run().expect("statics engine cannot fail"));
         r.print();
         let events = (trials * n * 20) as f64;
         println!("    -> {:.2e} subtask-events/s", events_per_sec(&r, events));
@@ -198,27 +220,34 @@ fn main() {
         // with N to keep the smoke affordable.
         let tau_n = cost.worker_time(cec_n.subtask_ops(job.u, job.w, job.v, n), 1.0);
         let horizon = 2.0 * 20.0 * tau_n;
-        let mc = TraceMonteCarlo {
-            n_max: n,
-            n_min: (n / 2).max(20),
-            n_initial: n,
-            rate: 0.25 * n as f64 / horizon,
-            horizon,
-            speed_model: SpeedModel::paper_default(),
-            reassign: Reassign::Identity,
-            seed: 12,
-        };
         let trace_trials = match n {
             40 => 16,
             160 => 8,
             640 => 4,
             _ => 2,
         };
+        let trace_sc = Scenario::builder(&format!("bench_mc_trace_n{n}"))
+            .engine(Engine::Trace)
+            .job(job)
+            .fleet(n, n)
+            .schemes(vec![SchemeConfig::Cec { k: 10, s: 20 }])
+            .elasticity(ElasticitySpec::Churn {
+                n_min: (n / 2).max(20),
+                n_initial: n,
+                rate: 0.25 * n as f64 / horizon,
+                horizon,
+                reassign: Reassign::Identity,
+            })
+            .trials(trace_trials)
+            .seed(12)
+            .seed_mode(SeedMode::PerTrial)
+            .build()
+            .expect("valid trace sweep scenario");
         // Trace trials are seconds-scale at large N: lower the sample
         // floor so one row never dominates the run.
         let r = Bench::new(format!("mc trace cec n{n} x{trace_trials}"))
             .samples(5, 10_000)
-            .run(|| mc.run(&cec_n, job, &cost, trace_trials));
+            .run(|| trace_sc.run().expect("trace engine reports failures per trial"));
         r.print();
         report.push(&r, &[("n", n as f64)]);
     }

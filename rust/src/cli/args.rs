@@ -82,6 +82,49 @@ impl Args {
                 .map(Some),
         }
     }
+
+    /// Reject any flag not in `known`, suggesting the closest known name —
+    /// a mistyped `--trails 3` must fail loudly, not silently run the
+    /// default experiment.
+    pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
+        for flag in self.flags.keys() {
+            if known.contains(&flag.as_str()) {
+                continue;
+            }
+            let suggestion = known
+                .iter()
+                .map(|k| (edit_distance(flag, k), *k))
+                .min()
+                .filter(|(d, _)| *d <= 2);
+            let mut msg = format!("unknown flag --{flag}");
+            if let Some((_, best)) = suggestion {
+                msg.push_str(&format!(" (did you mean --{best}?)"));
+            } else if known.is_empty() {
+                msg.push_str(" (this command takes no flags)");
+            } else {
+                msg.push_str(&format!(" (expected one of: {})", known.join(", ")));
+            }
+            return Err(msg);
+        }
+        Ok(())
+    }
+}
+
+/// Levenshtein distance — small inputs only (flag names).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -122,5 +165,34 @@ mod tests {
         // `--x -3` would look like a flag; use `--x=-3` instead.
         let a = Args::parse(&sv(&["cmd", "--x=-3"])).unwrap();
         assert_eq!(a.parse_flag::<i64>("x").unwrap(), Some(-3));
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("trials", "trials"), 0);
+        assert_eq!(edit_distance("trails", "trials"), 2);
+        assert_eq!(edit_distance("sed", "seed"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+    }
+
+    #[test]
+    fn check_known_accepts_exact_flags() {
+        let a = Args::parse(&sv(&["figure", "--trials", "5", "--seed", "7"])).unwrap();
+        a.check_known(&["trials", "seed", "csv"]).unwrap();
+    }
+
+    #[test]
+    fn check_known_suggests_close_match() {
+        let a = Args::parse(&sv(&["figure", "--trails", "5"])).unwrap();
+        let err = a.check_known(&["trials", "seed", "csv"]).unwrap_err();
+        assert!(err.contains("--trails"), "{err}");
+        assert!(err.contains("did you mean --trials?"), "{err}");
+    }
+
+    #[test]
+    fn check_known_lists_options_when_nothing_close() {
+        let a = Args::parse(&sv(&["figure", "--zzz", "5"])).unwrap();
+        let err = a.check_known(&["trials", "seed"]).unwrap_err();
+        assert!(err.contains("expected one of: trials, seed"), "{err}");
     }
 }

@@ -1,10 +1,13 @@
-//! Subcommand implementations.
+//! Subcommand implementations. Every experiment-shaped command routes
+//! through `scenario::Scenario` + `Engine::run` (directly here, or via the
+//! scenario-backed `figures` generators).
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::{run_job, ExecBackend, JobConfig, SchemeConfig};
+use crate::coordinator::{ExecBackend, JobConfig, SchemeConfig};
 use crate::figures;
 use crate::metrics::write_csv;
-use crate::sim::CostModel;
+use crate::scenario::{CoordinatorSpec, ElasticitySpec, Engine, Scenario, SpeedSpec};
+use crate::sim::{CostModel, Reassign};
 use crate::tas::DLevelPolicy;
 
 use super::Args;
@@ -64,49 +67,73 @@ pub fn figure(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `hcec run <scenario.toml>` executes a scenario file on its declared
+/// engine; without a file, the legacy flag form runs one end-to-end coded
+/// job on the real worker pool (a 1-trial coordinator scenario).
 pub fn run(args: &Args) -> Result<(), String> {
+    if let Some(path) = args.positional(1) {
+        return run_scenario_file(path, args);
+    }
+    // --csv only applies to the scenario-file form's outcome table; the
+    // legacy single-job form prints a report, so accepting the flag here
+    // would silently drop it.
+    if args.has_flag("csv") {
+        return Err(
+            "--csv applies to `hcec run <scenario.toml>`; the flag form prints a \
+             single-job report"
+                .into(),
+        );
+    }
     let scheme = match args.flag_or("scheme", "bicec") {
         "cec" => SchemeConfig::Cec { k: 10, s: 12 },
         "mlcec" => SchemeConfig::Mlcec { k: 10, s: 12, policy: DLevelPolicy::LinearRamp },
         "bicec" => SchemeConfig::Bicec { k: 24, s_per_worker: 4 },
         other => return Err(format!("unknown scheme {other:?}")),
     };
-    let mut cfg = JobConfig::end_to_end(scheme);
-    cfg.backend = match args.flag_or("backend", "pjrt") {
+    // The end-to-end driver defaults (JobConfig::end_to_end), as a
+    // coordinator scenario.
+    let template = JobConfig::end_to_end(scheme.clone());
+    let backend = match args.flag_or("backend", "pjrt") {
         "native" => ExecBackend::Native,
         "pjrt" => ExecBackend::Pjrt,
         other => return Err(format!("unknown backend {other:?}")),
     };
-    if let Some(n) = args.parse_flag::<usize>("n")? {
-        cfg.n_workers = n;
-    }
-    if let Some(p) = args.parse_flag::<usize>("preempt")? {
-        cfg.preempt_after_first = p;
-    }
-    if let Some(seed) = args.parse_flag::<u64>("seed")? {
-        cfg.seed = seed;
-    }
-    let report = run_job(&cfg).map_err(|e| e.to_string())?;
+    let n_workers = args.parse_flag::<usize>("n")?.unwrap_or(template.n_workers);
+    let scenario = Scenario::builder("end_to_end")
+        .engine(Engine::Coordinator)
+        .job(template.job)
+        .fleet(template.n_max, n_workers)
+        .schemes(vec![scheme])
+        .speed(match template.speed_model {
+            Some(m) => SpeedSpec::Model(m),
+            None => SpeedSpec::Uniform,
+        })
+        .coordinator(CoordinatorSpec {
+            backend,
+            preempt_after_first: args.parse_flag::<usize>("preempt")?.unwrap_or(0),
+        })
+        .trials(1)
+        .seed(args.parse_flag::<u64>("seed")?.unwrap_or(template.seed))
+        .build()?;
+    let out = scenario.run()?;
+    let s = &out.per_scheme[0];
+    let report = s.ok_trials().next().ok_or("no successful trial")?;
     println!(
-        "scheme={} backend={:?} n={} preempted={}\n\
+        "scheme={} backend={backend:?} n={n_workers} preempted={}\n\
          encode      {:>8.4}s\n\
-         computation {:>8.4}s  ({} completions received, {} used)\n\
+         computation {:>8.4}s  ({} completions received)\n\
          decode      {:>8.4}s\n\
          finishing   {:>8.4}s\n\
          max relative error vs uncoded baseline: {:.3e}\n\
-         recovered: {}",
-        report.scheme,
-        cfg.backend,
-        cfg.n_workers,
-        report.workers_preempted,
-        report.encode_wall,
-        report.computation_wall,
-        report.completions_received,
-        report.completions_used,
-        report.decode_wall,
-        report.finishing_wall(),
+         recovered: true",
+        s.scheme,
+        report.reallocations,
+        report.encode_time,
+        report.computation_time,
+        report.completions,
+        report.decode_time,
+        report.finishing_time(),
         report.max_rel_err,
-        report.recovered
     );
     if report.max_rel_err > 1e-2 {
         return Err(format!("verification failed: rel err {:.3e}", report.max_rel_err));
@@ -114,50 +141,101 @@ pub fn run(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn run_scenario_file(path: &str, args: &Args) -> Result<(), String> {
+    // Scenario files carry every knob themselves; the legacy run flags
+    // would be silently out-voted, so their presence is an error.
+    for flag in ["scheme", "backend", "n", "preempt", "seed"] {
+        if args.has_flag(flag) {
+            return Err(format!(
+                "--{flag} does not apply when running a scenario file — edit {path} \
+                 instead (only --csv is accepted here)"
+            ));
+        }
+    }
+    let scenario = Scenario::from_file(path)?;
+    println!(
+        "scenario {:?}: engine={} schemes={} trials={} seed={}",
+        scenario.name,
+        scenario.engine.as_str(),
+        scenario.schemes.len(),
+        scenario.trials,
+        scenario.seed
+    );
+    let out = scenario.run()?;
+    emit(&out.table(), &scenario.name, args)?;
+    // Coordinator runs decode a real product: keep the legacy verification
+    // gate so a numerics regression cannot exit 0 (CI smokes this path).
+    if scenario.engine == Engine::Coordinator && out.max_rel_err() > 1e-2 {
+        return Err(format!(
+            "verification failed: rel err {:.3e} vs uncoded baseline",
+            out.max_rel_err()
+        ));
+    }
+    Ok(())
+}
+
+/// The figure generators build scenarios and `.expect` them valid, so
+/// raw CLI numbers must be range-checked here first (they bypass
+/// `ExperimentConfig::validate`).
+fn check_rate(rate: f64) -> Result<f64, String> {
+    if rate >= 0.0 && rate.is_finite() {
+        Ok(rate)
+    } else {
+        Err(format!("--rate {rate} must be finite and >= 0"))
+    }
+}
+
 pub fn trace(args: &Args) -> Result<(), String> {
     let cfg = load_config(args)?;
     if let Some(path) = args.flag("file") {
         return replay_trace_file(path, &cfg);
     }
-    let rate = args.parse_flag::<f64>("rate")?.unwrap_or(3.0);
+    let rate = check_rate(args.parse_flag::<f64>("rate")?.unwrap_or(3.0))?;
     emit(&figures::transition_waste_table(&cfg, rate), "ext_t1_transition_waste", args)
 }
 
 /// `hcec trace --file <trace.txt>`: replay a recorded elastic trace (format
-/// documented in sim::trace) through all three schemes at Fig. 1 geometry.
+/// documented in sim::trace) through all three schemes at Fig. 1 geometry —
+/// a 1-trial `Trace`-engine scenario per replay.
 fn replay_trace_file(path: &str, cfg: &ExperimentConfig) -> Result<(), String> {
-    use crate::sim::{simulate_trace, ElasticTrace, WorkerSpeeds};
-    use crate::tas::{Bicec, Cec, Mlcec, Scheme};
+    use crate::sim::ElasticTrace;
     use crate::workload::JobSpec;
     let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
     let trace = ElasticTrace::from_text(&text)?;
     let n_max = trace.n_max;
-    let job = JobSpec::new(240, 240, 240);
-    let cost = cfg.cost_model();
-    let mut rng = crate::rng::default_rng(cfg.seed);
-    let speeds = WorkerSpeeds::sample(&cfg.speed_model(), n_max, &mut rng);
     let s = 4.min(trace.n_initial);
-    let schemes: Vec<Box<dyn Scheme>> = vec![
-        Box::new(Cec::new(2.min(s), s)),
-        Box::new(Mlcec::new(2.min(s), s)),
-        Box::new(Bicec::new(600.min(300 * n_max / 2), 300, n_max)),
-    ];
+    let scenario = Scenario::builder(&format!("replay_{path}"))
+        .engine(Engine::Trace)
+        .job(JobSpec::new(240, 240, 240))
+        .fleet(n_max, trace.n_initial)
+        .schemes(vec![
+            SchemeConfig::Cec { k: 2.min(s), s },
+            SchemeConfig::Mlcec { k: 2.min(s), s, policy: DLevelPolicy::LinearRamp },
+            SchemeConfig::Bicec { k: 600.min(300 * n_max / 2), s_per_worker: 300 },
+        ])
+        .speed_model(cfg.speed_model())
+        .cost(cfg.cost_model())
+        .elasticity(ElasticitySpec::Trace {
+            path: path.to_string(),
+            trace: trace.clone(),
+            reassign: Reassign::Identity,
+        })
+        .trials(1)
+        .seed(cfg.seed)
+        .build()?;
     println!(
         "replaying {path}: n_max={n_max}, n_initial={}, {} events",
         trace.n_initial,
         trace.events.len()
     );
-    for scheme in &schemes {
-        match simulate_trace(scheme.as_ref(), &trace, job, &cost, &speeds) {
-            Ok(out) => println!(
+    let out = scenario.run()?;
+    for s in &out.per_scheme {
+        match &s.trials[0] {
+            Ok(r) => println!(
                 "{:<8} computation={:.5}s waste={:.4} reallocs={} completions={}",
-                scheme.name(),
-                out.computation_time,
-                out.transition_waste,
-                out.reallocations,
-                out.completions
+                s.scheme, r.computation_time, r.transition_waste, r.reallocations, r.completions
             ),
-            Err(e) => println!("{:<8} failed: {e}", scheme.name()),
+            Err(e) => println!("{:<8} failed: {e}", s.scheme),
         }
     }
     Ok(())
@@ -171,6 +249,12 @@ pub fn sweep(args: &Args) -> Result<(), String> {
     let probs = args
         .parse_list::<f64>("probs")?
         .unwrap_or_else(|| vec![0.25, 0.5, 0.75]);
+    if let Some(&bad) = slowdowns.iter().find(|&&s| !(s >= 1.0) || !s.is_finite()) {
+        return Err(format!("--slowdowns {bad} must be finite and >= 1"));
+    }
+    if let Some(&bad) = probs.iter().find(|&&p| !(0.0..=1.0).contains(&p)) {
+        return Err(format!("--probs {bad} outside [0, 1]"));
+    }
     emit(
         &figures::straggler_sweep_table(&cfg, &slowdowns, &probs),
         "ext_t3_straggler_sweep",
@@ -197,7 +281,7 @@ pub fn scaling(args: &Args) -> Result<(), String> {
             cfg.s_cec
         ));
     }
-    let rate = args.parse_flag::<f64>("rate")?.unwrap_or(1.0);
+    let rate = check_rate(args.parse_flag::<f64>("rate")?.unwrap_or(1.0))?;
     emit(&figures::scaling_table(&cfg, &ns, rate, cfg.trials), "scaling_nsweep", args)
 }
 
@@ -226,7 +310,7 @@ pub fn calibrate(_args: &Args) -> Result<(), String> {
 
 pub fn reassign(args: &Args) -> Result<(), String> {
     let cfg = load_config(args)?;
-    let rate = args.parse_flag::<f64>("rate")?.unwrap_or(3.0);
+    let rate = check_rate(args.parse_flag::<f64>("rate")?.unwrap_or(3.0))?;
     emit(&figures::reassign_table(&cfg, rate), "ext_t4_reassign", args)
 }
 

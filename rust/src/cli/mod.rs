@@ -2,6 +2,7 @@
 //! vendored crate set; this covers what the launcher needs).
 //!
 //! ```text
+//! hcec run <scenario.toml> [--csv DIR]
 //! hcec figure <1|2a|2b|2c|2d|all> [--config F] [--csv DIR] [--trials N]
 //! hcec run [--scheme cec|mlcec|bicec] [--backend native|pjrt]
 //!          [--n N] [--preempt P] [--seed S]
@@ -11,11 +12,33 @@
 //! hcec visualize
 //! hcec calibrate
 //! ```
+//!
+//! Every command rejects unrecognised `--flags` with a "did you mean"
+//! error (`Args::check_known`), so a typo never silently runs the default
+//! experiment.
 
 mod args;
 pub mod commands;
 
 pub use args::Args;
+
+/// Flags each command accepts; dispatch validates before running. `None`
+/// means the command name itself is unknown — reported as such, so a
+/// mistyped command is never blamed on its (valid) flags.
+fn known_flags(command: &str) -> Option<&'static [&'static str]> {
+    const CONFIGURED: &[&str] = &["config", "trials", "seed", "csv"];
+    match command {
+        "figure" | "dlevels" | "hierarchy" | "hetero" => Some(CONFIGURED),
+        "run" => Some(&["scheme", "backend", "n", "preempt", "seed", "csv"]),
+        "trace" => Some(&["config", "trials", "seed", "csv", "rate", "file"]),
+        "sweep" => Some(&["config", "trials", "seed", "csv", "slowdowns", "probs"]),
+        "scaling" => Some(&["config", "trials", "seed", "csv", "ns", "rate"]),
+        "reassign" => Some(&["config", "trials", "seed", "csv", "rate"]),
+        "serve" => Some(&["scheme", "backend", "jobs"]),
+        "visualize" | "calibrate" | "help" => Some(&[]),
+        _ => None,
+    }
+}
 
 /// Entry point used by `main.rs`. Returns a process exit code.
 pub fn dispatch(argv: &[String]) -> i32 {
@@ -26,6 +49,16 @@ pub fn dispatch(argv: &[String]) -> i32 {
             return 2;
         }
     };
+    if let Some(cmd) = args.command() {
+        // Unknown commands fall through to the dispatch match below; only
+        // validate flags for commands that exist.
+        if let Some(known) = known_flags(cmd) {
+            if let Err(e) = args.check_known(known) {
+                eprintln!("error: {cmd}: {e}");
+                return 2;
+            }
+        }
+    }
     let result = match args.command() {
         Some("figure") => commands::figure(&args),
         Some("run") => commands::run(&args),
@@ -58,12 +91,17 @@ pub fn usage() -> &'static str {
     "hcec — hierarchical coded elastic computing (ICASSP 2021 reproduction)
 
 USAGE:
-  hcec figure <1|2a|2b|2c|2d|all> [--config FILE] [--csv DIR] [--trials N]
-      Regenerate a paper figure's series as a table (and CSV).
+  hcec run <scenario.toml> [--csv DIR]
+      Execute a scenario file on its declared engine (statics | trace |
+      coordinator) and print the unified outcome table. See
+      examples/scenario_*.toml and rust/EXPERIMENTS.md §Scenario-API for
+      the schema.
   hcec run [--scheme cec|mlcec|bicec] [--backend native|pjrt] [--n N]
            [--preempt P] [--seed S]
       Execute a real coded job on the threaded pool (PJRT artifacts on the
       hot path with --backend pjrt) and verify the recovered product.
+  hcec figure <1|2a|2b|2c|2d|all> [--config FILE] [--csv DIR] [--trials N]
+      Regenerate a paper figure's series as a table (and CSV).
   hcec trace [--rate R] [--trials N] [--seed S] [--file TRACE.txt]
       Elastic-trace simulation: transition waste + finishing times
       (Ext-T1); --file replays a recorded trace (format: sim::trace).
@@ -87,5 +125,7 @@ USAGE:
   hcec visualize
       ASCII Fig. 1 allocation grids at N = 8, 6, 4.
   hcec calibrate
-      Measure this machine's worker/decode rates for the cost model."
+      Measure this machine's worker/decode rates for the cost model.
+
+  Unknown --flags are rejected with a closest-match suggestion."
 }

@@ -74,6 +74,44 @@ impl Doc {
         self.entries.get(path)
     }
 
+    /// Insert a value at a dotted path (`section.key`), returning any
+    /// previous value. The write-side of the parse round trip.
+    pub fn insert(&mut self, path: &str, value: Value) -> Option<Value> {
+        self.entries.insert(path.to_string(), value)
+    }
+
+    /// Serialise back to the TOML subset `parse` accepts: root keys first,
+    /// then one `[section]` block per distinct prefix (the part before the
+    /// last dot — nested headers like `[scheme.cec]` round-trip as-is).
+    /// `parse(doc.to_toml()) == doc` for every representable document.
+    pub fn to_toml(&self) -> String {
+        let mut out = String::new();
+        // Pass 1: root keys (a dotted key emitted before the first header
+        // would be swallowed into that section on re-parse).
+        for (path, value) in &self.entries {
+            if !path.contains('.') {
+                out.push_str(&format!("{path} = {}\n", render_value(value)));
+            }
+        }
+        // Pass 2: sections. BTreeMap order groups a section's keys
+        // contiguously because the section prefix is a common leading
+        // substring ending in '.'.
+        let mut current_section: Option<&str> = None;
+        for (path, value) in &self.entries {
+            let Some(dot) = path.rfind('.') else { continue };
+            let (section, key) = (&path[..dot], &path[dot + 1..]);
+            if Some(section) != current_section {
+                if !out.is_empty() {
+                    out.push('\n');
+                }
+                out.push_str(&format!("[{section}]\n"));
+                current_section = Some(section);
+            }
+            out.push_str(&format!("{key} = {}\n", render_value(value)));
+        }
+        out
+    }
+
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.entries.keys().map(|s| s.as_str())
     }
@@ -123,6 +161,26 @@ pub fn parse(text: &str) -> Result<Doc, String> {
         }
     }
     Ok(doc)
+}
+
+/// Render a value in the form `parse_value` reads back. Floats use Rust's
+/// shortest-roundtrip `{:?}` (always a '.' or exponent, so the int/float
+/// distinction survives); strings must not contain '"' (the parser has no
+/// escapes — `Doc` values written by this crate never do).
+fn render_value(v: &Value) -> String {
+    match v {
+        Value::Int(i) => i.to_string(),
+        Value::Float(f) => format!("{f:?}"),
+        Value::Bool(b) => b.to_string(),
+        Value::Str(s) => {
+            assert!(!s.contains('"'), "unrepresentable string {s:?}");
+            format!("\"{s}\"")
+        }
+        Value::Array(items) => {
+            let inner: Vec<String> = items.iter().map(render_value).collect();
+            format!("[{}]", inner.join(", "))
+        }
+    }
 }
 
 /// Strip a `#` comment, respecting quoted strings.
@@ -277,5 +335,69 @@ ns = [20, 22, 24]
         let doc = parse("schemes = [\"cec\", \"mlcec\", \"bicec\"]\n").unwrap();
         let a = doc.get("schemes").unwrap().as_array().unwrap();
         assert_eq!(a[1].as_str(), Some("mlcec"));
+    }
+
+    #[test]
+    fn to_toml_round_trips_every_value_kind() {
+        let mut doc = Doc::default();
+        doc.insert("seed", Value::Int(42));
+        doc.insert("name", Value::Str("fig2a".into()));
+        doc.insert("speed.p", Value::Float(0.5));
+        doc.insert("speed.rate", Value::Float(3.0e9));
+        doc.insert("speed.whole", Value::Float(4.0));
+        doc.insert("run.quick", Value::Bool(true));
+        doc.insert("grid.ns", Value::Array(vec![Value::Int(20), Value::Int(40)]));
+        doc.insert(
+            "scenario.schemes",
+            Value::Array(vec![Value::Str("cec".into()), Value::Str("bicec".into())]),
+        );
+        let text = doc.to_toml();
+        let back = parse(&text).unwrap_or_else(|e| panic!("{e}\n{text}"));
+        assert_eq!(back, doc, "round trip diverged:\n{text}");
+        // Int vs Float survives the trip.
+        assert_eq!(back.get("speed.whole").unwrap().as_int(), None);
+        assert_eq!(back.get("seed").unwrap().as_int(), Some(42));
+    }
+
+    #[test]
+    fn to_toml_handles_nested_section_headers() {
+        let mut doc = Doc::default();
+        doc.insert("scheme.cec.k", Value::Int(10));
+        doc.insert("scheme.cec.kind", Value::Str("cec".into()));
+        doc.insert("scheme.bicec.k", Value::Int(800));
+        doc.insert("root", Value::Int(1));
+        let text = doc.to_toml();
+        assert!(text.starts_with("root = 1\n"), "root keys must precede headers:\n{text}");
+        assert_eq!(parse(&text).unwrap(), doc, "{text}");
+    }
+
+    #[test]
+    fn prop_doc_round_trip() {
+        crate::prop::check(40, |g| {
+            let mut doc = Doc::default();
+            let sections = ["", "a", "b.c", "speed"];
+            for i in 0..g.usize_in(1, 12) {
+                let sec = *g.pick(&sections);
+                let key = format!("k{i}");
+                let path =
+                    if sec.is_empty() { key } else { format!("{sec}.{key}") };
+                let value = match g.usize_in(0, 3) {
+                    0 => Value::Int(g.i64_in(-1_000_000, 1_000_000)),
+                    1 => Value::Float(g.f64_in(-1e9, 1e9)),
+                    2 => Value::Bool(g.bool()),
+                    _ => Value::Array(vec![
+                        Value::Int(g.i64_in(0, 99)),
+                        Value::Float(g.f64_in(0.0, 1.0)),
+                    ]),
+                };
+                doc.insert(&path, value);
+            }
+            let text = doc.to_toml();
+            let back = parse(&text).map_err(|e| format!("{e}\n{text}"))?;
+            if back != doc {
+                return Err(format!("round trip diverged:\n{text}"));
+            }
+            Ok(())
+        });
     }
 }

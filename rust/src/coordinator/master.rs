@@ -11,41 +11,15 @@ use crate::linalg::{combine_into_rows, gemm, split_rows, Matrix};
 use crate::rng::default_rng;
 use crate::runtime::{artifacts_available, default_artifact_dir, Runtime};
 use crate::sim::{SpeedModel, WorkerSpeeds};
-use crate::tas::{Bicec, Cec, DLevelPolicy, Mlcec, RecoveryRule, Scheme};
+use crate::tas::{RecoveryRule, Scheme};
 use crate::workload::JobSpec;
 
 use super::pool::{spawn_worker, Backend, WorkerMsg, WorkerTask};
 use super::recovery::RecoveryTracker;
 
-/// Scheme selection for a job (a parsed form of the CLI/config options).
-#[derive(Clone, Debug)]
-pub enum SchemeConfig {
-    Cec { k: usize, s: usize },
-    Mlcec { k: usize, s: usize, policy: DLevelPolicy },
-    Bicec { k: usize, s_per_worker: usize },
-}
-
-impl SchemeConfig {
-    pub fn build(&self, n_max: usize) -> Box<dyn Scheme> {
-        match self {
-            SchemeConfig::Cec { k, s } => Box::new(Cec::new(*k, *s)),
-            SchemeConfig::Mlcec { k, s, policy } => {
-                Box::new(Mlcec::with_policy(*k, *s, policy.clone()))
-            }
-            SchemeConfig::Bicec { k, s_per_worker } => {
-                Box::new(Bicec::new(*k, *s_per_worker, n_max))
-            }
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            SchemeConfig::Cec { .. } => "cec",
-            SchemeConfig::Mlcec { .. } => "mlcec",
-            SchemeConfig::Bicec { .. } => "bicec",
-        }
-    }
-}
+// The scheme axis now lives on the unified experiment surface; re-exported
+// here so existing `coordinator::SchemeConfig` callers keep compiling.
+pub use crate::scenario::SchemeConfig;
 
 /// Execution backend for the worker hot path.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -372,6 +346,7 @@ fn decode(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tas::DLevelPolicy;
 
     fn native_cfg(scheme: SchemeConfig) -> JobConfig {
         JobConfig {

@@ -1,45 +1,75 @@
-//! Extension ablations (DESIGN.md Ext-T1..T3) — experiments the paper
-//! motivates but does not plot.
+//! Extension ablations (DESIGN.md Ext-T1..T6) — experiments the paper
+//! motivates but does not plot. Every table routes through
+//! `scenario::Scenario` + `Engine::run`; the old hand-wired drivers are
+//! reproduced bit-for-bit (see tests/scenario_equivalence.rs).
 
 use crate::config::ExperimentConfig;
 use crate::metrics::{mean, Table};
-use crate::rng::default_rng;
-use crate::sim::{simulate_many, simulate_static, Reassign, TraceMonteCarlo, WorkerSpeeds};
-use crate::tas::{Bicec, Cec, DLevelPolicy, HeteroCec, Mlcc, Mlcec, Scheme};
+use crate::scenario::{
+    ElasticitySpec, Engine, Metric, Scenario, SchemeConfig, SeedMode, SpeedSpec,
+};
+use crate::sim::Reassign;
+use crate::tas::{DLevelPolicy, Mlcc};
 use crate::workload::JobSpec;
 
-/// The Ext-T1/T4 elastic experiment: Fig. 1 geometry (8 slots, floor 4),
+/// The Ext-T1/T4 elastic scenario: Fig. 1 geometry (8 slots, floor 4),
 /// ~`event_rate` Poisson events per horizon, horizon scaled to the job so
 /// events land mid-run. Counter-derived trial streams → the trial pool is
 /// parallel yet bit-identical to serial, and every scheme/policy sees the
 /// same per-trial (speeds, trace) — the paired comparison.
-fn fig1_scale_mc(cfg: &ExperimentConfig, job: JobSpec, event_rate: f64) -> TraceMonteCarlo {
+fn fig1_scale_scenario(
+    name: &str,
+    cfg: &ExperimentConfig,
+    job: JobSpec,
+    event_rate: f64,
+    schemes: Vec<SchemeConfig>,
+    reassign: Reassign,
+) -> Scenario {
     let cost = cfg.cost_model();
     let horizon = 400.0 * cost.worker_time(job.ops() / 2400, 1.0);
-    TraceMonteCarlo {
-        n_max: 8,
-        n_min: 4,
-        n_initial: 8,
-        rate: event_rate / horizon,
-        horizon,
-        speed_model: cfg.speed_model(),
-        reassign: Reassign::Identity,
-        seed: cfg.seed,
-    }
+    Scenario::builder(name)
+        .engine(Engine::Trace)
+        .job(job)
+        .fleet(8, 8)
+        .schemes(schemes)
+        .speed_model(cfg.speed_model())
+        .cost(cost)
+        .elasticity(ElasticitySpec::Churn {
+            n_min: 4,
+            n_initial: 8,
+            rate: event_rate / horizon,
+            horizon,
+            reassign,
+        })
+        .trials(cfg.trials)
+        .seed(cfg.seed)
+        .seed_mode(SeedMode::PerTrial)
+        .build()
+        .expect("valid fig1-scale churn scenario")
+}
+
+/// The Fig. 1-scale scheme trio (small geometry so traces bite mid-run).
+fn fig1_trio() -> Vec<SchemeConfig> {
+    vec![
+        SchemeConfig::Cec { k: 2, s: 4 },
+        SchemeConfig::Mlcec { k: 2, s: 4, policy: DLevelPolicy::LinearRamp },
+        SchemeConfig::Bicec { k: 600, s_per_worker: 300 },
+    ]
 }
 
 /// Ext-T1: transition waste + finishing time under Poisson elasticity.
 /// BICEC's zero-waste property is the paper's Sec. 2 claim.
 pub fn transition_waste_table(cfg: &ExperimentConfig, event_rate: f64) -> Table {
-    // Small geometry (paper Fig. 1 scale) so traces bite mid-run.
     let job = JobSpec::new(240, 240, 240);
-    let schemes: Vec<Box<dyn Scheme>> = vec![
-        Box::new(Cec::new(2, 4)),
-        Box::new(Mlcec::new(2, 4)),
-        Box::new(Bicec::new(600, 300, 8)),
-    ];
-    let cost = cfg.cost_model();
-    let mc = fig1_scale_mc(cfg, job, event_rate);
+    let sc = fig1_scale_scenario(
+        "ext_t1_transition_waste",
+        cfg,
+        job,
+        event_rate,
+        fig1_trio(),
+        Reassign::Identity,
+    );
+    let out = sc.run().expect("trace engine reports failures per trial");
     let mut t = Table::new(&[
         "scheme",
         "avg_waste_taskfrac",
@@ -47,33 +77,24 @@ pub fn transition_waste_table(cfg: &ExperimentConfig, event_rate: f64) -> Table 
         "avg_computation_s",
         "failures",
     ]);
-    for scheme in &schemes {
-        let (mut wastes, mut reallocs, mut comps) = (Vec::new(), Vec::new(), Vec::new());
-        let mut failures = 0usize;
-        for r in mc.run(scheme.as_ref(), job, &cost, cfg.trials) {
-            match r {
-                Ok(out) => {
-                    wastes.push(out.transition_waste);
-                    reallocs.push(out.reallocations as f64);
-                    comps.push(out.computation_time);
-                }
-                Err(_) => failures += 1,
-            }
-        }
+    for s in &out.per_scheme {
+        let reallocs: Vec<f64> =
+            s.ok_trials().map(|tr| tr.reallocations as f64).collect();
         t.row(vec![
-            scheme.name().to_string(),
-            format!("{:.4}", mean(&wastes)),
+            s.scheme.clone(),
+            format!("{:.4}", s.mean(Metric::TransitionWaste)),
             format!("{:.2}", mean(&reallocs)),
-            format!("{:.4}", mean(&comps)),
-            failures.to_string(),
+            format!("{:.4}", s.mean(Metric::Computation)),
+            s.failures().to_string(),
         ]);
     }
     t
 }
 
-/// Ext-T2: d-level policy sensitivity for MLCEC (Fig. 2a setup).
+/// Ext-T2: d-level policy sensitivity for MLCEC (Fig. 2a setup). One
+/// statics scenario per N — CEC plus one MLCEC entry per policy, all on
+/// the same per-trial draws.
 pub fn dlevel_table(cfg: &ExperimentConfig) -> Table {
-    let cost = cfg.cost_model();
     let policies: Vec<(&str, DLevelPolicy)> = vec![
         ("linear_ramp", DLevelPolicy::LinearRamp),
         (
@@ -83,26 +104,29 @@ pub fn dlevel_table(cfg: &ExperimentConfig) -> Table {
     ];
     let mut t = Table::new(&["N", "policy", "avg_computation_s", "vs_cec_%"]);
     for &n in &cfg.ns {
-        let mut rng = default_rng(cfg.seed ^ (n as u64) << 16);
-        let mut speeds_per_trial = Vec::new();
-        for _ in 0..cfg.trials {
-            speeds_per_trial.push(WorkerSpeeds::sample(&cfg.speed_model(), cfg.n_max, &mut rng));
+        let mut schemes = vec![SchemeConfig::cec_of(cfg)];
+        for (_, policy) in &policies {
+            schemes.push(SchemeConfig::Mlcec {
+                k: cfg.k_cec,
+                s: cfg.s_cec,
+                policy: policy.clone(),
+            });
         }
-        let cec = Cec::new(cfg.k_cec, cfg.s_cec);
-        let cec_mean = mean(
-            &simulate_many(&cec, n, cfg.job, &cost, &speeds_per_trial)
-                .iter()
-                .map(|r| r.computation_time)
-                .collect::<Vec<_>>(),
-        );
-        for (name, policy) in &policies {
-            let scheme = Mlcec::with_policy(cfg.k_cec, cfg.s_cec, policy.clone());
-            let m = mean(
-                &simulate_many(&scheme, n, cfg.job, &cost, &speeds_per_trial)
-                    .iter()
-                    .map(|r| r.computation_time)
-                    .collect::<Vec<_>>(),
-            );
+        let sc = Scenario::builder(&format!("ext_t2_dlevels_n{n}"))
+            .engine(Engine::Statics)
+            .job(cfg.job)
+            .fleet(cfg.n_max, n)
+            .schemes(schemes)
+            .speed_model(cfg.speed_model())
+            .cost(cfg.cost_model())
+            .trials(cfg.trials)
+            .seed(cfg.seed ^ (n as u64) << 16)
+            .build()
+            .expect("valid dlevel scenario");
+        let out = sc.run().expect("statics engine cannot fail");
+        let cec_mean = out.per_scheme[0].mean(Metric::Computation);
+        for (i, (name, _)) in policies.iter().enumerate() {
+            let m = out.per_scheme[1 + i].mean(Metric::Computation);
             t.row(vec![
                 n.to_string(),
                 name.to_string(),
@@ -120,36 +144,192 @@ pub fn straggler_sweep_table(
     slowdowns: &[f64],
     probs: &[f64],
 ) -> Table {
-    let cost = cfg.cost_model();
     let n = *cfg.ns.last().unwrap();
-    let cec = Cec::new(cfg.k_cec, cfg.s_cec);
-    let mlcec = Mlcec::new(cfg.k_cec, cfg.s_cec);
-    let bicec = Bicec::new(cfg.k_bicec, cfg.s_bicec, cfg.n_max);
     let mut t = Table::new(&["slowdown", "p", "cec_s", "mlcec_vs_cec_%", "bicec_vs_cec_%"]);
     for &slowdown in slowdowns {
         for &p in probs {
-            let model = crate::sim::SpeedModel::BernoulliSlowdown {
-                p,
-                slowdown,
-                jitter: cfg.jitter,
-            };
-            let mut rng = default_rng(cfg.seed);
-            let speeds: Vec<WorkerSpeeds> = (0..cfg.trials)
-                .map(|_| WorkerSpeeds::sample(&model, cfg.n_max, &mut rng))
-                .collect();
-            let fin = |scheme: &dyn Scheme| {
-                simulate_many(scheme, n, cfg.job, &cost, &speeds)
-                    .iter()
-                    .map(|r| r.finishing_time())
-                    .collect::<Vec<_>>()
-            };
-            let (cm, mm, bm) = (mean(&fin(&cec)), mean(&fin(&mlcec)), mean(&fin(&bicec)));
+            let sc = Scenario::builder(&format!("ext_t3_s{slowdown}_p{p}"))
+                .engine(Engine::Statics)
+                .job(cfg.job)
+                .fleet(cfg.n_max, n)
+                .schemes(SchemeConfig::paper_trio(cfg))
+                .speed_model(crate::sim::SpeedModel::BernoulliSlowdown {
+                    p,
+                    slowdown,
+                    jitter: cfg.jitter,
+                })
+                .cost(cfg.cost_model())
+                .trials(cfg.trials)
+                .seed(cfg.seed)
+                .build()
+                .expect("valid straggler-sweep scenario");
+            let out = sc.run().expect("statics engine cannot fail");
+            let (cm, mm, bm) = (
+                out.per_scheme[0].mean(Metric::Finishing),
+                out.per_scheme[1].mean(Metric::Finishing),
+                out.per_scheme[2].mean(Metric::Finishing),
+            );
             t.row(vec![
                 format!("{slowdown}"),
                 format!("{p}"),
                 format!("{cm:.4}"),
                 format!("{:+.1}", 100.0 * (mm - cm) / cm),
                 format!("{:+.1}", 100.0 * (bm - cm) / cm),
+            ]);
+        }
+    }
+    t
+}
+
+/// Ext-T4: waste-minimising re-assignment ([10]) vs the schemes' naive
+/// positional re-assignment, under Poisson elasticity. Same seed for both
+/// policies: reassign is not part of the stream derivation, so each trial
+/// replays the identical (speeds, trace) under the other policy.
+pub fn reassign_table(cfg: &ExperimentConfig, event_rate: f64) -> Table {
+    let job = JobSpec::new(240, 240, 240);
+    let schemes = vec![
+        SchemeConfig::Cec { k: 2, s: 4 },
+        SchemeConfig::Mlcec { k: 2, s: 4, policy: DLevelPolicy::LinearRamp },
+    ];
+    let policies = [("identity", Reassign::Identity), ("max_overlap", Reassign::MaxOverlap)];
+    let outcomes: Vec<_> = policies
+        .iter()
+        .map(|(pname, policy)| {
+            fig1_scale_scenario(
+                &format!("ext_t4_reassign_{pname}"),
+                cfg,
+                job,
+                event_rate,
+                schemes.clone(),
+                *policy,
+            )
+            .run()
+            .expect("trace engine reports failures per trial")
+        })
+        .collect();
+    let mut t = Table::new(&[
+        "scheme",
+        "policy",
+        "avg_waste_taskfrac",
+        "avg_computation_s",
+        "failures",
+    ]);
+    for (si, spec) in schemes.iter().enumerate() {
+        for ((pname, _), out) in policies.iter().zip(&outcomes) {
+            let s = &out.per_scheme[si];
+            t.row(vec![
+                spec.name().to_string(),
+                pname.to_string(),
+                format!("{:.4}", s.mean(Metric::TransitionWaste)),
+                format!("{:.4}", s.mean(Metric::Computation)),
+                s.failures().to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// Ext-T5: the hierarchy ladder at fixed N = 40.
+///
+/// Two *rate-matched* groups (same per-worker computation budget within a
+/// group, so times are directly comparable):
+///
+/// * rate 5/8 — classic (25, 40) coding [2] vs MLCC with a 35→15 threshold
+///   ramp (avg 25) [6, 9]: hierarchy exploits stragglers' partial layers
+///   where classic must wait for slow *full-task* completions.
+/// * rate 1/4, elastic — CEC vs MLCEC vs BICEC (the paper's Fig. 2a cell).
+///
+/// The elastic trio runs through the statics scenario; the MLCC ladder is
+/// a closed form outside the `Scheme` trait, paired with the scenario's
+/// trials via [`Scenario::speeds_per_trial`].
+pub fn hierarchy_table(cfg: &ExperimentConfig) -> Table {
+    let cost = cfg.cost_model();
+    let n = *cfg.ns.last().unwrap();
+    let job = cfg.job;
+    let sc = Scenario::builder("ext_t5_hierarchy")
+        .engine(Engine::Statics)
+        .job(job)
+        .fleet(cfg.n_max, n)
+        .schemes(SchemeConfig::paper_trio(cfg))
+        .speed_model(cfg.speed_model())
+        .cost(cost)
+        .trials(cfg.trials)
+        .seed(cfg.seed)
+        .build()
+        .expect("valid hierarchy scenario");
+    let speeds = sc.speeds_per_trial();
+    let out = sc.run().expect("statics engine cannot fail");
+
+    let classic = Mlcc::classic(25);
+    let mlcc = Mlcc::ramp(20, 35, 15);
+    let mut rows: Vec<(String, String, Vec<f64>, Vec<f64>)> = vec![
+        ("classic_mds_k25".into(), "5/8".into(), Vec::new(), Vec::new()),
+        ("mlcc_35to15".into(), "5/8".into(), Vec::new(), Vec::new()),
+    ];
+    for sp in &speeds {
+        rows[0].2.push(classic.computation_time(n, job, &cost, sp));
+        rows[0].3.push(classic.finishing_time(n, job, &cost, sp));
+        rows[1].2.push(mlcc.computation_time(n, job, &cost, sp));
+        rows[1].3.push(mlcc.finishing_time(n, job, &cost, sp));
+    }
+    for s in &out.per_scheme {
+        rows.push((
+            s.scheme.clone(),
+            "1/4".into(),
+            s.metric_values(Metric::Computation),
+            s.metric_values(Metric::Finishing),
+        ));
+    }
+    let mut t = Table::new(&["scheme", "rate", "avg_computation_s", "avg_finishing_s"]);
+    for (name, rate, comps, fins) in rows {
+        t.row(vec![
+            name,
+            rate,
+            format!("{:.4}", mean(&comps)),
+            format!("{:.4}", mean(&fins)),
+        ]);
+    }
+    t
+}
+
+/// Ext-T6: heterogeneous-aware allocation ([11, 12]) on a two-tier cluster
+/// with *persistent, known* speeds, vs uniform CEC. Deterministic explicit
+/// speeds → one trial per cell.
+pub fn hetero_table(cfg: &ExperimentConfig) -> Table {
+    let mut t = Table::new(&["N", "slow_frac", "cec_s", "hetero_vs_cec_%"]);
+    for &n in &[24usize, 32, 40] {
+        for slow_frac in [0.25, 0.5, 0.75] {
+            let slow_count = (n as f64 * slow_frac).round() as usize;
+            let mult: Vec<f64> = (0..n)
+                .map(|i| if i < n - slow_count { 1.0 } else { cfg.slowdown })
+                .collect();
+            let known: Vec<f64> = mult.iter().map(|m| 1.0 / m).collect();
+            let sc = Scenario::builder(&format!("ext_t6_n{n}_f{slow_frac}"))
+                .engine(Engine::Statics)
+                .job(cfg.job)
+                .fleet(n, n)
+                .schemes(vec![
+                    SchemeConfig::Cec { k: cfg.k_cec, s: 12.min(n) },
+                    SchemeConfig::Hetero {
+                        k: cfg.k_cec,
+                        s_avg: 12.min(n),
+                        known_speeds: known,
+                    },
+                ])
+                .speed(SpeedSpec::Explicit(mult))
+                .cost(cfg.cost_model())
+                .trials(1)
+                .seed(cfg.seed)
+                .build()
+                .expect("valid hetero scenario");
+            let out = sc.run().expect("statics engine cannot fail");
+            let a = out.per_scheme[0].mean(Metric::Computation);
+            let b = out.per_scheme[1].mean(Metric::Computation);
+            t.row(vec![
+                n.to_string(),
+                format!("{slow_frac}"),
+                format!("{a:.4}"),
+                format!("{:+.1}", 100.0 * (b - a) / a),
             ]);
         }
     }
@@ -191,137 +371,6 @@ mod tests {
         let t = straggler_sweep_table(&quick_cfg(), &[2.0, 10.0], &[0.5]);
         assert_eq!(t.n_rows(), 2);
     }
-}
-
-/// Ext-T4: waste-minimising re-assignment ([10]) vs the schemes' naive
-/// positional re-assignment, under Poisson elasticity.
-pub fn reassign_table(cfg: &ExperimentConfig, event_rate: f64) -> Table {
-    let job = JobSpec::new(240, 240, 240);
-    let cost = cfg.cost_model();
-    let schemes: Vec<Box<dyn Scheme>> =
-        vec![Box::new(Cec::new(2, 4)), Box::new(Mlcec::new(2, 4))];
-    let mut t = Table::new(&[
-        "scheme",
-        "policy",
-        "avg_waste_taskfrac",
-        "avg_computation_s",
-        "failures",
-    ]);
-    for scheme in &schemes {
-        for (pname, policy) in
-            [("identity", Reassign::Identity), ("max_overlap", Reassign::MaxOverlap)]
-        {
-            // Same seed for both policies: reassign is not part of the
-            // stream derivation, so each trial replays the identical
-            // (speeds, trace) under the other policy.
-            let mc =
-                TraceMonteCarlo { reassign: policy, ..fig1_scale_mc(cfg, job, event_rate) };
-            let (mut wastes, mut comps) = (Vec::new(), Vec::new());
-            let mut failures = 0usize;
-            for r in mc.run(scheme.as_ref(), job, &cost, cfg.trials) {
-                match r {
-                    Ok(out) => {
-                        wastes.push(out.transition_waste);
-                        comps.push(out.computation_time);
-                    }
-                    Err(_) => failures += 1,
-                }
-            }
-            t.row(vec![
-                scheme.name().to_string(),
-                pname.to_string(),
-                format!("{:.4}", mean(&wastes)),
-                format!("{:.4}", mean(&comps)),
-                failures.to_string(),
-            ]);
-        }
-    }
-    t
-}
-
-/// Ext-T5: the hierarchy ladder at fixed N = 40.
-///
-/// Two *rate-matched* groups (same per-worker computation budget within a
-/// group, so times are directly comparable):
-///
-/// * rate 5/8 — classic (25, 40) coding [2] vs MLCC with a 35→15 threshold
-///   ramp (avg 25) [6, 9]: hierarchy exploits stragglers' partial layers
-///   where classic must wait for slow *full-task* completions.
-/// * rate 1/4, elastic — CEC vs MLCEC vs BICEC (the paper's Fig. 2a cell).
-pub fn hierarchy_table(cfg: &ExperimentConfig) -> Table {
-    let cost = cfg.cost_model();
-    let n = *cfg.ns.last().unwrap();
-    let job = cfg.job;
-    let classic = Mlcc::classic(25);
-    let mlcc = Mlcc::ramp(20, 35, 15);
-    let cec = Cec::new(cfg.k_cec, cfg.s_cec);
-    let mlcec = Mlcec::new(cfg.k_cec, cfg.s_cec);
-    let bicec = Bicec::new(cfg.k_bicec, cfg.s_bicec, cfg.n_max);
-    let mut rng = default_rng(cfg.seed);
-    let trials = cfg.trials;
-    let mut rows: Vec<(String, String, Vec<f64>, Vec<f64>)> = vec![
-        ("classic_mds_k25".into(), "5/8".into(), Vec::new(), Vec::new()),
-        ("mlcc_35to15".into(), "5/8".into(), Vec::new(), Vec::new()),
-        ("cec".into(), "1/4".into(), Vec::new(), Vec::new()),
-        ("mlcec".into(), "1/4".into(), Vec::new(), Vec::new()),
-        ("bicec".into(), "1/4".into(), Vec::new(), Vec::new()),
-    ];
-    for _ in 0..trials {
-        let sp = WorkerSpeeds::sample(&cfg.speed_model(), cfg.n_max, &mut rng);
-        rows[0].2.push(classic.computation_time(n, job, &cost, &sp));
-        rows[0].3.push(classic.finishing_time(n, job, &cost, &sp));
-        rows[1].2.push(mlcc.computation_time(n, job, &cost, &sp));
-        rows[1].3.push(mlcc.finishing_time(n, job, &cost, &sp));
-        for (i, s) in [&cec as &dyn Scheme, &mlcec, &bicec].into_iter().enumerate() {
-            let r = simulate_static(s, n, job, &cost, &sp);
-            rows[2 + i].2.push(r.computation_time);
-            rows[2 + i].3.push(r.finishing_time());
-        }
-    }
-    let mut t = Table::new(&["scheme", "rate", "avg_computation_s", "avg_finishing_s"]);
-    for (name, rate, comps, fins) in rows {
-        t.row(vec![
-            name,
-            rate,
-            format!("{:.4}", mean(&comps)),
-            format!("{:.4}", mean(&fins)),
-        ]);
-    }
-    t
-}
-
-/// Ext-T6: heterogeneous-aware allocation ([11, 12]) on a two-tier cluster
-/// with *persistent, known* speeds, vs uniform CEC.
-pub fn hetero_table(cfg: &ExperimentConfig) -> Table {
-    let cost = cfg.cost_model();
-    let job = cfg.job;
-    let mut t = Table::new(&[
-        "N",
-        "slow_frac",
-        "cec_s",
-        "hetero_vs_cec_%",
-    ]);
-    for &n in &[24usize, 32, 40] {
-        for slow_frac in [0.25, 0.5, 0.75] {
-            let slow_count = (n as f64 * slow_frac).round() as usize;
-            let mult: Vec<f64> = (0..n)
-                .map(|i| if i < n - slow_count { 1.0 } else { cfg.slowdown })
-                .collect();
-            let speeds = WorkerSpeeds::from_vec(mult.clone());
-            let known: Vec<f64> = mult.iter().map(|m| 1.0 / m).collect();
-            let uniform = Cec::new(cfg.k_cec, 12.min(n));
-            let hetero = HeteroCec::new(cfg.k_cec, 12.min(n), known);
-            let a = simulate_static(&uniform, n, job, &cost, &speeds).computation_time;
-            let b = simulate_static(&hetero, n, job, &cost, &speeds).computation_time;
-            t.row(vec![
-                n.to_string(),
-                format!("{slow_frac}"),
-                format!("{a:.4}"),
-                format!("{:+.1}", 100.0 * (b - a) / a),
-            ]);
-        }
-    }
-    t
 }
 
 #[cfg(test)]

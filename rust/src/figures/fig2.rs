@@ -8,68 +8,56 @@
 //! One trial samples one straggler draw shared by all three schemes
 //! (paired comparison, like the paper's single simulated cluster), then
 //! runs the static DES per scheme.
+//!
+//! Each grid point is one `scenario::Scenario` on the `Statics` engine
+//! ([`fig2_scenario`]), seeded `cfg.seed ^ (n << 32)` with sequential
+//! per-trial draws — the exact derivation of the pre-Scenario harness, so
+//! fixed-seed outputs are bit-identical (asserted in
+//! `tests/scenario_equivalence.rs`).
 
 use crate::config::ExperimentConfig;
-use crate::metrics::{Summary, Table};
-use crate::rng::default_rng;
-use crate::sim::{simulate_many, WorkerSpeeds};
-use crate::tas::{Bicec, Cec, Mlcec, Scheme};
+use crate::metrics::Table;
+use crate::scenario::{Engine, Scenario, SchemeConfig};
 use crate::workload::JobSpec;
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Metric {
-    Computation,
-    Decode,
-    Finishing,
-}
-
-impl Metric {
-    fn of(&self, r: &crate::sim::RunResult) -> f64 {
-        match self {
-            Metric::Computation => r.computation_time,
-            Metric::Decode => r.decode_time,
-            Metric::Finishing => r.finishing_time(),
-        }
-    }
-}
+pub use crate::scenario::Metric;
 
 /// Mean metric per (N, scheme) over the config's trials.
 pub struct Fig2Point {
     pub n: usize,
-    pub cec: Summary,
-    pub mlcec: Summary,
-    pub bicec: Summary,
+    pub cec: crate::metrics::Summary,
+    pub mlcec: crate::metrics::Summary,
+    pub bicec: crate::metrics::Summary,
+}
+
+/// The Fig. 2 scenario at one grid point: paper scheme trio, paired
+/// straggler draws, fixed fleet of `n` active workers out of `cfg.n_max`.
+pub fn fig2_scenario(cfg: &ExperimentConfig, job: JobSpec, n: usize) -> Scenario {
+    Scenario::builder(&format!("fig2_n{n}"))
+        .engine(Engine::Statics)
+        .job(job)
+        .fleet(cfg.n_max, n)
+        .schemes(SchemeConfig::paper_trio(cfg))
+        .speed_model(cfg.speed_model())
+        .cost(cfg.cost_model())
+        .trials(cfg.trials)
+        .seed(cfg.seed ^ (n as u64) << 32)
+        .build()
+        .expect("ExperimentConfig produces a valid fig2 scenario")
 }
 
 pub fn fig2_series(cfg: &ExperimentConfig, metric: Metric, job: JobSpec) -> Vec<Fig2Point> {
-    let cost = cfg.cost_model();
-    let cec = Cec::new(cfg.k_cec, cfg.s_cec);
-    let mlcec = Mlcec::new(cfg.k_cec, cfg.s_cec);
-    let bicec = Bicec::new(cfg.k_bicec, cfg.s_bicec, cfg.n_max);
     cfg.ns
         .iter()
         .map(|&n| {
-            let mut rng = default_rng(cfg.seed ^ (n as u64) << 32);
-            // One straggler draw per trial, shared across schemes (paired
-            // comparison); the batch driver then amortises each scheme's
-            // allocate(n) and scratch across the whole sweep.
-            let speeds: Vec<WorkerSpeeds> = (0..cfg.trials)
-                .map(|_| WorkerSpeeds::sample(&cfg.speed_model(), cfg.n_max, &mut rng))
-                .collect();
-            let mut xs = [Vec::new(), Vec::new(), Vec::new()];
-            for (i, scheme) in
-                [&cec as &dyn Scheme, &mlcec, &bicec].into_iter().enumerate()
-            {
-                xs[i] = simulate_many(scheme, n, job, &cost, &speeds)
-                    .iter()
-                    .map(|r| metric.of(r))
-                    .collect();
-            }
+            let out = fig2_scenario(cfg, job, n)
+                .run()
+                .expect("statics engine cannot fail on a valid scenario");
             Fig2Point {
                 n,
-                cec: Summary::of(&xs[0]),
-                mlcec: Summary::of(&xs[1]),
-                bicec: Summary::of(&xs[2]),
+                cec: out.per_scheme[0].summary(metric),
+                mlcec: out.per_scheme[1].summary(metric),
+                bicec: out.per_scheme[2].summary(metric),
             }
         })
         .collect()
@@ -77,19 +65,12 @@ pub fn fig2_series(cfg: &ExperimentConfig, metric: Metric, job: JobSpec) -> Vec<
 
 /// Render one subfigure as the paper's series (+ relative improvements).
 pub fn fig2_table(cfg: &ExperimentConfig, which: &str) -> Table {
-    let (metric, job, title_cols): (Metric, JobSpec, [&str; 2]) = match which {
-        "2a" => (Metric::Computation, cfg.job, ["mlcec_vs_cec_%", "bicec_vs_cec_%"]),
-        "2b" => (Metric::Decode, cfg.job, ["mlcec_vs_cec_%", "bicec_vs_cec_%"]),
-        "2c" => (Metric::Finishing, JobSpec::paper_square(), ["mlcec_vs_cec_%", "bicec_vs_cec_%"]),
-        "2d" => {
-            (Metric::Finishing, JobSpec::paper_tall_fat(), ["mlcec_vs_cec_%", "bicec_vs_cec_%"])
-        }
+    let (metric, job): (Metric, JobSpec) = match which {
+        "2a" => (Metric::Computation, cfg.job),
+        "2b" => (Metric::Decode, cfg.job),
+        "2c" => (Metric::Finishing, JobSpec::paper_square()),
+        "2d" => (Metric::Finishing, JobSpec::paper_tall_fat()),
         other => panic!("unknown figure {other:?} (expected 2a|2b|2c|2d)"),
-    };
-    let job = match which {
-        "2c" => JobSpec::paper_square(),
-        "2d" => JobSpec::paper_tall_fat(),
-        _ => job,
     };
     let series = fig2_series(cfg, metric, job);
     let mut t = Table::new(&[
@@ -97,8 +78,8 @@ pub fn fig2_table(cfg: &ExperimentConfig, which: &str) -> Table {
         "cec_s",
         "mlcec_s",
         "bicec_s",
-        title_cols[0],
-        title_cols[1],
+        "mlcec_vs_cec_%",
+        "bicec_vs_cec_%",
     ]);
     for p in &series {
         let rel = |x: f64| 100.0 * (x - p.cec.mean) / p.cec.mean;
@@ -179,5 +160,13 @@ mod tests {
         let cfg = quick_cfg();
         let t = fig2_table(&cfg, "2a");
         assert_eq!(t.n_rows(), cfg.ns.len());
+    }
+
+    #[test]
+    fn fig2_scenario_round_trips_through_toml() {
+        let cfg = quick_cfg();
+        let sc = fig2_scenario(&cfg, cfg.job, 40);
+        let back = Scenario::from_toml(&sc.to_toml()).unwrap();
+        assert_eq!(back.to_doc(), sc.to_doc());
     }
 }

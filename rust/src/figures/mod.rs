@@ -14,5 +14,5 @@ pub use ablations::{
     transition_waste_table,
 };
 pub use fig1::{fig1_grid, fig1_table};
-pub use fig2::{fig2_table, Metric};
-pub use sweep::{scaling_table, SCALING_NS};
+pub use fig2::{fig2_scenario, fig2_series, fig2_table, Fig2Point, Metric};
+pub use sweep::{scaling_scenarios, scaling_table, SCALING_NS};

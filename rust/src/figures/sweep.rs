@@ -14,40 +14,86 @@
 //! * the trace horizon ∝ 1/N — runs finish faster with more workers, so
 //!   the churn window tracks the shrinking run.
 //!
-//! All randomness is counter-derived per trial (`rng::trial_rng` keyed by
-//! `fold_in(cfg.seed, N)`), so every cell is reproducible in isolation and
-//! the parallel trial pools are bit-identical to serial. The static
-//! columns use one straggler draw per trial shared by all three schemes
-//! (paired comparison, as in Fig. 2); the trace columns pair trials the
-//! same way through the shared per-trial stream.
+//! Each row is two `scenario::Scenario`s ([`scaling_scenarios`]): a
+//! `Statics` one with counter-derived per-trial streams (`PerTrial` seed
+//! mode keyed by `fold_in(cfg.seed, N)`) and a `Trace` one whose Poisson
+//! churn runs on the same per-trial streams — every cell reproducible in
+//! isolation, parallel trial pools bit-identical to serial, and the whole
+//! derivation shared with `hcec run <scenario.toml>`.
 //!
 //! Reported metric is mean *computation* time (Fig. 2a's axis): BICEC's
 //! K = 800 decode is N-independent and would swamp the scaling signal.
 
 use crate::config::ExperimentConfig;
-use crate::metrics::{mean, Table};
-use crate::rng::{fold_in, trial_rng};
-use crate::sim::{simulate_many, Reassign, TraceMonteCarlo, WorkerSpeeds};
-use crate::tas::{Bicec, Cec, Mlcec, Scheme};
+use crate::metrics::Table;
+use crate::rng::fold_in;
+use crate::scenario::{ElasticitySpec, Engine, Metric, Scenario, SchemeConfig, SeedMode};
+use crate::sim::Reassign;
+use crate::tas::Scheme;
 
 /// Default worker-count grid for the scaling sweep.
 pub const SCALING_NS: [usize; 4] = [40, 160, 640, 2560];
 
-/// One row per N: paired static computation means and paired elastic-trace
-/// computation means, plus CEC's transition waste and the failure count.
+/// The (static, trace) scenario pair for one sweep row at fleet size `n`.
 /// `events_per_node` is the expected number of elastic events per worker
 /// slot within one trace horizon (fleet-wide rate = events_per_node · N /
-/// horizon).
+/// horizon); the horizon tracks the faster run (~2 unstraggled CEC
+/// sweeps).
+pub fn scaling_scenarios(
+    cfg: &ExperimentConfig,
+    n: usize,
+    events_per_node: f64,
+    trials: usize,
+) -> (Scenario, Scenario) {
+    assert!(n >= cfg.s_cec, "sweep N={n} below S={}", cfg.s_cec);
+    let seed_n = fold_in(cfg.seed, n as u64);
+    let cost = cfg.cost_model();
+    let schemes = SchemeConfig::paper_trio(cfg);
+    let statics = Scenario::builder(&format!("scaling_static_n{n}"))
+        .engine(Engine::Statics)
+        .job(cfg.job)
+        .fleet(n, n)
+        .schemes(schemes.clone())
+        .speed_model(cfg.speed_model())
+        .cost(cost)
+        .trials(trials)
+        .seed(seed_n)
+        .seed_mode(SeedMode::PerTrial)
+        .build()
+        .expect("valid static scaling scenario");
+    let cec = crate::tas::Cec::new(cfg.k_cec, cfg.s_cec);
+    let tau = cost.worker_time(cec.subtask_ops(cfg.job.u, cfg.job.w, cfg.job.v, n), 1.0);
+    let horizon = 2.0 * cfg.s_cec as f64 * tau;
+    let trace = Scenario::builder(&format!("scaling_trace_n{n}"))
+        .engine(Engine::Trace)
+        .job(cfg.job)
+        .fleet(n, n)
+        .schemes(schemes)
+        .speed_model(cfg.speed_model())
+        .cost(cost)
+        .elasticity(ElasticitySpec::Churn {
+            n_min: (n / 2).max(cfg.s_cec),
+            n_initial: n,
+            rate: events_per_node * n as f64 / horizon,
+            horizon,
+            reassign: Reassign::Identity,
+        })
+        .trials(trials)
+        .seed(seed_n)
+        .seed_mode(SeedMode::PerTrial)
+        .build()
+        .expect("valid trace scaling scenario");
+    (statics, trace)
+}
+
+/// One row per N: paired static computation means and paired elastic-trace
+/// computation means, plus CEC's transition waste and the failure count.
 pub fn scaling_table(
     cfg: &ExperimentConfig,
     ns: &[usize],
     events_per_node: f64,
     trials: usize,
 ) -> Table {
-    let cost = cfg.cost_model();
-    let job = cfg.job;
-    let cec = Cec::new(cfg.k_cec, cfg.s_cec);
-    let mlcec = Mlcec::new(cfg.k_cec, cfg.s_cec);
     let mut t = Table::new(&[
         "N",
         "static_cec_s",
@@ -60,62 +106,17 @@ pub fn scaling_table(
         "failures",
     ]);
     for &n in ns {
-        assert!(n >= cfg.s_cec, "sweep N={n} below S={}", cfg.s_cec);
-        let bicec = Bicec::new(cfg.k_bicec, cfg.s_bicec, n);
-        let seed_n = fold_in(cfg.seed, n as u64);
-
-        // -- static: paired straggler draws from counter streams.
-        let speeds: Vec<WorkerSpeeds> = (0..trials)
-            .map(|i| {
-                let mut rng = trial_rng(seed_n, i as u64);
-                WorkerSpeeds::sample(&cfg.speed_model(), n, &mut rng)
-            })
-            .collect();
-        let comp_mean = |scheme: &dyn Scheme| -> f64 {
-            mean(
-                &simulate_many(scheme, n, job, &cost, &speeds)
-                    .iter()
-                    .map(|r| r.computation_time)
-                    .collect::<Vec<_>>(),
-            )
-        };
-        let (sc, sm, sb) = (comp_mean(&cec), comp_mean(&mlcec), comp_mean(&bicec));
-
-        // -- trace: fixed per-node churn; horizon tracks the faster run
-        // (~2 unstraggled CEC sweeps).
-        let tau = cost.worker_time(cec.subtask_ops(job.u, job.w, job.v, n), 1.0);
-        let horizon = 2.0 * cfg.s_cec as f64 * tau;
-        let mc = TraceMonteCarlo {
-            n_max: n,
-            n_min: (n / 2).max(cfg.s_cec),
-            n_initial: n,
-            rate: events_per_node * n as f64 / horizon,
-            horizon,
-            speed_model: cfg.speed_model(),
-            reassign: Reassign::Identity,
-            seed: seed_n,
-        };
-        let mut failures = 0usize;
-        let mut waste = Vec::new();
-        let mut tmean = [0.0f64; 3];
-        for (si, scheme) in
-            [&cec as &dyn Scheme, &mlcec, &bicec].into_iter().enumerate()
-        {
-            let mut comps = Vec::new();
-            for r in mc.run(scheme, job, &cost, trials) {
-                match r {
-                    Ok(out) => {
-                        comps.push(out.computation_time);
-                        if si == 0 {
-                            waste.push(out.transition_waste);
-                        }
-                    }
-                    Err(_) => failures += 1,
-                }
-            }
-            tmean[si] = mean(&comps);
-        }
-
+        let (st_sc, tr_sc) = scaling_scenarios(cfg, n, events_per_node, trials);
+        let st = st_sc.run().expect("statics engine cannot fail");
+        let tr = tr_sc.run().expect("trace engine reports failures per trial");
+        let (sc, sm, sb) = (
+            st.per_scheme[0].mean(Metric::Computation),
+            st.per_scheme[1].mean(Metric::Computation),
+            st.per_scheme[2].mean(Metric::Computation),
+        );
+        let tmean: Vec<f64> =
+            tr.per_scheme.iter().map(|s| s.mean(Metric::Computation)).collect();
+        let failures: usize = tr.per_scheme.iter().map(|s| s.failures()).sum();
         t.row(vec![
             n.to_string(),
             format!("{sc:.4}"),
@@ -124,7 +125,7 @@ pub fn scaling_table(
             format!("{:.4}", tmean[0]),
             format!("{:+.1}", 100.0 * (tmean[1] - tmean[0]) / tmean[0]),
             format!("{:+.1}", 100.0 * (tmean[2] - tmean[0]) / tmean[0]),
-            format!("{:.4}", mean(&waste)),
+            format!("{:.4}", tr.per_scheme[0].mean(Metric::TransitionWaste)),
             failures.to_string(),
         ]);
     }
@@ -180,5 +181,15 @@ mod tests {
         assert!(failures <= 3.0, "too many failed trials:\n{r}");
         let trace_cec = grab(&r, 0, 4);
         assert!(trace_cec.is_finite() && trace_cec > 0.0, "{r}");
+    }
+
+    #[test]
+    fn scaling_scenarios_round_trip_through_toml() {
+        let cfg = quick_cfg();
+        let (st, tr) = scaling_scenarios(&cfg, 40, 1.0, 5);
+        for sc in [st, tr] {
+            let back = Scenario::from_toml(&sc.to_toml()).unwrap();
+            assert_eq!(back.to_doc(), sc.to_doc(), "{}", sc.name);
+        }
     }
 }

@@ -29,6 +29,7 @@ pub mod prop;
 pub mod metrics;
 pub mod rng;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod tas;
 pub mod threads;

@@ -1,0 +1,562 @@
+//! Engine dispatch: one `run(&Scenario) -> Outcome` over the three
+//! execution substrates.
+//!
+//! | engine        | substrate                              | elasticity      |
+//! |---------------|----------------------------------------|-----------------|
+//! | `Statics`     | `sim::simulate_many` (order-statistics DES) | `fixed`    |
+//! | `Trace`       | `TraceMonteCarlo` / `TraceSimulator` (elastic DES) | `churn`, `trace` |
+//! | `Coordinator` | `coordinator::run_job` (real threads + numerics) | `fixed` (+ preempt knob) |
+//!
+//! Determinism contract: an outcome is a pure function of the scenario
+//! descriptor (and, for `Coordinator`, wall-clock noise in the timing
+//! fields only). Simulation engines inherit the bit-identical parallel
+//! guarantees of the trial pools.
+
+use crate::coordinator::{run_job, JobConfig};
+use crate::metrics::Summary;
+use crate::rng::fold_in;
+use crate::sim::{simulate_many_with_threads, TraceMonteCarlo, TraceSimulator};
+
+use super::spec::{ElasticitySpec, Metric, SpeedSpec};
+use super::Scenario;
+
+/// Which substrate executes the scenario.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Fixed-N order-statistics DES (the paper's Sec. 3 experiment).
+    Statics,
+    /// Elastic-trace DES: join/leave events, exact work retention,
+    /// transition-waste accounting.
+    Trace,
+    /// Real execution on the threaded worker pool (encode → dispatch →
+    /// recover → decode → verify).
+    Coordinator,
+}
+
+impl Engine {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Engine::Statics => "statics",
+            Engine::Trace => "trace",
+            Engine::Coordinator => "coordinator",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "statics" => Ok(Engine::Statics),
+            "trace" => Ok(Engine::Trace),
+            "coordinator" => Ok(Engine::Coordinator),
+            other => Err(format!(
+                "unknown engine {other:?} (expected statics|trace|coordinator)"
+            )),
+        }
+    }
+
+    /// Execute `scenario` on this engine. Validates first, so hand-built
+    /// descriptors get the same exhaustive checks as parsed ones.
+    pub fn run(&self, scenario: &Scenario) -> Result<Outcome, String> {
+        scenario.validate()?;
+        if *self != scenario.engine {
+            return Err(format!(
+                "scenario {:?} is declared for engine {:?}, not {:?}",
+                scenario.name, scenario.engine, self
+            ));
+        }
+        let per_scheme = match self {
+            Engine::Statics => run_statics(scenario),
+            Engine::Trace => run_trace(scenario),
+            Engine::Coordinator => run_coordinator(scenario)?,
+        };
+        Ok(Outcome { scenario: scenario.name.clone(), engine: *self, per_scheme })
+    }
+}
+
+/// One trial's numbers, unified across engines. Fields an engine does not
+/// measure are zero (`encode_time`/`max_rel_err` outside `Coordinator`;
+/// `transition_waste` outside `Trace`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrialOutcome {
+    pub computation_time: f64,
+    pub decode_time: f64,
+    pub encode_time: f64,
+    pub transition_waste: f64,
+    /// Fleet disruptions absorbed: re-allocation epochs (trace engine) or
+    /// workers preempted mid-run (coordinator); 0 for statics.
+    pub reallocations: usize,
+    /// Subtask completions delivered (trace/coordinator) or completable by
+    /// the finish time (statics).
+    pub completions: u64,
+    pub max_rel_err: f64,
+}
+
+impl TrialOutcome {
+    pub fn finishing_time(&self) -> f64 {
+        self.computation_time + self.decode_time
+    }
+}
+
+/// All trials of one scheme. Failed trials (unrecoverable traces, worker
+/// errors) carry their reason instead of being dropped, so failure counts
+/// are part of the outcome.
+#[derive(Clone, Debug)]
+pub struct SchemeOutcome {
+    pub scheme: String,
+    pub trials: Vec<Result<TrialOutcome, String>>,
+}
+
+impl SchemeOutcome {
+    pub fn failures(&self) -> usize {
+        self.trials.iter().filter(|t| t.is_err()).count()
+    }
+
+    /// Successful trials in trial order.
+    pub fn ok_trials(&self) -> impl Iterator<Item = &TrialOutcome> {
+        self.trials.iter().filter_map(|t| t.as_ref().ok())
+    }
+
+    /// `metric` over the successful trials, in trial order.
+    pub fn metric_values(&self, metric: Metric) -> Vec<f64> {
+        self.ok_trials().map(|t| metric.of(t)).collect()
+    }
+
+    pub fn summary(&self, metric: Metric) -> Summary {
+        Summary::of(&self.metric_values(metric))
+    }
+
+    pub fn mean(&self, metric: Metric) -> f64 {
+        crate::metrics::mean(&self.metric_values(metric))
+    }
+}
+
+/// Unified result of [`Engine::run`].
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    pub scenario: String,
+    pub engine: Engine,
+    pub per_scheme: Vec<SchemeOutcome>,
+}
+
+impl Outcome {
+    pub fn scheme(&self, name: &str) -> Option<&SchemeOutcome> {
+        self.per_scheme.iter().find(|s| s.scheme == name)
+    }
+
+    /// Worst recovered-product relative error across all schemes' trials
+    /// (0.0 for the simulation engines, which are exact by construction).
+    pub fn max_rel_err(&self) -> f64 {
+        self.per_scheme
+            .iter()
+            .flat_map(|s| s.ok_trials().map(|t| t.max_rel_err))
+            .fold(0.0, f64::max)
+    }
+
+    /// One row per scheme: trial counts and the headline summaries (the
+    /// `hcec run <scenario.toml>` output).
+    pub fn table(&self) -> crate::metrics::Table {
+        let mut t = crate::metrics::Table::new(&[
+            "scheme",
+            "ok",
+            "fail",
+            "comp_mean_s",
+            "decode_mean_s",
+            "finish_mean_s",
+            "finish_p95_s",
+            "waste_mean",
+            "encode_mean_s",
+            "rel_err_max",
+        ]);
+        for s in &self.per_scheme {
+            let fin = s.summary(Metric::Finishing);
+            let rel = s.ok_trials().map(|t| t.max_rel_err).fold(0.0, f64::max);
+            t.row(vec![
+                s.scheme.clone(),
+                (s.trials.len() - s.failures()).to_string(),
+                s.failures().to_string(),
+                format!("{:.4}", s.mean(Metric::Computation)),
+                format!("{:.4}", s.mean(Metric::Decode)),
+                format!("{:.4}", fin.mean),
+                format!("{:.4}", fin.p95),
+                format!("{:.4}", s.mean(Metric::TransitionWaste)),
+                format!("{:.4}", s.mean(Metric::Encode)),
+                format!("{:.2e}", rel),
+            ]);
+        }
+        t
+    }
+}
+
+/// Thread request for the trial pools: the scenario override, or the
+/// shared units heuristic.
+fn pool_threads(sc: &Scenario) -> usize {
+    match sc.threads {
+        Some(t) => crate::threads::plan(t),
+        None => crate::threads::plan_units(sc.trials),
+    }
+}
+
+fn run_statics(sc: &Scenario) -> Vec<SchemeOutcome> {
+    let speeds = sc.speeds_per_trial();
+    let threads = pool_threads(sc);
+    sc.schemes
+        .iter()
+        .map(|spec| {
+            let scheme = spec.build(sc.n_max);
+            let trials = simulate_many_with_threads(
+                scheme.as_ref(),
+                sc.n_workers,
+                sc.job,
+                &sc.cost,
+                &speeds,
+                threads,
+            )
+            .into_iter()
+            .map(|r| {
+                Ok(TrialOutcome {
+                    computation_time: r.computation_time,
+                    decode_time: r.decode_time,
+                    encode_time: 0.0,
+                    transition_waste: 0.0,
+                    reallocations: 0,
+                    completions: r.completions_total,
+                    max_rel_err: 0.0,
+                })
+            })
+            .collect();
+            SchemeOutcome { scheme: spec.name().to_string(), trials }
+        })
+        .collect()
+}
+
+fn run_trace(sc: &Scenario) -> Vec<SchemeOutcome> {
+    match &sc.elasticity {
+        ElasticitySpec::Churn { n_min, n_initial, rate, horizon, reassign } => {
+            // Validation guarantees a sampled model here.
+            let model = *sc.speed.model().expect("churn requires a speed model");
+            let mc = TraceMonteCarlo {
+                n_max: sc.n_max,
+                n_min: *n_min,
+                n_initial: *n_initial,
+                rate: *rate,
+                horizon: *horizon,
+                speed_model: model,
+                reassign: *reassign,
+                seed: sc.seed,
+            };
+            let threads = pool_threads(sc);
+            sc.schemes
+                .iter()
+                .map(|spec| {
+                    let scheme = spec.build(sc.n_max);
+                    let trials = mc
+                        .run_with_threads(scheme.as_ref(), sc.job, &sc.cost, sc.trials, threads)
+                        .into_iter()
+                        .map(|r| r.map(trace_trial).map_err(|e| e.to_string()))
+                        .collect();
+                    SchemeOutcome { scheme: spec.name().to_string(), trials }
+                })
+                .collect()
+        }
+        ElasticitySpec::Trace { trace, reassign, .. } => {
+            // Replay: same trace every trial, per-trial speed draws. Trials
+            // fan out over the shared pool like the other engines (one
+            // recycled simulator per worker; slot i = trial i for any
+            // thread count, since each trial is a pure function of its
+            // speeds).
+            let speeds = sc.speeds_per_trial();
+            let threads = pool_threads(sc);
+            sc.schemes
+                .iter()
+                .map(|spec| {
+                    let scheme = spec.build(sc.n_max);
+                    let mut out: Vec<Option<Result<TrialOutcome, String>>> =
+                        (0..speeds.len()).map(|_| None).collect();
+                    crate::threads::scatter_chunks(&mut out, threads, |start, slots| {
+                        let mut sim = TraceSimulator::new(scheme.as_ref());
+                        for (off, slot) in slots.iter_mut().enumerate() {
+                            *slot = Some(
+                                sim.run(
+                                    trace,
+                                    sc.job,
+                                    &sc.cost,
+                                    &speeds[start + off],
+                                    *reassign,
+                                )
+                                .map(trace_trial)
+                                .map_err(|e| e.to_string()),
+                            );
+                        }
+                    });
+                    let trials = out
+                        .into_iter()
+                        .map(|r| r.expect("every trial filled by its worker"))
+                        .collect();
+                    SchemeOutcome { scheme: spec.name().to_string(), trials }
+                })
+                .collect()
+        }
+        ElasticitySpec::Fixed => unreachable!("validated: trace engine is never fixed"),
+    }
+}
+
+fn trace_trial(r: crate::sim::TraceOutcome) -> TrialOutcome {
+    TrialOutcome {
+        computation_time: r.computation_time,
+        decode_time: r.decode_time,
+        encode_time: 0.0,
+        transition_waste: r.transition_waste,
+        reallocations: r.reallocations,
+        completions: r.completions,
+        max_rel_err: 0.0,
+    }
+}
+
+fn run_coordinator(sc: &Scenario) -> Result<Vec<SchemeOutcome>, String> {
+    let speed_model = match &sc.speed {
+        SpeedSpec::Model(m) => Some(*m),
+        SpeedSpec::Uniform => None,
+        SpeedSpec::Explicit(_) => unreachable!("validated: coordinator never explicit"),
+    };
+    let mut per_scheme = Vec::with_capacity(sc.schemes.len());
+    for spec in &sc.schemes {
+        let mut trials = Vec::with_capacity(sc.trials);
+        for trial in 0..sc.trials {
+            // Trial 0 runs the scenario seed verbatim, so a 1-trial
+            // coordinator scenario reproduces a bare `run_job` at that
+            // seed; extra trials get counter-derived streams.
+            let seed =
+                if trial == 0 { sc.seed } else { fold_in(sc.seed, trial as u64) };
+            let cfg = JobConfig {
+                job: sc.job,
+                scheme: spec.clone(),
+                n_workers: sc.n_workers,
+                n_max: sc.n_max,
+                backend: sc.coordinator.backend,
+                speed_model,
+                preempt_after_first: sc.coordinator.preempt_after_first,
+                seed,
+            };
+            // A coordinator failure (missing PJRT artifacts, bad geometry)
+            // is a scenario error, not a per-trial statistic: fail fast.
+            let report = run_job(&cfg)
+                .map_err(|e| format!("{} trial {trial}: {e}", spec.name()))?;
+            trials.push(Ok(TrialOutcome {
+                computation_time: report.computation_wall,
+                decode_time: report.decode_wall,
+                encode_time: report.encode_wall,
+                transition_waste: 0.0,
+                reallocations: report.workers_preempted,
+                completions: report.completions_received as u64,
+                max_rel_err: report.max_rel_err as f64,
+            }));
+        }
+        per_scheme.push(SchemeOutcome { scheme: spec.name().to_string(), trials });
+    }
+    Ok(per_scheme)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{SchemeConfig, SeedMode, SpeedSpec};
+    use crate::sim::{simulate_static, Reassign, WorkerSpeeds};
+    use crate::workload::JobSpec;
+
+    fn small_statics() -> Scenario {
+        Scenario::builder("small")
+            .job(JobSpec::new(240, 240, 240))
+            .fleet(8, 8)
+            .schemes(vec![
+                SchemeConfig::Cec { k: 2, s: 4 },
+                SchemeConfig::Bicec { k: 600, s_per_worker: 300 },
+            ])
+            .trials(5)
+            .seed(11)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn statics_outcome_matches_direct_simulation() {
+        let sc = small_statics();
+        let out = sc.run().unwrap();
+        assert_eq!(out.per_scheme.len(), 2);
+        let speeds = sc.speeds_per_trial();
+        for (spec, got) in sc.schemes.iter().zip(&out.per_scheme) {
+            assert_eq!(got.scheme, spec.name());
+            assert_eq!(got.failures(), 0);
+            let scheme = spec.build(sc.n_max);
+            for (i, trial) in got.ok_trials().enumerate() {
+                let want =
+                    simulate_static(scheme.as_ref(), 8, sc.job, &sc.cost, &speeds[i]);
+                assert_eq!(trial.computation_time, want.computation_time, "trial {i}");
+                assert_eq!(trial.decode_time, want.decode_time, "trial {i}");
+                assert_eq!(trial.completions, want.completions_total, "trial {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn statics_thread_override_is_bit_identical() {
+        let mut sc = small_statics();
+        let base = sc.run().unwrap();
+        sc.threads = Some(3);
+        let threaded = sc.run().unwrap();
+        for (a, b) in base.per_scheme.iter().zip(&threaded.per_scheme) {
+            assert_eq!(a.metric_values(Metric::Finishing), b.metric_values(Metric::Finishing));
+        }
+    }
+
+    #[test]
+    fn churn_outcome_matches_trace_monte_carlo() {
+        let cost = crate::sim::CostModel::paper_default();
+        let job = JobSpec::new(240, 240, 240);
+        let horizon = 400.0 * cost.worker_time(job.ops() / 2400, 1.0);
+        let sc = Scenario::builder("churn")
+            .engine(Engine::Trace)
+            .job(job)
+            .fleet(8, 8)
+            .schemes(vec![SchemeConfig::Cec { k: 2, s: 4 }])
+            .elasticity(crate::scenario::ElasticitySpec::Churn {
+                n_min: 4,
+                n_initial: 8,
+                rate: 3.0 / horizon,
+                horizon,
+                reassign: Reassign::Identity,
+            })
+            .trials(7)
+            .seed(2021)
+            .seed_mode(SeedMode::PerTrial)
+            .build()
+            .unwrap();
+        let out = sc.run().unwrap();
+        let mc = TraceMonteCarlo {
+            n_max: 8,
+            n_min: 4,
+            n_initial: 8,
+            rate: 3.0 / horizon,
+            horizon,
+            speed_model: crate::sim::SpeedModel::paper_default(),
+            reassign: Reassign::Identity,
+            seed: 2021,
+        };
+        let scheme = crate::tas::Cec::new(2, 4);
+        let want = mc.run(&scheme, job, &cost, 7);
+        let got = &out.per_scheme[0];
+        assert_eq!(got.trials.len(), want.len());
+        for (i, (g, w)) in got.trials.iter().zip(&want).enumerate() {
+            match (g, w) {
+                (Ok(g), Ok(w)) => {
+                    assert_eq!(g.computation_time, w.computation_time, "trial {i}");
+                    assert_eq!(g.transition_waste, w.transition_waste, "trial {i}");
+                    assert_eq!(g.reallocations, w.reallocations, "trial {i}");
+                }
+                (Err(_), Err(_)) => {}
+                other => panic!("trial {i} diverged: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn trace_replay_matches_simulate_trace() {
+        let job = JobSpec::new(240, 240, 240);
+        let cost = crate::sim::CostModel::paper_default();
+        let scheme = crate::tas::Cec::new(2, 4);
+        let ops = crate::tas::Scheme::subtask_ops(&scheme, 240, 240, 240, 8);
+        let tau = cost.worker_time(ops, 1.0);
+        let trace = crate::sim::ElasticTrace::fig1(1.5 * tau, 2.7 * tau);
+        let sc = Scenario::builder("replay")
+            .engine(Engine::Trace)
+            .job(job)
+            .fleet(8, 8)
+            .schemes(vec![SchemeConfig::Cec { k: 2, s: 4 }])
+            .elasticity(crate::scenario::ElasticitySpec::Trace {
+                path: "inline".into(),
+                trace: trace.clone(),
+                reassign: Reassign::Identity,
+            })
+            .trials(3)
+            .seed(5)
+            .seed_mode(SeedMode::Sequential)
+            .build()
+            .unwrap();
+        let out = sc.run().unwrap();
+        let speeds = sc.speeds_per_trial();
+        for (i, trial) in out.per_scheme[0].ok_trials().enumerate() {
+            let want =
+                crate::sim::simulate_trace(&scheme, &trace, job, &cost, &speeds[i])
+                    .unwrap();
+            assert_eq!(trial.computation_time, want.computation_time, "trial {i}");
+            assert_eq!(trial.transition_waste, want.transition_waste, "trial {i}");
+        }
+    }
+
+    #[test]
+    fn coordinator_single_trial_matches_run_job_seed() {
+        let sc = Scenario::builder("coord")
+            .engine(Engine::Coordinator)
+            .job(JobSpec::new(64, 32, 16))
+            .fleet(8, 8)
+            .schemes(vec![SchemeConfig::Cec { k: 4, s: 6 }])
+            .speed(SpeedSpec::Uniform)
+            .trials(1)
+            .seed(3)
+            .build()
+            .unwrap();
+        let out = sc.run().unwrap();
+        let trial = out.per_scheme[0].ok_trials().next().unwrap();
+        // Real execution: wall-clock fields are noisy, but the recovery
+        // arithmetic is deterministic.
+        assert!(trial.max_rel_err < 1e-3, "err {}", trial.max_rel_err);
+        assert!(trial.finishing_time() > 0.0);
+        assert_eq!(out.per_scheme[0].failures(), 0);
+    }
+
+    #[test]
+    fn outcome_table_has_one_row_per_scheme() {
+        let out = small_statics().run().unwrap();
+        let t = out.table();
+        assert_eq!(t.n_rows(), 2);
+        assert!(t.render().contains("bicec"));
+    }
+
+    #[test]
+    fn engine_mismatch_is_rejected() {
+        let sc = small_statics();
+        let err = Engine::Trace.run(&sc).unwrap_err();
+        assert!(err.contains("declared for engine"), "{err}");
+    }
+
+    #[test]
+    fn engine_parse_round_trip() {
+        for e in [Engine::Statics, Engine::Trace, Engine::Coordinator] {
+            assert_eq!(Engine::parse(e.as_str()).unwrap(), e);
+        }
+        assert!(Engine::parse("mystery").is_err());
+    }
+
+    #[test]
+    fn explicit_speeds_run_deterministically() {
+        let mut mult = vec![1.0; 8];
+        mult[7] = 4.0;
+        let sc = Scenario::builder("det")
+            .job(JobSpec::new(240, 240, 240))
+            .fleet(8, 8)
+            .schemes(vec![SchemeConfig::Cec { k: 2, s: 4 }])
+            .speed(SpeedSpec::Explicit(mult.clone()))
+            .trials(2)
+            .build()
+            .unwrap();
+        let out = sc.run().unwrap();
+        let vals = out.per_scheme[0].metric_values(Metric::Computation);
+        assert_eq!(vals[0], vals[1], "explicit speeds must repeat exactly");
+        let want = simulate_static(
+            &crate::tas::Cec::new(2, 4),
+            8,
+            sc.job,
+            &sc.cost,
+            &WorkerSpeeds::from_vec(mult),
+        );
+        assert_eq!(vals[0], want.computation_time);
+    }
+}

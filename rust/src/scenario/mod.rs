@@ -1,0 +1,716 @@
+//! The unified experiment surface: one typed [`Scenario`] descriptor +
+//! one [`Engine::run`] entry point over every way this crate can execute a
+//! coded-computing experiment.
+//!
+//! Before this module, each driver (`figures::fig2`, `figures::sweep`,
+//! `figures::ablations`, `cli::commands`, `benches/perf_stack`) wired the
+//! CEC/MLCEC/BICEC comparison by hand from four disjoint config types.
+//! Now a scenario is a value:
+//!
+//! * **descriptor** — job geometry, fleet (`n_max`, `n_workers`), scheme
+//!   list ([`SchemeConfig`]), speed source ([`SpeedSpec`]), elasticity
+//!   source ([`ElasticitySpec`]: fixed-N | recorded trace | Poisson
+//!   churn), trials, seed (+ [`SeedMode`] derivation), thread budget;
+//! * **engine** — [`Engine::Statics`] (order-statistics DES via
+//!   `sim::simulate_many`), [`Engine::Trace`] (elastic-trace DES via
+//!   `TraceMonteCarlo` / `TraceSimulator`), [`Engine::Coordinator`] (real
+//!   threaded execution via `coordinator::run_job`);
+//! * **outcome** — one [`Outcome`] shape for all three: per-scheme,
+//!   per-trial finishing/computation/decode/encode times, transition
+//!   waste, and summary percentiles.
+//!
+//! Every existing driver routes through here, so adding a scenario axis is
+//! one enum variant + its TOML spelling — not a five-driver edit. TOML
+//! round-trip (`Scenario::from_doc` / `to_doc`, on `config::toml`) makes
+//! scenarios checkable artifacts: see `examples/scenario_*.toml` and
+//! `hcec run <scenario.toml>`.
+
+mod engine;
+mod spec;
+mod toml_io;
+
+pub use engine::{Engine, Outcome, SchemeOutcome, TrialOutcome};
+pub use spec::{
+    CoordinatorSpec, ElasticitySpec, Metric, SchemeConfig, SeedMode, SpeedSpec,
+};
+
+use crate::config::ExperimentConfig;
+use crate::rng::{default_rng, trial_rng};
+use crate::sim::{CostModel, WorkerSpeeds};
+use crate::tas::DLevelPolicy;
+use crate::workload::JobSpec;
+
+/// A fully-specified experiment. Construct via [`Scenario::builder`] (which
+/// validates exhaustively) or parse from TOML ([`Scenario::from_toml`]).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub engine: Engine,
+    pub job: JobSpec,
+    /// Slots the code is sized for (BICEC code length = s_per_worker ·
+    /// n_max; speeds are drawn for all n_max slots).
+    pub n_max: usize,
+    /// Active workers at start (statics/coordinator: for the whole run;
+    /// trace engines take the initial count from the elasticity source).
+    pub n_workers: usize,
+    /// Schemes compared on the *same* per-trial draws (the paper's paired
+    /// comparison).
+    pub schemes: Vec<SchemeConfig>,
+    pub speed: SpeedSpec,
+    pub cost: CostModel,
+    pub elasticity: ElasticitySpec,
+    pub trials: usize,
+    pub seed: u64,
+    pub seed_mode: SeedMode,
+    /// Explicit thread budget for the trial pool (None = the shared
+    /// `crate::threads` heuristic; still clamped by `HCEC_THREADS`).
+    pub threads: Option<usize>,
+    pub coordinator: CoordinatorSpec,
+}
+
+impl Scenario {
+    pub fn builder(name: &str) -> ScenarioBuilder {
+        ScenarioBuilder::new(name)
+    }
+
+    /// Run under the scenario's own engine.
+    pub fn run(&self) -> Result<Outcome, String> {
+        self.engine.run(self)
+    }
+
+    /// The per-trial speed draws the engines will consume, in trial order.
+    /// Public so closed-form extensions (e.g. the Ext-T5 MLCC ladder) can
+    /// pair with a scenario's trials without re-deriving the stream.
+    pub fn speeds_per_trial(&self) -> Vec<WorkerSpeeds> {
+        match &self.speed {
+            SpeedSpec::Uniform => {
+                vec![WorkerSpeeds::uniform(self.n_max); self.trials]
+            }
+            SpeedSpec::Explicit(mult) => {
+                vec![WorkerSpeeds::from_vec(mult.clone()); self.trials]
+            }
+            SpeedSpec::Model(model) => match self.seed_mode {
+                SeedMode::Sequential => {
+                    let mut rng = default_rng(self.seed);
+                    (0..self.trials)
+                        .map(|_| WorkerSpeeds::sample(model, self.n_max, &mut rng))
+                        .collect()
+                }
+                SeedMode::PerTrial => (0..self.trials)
+                    .map(|i| {
+                        let mut rng = trial_rng(self.seed, i as u64);
+                        WorkerSpeeds::sample(model, self.n_max, &mut rng)
+                    })
+                    .collect(),
+            },
+        }
+    }
+
+    /// Exhaustive validation — every rejected descriptor names its axis.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.name.is_empty() {
+            return Err("scenario.name must be non-empty".into());
+        }
+        // Strings must survive the TOML round trip (the subset parser has
+        // no escapes), so quotes and control characters are rejected here
+        // rather than panicking or corrupting output in `to_toml`.
+        if self.name.contains('"') || self.name.chars().any(|c| c.is_control()) {
+            return Err(format!(
+                "scenario.name {:?} may not contain quotes or control characters",
+                self.name
+            ));
+        }
+        if let ElasticitySpec::Trace { path, .. } = &self.elasticity {
+            if path.contains('"') || path.chars().any(|c| c.is_control()) {
+                return Err(format!(
+                    "elasticity.file {path:?} may not contain quotes or control \
+                     characters"
+                ));
+            }
+        }
+        if self.trials == 0 {
+            return Err("scenario.trials must be >= 1".into());
+        }
+        if self.schemes.is_empty() {
+            return Err("scenario.schemes must name at least one scheme".into());
+        }
+        if self.n_workers == 0 {
+            return Err("fleet.n_workers must be >= 1".into());
+        }
+        if self.n_workers > self.n_max {
+            return Err(format!(
+                "fleet.n_workers = {} exceeds fleet.n_max = {}",
+                self.n_workers, self.n_max
+            ));
+        }
+        if self.threads == Some(0) {
+            return Err("scenario.threads must be >= 1 when set".into());
+        }
+        if self.job.u == 0 || self.job.w == 0 || self.job.v == 0 {
+            return Err(format!("job dimensions must be positive: {:?}", self.job));
+        }
+        let finite_pos = |x: f64| x > 0.0 && x.is_finite();
+        if !(finite_pos(self.cost.worker_ops_per_sec)
+            && finite_pos(self.cost.decode_ops_per_sec))
+        {
+            return Err("cost rates must be finite and positive".into());
+        }
+        for (i, scheme) in self.schemes.iter().enumerate() {
+            self.validate_scheme(i, scheme)?;
+        }
+        self.validate_speed()?;
+        self.validate_elasticity()?;
+        match self.engine {
+            Engine::Statics | Engine::Coordinator => {
+                if !matches!(self.elasticity, ElasticitySpec::Fixed) {
+                    return Err(format!(
+                        "engine {:?} requires elasticity.kind = \"fixed\" (got {:?})",
+                        self.engine,
+                        self.elasticity.kind()
+                    ));
+                }
+            }
+            Engine::Trace => {
+                if matches!(self.elasticity, ElasticitySpec::Fixed) {
+                    return Err(
+                        "engine \"trace\" needs elasticity.kind = \"churn\" or \"trace\" \
+                         (use engine \"statics\" for a fixed fleet)"
+                            .into(),
+                    );
+                }
+            }
+        }
+        // seed_mode must describe the derivation the engine actually runs:
+        // churn trials are always counter-derived (`trial_rng(seed, i)` in
+        // TraceMonteCarlo), and multi-trial coordinator runs fold the trial
+        // index into the seed — a "sequential" declaration there would
+        // misstate the outcome's provenance.
+        if matches!(self.elasticity, ElasticitySpec::Churn { .. })
+            && self.seed_mode != SeedMode::PerTrial
+        {
+            return Err(
+                "elasticity.kind = \"churn\" always derives counter-based per-trial \
+                 streams; set seed_mode = \"per_trial\""
+                    .into(),
+            );
+        }
+        if self.engine == Engine::Coordinator {
+            if matches!(self.speed, SpeedSpec::Explicit(_)) {
+                return Err(
+                    "the coordinator engine samples real workers; speed.kind = \
+                     \"explicit\" is not supported there"
+                        .into(),
+                );
+            }
+            if self.coordinator.preempt_after_first >= self.n_workers {
+                return Err(format!(
+                    "coordinator.preempt_after_first = {} would preempt every one of \
+                     the {} workers",
+                    self.coordinator.preempt_after_first, self.n_workers
+                ));
+            }
+            if self.trials > 1 && self.seed_mode != SeedMode::PerTrial {
+                return Err(
+                    "multi-trial coordinator runs derive trial i's seed as \
+                     fold_in(seed, i); set seed_mode = \"per_trial\" (trial 0 still \
+                     runs the scenario seed verbatim)"
+                        .into(),
+                );
+            }
+            if self.threads.is_some() {
+                return Err(
+                    "scenario.threads budgets the simulation trial pools; the \
+                     coordinator engine runs trials serially on a real worker pool \
+                     sized by fleet.n_workers — drop the threads key"
+                        .into(),
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn validate_scheme(&self, i: usize, scheme: &SchemeConfig) -> Result<(), String> {
+        let initial_n = match &self.elasticity {
+            ElasticitySpec::Fixed => self.n_workers,
+            ElasticitySpec::Churn { n_initial, .. } => *n_initial,
+            ElasticitySpec::Trace { trace, .. } => trace.n_initial,
+        };
+        // The active worker count the scheme will be asked to allocate for:
+        // fixed fleets stay at initial_n; churn ranges over [n_min, n_max].
+        let (min_n, max_n) = match &self.elasticity {
+            ElasticitySpec::Fixed => (initial_n, initial_n),
+            ElasticitySpec::Churn { n_min, .. } => (*n_min, self.n_max),
+            ElasticitySpec::Trace { .. } => (1, self.n_max),
+        };
+        match scheme {
+            SchemeConfig::Cec { k, s } | SchemeConfig::Mlcec { k, s, .. } => {
+                if *k == 0 || s < k {
+                    return Err(format!(
+                        "scheme[{i}] ({}) needs S >= K >= 1 (K={k}, S={s})",
+                        scheme.name()
+                    ));
+                }
+                if initial_n < *s {
+                    return Err(format!(
+                        "scheme[{i}] ({}) needs N >= S = {s}, but the run starts \
+                         with {initial_n} workers",
+                        scheme.name()
+                    ));
+                }
+                // d-level policies that only exist for specific geometries
+                // would panic deep in allocate(); name the axis up front.
+                if let SchemeConfig::Mlcec { policy, .. } = scheme {
+                    match policy {
+                        DLevelPolicy::PaperFig1 => {
+                            if (*k, *s) != (2, 4) || (min_n, max_n) != (8, 8) {
+                                return Err(format!(
+                                    "scheme[{i}] (mlcec) policy \"paper_fig1\" is the \
+                                     exact N=8, S=4, K=2 example; this scenario runs \
+                                     K={k}, S={s} over N in [{min_n}, {max_n}]"
+                                ));
+                            }
+                        }
+                        DLevelPolicy::Custom(d) => {
+                            if min_n != max_n {
+                                return Err(format!(
+                                    "scheme[{i}] (mlcec) custom d-levels are defined \
+                                     for one fleet size, but N varies in \
+                                     [{min_n}, {max_n}]"
+                                ));
+                            }
+                            let n = max_n;
+                            let sum: usize = d.iter().sum();
+                            // Short-circuit: the indexing is only reached
+                            // when d.len() == n >= S >= 1.
+                            if d.len() != n
+                                || sum != s * n
+                                || d.windows(2).any(|w| w[0] > w[1])
+                                || d[0] < *k
+                                || d[n - 1] > n
+                            {
+                                return Err(format!(
+                                    "scheme[{i}] (mlcec) custom levels invalid: need \
+                                     {n} nondecreasing values in [{k}, {n}] summing \
+                                     to {} (got {} values summing to {sum})",
+                                    s * n,
+                                    d.len()
+                                ));
+                            }
+                        }
+                        DLevelPolicy::LinearRamp | DLevelPolicy::Equalized { .. } => {}
+                    }
+                }
+            }
+            SchemeConfig::Bicec { k, s_per_worker } => {
+                if *k == 0 || *s_per_worker == 0 {
+                    return Err(format!("scheme[{i}] (bicec) needs K, s_per_worker >= 1"));
+                }
+                if *k > s_per_worker * self.n_max {
+                    return Err(format!(
+                        "scheme[{i}] (bicec) code ({k}, {}) has n < k",
+                        s_per_worker * self.n_max
+                    ));
+                }
+            }
+            SchemeConfig::Hetero { k, s_avg, known_speeds } => {
+                if *k == 0 || s_avg < k {
+                    return Err(format!(
+                        "scheme[{i}] (hetero-cec) needs S >= K >= 1 (K={k}, S={s_avg})"
+                    ));
+                }
+                if initial_n < *s_avg {
+                    return Err(format!(
+                        "scheme[{i}] (hetero-cec) needs N >= S = {s_avg}, but the run \
+                         starts with {initial_n} workers"
+                    ));
+                }
+                // The fleet can grow to n_max mid-run (churn joins), and the
+                // allocator needs a known speed for every active slot.
+                if known_speeds.len() < self.n_max {
+                    return Err(format!(
+                        "scheme[{i}] (hetero-cec) has {} known speeds for n_max = {} \
+                         slots",
+                        known_speeds.len(),
+                        self.n_max
+                    ));
+                }
+                if known_speeds.iter().any(|&v| !(v > 0.0)) {
+                    return Err(format!(
+                        "scheme[{i}] (hetero-cec) known speeds must be positive"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn validate_speed(&self) -> Result<(), String> {
+        match &self.speed {
+            SpeedSpec::Uniform => Ok(()),
+            SpeedSpec::Model(crate::sim::SpeedModel::BernoulliSlowdown {
+                p,
+                slowdown,
+                jitter,
+            }) => {
+                // NaN fails every comparison below (so `< 1.0` style checks
+                // would wave it through); demand finite explicitly.
+                if !(0.0..=1.0).contains(p) || !p.is_finite() {
+                    return Err(format!("speed.p = {p} outside [0, 1]"));
+                }
+                if !(*slowdown >= 1.0 && slowdown.is_finite()) {
+                    return Err(format!("speed.slowdown = {slowdown} must be finite and >= 1"));
+                }
+                if !(*jitter >= 0.0 && jitter.is_finite()) {
+                    return Err(format!("speed.jitter = {jitter} must be finite and >= 0"));
+                }
+                Ok(())
+            }
+            SpeedSpec::Model(crate::sim::SpeedModel::ShiftedExponential { rate }) => {
+                if !(*rate > 0.0 && rate.is_finite()) {
+                    return Err(format!("speed.rate = {rate} must be finite and positive"));
+                }
+                Ok(())
+            }
+            SpeedSpec::Explicit(mult) => {
+                if mult.len() != self.n_max {
+                    return Err(format!(
+                        "speed.multipliers has {} entries for n_max = {}",
+                        mult.len(),
+                        self.n_max
+                    ));
+                }
+                if mult.iter().any(|&m| !(m > 0.0 && m.is_finite())) {
+                    return Err("speed.multipliers must all be finite and positive".into());
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn validate_elasticity(&self) -> Result<(), String> {
+        match &self.elasticity {
+            ElasticitySpec::Fixed => Ok(()),
+            ElasticitySpec::Churn { n_min, n_initial, rate, horizon, .. } => {
+                if !(*n_min >= 1 && n_min <= n_initial && *n_initial <= self.n_max) {
+                    return Err(format!(
+                        "elasticity.churn needs 1 <= n_min <= n_initial <= n_max \
+                         (n_min={n_min}, n_initial={n_initial}, n_max={})",
+                        self.n_max
+                    ));
+                }
+                if !(*rate >= 0.0 && rate.is_finite()) {
+                    return Err(format!("elasticity.rate = {rate} must be finite and >= 0"));
+                }
+                if !(*horizon > 0.0 && horizon.is_finite()) {
+                    return Err(format!(
+                        "elasticity.horizon = {horizon} must be finite and > 0"
+                    ));
+                }
+                if !matches!(self.speed, SpeedSpec::Model(_)) {
+                    return Err(
+                        "elasticity.kind = \"churn\" derives speeds and traces from \
+                         per-trial streams; it requires a sampled speed model"
+                            .into(),
+                    );
+                }
+                Ok(())
+            }
+            ElasticitySpec::Trace { trace, .. } => {
+                if trace.n_max != self.n_max {
+                    return Err(format!(
+                        "elasticity trace has n_max = {} but fleet.n_max = {}",
+                        trace.n_max, self.n_max
+                    ));
+                }
+                trace
+                    .validate()
+                    .map_err(|e| format!("elasticity trace invalid: {e}"))
+            }
+        }
+    }
+}
+
+/// Fluent constructor for [`Scenario`]; `build()` runs the exhaustive
+/// validation. Defaults are the paper's Sec. 3 setup at N = n_max = 40.
+#[derive(Clone, Debug)]
+pub struct ScenarioBuilder {
+    inner: Scenario,
+}
+
+impl ScenarioBuilder {
+    pub fn new(name: &str) -> Self {
+        let cm = CostModel::paper_default();
+        Self {
+            inner: Scenario {
+                name: name.to_string(),
+                engine: Engine::Statics,
+                job: JobSpec::paper_square(),
+                n_max: 40,
+                n_workers: 40,
+                schemes: Vec::new(),
+                speed: SpeedSpec::Model(crate::sim::SpeedModel::paper_default()),
+                cost: cm,
+                elasticity: ElasticitySpec::Fixed,
+                trials: 20,
+                seed: 2021,
+                seed_mode: SeedMode::Sequential,
+                threads: None,
+                coordinator: CoordinatorSpec::default(),
+            },
+        }
+    }
+
+    /// Seed the builder from an `ExperimentConfig`: job, fleet, the paper
+    /// scheme trio, straggler model, cost rates, trials and seed.
+    pub fn from_experiment(name: &str, cfg: &ExperimentConfig) -> Self {
+        Self::new(name)
+            .job(cfg.job)
+            .fleet(cfg.n_max, cfg.n_max)
+            .schemes(SchemeConfig::paper_trio(cfg))
+            .speed_model(cfg.speed_model())
+            .cost(cfg.cost_model())
+            .trials(cfg.trials)
+            .seed(cfg.seed)
+    }
+
+    pub fn engine(mut self, engine: Engine) -> Self {
+        self.inner.engine = engine;
+        self
+    }
+
+    pub fn job(mut self, job: JobSpec) -> Self {
+        self.inner.job = job;
+        self
+    }
+
+    pub fn fleet(mut self, n_max: usize, n_workers: usize) -> Self {
+        self.inner.n_max = n_max;
+        self.inner.n_workers = n_workers;
+        self
+    }
+
+    pub fn schemes(mut self, schemes: Vec<SchemeConfig>) -> Self {
+        self.inner.schemes = schemes;
+        self
+    }
+
+    pub fn scheme(mut self, scheme: SchemeConfig) -> Self {
+        self.inner.schemes.push(scheme);
+        self
+    }
+
+    pub fn speed(mut self, speed: SpeedSpec) -> Self {
+        self.inner.speed = speed;
+        self
+    }
+
+    pub fn speed_model(self, model: crate::sim::SpeedModel) -> Self {
+        self.speed(SpeedSpec::Model(model))
+    }
+
+    pub fn cost(mut self, cost: CostModel) -> Self {
+        self.inner.cost = cost;
+        self
+    }
+
+    pub fn elasticity(mut self, spec: ElasticitySpec) -> Self {
+        self.inner.elasticity = spec;
+        self
+    }
+
+    pub fn trials(mut self, trials: usize) -> Self {
+        self.inner.trials = trials;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.inner.seed = seed;
+        self
+    }
+
+    pub fn seed_mode(mut self, mode: SeedMode) -> Self {
+        self.inner.seed_mode = mode;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.inner.threads = Some(threads);
+        self
+    }
+
+    pub fn coordinator(mut self, spec: CoordinatorSpec) -> Self {
+        self.inner.coordinator = spec;
+        self
+    }
+
+    pub fn build(self) -> Result<Scenario, String> {
+        self.inner.validate()?;
+        Ok(self.inner)
+    }
+
+    /// The descriptor without validation — for `toml_io`, which validates
+    /// after its own unknown-key check so typos are reported first.
+    pub(crate) fn inner_unchecked(self) -> Scenario {
+        self.inner
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Reassign, SpeedModel};
+
+    fn base() -> ScenarioBuilder {
+        Scenario::builder("t").schemes(SchemeConfig::paper_trio(&Default::default()))
+    }
+
+    #[test]
+    fn builder_defaults_validate() {
+        let sc = base().build().unwrap();
+        assert_eq!(sc.n_max, 40);
+        assert_eq!(sc.trials, 20);
+        assert_eq!(sc.engine, Engine::Statics);
+    }
+
+    #[test]
+    fn rejects_workers_above_n_max() {
+        let err = base().fleet(40, 41).build().unwrap_err();
+        assert!(err.contains("exceeds fleet.n_max"), "{err}");
+    }
+
+    #[test]
+    fn rejects_empty_schemes_and_zero_trials() {
+        let err = Scenario::builder("t").build().unwrap_err();
+        assert!(err.contains("at least one scheme"), "{err}");
+        let err = base().trials(0).build().unwrap_err();
+        assert!(err.contains("trials"), "{err}");
+    }
+
+    #[test]
+    fn rejects_trace_with_slots_at_or_above_n_max() {
+        use crate::sim::{ElasticEvent, ElasticTrace, EventKind};
+        // Slot 40 in an n_max = 40 fleet is out of range.
+        let trace = ElasticTrace {
+            n_max: 40,
+            n_initial: 40,
+            events: vec![ElasticEvent { time: 1.0, kind: EventKind::Leave(40) }],
+        };
+        let err = base()
+            .engine(Engine::Trace)
+            .elasticity(ElasticitySpec::Trace {
+                path: "inline".into(),
+                trace,
+                reassign: Reassign::Identity,
+            })
+            .build()
+            .unwrap_err();
+        assert!(err.contains("trace invalid"), "{err}");
+    }
+
+    #[test]
+    fn rejects_trace_fleet_mismatch() {
+        use crate::sim::ElasticTrace;
+        let err = base()
+            .engine(Engine::Trace)
+            .elasticity(ElasticitySpec::Trace {
+                path: "inline".into(),
+                trace: ElasticTrace::static_n(8, 8),
+                reassign: Reassign::Identity,
+            })
+            .build()
+            .unwrap_err();
+        assert!(err.contains("fleet.n_max"), "{err}");
+    }
+
+    #[test]
+    fn rejects_churn_bounds_violations() {
+        let churn = |n_min, n_initial| ElasticitySpec::Churn {
+            n_min,
+            n_initial,
+            rate: 1.0,
+            horizon: 10.0,
+            reassign: Reassign::Identity,
+        };
+        let err =
+            base().engine(Engine::Trace).elasticity(churn(30, 20)).build().unwrap_err();
+        assert!(err.contains("n_min <= n_initial"), "{err}");
+        let err =
+            base().engine(Engine::Trace).elasticity(churn(20, 41)).build().unwrap_err();
+        assert!(err.contains("n_initial <= n_max"), "{err}");
+    }
+
+    #[test]
+    fn rejects_engine_elasticity_mismatch() {
+        let err = base().engine(Engine::Trace).build().unwrap_err();
+        assert!(err.contains("churn"), "{err}");
+        let err = base()
+            .elasticity(ElasticitySpec::Churn {
+                n_min: 20,
+                n_initial: 40,
+                rate: 1.0,
+                horizon: 10.0,
+                reassign: Reassign::Identity,
+            })
+            .build()
+            .unwrap_err();
+        assert!(err.contains("fixed"), "{err}");
+    }
+
+    #[test]
+    fn rejects_cec_needing_more_workers_than_initial_fleet() {
+        let err = base()
+            .schemes(vec![SchemeConfig::Cec { k: 10, s: 20 }])
+            .fleet(40, 12)
+            .build()
+            .unwrap_err();
+        assert!(err.contains("N >= S"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_explicit_speeds() {
+        let err = base().speed(SpeedSpec::Explicit(vec![1.0; 39])).build().unwrap_err();
+        assert!(err.contains("n_max"), "{err}");
+        let mut mult = vec![1.0; 40];
+        mult[3] = 0.0;
+        let err = base().speed(SpeedSpec::Explicit(mult)).build().unwrap_err();
+        assert!(err.contains("positive"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_straggler_parameters() {
+        let bad = SpeedModel::BernoulliSlowdown { p: 1.5, slowdown: 10.0, jitter: 0.05 };
+        let err = base().speed_model(bad).build().unwrap_err();
+        assert!(err.contains("outside [0, 1]"), "{err}");
+        let bad = SpeedModel::BernoulliSlowdown { p: 0.5, slowdown: 0.5, jitter: 0.05 };
+        let err = base().speed_model(bad).build().unwrap_err();
+        assert!(err.contains("slowdown"), "{err}");
+    }
+
+    #[test]
+    fn sequential_speeds_match_figure_harness_derivation() {
+        let sc = base().trials(4).seed(77).build().unwrap();
+        let speeds = sc.speeds_per_trial();
+        let mut rng = crate::rng::default_rng(77);
+        for (i, sp) in speeds.iter().enumerate() {
+            let want =
+                WorkerSpeeds::sample(&SpeedModel::paper_default(), 40, &mut rng);
+            for slot in 0..40 {
+                assert_eq!(sp.multiplier(slot), want.multiplier(slot), "trial {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn per_trial_speeds_match_scaling_sweep_derivation() {
+        let sc = base().trials(3).seed(9).seed_mode(SeedMode::PerTrial).build().unwrap();
+        let speeds = sc.speeds_per_trial();
+        for (i, sp) in speeds.iter().enumerate() {
+            let mut rng = crate::rng::trial_rng(9, i as u64);
+            let want =
+                WorkerSpeeds::sample(&SpeedModel::paper_default(), 40, &mut rng);
+            for slot in 0..40 {
+                assert_eq!(sp.multiplier(slot), want.multiplier(slot), "trial {i}");
+            }
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! The scenario axes: scheme, speed source, elasticity source, seed
+//! derivation, coordinator knobs, reported metric.
+//!
+//! Each axis is one enum. Adding a new scenario dimension (a new scheme, a
+//! new straggler model, a new churn process) is one variant here plus its
+//! `toml_io` spelling — every driver picks it up through `Engine::run`.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::ExecBackend;
+use crate::sim::{Reassign, SpeedModel};
+use crate::tas::{Bicec, Cec, DLevelPolicy, HeteroCec, Mlcec, Scheme};
+
+/// Scheme selection for a run (the parsed form of the CLI/config options).
+/// Moved here from `coordinator::master` (still re-exported there): the
+/// scheme axis belongs to the experiment surface, not one engine.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SchemeConfig {
+    Cec { k: usize, s: usize },
+    Mlcec { k: usize, s: usize, policy: DLevelPolicy },
+    Bicec { k: usize, s_per_worker: usize },
+    /// Heterogeneity-aware CEC with *known* per-slot speeds (Ext-T6);
+    /// `known_speeds[slot]` is the speed (1/multiplier) the allocator
+    /// assumes for that slot.
+    Hetero { k: usize, s_avg: usize, known_speeds: Vec<f64> },
+}
+
+impl SchemeConfig {
+    pub fn build(&self, n_max: usize) -> Box<dyn Scheme> {
+        match self {
+            SchemeConfig::Cec { k, s } => Box::new(Cec::new(*k, *s)),
+            SchemeConfig::Mlcec { k, s, policy } => {
+                Box::new(Mlcec::with_policy(*k, *s, policy.clone()))
+            }
+            SchemeConfig::Bicec { k, s_per_worker } => {
+                Box::new(Bicec::new(*k, *s_per_worker, n_max))
+            }
+            SchemeConfig::Hetero { k, s_avg, known_speeds } => {
+                Box::new(HeteroCec::new(*k, *s_avg, known_speeds.clone()))
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchemeConfig::Cec { .. } => "cec",
+            SchemeConfig::Mlcec { .. } => "mlcec",
+            SchemeConfig::Bicec { .. } => "bicec",
+            SchemeConfig::Hetero { .. } => "hetero-cec",
+        }
+    }
+
+    /// The paper's CEC baseline at an `ExperimentConfig`'s geometry.
+    pub fn cec_of(cfg: &ExperimentConfig) -> Self {
+        SchemeConfig::Cec { k: cfg.k_cec, s: cfg.s_cec }
+    }
+
+    /// MLCEC (default `LinearRamp` d-levels) at the config's geometry.
+    pub fn mlcec_of(cfg: &ExperimentConfig) -> Self {
+        SchemeConfig::Mlcec { k: cfg.k_cec, s: cfg.s_cec, policy: DLevelPolicy::LinearRamp }
+    }
+
+    /// BICEC at the config's geometry (`n_max` is supplied at build time).
+    pub fn bicec_of(cfg: &ExperimentConfig) -> Self {
+        SchemeConfig::Bicec { k: cfg.k_bicec, s_per_worker: cfg.s_bicec }
+    }
+
+    /// The paper's three-way comparison [CEC, MLCEC, BICEC] — the single
+    /// copy of the scheme construction `figures` and `cli` used to rebuild
+    /// by hand.
+    pub fn paper_trio(cfg: &ExperimentConfig) -> Vec<Self> {
+        vec![Self::cec_of(cfg), Self::mlcec_of(cfg), Self::bicec_of(cfg)]
+    }
+}
+
+/// Where worker speed multipliers come from.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpeedSpec {
+    /// Every worker at multiplier 1.0.
+    Uniform,
+    /// Sampled per trial from a straggler model.
+    Model(SpeedModel),
+    /// Fixed multipliers per slot (deterministic; length must equal
+    /// `n_max`). The Ext-T6 two-tier cluster uses this.
+    Explicit(Vec<f64>),
+}
+
+impl SpeedSpec {
+    /// The model, when speeds are sampled.
+    pub fn model(&self) -> Option<&SpeedModel> {
+        match self {
+            SpeedSpec::Model(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+/// How per-trial randomness is derived from the scenario seed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeedMode {
+    /// One RNG seeded with `seed`; trials draw from it in order (the
+    /// fig-2 harness derivation — trial i depends on trials < i).
+    Sequential,
+    /// Counter-derived per-trial streams `trial_rng(seed, i)` (the scaling
+    /// sweep derivation — every trial reproducible in isolation).
+    PerTrial,
+}
+
+impl SeedMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SeedMode::Sequential => "sequential",
+            SeedMode::PerTrial => "per_trial",
+        }
+    }
+}
+
+/// The elasticity source: fixed fleet, synthetic churn, or a replayed
+/// trace.
+#[derive(Clone, Debug)]
+pub enum ElasticitySpec {
+    /// No elastic events: `n_workers` slots for the whole run.
+    Fixed,
+    /// Poisson churn inside `[n_min, n_max]` (the `TraceMonteCarlo`
+    /// process): fleet-wide `rate` events/s until `horizon`.
+    Churn { n_min: usize, n_initial: usize, rate: f64, horizon: f64, reassign: Reassign },
+    /// Replay one recorded `ElasticTrace` in every trial (speeds still
+    /// vary per trial). `path` is kept for TOML round-tripping.
+    Trace { path: String, trace: crate::sim::ElasticTrace, reassign: Reassign },
+}
+
+impl ElasticitySpec {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ElasticitySpec::Fixed => "fixed",
+            ElasticitySpec::Churn { .. } => "churn",
+            ElasticitySpec::Trace { .. } => "trace",
+        }
+    }
+}
+
+/// Knobs that only the real-execution coordinator engine reads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CoordinatorSpec {
+    pub backend: ExecBackend,
+    /// Preempt this many workers (highest slots) after their first
+    /// delivery — the mid-run elastic event on the real pool.
+    pub preempt_after_first: usize,
+}
+
+impl Default for CoordinatorSpec {
+    fn default() -> Self {
+        Self { backend: ExecBackend::Native, preempt_after_first: 0 }
+    }
+}
+
+/// Which per-trial number a summary is taken over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    Computation,
+    Decode,
+    Finishing,
+    Encode,
+    TransitionWaste,
+}
+
+impl Metric {
+    pub fn of(&self, t: &super::TrialOutcome) -> f64 {
+        match self {
+            Metric::Computation => t.computation_time,
+            Metric::Decode => t.decode_time,
+            Metric::Finishing => t.finishing_time(),
+            Metric::Encode => t.encode_time,
+            Metric::TransitionWaste => t.transition_waste,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_trio_matches_hand_construction() {
+        let cfg = ExperimentConfig::default();
+        let trio = SchemeConfig::paper_trio(&cfg);
+        assert_eq!(trio.len(), 3);
+        assert_eq!(trio[0], SchemeConfig::Cec { k: 10, s: 20 });
+        assert_eq!(
+            trio[1],
+            SchemeConfig::Mlcec { k: 10, s: 20, policy: DLevelPolicy::LinearRamp }
+        );
+        assert_eq!(trio[2], SchemeConfig::Bicec { k: 800, s_per_worker: 80 });
+        let names: Vec<&str> = trio.iter().map(|s| s.name()).collect();
+        assert_eq!(names, ["cec", "mlcec", "bicec"]);
+    }
+
+    #[test]
+    fn build_produces_matching_schemes() {
+        let cfg = ExperimentConfig::default();
+        for spec in SchemeConfig::paper_trio(&cfg) {
+            let scheme = spec.build(cfg.n_max);
+            assert_eq!(scheme.name(), spec.name());
+        }
+        let h = SchemeConfig::Hetero { k: 2, s_avg: 4, known_speeds: vec![1.0; 8] };
+        assert_eq!(h.build(8).name(), "hetero-cec");
+    }
+}

@@ -1,0 +1,741 @@
+//! Scenario <-> TOML, on top of `config::toml`'s `Doc`.
+//!
+//! Schema (see rust/EXPERIMENTS.md §Scenario-API for the worked example):
+//!
+//! ```toml
+//! [scenario]
+//! name = "fig2a_n40"
+//! engine = "statics"            # statics | trace | coordinator
+//! trials = 20
+//! seed = 2021
+//! seed_mode = "sequential"      # sequential | per_trial
+//! schemes = ["cec", "mlcec", "bicec"]   # section names under [scheme.*]
+//! # threads = 4                 # optional trial-pool budget
+//!
+//! [job]
+//! u = 2400
+//! w = 2400
+//! v = 2400
+//!
+//! [fleet]
+//! n_max = 40
+//! n_workers = 40
+//!
+//! [scheme.cec]
+//! kind = "cec"                  # cec | mlcec | bicec | hetero
+//! k = 10
+//! s = 20
+//! # mlcec adds: policy = "linear_ramp" | "paper_fig1" | "equalized"
+//! #   (equalized adds p, slowdown); custom levels: levels = [2, 2, ...]
+//! # bicec uses: k, s_per_worker
+//! # hetero uses: k, s, known_speeds = [...]
+//!
+//! [speed]
+//! kind = "bernoulli"            # uniform | bernoulli | shifted_exp | explicit
+//! p = 0.5
+//! slowdown = 10.0
+//! jitter = 0.05
+//! # shifted_exp: rate = ...; explicit: multipliers = [...]
+//!
+//! [cost]
+//! worker_ops_per_sec = ...      # optional; defaults = paper calibration
+//! decode_ops_per_sec = ...
+//!
+//! [elasticity]
+//! kind = "fixed"                # fixed | churn | trace
+//! # churn: n_min, n_initial, rate, horizon, reassign = "identity"|"max_overlap"
+//! # trace: file = "trace.txt" (sim::trace text format), reassign
+//!
+//! [coordinator]                 # coordinator engine only
+//! backend = "native"            # native | pjrt
+//! preempt_after_first = 0
+//! ```
+//!
+//! Unknown keys are an error — scenario-file typos must not silently run a
+//! default experiment. `parse(to_doc()) == doc` is property-tested.
+
+use crate::config::toml::{parse, Doc, Value};
+use crate::coordinator::ExecBackend;
+use crate::sim::{CostModel, ElasticTrace, Reassign, SpeedModel};
+use crate::tas::DLevelPolicy;
+use crate::workload::JobSpec;
+
+use super::engine::Engine;
+use super::spec::{CoordinatorSpec, ElasticitySpec, SchemeConfig, SeedMode, SpeedSpec};
+use super::Scenario;
+
+impl Scenario {
+    /// Parse a scenario from TOML text. A `trace` elasticity `file` is
+    /// read relative to the current directory.
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        Self::from_doc(&parse(text)?)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        Self::from_toml(&text).map_err(|e| format!("{path}: {e}"))
+    }
+
+    pub fn to_toml(&self) -> String {
+        self.to_doc().to_toml()
+    }
+
+    pub fn from_doc(doc: &Doc) -> Result<Self, String> {
+        let mut reader = Reader::new(doc);
+        let scenario = reader.scenario()?;
+        reader.reject_unknown()?;
+        scenario.validate()?;
+        Ok(scenario)
+    }
+
+    pub fn to_doc(&self) -> Doc {
+        let mut doc = Doc::default();
+        let mut set = |path: &str, v: Value| {
+            doc.insert(path, v);
+        };
+        set("scenario.name", Value::Str(self.name.clone()));
+        set("scenario.engine", Value::Str(self.engine.as_str().into()));
+        set("scenario.trials", Value::Int(self.trials as i64));
+        set("scenario.seed", Value::Int(self.seed as i64));
+        set("scenario.seed_mode", Value::Str(self.seed_mode.as_str().into()));
+        if let Some(t) = self.threads {
+            set("scenario.threads", Value::Int(t as i64));
+        }
+        set(
+            "scenario.schemes",
+            Value::Array(
+                scheme_section_names(&self.schemes)
+                    .into_iter()
+                    .map(Value::Str)
+                    .collect(),
+            ),
+        );
+        set("job.u", Value::Int(self.job.u as i64));
+        set("job.w", Value::Int(self.job.w as i64));
+        set("job.v", Value::Int(self.job.v as i64));
+        set("fleet.n_max", Value::Int(self.n_max as i64));
+        set("fleet.n_workers", Value::Int(self.n_workers as i64));
+        for (section, scheme) in
+            scheme_section_names(&self.schemes).iter().zip(&self.schemes)
+        {
+            write_scheme(&mut doc, &format!("scheme.{section}"), scheme);
+        }
+        write_speed(&mut doc, &self.speed);
+        doc.insert("cost.worker_ops_per_sec", Value::Float(self.cost.worker_ops_per_sec));
+        doc.insert("cost.decode_ops_per_sec", Value::Float(self.cost.decode_ops_per_sec));
+        write_elasticity(&mut doc, &self.elasticity);
+        if self.engine == Engine::Coordinator {
+            let backend = match self.coordinator.backend {
+                ExecBackend::Native => "native",
+                ExecBackend::Pjrt => "pjrt",
+            };
+            doc.insert("coordinator.backend", Value::Str(backend.into()));
+            doc.insert(
+                "coordinator.preempt_after_first",
+                Value::Int(self.coordinator.preempt_after_first as i64),
+            );
+        }
+        doc
+    }
+}
+
+/// Section names for the scheme list: the scheme name, deduplicated with a
+/// numeric suffix when the same kind appears twice (`cec`, `cec2`, ...).
+fn scheme_section_names(schemes: &[SchemeConfig]) -> Vec<String> {
+    let mut names = Vec::with_capacity(schemes.len());
+    for s in schemes {
+        let base = s.name().replace('-', "_");
+        let mut candidate = base.clone();
+        let mut suffix = 2usize;
+        while names.contains(&candidate) {
+            candidate = format!("{base}{suffix}");
+            suffix += 1;
+        }
+        names.push(candidate);
+    }
+    names
+}
+
+fn write_scheme(doc: &mut Doc, prefix: &str, scheme: &SchemeConfig) {
+    let mut set = |key: &str, v: Value| {
+        doc.insert(&format!("{prefix}.{key}"), v);
+    };
+    match scheme {
+        SchemeConfig::Cec { k, s } => {
+            set("kind", Value::Str("cec".into()));
+            set("k", Value::Int(*k as i64));
+            set("s", Value::Int(*s as i64));
+        }
+        SchemeConfig::Mlcec { k, s, policy } => {
+            set("kind", Value::Str("mlcec".into()));
+            set("k", Value::Int(*k as i64));
+            set("s", Value::Int(*s as i64));
+            match policy {
+                DLevelPolicy::LinearRamp => {
+                    set("policy", Value::Str("linear_ramp".into()))
+                }
+                DLevelPolicy::PaperFig1 => set("policy", Value::Str("paper_fig1".into())),
+                DLevelPolicy::Equalized { p_straggle, slowdown } => {
+                    set("policy", Value::Str("equalized".into()));
+                    set("p", Value::Float(*p_straggle));
+                    set("slowdown", Value::Float(*slowdown));
+                }
+                DLevelPolicy::Custom(levels) => {
+                    set("policy", Value::Str("custom".into()));
+                    set(
+                        "levels",
+                        Value::Array(
+                            levels.iter().map(|&d| Value::Int(d as i64)).collect(),
+                        ),
+                    );
+                }
+            }
+        }
+        SchemeConfig::Bicec { k, s_per_worker } => {
+            set("kind", Value::Str("bicec".into()));
+            set("k", Value::Int(*k as i64));
+            set("s_per_worker", Value::Int(*s_per_worker as i64));
+        }
+        SchemeConfig::Hetero { k, s_avg, known_speeds } => {
+            set("kind", Value::Str("hetero".into()));
+            set("k", Value::Int(*k as i64));
+            set("s", Value::Int(*s_avg as i64));
+            set(
+                "known_speeds",
+                Value::Array(known_speeds.iter().map(|&v| Value::Float(v)).collect()),
+            );
+        }
+    }
+}
+
+fn write_speed(doc: &mut Doc, speed: &SpeedSpec) {
+    match speed {
+        SpeedSpec::Uniform => {
+            doc.insert("speed.kind", Value::Str("uniform".into()));
+        }
+        SpeedSpec::Model(SpeedModel::BernoulliSlowdown { p, slowdown, jitter }) => {
+            doc.insert("speed.kind", Value::Str("bernoulli".into()));
+            doc.insert("speed.p", Value::Float(*p));
+            doc.insert("speed.slowdown", Value::Float(*slowdown));
+            doc.insert("speed.jitter", Value::Float(*jitter));
+        }
+        SpeedSpec::Model(SpeedModel::ShiftedExponential { rate }) => {
+            doc.insert("speed.kind", Value::Str("shifted_exp".into()));
+            doc.insert("speed.rate", Value::Float(*rate));
+        }
+        SpeedSpec::Explicit(mult) => {
+            doc.insert("speed.kind", Value::Str("explicit".into()));
+            doc.insert(
+                "speed.multipliers",
+                Value::Array(mult.iter().map(|&m| Value::Float(m)).collect()),
+            );
+        }
+    }
+}
+
+fn write_elasticity(doc: &mut Doc, spec: &ElasticitySpec) {
+    doc.insert("elasticity.kind", Value::Str(spec.kind().into()));
+    match spec {
+        ElasticitySpec::Fixed => {}
+        ElasticitySpec::Churn { n_min, n_initial, rate, horizon, reassign } => {
+            doc.insert("elasticity.n_min", Value::Int(*n_min as i64));
+            doc.insert("elasticity.n_initial", Value::Int(*n_initial as i64));
+            doc.insert("elasticity.rate", Value::Float(*rate));
+            doc.insert("elasticity.horizon", Value::Float(*horizon));
+            doc.insert("elasticity.reassign", Value::Str(reassign_str(*reassign).into()));
+        }
+        ElasticitySpec::Trace { path, reassign, .. } => {
+            doc.insert("elasticity.file", Value::Str(path.clone()));
+            doc.insert("elasticity.reassign", Value::Str(reassign_str(*reassign).into()));
+        }
+    }
+}
+
+fn reassign_str(r: Reassign) -> &'static str {
+    match r {
+        Reassign::Identity => "identity",
+        Reassign::MaxOverlap => "max_overlap",
+    }
+}
+
+fn parse_reassign(s: &str) -> Result<Reassign, String> {
+    match s {
+        "identity" => Ok(Reassign::Identity),
+        "max_overlap" => Ok(Reassign::MaxOverlap),
+        other => Err(format!(
+            "elasticity.reassign: unknown policy {other:?} (identity|max_overlap)"
+        )),
+    }
+}
+
+/// Typed reads over a `Doc` that track consumption, so anything left over
+/// is reported as an unknown key.
+struct Reader<'a> {
+    doc: &'a Doc,
+    used: std::collections::BTreeSet<String>,
+}
+
+impl<'a> Reader<'a> {
+    fn new(doc: &'a Doc) -> Self {
+        Self { doc, used: Default::default() }
+    }
+
+    fn get(&mut self, path: &str) -> Option<&'a Value> {
+        let v = self.doc.get(path);
+        if v.is_some() {
+            self.used.insert(path.to_string());
+        }
+        v
+    }
+
+    fn usize_at(&mut self, path: &str) -> Result<Option<usize>, String> {
+        match self.get(path) {
+            None => Ok(None),
+            Some(v) => {
+                v.as_usize().map(Some).ok_or(format!("{path}: expected integer >= 0"))
+            }
+        }
+    }
+
+    fn req_usize(&mut self, path: &str) -> Result<usize, String> {
+        self.usize_at(path)?.ok_or(format!("missing required key {path}"))
+    }
+
+    fn f64_at(&mut self, path: &str) -> Result<Option<f64>, String> {
+        match self.get(path) {
+            None => Ok(None),
+            Some(v) => v.as_float().map(Some).ok_or(format!("{path}: expected number")),
+        }
+    }
+
+    fn req_f64(&mut self, path: &str) -> Result<f64, String> {
+        self.f64_at(path)?.ok_or(format!("missing required key {path}"))
+    }
+
+    fn str_at(&mut self, path: &str) -> Result<Option<&'a str>, String> {
+        match self.get(path) {
+            None => Ok(None),
+            Some(v) => v.as_str().map(Some).ok_or(format!("{path}: expected string")),
+        }
+    }
+
+    fn req_str(&mut self, path: &str) -> Result<&'a str, String> {
+        self.str_at(path)?.ok_or(format!("missing required key {path}"))
+    }
+
+    fn f64_array(&mut self, path: &str) -> Result<Vec<f64>, String> {
+        let arr = self
+            .get(path)
+            .ok_or(format!("missing required key {path}"))?
+            .as_array()
+            .ok_or(format!("{path}: expected array"))?;
+        arr.iter()
+            .map(|v| v.as_float().ok_or(format!("{path}: expected numbers")))
+            .collect()
+    }
+
+    fn scenario(&mut self) -> Result<Scenario, String> {
+        let name = self.req_str("scenario.name")?.to_string();
+        let engine = Engine::parse(self.req_str("scenario.engine")?)?;
+        let mut builder = Scenario::builder(&name).engine(engine);
+        if let Some(trials) = self.usize_at("scenario.trials")? {
+            builder = builder.trials(trials);
+        }
+        if let Some(v) = self.get("scenario.seed") {
+            // Seeds are u64; TOML integers are i64 — round-trip through
+            // two's complement so every seed survives.
+            let i = v.as_int().ok_or("scenario.seed: expected integer")?;
+            builder = builder.seed(i as u64);
+        }
+        if let Some(mode) = self.str_at("scenario.seed_mode")? {
+            builder = builder.seed_mode(match mode {
+                "sequential" => SeedMode::Sequential,
+                "per_trial" => SeedMode::PerTrial,
+                other => {
+                    return Err(format!(
+                        "scenario.seed_mode: unknown mode {other:?} \
+                         (sequential|per_trial)"
+                    ))
+                }
+            });
+        }
+        if let Some(threads) = self.usize_at("scenario.threads")? {
+            builder = builder.threads(threads);
+        }
+        builder = builder.job(JobSpec::new(
+            self.req_usize("job.u")?,
+            self.req_usize("job.w")?,
+            self.req_usize("job.v")?,
+        ));
+        let n_max = self.req_usize("fleet.n_max")?;
+        let n_workers = self.usize_at("fleet.n_workers")?.unwrap_or(n_max);
+        builder = builder.fleet(n_max, n_workers);
+
+        let scheme_list = self
+            .get("scenario.schemes")
+            .ok_or("missing required key scenario.schemes")?
+            .as_array()
+            .ok_or("scenario.schemes: expected array of section names")?;
+        let mut schemes = Vec::new();
+        for entry in scheme_list {
+            let section = entry
+                .as_str()
+                .ok_or("scenario.schemes: expected strings naming [scheme.*] sections")?;
+            schemes.push(self.scheme(section)?);
+        }
+        builder = builder.schemes(schemes);
+
+        builder = builder.speed(self.speed()?);
+        let mut cost = CostModel::paper_default();
+        if let Some(w) = self.f64_at("cost.worker_ops_per_sec")? {
+            cost.worker_ops_per_sec = w;
+        }
+        if let Some(d) = self.f64_at("cost.decode_ops_per_sec")? {
+            cost.decode_ops_per_sec = d;
+        }
+        builder = builder.cost(cost);
+        builder = builder.elasticity(self.elasticity()?);
+
+        // Only the coordinator engine reads [coordinator]; leaving the keys
+        // unconsumed for other engines makes a misplaced section an
+        // unknown-key error instead of a silently-ignored knob.
+        if engine == Engine::Coordinator {
+            let mut coord = CoordinatorSpec::default();
+            if let Some(backend) = self.str_at("coordinator.backend")? {
+                coord.backend = match backend {
+                    "native" => ExecBackend::Native,
+                    "pjrt" => ExecBackend::Pjrt,
+                    other => {
+                        return Err(format!(
+                            "coordinator.backend: unknown backend {other:?} (native|pjrt)"
+                        ))
+                    }
+                };
+            }
+            if let Some(p) = self.usize_at("coordinator.preempt_after_first")? {
+                coord.preempt_after_first = p;
+            }
+            builder = builder.coordinator(coord);
+        }
+        // Skip builder validation here: from_doc validates after the
+        // unknown-key check so typos are reported before semantic errors.
+        Ok(builder.inner_unchecked())
+    }
+
+    fn scheme(&mut self, section: &str) -> Result<SchemeConfig, String> {
+        let prefix = format!("scheme.{section}");
+        let kind = self.req_str(&format!("{prefix}.kind"))?;
+        match kind {
+            "cec" => Ok(SchemeConfig::Cec {
+                k: self.req_usize(&format!("{prefix}.k"))?,
+                s: self.req_usize(&format!("{prefix}.s"))?,
+            }),
+            "mlcec" => {
+                let k = self.req_usize(&format!("{prefix}.k"))?;
+                let s = self.req_usize(&format!("{prefix}.s"))?;
+                let policy = match self
+                    .str_at(&format!("{prefix}.policy"))?
+                    .unwrap_or("linear_ramp")
+                {
+                    "linear_ramp" => DLevelPolicy::LinearRamp,
+                    "paper_fig1" => DLevelPolicy::PaperFig1,
+                    "equalized" => DLevelPolicy::Equalized {
+                        p_straggle: self.req_f64(&format!("{prefix}.p"))?,
+                        slowdown: self.req_f64(&format!("{prefix}.slowdown"))?,
+                    },
+                    "custom" => {
+                        let levels = self
+                            .get(&format!("{prefix}.levels"))
+                            .ok_or(format!("{prefix}.levels required for custom policy"))?
+                            .as_array()
+                            .ok_or(format!("{prefix}.levels: expected array"))?
+                            .iter()
+                            .map(|v| {
+                                v.as_usize()
+                                    .ok_or(format!("{prefix}.levels: expected integers"))
+                            })
+                            .collect::<Result<Vec<_>, _>>()?;
+                        DLevelPolicy::Custom(levels)
+                    }
+                    other => {
+                        return Err(format!(
+                            "{prefix}.policy: unknown policy {other:?} \
+                             (linear_ramp|paper_fig1|equalized|custom)"
+                        ))
+                    }
+                };
+                Ok(SchemeConfig::Mlcec { k, s, policy })
+            }
+            "bicec" => Ok(SchemeConfig::Bicec {
+                k: self.req_usize(&format!("{prefix}.k"))?,
+                s_per_worker: self.req_usize(&format!("{prefix}.s_per_worker"))?,
+            }),
+            "hetero" => Ok(SchemeConfig::Hetero {
+                k: self.req_usize(&format!("{prefix}.k"))?,
+                s_avg: self.req_usize(&format!("{prefix}.s"))?,
+                known_speeds: self.f64_array(&format!("{prefix}.known_speeds"))?,
+            }),
+            other => Err(format!(
+                "{prefix}.kind: unknown scheme {other:?} (cec|mlcec|bicec|hetero)"
+            )),
+        }
+    }
+
+    fn speed(&mut self) -> Result<SpeedSpec, String> {
+        match self.str_at("speed.kind")?.unwrap_or("bernoulli") {
+            "uniform" => Ok(SpeedSpec::Uniform),
+            "bernoulli" => Ok(SpeedSpec::Model(SpeedModel::BernoulliSlowdown {
+                p: self.f64_at("speed.p")?.unwrap_or(0.5),
+                slowdown: self.f64_at("speed.slowdown")?.unwrap_or(10.0),
+                jitter: self.f64_at("speed.jitter")?.unwrap_or(0.05),
+            })),
+            "shifted_exp" => Ok(SpeedSpec::Model(SpeedModel::ShiftedExponential {
+                rate: self.req_f64("speed.rate")?,
+            })),
+            "explicit" => Ok(SpeedSpec::Explicit(self.f64_array("speed.multipliers")?)),
+            other => Err(format!(
+                "speed.kind: unknown model {other:?} \
+                 (uniform|bernoulli|shifted_exp|explicit)"
+            )),
+        }
+    }
+
+    fn elasticity(&mut self) -> Result<ElasticitySpec, String> {
+        match self.str_at("elasticity.kind")?.unwrap_or("fixed") {
+            "fixed" => Ok(ElasticitySpec::Fixed),
+            "churn" => Ok(ElasticitySpec::Churn {
+                n_min: self.req_usize("elasticity.n_min")?,
+                n_initial: self.req_usize("elasticity.n_initial")?,
+                rate: self.req_f64("elasticity.rate")?,
+                horizon: self.req_f64("elasticity.horizon")?,
+                reassign: match self.str_at("elasticity.reassign")? {
+                    None => Reassign::Identity,
+                    Some(s) => parse_reassign(s)?,
+                },
+            }),
+            "trace" => {
+                let path = self.req_str("elasticity.file")?.to_string();
+                let text = std::fs::read_to_string(&path)
+                    .map_err(|e| format!("elasticity.file: reading {path}: {e}"))?;
+                let trace = ElasticTrace::from_text(&text)
+                    .map_err(|e| format!("elasticity.file {path}: {e}"))?;
+                Ok(ElasticitySpec::Trace {
+                    path,
+                    trace,
+                    reassign: match self.str_at("elasticity.reassign")? {
+                        None => Reassign::Identity,
+                        Some(s) => parse_reassign(s)?,
+                    },
+                })
+            }
+            other => Err(format!(
+                "elasticity.kind: unknown source {other:?} (fixed|churn|trace)"
+            )),
+        }
+    }
+
+    fn reject_unknown(&self) -> Result<(), String> {
+        for key in self.doc.keys() {
+            if !self.used.contains(key) {
+                return Err(format!("unknown scenario key {key:?}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::ScenarioBuilder;
+
+    const FIG2A: &str = r#"
+[scenario]
+name = "fig2a_n40"
+engine = "statics"
+trials = 6
+seed = 2021
+seed_mode = "sequential"
+schemes = ["cec", "mlcec", "bicec"]
+
+[job]
+u = 2400
+w = 2400
+v = 2400
+
+[fleet]
+n_max = 40
+n_workers = 40
+
+[scheme.cec]
+kind = "cec"
+k = 10
+s = 20
+
+[scheme.mlcec]
+kind = "mlcec"
+k = 10
+s = 20
+policy = "linear_ramp"
+
+[scheme.bicec]
+kind = "bicec"
+k = 800
+s_per_worker = 80
+
+[speed]
+kind = "bernoulli"
+p = 0.5
+slowdown = 10.0
+jitter = 0.05
+"#;
+
+    #[test]
+    fn parses_the_paper_scenario() {
+        let sc = Scenario::from_toml(FIG2A).unwrap();
+        assert_eq!(sc.name, "fig2a_n40");
+        assert_eq!(sc.engine, Engine::Statics);
+        assert_eq!(sc.trials, 6);
+        assert_eq!(sc.schemes.len(), 3);
+        assert_eq!(sc.schemes[2], SchemeConfig::Bicec { k: 800, s_per_worker: 80 });
+        assert!(matches!(sc.speed, SpeedSpec::Model(_)));
+    }
+
+    #[test]
+    fn unknown_keys_fail_loudly() {
+        let text = format!("{FIG2A}\n[run]\ntrails = 3\n");
+        let err = Scenario::from_toml(&text).unwrap_err();
+        assert!(err.contains("unknown scenario key"), "{err}");
+        assert!(err.contains("run.trails"), "{err}");
+    }
+
+    #[test]
+    fn missing_scheme_section_is_an_error() {
+        let text = FIG2A.replace("[scheme.bicec]\nkind = \"bicec\"", "[scheme.bicec]\n");
+        let err = Scenario::from_toml(&text).unwrap_err();
+        assert!(err.contains("scheme.bicec.kind"), "{err}");
+    }
+
+    #[test]
+    fn round_trip_is_identity_on_the_doc() {
+        let sc = Scenario::from_toml(FIG2A).unwrap();
+        let doc = sc.to_doc();
+        let back = Scenario::from_doc(&doc).unwrap();
+        assert_eq!(back.to_doc(), doc);
+        let reparsed = Scenario::from_toml(&sc.to_toml()).unwrap();
+        assert_eq!(reparsed.to_doc(), doc);
+    }
+
+    #[test]
+    fn duplicate_scheme_kinds_get_distinct_sections() {
+        let sc = ScenarioBuilder::new("dup")
+            .schemes(vec![
+                SchemeConfig::Cec { k: 2, s: 4 },
+                SchemeConfig::Cec { k: 3, s: 6 },
+            ])
+            .fleet(8, 8)
+            .build()
+            .unwrap();
+        let names = super::scheme_section_names(&sc.schemes);
+        assert_eq!(names, ["cec", "cec2"]);
+        let back = Scenario::from_doc(&sc.to_doc()).unwrap();
+        assert_eq!(back.schemes, sc.schemes);
+    }
+
+    #[test]
+    fn prop_scenario_round_trip() {
+        crate::prop::check(25, |g| {
+            let n_max = g.usize_in(8, 64);
+            let engine = *g.pick(&[Engine::Statics, Engine::Trace]);
+            let s = g.usize_in(2, n_max.min(12));
+            let k = g.usize_in(1, s);
+            let mut schemes = vec![SchemeConfig::Cec { k, s }];
+            if g.bool() {
+                schemes.push(SchemeConfig::Mlcec {
+                    k,
+                    s,
+                    policy: if g.bool() {
+                        DLevelPolicy::LinearRamp
+                    } else {
+                        DLevelPolicy::Equalized {
+                            p_straggle: g.f64_in(0.0, 1.0),
+                            slowdown: g.f64_in(1.0, 20.0),
+                        }
+                    },
+                });
+            }
+            if g.bool() {
+                schemes.push(SchemeConfig::Bicec {
+                    k: g.usize_in(1, 4 * n_max),
+                    s_per_worker: 4,
+                });
+            }
+            let mut b = ScenarioBuilder::new("prop")
+                .engine(engine)
+                .fleet(n_max, n_max)
+                .schemes(schemes)
+                .trials(g.usize_in(1, 30))
+                .seed(g.u64())
+                .seed_mode(if engine == Engine::Trace {
+                    // churn requires the counter-derived mode
+                    SeedMode::PerTrial
+                } else {
+                    *g.pick(&[SeedMode::Sequential, SeedMode::PerTrial])
+                });
+            if engine == Engine::Trace {
+                b = b.elasticity(ElasticitySpec::Churn {
+                    n_min: s,
+                    n_initial: n_max,
+                    rate: g.f64_in(0.0, 10.0),
+                    horizon: g.f64_in(0.1, 100.0),
+                    reassign: *g.pick(&[Reassign::Identity, Reassign::MaxOverlap]),
+                });
+            } else if g.bool() {
+                b = b.speed(SpeedSpec::Explicit(
+                    (0..n_max).map(|_| g.f64_in(0.25, 8.0)).collect(),
+                ));
+            }
+            if g.bool() {
+                b = b.threads(g.usize_in(1, 8));
+            }
+            let sc = b.build().map_err(|e| format!("gen invalid: {e}"))?;
+            let text = sc.to_toml();
+            let back = Scenario::from_toml(&text).map_err(|e| format!("{e}\n{text}"))?;
+            if back.to_doc() != sc.to_doc() {
+                return Err(format!("round trip diverged:\n{text}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn trace_file_elasticity_round_trips_through_disk() {
+        let mut rng = crate::rng::default_rng(6);
+        let trace = ElasticTrace::poisson(8, 4, 8, 1.0, 20.0, &mut rng);
+        let dir = std::env::temp_dir().join("hcec_scenario_toml_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.txt");
+        std::fs::write(&path, trace.to_text()).unwrap();
+        let sc = ScenarioBuilder::new("replay")
+            .engine(Engine::Trace)
+            .fleet(8, 8)
+            .job(JobSpec::new(240, 240, 240))
+            .schemes(vec![SchemeConfig::Cec { k: 2, s: 4 }])
+            .elasticity(ElasticitySpec::Trace {
+                path: path.to_string_lossy().into_owned(),
+                trace: trace.clone(),
+                reassign: Reassign::Identity,
+            })
+            .build()
+            .unwrap();
+        let back = Scenario::from_toml(&sc.to_toml()).unwrap();
+        match &back.elasticity {
+            ElasticitySpec::Trace { trace: t, .. } => {
+                assert_eq!(t.events.len(), trace.events.len());
+                assert_eq!(t.n_initial, trace.n_initial);
+            }
+            other => panic!("expected trace elasticity, got {other:?}"),
+        }
+    }
+}

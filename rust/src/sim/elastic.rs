@@ -510,6 +510,21 @@ impl TraceMonteCarlo {
         self.run_threaded(scheme, job, cost, trials, threads)
     }
 
+    /// [`run`](Self::run) with an explicit thread request (clamped by the
+    /// shared budget). Identical results for any count; the scenario
+    /// engine's `threads` knob lands here.
+    pub fn run_with_threads(
+        &self,
+        scheme: &dyn Scheme,
+        job: JobSpec,
+        cost: &CostModel,
+        trials: usize,
+        threads: usize,
+    ) -> Vec<Result<TraceOutcome, SimError>> {
+        let threads = crate::threads::plan(threads);
+        self.run_threaded(scheme, job, cost, trials, threads)
+    }
+
     /// [`run`](Self::run) with an explicit worker count (1 = caller).
     fn run_threaded(
         &self,

@@ -24,6 +24,9 @@ pub use elastic::{
     simulate_trace, simulate_trace_with, Reassign, TraceMonteCarlo, TraceOutcome,
     TraceSimulator,
 };
-pub use statics::{simulate_many, simulate_static, RunResult, SimScratch, StaticSimulator};
+pub use statics::{
+    simulate_many, simulate_many_with_threads, simulate_static, RunResult, SimScratch,
+    StaticSimulator,
+};
 pub use straggler::{SpeedModel, WorkerSpeeds};
 pub use trace::{ElasticEvent, ElasticTrace, EventKind};

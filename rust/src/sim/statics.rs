@@ -312,6 +312,21 @@ pub fn simulate_many(
     simulate_many_threaded(scheme, n, job, cost, speeds_per_trial, threads)
 }
 
+/// [`simulate_many`] with an explicit thread request (still clamped by the
+/// shared budget — `crate::threads::plan`). Results are identical for any
+/// count; the scenario engine's `threads` knob lands here.
+pub fn simulate_many_with_threads(
+    scheme: &dyn Scheme,
+    n: usize,
+    job: JobSpec,
+    cost: &CostModel,
+    speeds_per_trial: &[WorkerSpeeds],
+    threads: usize,
+) -> Vec<RunResult> {
+    let threads = crate::threads::plan(threads);
+    simulate_many_threaded(scheme, n, job, cost, speeds_per_trial, threads)
+}
+
 /// `simulate_many` with an explicit worker count (1 = run on the caller).
 fn simulate_many_threaded(
     scheme: &dyn Scheme,

@@ -9,7 +9,7 @@
 
 use crate::rng::{Bernoulli, Exponential, LogNormal, Rng};
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum SpeedModel {
     /// Paper model: straggle w.p. `p`, stragglers are `slowdown`x slower;
     /// every worker gets a log-normal(0, `jitter`) multiplicative jitter.

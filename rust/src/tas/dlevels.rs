@@ -15,7 +15,7 @@
 
 use crate::rng::{default_rng, Rng};
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum DLevelPolicy {
     PaperFig1,
     LinearRamp,

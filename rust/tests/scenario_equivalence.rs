@@ -1,0 +1,343 @@
+//! Equivalence proofs for the Scenario API re-routing (PR 3): each test
+//! reimplements a pre-refactor driver verbatim (the "golden" wiring, copied
+//! from the code these drivers had before `scenario::` existed) and asserts
+//! the Scenario-routed path reproduces it **bit-identically** at fixed
+//! seed — f64 equality, not tolerances.
+
+use hcec::config::ExperimentConfig;
+use hcec::figures;
+use hcec::metrics::mean;
+use hcec::rng::{default_rng, fold_in, trial_rng};
+use hcec::scenario::{
+    ElasticitySpec, Engine, Metric, Scenario, SchemeConfig, SeedMode,
+};
+use hcec::sim::{
+    simulate_many, Reassign, SpeedModel, TraceMonteCarlo, WorkerSpeeds,
+};
+use hcec::tas::{Bicec, Cec, Mlcec, Scheme};
+use hcec::workload::JobSpec;
+
+fn quick_cfg() -> ExperimentConfig {
+    ExperimentConfig { trials: 5, ns: vec![20, 30, 40], ..Default::default() }
+}
+
+/// Golden copy of the pre-Scenario `figures::fig2_series` wiring: per-N
+/// sequential RNG `default_rng(seed ^ n << 32)`, one straggler draw per
+/// trial shared across the three schemes.
+fn golden_fig2_per_trial(
+    cfg: &ExperimentConfig,
+    job: JobSpec,
+    n: usize,
+) -> [Vec<f64>; 3] {
+    let cost = cfg.cost_model();
+    let cec = Cec::new(cfg.k_cec, cfg.s_cec);
+    let mlcec = Mlcec::new(cfg.k_cec, cfg.s_cec);
+    let bicec = Bicec::new(cfg.k_bicec, cfg.s_bicec, cfg.n_max);
+    let mut rng = default_rng(cfg.seed ^ (n as u64) << 32);
+    let speeds: Vec<WorkerSpeeds> = (0..cfg.trials)
+        .map(|_| WorkerSpeeds::sample(&cfg.speed_model(), cfg.n_max, &mut rng))
+        .collect();
+    let mut xs = [Vec::new(), Vec::new(), Vec::new()];
+    for (i, scheme) in [&cec as &dyn Scheme, &mlcec, &bicec].into_iter().enumerate() {
+        xs[i] = simulate_many(scheme, n, job, &cost, &speeds)
+            .iter()
+            .map(|r| r.computation_time)
+            .collect();
+    }
+    xs
+}
+
+#[test]
+fn fig2a_scenario_path_is_bit_identical_to_prerefactor_driver() {
+    let cfg = quick_cfg();
+    for &n in &cfg.ns {
+        let golden = golden_fig2_per_trial(&cfg, cfg.job, n);
+        let out = figures::fig2_scenario(&cfg, cfg.job, n).run().unwrap();
+        for (scheme_idx, want) in golden.iter().enumerate() {
+            let got = out.per_scheme[scheme_idx].metric_values(Metric::Computation);
+            assert_eq!(&got, want, "n={n} scheme {scheme_idx} diverged");
+        }
+    }
+    // And the rendered table built on those values.
+    let series = figures::fig2_series(&cfg, Metric::Computation, cfg.job);
+    for (p, &n) in series.iter().zip(&cfg.ns) {
+        let golden = golden_fig2_per_trial(&cfg, cfg.job, n);
+        assert_eq!(p.cec.mean, mean(&golden[0]), "n={n} cec mean");
+        assert_eq!(p.mlcec.mean, mean(&golden[1]), "n={n} mlcec mean");
+        assert_eq!(p.bicec.mean, mean(&golden[2]), "n={n} bicec mean");
+    }
+}
+
+/// Golden copy of the pre-Scenario `figures::scaling_table` row: static
+/// means from `trial_rng(fold_in(seed, n), i)` draws, trace means /
+/// CEC waste / failure count from a `TraceMonteCarlo` at seed
+/// `fold_in(seed, n)`.
+#[allow(clippy::type_complexity)]
+fn golden_scaling_row(
+    cfg: &ExperimentConfig,
+    n: usize,
+    events_per_node: f64,
+    trials: usize,
+) -> ([f64; 3], [f64; 3], f64, usize) {
+    let cost = cfg.cost_model();
+    let job = cfg.job;
+    let cec = Cec::new(cfg.k_cec, cfg.s_cec);
+    let mlcec = Mlcec::new(cfg.k_cec, cfg.s_cec);
+    let bicec = Bicec::new(cfg.k_bicec, cfg.s_bicec, n);
+    let seed_n = fold_in(cfg.seed, n as u64);
+    let speeds: Vec<WorkerSpeeds> = (0..trials)
+        .map(|i| {
+            let mut rng = trial_rng(seed_n, i as u64);
+            WorkerSpeeds::sample(&cfg.speed_model(), n, &mut rng)
+        })
+        .collect();
+    let comp_mean = |scheme: &dyn Scheme| -> f64 {
+        mean(
+            &simulate_many(scheme, n, job, &cost, &speeds)
+                .iter()
+                .map(|r| r.computation_time)
+                .collect::<Vec<_>>(),
+        )
+    };
+    let statics = [comp_mean(&cec), comp_mean(&mlcec), comp_mean(&bicec)];
+
+    let tau = cost.worker_time(cec.subtask_ops(job.u, job.w, job.v, n), 1.0);
+    let horizon = 2.0 * cfg.s_cec as f64 * tau;
+    let mc = TraceMonteCarlo {
+        n_max: n,
+        n_min: (n / 2).max(cfg.s_cec),
+        n_initial: n,
+        rate: events_per_node * n as f64 / horizon,
+        horizon,
+        speed_model: cfg.speed_model(),
+        reassign: Reassign::Identity,
+        seed: seed_n,
+    };
+    let mut failures = 0usize;
+    let mut waste = Vec::new();
+    let mut tmean = [0.0f64; 3];
+    for (si, scheme) in [&cec as &dyn Scheme, &mlcec, &bicec].into_iter().enumerate() {
+        let mut comps = Vec::new();
+        for r in mc.run(scheme, job, &cost, trials) {
+            match r {
+                Ok(out) => {
+                    comps.push(out.computation_time);
+                    if si == 0 {
+                        waste.push(out.transition_waste);
+                    }
+                }
+                Err(_) => failures += 1,
+            }
+        }
+        tmean[si] = mean(&comps);
+    }
+    (statics, tmean, mean(&waste), failures)
+}
+
+#[test]
+fn scaling_scenario_path_is_bit_identical_to_prerefactor_driver() {
+    let cfg = ExperimentConfig { trials: 4, ..Default::default() };
+    for &n in &[40usize, 160] {
+        let (g_static, g_trace, g_waste, g_failures) =
+            golden_scaling_row(&cfg, n, 1.0, 4);
+        let (st_sc, tr_sc) = figures::scaling_scenarios(&cfg, n, 1.0, 4);
+        let st = st_sc.run().unwrap();
+        let tr = tr_sc.run().unwrap();
+        for i in 0..3 {
+            assert_eq!(
+                st.per_scheme[i].mean(Metric::Computation),
+                g_static[i],
+                "n={n} static scheme {i}"
+            );
+            assert_eq!(
+                tr.per_scheme[i].mean(Metric::Computation),
+                g_trace[i],
+                "n={n} trace scheme {i}"
+            );
+        }
+        assert_eq!(tr.per_scheme[0].mean(Metric::TransitionWaste), g_waste, "n={n}");
+        let failures: usize = tr.per_scheme.iter().map(|s| s.failures()).sum();
+        assert_eq!(failures, g_failures, "n={n}");
+    }
+}
+
+/// Golden copy of the pre-Scenario `perf_stack` "mc static cec nN" row:
+/// direct `simulate_many` over `trial_rng(11, i)` draws.
+#[test]
+fn perf_stack_mc_rows_are_bit_identical_to_prerefactor_wiring() {
+    let job = JobSpec::paper_square();
+    let cost = hcec::sim::CostModel::paper_default();
+    let n = 40;
+    let trials = 8;
+    let cec = Cec::new(10, 20);
+    let speeds: Vec<WorkerSpeeds> = (0..trials)
+        .map(|i| {
+            let mut rng = trial_rng(11, i as u64);
+            WorkerSpeeds::sample(&SpeedModel::paper_default(), n, &mut rng)
+        })
+        .collect();
+    let golden: Vec<f64> = simulate_many(&cec, n, job, &cost, &speeds)
+        .iter()
+        .map(|r| r.computation_time)
+        .collect();
+    let sc = Scenario::builder("bench_mc_static_n40")
+        .engine(Engine::Statics)
+        .job(job)
+        .fleet(n, n)
+        .schemes(vec![SchemeConfig::Cec { k: 10, s: 20 }])
+        .trials(trials)
+        .seed(11)
+        .seed_mode(SeedMode::PerTrial)
+        .build()
+        .unwrap();
+    let got = sc.run().unwrap().per_scheme[0].metric_values(Metric::Computation);
+    assert_eq!(got, golden);
+
+    // The "mc trace cec nN" row: TraceMonteCarlo at seed 12 vs the churn
+    // scenario the bench now builds.
+    let tau = cost.worker_time(cec.subtask_ops(job.u, job.w, job.v, n), 1.0);
+    let horizon = 2.0 * 20.0 * tau;
+    let mc = TraceMonteCarlo {
+        n_max: n,
+        n_min: 20,
+        n_initial: n,
+        rate: 0.25 * n as f64 / horizon,
+        horizon,
+        speed_model: SpeedModel::paper_default(),
+        reassign: Reassign::Identity,
+        seed: 12,
+    };
+    let golden_trace = mc.run(&cec, job, &cost, 6);
+    let tr_sc = Scenario::builder("bench_mc_trace_n40")
+        .engine(Engine::Trace)
+        .job(job)
+        .fleet(n, n)
+        .schemes(vec![SchemeConfig::Cec { k: 10, s: 20 }])
+        .elasticity(ElasticitySpec::Churn {
+            n_min: 20,
+            n_initial: n,
+            rate: 0.25 * n as f64 / horizon,
+            horizon,
+            reassign: Reassign::Identity,
+        })
+        .trials(6)
+        .seed(12)
+        .seed_mode(SeedMode::PerTrial)
+        .build()
+        .unwrap();
+    let got_trace = tr_sc.run().unwrap();
+    for (i, (g, w)) in
+        got_trace.per_scheme[0].trials.iter().zip(&golden_trace).enumerate()
+    {
+        match (g, w) {
+            (Ok(g), Ok(w)) => {
+                assert_eq!(g.computation_time, w.computation_time, "trial {i}");
+                assert_eq!(g.transition_waste, w.transition_waste, "trial {i}");
+                assert_eq!(g.completions, w.completions, "trial {i}");
+            }
+            (Err(_), Err(_)) => {}
+            other => panic!("trial {i} diverged: {other:?}"),
+        }
+    }
+}
+
+/// Golden copy of the pre-Scenario `transition_waste_table` (Ext-T1):
+/// `TraceMonteCarlo` at Fig. 1 geometry, per-scheme means over Ok trials.
+#[test]
+fn transition_waste_scenario_path_matches_prerefactor_driver() {
+    let cfg = ExperimentConfig { trials: 8, ..Default::default() };
+    let job = JobSpec::new(240, 240, 240);
+    let cost = cfg.cost_model();
+    let horizon = 400.0 * cost.worker_time(job.ops() / 2400, 1.0);
+    let mc = TraceMonteCarlo {
+        n_max: 8,
+        n_min: 4,
+        n_initial: 8,
+        rate: 3.0 / horizon,
+        horizon,
+        speed_model: cfg.speed_model(),
+        reassign: Reassign::Identity,
+        seed: cfg.seed,
+    };
+    let schemes: Vec<Box<dyn Scheme>> = vec![
+        Box::new(Cec::new(2, 4)),
+        Box::new(Mlcec::new(2, 4)),
+        Box::new(Bicec::new(600, 300, 8)),
+    ];
+    let mut golden_rows = Vec::new();
+    for scheme in &schemes {
+        let (mut wastes, mut comps) = (Vec::new(), Vec::new());
+        let mut failures = 0usize;
+        for r in mc.run(scheme.as_ref(), job, &cost, cfg.trials) {
+            match r {
+                Ok(out) => {
+                    wastes.push(out.transition_waste);
+                    comps.push(out.computation_time);
+                }
+                Err(_) => failures += 1,
+            }
+        }
+        golden_rows.push((mean(&wastes), mean(&comps), failures));
+    }
+
+    let rendered = figures::transition_waste_table(&cfg, 3.0).render();
+    for ((g_waste, g_comp, g_fail), scheme) in golden_rows.iter().zip(&schemes) {
+        let line = rendered
+            .lines()
+            .find(|l| l.split_whitespace().next() == Some(scheme.name()))
+            .unwrap_or_else(|| panic!("no row for {}:\n{rendered}", scheme.name()));
+        let cols: Vec<&str> = line.split_whitespace().collect();
+        assert_eq!(cols[1], format!("{g_waste:.4}"), "{line}");
+        assert_eq!(cols[3], format!("{g_comp:.4}"), "{line}");
+        assert_eq!(cols[4], format!("{g_fail}"), "{line}");
+    }
+}
+
+/// Golden copy of the pre-Scenario `dlevel_table` (Ext-T2) inner loop.
+#[test]
+fn dlevel_scenario_path_matches_prerefactor_driver() {
+    let cfg = ExperimentConfig { trials: 4, ns: vec![20, 40], ..Default::default() };
+    let cost = cfg.cost_model();
+    let rendered = figures::dlevel_table(&cfg).render();
+    for &n in &cfg.ns {
+        let mut rng = default_rng(cfg.seed ^ (n as u64) << 16);
+        let speeds: Vec<WorkerSpeeds> = (0..cfg.trials)
+            .map(|_| WorkerSpeeds::sample(&cfg.speed_model(), cfg.n_max, &mut rng))
+            .collect();
+        let mlcec = Mlcec::new(cfg.k_cec, cfg.s_cec); // linear_ramp policy
+        let golden = mean(
+            &simulate_many(&mlcec, n, cfg.job, &cost, &speeds)
+                .iter()
+                .map(|r| r.computation_time)
+                .collect::<Vec<_>>(),
+        );
+        let line = rendered
+            .lines()
+            .find(|l| {
+                let mut it = l.split_whitespace();
+                it.next() == Some(&n.to_string()) && it.next() == Some("linear_ramp")
+            })
+            .unwrap_or_else(|| panic!("no linear_ramp row for N={n}:\n{rendered}"));
+        let cell = line.split_whitespace().nth(2).unwrap();
+        assert_eq!(cell, format!("{golden:.4}"), "N={n}: {line}");
+    }
+}
+
+#[test]
+fn scenario_toml_files_execute_like_builders() {
+    // A scenario written to TOML, re-parsed, and run must reproduce the
+    // in-memory scenario's outcome exactly.
+    let cfg = ExperimentConfig { trials: 4, ns: vec![20, 40], ..Default::default() };
+    let sc = figures::fig2_scenario(&cfg, cfg.job, 40);
+    let reparsed = Scenario::from_toml(&sc.to_toml()).unwrap();
+    let a = sc.run().unwrap();
+    let b = reparsed.run().unwrap();
+    for (x, y) in a.per_scheme.iter().zip(&b.per_scheme) {
+        assert_eq!(
+            x.metric_values(Metric::Finishing),
+            y.metric_values(Metric::Finishing),
+            "{} diverged after TOML round trip",
+            x.scheme
+        );
+    }
+}
