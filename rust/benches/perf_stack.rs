@@ -252,6 +252,38 @@ fn main() {
         report.push(&r, &[("n", n as f64)]);
     }
 
+    println!("\n-- cluster engine: event-driven coordinator, latency-only workers --");
+    // The real reactor + worker threads + sharded ledger at sweep-scale N,
+    // with subtask gemms replaced by their (scaled) cost-model sleeps: the
+    // row tracks protocol/ledger overhead, not numerics. Quick mode trims
+    // the fleet (640 thread spawns per sample cost tens of ms).
+    let cluster_n = if hcec::bench::quick_mode() { 160 } else { 640 };
+    let cluster_sc = Scenario::builder(&format!("bench_cluster_sim_n{cluster_n}"))
+        .engine(Engine::Cluster)
+        .job(job)
+        .fleet(cluster_n, cluster_n)
+        .schemes(vec![SchemeConfig::Cec { k: 10, s: 20 }])
+        .cluster(hcec::scenario::ClusterSpec {
+            backend: hcec::scenario::ClusterBackendSpec::SimulatedLatency,
+            time_scale: 0.05,
+            preempt_after_first: 0,
+        })
+        .trials(1)
+        .seed(11)
+        .build()
+        .expect("valid cluster bench scenario");
+    let r = Bench::new(format!("cluster sim cec n{cluster_n} x1"))
+        .samples(3, 50)
+        .run(|| cluster_sc.run().expect("fixed-fleet cluster cannot fail"));
+    r.print();
+    // Completions credited per run: every set needs K = 10.
+    let events = (cluster_n * 10) as f64;
+    println!("    -> {:.2e} protocol events/s", events_per_sec(&r, events));
+    report.push(
+        &r,
+        &[("n", cluster_n as f64), ("protocol_events_per_sec", events_per_sec(&r, events))],
+    );
+
     if artifacts_available() {
         println!("\n-- PJRT execute latency (compiled-once artifacts) --");
         let mut rt = Runtime::open(default_artifact_dir()).unwrap();

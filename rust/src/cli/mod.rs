@@ -3,6 +3,7 @@
 //!
 //! ```text
 //! hcec run <scenario.toml> [--csv DIR]
+//! hcec cluster [--ns 40,160,640] [--rate R] [--trials N] [--scale S]
 //! hcec figure <1|2a|2b|2c|2d|all> [--config F] [--csv DIR] [--trials N]
 //! hcec run [--scheme cec|mlcec|bicec] [--backend native|pjrt]
 //!          [--n N] [--preempt P] [--seed S]
@@ -33,6 +34,7 @@ fn known_flags(command: &str) -> Option<&'static [&'static str]> {
         "trace" => Some(&["config", "trials", "seed", "csv", "rate", "file"]),
         "sweep" => Some(&["config", "trials", "seed", "csv", "slowdowns", "probs"]),
         "scaling" => Some(&["config", "trials", "seed", "csv", "ns", "rate"]),
+        "cluster" => Some(&["config", "trials", "seed", "csv", "ns", "rate", "scale"]),
         "reassign" => Some(&["config", "trials", "seed", "csv", "rate"]),
         "serve" => Some(&["scheme", "backend", "jobs"]),
         "visualize" | "calibrate" | "help" => Some(&[]),
@@ -65,6 +67,7 @@ pub fn dispatch(argv: &[String]) -> i32 {
         Some("trace") => commands::trace(&args),
         Some("sweep") => commands::sweep(&args),
         Some("scaling") => commands::scaling(&args),
+        Some("cluster") => commands::cluster(&args),
         Some("dlevels") => commands::dlevels(&args),
         Some("serve") => commands::serve(&args),
         Some("hierarchy") => commands::hierarchy(&args),
@@ -111,6 +114,11 @@ USAGE:
       Large-N scenario sweep: static + elastic-trace computation means
       with fleet-proportional churn (R events per node per horizon),
       on the deterministic parallel Monte-Carlo engine (HCEC_THREADS).
+  hcec cluster [--ns 40,160,640] [--rate R] [--trials N] [--scale S]
+      Service-layer N-sweep on the event-driven cluster core: real
+      reactor, channels and worker threads with SimulatedLatency
+      subtasks (cost-model seconds x S of wall sleep) and mid-job
+      Poisson churn absorbed by TAS re-allocation.
   hcec dlevels [--trials N]
       MLCEC d-level policy ablation (Ext-T2).
   hcec reassign [--rate R] [--trials N]

@@ -1,0 +1,170 @@
+//! Pluggable worker execution backends for the cluster core.
+//!
+//! | backend            | numerics | what `execute` does                      |
+//! |--------------------|----------|------------------------------------------|
+//! | [`NativeGemm`]     | yes      | single-thread blocked gemm (always on)   |
+//! | [`PjrtWorker`]     | yes      | AOT PJRT artifact via `runtime::Runtime` (`pjrt` feature; stub otherwise) |
+//! | [`SimulatedLatency`]| no      | sleeps the cost-model subtask time, returns no bytes |
+//!
+//! [`SimulatedLatency`] is what lets the *real* coordinator — real
+//! threads, real channels, real reactor — be driven honestly at N up to
+//! 2560, mirroring the simulation-side sweeps: the protocol, ledger and
+//! re-allocation paths all run for real, only the gemm is replaced by its
+//! cost-model duration (scaled by `time_scale` so big fleets finish in
+//! test time).
+//!
+//! [`WorkerBackend`] is object-safe; instances are built *inside* the
+//! worker thread from a cloneable [`BackendSpec`] (PJRT client handles are
+//! not `Send`).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::{gemm_single_thread, Matrix};
+use crate::runtime::Runtime;
+
+/// One worker's execution engine. `execute` computes `block @ b` and
+/// returns the product rows, or models the latency and returns `None`.
+pub trait WorkerBackend: Send {
+    fn name(&self) -> &'static str;
+    fn execute(&mut self, group: usize, block: &Matrix, b: &Matrix)
+        -> Result<Option<Vec<f32>>>;
+}
+
+/// Native blocked gemm, forced single-thread: the cluster already runs one
+/// OS thread per worker slot, and nested gemm fan-out would oversubscribe
+/// the machine and distort the straggler-emulation sleep.
+pub struct NativeGemm;
+
+impl WorkerBackend for NativeGemm {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn execute(&mut self, _group: usize, block: &Matrix, b: &Matrix)
+        -> Result<Option<Vec<f32>>> {
+        Ok(Some(gemm_single_thread(block, b).into_vec()))
+    }
+}
+
+/// AOT-compiled PJRT artifact execution. Requires `make artifacts` and a
+/// build with the `pjrt` cargo feature; in stub builds `Runtime::open`
+/// fails with a descriptive error.
+pub struct PjrtWorker {
+    runtime: Runtime,
+    artifact: String,
+}
+
+impl PjrtWorker {
+    pub fn open(dir: &std::path::Path, artifact: &str) -> Result<Self> {
+        Ok(Self { runtime: Runtime::open(dir)?, artifact: artifact.to_string() })
+    }
+}
+
+impl WorkerBackend for PjrtWorker {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn execute(&mut self, _group: usize, block: &Matrix, b: &Matrix)
+        -> Result<Option<Vec<f32>>> {
+        let product = self
+            .runtime
+            .matmul(&self.artifact, block, b)
+            .map_err(|e| anyhow!("artifact {}: {e}", self.artifact))?;
+        Ok(Some(product.into_vec()))
+    }
+}
+
+/// Latency-only backend: each subtask sleeps its cost-model duration
+/// (unstraggled; the worker loop's multiplier sleep adds the straggling on
+/// top, exactly as for numeric backends) and returns no bytes.
+pub struct SimulatedLatency {
+    delay: Duration,
+}
+
+impl SimulatedLatency {
+    /// `subtask_secs` is the unstraggled cost-model subtask time already
+    /// scaled into wall-clock seconds (see `BackendSpec::Simulated`).
+    pub fn new(subtask_secs: f64) -> Self {
+        assert!(subtask_secs >= 0.0 && subtask_secs.is_finite());
+        Self { delay: Duration::from_secs_f64(subtask_secs) }
+    }
+}
+
+impl WorkerBackend for SimulatedLatency {
+    fn name(&self) -> &'static str {
+        "simulated_latency"
+    }
+
+    fn execute(&mut self, _group: usize, _block: &Matrix, _b: &Matrix)
+        -> Result<Option<Vec<f32>>> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        Ok(None)
+    }
+}
+
+/// Cloneable, `Send + Sync` description of a backend, turned into a
+/// [`WorkerBackend`] inside each worker thread.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BackendSpec {
+    Native,
+    Pjrt { artifact: String, dir: PathBuf },
+    /// `subtask_secs` = unstraggled wall seconds per subtask (cost-model
+    /// time × the scenario's `time_scale`).
+    Simulated { subtask_secs: f64 },
+}
+
+impl BackendSpec {
+    /// True when `execute` returns real product bytes (so the master must
+    /// encode inputs and decode the result).
+    pub fn is_numeric(&self) -> bool {
+        !matches!(self, BackendSpec::Simulated { .. })
+    }
+
+    pub fn make_worker(&self, _slot: usize) -> Result<Box<dyn WorkerBackend>> {
+        match self {
+            BackendSpec::Native => Ok(Box::new(NativeGemm)),
+            BackendSpec::Pjrt { artifact, dir } => {
+                Ok(Box::new(PjrtWorker::open(dir, artifact)?))
+            }
+            BackendSpec::Simulated { subtask_secs } => {
+                Ok(Box::new(SimulatedLatency::new(*subtask_secs)))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::default_rng;
+
+    #[test]
+    fn native_backend_matches_gemm() {
+        let mut rng = default_rng(8);
+        let block = Matrix::random(3, 12, &mut rng);
+        let b = Matrix::random(12, 5, &mut rng);
+        let mut backend = BackendSpec::Native.make_worker(0).unwrap();
+        assert_eq!(backend.name(), "native");
+        let out = backend.execute(0, &block, &b).unwrap().unwrap();
+        assert_eq!(out, gemm_single_thread(&block, &b).into_vec());
+    }
+
+    #[test]
+    fn simulated_backend_returns_no_bytes_and_sleeps() {
+        let mut backend =
+            BackendSpec::Simulated { subtask_secs: 0.01 }.make_worker(0).unwrap();
+        let empty = Matrix::zeros(0, 0);
+        let t0 = std::time::Instant::now();
+        let out = backend.execute(7, &empty, &empty).unwrap();
+        assert!(out.is_none());
+        assert!(t0.elapsed().as_secs_f64() >= 0.009, "delay not injected");
+        assert!(!BackendSpec::Simulated { subtask_secs: 0.01 }.is_numeric());
+        assert!(BackendSpec::Native.is_numeric());
+    }
+}

@@ -1,0 +1,323 @@
+//! `RecoveryLedger` — the cluster core's completion accounting, sharded
+//! per coding group.
+//!
+//! Semantically a facade over [`RecoveryTracker`]: same `record` /
+//! `is_complete` / `progress` / contributor queries, same arrival-order
+//! lists (the decoder consumes them verbatim). The difference is the data
+//! layout: one shard per coding group, each with an O(1) membership set,
+//! plus a running `groups_done` counter — so every event costs O(1)
+//! regardless of fleet size. The monolithic tracker pays an O(k) slot scan
+//! per PerSet event; at the cluster engine's N = 2560 sweeps (2560 groups,
+//! ~51k completions) that scan is the difference between a reactor that
+//! keeps up with its event channel and one that falls behind.
+//!
+//! Agreement with `RecoveryTracker` on arbitrary event orders is
+//! property-tested below (`prop_ledger_agrees_with_tracker`).
+
+use std::collections::HashSet;
+
+use crate::tas::RecoveryRule;
+
+/// One coding group's completion state.
+#[derive(Debug, Default)]
+struct GroupShard {
+    /// Contributors in arrival order: slots (PerSet) or subtask ids
+    /// (Global) — exactly what the decoder wants.
+    contributors: Vec<usize>,
+    /// O(1) duplicate check over `contributors`.
+    seen: HashSet<usize>,
+}
+
+/// Sharded completion ledger for one job.
+#[derive(Debug)]
+pub struct RecoveryLedger {
+    rule: RecoveryRule,
+    /// PerSet: one shard per set. Global: a single shard whose
+    /// contributors are encoded-subtask ids.
+    shards: Vec<GroupShard>,
+    /// PerSet: shards that reached `k`.
+    groups_done: usize,
+    /// Completions that earned credit (excludes duplicates/overflow).
+    credited: usize,
+}
+
+impl RecoveryLedger {
+    pub fn new(rule: RecoveryRule) -> Self {
+        let n_shards = match rule {
+            RecoveryRule::PerSet { sets, .. } => sets,
+            RecoveryRule::Global { .. } => 1,
+        };
+        Self {
+            rule,
+            shards: (0..n_shards).map(|_| GroupShard::default()).collect(),
+            groups_done: 0,
+            credited: 0,
+        }
+    }
+
+    pub fn rule(&self) -> RecoveryRule {
+        self.rule
+    }
+
+    /// Record a completion; mirrors `RecoveryTracker::record` exactly.
+    /// PerSet: `group` is the set index, `slot` the code row. Global:
+    /// `group` is the encoded-subtask id (slot ignored). Returns true iff
+    /// this completion *newly* satisfied the whole rule. Idempotent per
+    /// (slot, group): duplicates earn no credit.
+    pub fn record(&mut self, slot: usize, group: usize) -> bool {
+        if self.is_complete() {
+            return false;
+        }
+        match self.rule {
+            RecoveryRule::PerSet { sets, k } => {
+                assert!(group < sets, "set {group} out of range");
+                let shard = &mut self.shards[group];
+                if shard.contributors.len() >= k || !shard.seen.insert(slot) {
+                    return false; // redundant completion
+                }
+                shard.contributors.push(slot);
+                self.credited += 1;
+                if shard.contributors.len() == k {
+                    self.groups_done += 1;
+                }
+                self.groups_done == sets
+            }
+            RecoveryRule::Global { k } => {
+                let shard = &mut self.shards[0];
+                if !shard.seen.insert(group) {
+                    return false;
+                }
+                shard.contributors.push(group);
+                self.credited += 1;
+                shard.contributors.len() == k
+            }
+        }
+    }
+
+    pub fn is_complete(&self) -> bool {
+        match self.rule {
+            RecoveryRule::PerSet { sets, .. } => self.groups_done == sets,
+            RecoveryRule::Global { k } => self.shards[0].contributors.len() >= k,
+        }
+    }
+
+    /// Credited completions for `group` (PerSet; Global: total ids).
+    pub fn have(&self, group: usize) -> usize {
+        match self.rule {
+            RecoveryRule::PerSet { .. } => self.shards[group].contributors.len(),
+            RecoveryRule::Global { .. } => self.shards[0].contributors.len(),
+        }
+    }
+
+    /// True once `group`'s own threshold is met (PerSet; Global: the rule).
+    pub fn group_complete(&self, group: usize) -> bool {
+        match self.rule {
+            RecoveryRule::PerSet { k, .. } => self.shards[group].contributors.len() >= k,
+            RecoveryRule::Global { k } => self.shards[0].contributors.len() >= k,
+        }
+    }
+
+    /// Total credited completions across groups.
+    pub fn credited(&self) -> usize {
+        self.credited
+    }
+
+    /// Fraction of the rule satisfied — same definition as the tracker.
+    pub fn progress(&self) -> f64 {
+        match self.rule {
+            RecoveryRule::PerSet { sets, k } => {
+                self.credited as f64 / (sets * k) as f64
+            }
+            RecoveryRule::Global { k } => {
+                (self.shards[0].contributors.len() as f64 / k as f64).min(1.0)
+            }
+        }
+    }
+
+    /// Slots that satisfied set `m` (PerSet only), arrival order.
+    pub fn set_contributors(&self, m: usize) -> &[usize] {
+        &self.shards[m].contributors
+    }
+
+    /// Ids that satisfied the global rule, arrival order.
+    pub fn global_ids(&self) -> &[usize] {
+        &self.shards[0].contributors
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::recovery::RecoveryTracker;
+    use crate::prop;
+
+    #[test]
+    fn per_set_matches_tracker_on_fixed_sequence() {
+        let rule = RecoveryRule::PerSet { sets: 2, k: 2 };
+        let mut ledger = RecoveryLedger::new(rule);
+        let mut tracker = RecoveryTracker::new(rule);
+        for (slot, set) in [(0, 0), (1, 0), (3, 1), (2, 1)] {
+            assert_eq!(ledger.record(slot, set), tracker.record(slot, set));
+        }
+        assert!(ledger.is_complete());
+        assert_eq!(ledger.set_contributors(0), tracker.set_contributors(0));
+        assert_eq!(ledger.set_contributors(1), tracker.set_contributors(1));
+    }
+
+    #[test]
+    fn global_matches_tracker_and_dedups_ids() {
+        let rule = RecoveryRule::Global { k: 3 };
+        let mut ledger = RecoveryLedger::new(rule);
+        let mut tracker = RecoveryTracker::new(rule);
+        for (slot, id) in [(0, 10), (1, 10), (0, 11), (2, 12)] {
+            assert_eq!(ledger.record(slot, id), tracker.record(slot, id));
+        }
+        assert_eq!(ledger.global_ids(), tracker.global_ids());
+        assert_eq!(ledger.global_ids(), &[10, 11, 12]);
+    }
+
+    // Satellite: `record` is idempotent per (slot, group) — replaying a
+    // completion never adds credit, never flips completion twice.
+    #[test]
+    fn prop_record_idempotent_per_slot_group() {
+        prop::check(40, |g| {
+            let sets = g.usize_in(1, 6);
+            let k = g.usize_in(1, 4);
+            let rule = if g.bool() {
+                RecoveryRule::PerSet { sets, k }
+            } else {
+                RecoveryRule::Global { k: g.usize_in(1, 12) }
+            };
+            let mut ledger = RecoveryLedger::new(rule);
+            let n_groups = match rule {
+                RecoveryRule::PerSet { sets, .. } => sets,
+                RecoveryRule::Global { .. } => 16,
+            };
+            let events: Vec<(usize, usize)> = (0..g.usize_in(1, 40))
+                .map(|_| (g.usize_in(0, 9), g.usize_in(0, n_groups - 1)))
+                .collect();
+            for &(slot, group) in &events {
+                let first = ledger.record(slot, group);
+                let progress_after = ledger.progress();
+                let complete_after = ledger.is_complete();
+                // Immediate replay: no credit, no state change.
+                if ledger.record(slot, group) {
+                    return Err(format!("replay of ({slot}, {group}) newly completed"));
+                }
+                if ledger.progress() != progress_after
+                    || ledger.is_complete() != complete_after
+                {
+                    return Err(format!("replay of ({slot}, {group}) changed state"));
+                }
+                if first && !complete_after {
+                    return Err("record returned true but is_complete is false".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    // Satellite: `progress()` is monotone over any event sequence, and
+    // reaches 1.0 exactly when the rule is satisfied.
+    #[test]
+    fn prop_progress_monotone() {
+        prop::check(40, |g| {
+            let sets = g.usize_in(1, 5);
+            let k = g.usize_in(1, 4);
+            let rule = if g.bool() {
+                RecoveryRule::PerSet { sets, k }
+            } else {
+                RecoveryRule::Global { k: g.usize_in(1, 10) }
+            };
+            let n_groups = match rule {
+                RecoveryRule::PerSet { sets, .. } => sets,
+                RecoveryRule::Global { .. } => 12,
+            };
+            let mut ledger = RecoveryLedger::new(rule);
+            let mut last = 0.0f64;
+            for _ in 0..g.usize_in(1, 80) {
+                ledger.record(g.usize_in(0, 7), g.usize_in(0, n_groups - 1));
+                let p = ledger.progress();
+                if p < last {
+                    return Err(format!("progress dropped {last} -> {p}"));
+                }
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("progress {p} outside [0, 1]"));
+                }
+                if ledger.is_complete() && p < 1.0 {
+                    return Err(format!("complete at progress {p} < 1"));
+                }
+                last = p;
+            }
+            Ok(())
+        });
+    }
+
+    // Satellite: the sharded ledger agrees with the monolithic tracker on
+    // random event orders — record return values, completion state,
+    // progress, and the arrival-order contributor lists.
+    #[test]
+    fn prop_ledger_agrees_with_tracker() {
+        prop::check(60, |g| {
+            let per_set = g.bool();
+            let (rule, n_groups, n_slots) = if per_set {
+                let sets = g.usize_in(1, 8);
+                let k = g.usize_in(1, 5);
+                (RecoveryRule::PerSet { sets, k }, sets, g.usize_in(1, 10))
+            } else {
+                let k = g.usize_in(1, 15);
+                (RecoveryRule::Global { k }, 24, g.usize_in(1, 10))
+            };
+            let mut ledger = RecoveryLedger::new(rule);
+            let mut tracker = RecoveryTracker::new(rule);
+            let mut events: Vec<(usize, usize)> = (0..g.usize_in(0, 120))
+                .map(|_| (g.usize_in(0, n_slots - 1), g.usize_in(0, n_groups - 1)))
+                .collect();
+            g.shuffle(&mut events);
+            for (i, &(slot, group)) in events.iter().enumerate() {
+                let a = ledger.record(slot, group);
+                let b = tracker.record(slot, group);
+                if a != b {
+                    return Err(format!("event {i} ({slot},{group}): record {a} vs {b}"));
+                }
+                if ledger.is_complete() != tracker.is_complete() {
+                    return Err(format!("event {i}: completion state diverged"));
+                }
+                if (ledger.progress() - tracker.progress()).abs() > 1e-12 {
+                    return Err(format!(
+                        "event {i}: progress {} vs {}",
+                        ledger.progress(),
+                        tracker.progress()
+                    ));
+                }
+            }
+            match rule {
+                RecoveryRule::PerSet { sets, .. } => {
+                    for m in 0..sets {
+                        if ledger.set_contributors(m) != tracker.set_contributors(m) {
+                            return Err(format!("set {m} contributor order diverged"));
+                        }
+                    }
+                }
+                RecoveryRule::Global { .. } => {
+                    if ledger.global_ids() != tracker.global_ids() {
+                        return Err("global id order diverged".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn group_complete_and_have_track_thresholds() {
+        let mut ledger = RecoveryLedger::new(RecoveryRule::PerSet { sets: 2, k: 2 });
+        assert!(!ledger.group_complete(0));
+        ledger.record(4, 0);
+        assert_eq!(ledger.have(0), 1);
+        ledger.record(5, 0);
+        assert!(ledger.group_complete(0));
+        assert!(!ledger.is_complete());
+        assert_eq!(ledger.credited(), 2);
+    }
+}

@@ -1,0 +1,1117 @@
+//! The event-driven cluster core: a deterministic reactor loop over the
+//! typed [`Command`]/[`Event`] protocol, replacing `run_job`'s inlined
+//! collect loop. `coordinator::run_job` and `coordinator::serve` are thin
+//! facades over [`run_cluster_job`].
+//!
+//! What the redesign buys (ROADMAP "sharded master, async coordinator,
+//! multi-backend workers"):
+//!
+//! * **Mid-job elasticity** — joins and leaves from an [`ElasticTrace`]
+//!   are absorbed *inside* a running job: a leave preempts its worker
+//!   (short notice — the in-flight subtask finishes), a join spawns a
+//!   worker whose to-do list is the paper's task-allocation answer for its
+//!   slot, and the reactor re-filters the fleet's pending queues against
+//!   the [`RecoveryLedger`] ([`Command::Reassign`]). The legacy engine
+//!   could only preempt (one flag) or re-allocate between jobs.
+//! * **Pluggable execution** — [`WorkerBackend`] (native gemm, PJRT, or
+//!   [`SimulatedLatency`]); the latency backend drives the *real* reactor,
+//!   channels and ledger at N up to 2560 without materialising numerics,
+//!   mirroring the simulation-side N-sweeps.
+//! * **O(1) completion accounting** — the per-group-sharded ledger plus
+//!   incremental holder counts keep every event constant-time at sweep
+//!   scale.
+//!
+//! One deliberate modelling split (DESIGN.md §Substitutions): the real
+//! cluster freezes the *set geometry* at encode time — elastic events
+//! re-allocate which worker computes which group, never the subdivision
+//! itself. Cross-granularity work retention (re-splitting subtasks at a
+//! new N) is the elastic DES's territory (`sim::elastic`), where rows are
+//! virtual and intervals are exact.
+
+mod backend;
+mod ledger;
+mod protocol;
+
+pub use backend::{BackendSpec, NativeGemm, PjrtWorker, SimulatedLatency, WorkerBackend};
+pub use ledger::RecoveryLedger;
+pub use protocol::{spawn_cluster_worker, ClusterWorker, Command, Event};
+
+use std::collections::HashSet;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::codes::RealMdsCode;
+use crate::linalg::{combine_into_rows, gemm, split_rows, stack_rows, Matrix};
+use crate::rng::default_rng;
+use crate::runtime::{artifacts_available, default_artifact_dir, Runtime};
+use crate::scenario::SchemeConfig;
+use crate::sim::{CostModel, ElasticEvent, ElasticTrace, EventKind, SpeedModel, WorkerSpeeds};
+use crate::tas::{RecoveryRule, Scheme};
+use crate::workload::JobSpec;
+
+use protocol::WorkerTask;
+
+/// Which execution engine the cluster's workers run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClusterBackend {
+    /// Native blocked gemm (always available).
+    Native,
+    /// AOT PJRT artifacts (`make artifacts` + the `pjrt` cargo feature).
+    Pjrt,
+    /// Latency-only workers: each subtask sleeps its cost-model time
+    /// scaled by `time_scale` wall-seconds per cost-model second. Trace
+    /// event times are on the same (cost-model) clock.
+    Simulated { time_scale: f64 },
+}
+
+/// Where per-slot speed multipliers come from.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpeedSource {
+    Uniform,
+    Model(SpeedModel),
+    Explicit(Vec<f64>),
+}
+
+/// Mid-job elasticity for one cluster job.
+#[derive(Clone, Debug)]
+pub enum ClusterElasticity {
+    /// No mid-job events.
+    Fixed,
+    /// Timed join/leave events applied while the job runs. Event times are
+    /// seconds from computation start: wall-clock for numeric backends,
+    /// cost-model seconds (scaled by `time_scale`) for the simulated one.
+    Trace(ElasticTrace),
+}
+
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub job: JobSpec,
+    pub scheme: SchemeConfig,
+    /// Slots the code is sized for.
+    pub n_max: usize,
+    /// Active workers at start (slots `0..n_workers`).
+    pub n_workers: usize,
+    pub backend: ClusterBackend,
+    pub speed: SpeedSource,
+    /// Drives the simulated backend's per-subtask latency.
+    pub cost: CostModel,
+    pub elasticity: ClusterElasticity,
+    /// Legacy knob: preempt this many workers (highest slots) after each
+    /// ships one completion.
+    pub preempt_after_first: usize,
+    pub seed: u64,
+}
+
+impl ClusterConfig {
+    /// A native fixed-fleet job — the `run_job` shape.
+    pub fn fixed(job: JobSpec, scheme: SchemeConfig, n_max: usize, n_workers: usize) -> Self {
+        Self {
+            job,
+            scheme,
+            n_max,
+            n_workers,
+            backend: ClusterBackend::Native,
+            speed: SpeedSource::Uniform,
+            cost: CostModel::paper_default(),
+            elasticity: ClusterElasticity::Fixed,
+            preempt_after_first: 0,
+            seed: 0,
+        }
+    }
+}
+
+/// What one cluster job reports. `JobReport` (the `run_job` facade) is a
+/// field-for-field projection of this.
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    pub scheme: &'static str,
+    pub encode_wall: f64,
+    pub computation_wall: f64,
+    pub decode_wall: f64,
+    pub completions_received: usize,
+    pub completions_used: usize,
+    /// Workers preempted by the `preempt_after_first` knob.
+    pub workers_preempted: usize,
+    /// Elastic joins absorbed mid-job.
+    pub joins: usize,
+    /// Elastic leaves absorbed mid-job.
+    pub leaves: usize,
+    /// Credited completions delivered by mid-job joiners.
+    pub joiner_completions: usize,
+    pub max_rel_err: f32,
+    pub recovered: bool,
+    /// Human-readable protocol milestones (elastic events, preemptions,
+    /// decode), capped at [`TIMELINE_CAP`] entries.
+    pub timeline: Vec<String>,
+}
+
+impl ClusterReport {
+    pub fn finishing_wall(&self) -> f64 {
+        self.computation_wall + self.decode_wall
+    }
+
+    /// Elastic events absorbed inside the job.
+    pub fn elastic_events(&self) -> usize {
+        self.joins + self.leaves
+    }
+}
+
+const TIMELINE_CAP: usize = 256;
+/// Worker thread stacks: the latency backend only sleeps and formats, so
+/// N = 2560 fleets stay cheap; numeric workers get room for gemm frames.
+const SIM_STACK_KIB: usize = 256;
+const NUMERIC_STACK_KIB: usize = 4096;
+
+/// Run one coded job end to end on the event-driven cluster.
+pub fn run_cluster_job(cfg: &ClusterConfig) -> Result<ClusterReport> {
+    let scheme = cfg.scheme.build(cfg.n_max);
+    let n = cfg.n_workers;
+    ensure!(
+        n >= 1 && n <= cfg.n_max,
+        "n_workers = {n} outside [1, n_max = {}]",
+        cfg.n_max
+    );
+    if let ClusterElasticity::Trace(trace) = &cfg.elasticity {
+        trace.validate().map_err(|e| anyhow!("elastic trace: {e}"))?;
+        ensure!(
+            trace.n_max == cfg.n_max,
+            "elastic trace has n_max = {} but the cluster has n_max = {}",
+            trace.n_max,
+            cfg.n_max
+        );
+        ensure!(
+            trace.n_initial == n,
+            "elastic trace starts with {} workers but the cluster spawns {n}",
+            trace.n_initial
+        );
+    }
+    let JobSpec { u, w, v } = cfg.job;
+    let alloc = scheme.allocate(n);
+    let rule = alloc.rule;
+    let bicec_s_per = match &cfg.scheme {
+        SchemeConfig::Bicec { s_per_worker, .. } => Some(*s_per_worker),
+        _ => None,
+    };
+    let scheme_s = match &cfg.scheme {
+        SchemeConfig::Cec { s, .. } | SchemeConfig::Mlcec { s, .. } => *s,
+        SchemeConfig::Hetero { s_avg, .. } => *s_avg,
+        SchemeConfig::Bicec { s_per_worker, .. } => *s_per_worker,
+    };
+
+    // --- inputs, speeds, encode (numeric backends only) ------------------
+    let mut rng = default_rng(cfg.seed);
+    let numeric = !matches!(cfg.backend, ClusterBackend::Simulated { .. });
+    let mut encode_wall = 0.0;
+    let (enc, a) = if numeric {
+        // Same stream order as the legacy run_job: operands, then speeds.
+        let (a, b) = cfg.job.generate(&mut rng);
+        let t_enc = Instant::now();
+        let (code, total_rows) = match &cfg.scheme {
+            SchemeConfig::Bicec { k, s_per_worker } => {
+                (RealMdsCode::new(s_per_worker * cfg.n_max, *k), u / *k)
+            }
+            _ => (RealMdsCode::new(cfg.n_max, scheme.k()), u / scheme.k()),
+        };
+        ensure!(
+            u % code.k() == 0,
+            "u={u} must divide by K={} (pad upstream)",
+            code.k()
+        );
+        let data_blocks = split_rows(&a, code.k());
+        let rows_per_item = match rule {
+            RecoveryRule::PerSet { sets, .. } => {
+                ensure!(
+                    total_rows % sets == 0,
+                    "task rows {total_rows} not divisible into {sets} subtasks"
+                );
+                total_rows / sets
+            }
+            RecoveryRule::Global { .. } => total_rows,
+        };
+        let mut ctx = EncodeCtx {
+            code,
+            data_blocks,
+            b: Arc::new(b),
+            rows_per_item,
+            bicec_s_per,
+            encoded: vec![None; cfg.n_max],
+        };
+        for slot in 0..n {
+            ctx.encoded_for(slot);
+        }
+        encode_wall = t_enc.elapsed().as_secs_f64();
+        (Some(ctx), Some(a))
+    } else {
+        (None, None)
+    };
+    let speeds = match &cfg.speed {
+        SpeedSource::Model(m) => WorkerSpeeds::sample(m, cfg.n_max, &mut rng),
+        SpeedSource::Uniform => WorkerSpeeds::uniform(cfg.n_max),
+        SpeedSource::Explicit(mult) => {
+            ensure!(
+                mult.len() == cfg.n_max,
+                "{} explicit speeds for n_max = {}",
+                mult.len(),
+                cfg.n_max
+            );
+            WorkerSpeeds::from_vec(mult.clone())
+        }
+    };
+
+    // --- backend spec (fails early for missing PJRT artifacts) -----------
+    let (backend_spec, time_scale, stack_kib) = match &cfg.backend {
+        ClusterBackend::Native => (BackendSpec::Native, 1.0, NUMERIC_STACK_KIB),
+        ClusterBackend::Pjrt => {
+            let ctx = enc.as_ref().expect("pjrt is a numeric backend");
+            ensure!(
+                artifacts_available(),
+                "PJRT backend requires `make artifacts` AND a build with the \
+                 `pjrt` cargo feature (artifacts_available() reports false \
+                 in stub builds even when the manifest exists)"
+            );
+            let dir = default_artifact_dir();
+            let probe = Runtime::open(&dir)?;
+            let name = probe
+                .find_by_inputs(&[&[ctx.rows_per_item, w], &[w, v]])
+                .ok_or_else(|| {
+                    anyhow!(
+                        "no artifact for subtask shape ({},{w})x({w},{v}); \
+                         regenerate with the matching aot.py preset",
+                        ctx.rows_per_item
+                    )
+                })?
+                .to_string();
+            (BackendSpec::Pjrt { artifact: name, dir }, 1.0, NUMERIC_STACK_KIB)
+        }
+        ClusterBackend::Simulated { time_scale } => {
+            ensure!(
+                *time_scale > 0.0 && time_scale.is_finite(),
+                "time_scale = {time_scale} must be finite and positive"
+            );
+            let subtask_secs =
+                cfg.cost.worker_time(scheme.subtask_ops(u, w, v, n), 1.0) * time_scale;
+            (BackendSpec::Simulated { subtask_secs }, *time_scale, SIM_STACK_KIB)
+        }
+    };
+
+    // --- reactor ----------------------------------------------------------
+    let events = match &cfg.elasticity {
+        ClusterElasticity::Fixed => Vec::new(),
+        ClusterElasticity::Trace(t) => t.events.clone(),
+    };
+    let (evt_tx, evt_rx) = std::sync::mpsc::channel();
+    let mut reactor = Reactor {
+        rule,
+        ledger: RecoveryLedger::new(rule),
+        slots: (0..cfg.n_max).map(|_| None).collect(),
+        finished: Vec::new(),
+        holders: match rule {
+            RecoveryRule::PerSet { sets, .. } => vec![0; sets],
+            RecoveryRule::Global { .. } => Vec::new(),
+        },
+        pending_total: 0,
+        delivered: HashSet::new(),
+        payloads: Vec::new(),
+        received: 0,
+        preempted: 0,
+        joins: 0,
+        leaves: 0,
+        joiner_credits: 0,
+        seen_first: HashSet::new(),
+        deferred_joins: Vec::new(),
+        live: 0,
+        timeline: Vec::new(),
+        evt_tx,
+        evt_rx,
+        speeds,
+        backend_spec,
+        stack_kib,
+        numeric,
+        enc,
+        events,
+        ev_idx: 0,
+        time_scale,
+        n_initial: n,
+        preempt_after_first: cfg.preempt_after_first,
+        scheme_s,
+        bicec_s_per,
+        t_comp: Instant::now(),
+    };
+    for (slot, list) in alloc.lists.iter().enumerate() {
+        let groups: Vec<usize> = list.iter().map(|item| item.group).collect();
+        reactor.spawn(slot, groups, false);
+    }
+    reactor.note(format!(
+        "assigned {} workers ({} backend, rule {:?})",
+        n,
+        match &cfg.backend {
+            ClusterBackend::Native => "native",
+            ClusterBackend::Pjrt => "pjrt",
+            ClusterBackend::Simulated { .. } => "simulated_latency",
+        },
+        rule
+    ));
+    let outcome = reactor.run();
+    reactor.shutdown();
+    let computation_wall = outcome?;
+
+    // --- decode + verify (numeric backends only) --------------------------
+    let (decode_wall, max_rel_err) = if let (Some(ctx), Some(a)) = (&reactor.enc, &a) {
+        let t_dec = Instant::now();
+        let recovered_a_b = decode(
+            &ctx.code,
+            &reactor.ledger,
+            &reactor.payloads,
+            u,
+            v,
+            ctx.rows_per_item,
+        )?;
+        let decode_wall = t_dec.elapsed().as_secs_f64();
+        let baseline = gemm(a, &ctx.b);
+        let scale = baseline.max_abs().max(1.0);
+        let err = recovered_a_b.max_abs_diff(&baseline) / scale;
+        reactor.note(format!(
+            "t={computation_wall:.4} {}",
+            Event::Decoded { decode_wall, max_rel_err: err as f64 }.describe()
+        ));
+        (decode_wall, err)
+    } else {
+        (0.0, 0.0)
+    };
+
+    Ok(ClusterReport {
+        scheme: cfg.scheme.name(),
+        encode_wall,
+        computation_wall,
+        decode_wall,
+        completions_received: reactor.received,
+        completions_used: match rule {
+            RecoveryRule::PerSet { sets, k } => sets * k,
+            RecoveryRule::Global { k } => k,
+        },
+        workers_preempted: reactor.preempted,
+        joins: reactor.joins,
+        leaves: reactor.leaves,
+        joiner_completions: reactor.joiner_credits,
+        max_rel_err,
+        recovered: true,
+        timeline: std::mem::take(&mut reactor.timeline),
+    })
+}
+
+/// Encode-side context for numeric backends; coded copies are built
+/// eagerly for the starting fleet and on demand for mid-job joiners
+/// (encoding is a pure function of the data, so laziness never changes a
+/// byte).
+struct EncodeCtx {
+    code: RealMdsCode,
+    data_blocks: Vec<Matrix>,
+    b: Arc<Matrix>,
+    rows_per_item: usize,
+    bicec_s_per: Option<usize>,
+    encoded: Vec<Option<Arc<Matrix>>>,
+}
+
+impl EncodeCtx {
+    fn encoded_for(&mut self, slot: usize) -> Arc<Matrix> {
+        if self.encoded[slot].is_none() {
+            let m = match self.bicec_s_per {
+                // BICEC: the slot's s_per_worker coded subtasks, stacked.
+                Some(sp) => {
+                    let blocks: Vec<Matrix> = (slot * sp..(slot + 1) * sp)
+                        .map(|id| self.code.encode_one(&self.data_blocks, id))
+                        .collect();
+                    stack_rows(&blocks)
+                }
+                None => self.code.encode_one(&self.data_blocks, slot),
+            };
+            self.encoded[slot] = Some(Arc::new(m));
+        }
+        self.encoded[slot].as_ref().unwrap().clone()
+    }
+}
+
+/// Per-slot reactor bookkeeping.
+struct SlotEntry {
+    worker: ClusterWorker,
+    /// Master's mirror of the worker's outstanding groups (front may be
+    /// in-flight until its completion arrives).
+    pending: Vec<usize>,
+    /// Why a leave was commanded, for error messages.
+    leaving: Option<String>,
+    joined_mid: bool,
+}
+
+struct Reactor {
+    rule: RecoveryRule,
+    ledger: RecoveryLedger,
+    slots: Vec<Option<SlotEntry>>,
+    finished: Vec<ClusterWorker>,
+    /// PerSet: live pending holders per set (incremental, O(1)/event).
+    holders: Vec<usize>,
+    /// Global: live pending subtasks across the fleet.
+    pending_total: usize,
+    /// (slot, group) pairs already completed — joiner-list filtering.
+    delivered: HashSet<(usize, usize)>,
+    payloads: Vec<((usize, usize), Vec<f32>)>,
+    received: usize,
+    preempted: usize,
+    joins: usize,
+    leaves: usize,
+    joiner_credits: usize,
+    seen_first: HashSet<usize>,
+    /// Joins waiting for the same slot's previous worker to finish leaving.
+    deferred_joins: Vec<(usize, usize)>,
+    live: usize,
+    timeline: Vec<String>,
+    evt_tx: Sender<Event>,
+    evt_rx: Receiver<Event>,
+    speeds: WorkerSpeeds,
+    backend_spec: BackendSpec,
+    stack_kib: usize,
+    numeric: bool,
+    enc: Option<EncodeCtx>,
+    events: Vec<ElasticEvent>,
+    ev_idx: usize,
+    /// Wall seconds per trace-time second.
+    time_scale: f64,
+    n_initial: usize,
+    preempt_after_first: usize,
+    /// Selections per worker — caps a PerSet joiner's list.
+    scheme_s: usize,
+    bicec_s_per: Option<usize>,
+    t_comp: Instant,
+}
+
+impl Reactor {
+    fn note(&mut self, msg: String) {
+        if self.timeline.len() < TIMELINE_CAP {
+            self.timeline.push(msg);
+        } else if self.timeline.len() == TIMELINE_CAP {
+            self.timeline.push("... (timeline truncated)".into());
+        }
+    }
+
+    fn deadline(&self, idx: usize) -> Duration {
+        Duration::from_secs_f64(self.events[idx].time * self.time_scale)
+    }
+
+    fn make_tasks(&self, slot: usize, groups: &[usize]) -> Vec<WorkerTask> {
+        let rpi = self.enc.as_ref().map(|c| c.rows_per_item).unwrap_or(0);
+        groups
+            .iter()
+            .map(|&g| {
+                let rows = if !self.numeric {
+                    0..0
+                } else {
+                    match self.rule {
+                        RecoveryRule::PerSet { .. } => g * rpi..(g + 1) * rpi,
+                        RecoveryRule::Global { .. } => {
+                            // Local offset within the slot's stacked range.
+                            let sp = self.bicec_s_per.expect("global rule is BICEC");
+                            let local = g - slot * sp;
+                            local * rpi..(local + 1) * rpi
+                        }
+                    }
+                };
+                WorkerTask { group: g, rows }
+            })
+            .collect()
+    }
+
+    /// Spawn a worker for `slot` and hand it `groups` via `Assign`.
+    fn spawn(&mut self, slot: usize, groups: Vec<usize>, joined_mid: bool) {
+        let tasks = self.make_tasks(slot, &groups);
+        let (encoded, b) = match self.enc.as_mut() {
+            Some(ctx) => (Some(ctx.encoded_for(slot)), Some(ctx.b.clone())),
+            None => (None, None),
+        };
+        let worker = spawn_cluster_worker(
+            slot,
+            self.backend_spec.clone(),
+            encoded,
+            b,
+            self.speeds.multiplier(slot).max(1.0),
+            self.stack_kib,
+            self.evt_tx.clone(),
+        );
+        worker.send(Command::Assign { tasks });
+        match self.rule {
+            RecoveryRule::PerSet { .. } => {
+                for &g in &groups {
+                    self.holders[g] += 1;
+                }
+            }
+            RecoveryRule::Global { .. } => self.pending_total += groups.len(),
+        }
+        self.slots[slot] =
+            Some(SlotEntry { worker, pending: groups, leaving: None, joined_mid });
+        self.live += 1;
+    }
+
+    /// The reactor loop. Returns the computation wall time on recovery.
+    fn run(&mut self) -> Result<f64> {
+        loop {
+            // Apply elastic events that are due.
+            while self.ev_idx < self.events.len()
+                && self.deadline(self.ev_idx) <= self.t_comp.elapsed()
+            {
+                let idx = self.ev_idx;
+                self.ev_idx += 1;
+                let ev = self.events[idx];
+                self.apply_event(ev, idx)?;
+            }
+            // Wait for the next worker event or elastic deadline.
+            let msg = if self.ev_idx < self.events.len() {
+                let now = self.t_comp.elapsed();
+                let deadline = self.deadline(self.ev_idx);
+                if deadline <= now {
+                    continue;
+                }
+                match self.evt_rx.recv_timeout(deadline - now) {
+                    Ok(m) => m,
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        bail!("event channel closed before recovery")
+                    }
+                }
+            } else if self.live == 0 {
+                bail!("pool drained before the recovery rule was met");
+            } else {
+                self.evt_rx
+                    .recv()
+                    .map_err(|_| anyhow!("event channel closed before recovery"))?
+            };
+            if self.handle(msg)? {
+                return Ok(self.t_comp.elapsed().as_secs_f64());
+            }
+        }
+    }
+
+    /// Handle one worker event; true means the rule was newly satisfied.
+    fn handle(&mut self, msg: Event) -> Result<bool> {
+        match msg {
+            Event::WorkerJoined { .. } | Event::Decoded { .. } => Ok(false),
+            Event::SubtaskDone { slot, group, data, .. } => {
+                self.received += 1;
+                self.delivered.insert((slot, group));
+                if let Some(entry) = self.slots[slot].as_mut() {
+                    if let Some(pos) = entry.pending.iter().position(|&g| g == group) {
+                        entry.pending.remove(pos);
+                        match self.rule {
+                            RecoveryRule::PerSet { .. } => self.holders[group] -= 1,
+                            RecoveryRule::Global { .. } => self.pending_total -= 1,
+                        }
+                    }
+                }
+                let credited_before = self.ledger.credited();
+                let complete = self.ledger.record(slot, group);
+                if self.ledger.credited() > credited_before
+                    && self.slots[slot].as_ref().is_some_and(|e| e.joined_mid)
+                {
+                    self.joiner_credits += 1;
+                }
+                if let Some(d) = data {
+                    self.payloads.push(((group, slot), d));
+                }
+                if complete {
+                    return Ok(true);
+                }
+                // Legacy mid-run elastic knob: preempt the highest initial
+                // slots after their first delivery.
+                if self.preempt_after_first > 0
+                    && slot + self.preempt_after_first >= self.n_initial
+                    && slot < self.n_initial
+                    && self.seen_first.insert(slot)
+                {
+                    if let Some(entry) = self.slots[slot].as_mut() {
+                        entry.worker.send(Command::Preempt);
+                        entry.leaving = Some("preempt_after_first".into());
+                        self.preempted += 1;
+                    }
+                    let t = self.t_comp.elapsed().as_secs_f64();
+                    self.note(format!("t={t:.4} preempted worker {slot} (knob)"));
+                }
+                Ok(false)
+            }
+            Event::WorkerLeft { slot, delivered, error } => {
+                if let Some(e) = error {
+                    bail!("worker {slot} failed: {e}");
+                }
+                let Some(entry) = self.slots[slot].take() else {
+                    return Ok(false);
+                };
+                self.live -= 1;
+                let cause = entry.leaving.clone().unwrap_or_else(|| "queue drained".into());
+                // Unwind the departed slot's pending work and check that
+                // every group it abandoned is still recoverable.
+                match self.rule {
+                    RecoveryRule::PerSet { k, .. } => {
+                        for &g in &entry.pending {
+                            self.holders[g] -= 1;
+                            if !self.ledger.group_complete(g)
+                                && self.ledger.have(g) + self.holders[g] < k
+                            {
+                                self.finished.push(entry.worker);
+                                bail!(
+                                    "worker {slot} left ({cause}) after {delivered} \
+                                     completions, leaving set {g} unrecoverable: {} \
+                                     delivered + {} live holders < K = {k}",
+                                    self.ledger.have(g),
+                                    self.holders[g]
+                                );
+                            }
+                        }
+                    }
+                    RecoveryRule::Global { k } => {
+                        self.pending_total -= entry.pending.len();
+                        if !self.ledger.is_complete()
+                            && self.ledger.credited() + self.pending_total < k
+                        {
+                            self.finished.push(entry.worker);
+                            bail!(
+                                "worker {slot} left ({cause}) after {delivered} \
+                                 completions, leaving the pool unable to reach K = {k}: \
+                                 {} delivered + {} pending",
+                                self.ledger.credited(),
+                                self.pending_total
+                            );
+                        }
+                    }
+                }
+                self.finished.push(entry.worker);
+                // A join for this slot may have been waiting for the old
+                // worker to finish leaving.
+                if let Some(pos) =
+                    self.deferred_joins.iter().position(|&(_, s)| s == slot)
+                {
+                    let (idx, _) = self.deferred_joins.remove(pos);
+                    self.do_join(slot, idx);
+                }
+                Ok(false)
+            }
+        }
+    }
+
+    fn apply_event(&mut self, ev: ElasticEvent, idx: usize) -> Result<()> {
+        let t = self.t_comp.elapsed().as_secs_f64();
+        match ev.kind {
+            EventKind::Leave(slot) => {
+                self.leaves += 1;
+                // A leave landing while this slot's *rejoin* is still
+                // deferred refers to the rejoined worker, not the departing
+                // one (which was already preempted): it cancels the rejoin.
+                if let Some(pos) =
+                    self.deferred_joins.iter().position(|&(_, s)| s == slot)
+                {
+                    self.deferred_joins.remove(pos);
+                    self.note(format!(
+                        "t={t:.4} elastic leave of worker {slot} (event {idx}): cancels \
+                         its deferred rejoin"
+                    ));
+                    return Ok(());
+                }
+                match self.slots[slot].as_mut() {
+                    Some(entry) => {
+                        entry.worker.send(Command::Preempt);
+                        entry.leaving =
+                            Some(format!("elastic event {idx}: leave at t={:.4}", ev.time));
+                        self.note(format!(
+                            "t={t:.4} elastic leave of worker {slot} (event {idx})"
+                        ));
+                    }
+                    None => self.note(format!(
+                        "t={t:.4} elastic leave of worker {slot} (event {idx}): already \
+                         exited"
+                    )),
+                }
+            }
+            EventKind::Join(slot) => {
+                self.joins += 1;
+                self.note(format!("t={t:.4} elastic join of worker {slot} (event {idx})"));
+                if self.slots[slot].is_some() {
+                    // Old worker still finishing its in-flight subtask.
+                    self.deferred_joins.push((idx, slot));
+                } else {
+                    self.do_join(slot, idx);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Spawn a mid-job joiner: the scheme's allocation answer for its slot
+    /// (BICEC: its static range; PerSet: the neediest incomplete sets),
+    /// then re-filter the fleet's queues against the ledger.
+    fn do_join(&mut self, slot: usize, idx: usize) {
+        let groups = self.joiner_groups(slot);
+        if groups.is_empty() {
+            self.note(format!(
+                "join of worker {slot} (event {idx}): no useful work remains"
+            ));
+            return;
+        }
+        self.spawn(slot, groups, true);
+        if matches!(self.rule, RecoveryRule::PerSet { .. }) {
+            self.reassign_filter();
+        }
+    }
+
+    /// TAS answer for a joining slot under the frozen set geometry.
+    fn joiner_groups(&self, slot: usize) -> Vec<usize> {
+        match self.rule {
+            RecoveryRule::Global { .. } => {
+                // BICEC: the slot's pre-assigned static range (the paper's
+                // zero-transition-waste property), minus anything this slot
+                // already delivered before leaving.
+                let sp = self.bicec_s_per.expect("global rule is BICEC");
+                (slot * sp..(slot + 1) * sp)
+                    .filter(|&id| !self.delivered.contains(&(slot, id)))
+                    .collect()
+            }
+            RecoveryRule::PerSet { sets, k } => {
+                // Deficit-greedy: the incomplete sets farthest from their
+                // threshold first, late sets first on ties (CEC's aligned
+                // tail is the paper's bottleneck), capped at the scheme's
+                // per-worker selection count.
+                let mut cands: Vec<usize> = (0..sets)
+                    .filter(|&m| {
+                        !self.ledger.group_complete(m)
+                            && !self.delivered.contains(&(slot, m))
+                    })
+                    .collect();
+                cands.sort_by(|&a, &b| {
+                    let da = k - self.ledger.have(a);
+                    let db = k - self.ledger.have(b);
+                    db.cmp(&da).then(b.cmp(&a))
+                });
+                cands.truncate(self.scheme_s);
+                cands
+            }
+        }
+    }
+
+    /// Drop already-satisfied sets from every live worker's pending queue
+    /// (`Command::Reassign`). The mirror front is kept even when satisfied
+    /// — it may be in flight, and a duplicate completion costs one subtask
+    /// of waste, never correctness.
+    fn reassign_filter(&mut self) {
+        for slot in 0..self.slots.len() {
+            let Some(entry) = self.slots[slot].as_ref() else { continue };
+            if entry.leaving.is_some() {
+                continue;
+            }
+            let keep: Vec<usize> = entry
+                .pending
+                .iter()
+                .enumerate()
+                .filter(|&(i, &g)| i == 0 || !self.ledger.group_complete(g))
+                .map(|(_, &g)| g)
+                .collect();
+            if keep.len() == entry.pending.len() {
+                continue;
+            }
+            let tasks = self.make_tasks(slot, &keep);
+            let entry = self.slots[slot].as_mut().expect("checked live above");
+            for &g in &entry.pending {
+                self.holders[g] -= 1;
+            }
+            for &g in &keep {
+                self.holders[g] += 1;
+            }
+            entry.pending = keep;
+            entry.worker.send(Command::Reassign { tasks });
+        }
+    }
+
+    /// Terminal cleanup: stop every worker and join all threads.
+    fn shutdown(&mut self) {
+        for entry in self.slots.iter_mut().filter_map(|s| s.take()) {
+            entry.worker.send(Command::Shutdown);
+            self.finished.push(entry.worker);
+        }
+        for worker in self.finished.drain(..) {
+            worker.join();
+        }
+    }
+}
+
+/// Decode the recovered product from the ledger's completion sets —
+/// identical arithmetic to the legacy master decode, consuming the same
+/// arrival-order contributor lists.
+fn decode(
+    code: &RealMdsCode,
+    ledger: &RecoveryLedger,
+    payloads: &[((usize, usize), Vec<f32>)],
+    u: usize,
+    v: usize,
+    rows_per_item: usize,
+) -> Result<Matrix> {
+    let k = code.k();
+    let mut out = Matrix::zeros(u, v);
+    let fetch = |group: usize, slot: usize| -> Result<&Vec<f32>> {
+        payloads
+            .iter()
+            .find(|((g, s), _)| *g == group && *s == slot)
+            .map(|(_, d)| d)
+            .ok_or_else(|| anyhow!("missing payload for group {group} slot {slot}"))
+    };
+    match ledger.rule() {
+        RecoveryRule::PerSet { sets, .. } => {
+            // Set m: K completed blocks (rows_per_item x v) from distinct
+            // slots; decode -> the m-th slice of each data block A_i·B.
+            for m in 0..sets {
+                let slots = &ledger.set_contributors(m)[..k];
+                let inv = code
+                    .decode_coeffs_f32(slots)
+                    .map_err(|e| anyhow!("set {m}: {e}"))?;
+                let blocks: Vec<&[f32]> = slots
+                    .iter()
+                    .map(|&s| fetch(m, s).map(|b| b.as_slice()))
+                    .collect::<Result<Vec<_>>>()?;
+                for j in 0..k {
+                    // Global row offset of data block j's m-th slice.
+                    let base = j * (u / k) + m * rows_per_item;
+                    combine_into_rows(
+                        &mut out,
+                        base,
+                        rows_per_item,
+                        &inv[j * k..(j + 1) * k],
+                        &blocks,
+                    );
+                }
+            }
+        }
+        RecoveryRule::Global { .. } => {
+            let ids = &ledger.global_ids()[..k];
+            let inv = code.decode_coeffs_f32(ids).map_err(|e| anyhow!("global: {e}"))?;
+            let blocks: Vec<&[f32]> = ids
+                .iter()
+                .map(|&id| {
+                    payloads
+                        .iter()
+                        .find(|((g, _), _)| *g == id)
+                        .map(|(_, d)| d.as_slice())
+                        .ok_or_else(|| anyhow!("missing payload for id {id}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let rows_b = u / k;
+            debug_assert_eq!(rows_b, rows_per_item);
+            for j in 0..k {
+                combine_into_rows(&mut out, j * rows_b, rows_b, &inv[j * k..(j + 1) * k], &blocks);
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{ElasticEvent, ElasticTrace, EventKind};
+
+    fn sim_cfg(scheme: SchemeConfig, n_max: usize, n: usize) -> ClusterConfig {
+        ClusterConfig {
+            job: JobSpec::new(240, 240, 240),
+            scheme,
+            n_max,
+            n_workers: n,
+            backend: ClusterBackend::Simulated { time_scale: 1.0 },
+            speed: SpeedSource::Uniform,
+            cost: CostModel { worker_ops_per_sec: 1e9, decode_ops_per_sec: 1e10 },
+            elasticity: ClusterElasticity::Fixed,
+            preempt_after_first: 0,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn native_cec_cluster_recovers_exactly() {
+        let mut cfg = sim_cfg(SchemeConfig::Cec { k: 4, s: 6 }, 8, 8);
+        cfg.job = JobSpec::new(64, 32, 16);
+        cfg.backend = ClusterBackend::Native;
+        cfg.seed = 3;
+        let report = run_cluster_job(&cfg).unwrap();
+        assert!(report.recovered);
+        assert!(report.max_rel_err < 1e-3, "err={}", report.max_rel_err);
+        assert_eq!(report.scheme, "cec");
+        assert_eq!(report.completions_used, 8 * 4);
+        assert_eq!(report.elastic_events(), 0);
+    }
+
+    #[test]
+    fn native_bicec_cluster_recovers_exactly() {
+        let mut cfg = sim_cfg(SchemeConfig::Bicec { k: 16, s_per_worker: 3 }, 8, 8);
+        cfg.job = JobSpec::new(64, 32, 16);
+        cfg.backend = ClusterBackend::Native;
+        let report = run_cluster_job(&cfg).unwrap();
+        assert!(report.recovered);
+        assert!(report.max_rel_err < 1e-2, "err={}", report.max_rel_err);
+        assert_eq!(report.completions_used, 16);
+    }
+
+    #[test]
+    fn simulated_fixed_fleet_completes_without_bytes() {
+        // u=240, k=4: CEC subtask ops = 60*240*240/8 -> ~1.7ms at 1e9 op/s.
+        let report = run_cluster_job(&sim_cfg(SchemeConfig::Cec { k: 4, s: 6 }, 8, 8))
+            .unwrap();
+        assert!(report.recovered);
+        assert_eq!(report.max_rel_err, 0.0);
+        assert_eq!(report.decode_wall, 0.0);
+        assert_eq!(report.completions_used, 8 * 4);
+        assert!(report.completions_received >= report.completions_used);
+        assert!(report.computation_wall > 0.0);
+    }
+
+    #[test]
+    fn mid_job_leave_is_absorbed() {
+        // BICEC 8x4=32 subtasks, K=20: losing 2 workers' tails still
+        // leaves 24 reachable completions.
+        let mut cfg = sim_cfg(SchemeConfig::Bicec { k: 20, s_per_worker: 4 }, 8, 8);
+        cfg.elasticity = ClusterElasticity::Trace(ElasticTrace {
+            n_max: 8,
+            n_initial: 8,
+            events: vec![
+                ElasticEvent { time: 0.0015, kind: EventKind::Leave(6) },
+                ElasticEvent { time: 0.0015, kind: EventKind::Leave(7) },
+            ],
+        });
+        let report = run_cluster_job(&cfg).unwrap();
+        assert!(report.recovered);
+        assert_eq!(report.leaves, 2);
+        assert_eq!(report.joins, 0);
+        assert!(
+            report.timeline.iter().any(|l| l.contains("elastic leave")),
+            "timeline: {:?}",
+            report.timeline
+        );
+    }
+
+    #[test]
+    fn infeasible_leave_fails_naming_the_event() {
+        // BICEC 4x4=16 subtasks, K=16: every subtask is needed, so any
+        // leave with pending work is unrecoverable. Subtasks are stretched
+        // to ~5.8ms so the leave always lands mid-list.
+        let mut cfg = sim_cfg(SchemeConfig::Bicec { k: 16, s_per_worker: 4 }, 4, 4);
+        cfg.cost = CostModel { worker_ops_per_sec: 1.5e8, decode_ops_per_sec: 1e10 };
+        cfg.elasticity = ClusterElasticity::Trace(ElasticTrace {
+            n_max: 4,
+            n_initial: 4,
+            events: vec![ElasticEvent { time: 0.006, kind: EventKind::Leave(3) }],
+        });
+        let err = run_cluster_job(&cfg).unwrap_err().to_string();
+        assert!(err.contains("elastic event 0"), "{err}");
+        assert!(err.contains("K = 16"), "{err}");
+    }
+
+    #[test]
+    fn mid_job_join_reduces_finishing_time_via_reallocation() {
+        // CEC K=2, S=4 on 4 initial workers (slots 2, 3 are 10x slow):
+        // without help the late sets wait on the fast pair's full sweep
+        // (~4 tau). Two fast joiners pick up the neediest sets and cut the
+        // finish to ~2.5 tau. tau ~= 30ms here, so the margin is far above
+        // scheduler noise.
+        let tau = 0.030;
+        let ops = {
+            let scheme = SchemeConfig::Cec { k: 2, s: 4 }.build(8);
+            scheme.subtask_ops(240, 240, 240, 4)
+        };
+        let mk = |join: bool| {
+            let mut cfg = sim_cfg(SchemeConfig::Cec { k: 2, s: 4 }, 8, 4);
+            cfg.cost = CostModel {
+                worker_ops_per_sec: ops as f64 / tau,
+                decode_ops_per_sec: 1e10,
+            };
+            cfg.speed = SpeedSource::Explicit(vec![
+                1.0, 1.0, 10.0, 10.0, 1.0, 1.0, 1.0, 1.0,
+            ]);
+            if join {
+                cfg.elasticity = ClusterElasticity::Trace(ElasticTrace {
+                    n_max: 8,
+                    n_initial: 4,
+                    events: vec![
+                        ElasticEvent { time: 0.5 * tau, kind: EventKind::Join(4) },
+                        ElasticEvent { time: 0.5 * tau, kind: EventKind::Join(5) },
+                    ],
+                });
+            }
+            cfg
+        };
+        let alone = run_cluster_job(&mk(false)).unwrap();
+        let joined = run_cluster_job(&mk(true)).unwrap();
+        assert!(alone.recovered && joined.recovered);
+        assert_eq!(joined.joins, 2);
+        assert!(joined.joiner_completions > 0, "joiners must contribute completions");
+        assert!(
+            joined.computation_wall < 0.85 * alone.computation_wall,
+            "join did not speed up the job: {} vs {}",
+            joined.computation_wall,
+            alone.computation_wall
+        );
+    }
+
+    #[test]
+    fn leave_during_deferred_rejoin_cancels_the_rejoin() {
+        // Slot 3 is 4x slow (in-flight ~80ms), so leave@1ms, join@2ms,
+        // leave@3ms all land while its first subtask is still running:
+        // the join must defer, and the second leave must cancel that
+        // deferred rejoin instead of re-preempting the old worker.
+        let mut cfg = sim_cfg(SchemeConfig::Bicec { k: 8, s_per_worker: 4 }, 4, 4);
+        // 20ms unstraggled subtasks.
+        let ops = {
+            let scheme = cfg.scheme.build(4);
+            scheme.subtask_ops(240, 240, 240, 4)
+        };
+        cfg.cost =
+            CostModel { worker_ops_per_sec: ops as f64 / 0.02, decode_ops_per_sec: 1e10 };
+        cfg.speed = SpeedSource::Explicit(vec![1.0, 1.0, 1.0, 4.0]);
+        cfg.elasticity = ClusterElasticity::Trace(ElasticTrace {
+            n_max: 4,
+            n_initial: 4,
+            events: vec![
+                ElasticEvent { time: 0.001, kind: EventKind::Leave(3) },
+                ElasticEvent { time: 0.002, kind: EventKind::Join(3) },
+                ElasticEvent { time: 0.003, kind: EventKind::Leave(3) },
+            ],
+        });
+        let report = run_cluster_job(&cfg).unwrap();
+        assert!(report.recovered);
+        assert_eq!((report.joins, report.leaves), (1, 2));
+        assert!(
+            report.timeline.iter().any(|l| l.contains("cancels")),
+            "timeline: {:?}",
+            report.timeline
+        );
+    }
+
+    #[test]
+    fn rejects_trace_fleet_mismatch() {
+        let mut cfg = sim_cfg(SchemeConfig::Cec { k: 2, s: 4 }, 8, 6);
+        cfg.elasticity = ClusterElasticity::Trace(ElasticTrace::static_n(8, 8));
+        let err = run_cluster_job(&cfg).unwrap_err().to_string();
+        assert!(err.contains("starts with 8 workers"), "{err}");
+    }
+
+    #[test]
+    fn rejects_indivisible_geometry() {
+        let mut cfg = sim_cfg(SchemeConfig::Cec { k: 5, s: 6 }, 8, 8);
+        cfg.backend = ClusterBackend::Native;
+        cfg.job = JobSpec::new(64, 32, 16); // 64 % 5 != 0
+        assert!(run_cluster_job(&cfg).is_err());
+    }
+
+    #[test]
+    fn preempt_knob_matches_legacy_semantics() {
+        let mut cfg = sim_cfg(SchemeConfig::Bicec { k: 16, s_per_worker: 3 }, 8, 8);
+        cfg.job = JobSpec::new(64, 32, 16);
+        cfg.backend = ClusterBackend::Native;
+        cfg.preempt_after_first = 2;
+        let report = run_cluster_job(&cfg).unwrap();
+        assert!(report.recovered);
+        assert!(report.workers_preempted <= 2);
+        assert!(report.max_rel_err < 1e-2);
+    }
+}

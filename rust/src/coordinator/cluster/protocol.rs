@@ -1,0 +1,376 @@
+//! The cluster wire protocol: typed `Command`s (master → worker) and
+//! `Event`s (worker → master) over the existing mpsc plumbing, plus the
+//! worker loop that speaks it.
+//!
+//! ```text
+//!              Command (per-worker mpsc)
+//!   ┌────────┐ ── Assign { tasks } ──────────────► ┌────────┐
+//!   │ master │ ── Reassign { tasks } ────────────► │ worker │
+//!   │reactor │ ── Preempt / Shutdown ────────────► │  loop  │
+//!   └────────┘                                     └────────┘
+//!        ▲        Event (shared mpsc)                  │
+//!        ├─────── WorkerJoined { slot } ◄──────────────┤
+//!        ├─────── SubtaskDone { slot, group, .. } ◄────┤
+//!        └─────── WorkerLeft { slot, .. } ◄────────────┘
+//! ```
+//!
+//! Commands are consumed *between* subtasks (the paper's short-notice
+//! model: an elastic event lets the worker finish its in-flight subtask,
+//! then takes effect), so `Preempt` == the old pool's atomic flag, and
+//! `Reassign` replaces the pending queue without clawing back in-flight
+//! work. `Decoded` is the master's own terminal milestone — it never
+//! crosses the channel, but lives in the same enum so a `ClusterReport`
+//! timeline is one event type end to end.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::linalg::Matrix;
+
+use super::backend::BackendSpec;
+pub use crate::coordinator::pool::WorkerTask;
+
+/// Master → worker.
+#[derive(Clone, Debug)]
+pub enum Command {
+    /// Initial to-do list for a (re)joined worker.
+    Assign { tasks: Vec<WorkerTask> },
+    /// TAS re-allocation: replace the pending queue (in-flight work is
+    /// kept — its completion still counts).
+    Reassign { tasks: Vec<WorkerTask> },
+    /// Elastic leave / straggler preemption: finish in-flight, then exit.
+    Preempt,
+    /// Job complete: drain and exit.
+    Shutdown,
+}
+
+/// Worker → master (plus the master's own `Decoded` milestone).
+#[derive(Debug)]
+pub enum Event {
+    /// Sent once when the worker thread comes up.
+    WorkerJoined { slot: usize },
+    /// One completed subtask. `data` is the product rows for numeric
+    /// backends, `None` for latency-only backends; `elapsed` is compute
+    /// seconds before any straggler-injection sleep.
+    SubtaskDone { slot: usize, group: usize, data: Option<Vec<f32>>, elapsed: f64 },
+    /// The worker exited: queue drained, preempted, or errored.
+    WorkerLeft { slot: usize, delivered: usize, error: Option<String> },
+    /// Master-side: the recovered product was decoded and verified.
+    Decoded { decode_wall: f64, max_rel_err: f64 },
+}
+
+impl Event {
+    /// One-line rendering for the report timeline.
+    pub fn describe(&self) -> String {
+        match self {
+            Event::WorkerJoined { slot } => format!("worker {slot} joined"),
+            Event::SubtaskDone { slot, group, .. } => {
+                format!("worker {slot} completed group {group}")
+            }
+            Event::WorkerLeft { slot, delivered, error: None } => {
+                format!("worker {slot} left after {delivered} completions")
+            }
+            Event::WorkerLeft { slot, error: Some(e), .. } => {
+                format!("worker {slot} failed: {e}")
+            }
+            Event::Decoded { max_rel_err, .. } => {
+                format!("decoded (rel err {max_rel_err:.2e})")
+            }
+        }
+    }
+}
+
+/// Handle to a spawned cluster worker.
+pub struct ClusterWorker {
+    pub slot: usize,
+    cmd: Sender<Command>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ClusterWorker {
+    /// Send a command; returns false if the worker already exited.
+    pub fn send(&self, cmd: Command) -> bool {
+        self.cmd.send(cmd).is_ok()
+    }
+
+    pub fn join(mut self) {
+        // Dropping the command sender unblocks a worker waiting for its
+        // first assignment.
+        drop(self.cmd);
+        if let Some(h) = self.join.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Spawn a worker for `slot` speaking the cluster protocol.
+///
+/// `encoded`/`b` are the slot's coded task and the shared right operand
+/// (`None` for latency-only backends); `multiplier` injects straggling
+/// exactly like the legacy pool (sleep `elapsed * (multiplier - 1)` after
+/// each subtask). The backend itself is constructed *inside* the thread
+/// (PJRT handles are not `Send`). `stack_kib` bounds the thread stack —
+/// latency-only fleets at N = 2560 run on small stacks.
+pub fn spawn_cluster_worker(
+    slot: usize,
+    spec: BackendSpec,
+    encoded: Option<Arc<Matrix>>,
+    b: Option<Arc<Matrix>>,
+    multiplier: f64,
+    stack_kib: usize,
+    evt_tx: Sender<Event>,
+) -> ClusterWorker {
+    assert!(multiplier >= 1.0, "multiplier {multiplier} < 1");
+    let (cmd_tx, cmd_rx) = std::sync::mpsc::channel();
+    let join = std::thread::Builder::new()
+        .name(format!("hcec-cluster-{slot}"))
+        .stack_size(stack_kib * 1024)
+        .spawn(move || {
+            let _ = evt_tx.send(Event::WorkerJoined { slot });
+            let (delivered, error) =
+                worker_loop(slot, &spec, encoded.as_deref(), b.as_deref(), multiplier, &cmd_rx, &evt_tx);
+            let _ = evt_tx.send(Event::WorkerLeft { slot, delivered, error });
+        })
+        .expect("spawn cluster worker thread");
+    ClusterWorker { slot, cmd: cmd_tx, join: Some(join) }
+}
+
+fn worker_loop(
+    slot: usize,
+    spec: &BackendSpec,
+    encoded: Option<&Matrix>,
+    b: Option<&Matrix>,
+    multiplier: f64,
+    cmd_rx: &Receiver<Command>,
+    evt_tx: &Sender<Event>,
+) -> (usize, Option<String>) {
+    let mut backend = match spec.make_worker(slot) {
+        Ok(bk) => bk,
+        Err(e) => return (0, Some(e.to_string())),
+    };
+    let mut queue: VecDeque<WorkerTask> = VecDeque::new();
+    let mut assigned = false;
+    let mut delivered = 0usize;
+    let empty = Matrix::zeros(0, 0);
+    'life: loop {
+        // Consume commands: block for the first assignment, then drain
+        // whatever has queued up since the last subtask.
+        loop {
+            let cmd = if assigned {
+                match cmd_rx.try_recv() {
+                    Ok(c) => c,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => break 'life,
+                }
+            } else {
+                match cmd_rx.recv() {
+                    Ok(c) => c,
+                    Err(_) => break 'life,
+                }
+            };
+            match cmd {
+                Command::Assign { tasks } | Command::Reassign { tasks } => {
+                    queue = tasks.into();
+                    assigned = true;
+                }
+                Command::Preempt | Command::Shutdown => break 'life,
+            }
+        }
+        let Some(task) = queue.pop_front() else {
+            break; // drained
+        };
+        let t0 = Instant::now();
+        // Numeric backends get the task's row slice of the encoded copy;
+        // latency-only backends model the time without the bytes.
+        let block = match encoded {
+            Some(enc) => {
+                let mut blk = Matrix::zeros(task.rows.len(), enc.cols());
+                for (i, r) in task.rows.clone().enumerate() {
+                    blk.row_mut(i).copy_from_slice(enc.row(r));
+                }
+                Some(blk)
+            }
+            None => None,
+        };
+        let data = match backend.execute(
+            task.group,
+            block.as_ref().unwrap_or(&empty),
+            b.unwrap_or(&empty),
+        ) {
+            Ok(d) => d,
+            Err(e) => return (delivered, Some(format!("slot {slot}: {e}"))),
+        };
+        let elapsed = t0.elapsed().as_secs_f64();
+        if multiplier > 1.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                elapsed * (multiplier - 1.0),
+            ));
+        }
+        // Master gone (job already recovered): treat as a stop signal.
+        if evt_tx
+            .send(Event::SubtaskDone { slot, group: task.group, data, elapsed })
+            .is_err()
+        {
+            break;
+        }
+        delivered += 1;
+    }
+    (delivered, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::default_rng;
+
+    fn tasks(n: usize, rows_each: usize) -> Vec<WorkerTask> {
+        (0..n)
+            .map(|m| WorkerTask { group: m, rows: m * rows_each..(m + 1) * rows_each })
+            .collect()
+    }
+
+    #[test]
+    fn worker_processes_assignment_in_order_then_leaves() {
+        let mut rng = default_rng(5);
+        let enc = Arc::new(Matrix::random(8, 16, &mut rng));
+        let b = Arc::new(Matrix::random(16, 4, &mut rng));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let w = spawn_cluster_worker(
+            3,
+            BackendSpec::Native,
+            Some(enc),
+            Some(b),
+            1.0,
+            512,
+            tx,
+        );
+        assert!(w.send(Command::Assign { tasks: tasks(4, 2) }));
+        let mut groups = Vec::new();
+        loop {
+            match rx.recv().unwrap() {
+                Event::WorkerJoined { slot } => assert_eq!(slot, 3),
+                Event::SubtaskDone { slot, group, data, .. } => {
+                    assert_eq!(slot, 3);
+                    assert_eq!(data.as_ref().map(|d| d.len()), Some(2 * 4));
+                    groups.push(group);
+                }
+                Event::WorkerLeft { delivered, error, .. } => {
+                    assert!(error.is_none(), "{error:?}");
+                    assert_eq!(delivered, 4);
+                    break;
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(groups, vec![0, 1, 2, 3]);
+        w.join();
+    }
+
+    #[test]
+    fn reassign_replaces_pending_queue() {
+        // Simulated 5ms subtasks make the between-subtask command window
+        // wide enough for a deterministic assertion.
+        let (tx, rx) = std::sync::mpsc::channel();
+        let w = spawn_cluster_worker(
+            0,
+            BackendSpec::Simulated { subtask_secs: 0.005 },
+            None,
+            None,
+            1.0,
+            512,
+            tx,
+        );
+        w.send(Command::Assign { tasks: tasks(32, 2) });
+        // Wait for the first delivery, then swap the rest of the queue for
+        // one specific task.
+        loop {
+            match rx.recv().unwrap() {
+                Event::SubtaskDone { group, data, .. } => {
+                    assert_eq!(group, 0);
+                    assert!(data.is_none(), "latency backend must not ship bytes");
+                    break;
+                }
+                Event::WorkerJoined { .. } => {}
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        w.send(Command::Reassign {
+            tasks: vec![WorkerTask { group: 31, rows: 62..64 }],
+        });
+        let mut tail = Vec::new();
+        loop {
+            match rx.recv().unwrap() {
+                Event::SubtaskDone { group, .. } => tail.push(group),
+                Event::WorkerLeft { error, .. } => {
+                    assert!(error.is_none());
+                    break;
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // The swap lands between subtasks: at most a couple of original
+        // groups slip through before the reassigned task runs last.
+        assert!(tail.len() <= 4, "reassign did not cut the queue: {tail:?}");
+        assert_eq!(tail.last(), Some(&31));
+        w.join();
+    }
+
+    #[test]
+    fn preempt_and_shutdown_stop_the_worker() {
+        for terminal in [Command::Preempt, Command::Shutdown] {
+            let mut rng = default_rng(7);
+            let enc = Arc::new(Matrix::random(64, 128, &mut rng));
+            let b = Arc::new(Matrix::random(128, 64, &mut rng));
+            let (tx, rx) = std::sync::mpsc::channel();
+            let w = spawn_cluster_worker(
+                1,
+                BackendSpec::Native,
+                Some(enc),
+                Some(b),
+                1.0,
+                512,
+                tx,
+            );
+            w.send(Command::Assign { tasks: tasks(32, 2) });
+            // One completion through, then stop.
+            loop {
+                if matches!(rx.recv().unwrap(), Event::SubtaskDone { .. }) {
+                    break;
+                }
+            }
+            w.send(terminal.clone());
+            let mut completed = 1;
+            loop {
+                match rx.recv().unwrap() {
+                    Event::SubtaskDone { .. } => completed += 1,
+                    Event::WorkerLeft { error, .. } => {
+                        assert!(error.is_none());
+                        break;
+                    }
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            assert!(completed < 32, "terminal command must cut the list short");
+            w.join();
+        }
+    }
+
+    #[test]
+    fn dropping_command_sender_releases_unassigned_worker() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let w = spawn_cluster_worker(9, BackendSpec::Native, None, None, 1.0, 512, tx);
+        w.join(); // must not hang: drops the command sender
+        let mut saw_left = false;
+        while let Ok(ev) = rx.recv() {
+            if let Event::WorkerLeft { slot, delivered, error } = ev {
+                assert_eq!((slot, delivered), (9, 0));
+                assert!(error.is_none());
+                saw_left = true;
+            }
+        }
+        assert!(saw_left);
+    }
+}

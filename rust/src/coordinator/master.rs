@@ -1,21 +1,25 @@
-//! The master: encode → dispatch → track recovery → decode → verify.
+//! The master's single-job surface — now a thin facade over the
+//! event-driven cluster core (`coordinator::cluster`).
+//!
+//! `run_job` keeps its historical contract exactly: same `JobConfig` in,
+//! same `JobReport` out, same RNG stream (operands, then speeds, from
+//! `default_rng(seed)`), same encode/decode arithmetic — the body just
+//! maps onto [`ClusterConfig`] and projects the [`ClusterReport`] back.
+//! Everything the old inlined collect loop did (recovery tracking, the
+//! `preempt_after_first` knob, worker error propagation) now happens in
+//! the reactor, where mid-job elasticity and non-numeric backends are
+//! also available; callers who want those use `run_cluster_job` directly
+//! or the `Engine::Cluster` scenario variant.
 
-use std::sync::mpsc;
-use std::sync::Arc;
-use std::time::Instant;
+use anyhow::Result;
 
-use anyhow::{anyhow, bail, Result};
-
-use crate::codes::RealMdsCode;
-use crate::linalg::{combine_into_rows, gemm, split_rows, Matrix};
-use crate::rng::default_rng;
-use crate::runtime::{artifacts_available, default_artifact_dir, Runtime};
-use crate::sim::{SpeedModel, WorkerSpeeds};
-use crate::tas::{RecoveryRule, Scheme};
+use crate::sim::SpeedModel;
 use crate::workload::JobSpec;
 
-use super::pool::{spawn_worker, Backend, WorkerMsg, WorkerTask};
-use super::recovery::RecoveryTracker;
+use super::cluster::{
+    run_cluster_job, ClusterBackend, ClusterConfig, ClusterElasticity, ClusterReport,
+    SpeedSource,
+};
 
 // The scheme axis now lives on the unified experiment surface; re-exported
 // here so existing `coordinator::SchemeConfig` callers keep compiling.
@@ -66,6 +70,29 @@ impl JobConfig {
             seed: 7,
         }
     }
+
+    /// The equivalent fixed-fleet cluster configuration — the whole facade
+    /// mapping in one place (also used by `service::serve`).
+    pub fn to_cluster(&self) -> ClusterConfig {
+        ClusterConfig {
+            job: self.job,
+            scheme: self.scheme.clone(),
+            n_max: self.n_max,
+            n_workers: self.n_workers,
+            backend: match self.backend {
+                ExecBackend::Native => ClusterBackend::Native,
+                ExecBackend::Pjrt => ClusterBackend::Pjrt,
+            },
+            speed: match &self.speed_model {
+                Some(m) => SpeedSource::Model(*m),
+                None => SpeedSource::Uniform,
+            },
+            cost: crate::sim::CostModel::paper_default(),
+            elasticity: ClusterElasticity::Fixed,
+            preempt_after_first: self.preempt_after_first,
+            seed: self.seed,
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -86,261 +113,27 @@ impl JobReport {
     pub fn finishing_wall(&self) -> f64 {
         self.computation_wall + self.decode_wall
     }
+
+    /// Field-for-field projection of a cluster report.
+    pub fn from_cluster(r: &ClusterReport) -> Self {
+        Self {
+            scheme: r.scheme,
+            encode_wall: r.encode_wall,
+            computation_wall: r.computation_wall,
+            decode_wall: r.decode_wall,
+            completions_received: r.completions_received,
+            completions_used: r.completions_used,
+            workers_preempted: r.workers_preempted,
+            max_rel_err: r.max_rel_err,
+            recovered: r.recovered,
+        }
+    }
 }
 
 /// Run one coded job end to end on the threaded worker pool.
 pub fn run_job(cfg: &JobConfig) -> Result<JobReport> {
-    let scheme = cfg.scheme.build(cfg.n_max);
-    let n = cfg.n_workers;
-    assert!(n >= 1 && n <= cfg.n_max);
-    let JobSpec { u, w, v } = cfg.job;
-    let k = scheme.k();
-
-    let mut rng = default_rng(cfg.seed);
-    let (a, b) = cfg.job.generate(&mut rng);
-    let b = Arc::new(b);
-
-    // --- encode ---------------------------------------------------------
-    let t_enc = Instant::now();
-    let (code, total_rows) = match &cfg.scheme {
-        SchemeConfig::Bicec { k, s_per_worker } => {
-            (RealMdsCode::new(s_per_worker * cfg.n_max, *k), u / *k)
-        }
-        _ => (RealMdsCode::new(cfg.n_max, k), u / k),
-    };
-    anyhow::ensure!(
-        u % code.k() == 0,
-        "u={u} must divide by K={} (pad upstream)",
-        code.k()
-    );
-    let data_blocks = split_rows(&a, code.k()); // each (u/K, w)
-    // Worker slot s stores its encoded copy. CEC/MLCEC: coded task s.
-    // BICEC: the s_per_worker coded subtasks of its static range, stacked.
-    let alloc = scheme.allocate(n);
-    let encoded: Vec<Matrix> = match &cfg.scheme {
-        SchemeConfig::Bicec { s_per_worker, .. } => (0..n)
-            .map(|slot| {
-                let blocks: Vec<Matrix> = (slot * s_per_worker..(slot + 1) * s_per_worker)
-                    .map(|id| code.encode_one(&data_blocks, id))
-                    .collect();
-                crate::linalg::stack_rows(&blocks)
-            })
-            .collect(),
-        _ => (0..n).map(|slot| code.encode_one(&data_blocks, slot)).collect(),
-    };
-    let encode_wall = t_enc.elapsed().as_secs_f64();
-
-    // --- pick the PJRT artifacts (or fail early) -------------------------
-    let rows_per_item = match alloc.rule {
-        RecoveryRule::PerSet { sets, .. } => {
-            anyhow::ensure!(
-                total_rows % sets == 0,
-                "task rows {total_rows} not divisible into {sets} subtasks"
-            );
-            total_rows / sets
-        }
-        RecoveryRule::Global { .. } => total_rows,
-    };
-    let backend = match cfg.backend {
-        ExecBackend::Native => Backend::Native,
-        ExecBackend::Pjrt => {
-            anyhow::ensure!(
-                artifacts_available(),
-                "PJRT backend requires `make artifacts` AND a build with the \
-                 `pjrt` cargo feature (artifacts_available() reports false \
-                 in stub builds even when the manifest exists)"
-            );
-            let dir = default_artifact_dir();
-            let probe = Runtime::open(&dir)?;
-            let name = probe
-                .find_by_inputs(&[&[rows_per_item, w], &[w, v]])
-                .ok_or_else(|| {
-                    anyhow!(
-                        "no artifact for subtask shape ({rows_per_item},{w})x({w},{v}); \
-                         regenerate with the matching aot.py preset"
-                    )
-                })?
-                .to_string();
-            Backend::Pjrt { artifact: name, dir }
-        }
-    };
-
-    // --- spawn the pool ---------------------------------------------------
-    let speeds = match &cfg.speed_model {
-        Some(model) => WorkerSpeeds::sample(model, cfg.n_max, &mut rng),
-        None => WorkerSpeeds::uniform(cfg.n_max),
-    };
-    let (tx, rx) = mpsc::channel();
-    let mut handles = Vec::with_capacity(n);
-    let t_comp = Instant::now();
-    for (slot, list) in alloc.lists.iter().enumerate() {
-        let tasks: Vec<WorkerTask> = list
-            .iter()
-            .map(|item| {
-                let rows = match alloc.rule {
-                    RecoveryRule::PerSet { .. } => {
-                        item.group * rows_per_item..(item.group + 1) * rows_per_item
-                    }
-                    // BICEC: local offset within this slot's stacked range.
-                    RecoveryRule::Global { .. } => {
-                        let s_per = list.len();
-                        let local = item.group - slot * s_per;
-                        let rows_b = encoded[slot].rows() / s_per;
-                        local * rows_b..(local + 1) * rows_b
-                    }
-                };
-                WorkerTask { group: item.group, rows }
-            })
-            .collect();
-        handles.push(spawn_worker(
-            slot,
-            encoded[slot].clone(),
-            b.clone(),
-            tasks,
-            speeds.multiplier(slot).max(1.0),
-            backend.clone(),
-            tx.clone(),
-        ));
-    }
-    drop(tx);
-
-    // --- collect until recovery -------------------------------------------
-    let mut tracker = RecoveryTracker::new(alloc.rule);
-    // Completion payloads: keyed by (group, slot) for PerSet, group for Global.
-    let mut payloads: Vec<((usize, usize), Vec<f32>)> = Vec::new();
-    let mut received = 0usize;
-    let mut preempted = 0usize;
-    let mut seen_first: std::collections::HashSet<usize> = Default::default();
-    let mut computation_wall = f64::NAN;
-    let mut recovered = false;
-
-    for msg in rx.iter() {
-        match msg {
-            WorkerMsg::Completed { slot, group, data, .. } => {
-                received += 1;
-                let counts = tracker.record(slot, group);
-                payloads.push(((group, slot), data));
-                if counts {
-                    recovered = true;
-                    computation_wall = t_comp.elapsed().as_secs_f64();
-                    break;
-                }
-                // Mid-run elastic event: preempt the highest slots after
-                // their first delivery.
-                if cfg.preempt_after_first > 0
-                    && slot >= n - cfg.preempt_after_first
-                    && seen_first.insert(slot)
-                {
-                    handles[slot].preempt();
-                    preempted += 1;
-                }
-            }
-            WorkerMsg::Done { slot, error } => {
-                if let Some(e) = error {
-                    bail!("worker {slot} failed: {e}");
-                }
-            }
-        }
-    }
-    for h in handles {
-        h.preempt();
-        h.join();
-    }
-    if !recovered {
-        bail!("pool drained before the recovery rule was met");
-    }
-
-    // --- decode ------------------------------------------------------------
-    let t_dec = Instant::now();
-    let recovered_a_b = decode(&code, &tracker, &payloads, u, v, rows_per_item)?;
-    let decode_wall = t_dec.elapsed().as_secs_f64();
-
-    // --- verify -------------------------------------------------------------
-    let baseline = gemm(&a, &b);
-    let scale = baseline.max_abs().max(1.0);
-    let max_rel_err = recovered_a_b.max_abs_diff(&baseline) / scale;
-
-    Ok(JobReport {
-        scheme: cfg.scheme.name(),
-        encode_wall,
-        computation_wall,
-        decode_wall,
-        completions_received: received,
-        completions_used: match alloc.rule {
-            RecoveryRule::PerSet { sets, k } => sets * k,
-            RecoveryRule::Global { k } => k,
-        },
-        workers_preempted: preempted,
-        max_rel_err,
-        recovered,
-    })
-}
-
-/// Decode the recovered product from the tracker's completion sets.
-fn decode(
-    code: &RealMdsCode,
-    tracker: &RecoveryTracker,
-    payloads: &[((usize, usize), Vec<f32>)],
-    u: usize,
-    v: usize,
-    rows_per_item: usize,
-) -> Result<Matrix> {
-    let k = code.k();
-    let mut out = Matrix::zeros(u, v);
-    let fetch = |group: usize, slot: usize| -> Result<&Vec<f32>> {
-        payloads
-            .iter()
-            .find(|((g, s), _)| *g == group && *s == slot)
-            .map(|(_, d)| d)
-            .ok_or_else(|| anyhow!("missing payload for group {group} slot {slot}"))
-    };
-    match tracker.rule() {
-        RecoveryRule::PerSet { sets, .. } => {
-            // Set m: K completed blocks (rows_per_item x v) from distinct
-            // slots; decode -> the m-th slice of each data block A_i·B.
-            for m in 0..sets {
-                let slots = &tracker.set_contributors(m)[..k];
-                let inv = code
-                    .decode_coeffs_f32(slots)
-                    .map_err(|e| anyhow!("set {m}: {e}"))?;
-                let blocks: Vec<&[f32]> = slots
-                    .iter()
-                    .map(|&s| fetch(m, s).map(|b| b.as_slice()))
-                    .collect::<Result<Vec<_>>>()?;
-                for j in 0..k {
-                    // Global row offset of data block j's m-th slice.
-                    let base = j * (u / k) + m * rows_per_item;
-                    combine_into_rows(
-                        &mut out,
-                        base,
-                        rows_per_item,
-                        &inv[j * k..(j + 1) * k],
-                        &blocks,
-                    );
-                }
-            }
-        }
-        RecoveryRule::Global { .. } => {
-            let ids = &tracker.global_ids()[..k];
-            let inv = code.decode_coeffs_f32(ids).map_err(|e| anyhow!("global: {e}"))?;
-            let blocks: Vec<&[f32]> = ids
-                .iter()
-                .map(|&id| {
-                    payloads
-                        .iter()
-                        .find(|((g, _), _)| *g == id)
-                        .map(|(_, d)| d.as_slice())
-                        .ok_or_else(|| anyhow!("missing payload for id {id}"))
-                })
-                .collect::<Result<Vec<_>>>()?;
-            let rows_b = u / k;
-            debug_assert_eq!(rows_b, rows_per_item);
-            for j in 0..k {
-                combine_into_rows(&mut out, j * rows_b, rows_b, &inv[j * k..(j + 1) * k], &blocks);
-            }
-        }
-    }
-    Ok(out)
+    let report = run_cluster_job(&cfg.to_cluster())?;
+    Ok(JobReport::from_cluster(&report))
 }
 
 #[cfg(test)]

@@ -1,22 +1,34 @@
 //! The elastic master — the paper's system realised with real threads and
 //! real numerics.
 //!
-//! `master::run_job` drives a full coded job: partition + MDS-encode the
-//! input, hand each worker slot its encoded task, let the worker pool chew
-//! through the TAS-selected subtask lists (executing either the native
-//! blocked gemm or the AOT-compiled PJRT artifacts), track recovery,
-//! decode, and verify the recovered product against the uncoded baseline.
+//! The heart is the event-driven **cluster core** (`cluster`): a typed
+//! `Command`/`Event` protocol over mpsc channels, a deterministic reactor
+//! loop, pluggable `WorkerBackend`s (native gemm, PJRT artifacts, or a
+//! latency-only `SimulatedLatency` that drives the real coordinator at
+//! N up to 2560), and a per-group-sharded `RecoveryLedger`. Mid-job
+//! elasticity — the paper's defining scenario — happens *inside* a
+//! running job: leaves preempt, joins get the scheme's task-allocation
+//! answer for their slot, and pending queues are re-filtered against the
+//! ledger (`Command::Reassign`).
 //!
-//! Elasticity in real-execution mode is preemption-style (workers carry a
-//! preempt flag checked between subtasks); re-allocation dynamics across
-//! granularities are exercised exhaustively in `sim::elastic` (DESIGN.md
-//! §Substitutions discusses the split).
+//! `master::run_job` (one fixed-fleet job) and `service::serve` (a job
+//! stream with between-job elasticity) are thin facades over the core,
+//! preserving their historical `JobReport`/`ServiceReport` contracts.
+//! Re-allocation dynamics across subtask granularities are exercised
+//! exhaustively in `sim::elastic` (DESIGN.md §Substitutions discusses the
+//! split); the real cluster freezes the set geometry at encode time.
 
+pub mod cluster;
 pub mod master;
 pub mod pool;
 pub mod recovery;
 pub mod service;
 
+pub use cluster::{
+    run_cluster_job, BackendSpec, ClusterBackend, ClusterConfig, ClusterElasticity,
+    ClusterReport, Command, Event, NativeGemm, RecoveryLedger, SimulatedLatency,
+    SpeedSource, WorkerBackend,
+};
 pub use master::{run_job, ExecBackend, JobConfig, JobReport, SchemeConfig};
 pub use service::{serve, ServiceConfig, ServiceReport};
 pub use pool::{WorkerHandle, WorkerMsg, WorkerTask};

@@ -1,4 +1,8 @@
-//! Worker pool: one OS thread per active slot.
+//! Worker pool: one OS thread per active slot — the legacy fixed-list
+//! worker. The cluster core (`coordinator::cluster`) supersedes this for
+//! job execution (its workers speak the typed `Command`/`Event` protocol
+//! and accept mid-job reassignment); this module remains the minimal
+//! spawn-with-a-list primitive plus the shared [`WorkerTask`] type.
 //!
 //! Each worker owns its encoded task (the coded copy stored at that slot in
 //! the paper's model), a shared handle to B, its TAS to-do list, and an

@@ -1,19 +1,26 @@
-//! Job-stream service: the paper's system as a long-running master.
+//! Job-stream service: the paper's system as a long-running master — a
+//! thin facade over the event-driven cluster core.
 //!
 //! A sequence of coded matrix-product jobs is served on a pool whose
 //! availability evolves between jobs per an `ElasticTrace` (spot-market
-//! style). Each job runs on whatever workers are available at its start —
-//! the elastic model of Sec. 2 (events have short notice, so the master
-//! re-allocates at job granularity in real mode; intra-job preemption is
-//! exercised by `JobConfig::preempt_after_first` and, exhaustively, by the
-//! DES). Reports per-job latency plus service throughput.
+//! style; event times are job indices here). Each job runs on whatever
+//! workers are available at its start via `run_cluster_job` — the same
+//! core that absorbs *mid-job* churn under `Engine::Cluster`; this layer
+//! keeps the job-granularity model and the historical
+//! `ServiceConfig`/`ServiceReport` shapes.
+//!
+//! Leave events that would drop the pool below the scheme's recovery
+//! threshold are rejected up front with the offending job and event named
+//! — the alternative is an underflowed `active` count or a job that can
+//! never recover.
 
 use anyhow::Result;
 
 use crate::metrics::Summary;
 use crate::sim::trace::{ElasticTrace, EventKind};
 
-use super::master::{run_job, JobConfig, JobReport};
+use super::cluster::run_cluster_job;
+use super::master::{JobConfig, JobReport};
 
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
@@ -33,8 +40,14 @@ pub struct ServiceReport {
 }
 
 impl ServiceReport {
+    /// Jobs per second of wall time. A ~zero or non-finite wall (empty
+    /// service, clock quantisation) reports 0.0 instead of inf/NaN.
     pub fn throughput_jobs_per_sec(&self) -> f64 {
-        self.per_job.len() as f64 / self.total_wall
+        if self.total_wall.is_finite() && self.total_wall > f64::EPSILON {
+            self.per_job.len() as f64 / self.total_wall
+        } else {
+            0.0
+        }
     }
 
     pub fn finishing_summary(&self) -> Summary {
@@ -47,24 +60,62 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
     cfg.trace
         .validate()
         .map_err(|e| anyhow::anyhow!("trace: {e}"))?;
+    let threshold = cfg.job_template.scheme.min_workers();
+    anyhow::ensure!(
+        cfg.trace.n_initial >= threshold,
+        "trace starts with {} active workers, below the {} scheme's recovery \
+         threshold of {threshold}",
+        cfg.trace.n_initial,
+        cfg.job_template.scheme.name()
+    );
     let t0 = std::time::Instant::now();
     let mut per_job = Vec::with_capacity(cfg.jobs);
     let mut workers_at_job = Vec::with_capacity(cfg.jobs);
     let mut active = cfg.trace.n_initial;
     let mut ev_idx = 0;
+    // The event (if any) that last pushed the pool below the threshold
+    // without a join restoring it.
+    let mut below: Option<usize> = None;
     for j in 0..cfg.jobs {
         // Apply elastic events scheduled before this job.
         while ev_idx < cfg.trace.events.len() && cfg.trace.events[ev_idx].time < j as f64 {
             match cfg.trace.events[ev_idx].kind {
-                EventKind::Leave(_) => active -= 1,
-                EventKind::Join(_) => active += 1,
+                EventKind::Leave(slot) => {
+                    active = active.checked_sub(1).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "job {j}: trace event {ev_idx} (leave of slot {slot}) \
+                             underflows an empty pool"
+                        )
+                    })?;
+                    if active < threshold && below.is_none() {
+                        below = Some(ev_idx);
+                    }
+                }
+                EventKind::Join(_) => {
+                    active += 1;
+                    if active >= threshold {
+                        below = None;
+                    }
+                }
             }
             ev_idx += 1;
+        }
+        if let Some(i) = below {
+            let ev = cfg.trace.events[i];
+            anyhow::bail!(
+                "job {j}: trace event {i} ({:?} at t={}) leaves {active} active \
+                 workers, below the {} scheme's recovery threshold of {threshold}",
+                ev.kind,
+                ev.time,
+                cfg.job_template.scheme.name()
+            );
         }
         let mut job_cfg = cfg.job_template.clone();
         job_cfg.n_workers = active.min(job_cfg.n_max);
         job_cfg.seed = cfg.job_template.seed.wrapping_add(j as u64);
-        let report = run_job(&job_cfg)?;
+        // Thin facade: each job is one fixed-fleet run of the cluster core.
+        let report = run_cluster_job(&job_cfg.to_cluster())
+            .map(|r| JobReport::from_cluster(&r))?;
         anyhow::ensure!(report.recovered, "job {j} failed to recover");
         per_job.push(report);
         workers_at_job.push(active);
@@ -127,5 +178,72 @@ mod tests {
         // Just structural: both jobs ran and verified independently.
         assert!(report.per_job[0].max_rel_err < 1e-2);
         assert!(report.per_job[1].max_rel_err < 1e-2);
+    }
+
+    #[test]
+    fn throughput_guard_returns_zero_for_degenerate_wall() {
+        // Empty service / ~zero wall used to report inf or NaN.
+        let empty =
+            ServiceReport { per_job: Vec::new(), workers_at_job: Vec::new(), total_wall: 0.0 };
+        assert_eq!(empty.throughput_jobs_per_sec(), 0.0);
+        let nan = ServiceReport {
+            per_job: Vec::new(),
+            workers_at_job: Vec::new(),
+            total_wall: f64::NAN,
+        };
+        assert_eq!(nan.throughput_jobs_per_sec(), 0.0);
+        let normal = ServiceReport {
+            per_job: Vec::new(),
+            workers_at_job: Vec::new(),
+            total_wall: 2.0,
+        };
+        assert_eq!(normal.throughput_jobs_per_sec(), 0.0); // 0 jobs / 2s
+    }
+
+    #[test]
+    fn leave_below_recovery_threshold_is_rejected_with_job_and_event() {
+        // BICEC K=12, 3 per worker: threshold = ceil(12/3) = 4 workers.
+        // Five leaves before job 1 drop the pool to 3.
+        let trace = ElasticTrace {
+            n_max: 8,
+            n_initial: 8,
+            events: (0..5)
+                .map(|i| ElasticEvent { time: 0.5, kind: EventKind::Leave(7 - i) })
+                .collect(),
+        };
+        let err = serve(&quick_service(3, trace)).unwrap_err().to_string();
+        assert!(err.contains("job 1"), "{err}");
+        assert!(err.contains("event 4"), "{err}");
+        assert!(err.contains("threshold of 4"), "{err}");
+    }
+
+    #[test]
+    fn trace_starting_below_threshold_is_rejected_not_panicking() {
+        // n_initial = 3 < ceil(12/3) = 4: must be a named Err, not an
+        // allocate() assert deep in job 0.
+        let err = serve(&quick_service(2, ElasticTrace::static_n(8, 3)))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("starts with 3"), "{err}");
+        assert!(err.contains("threshold of 4"), "{err}");
+    }
+
+    #[test]
+    fn join_restoring_the_pool_clears_the_violation() {
+        // Dip below threshold, then rejoin before the next job: serves.
+        let trace = ElasticTrace {
+            n_max: 8,
+            n_initial: 8,
+            events: vec![
+                ElasticEvent { time: 0.2, kind: EventKind::Leave(7) },
+                ElasticEvent { time: 0.3, kind: EventKind::Leave(6) },
+                ElasticEvent { time: 0.4, kind: EventKind::Leave(5) },
+                ElasticEvent { time: 0.5, kind: EventKind::Leave(4) },
+                ElasticEvent { time: 0.6, kind: EventKind::Leave(3) }, // active = 3
+                ElasticEvent { time: 0.7, kind: EventKind::Join(3) },  // active = 4
+            ],
+        };
+        let report = serve(&quick_service(2, trace)).unwrap();
+        assert_eq!(report.workers_at_job, vec![8, 4]);
     }
 }

@@ -1,0 +1,147 @@
+//! Service-layer N-sweep on the event-driven cluster (`hcec cluster`) —
+//! the real-coordinator counterpart of `figures::sweep`'s simulation
+//! sweeps.
+//!
+//! Each row runs the paper's scheme trio through `Engine::Cluster` with
+//! the `SimulatedLatency` backend: real reactor, real channels, real
+//! worker threads and mid-job Poisson churn, with each subtask's gemm
+//! replaced by its cost-model duration (× `time_scale`). Churn scales
+//! like the simulation sweeps: fleet-wide rate ∝ N at fixed per-node
+//! event count, horizon ∝ the shrinking run (`2 · S · tau(N)`).
+//!
+//! Reported metric is mean wall-clock computation time plus the absorbed
+//! elastic events and the per-trial failure count (a churn draw the
+//! reactor's ledger check rejects is a recorded failure, not a crash).
+
+use crate::config::ExperimentConfig;
+use crate::metrics::Table;
+use crate::rng::fold_in;
+use crate::scenario::{
+    ClusterBackendSpec, ClusterSpec, ElasticitySpec, Engine, Metric, Scenario,
+    SchemeConfig, SeedMode,
+};
+use crate::sim::Reassign;
+use crate::tas::Scheme;
+
+/// Default fleet grid for `hcec cluster` (the 2560 point costs whole
+/// seconds of thread churn; opt in via `--ns`).
+pub const CLUSTER_NS: [usize; 3] = [40, 160, 640];
+
+/// The cluster-engine scenario for one sweep row at fleet size `n`.
+/// `events_per_node` is the expected elastic events per slot within one
+/// horizon; `time_scale` converts cost-model seconds to wall sleeps.
+pub fn cluster_scenario(
+    cfg: &ExperimentConfig,
+    n: usize,
+    events_per_node: f64,
+    trials: usize,
+    time_scale: f64,
+) -> Scenario {
+    assert!(n >= cfg.s_cec, "cluster sweep N={n} below S={}", cfg.s_cec);
+    let cost = cfg.cost_model();
+    let schemes = vec![
+        SchemeConfig::Cec { k: cfg.k_cec, s: cfg.s_cec },
+        SchemeConfig::mlcec_of(cfg),
+        SchemeConfig::Bicec { k: cfg.k_bicec, s_per_worker: cfg.s_bicec },
+    ];
+    let cec = crate::tas::Cec::new(cfg.k_cec, cfg.s_cec);
+    let tau = cost.worker_time(cec.subtask_ops(cfg.job.u, cfg.job.w, cfg.job.v, n), 1.0);
+    let horizon = 2.0 * cfg.s_cec as f64 * tau;
+    let mid = schemes.iter().map(|s| s.min_active_mid_job()).max().unwrap();
+    Scenario::builder(&format!("cluster_sim_n{n}"))
+        .engine(Engine::Cluster)
+        .job(cfg.job)
+        .fleet(n, n)
+        .schemes(schemes)
+        .speed_model(cfg.speed_model())
+        .cost(cost)
+        .elasticity(ElasticitySpec::Churn {
+            n_min: (n / 2).max(mid),
+            n_initial: n,
+            rate: events_per_node * n as f64 / horizon,
+            horizon,
+            reassign: Reassign::Identity,
+        })
+        .cluster(ClusterSpec {
+            backend: ClusterBackendSpec::SimulatedLatency,
+            time_scale,
+            preempt_after_first: 0,
+        })
+        .trials(trials)
+        .seed(fold_in(cfg.seed, n as u64))
+        .seed_mode(SeedMode::PerTrial)
+        .build()
+        .expect("valid cluster sweep scenario")
+}
+
+/// One row per N: per-scheme wall computation means, elastic events
+/// absorbed by the reactor, completions received, failures.
+pub fn cluster_table(
+    cfg: &ExperimentConfig,
+    ns: &[usize],
+    events_per_node: f64,
+    trials: usize,
+    time_scale: f64,
+) -> Table {
+    let mut t = Table::new(&[
+        "N",
+        "cec_wall_s",
+        "mlcec_wall_s",
+        "bicec_wall_s",
+        "events_absorbed",
+        "completions",
+        "failures",
+    ]);
+    for &n in ns {
+        let sc = cluster_scenario(cfg, n, events_per_node, trials, time_scale);
+        let out = sc.run().expect("cluster engine records per-trial failures");
+        let walls: Vec<f64> =
+            out.per_scheme.iter().map(|s| s.mean(Metric::Computation)).collect();
+        let events: usize = out
+            .per_scheme
+            .iter()
+            .flat_map(|s| s.ok_trials().map(|t| t.reallocations))
+            .sum();
+        let completions: u64 = out
+            .per_scheme
+            .iter()
+            .flat_map(|s| s.ok_trials().map(|t| t.completions))
+            .sum();
+        let failures: usize = out.per_scheme.iter().map(|s| s.failures()).sum();
+        t.row(vec![
+            n.to_string(),
+            format!("{:.4}", walls[0]),
+            format!("{:.4}", walls[1]),
+            format!("{:.4}", walls[2]),
+            events.to_string(),
+            completions.to_string(),
+            failures.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_scenario_round_trips_through_toml() {
+        let cfg = ExperimentConfig::default();
+        let sc = cluster_scenario(&cfg, 40, 0.25, 2, 0.05);
+        let back = Scenario::from_toml(&sc.to_toml()).unwrap();
+        assert_eq!(back.to_doc(), sc.to_doc());
+        assert_eq!(back.engine, Engine::Cluster);
+    }
+
+    #[test]
+    fn cluster_table_runs_one_small_row() {
+        // One N=40 row, 1 trial, aggressively scaled down: the real
+        // reactor + 40 threads finish in tens of milliseconds.
+        let cfg = ExperimentConfig::default();
+        let t = cluster_table(&cfg, &[40], 0.25, 1, 0.02);
+        assert_eq!(t.n_rows(), 1);
+        let r = t.render();
+        assert!(r.contains("40"), "{r}");
+    }
+}

@@ -5,6 +5,7 @@
 //! paper plots; `hcec figure <id>` renders it and optionally writes CSV.
 
 mod ablations;
+mod cluster;
 mod fig1;
 mod fig2;
 mod sweep;
@@ -13,6 +14,7 @@ pub use ablations::{
     dlevel_table, hetero_table, hierarchy_table, reassign_table, straggler_sweep_table,
     transition_waste_table,
 };
+pub use cluster::{cluster_scenario, cluster_table, CLUSTER_NS};
 pub use fig1::{fig1_grid, fig1_table};
 pub use fig2::{fig2_scenario, fig2_series, fig2_table, Fig2Point, Metric};
 pub use sweep::{scaling_scenarios, scaling_table, SCALING_NS};

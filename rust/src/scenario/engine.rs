@@ -6,18 +6,24 @@
 //! | `Statics`     | `sim::simulate_many` (order-statistics DES) | `fixed`    |
 //! | `Trace`       | `TraceMonteCarlo` / `TraceSimulator` (elastic DES) | `churn`, `trace` |
 //! | `Coordinator` | `coordinator::run_job` (real threads + numerics) | `fixed` (+ preempt knob) |
+//! | `Cluster`     | `coordinator::run_cluster_job` (event-driven reactor, pluggable backends) | `fixed`, `churn`, `trace` — mid-job |
 //!
 //! Determinism contract: an outcome is a pure function of the scenario
 //! descriptor (and, for `Coordinator`, wall-clock noise in the timing
 //! fields only). Simulation engines inherit the bit-identical parallel
 //! guarantees of the trial pools.
 
-use crate::coordinator::{run_job, JobConfig};
+use crate::coordinator::{
+    run_cluster_job, run_job, ClusterBackend, ClusterConfig, ClusterElasticity,
+    ClusterReport, JobConfig, SpeedSource,
+};
 use crate::metrics::Summary;
-use crate::rng::fold_in;
-use crate::sim::{simulate_many_with_threads, TraceMonteCarlo, TraceSimulator};
+use crate::rng::{fold_in, trial_rng};
+use crate::sim::{
+    simulate_many_with_threads, ElasticTrace, TraceMonteCarlo, TraceSimulator,
+};
 
-use super::spec::{ElasticitySpec, Metric, SpeedSpec};
+use super::spec::{ClusterBackendSpec, ElasticitySpec, Metric, SpeedSpec};
 use super::Scenario;
 
 /// Which substrate executes the scenario.
@@ -31,6 +37,10 @@ pub enum Engine {
     /// Real execution on the threaded worker pool (encode → dispatch →
     /// recover → decode → verify).
     Coordinator,
+    /// The event-driven cluster core: real reactor, typed protocol,
+    /// pluggable worker backends, and mid-job join/leave re-allocation —
+    /// churn and trace elasticity become legal on the real coordinator.
+    Cluster,
 }
 
 impl Engine {
@@ -39,6 +49,7 @@ impl Engine {
             Engine::Statics => "statics",
             Engine::Trace => "trace",
             Engine::Coordinator => "coordinator",
+            Engine::Cluster => "cluster",
         }
     }
 
@@ -47,8 +58,9 @@ impl Engine {
             "statics" => Ok(Engine::Statics),
             "trace" => Ok(Engine::Trace),
             "coordinator" => Ok(Engine::Coordinator),
+            "cluster" => Ok(Engine::Cluster),
             other => Err(format!(
-                "unknown engine {other:?} (expected statics|trace|coordinator)"
+                "unknown engine {other:?} (expected statics|trace|coordinator|cluster)"
             )),
         }
     }
@@ -67,6 +79,7 @@ impl Engine {
             Engine::Statics => run_statics(scenario),
             Engine::Trace => run_trace(scenario),
             Engine::Coordinator => run_coordinator(scenario)?,
+            Engine::Cluster => run_cluster(scenario),
         };
         Ok(Outcome { scenario: scenario.name.clone(), engine: *self, per_scheme })
     }
@@ -311,6 +324,88 @@ fn trace_trial(r: crate::sim::TraceOutcome) -> TrialOutcome {
     }
 }
 
+/// Distinct counter stream for churn-trace generation, so the elastic
+/// events never correlate with the job's operand/speed draws.
+const CHURN_STREAM: u64 = 0x636c_7573_7465_7221; // "cluster!"
+
+fn run_cluster(sc: &Scenario) -> Vec<SchemeOutcome> {
+    let backend = match sc.cluster.backend {
+        ClusterBackendSpec::Native => ClusterBackend::Native,
+        ClusterBackendSpec::Pjrt => ClusterBackend::Pjrt,
+        ClusterBackendSpec::SimulatedLatency => {
+            ClusterBackend::Simulated { time_scale: sc.cluster.time_scale }
+        }
+    };
+    let speed = match &sc.speed {
+        SpeedSpec::Uniform => SpeedSource::Uniform,
+        SpeedSpec::Model(m) => SpeedSource::Model(*m),
+        SpeedSpec::Explicit(mult) => SpeedSource::Explicit(mult.clone()),
+    };
+    sc.schemes
+        .iter()
+        .map(|spec| {
+            let trials = (0..sc.trials)
+                .map(|trial| {
+                    // Same seed derivation as the coordinator engine:
+                    // trial 0 runs the scenario seed verbatim.
+                    let seed = if trial == 0 {
+                        sc.seed
+                    } else {
+                        fold_in(sc.seed, trial as u64)
+                    };
+                    let elasticity = match &sc.elasticity {
+                        ElasticitySpec::Fixed => ClusterElasticity::Fixed,
+                        ElasticitySpec::Trace { trace, .. } => {
+                            ClusterElasticity::Trace(trace.clone())
+                        }
+                        ElasticitySpec::Churn {
+                            n_min, n_initial, rate, horizon, ..
+                        } => {
+                            let mut trng =
+                                trial_rng(fold_in(sc.seed, CHURN_STREAM), trial as u64);
+                            ClusterElasticity::Trace(ElasticTrace::poisson(
+                                sc.n_max, *n_min, *n_initial, *rate, *horizon,
+                                &mut trng,
+                            ))
+                        }
+                    };
+                    let cfg = ClusterConfig {
+                        job: sc.job,
+                        scheme: spec.clone(),
+                        n_max: sc.n_max,
+                        n_workers: sc.n_workers,
+                        backend: backend.clone(),
+                        speed: speed.clone(),
+                        cost: sc.cost,
+                        elasticity,
+                        preempt_after_first: sc.cluster.preempt_after_first,
+                        seed,
+                    };
+                    // Elastic runs have legitimate per-trial failures
+                    // (e.g. a churn draw the runtime ledger check rejects):
+                    // record them instead of failing the scenario.
+                    run_cluster_job(&cfg)
+                        .map(cluster_trial)
+                        .map_err(|e| format!("{} trial {trial}: {e}", spec.name()))
+                })
+                .collect();
+            SchemeOutcome { scheme: spec.name().to_string(), trials }
+        })
+        .collect()
+}
+
+fn cluster_trial(r: ClusterReport) -> TrialOutcome {
+    TrialOutcome {
+        computation_time: r.computation_wall,
+        decode_time: r.decode_wall,
+        encode_time: r.encode_wall,
+        transition_waste: 0.0,
+        reallocations: r.elastic_events() + r.workers_preempted,
+        completions: r.completions_received as u64,
+        max_rel_err: r.max_rel_err as f64,
+    }
+}
+
 fn run_coordinator(sc: &Scenario) -> Result<Vec<SchemeOutcome>, String> {
     let speed_model = match &sc.speed {
         SpeedSpec::Model(m) => Some(*m),
@@ -529,10 +624,73 @@ mod tests {
 
     #[test]
     fn engine_parse_round_trip() {
-        for e in [Engine::Statics, Engine::Trace, Engine::Coordinator] {
+        for e in [Engine::Statics, Engine::Trace, Engine::Coordinator, Engine::Cluster] {
             assert_eq!(Engine::parse(e.as_str()).unwrap(), e);
         }
         assert!(Engine::parse("mystery").is_err());
+    }
+
+    #[test]
+    fn cluster_engine_runs_simulated_churn() {
+        use crate::scenario::{ClusterBackendSpec, ClusterSpec};
+        let cost = crate::sim::CostModel::paper_default();
+        let job = JobSpec::new(240, 240, 240);
+        // Horizon ~ a few subtask times so churn lands mid-job.
+        let scheme = crate::tas::Cec::new(2, 4);
+        let tau = cost.worker_time(
+            crate::tas::Scheme::subtask_ops(&scheme, 240, 240, 240, 8),
+            1.0,
+        );
+        let sc = Scenario::builder("cluster_churn")
+            .engine(Engine::Cluster)
+            .job(job)
+            .fleet(8, 8)
+            .schemes(vec![SchemeConfig::Cec { k: 2, s: 4 }])
+            .elasticity(crate::scenario::ElasticitySpec::Churn {
+                n_min: 4,
+                n_initial: 8,
+                rate: 2.0 / (8.0 * tau),
+                horizon: 8.0 * tau,
+                reassign: Reassign::Identity,
+            })
+            .cluster(ClusterSpec {
+                backend: ClusterBackendSpec::SimulatedLatency,
+                time_scale: 1.0,
+                preempt_after_first: 0,
+            })
+            .trials(3)
+            .seed(7)
+            .seed_mode(SeedMode::PerTrial)
+            .build()
+            .unwrap();
+        let out = sc.run().unwrap();
+        assert_eq!(out.per_scheme.len(), 1);
+        let s = &out.per_scheme[0];
+        assert_eq!(s.trials.len(), 3);
+        for t in s.ok_trials() {
+            assert!(t.computation_time > 0.0);
+            assert_eq!(t.max_rel_err, 0.0, "simulated backend ships no bytes");
+            assert!(t.completions >= 8, "k completions per set floor");
+        }
+        assert_eq!(s.failures(), 0, "{:?}", s.trials);
+    }
+
+    #[test]
+    fn cluster_engine_native_matches_verification() {
+        let sc = Scenario::builder("cluster_native")
+            .engine(Engine::Cluster)
+            .job(JobSpec::new(64, 32, 16))
+            .fleet(8, 8)
+            .schemes(vec![SchemeConfig::Cec { k: 4, s: 6 }])
+            .speed(SpeedSpec::Uniform)
+            .trials(1)
+            .seed(3)
+            .build()
+            .unwrap();
+        let out = sc.run().unwrap();
+        let trial = out.per_scheme[0].ok_trials().next().unwrap();
+        assert!(trial.max_rel_err < 1e-3, "err {}", trial.max_rel_err);
+        assert!(trial.finishing_time() > 0.0);
     }
 
     #[test]

@@ -14,7 +14,9 @@
 //! * **engine** — [`Engine::Statics`] (order-statistics DES via
 //!   `sim::simulate_many`), [`Engine::Trace`] (elastic-trace DES via
 //!   `TraceMonteCarlo` / `TraceSimulator`), [`Engine::Coordinator`] (real
-//!   threaded execution via `coordinator::run_job`);
+//!   threaded execution via `coordinator::run_job`), [`Engine::Cluster`]
+//!   (the event-driven reactor core with mid-job elasticity and pluggable
+//!   backends via `coordinator::run_cluster_job`);
 //! * **outcome** — one [`Outcome`] shape for all three: per-scheme,
 //!   per-trial finishing/computation/decode/encode times, transition
 //!   waste, and summary percentiles.
@@ -31,7 +33,8 @@ mod toml_io;
 
 pub use engine::{Engine, Outcome, SchemeOutcome, TrialOutcome};
 pub use spec::{
-    CoordinatorSpec, ElasticitySpec, Metric, SchemeConfig, SeedMode, SpeedSpec,
+    ClusterBackendSpec, ClusterSpec, CoordinatorSpec, ElasticitySpec, Metric,
+    SchemeConfig, SeedMode, SpeedSpec,
 };
 
 use crate::config::ExperimentConfig;
@@ -66,6 +69,7 @@ pub struct Scenario {
     /// `crate::threads` heuristic; still clamped by `HCEC_THREADS`).
     pub threads: Option<usize>,
     pub coordinator: CoordinatorSpec,
+    pub cluster: ClusterSpec,
 }
 
 impl Scenario {
@@ -179,6 +183,8 @@ impl Scenario {
                     );
                 }
             }
+            // The cluster engine absorbs every elasticity kind mid-job.
+            Engine::Cluster => {}
         }
         // seed_mode must describe the derivation the engine actually runs:
         // churn trials are always counter-derived (`trial_rng(seed, i)` in
@@ -224,6 +230,103 @@ impl Scenario {
                      sized by fleet.n_workers — drop the threads key"
                         .into(),
                 );
+            }
+        }
+        if self.engine == Engine::Cluster {
+            self.validate_cluster()?;
+        }
+        Ok(())
+    }
+
+    /// Cluster-engine checks: backend knobs, seed-mode provenance, and
+    /// static mid-job feasibility of the elasticity source (the reactor's
+    /// per-event ledger check remains the authoritative runtime guard).
+    fn validate_cluster(&self) -> Result<(), String> {
+        let c = &self.cluster;
+        if !(c.time_scale > 0.0 && c.time_scale.is_finite()) {
+            return Err(format!(
+                "cluster.time_scale = {} must be finite and positive",
+                c.time_scale
+            ));
+        }
+        if c.backend != ClusterBackendSpec::SimulatedLatency && c.time_scale != 1.0 {
+            return Err(format!(
+                "cluster.time_scale only applies to backend \"simulated_latency\" \
+                 (backend is {:?})",
+                c.backend
+            ));
+        }
+        if c.preempt_after_first >= self.n_workers {
+            return Err(format!(
+                "cluster.preempt_after_first = {} would preempt every one of the {} \
+                 workers",
+                c.preempt_after_first, self.n_workers
+            ));
+        }
+        if self.trials > 1 && self.seed_mode != SeedMode::PerTrial {
+            return Err(
+                "multi-trial cluster runs derive trial i's seed as fold_in(seed, i); \
+                 set seed_mode = \"per_trial\" (trial 0 still runs the scenario seed \
+                 verbatim)"
+                    .into(),
+            );
+        }
+        if self.threads.is_some() {
+            return Err(
+                "scenario.threads budgets the simulation trial pools; the cluster \
+                 engine runs a real worker pool sized by the fleet — drop the \
+                 threads key"
+                    .into(),
+            );
+        }
+        // Mid-job feasibility: a leave must never take the pool below the
+        // largest per-scheme recovery threshold.
+        let mid = self
+            .schemes
+            .iter()
+            .map(|s| s.min_active_mid_job())
+            .max()
+            .unwrap_or(1);
+        match &self.elasticity {
+            ElasticitySpec::Fixed => {}
+            ElasticitySpec::Churn { n_min, n_initial, .. } => {
+                if *n_initial != self.n_workers {
+                    return Err(format!(
+                        "the cluster engine spawns fleet.n_workers = {} workers; \
+                         elasticity.n_initial = {n_initial} must match",
+                        self.n_workers
+                    ));
+                }
+                if *n_min < mid {
+                    return Err(format!(
+                        "elasticity.n_min = {n_min} is below the mid-job recovery \
+                         threshold {mid} (max over the scheme list)"
+                    ));
+                }
+            }
+            ElasticitySpec::Trace { trace, .. } => {
+                if trace.n_initial != self.n_workers {
+                    return Err(format!(
+                        "the cluster engine spawns fleet.n_workers = {} workers; the \
+                         elasticity trace starts with {}",
+                        self.n_workers, trace.n_initial
+                    ));
+                }
+                let mut active = trace.n_initial;
+                for (i, ev) in trace.events.iter().enumerate() {
+                    match ev.kind {
+                        crate::sim::EventKind::Leave(_) => active -= 1,
+                        crate::sim::EventKind::Join(_) => active += 1,
+                    }
+                    if active < mid {
+                        return Err(format!(
+                            "elasticity trace event {i} (t={}) drops the pool to \
+                             {active} active workers, below the mid-job recovery \
+                             threshold {mid}",
+                            ev.time
+                        ));
+                    }
+                }
             }
         }
         Ok(())
@@ -456,6 +559,7 @@ impl ScenarioBuilder {
                 seed_mode: SeedMode::Sequential,
                 threads: None,
                 coordinator: CoordinatorSpec::default(),
+                cluster: ClusterSpec::default(),
             },
         }
     }
@@ -540,6 +644,11 @@ impl ScenarioBuilder {
 
     pub fn coordinator(mut self, spec: CoordinatorSpec) -> Self {
         self.inner.coordinator = spec;
+        self
+    }
+
+    pub fn cluster(mut self, spec: ClusterSpec) -> Self {
+        self.inner.cluster = spec;
         self
     }
 
@@ -684,6 +793,94 @@ mod tests {
         let bad = SpeedModel::BernoulliSlowdown { p: 0.5, slowdown: 0.5, jitter: 0.05 };
         let err = base().speed_model(bad).build().unwrap_err();
         assert!(err.contains("slowdown"), "{err}");
+    }
+
+    #[test]
+    fn cluster_validation_guards_backend_and_feasibility() {
+        use crate::scenario::{ClusterBackendSpec, ClusterSpec};
+        let cluster_base = || {
+            Scenario::builder("cl")
+                .engine(Engine::Cluster)
+                .fleet(8, 8)
+                .schemes(vec![SchemeConfig::Cec { k: 2, s: 4 }])
+                .job(crate::workload::JobSpec::new(240, 240, 240))
+                .trials(1)
+        };
+        // time_scale only with the simulated backend.
+        let err = cluster_base()
+            .cluster(ClusterSpec {
+                backend: ClusterBackendSpec::Native,
+                time_scale: 0.5,
+                preempt_after_first: 0,
+            })
+            .build()
+            .unwrap_err();
+        assert!(err.contains("time_scale"), "{err}");
+        // Trace must start at the fleet size.
+        use crate::sim::{ElasticTrace, Reassign};
+        let err = cluster_base()
+            .elasticity(ElasticitySpec::Trace {
+                path: "inline".into(),
+                trace: ElasticTrace::static_n(8, 6),
+                reassign: Reassign::Identity,
+            })
+            .build()
+            .unwrap_err();
+        assert!(err.contains("starts with 6"), "{err}");
+        // A trace dipping below the mid-job threshold is named.
+        use crate::sim::{ElasticEvent, EventKind};
+        let trace = ElasticTrace {
+            n_max: 8,
+            n_initial: 8,
+            events: (0..7)
+                .map(|i| ElasticEvent {
+                    time: 1.0 + i as f64,
+                    kind: EventKind::Leave(7 - i),
+                })
+                .collect(),
+        };
+        let err = cluster_base()
+            .elasticity(ElasticitySpec::Trace {
+                path: "inline".into(),
+                trace,
+                reassign: Reassign::Identity,
+            })
+            .build()
+            .unwrap_err();
+        assert!(err.contains("event 6"), "{err}");
+        assert!(err.contains("threshold 2"), "{err}");
+        // Churn n_min below the threshold is rejected; at it, accepted.
+        let churn = |n_min| ElasticitySpec::Churn {
+            n_min,
+            n_initial: 8,
+            rate: 1.0,
+            horizon: 10.0,
+            reassign: Reassign::Identity,
+        };
+        let err = cluster_base()
+            .elasticity(churn(1))
+            .seed_mode(SeedMode::PerTrial)
+            .build()
+            .unwrap_err();
+        assert!(err.contains("mid-job recovery threshold 2"), "{err}");
+        let ok = cluster_base()
+            .elasticity(churn(2))
+            .seed_mode(SeedMode::PerTrial)
+            .trials(2)
+            .build();
+        assert!(ok.is_ok(), "{ok:?}");
+    }
+
+    #[test]
+    fn cluster_fixed_defaults_validate() {
+        let sc = Scenario::builder("cl")
+            .engine(Engine::Cluster)
+            .fleet(8, 8)
+            .schemes(vec![SchemeConfig::Cec { k: 2, s: 4 }])
+            .trials(1)
+            .build()
+            .unwrap();
+        assert_eq!(sc.cluster, crate::scenario::ClusterSpec::default());
     }
 
     #[test]

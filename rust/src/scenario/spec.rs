@@ -70,6 +70,37 @@ impl SchemeConfig {
     pub fn paper_trio(cfg: &ExperimentConfig) -> Vec<Self> {
         vec![Self::cec_of(cfg), Self::mlcec_of(cfg), Self::bicec_of(cfg)]
     }
+
+    /// Fewest active workers the scheme can *start* a job with: CEC-family
+    /// allocation needs N >= S; BICEC needs enough pre-assigned subtasks
+    /// to reach its threshold (ceil(K / s_per_worker)).
+    ///
+    /// Distinct from `tas::Scheme::min_workers`, which bounds *mid-run
+    /// re-allocation* in the elastic DES — there BICEC is 1, because its
+    /// allocation never changes and interval retention keeps partial
+    /// work. Here a job starts from zero completions, so the full
+    /// threshold must be reachable.
+    pub fn min_workers(&self) -> usize {
+        match self {
+            SchemeConfig::Cec { s, .. } | SchemeConfig::Mlcec { s, .. } => *s,
+            SchemeConfig::Hetero { s_avg, .. } => *s_avg,
+            SchemeConfig::Bicec { k, s_per_worker } => (k + s_per_worker - 1) / s_per_worker,
+        }
+    }
+
+    /// Fewest active workers a *running* cluster job can drop to and still
+    /// possibly recover under the frozen set geometry: each PerSet group
+    /// needs K distinct contributors, BICEC needs K completions total.
+    /// Necessary, not sufficient — the cluster reactor's per-event ledger
+    /// check is the authoritative guard.
+    pub fn min_active_mid_job(&self) -> usize {
+        match self {
+            SchemeConfig::Cec { k, .. }
+            | SchemeConfig::Mlcec { k, .. }
+            | SchemeConfig::Hetero { k, .. } => *k,
+            SchemeConfig::Bicec { k, s_per_worker } => (k + s_per_worker - 1) / s_per_worker,
+        }
+    }
 }
 
 /// Where worker speed multipliers come from.
@@ -153,6 +184,50 @@ impl Default for CoordinatorSpec {
     }
 }
 
+/// Worker execution engine for the `Engine::Cluster` variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterBackendSpec {
+    /// Native blocked gemm.
+    Native,
+    /// AOT PJRT artifacts (`make artifacts` + the `pjrt` cargo feature).
+    Pjrt,
+    /// Latency-only workers: real reactor, channels and ledger, no
+    /// numerics — the honest way to drive the coordinator at N >= 640.
+    SimulatedLatency,
+}
+
+impl ClusterBackendSpec {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ClusterBackendSpec::Native => "native",
+            ClusterBackendSpec::Pjrt => "pjrt",
+            ClusterBackendSpec::SimulatedLatency => "simulated_latency",
+        }
+    }
+}
+
+/// Knobs that only the event-driven cluster engine reads.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClusterSpec {
+    pub backend: ClusterBackendSpec,
+    /// Wall-clock seconds per cost-model second for the simulated backend
+    /// (elastic trace event times are on the cost-model clock there).
+    pub time_scale: f64,
+    /// Legacy knob: preempt this many workers (highest slots) after their
+    /// first delivery.
+    pub preempt_after_first: usize,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        Self {
+            backend: ClusterBackendSpec::Native,
+            time_scale: 1.0,
+            preempt_after_first: 0,
+        }
+    }
+}
+
 /// Which per-trial number a summary is taken over.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Metric {
@@ -192,6 +267,18 @@ mod tests {
         assert_eq!(trio[2], SchemeConfig::Bicec { k: 800, s_per_worker: 80 });
         let names: Vec<&str> = trio.iter().map(|s| s.name()).collect();
         assert_eq!(names, ["cec", "mlcec", "bicec"]);
+    }
+
+    #[test]
+    fn recovery_thresholds_per_scheme() {
+        let cec = SchemeConfig::Cec { k: 10, s: 20 };
+        assert_eq!(cec.min_workers(), 20);
+        assert_eq!(cec.min_active_mid_job(), 10);
+        let bicec = SchemeConfig::Bicec { k: 800, s_per_worker: 80 };
+        assert_eq!(bicec.min_workers(), 10); // ceil(800 / 80)
+        assert_eq!(bicec.min_active_mid_job(), 10);
+        let odd = SchemeConfig::Bicec { k: 7, s_per_worker: 3 };
+        assert_eq!(odd.min_workers(), 3); // ceil(7 / 3)
     }
 
     #[test]

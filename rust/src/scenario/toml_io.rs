@@ -5,7 +5,7 @@
 //! ```toml
 //! [scenario]
 //! name = "fig2a_n40"
-//! engine = "statics"            # statics | trace | coordinator
+//! engine = "statics"            # statics | trace | coordinator | cluster
 //! trials = 20
 //! seed = 2021
 //! seed_mode = "sequential"      # sequential | per_trial
@@ -49,6 +49,11 @@
 //! [coordinator]                 # coordinator engine only
 //! backend = "native"            # native | pjrt
 //! preempt_after_first = 0
+//!
+//! [cluster]                     # cluster engine only
+//! backend = "native"            # native | pjrt | simulated_latency
+//! time_scale = 1.0              # simulated_latency only: wall s per model s
+//! preempt_after_first = 0
 //! ```
 //!
 //! Unknown keys are an error — scenario-file typos must not silently run a
@@ -61,7 +66,10 @@ use crate::tas::DLevelPolicy;
 use crate::workload::JobSpec;
 
 use super::engine::Engine;
-use super::spec::{CoordinatorSpec, ElasticitySpec, SchemeConfig, SeedMode, SpeedSpec};
+use super::spec::{
+    ClusterBackendSpec, ClusterSpec, CoordinatorSpec, ElasticitySpec, SchemeConfig,
+    SeedMode, SpeedSpec,
+};
 use super::Scenario;
 
 impl Scenario {
@@ -134,6 +142,19 @@ impl Scenario {
             doc.insert(
                 "coordinator.preempt_after_first",
                 Value::Int(self.coordinator.preempt_after_first as i64),
+            );
+        }
+        if self.engine == Engine::Cluster {
+            doc.insert(
+                "cluster.backend",
+                Value::Str(self.cluster.backend.as_str().into()),
+            );
+            if self.cluster.backend == ClusterBackendSpec::SimulatedLatency {
+                doc.insert("cluster.time_scale", Value::Float(self.cluster.time_scale));
+            }
+            doc.insert(
+                "cluster.preempt_after_first",
+                Value::Int(self.cluster.preempt_after_first as i64),
             );
         }
         doc
@@ -417,6 +438,31 @@ impl<'a> Reader<'a> {
                 coord.preempt_after_first = p;
             }
             builder = builder.coordinator(coord);
+        }
+        // Same consumption rule for [cluster]: only the cluster engine
+        // reads it, so a misplaced section is an unknown-key error.
+        if engine == Engine::Cluster {
+            let mut cl = ClusterSpec::default();
+            if let Some(backend) = self.str_at("cluster.backend")? {
+                cl.backend = match backend {
+                    "native" => ClusterBackendSpec::Native,
+                    "pjrt" => ClusterBackendSpec::Pjrt,
+                    "simulated_latency" => ClusterBackendSpec::SimulatedLatency,
+                    other => {
+                        return Err(format!(
+                            "cluster.backend: unknown backend {other:?} \
+                             (native|pjrt|simulated_latency)"
+                        ))
+                    }
+                };
+            }
+            if let Some(ts) = self.f64_at("cluster.time_scale")? {
+                cl.time_scale = ts;
+            }
+            if let Some(p) = self.usize_at("cluster.preempt_after_first")? {
+                cl.preempt_after_first = p;
+            }
+            builder = builder.cluster(cl);
         }
         // Skip builder validation here: from_doc validates after the
         // unknown-key check so typos are reported before semantic errors.
@@ -707,6 +753,47 @@ jitter = 0.05
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn cluster_scenario_round_trips() {
+        use crate::scenario::{ClusterBackendSpec, ClusterSpec, SeedMode};
+        use crate::sim::Reassign;
+        let sc = ScenarioBuilder::new("cluster_sim")
+            .engine(Engine::Cluster)
+            .fleet(16, 16)
+            .job(JobSpec::new(240, 240, 240))
+            .schemes(vec![SchemeConfig::Cec { k: 2, s: 4 }])
+            .elasticity(ElasticitySpec::Churn {
+                n_min: 8,
+                n_initial: 16,
+                rate: 1.0,
+                horizon: 5.0,
+                reassign: Reassign::Identity,
+            })
+            .cluster(ClusterSpec {
+                backend: ClusterBackendSpec::SimulatedLatency,
+                time_scale: 0.001,
+                preempt_after_first: 0,
+            })
+            .trials(2)
+            .seed_mode(SeedMode::PerTrial)
+            .build()
+            .unwrap();
+        let text = sc.to_toml();
+        assert!(text.contains("simulated_latency"), "{text}");
+        let back = Scenario::from_toml(&text).unwrap();
+        assert_eq!(back.to_doc(), sc.to_doc());
+        assert_eq!(back.cluster, sc.cluster);
+        assert_eq!(back.engine, Engine::Cluster);
+    }
+
+    #[test]
+    fn cluster_section_rejected_for_other_engines() {
+        let text = format!("{FIG2A}\n[cluster]\nbackend = \"native\"\n");
+        let err = Scenario::from_toml(&text).unwrap_err();
+        assert!(err.contains("unknown scenario key"), "{err}");
+        assert!(err.contains("cluster.backend"), "{err}");
     }
 
     #[test]

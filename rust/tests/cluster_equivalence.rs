@@ -1,0 +1,170 @@
+//! Facade equivalence and cluster-engine integration:
+//!
+//! * `run_job` / `serve` are thin facades over `run_cluster_job` — the
+//!   deterministic report fields must be identical to driving the core
+//!   directly at the same seed (wall-clock fields and arrival-order
+//!   dependent counts are inherently racy on a real pool and are checked
+//!   by bound, not equality).
+//! * The `Engine::Cluster` scenario variant runs the real reactor with
+//!   `SimulatedLatency` workers at N = 640 — the acceptance bar mirroring
+//!   the simulation-side sweeps.
+
+use hcec::coordinator::{
+    run_cluster_job, run_job, serve, ExecBackend, JobConfig, JobReport, SchemeConfig,
+    ServiceConfig,
+};
+use hcec::scenario::{
+    ClusterBackendSpec, ClusterSpec, ElasticitySpec, Engine, Scenario, SeedMode,
+};
+use hcec::sim::{ElasticTrace, Reassign, SpeedModel};
+use hcec::workload::JobSpec;
+
+fn native_cfg(scheme: SchemeConfig, seed: u64) -> JobConfig {
+    JobConfig {
+        job: JobSpec::new(120, 64, 48),
+        scheme,
+        n_workers: 10,
+        n_max: 10,
+        backend: ExecBackend::Native,
+        speed_model: Some(SpeedModel::BernoulliSlowdown {
+            p: 0.5,
+            slowdown: 3.0,
+            jitter: 0.05,
+        }),
+        preempt_after_first: 0,
+        seed,
+    }
+}
+
+/// The fields of a `JobReport` that are a pure function of the seed (no
+/// arrival-order or wall-clock dependence).
+fn deterministic_fields(r: &JobReport) -> (&'static str, usize, bool) {
+    (r.scheme, r.completions_used, r.recovered)
+}
+
+#[test]
+fn run_job_facade_matches_cluster_core_per_scheme() {
+    for scheme in [
+        SchemeConfig::Cec { k: 6, s: 8 },
+        SchemeConfig::Mlcec {
+            k: 6,
+            s: 8,
+            policy: hcec::tas::DLevelPolicy::LinearRamp,
+        },
+        SchemeConfig::Bicec { k: 24, s_per_worker: 4 },
+    ] {
+        let cfg = native_cfg(scheme, 41);
+        let facade = run_job(&cfg).unwrap();
+        let core = run_cluster_job(&cfg.to_cluster()).unwrap();
+        assert_eq!(
+            deterministic_fields(&facade),
+            (core.scheme, core.completions_used, core.recovered),
+            "{} facade diverged from the core",
+            facade.scheme
+        );
+        // Both decode the same coded problem from the same operand draw:
+        // whatever K completions arrive first, the recovered product must
+        // verify against the same baseline.
+        assert!(facade.max_rel_err < 1e-2, "facade err {}", facade.max_rel_err);
+        assert!(core.max_rel_err < 1e-2, "core err {}", core.max_rel_err);
+        // Every credited completion was received first.
+        assert!(facade.completions_received >= facade.completions_used);
+        assert_eq!(core.joins + core.leaves, 0, "fixed fleet absorbs no events");
+    }
+}
+
+#[test]
+fn run_job_facade_preserves_preempt_knob() {
+    let mut cfg = native_cfg(SchemeConfig::Bicec { k: 24, s_per_worker: 4 }, 9);
+    cfg.preempt_after_first = 2;
+    let facade = run_job(&cfg).unwrap();
+    let core = run_cluster_job(&cfg.to_cluster()).unwrap();
+    assert!(facade.recovered && core.recovered);
+    assert!(facade.workers_preempted <= 2);
+    assert!(core.workers_preempted <= 2);
+    // The knob is not an elastic event: the trace counters stay zero.
+    assert_eq!((core.joins, core.leaves), (0, 0));
+}
+
+#[test]
+fn serve_facade_reports_match_independent_cluster_jobs() {
+    let template = JobConfig {
+        job: JobSpec::new(48, 32, 16),
+        scheme: SchemeConfig::Bicec { k: 12, s_per_worker: 3 },
+        n_workers: 8,
+        n_max: 8,
+        backend: ExecBackend::Native,
+        speed_model: None,
+        preempt_after_first: 0,
+        seed: 5,
+    };
+    let report = serve(&ServiceConfig {
+        job_template: template.clone(),
+        jobs: 3,
+        trace: ElasticTrace::static_n(8, 8),
+    })
+    .unwrap();
+    assert_eq!(report.per_job.len(), 3);
+    for (j, job_report) in report.per_job.iter().enumerate() {
+        let mut cfg = template.clone();
+        cfg.seed = template.seed.wrapping_add(j as u64);
+        let direct = run_cluster_job(&cfg.to_cluster()).unwrap();
+        assert_eq!(
+            deterministic_fields(job_report),
+            (direct.scheme, direct.completions_used, direct.recovered),
+            "job {j} diverged from a direct core run at the same seed"
+        );
+        assert!(job_report.max_rel_err < 1e-2);
+    }
+}
+
+#[test]
+fn cluster_engine_simulated_latency_at_n640() {
+    // The acceptance bar: `engine = "cluster"` with the SimulatedLatency
+    // backend at N >= 640 — 640 real worker threads, typed protocol,
+    // sharded ledger, mid-job churn. time_scale shrinks the cost-model
+    // subtask (~0.72ms at N=640) to ~36us of wall sleep per subtask.
+    let sc = Scenario::builder("test_cluster_n640")
+        .engine(Engine::Cluster)
+        .job(JobSpec::paper_square())
+        .fleet(640, 640)
+        .schemes(vec![SchemeConfig::Cec { k: 10, s: 20 }])
+        .elasticity(ElasticitySpec::Churn {
+            n_min: 320,
+            n_initial: 640,
+            rate: 1111.0, // ~32 expected events in the horizon
+            horizon: 0.0288,
+            reassign: Reassign::Identity,
+        })
+        .cluster(ClusterSpec {
+            backend: ClusterBackendSpec::SimulatedLatency,
+            time_scale: 0.05,
+            preempt_after_first: 0,
+        })
+        .trials(1)
+        .seed(11)
+        .seed_mode(SeedMode::PerTrial)
+        .build()
+        .unwrap();
+    let out = sc.run().unwrap();
+    let s = &out.per_scheme[0];
+    assert_eq!(s.failures(), 0, "{:?}", s.trials);
+    let trial = s.ok_trials().next().unwrap();
+    // 640 sets x K=10 credited completions is the floor.
+    assert!(trial.completions >= 6400, "completions {}", trial.completions);
+    assert_eq!(trial.max_rel_err, 0.0, "latency backend ships no bytes");
+    assert!(trial.computation_time > 0.0);
+}
+
+#[test]
+fn checked_in_cluster_examples_parse_and_validate() {
+    for name in ["scenario_cluster_churn.toml", "scenario_cluster_n640_sim.toml"] {
+        let path = format!("{}/../examples/{name}", env!("CARGO_MANIFEST_DIR"));
+        let sc = Scenario::from_file(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(sc.engine, Engine::Cluster, "{name}");
+        assert_eq!(sc.cluster.backend, ClusterBackendSpec::SimulatedLatency, "{name}");
+        // The file must round-trip through the Doc unchanged.
+        let back = Scenario::from_toml(&sc.to_toml()).unwrap();
+        assert_eq!(back.to_doc(), sc.to_doc(), "{name}");
+    }
+}
