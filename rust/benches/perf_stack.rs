@@ -267,6 +267,7 @@ fn main() {
             backend: hcec::scenario::ClusterBackendSpec::SimulatedLatency,
             time_scale: 0.05,
             preempt_after_first: 0,
+            backfill: hcec::scenario::BackfillSpec::On,
         })
         .trials(1)
         .seed(11)
@@ -283,6 +284,43 @@ fn main() {
         &r,
         &[("n", cluster_n as f64), ("protocol_events_per_sec", events_per_sec(&r, events))],
     );
+
+    // Same fleet under mid-job Poisson churn with the elastic planner's
+    // re-balancing on (leave-backfill + join-shed): the delta vs the fixed
+    // row tracks re-planning overhead, not numerics.
+    let churn_tau = cost.worker_time(
+        Cec::new(10, 20).subtask_ops(job.u, job.w, job.v, cluster_n),
+        1.0,
+    );
+    let churn_horizon = 2.0 * 20.0 * churn_tau;
+    let backfill_sc = Scenario::builder(&format!("bench_cluster_backfill_n{cluster_n}"))
+        .engine(Engine::Cluster)
+        .job(job)
+        .fleet(cluster_n, cluster_n)
+        .schemes(vec![SchemeConfig::Cec { k: 10, s: 20 }])
+        .elasticity(ElasticitySpec::Churn {
+            n_min: cluster_n / 2,
+            n_initial: cluster_n,
+            rate: 0.25 * cluster_n as f64 / churn_horizon,
+            horizon: churn_horizon,
+            reassign: Reassign::Identity,
+        })
+        .cluster(hcec::scenario::ClusterSpec {
+            backend: hcec::scenario::ClusterBackendSpec::SimulatedLatency,
+            time_scale: 0.05,
+            preempt_after_first: 0,
+            backfill: hcec::scenario::BackfillSpec::On,
+        })
+        .trials(1)
+        .seed(11)
+        .seed_mode(SeedMode::PerTrial)
+        .build()
+        .expect("valid cluster backfill bench scenario");
+    let r = Bench::new(format!("cluster sim cec n{cluster_n} backfill"))
+        .samples(3, 50)
+        .run(|| backfill_sc.run().expect("cluster engine records failures per trial"));
+    r.print();
+    report.push(&r, &[("n", cluster_n as f64)]);
 
     if artifacts_available() {
         println!("\n-- PJRT execute latency (compiled-once artifacts) --");

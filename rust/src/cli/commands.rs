@@ -215,8 +215,15 @@ pub fn cluster(args: &Args) -> Result<(), String> {
     }
     // The full paper trials are minutes of wall sleep; default smaller.
     let trials = args.parse_flag::<usize>("trials")?.unwrap_or(3);
+    // Planner re-balancing policy: on (default) | off | compare (paired
+    // <scheme>/<scheme>+backfill rows — the waste sweep).
+    let backfill = match args.flag("backfill") {
+        None => crate::scenario::BackfillSpec::On,
+        Some(s) => crate::scenario::BackfillSpec::parse(s)
+            .map_err(|e| format!("--backfill: {e}"))?,
+    };
     emit(
-        &figures::cluster_table(&cfg, &ns, rate, trials, scale),
+        &figures::cluster_table(&cfg, &ns, rate, trials, scale, backfill),
         "cluster_nsweep",
         args,
     )

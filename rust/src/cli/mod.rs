@@ -4,6 +4,7 @@
 //! ```text
 //! hcec run <scenario.toml> [--csv DIR]
 //! hcec cluster [--ns 40,160,640] [--rate R] [--trials N] [--scale S]
+//!              [--backfill on|off|compare]
 //! hcec figure <1|2a|2b|2c|2d|all> [--config F] [--csv DIR] [--trials N]
 //! hcec run [--scheme cec|mlcec|bicec] [--backend native|pjrt]
 //!          [--n N] [--preempt P] [--seed S]
@@ -34,7 +35,9 @@ fn known_flags(command: &str) -> Option<&'static [&'static str]> {
         "trace" => Some(&["config", "trials", "seed", "csv", "rate", "file"]),
         "sweep" => Some(&["config", "trials", "seed", "csv", "slowdowns", "probs"]),
         "scaling" => Some(&["config", "trials", "seed", "csv", "ns", "rate"]),
-        "cluster" => Some(&["config", "trials", "seed", "csv", "ns", "rate", "scale"]),
+        "cluster" => {
+            Some(&["config", "trials", "seed", "csv", "ns", "rate", "scale", "backfill"])
+        }
         "reassign" => Some(&["config", "trials", "seed", "csv", "rate"]),
         "serve" => Some(&["scheme", "backend", "jobs"]),
         "visualize" | "calibrate" | "help" => Some(&[]),
@@ -115,10 +118,13 @@ USAGE:
       with fleet-proportional churn (R events per node per horizon),
       on the deterministic parallel Monte-Carlo engine (HCEC_THREADS).
   hcec cluster [--ns 40,160,640] [--rate R] [--trials N] [--scale S]
+               [--backfill on|off|compare]
       Service-layer N-sweep on the event-driven cluster core: real
       reactor, channels and worker threads with SimulatedLatency
       subtasks (cost-model seconds x S of wall sleep) and mid-job
-      Poisson churn absorbed by TAS re-allocation.
+      Poisson churn absorbed by the elastic planner. Reports mean wall
+      time AND mean transition waste per scheme; --backfill compare
+      pairs <scheme>/<scheme>+backfill rows (the waste sweep).
   hcec dlevels [--trials N]
       MLCEC d-level policy ablation (Ext-T2).
   hcec reassign [--rate R] [--trials N]

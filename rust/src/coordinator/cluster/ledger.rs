@@ -145,6 +145,20 @@ impl RecoveryLedger {
     }
 }
 
+/// The ledger is the cluster's authoritative completion state, so it is
+/// also the planner's view of it: the frozen-geometry re-planner
+/// (`tas::planner::FrozenPlanner`) reads deficits and completeness through
+/// this trait when pricing backfill/shed/joiner deltas.
+impl crate::tas::planner::GroupState for RecoveryLedger {
+    fn have(&self, group: usize) -> usize {
+        RecoveryLedger::have(self, group)
+    }
+
+    fn group_complete(&self, group: usize) -> bool {
+        RecoveryLedger::group_complete(self, group)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -49,6 +49,7 @@ use crate::rng::default_rng;
 use crate::runtime::{artifacts_available, default_artifact_dir, Runtime};
 use crate::scenario::SchemeConfig;
 use crate::sim::{CostModel, ElasticEvent, ElasticTrace, EventKind, SpeedModel, WorkerSpeeds};
+use crate::tas::planner::{FrozenPlan, FrozenPlanner, HolderState, QueueUpdate};
 use crate::tas::{RecoveryRule, Scheme};
 use crate::workload::JobSpec;
 
@@ -102,6 +103,11 @@ pub struct ClusterConfig {
     /// Legacy knob: preempt this many workers (highest slots) after each
     /// ships one completion.
     pub preempt_after_first: usize,
+    /// Planner re-balancing on elastic events: a leave's scarce sets are
+    /// backfilled onto under-loaded holders, and a join sheds queued sets
+    /// off strictly-slower holders. Waste accounting and ledger-driven
+    /// queue filtering stay on either way.
+    pub backfill: bool,
     pub seed: u64,
 }
 
@@ -118,6 +124,7 @@ impl ClusterConfig {
             cost: CostModel::paper_default(),
             elasticity: ClusterElasticity::Fixed,
             preempt_after_first: 0,
+            backfill: true,
             seed: 0,
         }
     }
@@ -141,6 +148,18 @@ pub struct ClusterReport {
     pub leaves: usize,
     /// Credited completions delivered by mid-job joiners.
     pub joiner_completions: usize,
+    /// Priced transition waste over the planner's elastic-event deltas
+    /// (task-fraction units at the frozen granularity — the same metric the
+    /// DES reports; see `tas::planner` / EXPERIMENTS §Planner). Identically
+    /// 0 for BICEC.
+    pub transition_waste: f64,
+    /// Elastic events whose plan changed a PerSet assignment (joiner lists,
+    /// backfills, sheds, ledger re-filters).
+    pub reallocations: usize,
+    /// Scarce sets re-assigned from departed slots to surviving holders.
+    pub backfills: usize,
+    /// Queued sets moved off strictly-slower holders onto joiners.
+    pub sheds: usize,
     pub max_rel_err: f32,
     pub recovered: bool,
     /// Human-readable protocol milestones (elastic events, preemptions,
@@ -336,8 +355,17 @@ pub fn run_cluster_job(cfg: &ClusterConfig) -> Result<ClusterReport> {
         time_scale,
         n_initial: n,
         preempt_after_first: cfg.preempt_after_first,
-        scheme_s,
-        bicec_s_per,
+        planner: FrozenPlanner {
+            rule,
+            s_cap: scheme_s,
+            bicec_s_per,
+            backfill: cfg.backfill,
+        },
+        transition_waste: 0.0,
+        reallocs: 0,
+        backfills: 0,
+        sheds: 0,
+        deficits: Vec::new(),
         t_comp: Instant::now(),
     };
     for (slot, list) in alloc.lists.iter().enumerate() {
@@ -396,6 +424,10 @@ pub fn run_cluster_job(cfg: &ClusterConfig) -> Result<ClusterReport> {
         joins: reactor.joins,
         leaves: reactor.leaves,
         joiner_completions: reactor.joiner_credits,
+        transition_waste: reactor.transition_waste,
+        reallocations: reactor.reallocs,
+        backfills: reactor.backfills,
+        sheds: reactor.sheds,
         max_rel_err,
         recovered: true,
         timeline: std::mem::take(&mut reactor.timeline),
@@ -480,9 +512,19 @@ struct Reactor {
     time_scale: f64,
     n_initial: usize,
     preempt_after_first: usize,
-    /// Selections per worker — caps a PerSet joiner's list.
-    scheme_s: usize,
-    bicec_s_per: Option<usize>,
+    /// Frozen-geometry re-planner: joiner lists, leave-backfill, join-shed
+    /// and the priced transition waste all come from here.
+    planner: FrozenPlanner,
+    /// Accumulated planner waste (task-fraction units at frozen granularity).
+    transition_waste: f64,
+    /// Elastic events whose plan changed a PerSet assignment.
+    reallocs: usize,
+    backfills: usize,
+    sheds: usize,
+    /// Sets left below threshold by a departure, awaiting the end of the
+    /// same-timestamp event batch — a simultaneous join can clear one
+    /// before it becomes fatal (`check_deficits`).
+    deficits: Vec<(String, usize)>,
     t_comp: Instant,
 }
 
@@ -511,7 +553,8 @@ impl Reactor {
                         RecoveryRule::PerSet { .. } => g * rpi..(g + 1) * rpi,
                         RecoveryRule::Global { .. } => {
                             // Local offset within the slot's stacked range.
-                            let sp = self.bicec_s_per.expect("global rule is BICEC");
+                            let sp =
+                                self.planner.bicec_s_per.expect("global rule is BICEC");
                             let local = g - slot * sp;
                             local * rpi..(local + 1) * rpi
                         }
@@ -564,6 +607,11 @@ impl Reactor {
                 let ev = self.events[idx];
                 self.apply_event(ev, idx)?;
             }
+            // Departure deficits are judged only after the whole due batch
+            // has applied, so a simultaneous join can rescue a leave (the
+            // DES batches same-timestamp events into one transition; this
+            // is the reactor's equivalent).
+            self.check_deficits()?;
             // Wait for the next worker event or elastic deadline.
             let msg = if self.ev_idx < self.events.len() {
                 let now = self.t_comp.elapsed();
@@ -627,13 +675,29 @@ impl Reactor {
                     && slot < self.n_initial
                     && self.seen_first.insert(slot)
                 {
-                    if let Some(entry) = self.slots[slot].as_mut() {
-                        entry.worker.send(Command::Preempt);
-                        entry.leaving = Some("preempt_after_first".into());
-                        self.preempted += 1;
-                    }
+                    let preempted_now = match self.slots[slot].as_mut() {
+                        Some(entry) => {
+                            entry.worker.send(Command::Preempt);
+                            entry.leaving = Some("preempt_after_first".into());
+                            self.preempted += 1;
+                            true
+                        }
+                        None => false,
+                    };
                     let t = self.t_comp.elapsed().as_secs_f64();
                     self.note(format!("t={t:.4} preempted worker {slot} (knob)"));
+                    // The knob is a departure like any other: strip the
+                    // abandoned tail now so holder counts stay honest for
+                    // the planner (its front still delivers), and let
+                    // backfill re-place scarce sets.
+                    if preempted_now && matches!(self.rule, RecoveryRule::PerSet { .. })
+                    {
+                        self.replan_leave(
+                            slot,
+                            format!("preempt_after_first: worker {slot}"),
+                        );
+                        self.check_deficits()?;
+                    }
                 }
                 Ok(false)
             }
@@ -722,6 +786,23 @@ impl Reactor {
                         self.note(format!(
                             "t={t:.4} elastic leave of worker {slot} (event {idx})"
                         ));
+                        // The departed slot's pending tail is abandoned the
+                        // moment the leave lands (short notice: only the
+                        // in-flight front survives). The planner decides
+                        // which scarce sets are backfilled where and prices
+                        // the deltas; an unrescued set becomes a deficit,
+                        // fatal after this event batch unless a simultaneous
+                        // join clears it.
+                        if matches!(self.rule, RecoveryRule::PerSet { .. }) {
+                            self.replan_leave(
+                                slot,
+                                format!(
+                                    "elastic event {idx}: leave of worker {slot} at \
+                                     t={:.4}",
+                                    ev.time
+                                ),
+                            );
+                        }
                     }
                     None => self.note(format!(
                         "t={t:.4} elastic leave of worker {slot} (event {idx}): already \
@@ -743,88 +824,173 @@ impl Reactor {
         Ok(())
     }
 
-    /// Spawn a mid-job joiner: the scheme's allocation answer for its slot
-    /// (BICEC: its static range; PerSet: the neediest incomplete sets),
-    /// then re-filter the fleet's queues against the ledger.
+    /// Live, non-leaving holders as the planner sees them (queue mirror +
+    /// straggler multiplier), excluding `exclude` (a departing slot).
+    fn holder_views(&self, exclude: Option<usize>) -> Vec<HolderState> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(slot, entry)| {
+                let entry = entry.as_ref()?;
+                if entry.leaving.is_some() || Some(slot) == exclude {
+                    return None;
+                }
+                Some(HolderState {
+                    slot,
+                    queue: entry.pending.clone(),
+                    mult: self.speeds.multiplier(slot).max(1.0),
+                })
+            })
+            .collect()
+    }
+
+    /// Apply the planner's queue replacements: mirror + holder counts +
+    /// `Command::Reassign`. The front of every updated queue is preserved
+    /// by the planner (it may be in flight — a duplicate completion costs
+    /// one subtask, never correctness). A send to a worker that already
+    /// exited is skipped entirely — its `WorkerLeft` will unwind the OLD
+    /// mirror, so holder counts never credit work nobody will run.
+    fn apply_updates(&mut self, updates: Vec<QueueUpdate>) {
+        for up in updates {
+            if self.slots[up.slot].is_none() {
+                continue;
+            }
+            let tasks = self.make_tasks(up.slot, &up.queue);
+            let entry = self.slots[up.slot].as_mut().expect("checked live above");
+            if !entry.worker.send(Command::Reassign { tasks }) {
+                continue;
+            }
+            match self.rule {
+                RecoveryRule::PerSet { .. } => {
+                    for &g in &entry.pending {
+                        self.holders[g] -= 1;
+                    }
+                    for &g in &up.queue {
+                        self.holders[g] += 1;
+                    }
+                }
+                RecoveryRule::Global { .. } => {
+                    self.pending_total =
+                        self.pending_total - entry.pending.len() + up.queue.len();
+                }
+            }
+            entry.pending = up.queue;
+        }
+    }
+
+    /// Fold one plan's deltas into the reactor: counters, waste, queues.
+    /// Returns the joiner list (empty for leave plans).
+    fn absorb(&mut self, plan: FrozenPlan) -> Vec<usize> {
+        if plan.reallocated {
+            self.reallocs += 1;
+        }
+        self.transition_waste += plan.waste;
+        self.backfills += plan.backfills;
+        self.sheds += plan.sheds;
+        self.apply_updates(plan.updates);
+        plan.joiner
+    }
+
+    /// A PerSet departure (elastic leave or the preempt knob): abandon the
+    /// slot's pending tail (the in-flight front still delivers), let the
+    /// planner backfill its scarce sets onto under-loaded holders, and
+    /// record any remaining deficit under `cause` — fatal only if still
+    /// unresolved once the same-timestamp event batch has applied
+    /// (`check_deficits`; a simultaneous join can clear it).
+    fn replan_leave(&mut self, slot: usize, cause: String) {
+        let abandoned: Vec<usize> = {
+            let entry = self.slots[slot].as_mut().expect("departure of a live slot");
+            if entry.pending.len() <= 1 {
+                Vec::new()
+            } else {
+                entry.pending.split_off(1)
+            }
+        };
+        for &g in &abandoned {
+            self.holders[g] -= 1;
+        }
+        if abandoned.is_empty() {
+            return;
+        }
+        let views = self.holder_views(Some(slot));
+        let plan = self.planner.plan_leave(
+            &abandoned,
+            &views,
+            &self.holders,
+            &self.ledger,
+            &self.delivered,
+        );
+        if plan.backfills > 0 {
+            let t = self.t_comp.elapsed().as_secs_f64();
+            self.note(format!(
+                "t={t:.4} backfilled {} scarce set(s) abandoned by worker {slot}",
+                plan.backfills
+            ));
+        }
+        for &g in &plan.deficits {
+            self.deficits.push((cause.clone(), g));
+        }
+        self.absorb(plan);
+    }
+
+    /// Fail fast on any departure-induced deficit that the rest of its
+    /// event batch did not clear: once the batch has applied, only holders
+    /// moving to `have` (net zero) remain possible, so an uncleared
+    /// deficit means the job can never satisfy that set.
+    fn check_deficits(&mut self) -> Result<()> {
+        if self.deficits.is_empty() {
+            return Ok(());
+        }
+        let RecoveryRule::PerSet { k, .. } = self.rule else {
+            self.deficits.clear();
+            return Ok(());
+        };
+        for (cause, g) in std::mem::take(&mut self.deficits) {
+            if self.ledger.group_complete(g)
+                || self.ledger.have(g) + self.holders[g] >= k
+            {
+                continue; // cleared — e.g. by a same-timestamp join
+            }
+            bail!(
+                "{cause}: set {g} left unrecoverable: {} delivered + {} live \
+                 holders < K = {k}",
+                self.ledger.have(g),
+                self.holders[g]
+            );
+        }
+        Ok(())
+    }
+
+    /// Spawn a mid-job joiner with the planner's TAS answer for its slot
+    /// (BICEC: its static range; PerSet: deficit-greedy, plus sheds off
+    /// strictly-slower holders and ledger re-filtering of every queue).
     fn do_join(&mut self, slot: usize, idx: usize) {
-        let groups = self.joiner_groups(slot);
-        if groups.is_empty() {
+        let views = self.holder_views(None);
+        let mult = self.speeds.multiplier(slot).max(1.0);
+        let plan = self.planner.plan_join(
+            slot,
+            mult,
+            &views,
+            &self.holders,
+            &self.ledger,
+            &self.delivered,
+        );
+        if plan.sheds > 0 {
+            let t = self.t_comp.elapsed().as_secs_f64();
+            self.note(format!(
+                "t={t:.4} join of worker {slot}: shed {} queued set(s) off slower \
+                 holders",
+                plan.sheds
+            ));
+        }
+        let joiner = self.absorb(plan);
+        if joiner.is_empty() {
             self.note(format!(
                 "join of worker {slot} (event {idx}): no useful work remains"
             ));
             return;
         }
-        self.spawn(slot, groups, true);
-        if matches!(self.rule, RecoveryRule::PerSet { .. }) {
-            self.reassign_filter();
-        }
-    }
-
-    /// TAS answer for a joining slot under the frozen set geometry.
-    fn joiner_groups(&self, slot: usize) -> Vec<usize> {
-        match self.rule {
-            RecoveryRule::Global { .. } => {
-                // BICEC: the slot's pre-assigned static range (the paper's
-                // zero-transition-waste property), minus anything this slot
-                // already delivered before leaving.
-                let sp = self.bicec_s_per.expect("global rule is BICEC");
-                (slot * sp..(slot + 1) * sp)
-                    .filter(|&id| !self.delivered.contains(&(slot, id)))
-                    .collect()
-            }
-            RecoveryRule::PerSet { sets, k } => {
-                // Deficit-greedy: the incomplete sets farthest from their
-                // threshold first, late sets first on ties (CEC's aligned
-                // tail is the paper's bottleneck), capped at the scheme's
-                // per-worker selection count.
-                let mut cands: Vec<usize> = (0..sets)
-                    .filter(|&m| {
-                        !self.ledger.group_complete(m)
-                            && !self.delivered.contains(&(slot, m))
-                    })
-                    .collect();
-                cands.sort_by(|&a, &b| {
-                    let da = k - self.ledger.have(a);
-                    let db = k - self.ledger.have(b);
-                    db.cmp(&da).then(b.cmp(&a))
-                });
-                cands.truncate(self.scheme_s);
-                cands
-            }
-        }
-    }
-
-    /// Drop already-satisfied sets from every live worker's pending queue
-    /// (`Command::Reassign`). The mirror front is kept even when satisfied
-    /// — it may be in flight, and a duplicate completion costs one subtask
-    /// of waste, never correctness.
-    fn reassign_filter(&mut self) {
-        for slot in 0..self.slots.len() {
-            let Some(entry) = self.slots[slot].as_ref() else { continue };
-            if entry.leaving.is_some() {
-                continue;
-            }
-            let keep: Vec<usize> = entry
-                .pending
-                .iter()
-                .enumerate()
-                .filter(|&(i, &g)| i == 0 || !self.ledger.group_complete(g))
-                .map(|(_, &g)| g)
-                .collect();
-            if keep.len() == entry.pending.len() {
-                continue;
-            }
-            let tasks = self.make_tasks(slot, &keep);
-            let entry = self.slots[slot].as_mut().expect("checked live above");
-            for &g in &entry.pending {
-                self.holders[g] -= 1;
-            }
-            for &g in &keep {
-                self.holders[g] += 1;
-            }
-            entry.pending = keep;
-            entry.worker.send(Command::Reassign { tasks });
-        }
+        self.spawn(slot, joiner, true);
     }
 
     /// Terminal cleanup: stop every worker and join all threads.
@@ -924,6 +1090,7 @@ mod tests {
             cost: CostModel { worker_ops_per_sec: 1e9, decode_ops_per_sec: 1e10 },
             elasticity: ClusterElasticity::Fixed,
             preempt_after_first: 0,
+            backfill: true,
             seed: 1,
         }
     }
@@ -1051,6 +1218,148 @@ mod tests {
             joined.computation_wall,
             alone.computation_wall
         );
+    }
+
+    #[test]
+    fn join_sheds_load_from_slow_holders_and_cuts_finish_time() {
+        // Satellite bugfix: a join must also rebalance already-assigned
+        // backlogs, not just duplicate the neediest sets. CEC K=2, S=3 on
+        // 6 starting workers with slots 4, 5 at 12x slowdown: without help
+        // set 5's two missing contributors sit at the *tails* of the slow
+        // pair's queues (~36 tau), so the no-join run crawls. A fast joiner
+        // at 2.5 tau takes the deficit sets AND sheds them off the slow
+        // queues (planner join-shed), finishing in ~5.5 tau. tau = 16 ms,
+        // so the 6x margin dwarfs scheduler noise.
+        let tau = 0.016;
+        let ops = {
+            let scheme = SchemeConfig::Cec { k: 2, s: 3 }.build(8);
+            scheme.subtask_ops(240, 240, 240, 6)
+        };
+        let mk = |join: bool| {
+            let mut cfg = sim_cfg(SchemeConfig::Cec { k: 2, s: 3 }, 8, 6);
+            cfg.cost = CostModel {
+                worker_ops_per_sec: ops as f64 / tau,
+                decode_ops_per_sec: 1e10,
+            };
+            cfg.speed = SpeedSource::Explicit(vec![
+                1.0, 1.0, 1.0, 1.0, 12.0, 12.0, 1.0, 1.0,
+            ]);
+            if join {
+                cfg.elasticity = ClusterElasticity::Trace(ElasticTrace {
+                    n_max: 8,
+                    n_initial: 6,
+                    events: vec![ElasticEvent {
+                        time: 2.5 * tau,
+                        kind: EventKind::Join(6),
+                    }],
+                });
+            }
+            cfg
+        };
+        let alone = run_cluster_job(&mk(false)).unwrap();
+        let joined = run_cluster_job(&mk(true)).unwrap();
+        assert!(alone.recovered && joined.recovered);
+        assert_eq!(joined.joins, 1);
+        assert!(joined.sheds >= 1, "join must shed off the slow holders");
+        assert!(joined.transition_waste > 0.0, "joiner take-on is priced");
+        assert!(joined.reallocations >= 1);
+        assert!(
+            joined.computation_wall < 0.5 * alone.computation_wall,
+            "join+shed did not cut the straggler tail: {} vs {}",
+            joined.computation_wall,
+            alone.computation_wall
+        );
+        assert_eq!(alone.transition_waste, 0.0, "fixed fleet pays no waste");
+    }
+
+    #[test]
+    fn leave_backfill_rescues_scarce_sets_and_cuts_finish_time() {
+        // CEC K=2, S=4 on 6 workers, slots 2, 3 at 12x slowdown. Worker 4
+        // (fast) leaves at 1.5 tau abandoning sets 4 and 5, whose remaining
+        // queued holders are the slow pair (+ one fast holder each): without
+        // backfill the run waits ~36-48 tau on the slow tails; with
+        // backfill the planner hands the scarce sets to under-loaded fast
+        // holders and the run finishes in ~6 tau.
+        let tau = 0.016;
+        let ops = {
+            let scheme = SchemeConfig::Cec { k: 2, s: 4 }.build(8);
+            scheme.subtask_ops(240, 240, 240, 6)
+        };
+        let mk = |backfill: bool| {
+            let mut cfg = sim_cfg(SchemeConfig::Cec { k: 2, s: 4 }, 8, 6);
+            cfg.cost = CostModel {
+                worker_ops_per_sec: ops as f64 / tau,
+                decode_ops_per_sec: 1e10,
+            };
+            cfg.speed = SpeedSource::Explicit(vec![
+                1.0, 1.0, 12.0, 12.0, 1.0, 1.0, 1.0, 1.0,
+            ]);
+            cfg.backfill = backfill;
+            cfg.elasticity = ClusterElasticity::Trace(ElasticTrace {
+                n_max: 8,
+                n_initial: 6,
+                events: vec![ElasticEvent {
+                    time: 1.5 * tau,
+                    kind: EventKind::Leave(4),
+                }],
+            });
+            cfg
+        };
+        let with = run_cluster_job(&mk(true)).unwrap();
+        let without = run_cluster_job(&mk(false)).unwrap();
+        assert!(with.recovered && without.recovered);
+        assert!(with.backfills >= 1, "scarce sets must be backfilled");
+        assert!(with.transition_waste > 0.0, "backfill take-on is priced");
+        assert_eq!(without.backfills, 0);
+        assert_eq!(without.transition_waste, 0.0);
+        assert!(
+            with.computation_wall < 0.5 * without.computation_wall,
+            "backfill did not cut the scarce-set tail: {} vs {}",
+            with.computation_wall,
+            without.computation_wall
+        );
+    }
+
+    #[test]
+    fn same_timestamp_join_rescues_an_otherwise_fatal_leave() {
+        // CEC K=3, S=3 on 4 workers (sets = 4, 3 holders each): worker 1
+        // leaving mid-list drops an abandoned set to 2 live holders < K.
+        // Deficits are judged only after the whole same-timestamp event
+        // batch (the DES batches such events into one transition), so a
+        // simultaneous join that takes the needy sets keeps the job alive;
+        // without it — and with backfill off — the run must fail naming
+        // the event; with backfill on, a surviving holder is drafted
+        // instead.
+        let tau = 0.020;
+        let ops = {
+            let scheme = SchemeConfig::Cec { k: 3, s: 3 }.build(5);
+            scheme.subtask_ops(240, 240, 240, 4)
+        };
+        let mk = |join: bool, backfill: bool| {
+            let mut cfg = sim_cfg(SchemeConfig::Cec { k: 3, s: 3 }, 5, 4);
+            cfg.cost = CostModel {
+                worker_ops_per_sec: ops as f64 / tau,
+                decode_ops_per_sec: 1e10,
+            };
+            cfg.backfill = backfill;
+            let mut events =
+                vec![ElasticEvent { time: 1.5 * tau, kind: EventKind::Leave(1) }];
+            if join {
+                events.push(ElasticEvent { time: 1.5 * tau, kind: EventKind::Join(4) });
+            }
+            cfg.elasticity =
+                ClusterElasticity::Trace(ElasticTrace { n_max: 5, n_initial: 4, events });
+            cfg
+        };
+        let err = run_cluster_job(&mk(false, false)).unwrap_err().to_string();
+        assert!(err.contains("elastic event 0"), "{err}");
+        assert!(err.contains("left unrecoverable"), "{err}");
+        let rescued = run_cluster_job(&mk(true, false)).unwrap();
+        assert!(rescued.recovered);
+        assert_eq!((rescued.joins, rescued.leaves), (1, 1));
+        let backfilled = run_cluster_job(&mk(false, true)).unwrap();
+        assert!(backfilled.recovered);
+        assert!(backfilled.backfills >= 1, "backfill must draft a survivor");
     }
 
     #[test]

@@ -90,6 +90,7 @@ impl JobConfig {
             cost: crate::sim::CostModel::paper_default(),
             elasticity: ClusterElasticity::Fixed,
             preempt_after_first: self.preempt_after_first,
+            backfill: true,
             seed: self.seed,
         }
     }
@@ -104,6 +105,12 @@ pub struct JobReport {
     pub completions_received: usize,
     pub completions_used: usize,
     pub workers_preempted: usize,
+    /// Priced transition waste over elastic-event re-plans (task-fraction
+    /// units at the frozen granularity — the metric `sim::elastic` reports;
+    /// 0 for fixed-fleet jobs and always 0 for BICEC).
+    pub transition_waste: f64,
+    /// Elastic events whose plan changed a PerSet assignment.
+    pub reallocations: usize,
     /// Max relative error of the recovered product vs the uncoded baseline.
     pub max_rel_err: f32,
     pub recovered: bool,
@@ -124,6 +131,8 @@ impl JobReport {
             completions_received: r.completions_received,
             completions_used: r.completions_used,
             workers_preempted: r.workers_preempted,
+            transition_waste: r.transition_waste,
+            reallocations: r.reallocations,
             max_rel_err: r.max_rel_err,
             recovered: r.recovered,
         }

@@ -9,16 +9,21 @@
 //! like the simulation sweeps: fleet-wide rate ∝ N at fixed per-node
 //! event count, horizon ∝ the shrinking run (`2 · S · tau(N)`).
 //!
-//! Reported metric is mean wall-clock computation time plus the absorbed
-//! elastic events and the per-trial failure count (a churn draw the
-//! reactor's ledger check rejects is a recorded failure, not a crash).
+//! Reported metrics are mean wall-clock computation time, the planner's
+//! mean **transition waste** per scheme (the paper's re-allocation cost
+//! criterion, now measured on the real coordinator — zero for BICEC by
+//! construction), planner re-plans applied, and the per-trial failure
+//! count (a churn draw the reactor's ledger check rejects is a recorded
+//! failure, not a crash). The `backfill` knob selects the planner's
+//! re-balancing policy per row — `hcec cluster --backfill compare` sweeps
+//! both and emits paired `<scheme>`/`<scheme>+backfill` columns' rows.
 
 use crate::config::ExperimentConfig;
 use crate::metrics::Table;
 use crate::rng::fold_in;
 use crate::scenario::{
-    ClusterBackendSpec, ClusterSpec, ElasticitySpec, Engine, Metric, Scenario,
-    SchemeConfig, SeedMode,
+    BackfillSpec, ClusterBackendSpec, ClusterSpec, ElasticitySpec, Engine, Metric,
+    Scenario, SchemeConfig, SeedMode,
 };
 use crate::sim::Reassign;
 use crate::tas::Scheme;
@@ -36,6 +41,7 @@ pub fn cluster_scenario(
     events_per_node: f64,
     trials: usize,
     time_scale: f64,
+    backfill: BackfillSpec,
 ) -> Scenario {
     assert!(n >= cfg.s_cec, "cluster sweep N={n} below S={}", cfg.s_cec);
     let cost = cfg.cost_model();
@@ -66,6 +72,7 @@ pub fn cluster_scenario(
             backend: ClusterBackendSpec::SimulatedLatency,
             time_scale,
             preempt_after_first: 0,
+            backfill,
         })
         .trials(trials)
         .seed(fold_in(cfg.seed, n as u64))
@@ -74,49 +81,43 @@ pub fn cluster_scenario(
         .expect("valid cluster sweep scenario")
 }
 
-/// One row per N: per-scheme wall computation means, elastic events
-/// absorbed by the reactor, completions received, failures.
+/// One row per (N, scheme row): mean wall computation, mean transition
+/// waste (the planner's priced deltas — the DES-comparable column), planner
+/// re-plans applied, completions received, failures. `backfill = compare`
+/// doubles the scheme rows into paired off/on comparisons.
 pub fn cluster_table(
     cfg: &ExperimentConfig,
     ns: &[usize],
     events_per_node: f64,
     trials: usize,
     time_scale: f64,
+    backfill: BackfillSpec,
 ) -> Table {
     let mut t = Table::new(&[
         "N",
-        "cec_wall_s",
-        "mlcec_wall_s",
-        "bicec_wall_s",
-        "events_absorbed",
+        "scheme",
+        "wall_mean_s",
+        "waste_mean",
+        "replans",
         "completions",
         "failures",
     ]);
     for &n in ns {
-        let sc = cluster_scenario(cfg, n, events_per_node, trials, time_scale);
+        let sc = cluster_scenario(cfg, n, events_per_node, trials, time_scale, backfill);
         let out = sc.run().expect("cluster engine records per-trial failures");
-        let walls: Vec<f64> =
-            out.per_scheme.iter().map(|s| s.mean(Metric::Computation)).collect();
-        let events: usize = out
-            .per_scheme
-            .iter()
-            .flat_map(|s| s.ok_trials().map(|t| t.reallocations))
-            .sum();
-        let completions: u64 = out
-            .per_scheme
-            .iter()
-            .flat_map(|s| s.ok_trials().map(|t| t.completions))
-            .sum();
-        let failures: usize = out.per_scheme.iter().map(|s| s.failures()).sum();
-        t.row(vec![
-            n.to_string(),
-            format!("{:.4}", walls[0]),
-            format!("{:.4}", walls[1]),
-            format!("{:.4}", walls[2]),
-            events.to_string(),
-            completions.to_string(),
-            failures.to_string(),
-        ]);
+        for s in &out.per_scheme {
+            let replans: usize = s.ok_trials().map(|t| t.reallocations).sum();
+            let completions: u64 = s.ok_trials().map(|t| t.completions).sum();
+            t.row(vec![
+                n.to_string(),
+                s.scheme.clone(),
+                format!("{:.4}", s.mean(Metric::Computation)),
+                format!("{:.4}", s.mean(Metric::TransitionWaste)),
+                replans.to_string(),
+                completions.to_string(),
+                s.failures().to_string(),
+            ]);
+        }
     }
     t
 }
@@ -128,20 +129,32 @@ mod tests {
     #[test]
     fn cluster_scenario_round_trips_through_toml() {
         let cfg = ExperimentConfig::default();
-        let sc = cluster_scenario(&cfg, 40, 0.25, 2, 0.05);
+        let sc = cluster_scenario(&cfg, 40, 0.25, 2, 0.05, BackfillSpec::On);
         let back = Scenario::from_toml(&sc.to_toml()).unwrap();
         assert_eq!(back.to_doc(), sc.to_doc());
         assert_eq!(back.engine, Engine::Cluster);
+        assert_eq!(back.cluster.backfill, BackfillSpec::On);
     }
 
     #[test]
-    fn cluster_table_runs_one_small_row() {
-        // One N=40 row, 1 trial, aggressively scaled down: the real
-        // reactor + 40 threads finish in tens of milliseconds.
+    fn cluster_table_runs_one_small_row_per_scheme() {
+        // One N=40 sweep point, 1 trial, aggressively scaled down: the
+        // real reactor + 40 threads finish in tens of milliseconds. The
+        // trio yields three rows; BICEC's waste column must be zero.
         let cfg = ExperimentConfig::default();
-        let t = cluster_table(&cfg, &[40], 0.25, 1, 0.02);
-        assert_eq!(t.n_rows(), 1);
+        let t = cluster_table(&cfg, &[40], 0.25, 1, 0.02, BackfillSpec::On);
+        assert_eq!(t.n_rows(), 3);
         let r = t.render();
         assert!(r.contains("40"), "{r}");
+        assert!(r.contains("bicec"), "{r}");
+    }
+
+    #[test]
+    fn cluster_table_compare_mode_pairs_rows() {
+        let cfg = ExperimentConfig::default();
+        let t = cluster_table(&cfg, &[40], 0.25, 1, 0.02, BackfillSpec::Compare);
+        assert_eq!(t.n_rows(), 6, "compare doubles every scheme row");
+        let r = t.render();
+        assert!(r.contains("cec+backfill"), "{r}");
     }
 }

@@ -23,7 +23,7 @@ use crate::sim::{
     simulate_many_with_threads, ElasticTrace, TraceMonteCarlo, TraceSimulator,
 };
 
-use super::spec::{ClusterBackendSpec, ElasticitySpec, Metric, SpeedSpec};
+use super::spec::{BackfillSpec, ClusterBackendSpec, ElasticitySpec, Metric, SpeedSpec};
 use super::Scenario;
 
 /// Which substrate executes the scenario.
@@ -86,8 +86,9 @@ impl Engine {
 }
 
 /// One trial's numbers, unified across engines. Fields an engine does not
-/// measure are zero (`encode_time`/`max_rel_err` outside `Coordinator`;
-/// `transition_waste` outside `Trace`).
+/// measure are zero (`encode_time`/`max_rel_err` outside the real-execution
+/// engines; `transition_waste` outside `Trace` and `Cluster` — both price
+/// elastic transitions through `tas::planner`, in the same units).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TrialOutcome {
     pub computation_time: f64,
@@ -341,9 +342,17 @@ fn run_cluster(sc: &Scenario) -> Vec<SchemeOutcome> {
         SpeedSpec::Model(m) => SpeedSource::Model(*m),
         SpeedSpec::Explicit(mult) => SpeedSource::Explicit(mult.clone()),
     };
-    sc.schemes
-        .iter()
-        .map(|spec| {
+    // `compare` runs every scheme twice — backfill off, then on — as two
+    // outcome rows, pairing the runs on identical per-trial churn draws.
+    let modes: &[(bool, &str)] = match sc.cluster.backfill {
+        BackfillSpec::On => &[(true, "")],
+        BackfillSpec::Off => &[(false, "")],
+        BackfillSpec::Compare => &[(false, ""), (true, "+backfill")],
+    };
+    let mut out = Vec::with_capacity(sc.schemes.len() * modes.len());
+    for spec in &sc.schemes {
+        for &(backfill, suffix) in modes {
+            let row = format!("{}{suffix}", spec.name());
             let trials = (0..sc.trials)
                 .map(|trial| {
                     // Same seed derivation as the coordinator engine:
@@ -379,6 +388,7 @@ fn run_cluster(sc: &Scenario) -> Vec<SchemeOutcome> {
                         cost: sc.cost,
                         elasticity,
                         preempt_after_first: sc.cluster.preempt_after_first,
+                        backfill,
                         seed,
                     };
                     // Elastic runs have legitimate per-trial failures
@@ -386,12 +396,13 @@ fn run_cluster(sc: &Scenario) -> Vec<SchemeOutcome> {
                     // record them instead of failing the scenario.
                     run_cluster_job(&cfg)
                         .map(cluster_trial)
-                        .map_err(|e| format!("{} trial {trial}: {e}", spec.name()))
+                        .map_err(|e| format!("{row} trial {trial}: {e}"))
                 })
                 .collect();
-            SchemeOutcome { scheme: spec.name().to_string(), trials }
-        })
-        .collect()
+            out.push(SchemeOutcome { scheme: row, trials });
+        }
+    }
+    out
 }
 
 fn cluster_trial(r: ClusterReport) -> TrialOutcome {
@@ -399,8 +410,11 @@ fn cluster_trial(r: ClusterReport) -> TrialOutcome {
         computation_time: r.computation_wall,
         decode_time: r.decode_wall,
         encode_time: r.encode_wall,
-        transition_waste: 0.0,
-        reallocations: r.elastic_events() + r.workers_preempted,
+        // The planner's priced waste — same metric (and same columns) as
+        // the elastic DES, so `Engine::Cluster` tables report the paper's
+        // headline comparison directly.
+        transition_waste: r.transition_waste,
+        reallocations: r.reallocations + r.workers_preempted,
         completions: r.completions_received as u64,
         max_rel_err: r.max_rel_err as f64,
     }
@@ -657,6 +671,7 @@ mod tests {
                 backend: ClusterBackendSpec::SimulatedLatency,
                 time_scale: 1.0,
                 preempt_after_first: 0,
+                backfill: BackfillSpec::On,
             })
             .trials(3)
             .seed(7)

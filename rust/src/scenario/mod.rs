@@ -33,8 +33,8 @@ mod toml_io;
 
 pub use engine::{Engine, Outcome, SchemeOutcome, TrialOutcome};
 pub use spec::{
-    ClusterBackendSpec, ClusterSpec, CoordinatorSpec, ElasticitySpec, Metric,
-    SchemeConfig, SeedMode, SpeedSpec,
+    BackfillSpec, ClusterBackendSpec, ClusterSpec, CoordinatorSpec, ElasticitySpec,
+    Metric, SchemeConfig, SeedMode, SpeedSpec,
 };
 
 use crate::config::ExperimentConfig;
@@ -812,6 +812,7 @@ mod tests {
                 backend: ClusterBackendSpec::Native,
                 time_scale: 0.5,
                 preempt_after_first: 0,
+                backfill: crate::scenario::BackfillSpec::On,
             })
             .build()
             .unwrap_err();

@@ -206,6 +206,42 @@ impl ClusterBackendSpec {
     }
 }
 
+/// Planner re-balancing policy for the cluster engine's elastic events
+/// (leave-backfill + join-shed; see `tas::planner::FrozenPlanner`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackfillSpec {
+    /// Re-balance (the default): leaves backfill scarce sets onto
+    /// under-loaded holders, joins shed queued sets off slower holders.
+    On,
+    /// Joiner lists and waste accounting only — the PR-4 behaviour.
+    Off,
+    /// Run every scheme twice, as two outcome rows: `<scheme>` (off) and
+    /// `<scheme>+backfill` (on) — the paired comparison for the backfill
+    /// example scenario.
+    Compare,
+}
+
+impl BackfillSpec {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackfillSpec::On => "on",
+            BackfillSpec::Off => "off",
+            BackfillSpec::Compare => "compare",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "on" => Ok(BackfillSpec::On),
+            "off" => Ok(BackfillSpec::Off),
+            "compare" => Ok(BackfillSpec::Compare),
+            other => Err(format!(
+                "unknown backfill policy {other:?} (on|off|compare)"
+            )),
+        }
+    }
+}
+
 /// Knobs that only the event-driven cluster engine reads.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ClusterSpec {
@@ -216,6 +252,8 @@ pub struct ClusterSpec {
     /// Legacy knob: preempt this many workers (highest slots) after their
     /// first delivery.
     pub preempt_after_first: usize,
+    /// Planner re-balancing on elastic events (`on` | `off` | `compare`).
+    pub backfill: BackfillSpec,
 }
 
 impl Default for ClusterSpec {
@@ -224,6 +262,7 @@ impl Default for ClusterSpec {
             backend: ClusterBackendSpec::Native,
             time_scale: 1.0,
             preempt_after_first: 0,
+            backfill: BackfillSpec::On,
         }
     }
 }

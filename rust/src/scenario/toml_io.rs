@@ -54,6 +54,7 @@
 //! backend = "native"            # native | pjrt | simulated_latency
 //! time_scale = 1.0              # simulated_latency only: wall s per model s
 //! preempt_after_first = 0
+//! backfill = "on"               # on | off | compare (two rows per scheme)
 //! ```
 //!
 //! Unknown keys are an error — scenario-file typos must not silently run a
@@ -67,22 +68,34 @@ use crate::workload::JobSpec;
 
 use super::engine::Engine;
 use super::spec::{
-    ClusterBackendSpec, ClusterSpec, CoordinatorSpec, ElasticitySpec, SchemeConfig,
-    SeedMode, SpeedSpec,
+    BackfillSpec, ClusterBackendSpec, ClusterSpec, CoordinatorSpec, ElasticitySpec,
+    SchemeConfig, SeedMode, SpeedSpec,
 };
 use super::Scenario;
 
 impl Scenario {
     /// Parse a scenario from TOML text. A `trace` elasticity `file` is
-    /// read relative to the current directory.
+    /// read relative to the current directory; use [`Scenario::from_file`]
+    /// (or [`Scenario::from_toml_at`]) to resolve it against the scenario
+    /// file's own directory instead.
     pub fn from_toml(text: &str) -> Result<Self, String> {
-        Self::from_doc(&parse(text)?)
+        Self::from_toml_at(text, None)
+    }
+
+    /// [`from_toml`](Self::from_toml) with an explicit base directory for
+    /// relative `elasticity.file` paths.
+    pub fn from_toml_at(
+        text: &str,
+        base: Option<&std::path::Path>,
+    ) -> Result<Self, String> {
+        Self::from_doc_at(&parse(text)?, base)
     }
 
     pub fn from_file(path: &str) -> Result<Self, String> {
         let text =
             std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
-        Self::from_toml(&text).map_err(|e| format!("{path}: {e}"))
+        let base = std::path::Path::new(path).parent().map(|p| p.to_path_buf());
+        Self::from_toml_at(&text, base.as_deref()).map_err(|e| format!("{path}: {e}"))
     }
 
     pub fn to_toml(&self) -> String {
@@ -90,7 +103,11 @@ impl Scenario {
     }
 
     pub fn from_doc(doc: &Doc) -> Result<Self, String> {
-        let mut reader = Reader::new(doc);
+        Self::from_doc_at(doc, None)
+    }
+
+    fn from_doc_at(doc: &Doc, base: Option<&std::path::Path>) -> Result<Self, String> {
+        let mut reader = Reader::with_base(doc, base);
         let scenario = reader.scenario()?;
         reader.reject_unknown()?;
         scenario.validate()?;
@@ -155,6 +172,10 @@ impl Scenario {
             doc.insert(
                 "cluster.preempt_after_first",
                 Value::Int(self.cluster.preempt_after_first as i64),
+            );
+            doc.insert(
+                "cluster.backfill",
+                Value::Str(self.cluster.backfill.as_str().into()),
             );
         }
         doc
@@ -291,15 +312,18 @@ fn parse_reassign(s: &str) -> Result<Reassign, String> {
 }
 
 /// Typed reads over a `Doc` that track consumption, so anything left over
-/// is reported as an unknown key.
+/// is reported as an unknown key. `base` is the directory relative trace
+/// files resolve against (the scenario file's own directory for
+/// `Scenario::from_file`; the current directory otherwise).
 struct Reader<'a> {
     doc: &'a Doc,
     used: std::collections::BTreeSet<String>,
+    base: Option<&'a std::path::Path>,
 }
 
 impl<'a> Reader<'a> {
-    fn new(doc: &'a Doc) -> Self {
-        Self { doc, used: Default::default() }
+    fn with_base(doc: &'a Doc, base: Option<&'a std::path::Path>) -> Self {
+        Self { doc, used: Default::default(), base }
     }
 
     fn get(&mut self, path: &str) -> Option<&'a Value> {
@@ -462,6 +486,10 @@ impl<'a> Reader<'a> {
             if let Some(p) = self.usize_at("cluster.preempt_after_first")? {
                 cl.preempt_after_first = p;
             }
+            if let Some(b) = self.str_at("cluster.backfill")? {
+                cl.backfill =
+                    BackfillSpec::parse(b).map_err(|e| format!("cluster.backfill: {e}"))?;
+            }
             builder = builder.cluster(cl);
         }
         // Skip builder validation here: from_doc validates after the
@@ -562,8 +590,19 @@ impl<'a> Reader<'a> {
             }),
             "trace" => {
                 let path = self.req_str("elasticity.file")?.to_string();
-                let text = std::fs::read_to_string(&path)
-                    .map_err(|e| format!("elasticity.file: reading {path}: {e}"))?;
+                // Relative trace files resolve against the scenario file's
+                // own directory, so `hcec run` works from any cwd; the
+                // stored `path` keeps the original spelling for the TOML
+                // round trip.
+                let resolved = match self.base {
+                    Some(base) if std::path::Path::new(&path).is_relative() => {
+                        base.join(&path)
+                    }
+                    _ => std::path::PathBuf::from(&path),
+                };
+                let text = std::fs::read_to_string(&resolved).map_err(|e| {
+                    format!("elasticity.file: reading {}: {e}", resolved.display())
+                })?;
                 let trace = ElasticTrace::from_text(&text)
                     .map_err(|e| format!("elasticity.file {path}: {e}"))?;
                 Ok(ElasticitySpec::Trace {
@@ -775,6 +814,7 @@ jitter = 0.05
                 backend: ClusterBackendSpec::SimulatedLatency,
                 time_scale: 0.001,
                 preempt_after_first: 0,
+                backfill: BackfillSpec::Compare,
             })
             .trials(2)
             .seed_mode(SeedMode::PerTrial)
@@ -782,10 +822,57 @@ jitter = 0.05
             .unwrap();
         let text = sc.to_toml();
         assert!(text.contains("simulated_latency"), "{text}");
+        assert!(text.contains("backfill = \"compare\""), "{text}");
         let back = Scenario::from_toml(&text).unwrap();
         assert_eq!(back.to_doc(), sc.to_doc());
         assert_eq!(back.cluster, sc.cluster);
         assert_eq!(back.engine, Engine::Cluster);
+    }
+
+    #[test]
+    fn cluster_backfill_defaults_on_and_rejects_unknown_values() {
+        use crate::scenario::BackfillSpec;
+        let base = r#"
+[scenario]
+name = "cl"
+engine = "cluster"
+trials = 1
+seed = 1
+seed_mode = "per_trial"
+schemes = ["cec"]
+
+[job]
+u = 240
+w = 240
+v = 240
+
+[fleet]
+n_max = 8
+n_workers = 8
+
+[scheme.cec]
+kind = "cec"
+k = 2
+s = 4
+
+[speed]
+kind = "uniform"
+
+[cluster]
+backend = "simulated_latency"
+time_scale = 0.01
+"#;
+        let sc = Scenario::from_toml(base).unwrap();
+        assert_eq!(sc.cluster.backfill, BackfillSpec::On, "default must be on");
+        let off = format!("{base}backfill = \"off\"\n");
+        assert_eq!(
+            Scenario::from_toml(&off).unwrap().cluster.backfill,
+            BackfillSpec::Off
+        );
+        let bad = format!("{base}backfill = \"sometimes\"\n");
+        let err = Scenario::from_toml(&bad).unwrap_err();
+        assert!(err.contains("cluster.backfill"), "{err}");
+        assert!(err.contains("on|off|compare"), "{err}");
     }
 
     #[test]

@@ -15,7 +15,10 @@
 //!
 //! `allocate(n)` produces per-worker ordered to-do lists plus the recovery
 //! rule; `sim::des` turns them into completion times, `coordinator` turns
-//! them into real work.
+//! them into real work. Elastic events route through `planner` — the one
+//! re-planning layer both engines share (re-subdivision deltas for the
+//! DES, frozen-geometry queue deltas for the cluster reactor), pricing
+//! every transition with `transition`'s waste metric.
 
 mod bicec;
 mod cec;
@@ -23,6 +26,7 @@ pub mod dlevels;
 mod hetero;
 mod mlcc;
 mod mlcec;
+pub mod planner;
 pub mod reassign;
 pub mod transition;
 
@@ -32,6 +36,7 @@ pub use dlevels::DLevelPolicy;
 pub use hetero::HeteroCec;
 pub use mlcc::Mlcc;
 pub use mlcec::Mlcec;
+pub use planner::Reassign;
 
 /// One entry in a worker's to-do list.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

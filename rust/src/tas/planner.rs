@@ -1,0 +1,857 @@
+//! The unified elastic re-planning layer: **one** answer to "an elastic
+//! event happened — who computes what now, and what did the transition
+//! cost?", shared by the elastic DES (`sim::elastic`) and the real cluster
+//! reactor (`coordinator::cluster`).
+//!
+//! Two planning modes, one delta vocabulary and one waste metric
+//! ([`transition`], after Dau et al. [10]):
+//!
+//! * **Re-subdivision mode** ([`plan_transition`]) — the paper's CEC/MLCEC
+//!   semantics: each event re-subdivides every encoded task at the new
+//!   granularity and re-selects. The plan carries the fresh [`Allocation`],
+//!   the survivor map (old slot + completed-prefix per new worker index),
+//!   and the priced waste. `sim::elastic` is a thin driver over this —
+//!   outcomes are bit-identical to the pre-planner inline logic (asserted
+//!   by `run_golden` in `sim/elastic.rs`).
+//! * **Frozen-geometry mode** ([`FrozenPlanner`]) — the cluster's
+//!   semantics: the set geometry is fixed at encode time, so a plan is a
+//!   set of per-holder queue deltas at granularity `1/sets`:
+//!   - a **join** gets the deficit-greedy TAS answer for its slot (late,
+//!     under-provisioned sets first, capped at the scheme's per-worker
+//!     selection count), *sheds* queued sets from strictly-slower loaded
+//!     holders when a spare holder remains, and drops ledger-complete sets
+//!     from every queue (beyond the possibly in-flight front);
+//!   - a **leave** *backfills* the departed slot's scarce sets onto
+//!     under-loaded eligible holders: holders are added while they strictly
+//!     improve the set's k-th smallest estimated delivery time (and are
+//!     forced while the set is below its recovery threshold). A set no
+//!     backfill can rescue is reported as a *deficit* — the caller defers
+//!     judgement to the end of the same-timestamp event batch, where a
+//!     simultaneous join can still clear it.
+//!
+//! Waste units agree across modes: one subtask at granularity `g` has
+//! measure `1/g` of a worker's encoded task, so on traces where the
+//! granularity is static (BICEC always; CEC under count-preserving swap
+//! churn) the two engines price identical transitions identically —
+//! `tests/cluster_equivalence.rs` asserts that parity.
+
+use std::collections::HashSet;
+
+use super::{reassign, transition, Allocation, RecoveryRule, Scheme};
+
+/// How surviving workers are matched to the new allocation's lists at an
+/// elastic event (re-subdivision mode). Lives here — next to the planner
+/// that consumes it — and is re-exported from `sim::elastic` for the
+/// historical spelling `sim::Reassign`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Reassign {
+    /// Positional: surviving worker `i` takes list `i` (the schemes' naive
+    /// behaviour).
+    #[default]
+    Identity,
+    /// Waste-minimising greedy matching (tas::reassign, after Dau et al.
+    /// [10]); never worse than Identity.
+    MaxOverlap,
+}
+
+/// The re-subdivision plan for one elastic event batch.
+#[derive(Debug)]
+pub struct TransitionPlan {
+    /// The new allocation, with the reassignment policy already applied.
+    pub alloc: Allocation,
+    /// Priced transition waste (task-fraction units, see `tas::transition`).
+    pub waste: f64,
+    /// True when the event re-allocated selections (PerSet rules); BICEC's
+    /// static lists never do.
+    pub reallocated: bool,
+}
+
+/// Compute the re-subdivision plan: new allocation for `active`, survivor
+/// matching against (`before`, `before_active`, `before_pointers`), the
+/// reassignment `policy`, and the priced waste.
+///
+/// `survivors` is caller-owned scratch (cleared here) so Monte-Carlo loops
+/// stay allocation-free in steady state; on return it holds the survivor
+/// map `(w_new, Option<(w_old, completed)>)` the waste was priced over.
+pub fn plan_transition(
+    scheme: &dyn Scheme,
+    before: &Allocation,
+    before_active: &[usize],
+    before_pointers: &[usize],
+    active: &[usize],
+    policy: Reassign,
+    survivors: &mut Vec<(usize, Option<(usize, usize)>)>,
+) -> TransitionPlan {
+    let mut alloc = scheme.allocate_active(active);
+    survivors.clear();
+    for (w_new, &slot) in active.iter().enumerate() {
+        let prior = before_active
+            .iter()
+            .position(|&s| s == slot)
+            .map(|w_old| (w_old, before_pointers[w_old]));
+        survivors.push((w_new, prior));
+    }
+    if policy == Reassign::MaxOverlap && matches!(alloc.rule, RecoveryRule::PerSet { .. }) {
+        let assignment = reassign::max_overlap_assignment(before, &alloc, survivors);
+        alloc = reassign::apply_assignment(&alloc, &assignment);
+    }
+    let waste = transition::total_waste(before, &alloc, survivors);
+    let reallocated = matches!(alloc.rule, RecoveryRule::PerSet { .. });
+    TransitionPlan { alloc, waste, reallocated }
+}
+
+/// What the frozen-geometry planner needs to know about completions —
+/// implemented by the cluster's `RecoveryLedger` (and by test fakes).
+pub trait GroupState {
+    /// Credited completions for `group` (capped at the group's threshold).
+    fn have(&self, group: usize) -> usize;
+    /// True once `group`'s own threshold is met.
+    fn group_complete(&self, group: usize) -> bool;
+}
+
+/// One live, non-leaving holder's queue state at planning time.
+#[derive(Clone, Debug)]
+pub struct HolderState {
+    pub slot: usize,
+    /// Pending groups in processing order; the front may be in flight (a
+    /// queue update always keeps it — a duplicate completion costs one
+    /// subtask, never correctness).
+    pub queue: Vec<usize>,
+    /// Straggler multiplier (>= 1; larger = slower). Drives shed/backfill
+    /// load estimates.
+    pub mult: f64,
+}
+
+/// Replace `slot`'s pending queue with `queue` (`Command::Reassign`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QueueUpdate {
+    pub slot: usize,
+    pub queue: Vec<usize>,
+}
+
+/// A frozen-geometry plan: the joiner's list (join plans), survivor queue
+/// replacements, and the priced deltas.
+#[derive(Clone, Debug, Default)]
+pub struct FrozenPlan {
+    /// Ordered to-do list for the joining slot (empty for leave plans, or
+    /// when no useful work remains).
+    pub joiner: Vec<usize>,
+    /// Survivor queues that changed (backfill appends, sheds, ledger
+    /// re-filtering).
+    pub updates: Vec<QueueUpdate>,
+    /// Priced transition waste: `(joiner take-on + backfills + sheds) / sets`
+    /// task-fraction units; identically 0 under `RecoveryRule::Global`.
+    pub waste: f64,
+    /// Scarce sets re-assigned from a departed slot to surviving holders.
+    pub backfills: usize,
+    /// Queued sets moved off strictly-slower holders onto a joiner.
+    pub sheds: usize,
+    /// Groups still below their recovery threshold after the plan (no
+    /// eligible backfill holder, or backfill disabled). Not an immediate
+    /// error: a simultaneous join can clear a deficit, so the caller
+    /// re-checks once the whole same-timestamp event batch has applied.
+    pub deficits: Vec<usize>,
+    /// True when the plan changed any PerSet assignment (drives the realloc
+    /// counter; Global/BICEC plans never re-allocate).
+    pub reallocated: bool,
+}
+
+/// Frozen-geometry planner config for one cluster job.
+#[derive(Clone, Debug)]
+pub struct FrozenPlanner {
+    pub rule: RecoveryRule,
+    /// Per-worker selection cap (the scheme's S) for joiner lists.
+    pub s_cap: usize,
+    /// Global rule only: subtasks per slot (BICEC's static ranges).
+    pub bicec_s_per: Option<usize>,
+    /// Gate for leave-backfill and join-shed. Waste/ledger re-filtering is
+    /// always on; this knob only controls the re-balancing deltas.
+    pub backfill: bool,
+}
+
+/// k-th smallest of `etas` (INFINITY when fewer than `k` entries exist).
+fn kth_smallest(mut etas: Vec<f64>, k: usize) -> f64 {
+    if etas.len() < k {
+        return f64::INFINITY;
+    }
+    etas.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    etas[k - 1]
+}
+
+fn queue_diff(holders: &[HolderState], queues: Vec<Vec<usize>>) -> Vec<QueueUpdate> {
+    holders
+        .iter()
+        .zip(queues)
+        .filter(|(h, q)| &h.queue != q)
+        .map(|(h, q)| QueueUpdate { slot: h.slot, queue: q })
+        .collect()
+}
+
+impl FrozenPlanner {
+    /// Plan a leave: `abandoned` is the departed slot's pending tail (its
+    /// in-flight front is not abandoned — short notice lets it finish).
+    /// `holders` are the live, non-leaving survivors; `live_holders[g]` is
+    /// the authoritative live-pending-holder count per group *after* the
+    /// abandonment (it may exceed what `holders` shows — other leaving
+    /// workers' fronts still deliver; those are treated as never-arriving
+    /// for backfill estimates).
+    ///
+    /// A set unrecoverable even after backfill lands in `plan.deficits` —
+    /// the caller decides when that becomes fatal (a simultaneous join in
+    /// the same event batch can still clear it).
+    pub fn plan_leave(
+        &self,
+        abandoned: &[usize],
+        holders: &[HolderState],
+        live_holders: &[usize],
+        ledger: &dyn GroupState,
+        delivered: &HashSet<(usize, usize)>,
+    ) -> FrozenPlan {
+        let RecoveryRule::PerSet { sets, k } = self.rule else {
+            // Global/BICEC: slots own static ranges — nothing to re-plan;
+            // the reactor's pending-total check guards feasibility.
+            return FrozenPlan::default();
+        };
+        let measure = transition::frozen_item_measure(sets);
+        let mut queues: Vec<Vec<usize>> = holders.iter().map(|h| h.queue.clone()).collect();
+        let mut added = vec![0usize; sets];
+        let mut plan = FrozenPlan::default();
+        // Scarcest set first, so contention for under-loaded holders is
+        // resolved toward the neediest group; ties break low-set-first for
+        // determinism.
+        let mut order: Vec<usize> = abandoned
+            .iter()
+            .copied()
+            .filter(|&g| !ledger.group_complete(g))
+            .collect();
+        order.sort_by_key(|&g| (ledger.have(g) + live_holders[g], g));
+        order.dedup();
+        for &g in &order {
+            if !self.backfill {
+                // No re-balancing: just report sets left below threshold.
+                if ledger.have(g) + live_holders[g] < k {
+                    plan.deficits.push(g);
+                }
+                continue;
+            }
+            loop {
+                let live = live_holders[g] + added[g];
+                let need = ledger.have(g) + live < k;
+                // Estimated delivery times for g: credited completions are
+                // done (0), visible holders pay queue-position x multiplier,
+                // holders outside the view (leaving workers' fronts) are
+                // conservatively never-arriving.
+                let mut etas: Vec<f64> = vec![0.0; ledger.have(g)];
+                let mut visible = 0usize;
+                for (i, h) in holders.iter().enumerate() {
+                    if let Some(pos) = queues[i].iter().position(|&x| x == g) {
+                        etas.push((pos + 1) as f64 * h.mult);
+                        visible += 1;
+                    }
+                }
+                for _ in visible..live {
+                    etas.push(f64::INFINITY);
+                }
+                // Best candidate holder: lightest estimated backlog, ties to
+                // the lowest slot. A holder whose original queue already
+                // drained is about to exit (workers leave on empty queues),
+                // so it is never a backfill target.
+                let cand = (0..holders.len())
+                    .filter(|&i| {
+                        !holders[i].queue.is_empty()
+                            && !queues[i].contains(&g)
+                            && !delivered.contains(&(holders[i].slot, g))
+                    })
+                    .min_by(|&a, &b| {
+                        let ea = (queues[a].len() + 1) as f64 * holders[a].mult;
+                        let eb = (queues[b].len() + 1) as f64 * holders[b].mult;
+                        ea.partial_cmp(&eb)
+                            .unwrap()
+                            .then(holders[a].slot.cmp(&holders[b].slot))
+                    });
+                let Some(i) = cand else { break };
+                if !need {
+                    // Beyond feasibility, add only while the k-th smallest
+                    // estimated delivery strictly improves.
+                    let cur = kth_smallest(etas.clone(), k);
+                    let cand_eta = (queues[i].len() + 1) as f64 * holders[i].mult;
+                    let mut with = etas;
+                    with.push(cand_eta);
+                    if kth_smallest(with, k) + 1e-9 >= cur {
+                        break;
+                    }
+                }
+                queues[i].push(g);
+                added[g] += 1;
+                plan.backfills += 1;
+                plan.waste += measure;
+            }
+            if ledger.have(g) + live_holders[g] + added[g] < k {
+                plan.deficits.push(g);
+            }
+        }
+        plan.updates = queue_diff(holders, queues);
+        plan.reallocated = plan.backfills > 0;
+        plan
+    }
+
+    /// Plan a join: the TAS answer for `joiner`'s slot under the frozen
+    /// geometry, plus the survivor deltas it implies (sheds off
+    /// strictly-slower loaded holders, ledger re-filtering).
+    pub fn plan_join(
+        &self,
+        joiner: usize,
+        joiner_mult: f64,
+        holders: &[HolderState],
+        live_holders: &[usize],
+        ledger: &dyn GroupState,
+        delivered: &HashSet<(usize, usize)>,
+    ) -> FrozenPlan {
+        let mut plan = FrozenPlan::default();
+        match self.rule {
+            RecoveryRule::Global { .. } => {
+                // BICEC: the slot's pre-assigned static range (the paper's
+                // zero-transition-waste property), minus anything this slot
+                // already delivered before leaving.
+                let sp = self.bicec_s_per.expect("global rule is BICEC");
+                plan.joiner = (joiner * sp..(joiner + 1) * sp)
+                    .filter(|&id| !delivered.contains(&(joiner, id)))
+                    .collect();
+            }
+            RecoveryRule::PerSet { sets, k } => {
+                let measure = transition::frozen_item_measure(sets);
+                let mut queues: Vec<Vec<usize>> =
+                    holders.iter().map(|h| h.queue.clone()).collect();
+                // Deficit-greedy: the incomplete sets farthest from their
+                // threshold first, late sets first on ties (CEC's aligned
+                // tail is the paper's bottleneck), capped at the scheme's
+                // per-worker selection count.
+                let mut cands: Vec<usize> = (0..sets)
+                    .filter(|&m| {
+                        !ledger.group_complete(m) && !delivered.contains(&(joiner, m))
+                    })
+                    .collect();
+                cands.sort_by(|&a, &b| {
+                    let da = k.saturating_sub(ledger.have(a));
+                    let db = k.saturating_sub(ledger.have(b));
+                    db.cmp(&da).then(b.cmp(&a))
+                });
+                cands.truncate(self.s_cap);
+                // The joiner takes its whole list on anew ([10]'s
+                // accounting, matching the DES's None-prior survivors).
+                plan.waste += cands.len() as f64 * measure;
+                if self.backfill {
+                    // Shed each taken set from the most-loaded strictly-
+                    // slower holder queuing it beyond its front, as long as
+                    // a spare holder remains (never drop to exactly K).
+                    for (idx, &g) in cands.iter().enumerate() {
+                        if ledger.have(g) + live_holders[g] < k + 1 {
+                            continue;
+                        }
+                        let joiner_eta = (idx + 1) as f64 * joiner_mult;
+                        let mut best: Option<(f64, usize)> = None;
+                        for (i, h) in holders.iter().enumerate() {
+                            if h.mult <= joiner_mult {
+                                continue;
+                            }
+                            let Some(pos) = queues[i].iter().position(|&x| x == g)
+                            else {
+                                continue;
+                            };
+                            if pos == 0 {
+                                continue; // may be in flight
+                            }
+                            let drain = (pos + 1) as f64 * h.mult;
+                            if drain <= joiner_eta {
+                                continue;
+                            }
+                            let better = match best {
+                                None => true,
+                                Some((d, bi)) => {
+                                    drain > d
+                                        || (drain == d && h.slot < holders[bi].slot)
+                                }
+                            };
+                            if better {
+                                best = Some((drain, i));
+                            }
+                        }
+                        if let Some((_, i)) = best {
+                            queues[i].retain(|&x| x != g);
+                            plan.sheds += 1;
+                            plan.waste += measure;
+                        }
+                    }
+                }
+                // Drop ledger-complete sets from every queue, keeping the
+                // (possibly in-flight) front.
+                for q in queues.iter_mut() {
+                    if q.len() > 1 {
+                        let front = q[0];
+                        let mut kept = Vec::with_capacity(q.len());
+                        kept.push(front);
+                        kept.extend(
+                            q[1..].iter().copied().filter(|&g| !ledger.group_complete(g)),
+                        );
+                        *q = kept;
+                    }
+                }
+                plan.joiner = cands;
+                plan.updates = queue_diff(holders, queues);
+                plan.reallocated = !plan.joiner.is_empty() || !plan.updates.is_empty();
+            }
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::tas::{Bicec, Cec, Scheme};
+
+    /// Minimal ledger fake: `have[g]` credited completions at threshold `k`.
+    struct FakeLedger {
+        have: Vec<usize>,
+        k: usize,
+    }
+
+    impl GroupState for FakeLedger {
+        fn have(&self, group: usize) -> usize {
+            self.have[group].min(self.k)
+        }
+        fn group_complete(&self, group: usize) -> bool {
+            self.have[group] >= self.k
+        }
+    }
+
+    /// The deterministic frozen fixtures below all run at 6 sets.
+    fn per_set_planner(sets: usize, k: usize, s: usize, backfill: bool) -> FrozenPlanner {
+        FrozenPlanner {
+            rule: RecoveryRule::PerSet { sets, k },
+            s_cap: s,
+            bicec_s_per: None,
+            backfill,
+        }
+    }
+
+    #[test]
+    fn plan_transition_matches_inline_composition() {
+        // The plan must equal allocate_active + survivors + (policy) +
+        // total_waste composed by hand — the exact pre-planner DES inline.
+        let scheme = Cec::new(2, 4);
+        let before = scheme.allocate(8);
+        let before_active: Vec<usize> = (0..8).collect();
+        let pointers = vec![1usize; 8];
+        let active: Vec<usize> = (0..6).collect();
+        for policy in [Reassign::Identity, Reassign::MaxOverlap] {
+            let mut scratch = Vec::new();
+            let plan = plan_transition(
+                &scheme, &before, &before_active, &pointers, &active, policy, &mut scratch,
+            );
+            let mut want_alloc = scheme.allocate_active(&active);
+            let survivors: Vec<_> =
+                (0..6).map(|w| (w, Some((w, 1usize)))).collect();
+            if policy == Reassign::MaxOverlap {
+                let a = reassign::max_overlap_assignment(&before, &want_alloc, &survivors);
+                want_alloc = reassign::apply_assignment(&want_alloc, &a);
+            }
+            let want_waste = transition::total_waste(&before, &want_alloc, &survivors);
+            assert_eq!(plan.waste.to_bits(), want_waste.to_bits(), "{policy:?}");
+            assert!(plan.reallocated);
+            assert_eq!(plan.alloc.lists, want_alloc.lists);
+            assert_eq!(scratch, survivors);
+            plan.alloc.validate();
+        }
+    }
+
+    #[test]
+    fn plan_transition_bicec_is_free_and_static() {
+        let scheme = Bicec::new(600, 300, 8);
+        let before = scheme.allocate_active(&(0..8).collect::<Vec<_>>());
+        let active: Vec<usize> = (0..6).collect();
+        let mut scratch = Vec::new();
+        let plan = plan_transition(
+            &scheme,
+            &before,
+            &(0..8).collect::<Vec<_>>(),
+            &vec![3; 8],
+            &active,
+            Reassign::Identity,
+            &mut scratch,
+        );
+        assert_eq!(plan.waste, 0.0);
+        assert!(!plan.reallocated);
+    }
+
+    /// Deterministic leave fixture: 6 sets, K = 2, holders from a CEC-like
+    /// layout with two slow slots.
+    fn leave_fixture() -> (Vec<HolderState>, Vec<usize>, FakeLedger) {
+        // Slots 0, 1, 5 fast; 2, 3 slow; slot 4 is the leaver (not listed).
+        let holders = vec![
+            HolderState { slot: 0, queue: vec![1, 2, 3], mult: 1.0 },
+            HolderState { slot: 1, queue: vec![2, 3, 4], mult: 1.0 },
+            HolderState { slot: 2, queue: vec![2, 3, 4, 5], mult: 12.0 },
+            HolderState { slot: 3, queue: vec![0, 3, 4, 5], mult: 12.0 },
+            HolderState { slot: 5, queue: vec![1, 2, 5], mult: 1.0 },
+        ];
+        let mut live = vec![0usize; 6];
+        for h in &holders {
+            for &g in &h.queue {
+                live[g] += 1;
+            }
+        }
+        let ledger = FakeLedger { have: vec![2, 1, 0, 0, 0, 0], k: 2 };
+        (holders, live, ledger)
+    }
+
+    #[test]
+    fn leave_backfills_scarce_sets_onto_fast_underloaded_holders() {
+        let (holders, live, ledger) = leave_fixture();
+        let planner = per_set_planner(6, 2, 4, true);
+        // The leaver abandoned sets 4 and 5; the fixture's `live` counts
+        // only the surviving holders, as the reactor's post-abandonment
+        // tally does.
+        let plan = planner.plan_leave(&[4, 5], &holders, &live, &ledger, &HashSet::new());
+        // Set 4's visible holders are w1 (fast) and the slow pair; set 5's
+        // are only slow + w5: each gets at least one fast backfill.
+        assert!(plan.deficits.is_empty(), "{plan:?}");
+        assert!(plan.backfills >= 1, "{plan:?}");
+        assert!(plan.waste > 0.0);
+        assert!((plan.waste - plan.backfills as f64 / 6.0).abs() < 1e-12);
+        assert!(plan.reallocated);
+        // Updates only append; fronts and relative order are preserved.
+        for up in &plan.updates {
+            let before = &holders.iter().find(|h| h.slot == up.slot).unwrap().queue;
+            assert!(up.queue.len() >= before.len());
+            assert_eq!(&up.queue[..before.len()], &before[..]);
+        }
+    }
+
+    #[test]
+    fn leave_without_backfill_only_reports_deficits() {
+        let (holders, live, ledger) = leave_fixture();
+        let planner = per_set_planner(6, 2, 4, false);
+        let plan = planner.plan_leave(&[4, 5], &holders, &live, &ledger, &HashSet::new());
+        assert_eq!(plan.backfills, 0);
+        assert!(plan.updates.is_empty());
+        assert_eq!(plan.waste, 0.0);
+        assert!(!plan.reallocated);
+        // Both abandoned sets still have >= K holders: no deficits.
+        assert!(plan.deficits.is_empty(), "{plan:?}");
+    }
+
+    #[test]
+    fn unrescuable_leave_reports_the_deficit_set() {
+        // Set 5 loses its only spare holder and nobody eligible remains:
+        // slot 0 already queues it, slot 1 already delivered it and left.
+        let holders = vec![HolderState { slot: 0, queue: vec![5], mult: 1.0 }];
+        let mut delivered = HashSet::new();
+        delivered.insert((1usize, 5usize));
+        let live = vec![0, 0, 0, 0, 0, 1];
+        let ledger = FakeLedger { have: vec![2, 2, 2, 2, 2, 0], k: 2 };
+        let planner = per_set_planner(6, 2, 4, true);
+        let plan = planner.plan_leave(&[5], &holders, &live, &ledger, &delivered);
+        assert_eq!(plan.deficits, vec![5], "{plan:?}");
+        assert_eq!(plan.backfills, 0);
+    }
+
+    #[test]
+    fn join_is_deficit_greedy_late_first_and_capped() {
+        let (holders, live, ledger) = leave_fixture();
+        let planner = per_set_planner(6, 2, 4, true);
+        let plan =
+            planner.plan_join(6, 1.0, &holders, &live, &ledger, &HashSet::new());
+        // Set 0 complete; set 1 has deficit 1; the rest deficit 2. Late
+        // sets first within a deficit level, capped at S = 4.
+        assert_eq!(plan.joiner, vec![5, 4, 3, 2]);
+        assert!(plan.waste >= 4.0 / 6.0 - 1e-12);
+        assert!(plan.reallocated);
+    }
+
+    #[test]
+    fn join_sheds_from_strictly_slower_loaded_holders_only() {
+        let (holders, live, ledger) = leave_fixture();
+        let planner = per_set_planner(6, 2, 4, true);
+        let plan =
+            planner.plan_join(6, 1.0, &holders, &live, &ledger, &HashSet::new());
+        // Sets 4/5 sit beyond slow fronts with have+holders >= k+1 — some
+        // shed must fire, and every shed comes off a slow slot (2 or 3).
+        assert!(plan.sheds >= 1, "{plan:?}");
+        for up in &plan.updates {
+            let before = &holders.iter().find(|h| h.slot == up.slot).unwrap().queue;
+            if up.queue.len() < before.len() {
+                assert!(matches!(up.slot, 2 | 3), "shed from fast slot {}", up.slot);
+                // Fronts are never shed.
+                assert_eq!(up.queue.first(), before.first());
+            }
+        }
+        // A uniform-speed joiner against uniform holders never sheds.
+        let uniform: Vec<HolderState> = holders
+            .iter()
+            .map(|h| HolderState { mult: 1.0, ..h.clone() })
+            .collect();
+        let p2 = planner.plan_join(6, 1.0, &uniform, &live, &ledger, &HashSet::new());
+        assert_eq!(p2.sheds, 0);
+    }
+
+    #[test]
+    fn join_filters_complete_sets_beyond_the_front() {
+        let holders = vec![
+            HolderState { slot: 0, queue: vec![0, 1, 2], mult: 1.0 },
+            HolderState { slot: 1, queue: vec![1, 0, 2], mult: 1.0 },
+        ];
+        let live = vec![2, 2, 2, 0, 0, 0];
+        let ledger = FakeLedger { have: vec![2, 2, 0, 0, 0, 0], k: 2 };
+        let planner = per_set_planner(6, 2, 4, true);
+        let plan = planner.plan_join(6, 1.0, &holders, &live, &ledger, &HashSet::new());
+        // Sets 0 and 1 are complete: dropped wherever they sit beyond a
+        // front; fronts stay even when complete.
+        let q0 = &plan.updates.iter().find(|u| u.slot == 0).unwrap().queue;
+        assert_eq!(q0, &vec![0, 2]);
+        let q1 = &plan.updates.iter().find(|u| u.slot == 1).unwrap().queue;
+        assert_eq!(q1, &vec![1, 2]);
+        // Filtering alone is not priced.
+        assert!((plan.waste - plan.joiner.len() as f64 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bicec_join_takes_static_range_at_zero_waste() {
+        let planner = FrozenPlanner {
+            rule: RecoveryRule::Global { k: 20 },
+            s_cap: 4,
+            bicec_s_per: Some(4),
+            backfill: true,
+        };
+        let ledger = FakeLedger { have: vec![0; 32], k: 20 };
+        let mut delivered = HashSet::new();
+        delivered.insert((3usize, 13usize));
+        let plan = planner.plan_join(3, 1.0, &[], &[], &ledger, &delivered);
+        assert_eq!(plan.joiner, vec![12, 14, 15]);
+        assert_eq!(plan.waste, 0.0, "BICEC is zero-waste by construction");
+        assert_eq!(plan.sheds + plan.backfills, 0);
+        assert!(!plan.reallocated);
+        let none = planner.plan_leave(&[1, 2], &[], &[], &ledger, &delivered);
+        assert_eq!(none.waste, 0.0);
+        assert!(none.updates.is_empty());
+        assert!(none.deficits.is_empty());
+    }
+
+    // Satellite: planner invariants on random frozen states — every
+    // incomplete group keeps >= K holders after any feasible plan, no
+    // holder is double-assigned a set, waste is non-negative and exactly
+    // the priced delta count at granularity 1/sets.
+    #[test]
+    fn prop_frozen_plans_preserve_invariants() {
+        prop::check(60, |g| {
+            let k = g.usize_in(1, 3);
+            let s = k + g.usize_in(0, 3);
+            let n = s + g.usize_in(1, 5);
+            let scheme = Cec::new(k, s);
+            let alloc = scheme.allocate(n);
+            let sets = n;
+            // Random progress: each worker completed a random prefix.
+            let mut queues: Vec<Vec<usize>> = alloc
+                .lists
+                .iter()
+                .map(|l| {
+                    let done = g.usize_in(0, l.len());
+                    l[done..].iter().map(|it| it.group).collect()
+                })
+                .collect();
+            let mut have = vec![0usize; sets];
+            let mut delivered = HashSet::new();
+            for (w, list) in alloc.lists.iter().enumerate() {
+                for it in &list[..list.len() - queues[w].len()] {
+                    have[it.group] += 1;
+                    delivered.insert((w, it.group));
+                }
+            }
+            let ledger = FakeLedger { have: have.clone(), k };
+            let leaver = g.usize_in(0, n - 1);
+            let leaver_queue = queues.remove(leaver);
+            let abandoned: Vec<usize> =
+                leaver_queue.iter().skip(1).copied().collect();
+            let holders: Vec<HolderState> = (0..n)
+                .filter(|&w| w != leaver)
+                .zip(&queues)
+                .map(|(slot, q)| HolderState {
+                    slot,
+                    queue: q.clone(),
+                    mult: if g.bool() { 1.0 } else { 8.0 },
+                })
+                .collect();
+            let mut live = vec![0usize; sets];
+            for h in &holders {
+                for &gr in &h.queue {
+                    live[gr] += 1;
+                }
+            }
+            // The leaver's front still delivers; count it like the reactor
+            // does (leaving workers stay in the holder tally).
+            if let Some(&front) = leaver_queue.first() {
+                live[front] += 1;
+            }
+            let planner = FrozenPlanner {
+                rule: RecoveryRule::PerSet { sets, k },
+                s_cap: s,
+                bicec_s_per: None,
+                backfill: g.bool(),
+            };
+            let plan =
+                planner.plan_leave(&abandoned, &holders, &live, &ledger, &delivered);
+            if plan.waste < -1e-12 {
+                return Err(format!("negative waste {}", plan.waste));
+            }
+            let priced = plan.backfills + plan.sheds;
+            if (plan.waste - priced as f64 / sets as f64).abs() > 1e-9 {
+                return Err(format!(
+                    "waste {} != {priced}/{sets}",
+                    plan.waste
+                ));
+            }
+            // Apply and re-check: holder floors and duplicate-freedom.
+            let mut final_queues: Vec<(usize, Vec<usize>)> = holders
+                .iter()
+                .map(|h| (h.slot, h.queue.clone()))
+                .collect();
+            for up in &plan.updates {
+                let entry = final_queues
+                    .iter_mut()
+                    .find(|(s, _)| *s == up.slot)
+                    .ok_or("update for unknown slot")?;
+                entry.1 = up.queue.clone();
+            }
+            let mut post = vec![0usize; sets];
+            for (slot, q) in &final_queues {
+                let mut seen = HashSet::new();
+                for &gr in q {
+                    if !seen.insert(gr) {
+                        return Err(format!("slot {slot} double-assigned set {gr}"));
+                    }
+                    post[gr] += 1;
+                }
+            }
+            if let Some(&front) = leaver_queue.first() {
+                post[front] += 1;
+            }
+            for m in 0..sets {
+                if !ledger.group_complete(m)
+                    && ledger.have(m) + post[m] < k
+                    && abandoned.contains(&m)
+                    && !plan.deficits.contains(&m)
+                {
+                    return Err(format!(
+                        "set {m} below threshold but not reported as a deficit: {} + {}",
+                        ledger.have(m),
+                        post[m]
+                    ));
+                }
+                if plan.deficits.contains(&m)
+                    && ledger.have(m) + post[m] >= k
+                {
+                    return Err(format!("set {m} reported as a spurious deficit"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_join_plans_preserve_invariants() {
+        prop::check(60, |g| {
+            let k = g.usize_in(1, 3);
+            let s = k + g.usize_in(0, 3);
+            let n = s + g.usize_in(1, 4);
+            let scheme = Cec::new(k, s);
+            let alloc = scheme.allocate(n);
+            let sets = n;
+            let queues: Vec<Vec<usize>> = alloc
+                .lists
+                .iter()
+                .map(|l| {
+                    let done = g.usize_in(0, l.len());
+                    l[done..].iter().map(|it| it.group).collect()
+                })
+                .collect();
+            let mut have = vec![0usize; sets];
+            let mut delivered = HashSet::new();
+            for (w, list) in alloc.lists.iter().enumerate() {
+                for it in &list[..list.len() - queues[w].len()] {
+                    have[it.group] += 1;
+                    delivered.insert((w, it.group));
+                }
+            }
+            let ledger = FakeLedger { have: have.clone(), k };
+            let holders: Vec<HolderState> = queues
+                .iter()
+                .enumerate()
+                .map(|(slot, q)| HolderState {
+                    slot,
+                    queue: q.clone(),
+                    mult: if g.bool() { 1.0 } else { 6.0 },
+                })
+                .collect();
+            let mut live = vec![0usize; sets];
+            for h in &holders {
+                for &gr in &h.queue {
+                    live[gr] += 1;
+                }
+            }
+            let planner = FrozenPlanner {
+                rule: RecoveryRule::PerSet { sets, k },
+                s_cap: s,
+                bicec_s_per: None,
+                backfill: g.bool(),
+            };
+            let joiner = n; // fresh slot
+            let plan =
+                planner.plan_join(joiner, 1.0, &holders, &live, &ledger, &delivered);
+            if plan.joiner.len() > s {
+                return Err(format!("joiner list exceeds cap: {:?}", plan.joiner));
+            }
+            let mut seen = HashSet::new();
+            for &gr in &plan.joiner {
+                if ledger.group_complete(gr) {
+                    return Err(format!("joiner assigned complete set {gr}"));
+                }
+                if !seen.insert(gr) {
+                    return Err(format!("joiner double-assigned set {gr}"));
+                }
+            }
+            if plan.waste < -1e-12 {
+                return Err(format!("negative waste {}", plan.waste));
+            }
+            // Post-plan holder floor: sheds must never drop a set to
+            // (or through) its threshold once the joiner is counted.
+            let mut final_queues: Vec<Vec<usize>> =
+                holders.iter().map(|h| h.queue.clone()).collect();
+            for up in &plan.updates {
+                let i = holders.iter().position(|h| h.slot == up.slot).unwrap();
+                final_queues[i] = up.queue.clone();
+            }
+            let mut post = vec![0usize; sets];
+            for q in &final_queues {
+                for &gr in q {
+                    post[gr] += 1;
+                }
+            }
+            for &gr in &plan.joiner {
+                post[gr] += 1;
+            }
+            for m in 0..sets {
+                if !ledger.group_complete(m) && ledger.have(m) + post[m] < k {
+                    // Only sheds can reduce counts; filtering keeps fronts
+                    // and completes are excluded above.
+                    return Err(format!(
+                        "set {m} below threshold after join plan: {} + {}",
+                        ledger.have(m),
+                        post[m]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

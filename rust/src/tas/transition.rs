@@ -61,6 +61,16 @@ pub fn symmetric_difference(a: &[(f64, f64)], b: &[(f64, f64)]) -> f64 {
     difference_measure(a, b) + difference_measure(b, a)
 }
 
+/// Measure of one subtask at *frozen* granularity `sets` — the unit the
+/// frozen-geometry planner (`tas::planner::FrozenPlanner`) prices queue
+/// deltas in. At a static granularity every abandoned or taken-on subtask
+/// is one `[m/g, (m+1)/g)` interval, so counting deltas at `1/g` each is
+/// exactly this module's interval metric — which is what makes the DES and
+/// the cluster report identical waste on granularity-preserving traces.
+pub fn frozen_item_measure(sets: usize) -> f64 {
+    1.0 / sets as f64
+}
+
 /// Transition waste of moving worker `w` (having completed `completed`
 /// items of `before.lists[w]`) to `after.lists[w_after]`, per [10]:
 ///

@@ -10,13 +10,18 @@
 //!   the simulation-side sweeps.
 
 use hcec::coordinator::{
-    run_cluster_job, run_job, serve, ExecBackend, JobConfig, JobReport, SchemeConfig,
-    ServiceConfig,
+    run_cluster_job, run_job, serve, ClusterBackend, ClusterConfig, ClusterElasticity,
+    ExecBackend, JobConfig, JobReport, SchemeConfig, ServiceConfig, SpeedSource,
 };
 use hcec::scenario::{
-    ClusterBackendSpec, ClusterSpec, ElasticitySpec, Engine, Scenario, SeedMode,
+    BackfillSpec, ClusterBackendSpec, ClusterSpec, ElasticitySpec, Engine, Metric,
+    Scenario, SeedMode,
 };
-use hcec::sim::{ElasticTrace, Reassign, SpeedModel};
+use hcec::sim::{
+    simulate_trace, CostModel, ElasticEvent, ElasticTrace, EventKind, Reassign,
+    SpeedModel, WorkerSpeeds,
+};
+use hcec::tas::Scheme;
 use hcec::workload::JobSpec;
 
 fn native_cfg(scheme: SchemeConfig, seed: u64) -> JobConfig {
@@ -140,6 +145,7 @@ fn cluster_engine_simulated_latency_at_n640() {
             backend: ClusterBackendSpec::SimulatedLatency,
             time_scale: 0.05,
             preempt_after_first: 0,
+            backfill: BackfillSpec::On,
         })
         .trials(1)
         .seed(11)
@@ -154,6 +160,203 @@ fn cluster_engine_simulated_latency_at_n640() {
     assert!(trial.completions >= 6400, "completions {}", trial.completions);
     assert_eq!(trial.max_rel_err, 0.0, "latency backend ships no bytes");
     assert!(trial.computation_time > 0.0);
+}
+
+/// DES <-> cluster transition-waste parity on a granularity-preserving
+/// trace. Both engines route elastic events through `tas::planner` and
+/// price them with `tas::transition`'s metric; they only diverge when the
+/// DES re-subdivides at a new granularity. Simultaneous leave+join pairs
+/// keep the active count (hence the CEC granularity) at 8, so every
+/// transition costs exactly the joiner's S-set take-on at 1/8 each — in
+/// BOTH engines, bit-for-bit comparable.
+#[test]
+fn des_cluster_waste_parity_on_swap_churn() {
+    let job = JobSpec::new(240, 240, 240);
+    let n_max = 9usize;
+    let scheme = hcec::tas::Cec::new(3, 6);
+    // Pin one cost-model subtask at 60 ms so the wall-clock reactor's
+    // deliveries (multiples of tau, never early — sleeps only run long)
+    // stay well clear of the event deadlines at 1.5/2.4 tau.
+    let tau = 0.060;
+    let ops = scheme.subtask_ops(job.u, job.w, job.v, 8);
+    let cost =
+        CostModel { worker_ops_per_sec: ops as f64 / tau, decode_ops_per_sec: 1e10 };
+    let trace = ElasticTrace {
+        n_max,
+        n_initial: 8,
+        events: vec![
+            ElasticEvent { time: 1.5 * tau, kind: EventKind::Leave(7) },
+            ElasticEvent { time: 1.5 * tau, kind: EventKind::Join(8) },
+            ElasticEvent { time: 2.4 * tau, kind: EventKind::Leave(6) },
+            ElasticEvent { time: 2.4 * tau, kind: EventKind::Join(7) },
+        ],
+    };
+    let speeds = WorkerSpeeds::uniform(n_max);
+    let des = simulate_trace(&scheme, &trace, job, &cost, &speeds).unwrap();
+    let cfg = ClusterConfig {
+        job,
+        scheme: SchemeConfig::Cec { k: 3, s: 6 },
+        n_max,
+        n_workers: 8,
+        backend: ClusterBackend::Simulated { time_scale: 1.0 },
+        speed: SpeedSource::Uniform,
+        cost,
+        elasticity: ClusterElasticity::Trace(trace),
+        preempt_after_first: 0,
+        backfill: true,
+        seed: 1,
+    };
+    let cluster = run_cluster_job(&cfg).unwrap();
+    assert!(des.transition_waste > 0.0, "swap churn must cost something");
+    // Two swaps x 6 taken-on sets x 1/8 task each.
+    assert!(
+        (des.transition_waste - 1.5).abs() < 1e-9,
+        "DES waste {} != analytic 1.5",
+        des.transition_waste
+    );
+    assert!(
+        (cluster.transition_waste - des.transition_waste).abs() < 1e-9,
+        "cluster waste {} != DES waste {}",
+        cluster.transition_waste,
+        des.transition_waste
+    );
+    assert_eq!(
+        cluster.reallocations, des.reallocations,
+        "re-plan counts must agree on granularity-preserving churn"
+    );
+}
+
+/// The BICEC side of waste parity: zero on any trace, in both engines.
+#[test]
+fn des_cluster_waste_parity_bicec_zero() {
+    let job = JobSpec::new(240, 240, 240);
+    let n_max = 9usize;
+    let scheme = hcec::tas::Bicec::new(24, 4, n_max);
+    let tau = 0.060;
+    let ops = scheme.subtask_ops(job.u, job.w, job.v, 8);
+    let cost =
+        CostModel { worker_ops_per_sec: ops as f64 / tau, decode_ops_per_sec: 1e10 };
+    let trace = ElasticTrace {
+        n_max,
+        n_initial: 8,
+        events: vec![
+            ElasticEvent { time: 1.5 * tau, kind: EventKind::Leave(7) },
+            ElasticEvent { time: 1.5 * tau, kind: EventKind::Join(8) },
+        ],
+    };
+    let des =
+        simulate_trace(&scheme, &trace, job, &cost, &WorkerSpeeds::uniform(n_max))
+            .unwrap();
+    let cfg = ClusterConfig {
+        job,
+        scheme: SchemeConfig::Bicec { k: 24, s_per_worker: 4 },
+        n_max,
+        n_workers: 8,
+        backend: ClusterBackend::Simulated { time_scale: 1.0 },
+        speed: SpeedSource::Uniform,
+        cost,
+        elasticity: ClusterElasticity::Trace(trace),
+        preempt_after_first: 0,
+        backfill: true,
+        seed: 1,
+    };
+    let cluster = run_cluster_job(&cfg).unwrap();
+    assert_eq!(des.transition_waste, 0.0, "BICEC is zero-waste by construction");
+    assert_eq!(cluster.transition_waste, 0.0);
+    assert_eq!(des.reallocations, 0);
+    assert_eq!(cluster.reallocations, 0);
+}
+
+/// Acceptance: an `Engine::Cluster` run over churn reports non-zero
+/// transition waste for CEC and exactly zero for BICEC, through the full
+/// scenario surface (`TrialOutcome.transition_waste`).
+#[test]
+fn cluster_engine_reports_cec_waste_and_bicec_zero() {
+    let job = JobSpec::new(240, 240, 240);
+    let cec = hcec::tas::Cec::new(3, 4);
+    let tau = 0.040;
+    let ops = cec.subtask_ops(job.u, job.w, job.v, 8);
+    let cost =
+        CostModel { worker_ops_per_sec: ops as f64 / tau, decode_ops_per_sec: 1e10 };
+    // Churn trace: one leave, one rejoin, both mid-job for CEC.
+    let trace = ElasticTrace {
+        n_max: 8,
+        n_initial: 8,
+        events: vec![
+            ElasticEvent { time: 1.2 * tau, kind: EventKind::Leave(6) },
+            ElasticEvent { time: 2.3 * tau, kind: EventKind::Join(6) },
+        ],
+    };
+    let sc = Scenario::builder("cluster_waste_columns")
+        .engine(Engine::Cluster)
+        .job(job)
+        .fleet(8, 8)
+        .schemes(vec![
+            SchemeConfig::Cec { k: 3, s: 4 },
+            SchemeConfig::Bicec { k: 20, s_per_worker: 4 },
+        ])
+        .speed(hcec::scenario::SpeedSpec::Uniform)
+        .cost(cost)
+        .elasticity(ElasticitySpec::Trace {
+            path: "inline".into(),
+            trace,
+            reassign: Reassign::Identity,
+        })
+        .cluster(ClusterSpec {
+            backend: ClusterBackendSpec::SimulatedLatency,
+            time_scale: 1.0,
+            preempt_after_first: 0,
+            backfill: BackfillSpec::On,
+        })
+        .trials(1)
+        .seed(5)
+        .seed_mode(SeedMode::PerTrial)
+        .build()
+        .unwrap();
+    let out = sc.run().unwrap();
+    let cec_row = out.scheme("cec").expect("cec row");
+    let bicec_row = out.scheme("bicec").expect("bicec row");
+    assert_eq!(cec_row.failures() + bicec_row.failures(), 0, "{:?}", out.per_scheme);
+    let cec_waste = cec_row.mean(Metric::TransitionWaste);
+    // The rejoin takes S = 4 of the 8 frozen sets: 0.5 tasks of waste.
+    assert!(
+        (cec_waste - 0.5).abs() < 1e-9,
+        "CEC churn waste {cec_waste} != analytic 0.5"
+    );
+    assert_eq!(bicec_row.mean(Metric::TransitionWaste), 0.0);
+    let cec_trial = cec_row.ok_trials().next().unwrap();
+    assert!(cec_trial.reallocations >= 1, "the rejoin is a re-plan");
+}
+
+/// The checked-in backfill example: `backfill = "compare"` yields paired
+/// rows on the same replayed trace, and backfill measurably cuts the mean
+/// finish time (the slow pair's abandoned sets go to fast holders instead
+/// of waiting ~48 subtask-times on straggler tails).
+#[test]
+fn backfill_example_scenario_cuts_finish_time() {
+    let path = format!(
+        "{}/../examples/scenario_cluster_backfill.toml",
+        env!("CARGO_MANIFEST_DIR")
+    );
+    let sc = Scenario::from_file(&path).unwrap_or_else(|e| panic!("{e}"));
+    assert_eq!(sc.engine, Engine::Cluster);
+    assert_eq!(sc.cluster.backfill, BackfillSpec::Compare);
+    // Round trip with the example's own directory as the trace-file base.
+    let base = std::path::Path::new(&path).parent().map(|p| p.to_path_buf());
+    let back = Scenario::from_toml_at(&sc.to_toml(), base.as_deref()).unwrap();
+    assert_eq!(back.to_doc(), sc.to_doc());
+    let out = sc.run().unwrap();
+    let off = out.scheme("cec").expect("backfill-off row");
+    let on = out.scheme("cec+backfill").expect("backfill-on row");
+    assert_eq!(off.failures() + on.failures(), 0, "{:?}", out.per_scheme);
+    let off_fin = off.mean(Metric::Finishing);
+    let on_fin = on.mean(Metric::Finishing);
+    assert!(
+        on_fin < 0.5 * off_fin,
+        "backfill did not cut the tail: on {on_fin} vs off {off_fin}"
+    );
+    assert!(on.mean(Metric::TransitionWaste) > 0.0, "backfill take-on is priced");
+    assert_eq!(off.mean(Metric::TransitionWaste), 0.0, "leaves alone cost nothing");
 }
 
 #[test]
