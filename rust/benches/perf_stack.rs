@@ -17,8 +17,12 @@
 //! CI smoke: `HCEC_BENCH_QUICK=1` shrinks the sampling windows ~20x.
 
 use hcec::bench::{header, Bench, BenchResult, JsonReport};
-use hcec::codes::RealMdsCode;
-use hcec::linalg::{gemm, gemm_naive, gemm_single_thread, Matrix};
+use hcec::codes::simd::{
+    active_tier, addmul_slice_tier, detected_tier, dot_tier, mul_slice_tier,
+    poly_eval_tile_tier, Tier,
+};
+use hcec::codes::{discrete_log, Gf16, RealMdsCode};
+use hcec::linalg::{gemm, gemm_naive, gemm_packed, gemm_single_thread, Matrix};
 use hcec::rng::{default_rng, Rng};
 use hcec::runtime::{artifacts_available, default_artifact_dir, Runtime};
 use hcec::scenario::{
@@ -152,12 +156,96 @@ fn main() {
     r.print();
     println!("    -> {:.2} Gmac/s (micro-kernel only)", 240.0f64.powi(3) / r.summary.mean / 1e9);
     report.push(&r, &[("gmacs", 240.0f64.powi(3) / r.summary.mean / 1e9)]);
+    // Packed + dispatched single-thread kernel (what cluster/pool workers
+    // run). Its scalar pair is the "gemm 1-thread" oracle row above — both
+    // are bit-identical by construction, so the delta is pure kernel speed.
+    let r = Bench::new("gemm packed 240x240x240").run(|| gemm_packed(&a2, &b));
+    r.print();
+    println!(
+        "    -> {:.2} Gmac/s (packed, {} tier)",
+        240.0f64.powi(3) / r.summary.mean / 1e9,
+        active_tier().name()
+    );
+    report.push(&r, &[("gmacs", 240.0f64.powi(3) / r.summary.mean / 1e9)]);
 
     println!("\n-- exact codec: bulk GF(2^16) kernels --");
+    println!(
+        "(dispatch: detected tier {}, active tier {} — set HCEC_FORCE_SCALAR=1 to pin the oracle)",
+        detected_tier().name(),
+        active_tier().name()
+    );
+    // Paired scalar-vs-SIMD rows on the same 64 KiB symbol buffer (32768
+    // Gf16). Tier-explicit kernel calls sidestep the dispatch thresholds
+    // and the process-global HCEC_FORCE_SCALAR knob, so both arms of each
+    // pair are measured in one run; the "simd" arm runs the detected tier
+    // (on a scalar-only host both arms measure the oracle — see the tier
+    // line above).
+    let tier = detected_tier();
+    let nsym = 32 * 1024usize;
+    let base: Vec<Gf16> = (0..nsym).map(|_| Gf16(rng.next_u64() as u16)).collect();
+    let c = Gf16(0x1234);
+    let mut buf = base.clone();
+    let r = Bench::new("gf mul_slice 64KiB scalar")
+        .run(|| mul_slice_tier(Tier::Scalar, c, &mut buf));
+    r.print();
+    report.push(&r, &[("symbol_macs_per_sec", nsym as f64 / r.summary.mean)]);
+    let mut buf = base.clone();
+    let r = Bench::new("gf mul_slice 64KiB simd").run(|| mul_slice_tier(tier, c, &mut buf));
+    r.print();
+    println!("    -> {:.2e} symbol-MACs/s", nsym as f64 / r.summary.mean);
+    report.push(&r, &[("symbol_macs_per_sec", nsym as f64 / r.summary.mean)]);
+    let mut acc = vec![Gf16::ZERO; nsym];
+    let r = Bench::new("gf addmul_slice 64KiB scalar")
+        .run(|| addmul_slice_tier(Tier::Scalar, &mut acc, c, &base));
+    r.print();
+    report.push(&r, &[("symbol_macs_per_sec", nsym as f64 / r.summary.mean)]);
+    let mut acc = vec![Gf16::ZERO; nsym];
+    let r = Bench::new("gf addmul_slice 64KiB simd")
+        .run(|| addmul_slice_tier(tier, &mut acc, c, &base));
+    r.print();
+    println!("    -> {:.2e} symbol-MACs/s", nsym as f64 / r.summary.mean);
+    report.push(&r, &[("symbol_macs_per_sec", nsym as f64 / r.summary.mean)]);
+    // The decode/encode inner loop: one k=800 polynomial against a 32-wide
+    // tile of evaluation points (the ENCODE_TILE shape), and the k=800 dot.
+    let kk = 800usize;
+    let coeffs: Vec<Gf16> = (0..kk).map(|_| Gf16(rng.next_u64() as u16)).collect();
+    let tile = 32usize;
+    let mut lpow = vec![0u16; kk * tile];
+    for t in 0..tile {
+        let lx = discrete_log(Gf16(t as u16 + 1)) as u32;
+        let mut cur = 0u32;
+        for l in 0..kk {
+            lpow[l * tile + t] = cur as u16;
+            cur += lx;
+            if cur >= 65535 {
+                cur -= 65535;
+            }
+        }
+    }
+    let mut out = vec![Gf16::ZERO; tile];
+    let r = Bench::new("gf poly_eval_tile k800 t32 scalar")
+        .run(|| poly_eval_tile_tier(Tier::Scalar, &coeffs, &lpow, tile, &mut out));
+    r.print();
+    report.push(&r, &[("symbol_macs_per_sec", (kk * tile) as f64 / r.summary.mean)]);
+    let mut out = vec![Gf16::ZERO; tile];
+    let r = Bench::new("gf poly_eval_tile k800 t32 simd")
+        .run(|| poly_eval_tile_tier(tier, &coeffs, &lpow, tile, &mut out));
+    r.print();
+    println!("    -> {:.2e} symbol-MACs/s", (kk * tile) as f64 / r.summary.mean);
+    report.push(&r, &[("symbol_macs_per_sec", (kk * tile) as f64 / r.summary.mean)]);
+    let va: Vec<Gf16> = (0..kk).map(|_| Gf16(rng.next_u64() as u16)).collect();
+    let vb: Vec<Gf16> = (0..kk).map(|_| Gf16(rng.next_u64() as u16)).collect();
+    let r = Bench::new("gf dot k800 scalar").run(|| dot_tier(Tier::Scalar, &va, &vb));
+    r.print();
+    report.push(&r, &[("symbol_macs_per_sec", kk as f64 / r.summary.mean)]);
+    let r = Bench::new("gf dot k800 simd").run(|| dot_tier(tier, &va, &vb));
+    r.print();
+    report.push(&r, &[("symbol_macs_per_sec", kk as f64 / r.summary.mean)]);
+
     let rs = hcec::codes::RsCode::new(3200, 800).unwrap();
     let stream = 64usize;
-    let gf_data: Vec<Vec<hcec::codes::Gf16>> = (0..stream)
-        .map(|_| (0..800).map(|_| hcec::codes::Gf16(rng.next_u64() as u16)).collect())
+    let gf_data: Vec<Vec<Gf16>> = (0..stream)
+        .map(|_| (0..800).map(|_| Gf16(rng.next_u64() as u16)).collect())
         .collect();
     let r = Bench::new("rs encode_share k800 x64").run(|| rs.encode_share(&gf_data, 17));
     r.print();
@@ -166,13 +254,15 @@ fn main() {
         800.0 * stream as f64 / r.summary.mean
     );
     report.push(&r, &[("symbol_macs_per_sec", 800.0 * stream as f64 / r.summary.mean)]);
-    // Tiled multi-share encode: one pass over the data per 8 shares, for
-    // the (800, 3200) encode sweep.
-    let share_ids: Vec<usize> = (0..8).map(|i| i * 397 + 17).collect();
-    let r = Bench::new("rs encode_shares k800 x64 tile8")
+    // Tiled multi-share encode through the dispatched kernels: 64 shares =
+    // two full ENCODE_TILE=32 passes over the data, the shape of the
+    // (800, 3200) encode sweep. Its scalar pair is a HCEC_FORCE_SCALAR=1
+    // run of this same row (the knob is process-global).
+    let share_ids: Vec<usize> = (0..64).map(|i| i * 47 + 17).collect();
+    let r = Bench::new("rs encode_shares k800 x64 simd")
         .run(|| rs.encode_shares(&gf_data, &share_ids));
     r.print();
-    let tiled_macs = 8.0 * 800.0 * stream as f64;
+    let tiled_macs = 64.0 * 800.0 * stream as f64;
     println!("    -> {:.2e} symbol-MACs/s (tiled)", tiled_macs / r.summary.mean);
     report.push(&r, &[("symbol_macs_per_sec", tiled_macs / r.summary.mean)]);
 

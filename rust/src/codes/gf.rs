@@ -9,10 +9,15 @@
 //!
 //! Besides scalar `Gf16` arithmetic, this module provides the bulk slice
 //! kernels the codec hot paths are built on (`mul_slice`, `addmul_slice`,
-//! `dot`): the table references and the scalar's log are hoisted out of the
-//! loop and the per-element zero test reduces to one branch, which is what
-//! makes the (800, 3200) encode/decode throughput-bound rather than
-//! lookup-latency-bound.
+//! `dot`, `poly_eval_tile`). The public names are thin wrappers that route
+//! through [`super::simd`]'s runtime dispatch (AVX2 / SSSE3 / NEON
+//! split-table and gather kernels); the original scalar loops are kept
+//! verbatim as `*_scalar` — the bit-identity oracles every SIMD path is
+//! tested against, and the forced path when `HCEC_FORCE_SCALAR=1`. In the
+//! scalar loops the table references and the constant's log are hoisted out
+//! of the loop and the per-element zero test reduces to one branch, which
+//! is what makes the (800, 3200) encode/decode throughput-bound rather
+//! than lookup-latency-bound.
 
 const POLY: u32 = 0x1100B;
 const ORDER: usize = 1 << 16;
@@ -45,8 +50,24 @@ fn tables() -> &'static Tables {
     })
 }
 
+/// The doubled exp table (`exp[i] = g^i` for `i < 2 * (2^16 - 1)`), exposed
+/// for the SIMD gather kernels in [`super::simd`].
+pub(crate) fn exp_table() -> &'static [u16] {
+    &tables().exp
+}
+
+/// The log table (`log[x]` for nonzero `x`; entry 0 is unused), exposed for
+/// the SIMD gather kernels in [`super::simd`].
+pub(crate) fn log_table() -> &'static [u16] {
+    &tables().log
+}
+
 /// An element of GF(2^16).
+///
+/// `repr(transparent)`: guaranteed to have exactly the layout of `u16`, so
+/// the SIMD kernels may reinterpret `&[Gf16]` buffers as raw `u16` lanes.
 #[derive(Clone, Copy, PartialEq, Eq, Debug, Default, Hash)]
+#[repr(transparent)]
 pub struct Gf16(pub u16);
 
 impl Gf16 {
@@ -111,10 +132,20 @@ impl Gf16 {
 
 /// `xs[i] *= c` for every element, in place.
 ///
+/// Dispatched: long slices ride the split-table SIMD kernel for the
+/// detected tier ([`super::simd::active_tier`]); short slices and
+/// `HCEC_FORCE_SCALAR=1` take [`mul_slice_scalar`]. Bit-identical either
+/// way.
+pub fn mul_slice(c: Gf16, xs: &mut [Gf16]) {
+    super::simd::mul_slice(c, xs)
+}
+
+/// Scalar oracle for [`mul_slice`] (the original loop, kept verbatim).
+///
 /// Zero-branch lifted: `c == 0` zero-fills without touching the tables;
 /// otherwise the tables and `log c` are read once and the loop body is a
 /// single lookup chain per nonzero element.
-pub fn mul_slice(c: Gf16, xs: &mut [Gf16]) {
+pub fn mul_slice_scalar(c: Gf16, xs: &mut [Gf16]) {
     if c.0 == 0 {
         xs.fill(Gf16::ZERO);
         return;
@@ -133,8 +164,16 @@ pub fn mul_slice(c: Gf16, xs: &mut [Gf16]) {
 
 /// `acc[i] += c * xs[i]` (addition is XOR). The codec combine kernel.
 ///
-/// Panics if the slices have different lengths.
+/// Dispatched like [`mul_slice`]; panics if the slices have different
+/// lengths.
 pub fn addmul_slice(acc: &mut [Gf16], c: Gf16, xs: &[Gf16]) {
+    super::simd::addmul_slice(acc, c, xs)
+}
+
+/// Scalar oracle for [`addmul_slice`] (the original loop, kept verbatim).
+///
+/// Panics if the slices have different lengths.
+pub fn addmul_slice_scalar(acc: &mut [Gf16], c: Gf16, xs: &[Gf16]) {
     assert_eq!(acc.len(), xs.len(), "addmul_slice length mismatch");
     if c.0 == 0 {
         return;
@@ -171,7 +210,16 @@ pub fn discrete_log(x: Gf16) -> u16 {
 /// up once per `l` and shared by the whole tile: evaluating `tile` shares
 /// makes ONE pass over the coefficients where per-share [`dot`] calls
 /// make `tile`, and the per-element work drops to a single exp-table read.
+///
+/// Dispatched: wide tiles ride the AVX2 gather kernel
+/// ([`super::simd::poly_eval_tile`]); narrow tiles, non-AVX2 tiers, and
+/// `HCEC_FORCE_SCALAR=1` take [`poly_eval_tile_scalar`].
 pub fn poly_eval_tile(coeffs: &[Gf16], lpow: &[u16], tile: usize, out: &mut [Gf16]) {
+    super::simd::poly_eval_tile(coeffs, lpow, tile, out)
+}
+
+/// Scalar oracle for [`poly_eval_tile`] (the original loop, kept verbatim).
+pub fn poly_eval_tile_scalar(coeffs: &[Gf16], lpow: &[u16], tile: usize, out: &mut [Gf16]) {
     assert_eq!(out.len(), tile, "output/tile mismatch");
     assert_eq!(lpow.len(), coeffs.len() * tile, "power table/tile mismatch");
     let t = tables();
@@ -190,14 +238,52 @@ pub fn poly_eval_tile(coeffs: &[Gf16], lpow: &[u16], tile: usize, out: &mut [Gf1
 
 /// Inner product `Σ_i a[i] · b[i]` over the field (sum is XOR).
 ///
-/// Panics if the slices have different lengths.
+/// Dispatched: long inputs ride the AVX2 gather kernel (XOR accumulation
+/// is order-independent, so the result is exact); otherwise
+/// [`dot_scalar`]. Panics if the slices have different lengths.
 pub fn dot(a: &[Gf16], b: &[Gf16]) -> Gf16 {
+    super::simd::dot(a, b)
+}
+
+/// Scalar oracle for [`dot`] (the original loop, kept verbatim).
+///
+/// Panics if the slices have different lengths.
+pub fn dot_scalar(a: &[Gf16], b: &[Gf16]) -> Gf16 {
     assert_eq!(a.len(), b.len(), "dot length mismatch");
     let t = tables();
     let mut acc: u16 = 0;
     for (x, y) in a.iter().zip(b) {
         if x.0 != 0 && y.0 != 0 {
             acc ^= t.exp[t.log[x.0 as usize] as usize + t.log[y.0 as usize] as usize];
+        }
+    }
+    Gf16(acc)
+}
+
+/// `Σ_l coeffs[l] · x^l` — the dot product against a constant power row,
+/// evaluated through the tiled log-domain path ([`poly_eval_tile`]'s inner
+/// loop with a tile of one): the powers are never materialised, their logs
+/// walk an arithmetic progression mod 2^16 - 1, and each nonzero
+/// coefficient costs one log read and one exp read. This is the shared
+/// inner loop of single-share encode and per-point decode checks —
+/// previously `dot` against an explicit `powers` vector rebuilt per call.
+pub fn dot_power_row(coeffs: &[Gf16], x: Gf16) -> Gf16 {
+    if x.0 == 0 {
+        // x^0 = 1, x^l = 0 for l > 0: only the constant term survives.
+        return coeffs.first().copied().unwrap_or(Gf16::ZERO);
+    }
+    let t = tables();
+    let lx = t.log[x.0 as usize] as u32;
+    let mut lp = 0u32; // log(x^l), kept reduced mod 2^16 - 1
+    let mut acc: u16 = 0;
+    for c in coeffs {
+        if c.0 != 0 {
+            // lc + lp < 2 * (2^16 - 1): covered by the doubled exp table.
+            acc ^= t.exp[t.log[c.0 as usize] as usize + lp as usize];
+        }
+        lp += lx;
+        if lp >= 65535 {
+            lp -= 65535;
         }
     }
     Gf16(acc)
@@ -413,6 +499,38 @@ mod tests {
                         got[t].0, want.0
                     ));
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_dot_power_row_matches_explicit_powers() {
+        prop::check(80, |g| {
+            let k = g.usize_in(0, 40);
+            let coeffs = stream_with_zeros(g, k);
+            // Random point, including zero (degenerate) and one.
+            let x = match g.u64() % 5 {
+                0 => Gf16::ZERO,
+                1 => Gf16::ONE,
+                _ => Gf16(g.u64() as u16),
+            };
+            let mut powers = Vec::with_capacity(k);
+            let mut p = Gf16::ONE;
+            for _ in 0..k {
+                powers.push(p);
+                p = p.mul(x);
+            }
+            let want = coeffs
+                .iter()
+                .zip(&powers)
+                .fold(Gf16::ZERO, |acc, (&c, &pw)| acc.add(c.mul(pw)));
+            let got = dot_power_row(&coeffs, x);
+            if got != want {
+                return Err(format!(
+                    "dot_power_row mismatch: x={:#x} k={k} got={:#x} want={:#x}",
+                    x.0, got.0, want.0
+                ));
             }
             Ok(())
         });

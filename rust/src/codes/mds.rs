@@ -191,7 +191,11 @@ impl RealMdsCode {
         (0..self.n).map(|i| self.encode_one(data, i)).collect()
     }
 
-    /// Encode a single coded block (what worker `i` stores).
+    /// Encode a single coded block (what worker `i` stores). The per-block
+    /// accumulation is `Matrix::axpy`, which rides the dispatched
+    /// `linalg::axpy_slice` kernel — like decode's fused combine, so the
+    /// whole real-MDS path vectorises under the one `HCEC_FORCE_SCALAR`
+    /// knob while staying bit-identical.
     pub fn encode_one(&self, data: &[Matrix], i: usize) -> Matrix {
         assert_eq!(data.len(), self.k, "need k data blocks");
         let row = self.row(i);

@@ -17,9 +17,13 @@ pub mod cost;
 mod gf;
 mod mds;
 mod rs;
+pub mod simd;
 mod vandermonde;
 
-pub use gf::{addmul_slice, discrete_log, dot, mul_slice, poly_eval_tile, Gf16};
+pub use gf::{
+    addmul_slice, addmul_slice_scalar, discrete_log, dot, dot_power_row, dot_scalar,
+    mul_slice, mul_slice_scalar, poly_eval_tile, poly_eval_tile_scalar, Gf16,
+};
 pub use mds::{DecodeError, RealMdsCode};
 pub use rs::{dequantize, quantize, RsCode, ENCODE_TILE};
 pub use vandermonde::{chebyshev_points, vandermonde, Vandermonde};

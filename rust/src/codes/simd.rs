@@ -1,0 +1,793 @@
+//! Runtime-dispatched SIMD kernels for the bulk GF(2^16) operations.
+//!
+//! Technique (the ISA-L split-table scheme, adapted to 16-bit symbols): a
+//! multiply by a constant `c` is linear over GF(2), so it splits across the
+//! four 4-bit nibbles of the operand —
+//!
+//! ```text
+//!   c · x = c·(x & 0xF) ^ c·(x & 0xF0) ^ c·(x & 0xF00) ^ c·(x & 0xF000)
+//! ```
+//!
+//! Each term has only 16 possible values, so per call we build four
+//! 16-entry product tables from the log/exp tables (64 scalar multiplies),
+//! split each into a low-byte and a high-byte plane, and then a single
+//! byte-shuffle instruction (PSHUFB / `vqtbl1q_u8`) looks up 16 lanes at
+//! once. The u16 lanes of a nibble-index vector hold the byte pair
+//! `[v, 0x00]`, and table entry 0 is always 0 (`c · 0 = 0`), so the
+//! shuffled planes recombine with a shift and XOR — no byte deinterleave.
+//! The table-build cost amortises across the slice, which is why short
+//! slices stay on the scalar oracle.
+//!
+//! `poly_eval_tile` and `dot` have no per-call constant to build tables
+//! for; on AVX2 they instead gather straight from u32 copies of the
+//! log/exp tables (`vpgatherdd`), eight lanes per step. XOR accumulation
+//! is exact in any order, so every kernel here is bit-identical to its
+//! scalar oracle in `gf.rs` — enforced by the property tests below and by
+//! the forced-scalar CI arm (`HCEC_FORCE_SCALAR=1`).
+//!
+//! Dispatch: [`active_tier`] picks the best tier the CPU supports
+//! (AVX2 > SSSE3 on x86-64, NEON on aarch64, scalar elsewhere), overridden
+//! to scalar by `HCEC_FORCE_SCALAR`. The `*_tier` variants take an
+//! explicit tier — benches and tests use them to pin a path regardless of
+//! the process-global env knob.
+
+use std::sync::OnceLock;
+
+use super::gf::{self, Gf16};
+
+/// A dispatchable kernel implementation level.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Tier {
+    /// 256-bit split-table mul/addmul + gather poly_eval/dot (x86-64).
+    Avx2,
+    /// 128-bit split-table mul/addmul; poly_eval/dot stay scalar (x86-64).
+    Ssse3,
+    /// 128-bit split-table mul/addmul via TBL; poly_eval/dot stay scalar
+    /// (aarch64).
+    Neon,
+    /// The verbatim original loops in `gf.rs` — the bit-identity oracle.
+    Scalar,
+}
+
+impl Tier {
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Avx2 => "avx2",
+            Tier::Ssse3 => "ssse3",
+            Tier::Neon => "neon",
+            Tier::Scalar => "scalar",
+        }
+    }
+}
+
+/// Whether `HCEC_FORCE_SCALAR` pins every dispatched kernel to the scalar
+/// oracle. Read once; the knob is process-global.
+pub fn force_scalar() -> bool {
+    static FORCE: OnceLock<bool> = OnceLock::new();
+    *FORCE.get_or_init(|| match std::env::var("HCEC_FORCE_SCALAR") {
+        Ok(v) => !matches!(v.trim(), "" | "0" | "false" | "off"),
+        Err(_) => false,
+    })
+}
+
+fn detect() -> Tier {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Tier::Avx2;
+        }
+        if std::arch::is_x86_feature_detected!("ssse3") {
+            return Tier::Ssse3;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Tier::Neon;
+        }
+    }
+    Tier::Scalar
+}
+
+/// Best tier this CPU supports (ignores `HCEC_FORCE_SCALAR`).
+pub fn detected_tier() -> Tier {
+    static TIER: OnceLock<Tier> = OnceLock::new();
+    *TIER.get_or_init(detect)
+}
+
+/// The tier the dispatched entry points actually use.
+pub fn active_tier() -> Tier {
+    if force_scalar() {
+        Tier::Scalar
+    } else {
+        detected_tier()
+    }
+}
+
+/// Every tier runnable on this CPU, best first, always ending in Scalar.
+/// Property tests iterate this so each compiled path is exercised.
+pub fn supported_tiers() -> Vec<Tier> {
+    let mut tiers = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            tiers.push(Tier::Avx2);
+        }
+        if std::arch::is_x86_feature_detected!("ssse3") {
+            tiers.push(Tier::Ssse3);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            tiers.push(Tier::Neon);
+        }
+    }
+    tiers.push(Tier::Scalar);
+    tiers
+}
+
+/// Below this many symbols the per-call split-table build (64 scalar
+/// multiplies) isn't amortised; the dispatchers stay scalar.
+const MIN_SIMD_LEN: usize = 64;
+
+/// Minimum tile width for the gather-based `poly_eval_tile` (one full
+/// 8-lane group) and minimum length for the gather-based `dot`.
+const MIN_GATHER_TILE: usize = 8;
+const MIN_GATHER_LEN: usize = 32;
+
+/// Split multiplication tables for one constant `c`: for nibble position
+/// `i` and value `v`, entry `v` of table `i` is `c · (v << 4i)`, stored as
+/// separate low/high byte planes so each plane is a 16-byte shuffle table.
+struct SplitTables {
+    lo: [[u8; 16]; 4],
+    hi: [[u8; 16]; 4],
+}
+
+fn split_tables(c: Gf16) -> SplitTables {
+    let mut t = SplitTables { lo: [[0u8; 16]; 4], hi: [[0u8; 16]; 4] };
+    for nib in 0..4 {
+        for v in 0..16u16 {
+            let p = Gf16(v << (4 * nib)).mul(c).0;
+            t.lo[nib][v as usize] = (p & 0xFF) as u8;
+            t.hi[nib][v as usize] = (p >> 8) as u8;
+        }
+    }
+    t
+}
+
+// ---- dispatched entry points (the public gf.rs wrappers land here) ------
+
+/// `xs[i] *= c`, dispatched. See [`gf::mul_slice`].
+pub fn mul_slice(c: Gf16, xs: &mut [Gf16]) {
+    if c.0 <= 1 || xs.len() < MIN_SIMD_LEN {
+        return gf::mul_slice_scalar(c, xs);
+    }
+    mul_slice_tier(active_tier(), c, xs)
+}
+
+/// `acc[i] ^= c * xs[i]`, dispatched. See [`gf::addmul_slice`].
+pub fn addmul_slice(acc: &mut [Gf16], c: Gf16, xs: &[Gf16]) {
+    assert_eq!(acc.len(), xs.len(), "addmul_slice length mismatch");
+    if c.0 <= 1 || acc.len() < MIN_SIMD_LEN {
+        return gf::addmul_slice_scalar(acc, c, xs);
+    }
+    addmul_slice_tier(active_tier(), acc, c, xs)
+}
+
+/// Tiled polynomial evaluation, dispatched. See [`gf::poly_eval_tile`].
+pub fn poly_eval_tile(coeffs: &[Gf16], lpow: &[u16], tile: usize, out: &mut [Gf16]) {
+    assert_eq!(out.len(), tile, "output/tile mismatch");
+    assert_eq!(lpow.len(), coeffs.len() * tile, "power table/tile mismatch");
+    if tile < MIN_GATHER_TILE {
+        return gf::poly_eval_tile_scalar(coeffs, lpow, tile, out);
+    }
+    poly_eval_tile_tier(active_tier(), coeffs, lpow, tile, out)
+}
+
+/// Field inner product, dispatched. See [`gf::dot`].
+pub fn dot(a: &[Gf16], b: &[Gf16]) -> Gf16 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch");
+    if a.len() < MIN_GATHER_LEN {
+        return gf::dot_scalar(a, b);
+    }
+    dot_tier(active_tier(), a, b)
+}
+
+// ---- tier-explicit variants ---------------------------------------------
+//
+// No length thresholds: the kernels handle ragged tails internally, so
+// tests can drive any length down any compiled path. A tier the CPU can't
+// run (or that isn't compiled for this arch) silently falls back to the
+// scalar oracle — callers iterate `supported_tiers()` to know what really
+// runs.
+
+/// [`mul_slice`] pinned to `tier`.
+pub fn mul_slice_tier(tier: Tier, c: Gf16, xs: &mut [Gf16]) {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 if std::arch::is_x86_feature_detected!("avx2") => unsafe {
+            x86::mul_slice_avx2(c, xs)
+        },
+        #[cfg(target_arch = "x86_64")]
+        Tier::Ssse3 if std::arch::is_x86_feature_detected!("ssse3") => unsafe {
+            x86::mul_slice_ssse3(c, xs)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon if std::arch::is_aarch64_feature_detected!("neon") => unsafe {
+            arm::mul_slice_neon(c, xs)
+        },
+        _ => gf::mul_slice_scalar(c, xs),
+    }
+}
+
+/// [`addmul_slice`] pinned to `tier`.
+pub fn addmul_slice_tier(tier: Tier, acc: &mut [Gf16], c: Gf16, xs: &[Gf16]) {
+    assert_eq!(acc.len(), xs.len(), "addmul_slice length mismatch");
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 if std::arch::is_x86_feature_detected!("avx2") => unsafe {
+            x86::addmul_slice_avx2(acc, c, xs)
+        },
+        #[cfg(target_arch = "x86_64")]
+        Tier::Ssse3 if std::arch::is_x86_feature_detected!("ssse3") => unsafe {
+            x86::addmul_slice_ssse3(acc, c, xs)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon if std::arch::is_aarch64_feature_detected!("neon") => unsafe {
+            arm::addmul_slice_neon(acc, c, xs)
+        },
+        _ => gf::addmul_slice_scalar(acc, c, xs),
+    }
+}
+
+/// [`poly_eval_tile`] pinned to `tier`. Only AVX2 has a vector path (the
+/// gather kernel); every other tier is the scalar oracle.
+pub fn poly_eval_tile_tier(tier: Tier, coeffs: &[Gf16], lpow: &[u16], tile: usize, out: &mut [Gf16]) {
+    assert_eq!(out.len(), tile, "output/tile mismatch");
+    assert_eq!(lpow.len(), coeffs.len() * tile, "power table/tile mismatch");
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 if std::arch::is_x86_feature_detected!("avx2") => unsafe {
+            x86::poly_eval_tile_avx2(coeffs, lpow, tile, out)
+        },
+        _ => gf::poly_eval_tile_scalar(coeffs, lpow, tile, out),
+    }
+}
+
+/// [`dot`] pinned to `tier`. Only AVX2 has a vector path.
+pub fn dot_tier(tier: Tier, a: &[Gf16], b: &[Gf16]) -> Gf16 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch");
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 if std::arch::is_x86_feature_detected!("avx2") => unsafe {
+            x86::dot_avx2(a, b)
+        },
+        _ => gf::dot_scalar(a, b),
+    }
+}
+
+// ---- x86-64 kernels ------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    use super::super::gf::{self, Gf16};
+    use super::SplitTables;
+
+    /// The eight 16-byte shuffle tables as registers, low/high plane per
+    /// nibble, broadcast to both 128-bit lanes (PSHUFB shuffles within
+    /// each lane independently, so both halves need the same table).
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_tables_256(t: &SplitTables) -> [(__m256i, __m256i); 4] {
+        let mut regs = [(_mm256_setzero_si256(), _mm256_setzero_si256()); 4];
+        for nib in 0..4 {
+            let lo = _mm_loadu_si128(t.lo[nib].as_ptr() as *const __m128i);
+            let hi = _mm_loadu_si128(t.hi[nib].as_ptr() as *const __m128i);
+            regs[nib] =
+                (_mm256_broadcastsi128_si256(lo), _mm256_broadcastsi128_si256(hi));
+        }
+        regs
+    }
+
+    /// 16 parallel multiplies by the tables' constant.
+    ///
+    /// Each u16 lane of a nibble-index vector holds the bytes `[v, 0x00]`;
+    /// PSHUFB reads `table[v]` into the low byte and `table[0] = 0` into
+    /// the high byte, so the shuffled low plane IS the result's low byte,
+    /// the shuffled high plane shifts up by 8, and the four nibble
+    /// contributions XOR together.
+    #[target_feature(enable = "avx2")]
+    unsafe fn mul16_avx2(regs: &[(__m256i, __m256i); 4], x: __m256i) -> __m256i {
+        let mask = _mm256_set1_epi16(0x000F);
+        let idx = [
+            _mm256_and_si256(x, mask),
+            _mm256_and_si256(_mm256_srli_epi16::<4>(x), mask),
+            _mm256_and_si256(_mm256_srli_epi16::<8>(x), mask),
+            _mm256_srli_epi16::<12>(x),
+        ];
+        let mut acc = _mm256_setzero_si256();
+        for nib in 0..4 {
+            let lo = _mm256_shuffle_epi8(regs[nib].0, idx[nib]);
+            let hi = _mm256_shuffle_epi8(regs[nib].1, idx[nib]);
+            acc = _mm256_xor_si256(acc, _mm256_xor_si256(lo, _mm256_slli_epi16::<8>(hi)));
+        }
+        acc
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn mul_slice_avx2(c: Gf16, xs: &mut [Gf16]) {
+        let regs = load_tables_256(&super::split_tables(c));
+        let mut chunks = xs.chunks_exact_mut(16);
+        for ch in &mut chunks {
+            let p = ch.as_mut_ptr() as *mut __m256i;
+            let v = _mm256_loadu_si256(p as *const __m256i);
+            _mm256_storeu_si256(p, mul16_avx2(&regs, v));
+        }
+        gf::mul_slice_scalar(c, chunks.into_remainder());
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn addmul_slice_avx2(acc: &mut [Gf16], c: Gf16, xs: &[Gf16]) {
+        let regs = load_tables_256(&super::split_tables(c));
+        let mut a_chunks = acc.chunks_exact_mut(16);
+        let mut x_chunks = xs.chunks_exact(16);
+        for (a, x) in (&mut a_chunks).zip(&mut x_chunks) {
+            let xv = _mm256_loadu_si256(x.as_ptr() as *const __m256i);
+            let ap = a.as_mut_ptr() as *mut __m256i;
+            let av = _mm256_loadu_si256(ap as *const __m256i);
+            _mm256_storeu_si256(ap, _mm256_xor_si256(av, mul16_avx2(&regs, xv)));
+        }
+        gf::addmul_slice_scalar(a_chunks.into_remainder(), c, x_chunks.remainder());
+    }
+
+    #[target_feature(enable = "ssse3")]
+    unsafe fn load_tables_128(t: &SplitTables) -> [(__m128i, __m128i); 4] {
+        let mut regs = [(_mm_setzero_si128(), _mm_setzero_si128()); 4];
+        for nib in 0..4 {
+            regs[nib] = (
+                _mm_loadu_si128(t.lo[nib].as_ptr() as *const __m128i),
+                _mm_loadu_si128(t.hi[nib].as_ptr() as *const __m128i),
+            );
+        }
+        regs
+    }
+
+    /// 8 parallel multiplies — the 128-bit version of [`mul16_avx2`].
+    #[target_feature(enable = "ssse3")]
+    unsafe fn mul8_ssse3(regs: &[(__m128i, __m128i); 4], x: __m128i) -> __m128i {
+        let mask = _mm_set1_epi16(0x000F);
+        let idx = [
+            _mm_and_si128(x, mask),
+            _mm_and_si128(_mm_srli_epi16::<4>(x), mask),
+            _mm_and_si128(_mm_srli_epi16::<8>(x), mask),
+            _mm_srli_epi16::<12>(x),
+        ];
+        let mut acc = _mm_setzero_si128();
+        for nib in 0..4 {
+            let lo = _mm_shuffle_epi8(regs[nib].0, idx[nib]);
+            let hi = _mm_shuffle_epi8(regs[nib].1, idx[nib]);
+            acc = _mm_xor_si128(acc, _mm_xor_si128(lo, _mm_slli_epi16::<8>(hi)));
+        }
+        acc
+    }
+
+    #[target_feature(enable = "ssse3")]
+    pub(super) unsafe fn mul_slice_ssse3(c: Gf16, xs: &mut [Gf16]) {
+        let regs = load_tables_128(&super::split_tables(c));
+        let mut chunks = xs.chunks_exact_mut(8);
+        for ch in &mut chunks {
+            let p = ch.as_mut_ptr() as *mut __m128i;
+            let v = _mm_loadu_si128(p as *const __m128i);
+            _mm_storeu_si128(p, mul8_ssse3(&regs, v));
+        }
+        gf::mul_slice_scalar(c, chunks.into_remainder());
+    }
+
+    #[target_feature(enable = "ssse3")]
+    pub(super) unsafe fn addmul_slice_ssse3(acc: &mut [Gf16], c: Gf16, xs: &[Gf16]) {
+        let regs = load_tables_128(&super::split_tables(c));
+        let mut a_chunks = acc.chunks_exact_mut(8);
+        let mut x_chunks = xs.chunks_exact(8);
+        for (a, x) in (&mut a_chunks).zip(&mut x_chunks) {
+            let xv = _mm_loadu_si128(x.as_ptr() as *const __m128i);
+            let ap = a.as_mut_ptr() as *mut __m128i;
+            let av = _mm_loadu_si128(ap as *const __m128i);
+            _mm_storeu_si128(ap, _mm_xor_si128(av, mul8_ssse3(&regs, xv)));
+        }
+        gf::addmul_slice_scalar(a_chunks.into_remainder(), c, x_chunks.remainder());
+    }
+
+    // ---- gather kernels (AVX2 only) -------------------------------------
+
+    /// u32 widening of the doubled exp table for `vpgatherdd` (the gather
+    /// reads 32-bit elements). Built once, ~512 KiB.
+    fn exp32() -> &'static [u32] {
+        static T: std::sync::OnceLock<Vec<u32>> = std::sync::OnceLock::new();
+        T.get_or_init(|| gf::exp_table().iter().map(|&v| v as u32).collect())
+    }
+
+    /// u32 widening of the log table. Entry 0 is 0 (a real, in-bounds
+    /// index), so gathers over zero lanes stay safe and get masked after.
+    fn log32() -> &'static [u32] {
+        static T: std::sync::OnceLock<Vec<u32>> = std::sync::OnceLock::new();
+        T.get_or_init(|| gf::log_table().iter().map(|&v| v as u32).collect())
+    }
+
+    /// Gather-based tile evaluation, 8 shares per vector: per (l, group)
+    /// the indices `log c_l + log x_t^l` are formed in u32 lanes and one
+    /// gather reads the doubled exp table (index < 2·(2^16 − 1), always in
+    /// bounds). XOR accumulation is exact in any order, so the result is
+    /// bit-identical to the scalar loop. Columns past the last full group
+    /// run the same arithmetic scalar.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn poly_eval_tile_avx2(
+        coeffs: &[Gf16],
+        lpow: &[u16],
+        tile: usize,
+        out: &mut [Gf16],
+    ) {
+        let log = gf::log_table();
+        let base = exp32().as_ptr() as *const i32;
+        let groups = tile / 8;
+        for grp in 0..groups {
+            let t0 = grp * 8;
+            let mut acc = _mm256_setzero_si256();
+            for (l, c) in coeffs.iter().enumerate() {
+                if c.0 == 0 {
+                    continue;
+                }
+                let lc = _mm256_set1_epi32(log[c.0 as usize] as i32);
+                let lp =
+                    _mm_loadu_si128(lpow.as_ptr().add(l * tile + t0) as *const __m128i);
+                let idx = _mm256_add_epi32(_mm256_cvtepu16_epi32(lp), lc);
+                acc = _mm256_xor_si256(acc, _mm256_i32gather_epi32::<4>(base, idx));
+            }
+            let mut lanes = [0u32; 8];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+            for (t, &v) in lanes.iter().enumerate() {
+                out[t0 + t].0 ^= v as u16;
+            }
+        }
+        let rem0 = groups * 8;
+        if rem0 < tile {
+            let exp = gf::exp_table();
+            for (l, c) in coeffs.iter().enumerate() {
+                if c.0 == 0 {
+                    continue;
+                }
+                let lc = log[c.0 as usize] as usize;
+                let row = &lpow[l * tile..(l + 1) * tile];
+                for t in rem0..tile {
+                    out[t].0 ^= exp[lc + row[t] as usize];
+                }
+            }
+        }
+    }
+
+    /// Gather-based inner product, 8 element pairs per step. Lanes where
+    /// either operand is zero contribute nothing: the gathers still run
+    /// (`log[0]` is a real in-bounds entry) and the bogus products are
+    /// masked off before the XOR.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_avx2(a: &[Gf16], b: &[Gf16]) -> Gf16 {
+        debug_assert_eq!(a.len(), b.len());
+        let lbase = log32().as_ptr() as *const i32;
+        let ebase = exp32().as_ptr() as *const i32;
+        let zero = _mm256_setzero_si256();
+        let mut acc = zero;
+        let n8 = a.len() - a.len() % 8;
+        let mut i = 0;
+        while i < n8 {
+            let av = _mm256_cvtepu16_epi32(_mm_loadu_si128(
+                a.as_ptr().add(i) as *const __m128i
+            ));
+            let bv = _mm256_cvtepu16_epi32(_mm_loadu_si128(
+                b.as_ptr().add(i) as *const __m128i
+            ));
+            let skip = _mm256_or_si256(
+                _mm256_cmpeq_epi32(av, zero),
+                _mm256_cmpeq_epi32(bv, zero),
+            );
+            let la = _mm256_i32gather_epi32::<4>(lbase, av);
+            let lb = _mm256_i32gather_epi32::<4>(lbase, bv);
+            let prod = _mm256_i32gather_epi32::<4>(ebase, _mm256_add_epi32(la, lb));
+            acc = _mm256_xor_si256(acc, _mm256_andnot_si256(skip, prod));
+            i += 8;
+        }
+        let mut lanes = [0u32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut r = lanes.iter().fold(0u16, |s, &v| s ^ v as u16);
+        r ^= gf::dot_scalar(&a[n8..], &b[n8..]).0;
+        Gf16(r)
+    }
+}
+
+// ---- aarch64 kernels -----------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use core::arch::aarch64::*;
+
+    use super::super::gf::{self, Gf16};
+    use super::SplitTables;
+
+    struct Tables128 {
+        lo: [uint8x16_t; 4],
+        hi: [uint8x16_t; 4],
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn load_tables(t: &SplitTables) -> Tables128 {
+        let mut lo = [vdupq_n_u8(0); 4];
+        let mut hi = [vdupq_n_u8(0); 4];
+        for nib in 0..4 {
+            lo[nib] = vld1q_u8(t.lo[nib].as_ptr());
+            hi[nib] = vld1q_u8(t.hi[nib].as_ptr());
+        }
+        Tables128 { lo, hi }
+    }
+
+    /// 8 parallel multiplies; the same `[v, 0x00]` byte-pair trick as the
+    /// x86 path (TBL reads `table[0] = 0` for the zero high bytes).
+    #[target_feature(enable = "neon")]
+    unsafe fn mul8_neon(t: &Tables128, x: uint16x8_t) -> uint16x8_t {
+        let mask = vdupq_n_u16(0x000F);
+        let idx = [
+            vandq_u16(x, mask),
+            vandq_u16(vshrq_n_u16::<4>(x), mask),
+            vandq_u16(vshrq_n_u16::<8>(x), mask),
+            vshrq_n_u16::<12>(x),
+        ];
+        let mut acc = vdupq_n_u16(0);
+        for nib in 0..4 {
+            let iv = vreinterpretq_u8_u16(idx[nib]);
+            let lo = vreinterpretq_u16_u8(vqtbl1q_u8(t.lo[nib], iv));
+            let hi = vreinterpretq_u16_u8(vqtbl1q_u8(t.hi[nib], iv));
+            acc = veorq_u16(acc, veorq_u16(lo, vshlq_n_u16::<8>(hi)));
+        }
+        acc
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn mul_slice_neon(c: Gf16, xs: &mut [Gf16]) {
+        let t = load_tables(&super::split_tables(c));
+        let mut chunks = xs.chunks_exact_mut(8);
+        for ch in &mut chunks {
+            let p = ch.as_mut_ptr() as *mut u16;
+            vst1q_u16(p, mul8_neon(&t, vld1q_u16(p as *const u16)));
+        }
+        gf::mul_slice_scalar(c, chunks.into_remainder());
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn addmul_slice_neon(acc: &mut [Gf16], c: Gf16, xs: &[Gf16]) {
+        let t = load_tables(&super::split_tables(c));
+        let mut a_chunks = acc.chunks_exact_mut(8);
+        let mut x_chunks = xs.chunks_exact(8);
+        for (a, x) in (&mut a_chunks).zip(&mut x_chunks) {
+            let xv = vld1q_u16(x.as_ptr() as *const u16);
+            let ap = a.as_mut_ptr() as *mut u16;
+            let av = vld1q_u16(ap as *const u16);
+            vst1q_u16(ap, veorq_u16(av, mul8_neon(&t, xv)));
+        }
+        gf::addmul_slice_scalar(a_chunks.into_remainder(), c, x_chunks.remainder());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    /// Random symbol stream with a forced sprinkling of zeros (mirrors the
+    /// gf.rs oracle tests), so every kernel's zero handling is exercised.
+    fn stream_with_zeros(g: &mut crate::prop::Gen, len: usize) -> Vec<Gf16> {
+        (0..len)
+            .map(|i| {
+                if i % 7 == 3 || g.u64() % 5 == 0 {
+                    Gf16::ZERO
+                } else {
+                    Gf16(g.u64() as u16)
+                }
+            })
+            .collect()
+    }
+
+    /// Random constant including the special cases 0 and 1.
+    fn random_constant(g: &mut crate::prop::Gen) -> Gf16 {
+        match g.u64() % 4 {
+            0 => Gf16::ZERO,
+            1 => Gf16::ONE,
+            _ => Gf16(g.u64() as u16),
+        }
+    }
+
+    #[test]
+    fn split_tables_cover_every_nibble_product() {
+        prop::check(40, |g| {
+            let c = Gf16(g.u64() as u16);
+            let t = split_tables(c);
+            for nib in 0..4 {
+                for v in 0..16u16 {
+                    let want = Gf16(v << (4 * nib)).mul(c).0;
+                    let got = (t.lo[nib][v as usize] as u16)
+                        | ((t.hi[nib][v as usize] as u16) << 8);
+                    if got != want {
+                        return Err(format!(
+                            "table mismatch c={:#x} nib={nib} v={v}: got {got:#x} want {want:#x}",
+                            c.0
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn every_supported_tier_mul_slice_is_bit_identical() {
+        for tier in supported_tiers() {
+            prop::check(60, |g| {
+                // Lengths cross vector widths and ragged tails (len % 16 != 0).
+                let len = g.usize_in(0, 200);
+                let xs = stream_with_zeros(g, len);
+                let c = random_constant(g);
+                let mut want = xs.clone();
+                gf::mul_slice_scalar(c, &mut want);
+                let mut got = xs;
+                mul_slice_tier(tier, c, &mut got);
+                if got != want {
+                    return Err(format!(
+                        "tier {} mul_slice diverged (len={len}, c={:#x})",
+                        tier.name(),
+                        c.0
+                    ));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn every_supported_tier_addmul_slice_is_bit_identical() {
+        for tier in supported_tiers() {
+            prop::check(60, |g| {
+                let len = g.usize_in(0, 200);
+                let xs = stream_with_zeros(g, len);
+                let acc0 = stream_with_zeros(g, len);
+                let c = random_constant(g);
+                let mut want = acc0.clone();
+                gf::addmul_slice_scalar(&mut want, c, &xs);
+                let mut got = acc0;
+                addmul_slice_tier(tier, &mut got, c, &xs);
+                if got != want {
+                    return Err(format!(
+                        "tier {} addmul_slice diverged (len={len}, c={:#x})",
+                        tier.name(),
+                        c.0
+                    ));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn every_supported_tier_poly_eval_tile_is_bit_identical() {
+        for tier in supported_tiers() {
+            prop::check(40, |g| {
+                let k = g.usize_in(1, 40);
+                // Tiles cross the 8-lane gather groups plus ragged tails.
+                let tile = g.usize_in(1, 37);
+                let points: Vec<Gf16> =
+                    (0..tile).map(|_| Gf16((g.u64() as u16).max(1))).collect();
+                let mut lpow = vec![0u16; k * tile];
+                for (t, &x) in points.iter().enumerate() {
+                    let lx = gf::discrete_log(x) as u32;
+                    let mut cur = 0u32;
+                    for l in 0..k {
+                        lpow[l * tile + t] = cur as u16;
+                        cur += lx;
+                        if cur >= 65535 {
+                            cur -= 65535;
+                        }
+                    }
+                }
+                let coeffs = stream_with_zeros(g, k);
+                let mut want = vec![Gf16::ZERO; tile];
+                gf::poly_eval_tile_scalar(&coeffs, &lpow, tile, &mut want);
+                let mut got = vec![Gf16::ZERO; tile];
+                poly_eval_tile_tier(tier, &coeffs, &lpow, tile, &mut got);
+                if got != want {
+                    return Err(format!(
+                        "tier {} poly_eval_tile diverged (k={k}, tile={tile})",
+                        tier.name()
+                    ));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn every_supported_tier_dot_is_bit_identical() {
+        for tier in supported_tiers() {
+            prop::check(60, |g| {
+                let len = g.usize_in(0, 120);
+                let a = stream_with_zeros(g, len);
+                let b = stream_with_zeros(g, len);
+                let want = gf::dot_scalar(&a, &b);
+                let got = dot_tier(tier, &a, &b);
+                if got != want {
+                    return Err(format!(
+                        "tier {} dot diverged (len={len}): got {:#x} want {:#x}",
+                        tier.name(),
+                        got.0,
+                        want.0
+                    ));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn dispatched_wrappers_match_scalar_on_large_buffers() {
+        // Above the length thresholds the public entry points take the
+        // active tier; whatever that is, results must match the oracle
+        // bitwise (under HCEC_FORCE_SCALAR=1 this trivially compares the
+        // oracle with itself — both CI arms run it).
+        let xs: Vec<Gf16> = (0..1000)
+            .map(|i| Gf16(((i as u64 * 2654435761) % 65536) as u16))
+            .collect();
+        let ys: Vec<Gf16> = (0..1000)
+            .map(|i| Gf16(((i as u64 * 40503 + 7) % 65536) as u16))
+            .collect();
+        let c = Gf16(0x1234);
+
+        let mut want = xs.clone();
+        gf::mul_slice_scalar(c, &mut want);
+        let mut got = xs.clone();
+        mul_slice(c, &mut got);
+        assert_eq!(got, want, "mul_slice dispatch diverged");
+
+        let mut want = ys.clone();
+        gf::addmul_slice_scalar(&mut want, c, &xs);
+        let mut got = ys.clone();
+        addmul_slice(&mut got, c, &xs);
+        assert_eq!(got, want, "addmul_slice dispatch diverged");
+
+        assert_eq!(
+            dot(&xs, &ys),
+            gf::dot_scalar(&xs, &ys),
+            "dot dispatch diverged"
+        );
+    }
+
+    #[test]
+    fn forced_scalar_env_routes_to_scalar_tier() {
+        // Valid under both CI arms: with HCEC_FORCE_SCALAR=1 the active
+        // tier must be Scalar; with the knob unset (or explicitly off) the
+        // active tier is whatever the CPU detection found.
+        match std::env::var("HCEC_FORCE_SCALAR").ok().as_deref().map(str::trim) {
+            Some("1") | Some("true") | Some("on") => {
+                assert!(force_scalar());
+                assert_eq!(active_tier(), Tier::Scalar);
+            }
+            None | Some("") | Some("0") | Some("false") | Some("off") => {
+                assert!(!force_scalar());
+                assert_eq!(active_tier(), detected_tier());
+            }
+            _ => {} // exotic spellings: parse covered by force_scalar itself
+        }
+    }
+
+    #[test]
+    fn active_tier_is_among_supported() {
+        let tiers = supported_tiers();
+        assert!(tiers.contains(&active_tier()));
+        assert_eq!(*tiers.last().unwrap(), Tier::Scalar, "scalar always runnable");
+    }
+}

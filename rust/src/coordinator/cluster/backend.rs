@@ -2,7 +2,7 @@
 //!
 //! | backend            | numerics | what `execute` does                      |
 //! |--------------------|----------|------------------------------------------|
-//! | [`NativeGemm`]     | yes      | single-thread blocked gemm (always on)   |
+//! | [`NativeGemm`]     | yes      | single-thread packed gemm (always on)    |
 //! | [`PjrtWorker`]     | yes      | AOT PJRT artifact via `runtime::Runtime` (`pjrt` feature; stub otherwise) |
 //! | [`SimulatedLatency`]| no      | sleeps the cost-model subtask time, returns no bytes |
 //!
@@ -22,7 +22,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use crate::linalg::{gemm_single_thread, Matrix};
+use crate::linalg::{gemm_packed, Matrix};
 use crate::runtime::Runtime;
 
 /// One worker's execution engine. `execute` computes `block @ b` and
@@ -33,9 +33,11 @@ pub trait WorkerBackend: Send {
         -> Result<Option<Vec<f32>>>;
 }
 
-/// Native blocked gemm, forced single-thread: the cluster already runs one
+/// Native packed gemm, forced single-thread: the cluster already runs one
 /// OS thread per worker slot, and nested gemm fan-out would oversubscribe
-/// the machine and distort the straggler-emulation sleep.
+/// the machine and distort the straggler-emulation sleep. `gemm_packed`
+/// rides the SIMD kernel dispatch while staying bit-identical to the
+/// scalar oracle (and to `HCEC_FORCE_SCALAR=1` runs).
 pub struct NativeGemm;
 
 impl WorkerBackend for NativeGemm {
@@ -45,7 +47,7 @@ impl WorkerBackend for NativeGemm {
 
     fn execute(&mut self, _group: usize, block: &Matrix, b: &Matrix)
         -> Result<Option<Vec<f32>>> {
-        Ok(Some(gemm_single_thread(block, b).into_vec()))
+        Ok(Some(gemm_packed(block, b).into_vec()))
     }
 }
 
@@ -152,7 +154,9 @@ mod tests {
         let mut backend = BackendSpec::Native.make_worker(0).unwrap();
         assert_eq!(backend.name(), "native");
         let out = backend.execute(0, &block, &b).unwrap().unwrap();
-        assert_eq!(out, gemm_single_thread(&block, &b).into_vec());
+        // Against the scalar oracle: the packed backend must be
+        // bit-identical to it on every dispatch tier.
+        assert_eq!(out, crate::linalg::gemm_single_thread(&block, &b).into_vec());
     }
 
     #[test]

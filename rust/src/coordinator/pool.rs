@@ -26,7 +26,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::linalg::{gemm_single_thread, Matrix};
+use crate::linalg::{gemm_packed, gemm_single_thread, Matrix};
 use crate::runtime::Runtime;
 
 /// How workers execute subtask products.
@@ -139,8 +139,9 @@ fn run_worker(
             // Forced single-thread: the pool already runs one OS thread per
             // worker slot, and nested gemm fan-out would oversubscribe the
             // machine and distort the straggler-emulation sleep (which
-            // scales off measured elapsed time).
-            Backend::Native => gemm_single_thread(&block, b),
+            // scales off measured elapsed time). gemm_packed rides the
+            // SIMD kernel dispatch, bit-identical to the scalar oracle.
+            Backend::Native => gemm_packed(&block, b),
             Backend::Pjrt { artifact, .. } => {
                 let rt = runtime.as_mut().expect("runtime opened");
                 rt.matmul(artifact, &block, b)

@@ -1,0 +1,96 @@
+//! Dispatched row kernel `dst[i] += alpha * src[i]`.
+//!
+//! One vector multiply plus one vector add per lane — deliberately NOT an
+//! FMA: the scalar loop rounds after the multiply and again after the add,
+//! and fusing would change results in the last ulp. Keeping mul+add makes
+//! the AVX2 path bit-identical to the scalar one (each lane performs
+//! exactly the scalar's operation sequence on exactly one element), which
+//! is what lets `RealMdsCode` encode/decode and the fused combine stay
+//! byte-stable across `HCEC_FORCE_SCALAR` settings.
+
+use crate::codes::simd;
+
+/// `dst[i] += alpha * src[i]`, routed through the active kernel tier.
+/// Panics if the slices have different lengths.
+pub fn axpy_slice(dst: &mut [f32], alpha: f32, src: &[f32]) {
+    assert_eq!(dst.len(), src.len(), "axpy length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd::active_tier() == simd::Tier::Avx2 {
+            return unsafe { axpy_avx2(dst, alpha, src) };
+        }
+    }
+    axpy_scalar(dst, alpha, src)
+}
+
+/// Scalar oracle (the original `Matrix::axpy` loop, kept verbatim).
+pub fn axpy_scalar(dst: &mut [f32], alpha: f32, src: &[f32]) {
+    for (a, b) in dst.iter_mut().zip(src.iter()) {
+        *a += alpha * b;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(dst: &mut [f32], alpha: f32, src: &[f32]) {
+    use core::arch::x86_64::*;
+    let va = _mm256_set1_ps(alpha);
+    let mut d_chunks = dst.chunks_exact_mut(8);
+    let mut s_chunks = src.chunks_exact(8);
+    for (d, s) in (&mut d_chunks).zip(&mut s_chunks) {
+        let dv = _mm256_loadu_ps(d.as_ptr());
+        let sv = _mm256_loadu_ps(s.as_ptr());
+        // mul then add, not FMA: see module doc.
+        _mm256_storeu_ps(d.as_mut_ptr(), _mm256_add_ps(dv, _mm256_mul_ps(va, sv)));
+    }
+    axpy_scalar(d_chunks.into_remainder(), alpha, s_chunks.remainder());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    #[test]
+    fn prop_axpy_dispatch_is_bit_identical_to_scalar() {
+        prop::check(80, |g| {
+            // Lengths cross the 8-lane chunks plus ragged tails.
+            let len = g.usize_in(0, 100);
+            let alpha = match g.u64() % 5 {
+                0 => 0.0,
+                1 => -0.0,
+                2 => 1.0,
+                _ => g.f64_in(-3.0, 3.0) as f32,
+            };
+            let src: Vec<f32> = (0..len)
+                .map(|i| {
+                    if i % 9 == 4 {
+                        0.0
+                    } else {
+                        g.f64_in(-2.0, 2.0) as f32
+                    }
+                })
+                .collect();
+            let dst0: Vec<f32> = (0..len).map(|_| g.f64_in(-2.0, 2.0) as f32).collect();
+            let mut want = dst0.clone();
+            axpy_scalar(&mut want, alpha, &src);
+            let mut got = dst0;
+            axpy_slice(&mut got, alpha, &src);
+            // Bitwise comparison: -0.0 vs 0.0 must match too.
+            let same = want
+                .iter()
+                .zip(&got)
+                .all(|(w, g)| w.to_bits() == g.to_bits());
+            if !same {
+                return Err(format!("axpy diverged (len={len}, alpha={alpha})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "axpy length mismatch")]
+    fn axpy_rejects_mismatched_lengths() {
+        axpy_slice(&mut [0.0], 1.0, &[1.0, 2.0]);
+    }
+}

@@ -7,8 +7,11 @@
 //! the k source rows (contiguous, read-once) stream through. For the
 //! decode shapes that dominate the figures (k = 10..800, wide rows) this is
 //! the combine layout the L3 target ("decode dominated by the combine, not
-//! the K x K solve") is measured against.
+//! the K x K solve") is measured against. The per-row accumulation is the
+//! dispatched [`axpy_slice`] kernel — AVX2 mul+add when available, the
+//! scalar loop otherwise, bit-identical either way.
 
+use super::axpy::axpy_slice;
 use super::Matrix;
 
 /// `Σ_l coeffs[l] · blocks[l]`, all blocks the same shape.
@@ -30,9 +33,7 @@ pub fn combine(coeffs: &[f32], blocks: &[&Matrix]) -> Matrix {
             if coef == 0.0 {
                 continue;
             }
-            for (o, &s) in orow.iter_mut().zip(block.row(i)) {
-                *o += coef * s;
-            }
+            axpy_slice(orow, coef, block.row(i));
         }
     }
     out
@@ -60,10 +61,7 @@ pub fn combine_into_rows(
             if coef == 0.0 {
                 continue;
             }
-            let src = &block[i * cols..(i + 1) * cols];
-            for (o, &s) in orow.iter_mut().zip(src) {
-                *o += coef * s;
-            }
+            axpy_slice(orow, coef, &block[i * cols..(i + 1) * cols]);
         }
     }
 }

@@ -5,6 +5,23 @@
 //! the contraction index in ascending order regardless of blocking or thread
 //! count, so results are bit-identical between the single-threaded and
 //! parallel paths (and match the pre-parallel kernel exactly).
+//!
+//! Two micro-kernel generations coexist behind `panel_dispatch`:
+//!
+//! * [`panel_kernel`] — the original 4-row scalar quad kernel, kept
+//!   verbatim as the bit-identity oracle ([`gemm_single_thread`] always
+//!   runs it) and forced everywhere by `HCEC_FORCE_SCALAR=1`.
+//! * the packed kernels — A's quads are repacked contiguous per KC block
+//!   and a 4 x 16 register tile walks the output (AVX2 intrinsics when
+//!   detected, a plain-Rust tile otherwise). One multiply + one add per
+//!   element, never FMA, with the oracle's exact zero-skip granularity and
+//!   `l`-ascending order, so every element sees the identical f32
+//!   operation sequence and results stay bitwise equal to the oracle.
+//!
+//! B is deliberately NOT packed: its rows are already contiguous in the
+//! row-major layout, and a KC x n block (n is a few hundred on every shape
+//! this stack runs) stays L2-resident, so a B-copy would cost a pass over
+//! the data for no locality gain.
 
 use super::Matrix;
 
@@ -126,9 +143,332 @@ fn panel_kernel(a: &[f32], i0: usize, rows: usize, k: usize, b: &Matrix, out: &m
     }
 }
 
-/// Cache-blocked product, forced onto the calling thread (no fan-out).
-/// Used by callers that are already running inside a thread pool, and by
-/// benches to isolate the micro-kernel from the parallel speedup.
+/// Column width of the packed micro-kernel's register tile: 16 f32 = two
+/// 256-bit vectors, which with four rows gives eight in-flight
+/// accumulators on AVX2 (half the YMM file, leaving headroom for B loads).
+const NR: usize = 16;
+
+/// Pack one KC block of A's 4-row quads quad-major: for quad `q` and
+/// contraction offset `dl`, the four rows' column-`l0 + dl` values land
+/// contiguously at `apack[(q * klen + dl) * 4 ..][..4]`, so the micro
+/// kernel streams A with unit stride whatever the original row stride `k`.
+fn pack_a_quads(
+    a: &[f32],
+    i0: usize,
+    quads: usize,
+    k: usize,
+    l0: usize,
+    l1: usize,
+    apack: &mut Vec<f32>,
+) {
+    let klen = l1 - l0;
+    apack.clear();
+    apack.resize(quads * klen * 4, 0.0);
+    for q in 0..quads {
+        let base = (i0 + 4 * q) * k;
+        let dst = &mut apack[q * klen * 4..(q + 1) * klen * 4];
+        for (dl, l) in (l0..l1).enumerate() {
+            dst[dl * 4] = a[base + l];
+            dst[dl * 4 + 1] = a[base + k + l];
+            dst[dl * 4 + 2] = a[base + 2 * k + l];
+            dst[dl * 4 + 3] = a[base + 3 * k + l];
+        }
+    }
+}
+
+/// Split quad `q`'s four consecutive output rows into disjoint slices.
+fn quad_rows(
+    out: &mut [f32],
+    q: usize,
+    n: usize,
+) -> (&mut [f32], &mut [f32], &mut [f32], &mut [f32]) {
+    let (_, rest) = out.split_at_mut(4 * q * n);
+    let (r0, rest) = rest.split_at_mut(n);
+    let (r1, rest) = rest.split_at_mut(n);
+    let (r2, rest) = rest.split_at_mut(n);
+    let (r3, _) = rest.split_at_mut(n);
+    (r0, r1, r2, r3)
+}
+
+/// Remainder rows (`rows % 4`) of one KC block — the verbatim single-row
+/// loop from [`panel_kernel`], shared by both packed panels.
+fn rows_remainder(
+    a: &[f32],
+    i0: usize,
+    rows: usize,
+    first: usize,
+    k: usize,
+    l0: usize,
+    l1: usize,
+    b: &Matrix,
+    out: &mut [f32],
+) {
+    let n = b.cols();
+    for i in first..rows {
+        let arow = &a[(i0 + i) * k..(i0 + i) * k + k];
+        let row = &mut out[i * n..(i + 1) * n];
+        for l in l0..l1 {
+            let av = arow[l];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = b.row(l);
+            for (o, &bv) in row.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Portable packed panel: the oracle's traversal with A re-laid quad-major
+/// per KC block and the output walked in [`NR`]-column tiles held in local
+/// accumulators. Each element still accumulates over `l` ascending with
+/// one multiply and one add, behind the oracle's per-quad zero test, so
+/// the packing changes where operands come FROM, never what is done to
+/// them — results are bit-identical.
+fn panel_kernel_packed_portable(
+    a: &[f32],
+    i0: usize,
+    rows: usize,
+    k: usize,
+    b: &Matrix,
+    out: &mut [f32],
+) {
+    let n = b.cols();
+    debug_assert_eq!(out.len(), rows * n);
+    let quads = rows / 4;
+    let mut apack: Vec<f32> = Vec::new();
+    let mut l0 = 0;
+    while l0 < k {
+        let l1 = (l0 + KC).min(k);
+        let klen = l1 - l0;
+        pack_a_quads(a, i0, quads, k, l0, l1, &mut apack);
+        for q in 0..quads {
+            let aq = &apack[q * klen * 4..(q + 1) * klen * 4];
+            let (r0, r1, r2, r3) = quad_rows(out, q, n);
+            quad_tile_portable(aq, klen, b, l0, r0, r1, r2, r3);
+        }
+        rows_remainder(a, i0, rows, quads * 4, k, l0, l1, b, out);
+        l0 = l1;
+    }
+}
+
+/// One quad x KC block, plain Rust: `j` walks 16-column tiles whose 64
+/// accumulators live in locals across the whole block (LLVM maps them to
+/// vector registers); tail columns run the oracle's element order.
+#[allow(clippy::too_many_arguments)]
+fn quad_tile_portable(
+    aq: &[f32],
+    klen: usize,
+    b: &Matrix,
+    l0: usize,
+    r0: &mut [f32],
+    r1: &mut [f32],
+    r2: &mut [f32],
+    r3: &mut [f32],
+) {
+    let n = r0.len();
+    let mut j = 0;
+    while j + NR <= n {
+        let mut acc0 = [0.0f32; NR];
+        let mut acc1 = [0.0f32; NR];
+        let mut acc2 = [0.0f32; NR];
+        let mut acc3 = [0.0f32; NR];
+        acc0.copy_from_slice(&r0[j..j + NR]);
+        acc1.copy_from_slice(&r1[j..j + NR]);
+        acc2.copy_from_slice(&r2[j..j + NR]);
+        acc3.copy_from_slice(&r3[j..j + NR]);
+        for dl in 0..klen {
+            let (a0, a1, a2, a3) =
+                (aq[dl * 4], aq[dl * 4 + 1], aq[dl * 4 + 2], aq[dl * 4 + 3]);
+            if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                continue;
+            }
+            let brow = &b.row(l0 + dl)[j..j + NR];
+            for (t, &bv) in brow.iter().enumerate() {
+                acc0[t] += a0 * bv;
+                acc1[t] += a1 * bv;
+                acc2[t] += a2 * bv;
+                acc3[t] += a3 * bv;
+            }
+        }
+        r0[j..j + NR].copy_from_slice(&acc0);
+        r1[j..j + NR].copy_from_slice(&acc1);
+        r2[j..j + NR].copy_from_slice(&acc2);
+        r3[j..j + NR].copy_from_slice(&acc3);
+        j += NR;
+    }
+    if j < n {
+        for dl in 0..klen {
+            let (a0, a1, a2, a3) =
+                (aq[dl * 4], aq[dl * 4 + 1], aq[dl * 4 + 2], aq[dl * 4 + 3]);
+            if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                continue;
+            }
+            let brow = &b.row(l0 + dl)[j..];
+            for (t, &bv) in brow.iter().enumerate() {
+                r0[j + t] += a0 * bv;
+                r1[j + t] += a1 * bv;
+                r2[j + t] += a2 * bv;
+                r3[j + t] += a3 * bv;
+            }
+        }
+    }
+}
+
+/// AVX2 packed panel — [`panel_kernel_packed_portable`]'s skeleton with
+/// the quad tile in intrinsics.
+#[cfg(target_arch = "x86_64")]
+fn panel_kernel_packed_avx2(
+    a: &[f32],
+    i0: usize,
+    rows: usize,
+    k: usize,
+    b: &Matrix,
+    out: &mut [f32],
+) {
+    let n = b.cols();
+    debug_assert_eq!(out.len(), rows * n);
+    let quads = rows / 4;
+    let mut apack: Vec<f32> = Vec::new();
+    let mut l0 = 0;
+    while l0 < k {
+        let l1 = (l0 + KC).min(k);
+        let klen = l1 - l0;
+        pack_a_quads(a, i0, quads, k, l0, l1, &mut apack);
+        for q in 0..quads {
+            let aq = &apack[q * klen * 4..(q + 1) * klen * 4];
+            let (r0, r1, r2, r3) = quad_rows(out, q, n);
+            // Safety: panel_dispatch (and the tests) only route here when
+            // AVX2 is detected at runtime.
+            unsafe { quad_tile_avx2(aq, klen, b, l0, r0, r1, r2, r3) };
+        }
+        rows_remainder(a, i0, rows, quads * 4, k, l0, l1, b, out);
+        l0 = l1;
+    }
+}
+
+/// AVX2 register-tile quad: 4 rows x 16 columns = eight YMM accumulators
+/// resident across the KC block, one B load pair shared by four rows. One
+/// `vmulps` + one `vaddps` per term — NOT `vfmadd231ps`: the oracle rounds
+/// after the multiply and again after the add, and FMA's single rounding
+/// would break bit-identity with the scalar path.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+unsafe fn quad_tile_avx2(
+    aq: &[f32],
+    klen: usize,
+    b: &Matrix,
+    l0: usize,
+    r0: &mut [f32],
+    r1: &mut [f32],
+    r2: &mut [f32],
+    r3: &mut [f32],
+) {
+    use core::arch::x86_64::*;
+    let n = r0.len();
+    let bdata = b.as_slice();
+    let bstride = b.cols();
+    let mut j = 0;
+    while j + NR <= n {
+        let p0 = r0.as_mut_ptr().add(j);
+        let p1 = r1.as_mut_ptr().add(j);
+        let p2 = r2.as_mut_ptr().add(j);
+        let p3 = r3.as_mut_ptr().add(j);
+        let mut c00 = _mm256_loadu_ps(p0);
+        let mut c01 = _mm256_loadu_ps(p0.add(8));
+        let mut c10 = _mm256_loadu_ps(p1);
+        let mut c11 = _mm256_loadu_ps(p1.add(8));
+        let mut c20 = _mm256_loadu_ps(p2);
+        let mut c21 = _mm256_loadu_ps(p2.add(8));
+        let mut c30 = _mm256_loadu_ps(p3);
+        let mut c31 = _mm256_loadu_ps(p3.add(8));
+        for dl in 0..klen {
+            let (a0, a1, a2, a3) =
+                (aq[dl * 4], aq[dl * 4 + 1], aq[dl * 4 + 2], aq[dl * 4 + 3]);
+            if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                continue;
+            }
+            let bp = bdata.as_ptr().add((l0 + dl) * bstride + j);
+            let b0 = _mm256_loadu_ps(bp);
+            let b1 = _mm256_loadu_ps(bp.add(8));
+            let v0 = _mm256_set1_ps(a0);
+            c00 = _mm256_add_ps(c00, _mm256_mul_ps(v0, b0));
+            c01 = _mm256_add_ps(c01, _mm256_mul_ps(v0, b1));
+            let v1 = _mm256_set1_ps(a1);
+            c10 = _mm256_add_ps(c10, _mm256_mul_ps(v1, b0));
+            c11 = _mm256_add_ps(c11, _mm256_mul_ps(v1, b1));
+            let v2 = _mm256_set1_ps(a2);
+            c20 = _mm256_add_ps(c20, _mm256_mul_ps(v2, b0));
+            c21 = _mm256_add_ps(c21, _mm256_mul_ps(v2, b1));
+            let v3 = _mm256_set1_ps(a3);
+            c30 = _mm256_add_ps(c30, _mm256_mul_ps(v3, b0));
+            c31 = _mm256_add_ps(c31, _mm256_mul_ps(v3, b1));
+        }
+        _mm256_storeu_ps(p0, c00);
+        _mm256_storeu_ps(p0.add(8), c01);
+        _mm256_storeu_ps(p1, c10);
+        _mm256_storeu_ps(p1.add(8), c11);
+        _mm256_storeu_ps(p2, c20);
+        _mm256_storeu_ps(p2.add(8), c21);
+        _mm256_storeu_ps(p3, c30);
+        _mm256_storeu_ps(p3.add(8), c31);
+        j += NR;
+    }
+    if j < n {
+        for dl in 0..klen {
+            let (a0, a1, a2, a3) =
+                (aq[dl * 4], aq[dl * 4 + 1], aq[dl * 4 + 2], aq[dl * 4 + 3]);
+            if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                continue;
+            }
+            let brow = &b.row(l0 + dl)[j..];
+            for (t, &bv) in brow.iter().enumerate() {
+                r0[j + t] += a0 * bv;
+                r1[j + t] += a1 * bv;
+                r2[j + t] += a2 * bv;
+                r3[j + t] += a3 * bv;
+            }
+        }
+    }
+}
+
+/// Route one panel through the best packed kernel: the AVX2 register tile
+/// when detected, the portable packed tile otherwise — and the verbatim
+/// oracle when `HCEC_FORCE_SCALAR=1`, which must force the original code
+/// path end-to-end, not merely narrower vectors.
+fn panel_dispatch(a: &[f32], i0: usize, rows: usize, k: usize, b: &Matrix, out: &mut [f32]) {
+    use crate::codes::simd;
+    if simd::force_scalar() {
+        return panel_kernel(a, i0, rows, k, b, out);
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd::active_tier() == simd::Tier::Avx2 {
+            return panel_kernel_packed_avx2(a, i0, rows, k, b, out);
+        }
+    }
+    panel_kernel_packed_portable(a, i0, rows, k, b, out)
+}
+
+/// Cache-blocked packed product on the calling thread (no fan-out) —
+/// [`gemm_single_thread`] with the dispatched micro-kernel. Bit-identical
+/// to the oracle; used by the coordinator/cluster native backends whose
+/// subtask products run inside already-parallel workers.
+pub fn gemm_packed(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "contraction mismatch");
+    let (m, n) = (a.rows(), b.cols());
+    let k = a.cols();
+    let mut out = Matrix::zeros(m, n);
+    panel_dispatch(a.as_slice(), 0, m, k, b, out.as_mut_slice());
+    out
+}
+
+/// Cache-blocked product, forced onto the calling thread (no fan-out),
+/// always on the verbatim scalar quad kernel — the bit-identity oracle the
+/// packed and parallel paths are tested against, and the scalar arm of the
+/// kernel bench pairs.
 pub fn gemm_single_thread(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.rows(), "contraction mismatch");
     let (m, n) = (a.rows(), b.cols());
@@ -141,14 +481,15 @@ pub fn gemm_single_thread(a: &Matrix, b: &Matrix) -> Matrix {
 /// Cache-blocked i-k-j product with f32 accumulation, parallelised across
 /// row bands with `std::thread::scope` when the product is large enough
 /// (small elastic subtasks stay on the calling thread — see
-/// `PAR_MIN_OPS`). Bit-identical to `gemm_single_thread`.
+/// `PAR_MIN_OPS`). Each band runs the dispatched packed kernel; results
+/// stay bit-identical to `gemm_single_thread`.
 pub fn gemm_blocked(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.rows(), "contraction mismatch");
     let (m, n) = (a.rows(), b.cols());
     let k = a.cols();
     let threads = plan_threads(m, k, n);
     if threads <= 1 {
-        return gemm_single_thread(a, b);
+        return gemm_packed(a, b);
     }
     let mut out = Matrix::zeros(m, n);
     let band = (m + threads - 1) / threads;
@@ -160,7 +501,7 @@ pub fn gemm_blocked(a: &Matrix, b: &Matrix) -> Matrix {
             let i0 = idx * band;
             scope.spawn(move || {
                 let _worker = crate::threads::enter_pool();
-                panel_kernel(a_data, i0, rows, k, b, chunk)
+                panel_dispatch(a_data, i0, rows, k, b, chunk)
             });
         }
     });
@@ -231,6 +572,86 @@ mod tests {
         assert!(x.max_abs_diff(&y) < 1e-6);
         for i in [0usize, 1, 2, 3, 4, 6, 7] {
             assert!(y.row(i).iter().all(|&v| v == 0.0), "row {i} must stay zero");
+        }
+    }
+
+    #[test]
+    fn packed_kernels_are_bit_identical_to_oracle() {
+        // Shapes cross quad/remainder rows, KC boundaries (k > 256), and
+        // NR-column tiles plus ragged column tails.
+        let mut rng = default_rng(16);
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (3, 19, 5),
+            (4, 7, 16),
+            (5, 300, 17),
+            (8, 257, 33),
+            (9, 64, 48),
+            (12, 300, 96),
+            (7, 31, 15),
+        ] {
+            let a = Matrix::random(m, k, &mut rng);
+            let b = Matrix::random(k, n, &mut rng);
+            let oracle = gemm_single_thread(&a, &b);
+            let mut portable = Matrix::zeros(m, n);
+            panel_kernel_packed_portable(
+                a.as_slice(),
+                0,
+                m,
+                k,
+                &b,
+                portable.as_mut_slice(),
+            );
+            assert_eq!(
+                oracle.max_abs_diff(&portable),
+                0.0,
+                "portable packed diverged at ({m},{k},{n})"
+            );
+            #[cfg(target_arch = "x86_64")]
+            if std::arch::is_x86_feature_detected!("avx2") {
+                let mut vec_out = Matrix::zeros(m, n);
+                panel_kernel_packed_avx2(
+                    a.as_slice(),
+                    0,
+                    m,
+                    k,
+                    &b,
+                    vec_out.as_mut_slice(),
+                );
+                assert_eq!(
+                    oracle.max_abs_diff(&vec_out),
+                    0.0,
+                    "avx2 packed diverged at ({m},{k},{n})"
+                );
+            }
+            let dispatched = gemm_packed(&a, &b);
+            assert_eq!(
+                oracle.max_abs_diff(&dispatched),
+                0.0,
+                "gemm_packed dispatch diverged at ({m},{k},{n})"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_skips_zero_quads_like_oracle() {
+        // A fully zero quad (rows 4..8) and a zero remainder row (10) hit
+        // the lifted skip in the packed kernels: those outputs stay exactly
+        // zero and everything else matches the oracle bitwise.
+        let mut rng = default_rng(18);
+        let mut a = Matrix::random(11, 40, &mut rng);
+        for j in 0..40 {
+            for i in 4..8 {
+                a.set(i, j, 0.0);
+            }
+            a.set(10, j, 0.0);
+        }
+        let b = Matrix::random(40, 21, &mut rng);
+        let oracle = gemm_single_thread(&a, &b);
+        let packed = gemm_packed(&a, &b);
+        assert_eq!(oracle.max_abs_diff(&packed), 0.0);
+        for i in [4usize, 5, 6, 7, 10] {
+            assert!(packed.row(i).iter().all(|&v| v == 0.0), "row {i} must stay zero");
         }
     }
 

@@ -98,12 +98,12 @@ impl Matrix {
         Matrix::from_fn(self.cols, self.rows, |i, j| self.get(j, i))
     }
 
-    /// `self += alpha * other` (same shape).
+    /// `self += alpha * other` (same shape). Rides the dispatched axpy
+    /// kernel (`linalg::axpy_slice`) — this is `RealMdsCode`'s encode
+    /// accumulator, so MDS encode vectorises with the rest of the stack.
     pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
-            *a += alpha * b;
-        }
+        super::axpy::axpy_slice(&mut self.data, alpha, &other.data);
     }
 
     pub fn scale(&mut self, alpha: f32) {

@@ -6,14 +6,16 @@
 //! `f32` payloads (matching the PJRT artifacts) with `f64` accumulation
 //! where precision matters (LU solve of Vandermonde systems).
 
+mod axpy;
 mod combine;
 mod gemm;
 mod lu;
 mod matrix;
 mod partition;
 
+pub use axpy::{axpy_scalar, axpy_slice};
 pub use combine::{combine, combine_into_rows};
-pub use gemm::{gemm, gemm_blocked, gemm_naive, gemm_single_thread};
+pub use gemm::{gemm, gemm_blocked, gemm_naive, gemm_packed, gemm_single_thread};
 pub use lu::{invert, solve, LuError, LuFactors};
 pub use matrix::Matrix;
 pub use partition::{pad_rows_to_multiple, split_rows, stack_rows};

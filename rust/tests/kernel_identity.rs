@@ -1,0 +1,203 @@
+//! Cross-arm kernel identity: the SIMD dispatch layer (codes::simd,
+//! linalg::axpy, packed gemm) must be bit-identical to the scalar oracles
+//! through the public API. CI runs the whole suite twice — once under the
+//! default dispatch and once with HCEC_FORCE_SCALAR=1 — so every assertion
+//! here holds on both arms; the tier-explicit checks additionally cover
+//! every tier the host supports regardless of which arm is running.
+
+use hcec::codes::simd::{
+    active_tier, addmul_slice_tier, detected_tier, dot_tier, force_scalar,
+    mul_slice_tier, poly_eval_tile_tier, supported_tiers, Tier,
+};
+use hcec::codes::{
+    addmul_slice_scalar, discrete_log, dot_scalar, mul_slice_scalar,
+    poly_eval_tile_scalar, Gf16, RsCode,
+};
+use hcec::linalg::{
+    axpy_scalar, axpy_slice, combine, gemm, gemm_packed, gemm_single_thread, Matrix,
+};
+use hcec::rng::{default_rng, Rng};
+
+fn gf_buf(len: usize, rng: &mut impl Rng) -> Vec<Gf16> {
+    (0..len).map(|_| Gf16(rng.next_u64() as u16)).collect()
+}
+
+/// End-to-end RS round trip with a stream long enough (200 symbols) to
+/// cross every dispatch threshold (MIN_SIMD_LEN = 64, the gather minima),
+/// so encode_shares, the cached solve, and the bulk decode combine all run
+/// the active kernel arm.
+#[test]
+fn rs_round_trip_long_stream_through_dispatch() {
+    let (n, k) = (30, 12);
+    let code = RsCode::new(n, k).unwrap();
+    let mut rng = default_rng(42);
+    let stream = 200usize;
+    let data: Vec<Vec<Gf16>> = (0..stream).map(|_| gf_buf(k, &mut rng)).collect();
+
+    let ids: Vec<usize> = vec![1, 3, 4, 7, 8, 11, 13, 17, 19, 22, 25, 29];
+    let shares = code.encode_shares(&data, &ids);
+    // Tiled multi-share encode must equal the per-share path exactly.
+    for (si, &id) in ids.iter().enumerate() {
+        assert_eq!(shares[si], code.encode_share(&data, id), "share {id}");
+    }
+
+    let completed: Vec<(usize, &[Gf16])> =
+        ids.iter().zip(&shares).map(|(&i, s)| (i, &s[..])).collect();
+    let decoded = code.decode(&completed).unwrap();
+    for (pos, row) in data.iter().enumerate() {
+        for (j, &want) in row.iter().enumerate() {
+            assert_eq!(decoded[j][pos], want, "coefficient {j} at position {pos}");
+        }
+    }
+}
+
+/// Every tier the host reports (always at least Scalar) agrees bit-for-bit
+/// with the scalar oracles on ragged lengths, including heads/tails that
+/// do not fill a vector register and the c = 0 / c = 1 short-circuits.
+#[test]
+fn gf_kernels_bit_identical_across_all_supported_tiers() {
+    let mut rng = default_rng(7);
+    let lens = [0usize, 1, 7, 15, 16, 17, 63, 64, 65, 128, 200, 257];
+    let consts = [Gf16::ZERO, Gf16::ONE, Gf16(0x1234), Gf16(rng.next_u64() as u16)];
+    for tier in supported_tiers() {
+        for &len in &lens {
+            let xs = gf_buf(len, &mut rng);
+            for &c in &consts {
+                let mut got = xs.clone();
+                mul_slice_tier(tier, c, &mut got);
+                let mut want = xs.clone();
+                mul_slice_scalar(c, &mut want);
+                assert_eq!(got, want, "mul_slice tier {} c {:#x} len {len}", tier.name(), c.0);
+
+                let acc0 = gf_buf(len, &mut rng);
+                let mut got = acc0.clone();
+                addmul_slice_tier(tier, &mut got, c, &xs);
+                let mut want = acc0;
+                addmul_slice_scalar(&mut want, c, &xs);
+                assert_eq!(got, want, "addmul_slice tier {} c {:#x} len {len}", tier.name(), c.0);
+            }
+            if len > 0 {
+                let b = gf_buf(len, &mut rng);
+                assert_eq!(
+                    dot_tier(tier, &xs, &b),
+                    dot_scalar(&xs, &b),
+                    "dot tier {} len {len}",
+                    tier.name()
+                );
+            }
+        }
+    }
+}
+
+/// The tiled log-domain evaluation kernel across every supported tier, for
+/// tile widths around the 8-lane gather group and a coefficient vector
+/// containing zeros (the lanes the gather path must mask out).
+#[test]
+fn poly_eval_tile_bit_identical_across_all_supported_tiers() {
+    let mut rng = default_rng(19);
+    let k = 40usize;
+    let mut coeffs = gf_buf(k, &mut rng);
+    coeffs[0] = Gf16::ZERO;
+    coeffs[13] = Gf16::ZERO;
+    for tier in supported_tiers() {
+        for tile in [1usize, 7, 8, 9, 16, 32, 37] {
+            let mut lpow = vec![0u16; k * tile];
+            for t in 0..tile {
+                let lx = discrete_log(Gf16(t as u16 + 2)) as u32;
+                let mut cur = 0u32;
+                for l in 0..k {
+                    lpow[l * tile + t] = cur as u16;
+                    cur += lx;
+                    if cur >= 65535 {
+                        cur -= 65535;
+                    }
+                }
+            }
+            let seed = gf_buf(tile, &mut rng);
+            let mut got = seed.clone();
+            poly_eval_tile_tier(tier, &coeffs, &lpow, tile, &mut got);
+            let mut want = seed;
+            poly_eval_tile_scalar(&coeffs, &lpow, tile, &mut want);
+            assert_eq!(got, want, "poly_eval_tile tier {} tile {tile}", tier.name());
+        }
+    }
+}
+
+/// The packed gemm (what cluster/pool workers run) and the threaded
+/// dispatcher must both be bitwise equal to the verbatim single-thread
+/// oracle — f32 equality is exact, not approximate, because the kernels
+/// use mul-then-add in the oracle's accumulation order.
+#[test]
+fn gemm_dispatch_is_bitwise_equal_to_oracle() {
+    let mut rng = default_rng(23);
+    for (m, k, n) in [(1usize, 1usize, 1usize), (7, 31, 15), (70, 523, 47)] {
+        let a = Matrix::random(m, k, &mut rng);
+        let b = Matrix::random(k, n, &mut rng);
+        let want = gemm_single_thread(&a, &b);
+        for (name, got) in [("packed", gemm_packed(&a, &b)), ("blocked", gemm(&a, &b))] {
+            assert_eq!(got.rows(), want.rows());
+            assert_eq!(got.cols(), want.cols());
+            for (i, (&g, &w)) in got.as_slice().iter().zip(want.as_slice()).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "{name} {m}x{k}x{n} diverges from oracle at flat index {i}"
+                );
+            }
+        }
+    }
+}
+
+/// The f32 axpy kernel (decode combine + real-MDS encode accumulation)
+/// stays bitwise equal to its scalar loop, including a zero coefficient.
+#[test]
+fn axpy_and_combine_bitwise_equal_to_scalar() {
+    let mut rng = default_rng(31);
+    let len = 100usize;
+    for alpha in [0.0f32, -0.0, 1.0, -2.5, 0.37] {
+        let x: Vec<f32> = (0..len).map(|_| rng.next_u64() as i32 as f32 * 1e-6).collect();
+        let seed: Vec<f32> = (0..len).map(|_| rng.next_u64() as i32 as f32 * 1e-6).collect();
+        let mut got = seed.clone();
+        axpy_slice(&mut got, alpha, &x);
+        let mut want = seed;
+        axpy_scalar(&mut want, alpha, &x);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits(), "axpy alpha {alpha}");
+        }
+    }
+
+    let blocks: Vec<Matrix> = (0..3).map(|_| Matrix::random(17, 33, &mut rng)).collect();
+    let refs: Vec<&Matrix> = blocks.iter().collect();
+    let coeffs = [0.5f32, 0.0, -1.25];
+    let got = combine(&coeffs, &refs);
+    let mut want = Matrix::zeros(17, 33);
+    for (&c, b) in coeffs.iter().zip(&blocks) {
+        if c != 0.0 {
+            axpy_scalar(want.as_mut_slice(), c, b.as_slice());
+        }
+    }
+    for (g, w) in got.as_slice().iter().zip(want.as_slice()) {
+        assert_eq!(g.to_bits(), w.to_bits(), "combine");
+    }
+}
+
+/// The env knob and tier report stay coherent on whichever CI arm is
+/// running: HCEC_FORCE_SCALAR pins the active tier to Scalar end-to-end,
+/// and the active/detected tiers are always among the supported set.
+#[test]
+fn dispatch_tier_report_is_coherent_with_env() {
+    let tiers = supported_tiers();
+    assert_eq!(*tiers.last().unwrap(), Tier::Scalar, "Scalar must always be supported");
+    assert!(tiers.contains(&detected_tier()));
+    assert!(tiers.contains(&active_tier()));
+    let forced = match std::env::var("HCEC_FORCE_SCALAR") {
+        Ok(v) => !matches!(v.trim(), "" | "0" | "false" | "off"),
+        Err(_) => false,
+    };
+    assert_eq!(force_scalar(), forced, "force_scalar must mirror the env knob");
+    if forced {
+        assert_eq!(active_tier(), Tier::Scalar);
+    } else {
+        assert_eq!(active_tier(), detected_tier());
+    }
+}
