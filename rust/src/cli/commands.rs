@@ -163,6 +163,15 @@ fn run_scenario_file(path: &str, args: &Args) -> Result<(), String> {
     );
     let out = scenario.run()?;
     emit(&out.table(), &scenario.name, args)?;
+    // One greppable robustness line for chaos-injected cluster runs (the
+    // chaos smoke job asserts on it).
+    if scenario.chaos.is_some() {
+        let (crashes, retries, dups, corrupt) = out.robustness_totals();
+        println!(
+            "robustness: crashes_absorbed={crashes} retries={retries} \
+             duplicates_suppressed={dups} corruptions_dropped={corrupt}"
+        );
+    }
     // Elastic engines record per-trial failures instead of aborting, but a
     // scheme with ZERO surviving trials means the scenario tested nothing —
     // exit nonzero so the CI smoke cannot stay green on a wholesale

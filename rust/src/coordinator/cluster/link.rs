@@ -1,0 +1,644 @@
+//! Transport abstraction + deterministic chaos injection for the cluster
+//! protocol.
+//!
+//! [`Link`] is the one-method trait both channel directions cross: the
+//! reactor sends `Command`s through a per-worker link, workers send
+//! `Event`s through their own handle on the shared link. [`MpscLink`] is
+//! the default (today's in-process transport, zero overhead). [`ChaosLink`]
+//! wraps the same sender but round-trips every message through the wire
+//! codec and injects seeded faults per direction:
+//!
+//! | fault     | knob                | effect                                     |
+//! |-----------|---------------------|--------------------------------------------|
+//! | drop      | `drop` rate         | message consumed, never delivered          |
+//! | corrupt   | `corrupt` rate      | one bit of the frame flipped; the decode's CRC rejects it → detected-and-dropped |
+//! | duplicate | `duplicate` rate    | message delivered twice                    |
+//! | delay     | `delay_max` seconds | delivery deferred by uniform `[0, delay_max)` via a FIFO forwarder |
+//! | partition | `[chaos]` window    | all traffic for the named slots dropped inside `[from, to)` |
+//!
+//! Fault decisions come from an independent xoshiro stream per
+//! `(seed, direction, slot)` — [`rng::trial_rng`]-derived, with a fixed
+//! draw order per message — so a given seed produces the same fault
+//! schedule on every run regardless of thread interleaving (each link is
+//! only ever driven by its owning thread). `send` returns `false` only
+//! when the peer is truly gone; an injected fault that consumes the
+//! message still reports `true`, exactly like a lossy network.
+//!
+//! Exit-with-error notices are exempt from drop/corrupt (never from
+//! delay, duplication, or partition): they model the peer observing a
+//! connection reset, which a lossy link cannot silently eat — see
+//! [`Wire::exempt_from_loss`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::rng::{fold_in, trial_rng, Rng, Xoshiro256pp};
+
+use super::protocol::{Command, Event};
+use super::wire::Wire;
+
+/// Stream tags separating the two directions of one chaos seed.
+pub const DIR_CMD: u64 = 0xC3A0_5C3D;
+pub const DIR_EVT: u64 = 0xE7E7_0B5E;
+
+/// One direction of the worker protocol. `send` returns `false` only when
+/// the receiving side has disconnected (the message can never arrive);
+/// injected losses still return `true`.
+pub trait Link<T>: Send {
+    fn send(&self, msg: T) -> bool;
+}
+
+/// The default transport: a bare in-process mpsc sender.
+pub struct MpscLink<T>(pub Sender<T>);
+
+impl<T: Send> Link<T> for MpscLink<T> {
+    fn send(&self, msg: T) -> bool {
+        self.0.send(msg).is_ok()
+    }
+}
+
+/// Per-direction fault rates. All probabilities in `[0, 1]`; `delay_max`
+/// in (already `time_scale`-scaled) wall seconds, `0.0` = no delay thread.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultRates {
+    pub drop: f64,
+    pub duplicate: f64,
+    pub corrupt: f64,
+    pub delay_max: f64,
+}
+
+impl FaultRates {
+    pub fn is_quiet(&self) -> bool {
+        *self == FaultRates::default()
+    }
+}
+
+/// Kill the worker at `slot` after it has delivered `after` completions
+/// (0 = immediately after joining).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CrashSpec {
+    pub slot: usize,
+    pub after: usize,
+}
+
+/// Drop all traffic to/from `slots` while job wall time is in `[from, to)`
+/// (scaled seconds since the reactor started).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Partition {
+    pub slots: Vec<usize>,
+    pub from: f64,
+    pub to: f64,
+}
+
+/// The full fault model for one cluster job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosConfig {
+    /// Fault-stream seed (independent of the job's operand/speed seed).
+    pub seed: u64,
+    /// Master → worker command faults.
+    pub cmd: FaultRates,
+    /// Worker → master event faults.
+    pub evt: FaultRates,
+    /// Injected worker crashes.
+    pub crash: Vec<CrashSpec>,
+    /// Optional network partition window.
+    pub partition: Option<Partition>,
+    /// Stall watchdog: re-dispatch unacked work after this many scaled
+    /// wall seconds without any event arriving.
+    pub ack_timeout: f64,
+    /// Total speculative re-dispatches (queue re-sends, deficit drafts,
+    /// respawns) the reactor may spend before giving up.
+    pub retry_cap: usize,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            cmd: FaultRates::default(),
+            evt: FaultRates::default(),
+            crash: Vec::new(),
+            partition: None,
+            ack_timeout: 0.25,
+            retry_cap: 64,
+        }
+    }
+}
+
+impl ChaosConfig {
+    pub fn crash_after(&self, slot: usize) -> Option<usize> {
+        self.crash.iter().find(|c| c.slot == slot).map(|c| c.after)
+    }
+
+    /// Reject configurations that cannot describe a real fault schedule.
+    pub fn validate(&self, n_max: usize) -> Result<(), String> {
+        let rate = |name: &str, r: f64| {
+            if !(0.0..=1.0).contains(&r) || !r.is_finite() {
+                return Err(format!("{name} = {r} outside [0, 1]"));
+            }
+            Ok(())
+        };
+        for (dir, rates) in [("cmd", &self.cmd), ("evt", &self.evt)] {
+            rate(&format!("{dir}.drop"), rates.drop)?;
+            rate(&format!("{dir}.duplicate"), rates.duplicate)?;
+            rate(&format!("{dir}.corrupt"), rates.corrupt)?;
+            if !rates.delay_max.is_finite() || rates.delay_max < 0.0 {
+                return Err(format!("{dir}.delay_max = {} invalid", rates.delay_max));
+            }
+        }
+        if !self.ack_timeout.is_finite() || self.ack_timeout <= 0.0 {
+            return Err(format!("ack_timeout = {} must be positive", self.ack_timeout));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for c in &self.crash {
+            if c.slot >= n_max {
+                return Err(format!("crash slot {} >= n_max = {n_max}", c.slot));
+            }
+            if !seen.insert(c.slot) {
+                return Err(format!("duplicate crash spec for slot {}", c.slot));
+            }
+        }
+        if let Some(p) = &self.partition {
+            if !(p.from.is_finite() && p.to.is_finite() && p.from <= p.to && p.from >= 0.0)
+            {
+                return Err(format!(
+                    "partition window [{}, {}) invalid",
+                    p.from, p.to
+                ));
+            }
+            if let Some(&s) = p.slots.iter().find(|&&s| s >= n_max) {
+                return Err(format!("partition slot {s} >= n_max = {n_max}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Shared fault counters, aggregated across every link of one job.
+#[derive(Debug, Default)]
+pub struct ChaosStats {
+    pub sent: AtomicU64,
+    pub dropped: AtomicU64,
+    pub partitioned: AtomicU64,
+    pub duplicated: AtomicU64,
+    pub corruptions_injected: AtomicU64,
+    pub corruptions_dropped: AtomicU64,
+    pub delayed: AtomicU64,
+}
+
+/// A plain-integer snapshot of [`ChaosStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChaosCounts {
+    pub sent: u64,
+    pub dropped: u64,
+    pub partitioned: u64,
+    pub duplicated: u64,
+    pub corruptions_injected: u64,
+    pub corruptions_dropped: u64,
+    pub delayed: u64,
+}
+
+impl ChaosStats {
+    pub fn snapshot(&self) -> ChaosCounts {
+        ChaosCounts {
+            sent: self.sent.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            partitioned: self.partitioned.load(Ordering::Relaxed),
+            duplicated: self.duplicated.load(Ordering::Relaxed),
+            corruptions_injected: self.corruptions_injected.load(Ordering::Relaxed),
+            corruptions_dropped: self.corruptions_dropped.load(Ordering::Relaxed),
+            delayed: self.delayed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// What the fault stream decided for one message. Draw order is fixed
+/// (drop, corrupt-bit, duplicate, delay) regardless of which faults fire,
+/// so the schedule is a pure function of `(seed, dir, slot, message index)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub drop: bool,
+    /// Bit index to flip in the encoded frame (modulo frame bits).
+    pub corrupt_bit: Option<u64>,
+    pub duplicate: bool,
+    /// Delivery delay in seconds (`delay_max > 0` only).
+    pub delay: Option<f64>,
+}
+
+/// Seeded per-link fault decision stream.
+pub struct FaultGen {
+    rng: Xoshiro256pp,
+    rates: FaultRates,
+}
+
+impl FaultGen {
+    pub fn new(seed: u64, dir: u64, slot: usize, rates: FaultRates) -> Self {
+        Self { rng: trial_rng(fold_in(seed, dir), slot as u64), rates }
+    }
+
+    pub fn next(&mut self) -> FaultPlan {
+        let r_drop = self.rng.next_f64();
+        let r_corrupt = self.rng.next_f64();
+        let bit = self.rng.next_u64();
+        let r_dup = self.rng.next_f64();
+        let r_delay = self.rng.next_f64();
+        FaultPlan {
+            drop: r_drop < self.rates.drop,
+            corrupt_bit: (r_corrupt < self.rates.corrupt).then_some(bit),
+            duplicate: r_dup < self.rates.duplicate,
+            delay: (self.rates.delay_max > 0.0).then(|| r_delay * self.rates.delay_max),
+        }
+    }
+}
+
+/// A [`Link`] that injects the fault schedule of a [`FaultGen`] while
+/// round-tripping every message through the wire codec (so the byte form
+/// is what actually crosses, and corruption is detected the way a real
+/// transport would detect it: at decode, by checksum).
+pub struct ChaosLink<T: Wire + Clone + Send + 'static> {
+    inner: Sender<T>,
+    /// FIFO forwarder for delayed delivery; `None` when `delay_max == 0`.
+    delay_tx: Option<Sender<(Duration, T)>>,
+    gen: Mutex<FaultGen>,
+    stats: Arc<ChaosStats>,
+    /// This endpoint's slot is inside the partition's slot set.
+    partitioned_slot: bool,
+    window: (f64, f64),
+    epoch: Instant,
+}
+
+impl<T: Wire + Clone + Send + 'static> ChaosLink<T> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        inner: Sender<T>,
+        slot: usize,
+        dir: u64,
+        seed: u64,
+        cfg: &ChaosConfig,
+        rates: FaultRates,
+        epoch: Instant,
+        stats: Arc<ChaosStats>,
+    ) -> Self {
+        let delay_tx = (rates.delay_max > 0.0).then(|| {
+            let (tx, rx) = std::sync::mpsc::channel::<(Duration, T)>();
+            let fwd = inner.clone();
+            std::thread::Builder::new()
+                .name(format!("hcec-chaos-delay-{slot}"))
+                .stack_size(64 * 1024)
+                .spawn(move || {
+                    // FIFO with head-of-line blocking: delays add latency
+                    // jitter without reordering one link's messages.
+                    while let Ok((d, msg)) = rx.recv() {
+                        std::thread::sleep(d);
+                        if fwd.send(msg).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .expect("spawn chaos delay forwarder");
+            tx
+        });
+        let (partitioned_slot, window) = match &cfg.partition {
+            Some(p) => (p.slots.contains(&slot), (p.from, p.to)),
+            None => (false, (0.0, 0.0)),
+        };
+        Self {
+            inner,
+            delay_tx,
+            gen: Mutex::new(FaultGen::new(seed, dir, slot, rates)),
+            stats,
+            partitioned_slot,
+            window,
+            epoch,
+        }
+    }
+
+    fn in_partition(&self) -> bool {
+        if !self.partitioned_slot {
+            return false;
+        }
+        let t = self.epoch.elapsed().as_secs_f64();
+        t >= self.window.0 && t < self.window.1
+    }
+}
+
+impl<T: Wire + Clone + Send + 'static> Link<T> for ChaosLink<T> {
+    fn send(&self, msg: T) -> bool {
+        let stats = &self.stats;
+        stats.sent.fetch_add(1, Ordering::Relaxed);
+        if self.in_partition() {
+            stats.partitioned.fetch_add(1, Ordering::Relaxed);
+            stats.dropped.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        let mut plan = self.gen.lock().unwrap().next();
+        if msg.exempt_from_loss() {
+            // Connection-reset class signals: delay/duplicate allowed,
+            // silent loss and corruption are not (see Wire::exempt_from_loss).
+            plan.drop = false;
+            plan.corrupt_bit = None;
+        }
+        if plan.drop {
+            stats.dropped.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        // The wire form is the canonical form: every chaotic send crosses
+        // as bytes and is decoded back, corrupted or not.
+        let mut frame = msg.to_wire();
+        if let Some(bit) = plan.corrupt_bit {
+            stats.corruptions_injected.fetch_add(1, Ordering::Relaxed);
+            let b = (bit % (frame.len() as u64 * 8)) as usize;
+            frame[b / 8] ^= 1 << (b % 8);
+        }
+        let msg = match T::from_wire(&frame) {
+            Ok(m) => m,
+            Err(_) => {
+                // Detected at decode — the receiver never sees it.
+                stats.corruptions_dropped.fetch_add(1, Ordering::Relaxed);
+                return true;
+            }
+        };
+        let copies = if plan.duplicate {
+            stats.duplicated.fetch_add(1, Ordering::Relaxed);
+            2
+        } else {
+            1
+        };
+        for _ in 0..copies {
+            let delivered = match (&self.delay_tx, plan.delay) {
+                (Some(tx), Some(d)) => {
+                    stats.delayed.fetch_add(1, Ordering::Relaxed);
+                    tx.send((Duration::from_secs_f64(d), msg.clone())).is_ok()
+                }
+                _ => self.inner.send(msg.clone()).is_ok(),
+            };
+            if !delivered {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// Per-job chaos harness: one config, one clock epoch, one shared counter
+/// block. The spawner asks it to wrap each worker's channel ends; every
+/// wrap of the same `(direction, slot)` advances a generation counter that
+/// is folded into the stream seed, so a respawned worker draws a fresh
+/// fault schedule instead of replaying the exact losses that killed its
+/// predecessor's traffic (which would live-lock the retry loop).
+pub struct ChaosRig {
+    pub cfg: ChaosConfig,
+    pub epoch: Instant,
+    pub stats: Arc<ChaosStats>,
+    gens: Mutex<std::collections::HashMap<(u64, usize), u64>>,
+}
+
+impl ChaosRig {
+    pub fn new(cfg: ChaosConfig) -> Self {
+        Self {
+            cfg,
+            epoch: Instant::now(),
+            stats: Arc::new(ChaosStats::default()),
+            gens: Mutex::new(std::collections::HashMap::new()),
+        }
+    }
+
+    /// Seed for the next link on `(dir, slot)`: generation 0 on first
+    /// spawn, bumped per respawn. Deterministic — a slot's n-th spawn
+    /// always gets the same stream.
+    fn stream_seed(&self, dir: u64, slot: usize) -> u64 {
+        let mut gens = self.gens.lock().unwrap();
+        let g = gens.entry((dir, slot)).or_insert(0);
+        let seed = fold_in(self.cfg.seed, *g);
+        *g += 1;
+        seed
+    }
+
+    pub fn wrap_cmd(&self, slot: usize, tx: Sender<Command>) -> Box<dyn Link<Command>> {
+        Box::new(ChaosLink::new(
+            tx,
+            slot,
+            DIR_CMD,
+            self.stream_seed(DIR_CMD, slot),
+            &self.cfg,
+            self.cfg.cmd,
+            self.epoch,
+            Arc::clone(&self.stats),
+        ))
+    }
+
+    pub fn wrap_evt(&self, slot: usize, tx: Sender<Event>) -> Box<dyn Link<Event>> {
+        Box::new(ChaosLink::new(
+            tx,
+            slot,
+            DIR_EVT,
+            self.stream_seed(DIR_EVT, slot),
+            &self.cfg,
+            self.cfg.evt,
+            self.epoch,
+            Arc::clone(&self.stats),
+        ))
+    }
+
+    pub fn crash_after(&self, slot: usize) -> Option<usize> {
+        self.cfg.crash_after(slot)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rates(drop: f64, dup: f64, corrupt: f64) -> FaultRates {
+        FaultRates { drop, duplicate: dup, corrupt, delay_max: 0.0 }
+    }
+
+    fn drain(rx: &std::sync::mpsc::Receiver<Event>) -> Vec<Event> {
+        let mut out = Vec::new();
+        while let Ok(ev) = rx.try_recv() {
+            out.push(ev);
+        }
+        out
+    }
+
+    fn chaotic_run(seed: u64) -> (Vec<Event>, ChaosCounts) {
+        let cfg = ChaosConfig {
+            seed,
+            evt: rates(0.3, 0.2, 0.2),
+            ..ChaosConfig::default()
+        };
+        let rig = ChaosRig::new(cfg);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let link = rig.wrap_evt(5, tx);
+        for i in 0..200 {
+            assert!(link.send(Event::SubtaskDone {
+                slot: 5,
+                group: i,
+                data: Some(vec![i as f32, -1.5]),
+                elapsed: 0.001 * i as f64,
+            }));
+        }
+        (drain(&rx), rig.stats.snapshot())
+    }
+
+    #[test]
+    fn same_seed_gives_identical_fault_schedule_and_deliveries() {
+        let (msgs_a, stats_a) = chaotic_run(42);
+        let (msgs_b, stats_b) = chaotic_run(42);
+        assert_eq!(msgs_a, msgs_b, "delivered sequence must be seed-determined");
+        assert_eq!(stats_a, stats_b);
+        // And the schedule actually does something at these rates.
+        assert!(stats_a.dropped > 0, "{stats_a:?}");
+        assert!(stats_a.duplicated > 0, "{stats_a:?}");
+        assert!(stats_a.corruptions_injected > 0, "{stats_a:?}");
+        // Every injected corruption is caught by the CRC at decode.
+        assert_eq!(stats_a.corruptions_dropped, stats_a.corruptions_injected);
+        let (msgs_c, _) = chaotic_run(43);
+        assert_ne!(msgs_a, msgs_c, "different seeds must differ");
+    }
+
+    #[test]
+    fn fault_gen_schedule_is_a_pure_function_of_its_key() {
+        let plan = |seed| {
+            let mut g = FaultGen::new(seed, DIR_CMD, 3, rates(0.5, 0.5, 0.5));
+            (0..64).map(|_| g.next()).collect::<Vec<_>>()
+        };
+        assert_eq!(plan(7), plan(7));
+        assert_ne!(plan(7), plan(8));
+        // Directions and slots get independent streams.
+        let mut a = FaultGen::new(7, DIR_CMD, 3, rates(0.5, 0.5, 0.5));
+        let mut b = FaultGen::new(7, DIR_EVT, 3, rates(0.5, 0.5, 0.5));
+        let mut c = FaultGen::new(7, DIR_CMD, 4, rates(0.5, 0.5, 0.5));
+        let seq = |g: &mut FaultGen| (0..32).map(|_| g.next()).collect::<Vec<_>>();
+        let sa = seq(&mut a);
+        assert_ne!(sa, seq(&mut b));
+        assert_ne!(sa, seq(&mut c));
+    }
+
+    #[test]
+    fn quiet_rates_deliver_everything_verbatim_through_the_codec() {
+        let rig = ChaosRig::new(ChaosConfig::default());
+        let (tx, rx) = std::sync::mpsc::channel();
+        let link = rig.wrap_evt(0, tx);
+        let ev = Event::WorkerLeft { slot: 0, delivered: 9, error: Some("x".into()) };
+        assert!(link.send(ev.clone()));
+        assert_eq!(drain(&rx), vec![ev]);
+        let s = rig.stats.snapshot();
+        assert_eq!((s.sent, s.dropped, s.duplicated), (1, 0, 0));
+    }
+
+    #[test]
+    fn partition_window_drops_only_inside_the_window() {
+        let cfg = ChaosConfig {
+            partition: Some(Partition { slots: vec![2], from: 0.0, to: 3600.0 }),
+            ..ChaosConfig::default()
+        };
+        let rig = ChaosRig::new(cfg);
+        let (tx, rx) = std::sync::mpsc::channel();
+        // Slot 2 is inside the window for the next hour: everything drops.
+        let cut = rig.wrap_evt(2, tx.clone());
+        assert!(cut.send(Event::WorkerJoined { slot: 2 }));
+        // Slot 3 is not in the partition set.
+        let open = rig.wrap_evt(3, tx);
+        assert!(open.send(Event::WorkerJoined { slot: 3 }));
+        assert_eq!(drain(&rx), vec![Event::WorkerJoined { slot: 3 }]);
+        assert_eq!(rig.stats.snapshot().partitioned, 1);
+    }
+
+    #[test]
+    fn delayed_messages_arrive_in_order_and_disconnect_cleanly() {
+        let cfg = ChaosConfig {
+            evt: FaultRates { delay_max: 0.005, ..FaultRates::default() },
+            ..ChaosConfig::default()
+        };
+        let rig = ChaosRig::new(cfg);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let link = rig.wrap_evt(1, tx);
+        for g in 0..8 {
+            assert!(link.send(Event::SubtaskDone { slot: 1, group: g, data: None, elapsed: 0.0 }));
+        }
+        let mut got = Vec::new();
+        for _ in 0..8 {
+            match rx.recv_timeout(Duration::from_secs(5)).expect("delayed delivery") {
+                Event::SubtaskDone { group, .. } => got.push(group),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(got, (0..8).collect::<Vec<_>>(), "FIFO must hold under delay");
+        assert_eq!(rig.stats.snapshot().delayed, 8);
+        drop(link); // forwarder exits once its queue drains
+    }
+
+    #[test]
+    fn crash_notices_survive_total_loss_and_corruption() {
+        // An exit-with-error is a connection reset, not a datagram: even a
+        // 100% drop + corrupt schedule must deliver it. Ordinary exits
+        // remain fully lossy.
+        let cfg = ChaosConfig { seed: 1, evt: rates(1.0, 0.0, 1.0), ..ChaosConfig::default() };
+        let rig = ChaosRig::new(cfg);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let link = rig.wrap_evt(0, tx);
+        let crash = Event::WorkerLeft { slot: 0, delivered: 1, error: Some("boom".into()) };
+        assert!(link.send(crash.clone()));
+        assert!(link.send(Event::WorkerLeft { slot: 0, delivered: 1, error: None }));
+        assert_eq!(drain(&rx), vec![crash]);
+    }
+
+    #[test]
+    fn respawned_links_draw_fresh_deterministic_streams() {
+        // Each wrap of the same (dir, slot) advances a generation, so a
+        // respawned worker cannot replay its predecessor's fault schedule
+        // — but the n-th spawn is still a pure function of the seed.
+        let survivors = |rig: &ChaosRig| -> (usize, usize) {
+            let (tx, rx) = std::sync::mpsc::channel();
+            let first = rig.wrap_evt(1, tx.clone());
+            for _ in 0..64 {
+                first.send(Event::WorkerJoined { slot: 1 });
+            }
+            let a = drain(&rx).len();
+            let second = rig.wrap_evt(1, tx);
+            for _ in 0..64 {
+                second.send(Event::WorkerJoined { slot: 1 });
+            }
+            (a, drain(&rx).len())
+        };
+        let cfg = ChaosConfig { seed: 9, evt: rates(0.4, 0.0, 0.0), ..ChaosConfig::default() };
+        let (a1, b1) = survivors(&ChaosRig::new(cfg.clone()));
+        let (a2, b2) = survivors(&ChaosRig::new(cfg));
+        assert_eq!((a1, b1), (a2, b2), "generations must be deterministic");
+        assert!(a1 < 64 && b1 < 64, "drop rate must bite both generations");
+    }
+
+    #[test]
+    fn validate_rejects_nonsense_configs() {
+        let ok = ChaosConfig::default();
+        assert!(ok.validate(4).is_ok());
+        let mut bad = ChaosConfig::default();
+        bad.evt.drop = 1.5;
+        assert!(bad.validate(4).unwrap_err().contains("evt.drop"));
+        let bad = ChaosConfig { ack_timeout: 0.0, ..ChaosConfig::default() };
+        assert!(bad.validate(4).unwrap_err().contains("ack_timeout"));
+        let bad = ChaosConfig {
+            crash: vec![CrashSpec { slot: 4, after: 0 }],
+            ..ChaosConfig::default()
+        };
+        assert!(bad.validate(4).unwrap_err().contains("crash slot 4"));
+        let bad = ChaosConfig {
+            partition: Some(Partition { slots: vec![0], from: 2.0, to: 1.0 }),
+            ..ChaosConfig::default()
+        };
+        assert!(bad.validate(4).unwrap_err().contains("partition window"));
+    }
+
+    #[test]
+    fn crash_spec_lookup() {
+        let cfg = ChaosConfig {
+            crash: vec![CrashSpec { slot: 4, after: 2 }],
+            ..ChaosConfig::default()
+        };
+        assert_eq!(cfg.crash_after(4), Some(2));
+        assert_eq!(cfg.crash_after(5), None);
+    }
+}

@@ -30,11 +30,18 @@
 
 mod backend;
 mod ledger;
+mod link;
 mod protocol;
+mod wire;
 
 pub use backend::{BackendSpec, NativeGemm, PjrtWorker, SimulatedLatency, WorkerBackend};
 pub use ledger::RecoveryLedger;
+pub use link::{
+    ChaosConfig, ChaosCounts, ChaosLink, ChaosRig, ChaosStats, CrashSpec, FaultGen,
+    FaultRates, Link, MpscLink, Partition,
+};
 pub use protocol::{spawn_cluster_worker, ClusterWorker, Command, Event};
+pub use wire::{Wire, WireError};
 
 use std::collections::HashSet;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
@@ -108,6 +115,10 @@ pub struct ClusterConfig {
     /// off strictly-slower holders. Waste accounting and ledger-driven
     /// queue filtering stay on either way.
     pub backfill: bool,
+    /// Fault injection: wrap every channel in a seeded `ChaosLink`, crash
+    /// the named workers, and arm the reactor's stall watchdog. `None`
+    /// runs the pristine transport (no watchdog, no codec round-trips).
+    pub chaos: Option<ChaosConfig>,
     pub seed: u64,
 }
 
@@ -125,6 +136,7 @@ impl ClusterConfig {
             elasticity: ClusterElasticity::Fixed,
             preempt_after_first: 0,
             backfill: true,
+            chaos: None,
             seed: 0,
         }
     }
@@ -160,6 +172,16 @@ pub struct ClusterReport {
     pub backfills: usize,
     /// Queued sets moved off strictly-slower holders onto joiners.
     pub sheds: usize,
+    /// Worker crashes absorbed as unplanned leaves (chaos injection).
+    pub crashes_absorbed: usize,
+    /// Speculative re-dispatches by the stall watchdog / drain-respawn.
+    pub retries: usize,
+    /// Duplicate completions suppressed by the idempotence gate.
+    pub duplicates_suppressed: usize,
+    /// Frames whose checksum failed at decode (all chaos-injected).
+    pub corruptions_dropped: usize,
+    /// Messages dropped in flight (loss + partition windows).
+    pub messages_dropped: usize,
     pub max_rel_err: f32,
     pub recovered: bool,
     /// Human-readable protocol milestones (elastic events, preemptions,
@@ -321,6 +343,13 @@ pub fn run_cluster_job(cfg: &ClusterConfig) -> Result<ClusterReport> {
         ClusterElasticity::Fixed => Vec::new(),
         ClusterElasticity::Trace(t) => t.events.clone(),
     };
+    let chaos = match &cfg.chaos {
+        Some(c) => {
+            c.validate(cfg.n_max).map_err(|e| anyhow!("chaos config: {e}"))?;
+            Some(ChaosRig::new(c.clone()))
+        }
+        None => None,
+    };
     let (evt_tx, evt_rx) = std::sync::mpsc::channel();
     let mut reactor = Reactor {
         rule,
@@ -367,6 +396,12 @@ pub fn run_cluster_job(cfg: &ClusterConfig) -> Result<ClusterReport> {
         sheds: 0,
         deficits: Vec::new(),
         t_comp: Instant::now(),
+        chaos,
+        crashes_absorbed: 0,
+        retries: 0,
+        dup_suppressed: 0,
+        fruitless_respins: 0,
+        last_progress: Instant::now(),
     };
     for (slot, list) in alloc.lists.iter().enumerate() {
         let groups: Vec<usize> = list.iter().map(|item| item.group).collect();
@@ -410,6 +445,11 @@ pub fn run_cluster_job(cfg: &ClusterConfig) -> Result<ClusterReport> {
         (0.0, 0.0)
     };
 
+    let chaos_counts = reactor
+        .chaos
+        .as_ref()
+        .map(|rig| rig.stats.snapshot())
+        .unwrap_or_default();
     Ok(ClusterReport {
         scheme: cfg.scheme.name(),
         encode_wall,
@@ -428,6 +468,11 @@ pub fn run_cluster_job(cfg: &ClusterConfig) -> Result<ClusterReport> {
         reallocations: reactor.reallocs,
         backfills: reactor.backfills,
         sheds: reactor.sheds,
+        crashes_absorbed: reactor.crashes_absorbed,
+        retries: reactor.retries,
+        duplicates_suppressed: reactor.dup_suppressed,
+        corruptions_dropped: chaos_counts.corruptions_dropped as usize,
+        messages_dropped: (chaos_counts.dropped + chaos_counts.partitioned) as usize,
         max_rel_err,
         recovered: true,
         timeline: std::mem::take(&mut reactor.timeline),
@@ -526,6 +571,24 @@ struct Reactor {
     /// before it becomes fatal (`check_deficits`).
     deficits: Vec<(String, usize)>,
     t_comp: Instant,
+    /// Fault-injection rig: wraps every spawned worker's channels in
+    /// seeded `ChaosLink`s and arms the stall watchdog. `None` = pristine
+    /// transport, no watchdog, exactly the pre-chaos reactor.
+    chaos: Option<ChaosRig>,
+    /// Worker crashes absorbed as unplanned leaves (backfill kept every
+    /// affected group above threshold).
+    crashes_absorbed: usize,
+    /// Speculative re-dispatches issued by the watchdog and the
+    /// drain-respawn path, bounded by `ChaosConfig::retry_cap`.
+    retries: usize,
+    /// Duplicate `SubtaskDone` deliveries suppressed by the idempotence
+    /// gate (chaos duplication or speculative re-execution).
+    dup_suppressed: usize,
+    /// Consecutive watchdog sweeps that found nothing to heal — the
+    /// live-lock breaker when the retry budget is spent.
+    fruitless_respins: usize,
+    /// Arrival time of the last worker event (watchdog anchor).
+    last_progress: Instant,
 }
 
 impl Reactor {
@@ -580,6 +643,7 @@ impl Reactor {
             self.speeds.multiplier(slot).max(1.0),
             self.stack_kib,
             self.evt_tx.clone(),
+            self.chaos.as_ref(),
         );
         worker.send(Command::Assign { tasks });
         match self.rule {
@@ -612,26 +676,46 @@ impl Reactor {
             // DES batches same-timestamp events into one transition; this
             // is the reactor's equivalent).
             self.check_deficits()?;
-            // Wait for the next worker event or elastic deadline.
-            let msg = if self.ev_idx < self.events.len() {
-                let now = self.t_comp.elapsed();
-                let deadline = self.deadline(self.ev_idx);
-                if deadline <= now {
-                    continue;
-                }
-                match self.evt_rx.recv_timeout(deadline - now) {
-                    Ok(m) => m,
-                    Err(RecvTimeoutError::Timeout) => continue,
-                    Err(RecvTimeoutError::Disconnected) => {
-                        bail!("event channel closed before recovery")
+            // Wait for the next worker event, elastic deadline, or (chaos
+            // only) the stall watchdog: no event for `ack_timeout` seconds
+            // triggers a self-healing sweep over unacked work.
+            let elastic_due = (self.ev_idx < self.events.len())
+                .then(|| self.t_comp + self.deadline(self.ev_idx));
+            let watchdog_due = self
+                .chaos
+                .as_ref()
+                .map(|rig| self.last_progress + Duration::from_secs_f64(rig.cfg.ack_timeout));
+            let wake = match (elastic_due, watchdog_due) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+            let msg = match wake {
+                Some(due) => {
+                    let now = Instant::now();
+                    if due <= now {
+                        if elastic_due.is_some_and(|d| d <= now) {
+                            continue; // the loop top applies the due event
+                        }
+                        self.respin()?;
+                        self.last_progress = Instant::now();
+                        continue;
+                    }
+                    match self.evt_rx.recv_timeout(due - now) {
+                        Ok(m) => m,
+                        Err(RecvTimeoutError::Timeout) => continue,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            bail!("event channel closed before recovery")
+                        }
                     }
                 }
-            } else if self.live == 0 {
-                bail!("pool drained before the recovery rule was met");
-            } else {
-                self.evt_rx
-                    .recv()
-                    .map_err(|_| anyhow!("event channel closed before recovery"))?
+                None => {
+                    if self.live == 0 {
+                        bail!("pool drained before the recovery rule was met");
+                    }
+                    self.evt_rx
+                        .recv()
+                        .map_err(|_| anyhow!("event channel closed before recovery"))?
+                }
             };
             if self.handle(msg)? {
                 return Ok(self.t_comp.elapsed().as_secs_f64());
@@ -639,13 +723,112 @@ impl Reactor {
         }
     }
 
+    /// The watchdog's self-healing sweep, run when no worker event has
+    /// arrived for `ack_timeout` seconds. In order: (1) re-send every live
+    /// worker its outstanding mirror — heals dropped `Assign`/`Reassign`
+    /// commands and dropped `SubtaskDone` events (the worker recomputes;
+    /// the ledger and the idempotence gate make replays free); (2) a live
+    /// worker whose command channel is dead had its `WorkerLeft` lost in
+    /// transit — synthesize the exit so the drain/respawn path runs; (3)
+    /// draft under-loaded live holders for any set still short of K
+    /// (`FrozenPlanner::plan_redispatch`). Every action spends retry
+    /// budget; a budget-exhausted stall with no live workers is fatal, and
+    /// so are repeated sweeps that find nothing to do.
+    fn respin(&mut self) -> Result<()> {
+        let cap = match self.chaos.as_ref() {
+            Some(rig) => rig.cfg.retry_cap,
+            None => return Ok(()),
+        };
+        let t = self.t_comp.elapsed().as_secs_f64();
+        let mut resent = 0usize;
+        let mut dead: Vec<usize> = Vec::new();
+        for slot in 0..self.slots.len() {
+            let Some(entry) = self.slots[slot].as_ref() else {
+                continue;
+            };
+            if entry.leaving.is_some() || entry.pending.is_empty() {
+                continue;
+            }
+            if self.retries + resent >= cap {
+                break;
+            }
+            let tasks = self.make_tasks(slot, &entry.pending);
+            if entry.worker.send(Command::Reassign { tasks }) {
+                resent += 1;
+            } else {
+                dead.push(slot);
+            }
+        }
+        self.retries += resent;
+        if resent > 0 {
+            self.note(format!(
+                "t={t:.4} watchdog re-dispatched {resent} unacked queue(s)"
+            ));
+        }
+        // A dead command channel with the slot still tracked means the
+        // worker exited but its WorkerLeft was dropped: run the exit
+        // handler ourselves (under chaos it respawns outstanding work).
+        for slot in dead.iter().copied() {
+            self.note(format!(
+                "t={t:.4} watchdog detected lost exit notice from worker {slot}"
+            ));
+            self.handle(Event::WorkerLeft { slot, delivered: 0, error: None })?;
+        }
+        // Draft live holders for any set that lost its redundancy (only
+        // possible once the respawn budget stops covering dead slots).
+        let mut drafted = 0usize;
+        if matches!(self.rule, RecoveryRule::PerSet { .. }) && self.retries < cap {
+            let views = self.holder_views(None);
+            let plan = self.planner.plan_redispatch(
+                &views,
+                &self.holders,
+                &self.ledger,
+                &self.delivered,
+            );
+            drafted = plan.backfills;
+            if drafted > 0 {
+                self.note(format!(
+                    "t={t:.4} watchdog drafted holders for {drafted} under-held set(s)"
+                ));
+                self.retries += drafted;
+                self.absorb(plan);
+            }
+        }
+        if resent == 0 && dead.is_empty() && drafted == 0 {
+            self.fruitless_respins += 1;
+            if self.live == 0 {
+                bail!(
+                    "pool drained before the recovery rule was met \
+                     ({} chaos retries used, cap {cap})",
+                    self.retries
+                );
+            }
+            if self.fruitless_respins >= 8 {
+                bail!(
+                    "reactor stalled: {} watchdog sweeps found nothing to heal \
+                     ({} chaos retries used, cap {cap})",
+                    self.fruitless_respins,
+                    self.retries
+                );
+            }
+        } else {
+            self.fruitless_respins = 0;
+        }
+        Ok(())
+    }
+
     /// Handle one worker event; true means the rule was newly satisfied.
     fn handle(&mut self, msg: Event) -> Result<bool> {
         match msg {
-            Event::WorkerJoined { .. } | Event::Decoded { .. } => Ok(false),
+            Event::WorkerJoined { .. } | Event::Decoded { .. } => {
+                self.last_progress = Instant::now();
+                Ok(false)
+            }
             Event::SubtaskDone { slot, group, data, .. } => {
                 self.received += 1;
-                self.delivered.insert((slot, group));
+                self.last_progress = Instant::now();
+                // Mirror maintenance runs for every delivery, duplicate or
+                // not: either way the worker no longer holds this group.
                 if let Some(entry) = self.slots[slot].as_mut() {
                     if let Some(pos) = entry.pending.iter().position(|&g| g == group) {
                         entry.pending.remove(pos);
@@ -654,6 +837,15 @@ impl Reactor {
                             RecoveryRule::Global { .. } => self.pending_total -= 1,
                         }
                     }
+                }
+                // Idempotence gate: everything downstream — payload
+                // buffering, ledger credit, joiner credit, the preempt
+                // knob — keys off the FIRST (slot, group) delivery only,
+                // so chaos duplication and speculative re-execution can
+                // never double-push a payload or double-count a credit.
+                if !self.delivered.insert((slot, group)) {
+                    self.dup_suppressed += 1;
+                    return Ok(false);
                 }
                 let credited_before = self.ledger.credited();
                 let complete = self.ledger.record(slot, group);
@@ -702,14 +894,67 @@ impl Reactor {
                 Ok(false)
             }
             Event::WorkerLeft { slot, delivered, error } => {
-                if let Some(e) = error {
-                    bail!("worker {slot} failed: {e}");
-                }
+                self.last_progress = Instant::now();
                 let Some(entry) = self.slots[slot].take() else {
+                    // Replayed or synthesized exit for a slot already
+                    // unwound — idempotent no-op.
                     return Ok(false);
                 };
                 self.live -= 1;
+                if let Some(e) = error {
+                    return self.absorb_crash(slot, delivered, e, entry);
+                }
                 let cause = entry.leaving.clone().unwrap_or_else(|| "queue drained".into());
+                // A normally-drained slot with an outstanding mirror only
+                // happens under transport loss (per-link FIFO delivery
+                // means every completion outruns the exit notice): the
+                // worker either never received a command or its
+                // completions were dropped in flight. Respawn the slot to
+                // re-run the unacked groups while the retry budget holds
+                // — re-execution is free (idempotence gate + ledger), and
+                // this is the only way slot-bound BICEC work can heal.
+                if entry.leaving.is_none() && !entry.pending.is_empty() {
+                    let todo: Vec<usize> = entry
+                        .pending
+                        .iter()
+                        .copied()
+                        .filter(|&g| match self.rule {
+                            RecoveryRule::PerSet { .. } => !self.ledger.group_complete(g),
+                            RecoveryRule::Global { .. } => {
+                                !self.delivered.contains(&(slot, g))
+                            }
+                        })
+                        .collect();
+                    let budget = self
+                        .chaos
+                        .as_ref()
+                        .is_some_and(|r| self.retries + todo.len() <= r.cfg.retry_cap);
+                    if !todo.is_empty() && budget {
+                        // Unwind the whole mirror (spawn re-counts the
+                        // respawned groups), then bring the slot back up.
+                        match self.rule {
+                            RecoveryRule::PerSet { .. } => {
+                                for &g in &entry.pending {
+                                    self.holders[g] -= 1;
+                                }
+                            }
+                            RecoveryRule::Global { .. } => {
+                                self.pending_total -= entry.pending.len();
+                            }
+                        }
+                        let joined_mid = entry.joined_mid;
+                        self.finished.push(entry.worker);
+                        self.retries += todo.len();
+                        let t = self.t_comp.elapsed().as_secs_f64();
+                        self.note(format!(
+                            "t={t:.4} respawned drained worker {slot} to re-run {} \
+                             unacked subtask(s)",
+                            todo.len()
+                        ));
+                        self.spawn(slot, todo, joined_mid);
+                        return Ok(false);
+                    }
+                }
                 // Unwind the departed slot's pending work and check that
                 // every group it abandoned is still recoverable.
                 match self.rule {
@@ -758,6 +1003,91 @@ impl Reactor {
                 Ok(false)
             }
         }
+    }
+
+    /// A worker died with an error. The pre-chaos reactor treated this as
+    /// instantly fatal; now the crash is absorbed as an unplanned leave —
+    /// the whole outstanding mirror (in-flight front included) is
+    /// abandoned, the planner backfills what it can onto surviving
+    /// holders, and the job fails only when some group is left truly
+    /// unrecoverable. The crashed slot itself is never respawned: its
+    /// exit is authoritative, which keeps genuinely infeasible crashes
+    /// failing fast and naming the unrecoverable set.
+    fn absorb_crash(
+        &mut self,
+        slot: usize,
+        delivered: usize,
+        err: String,
+        entry: SlotEntry,
+    ) -> Result<bool> {
+        let cause =
+            format!("worker {slot} crashed ({err}) after {delivered} completions");
+        let t = self.t_comp.elapsed().as_secs_f64();
+        self.note(format!("t={t:.4} worker {slot} crashed: {err}"));
+        match self.rule {
+            RecoveryRule::PerSet { .. } => {
+                let abandoned: Vec<usize> = entry
+                    .pending
+                    .iter()
+                    .copied()
+                    .filter(|&g| !self.ledger.group_complete(g))
+                    .collect();
+                for &g in &entry.pending {
+                    self.holders[g] -= 1;
+                }
+                self.finished.push(entry.worker);
+                if !abandoned.is_empty() {
+                    let views = self.holder_views(None);
+                    let plan = self.planner.plan_leave(
+                        &abandoned,
+                        &views,
+                        &self.holders,
+                        &self.ledger,
+                        &self.delivered,
+                    );
+                    if plan.backfills > 0 {
+                        self.note(format!(
+                            "t={t:.4} backfilled {} set(s) abandoned by crashed \
+                             worker {slot}",
+                            plan.backfills
+                        ));
+                    }
+                    for &g in &plan.deficits {
+                        self.deficits.push((cause.clone(), g));
+                    }
+                    self.absorb(plan);
+                }
+            }
+            RecoveryRule::Global { k } => {
+                self.pending_total -= entry.pending.len();
+                self.finished.push(entry.worker);
+                if !self.ledger.is_complete()
+                    && self.ledger.credited() + self.pending_total < k
+                {
+                    bail!(
+                        "{cause}, leaving the pool unable to reach K = {k}: {} \
+                         delivered + {} pending",
+                        self.ledger.credited(),
+                        self.pending_total
+                    );
+                }
+            }
+        }
+        // A crash is not part of an elastic same-timestamp batch: judge
+        // its deficits immediately so an infeasible crash fails fast.
+        self.check_deficits()?;
+        self.crashes_absorbed += 1;
+        let survivors = self.live;
+        self.note(format!(
+            "t={t:.4} absorbed crash of worker {slot} ({survivors} live worker(s) \
+             carry on)"
+        ));
+        // A join for this slot may have been waiting for the old worker.
+        if let Some(pos) = self.deferred_joins.iter().position(|&(_, s)| s == slot) {
+            let (idx, _) = self.deferred_joins.remove(pos);
+            self.do_join(slot, idx);
+        }
+        Ok(false)
     }
 
     fn apply_event(&mut self, ev: ElasticEvent, idx: usize) -> Result<()> {
@@ -1091,6 +1421,7 @@ mod tests {
             elasticity: ClusterElasticity::Fixed,
             preempt_after_first: 0,
             backfill: true,
+            chaos: None,
             seed: 1,
         }
     }
@@ -1422,5 +1753,136 @@ mod tests {
         assert!(report.recovered);
         assert!(report.workers_preempted <= 2);
         assert!(report.max_rel_err < 1e-2);
+    }
+
+    // Satellite bugfix: a mid-job worker crash used to hard-abort the
+    // whole job; now it is absorbed as an unplanned leave whenever every
+    // affected group still satisfies have + holders >= K.
+    #[test]
+    fn injected_crash_is_absorbed_as_unplanned_leave() {
+        // BICEC 8x4 = 32 subtasks, K = 20: losing slot 6's remaining 3
+        // subtasks after its first delivery leaves 29 reachable >= 20.
+        let mut cfg = sim_cfg(SchemeConfig::Bicec { k: 20, s_per_worker: 4 }, 8, 8);
+        cfg.chaos = Some(ChaosConfig {
+            seed: 7,
+            crash: vec![CrashSpec { slot: 6, after: 1 }],
+            ..ChaosConfig::default()
+        });
+        let report = run_cluster_job(&cfg).unwrap();
+        assert!(report.recovered);
+        assert_eq!(report.crashes_absorbed, 1);
+        assert_eq!(report.leaves, 0, "a crash is not an elastic leave");
+        assert!(
+            report.timeline.iter().any(|l| l.contains("absorbed crash of worker 6")),
+            "timeline: {:?}",
+            report.timeline
+        );
+    }
+
+    #[test]
+    fn infeasible_crash_fails_fast_naming_the_set() {
+        // CEC K = 3 on exactly 3 slots: every set needs all three distinct
+        // slots, so slot 0 crashing before any delivery leaves every set
+        // it never served at have + 2 live holders < 3 — deterministically
+        // unrecoverable no matter how the other workers raced ahead.
+        let mut cfg = sim_cfg(SchemeConfig::Cec { k: 3, s: 3 }, 3, 3);
+        cfg.chaos = Some(ChaosConfig {
+            seed: 7,
+            crash: vec![CrashSpec { slot: 0, after: 0 }],
+            ..ChaosConfig::default()
+        });
+        let err = run_cluster_job(&cfg).unwrap_err().to_string();
+        assert!(err.contains("worker 0 crashed"), "{err}");
+        assert!(err.contains("left unrecoverable"), "{err}");
+    }
+
+    // Satellite bugfix: duplicate SubtaskDone deliveries used to push a
+    // second payload copy and could double-count joiner credits; the
+    // idempotence gate suppresses everything past the first delivery.
+    #[test]
+    fn duplicated_completions_are_suppressed_and_decode_exactly() {
+        let mut cfg = sim_cfg(SchemeConfig::Cec { k: 4, s: 6 }, 8, 8);
+        cfg.job = JobSpec::new(64, 32, 16);
+        cfg.backend = ClusterBackend::Native;
+        cfg.seed = 3;
+        cfg.chaos = Some(ChaosConfig {
+            seed: 21,
+            evt: FaultRates { duplicate: 0.6, ..FaultRates::default() },
+            ..ChaosConfig::default()
+        });
+        let report = run_cluster_job(&cfg).unwrap();
+        assert!(report.recovered);
+        assert!(report.max_rel_err < 1e-3, "err={}", report.max_rel_err);
+        assert!(
+            report.duplicates_suppressed >= 1,
+            "a 0.6 duplication rate must trip the gate: {report:?}"
+        );
+        // Every buffered payload is unique per (group, slot).
+        assert!(report.completions_received > report.completions_used);
+    }
+
+    #[test]
+    fn chaotic_native_job_survives_drop_corrupt_and_crash() {
+        // The tentpole end-to-end: lossy + corrupting links in both
+        // directions plus one injected crash, and the job still finishes
+        // with a bit-correct decode (same tolerance as the pristine run).
+        let mk = |chaos: Option<ChaosConfig>| {
+            let mut cfg = sim_cfg(SchemeConfig::Cec { k: 2, s: 4 }, 8, 8);
+            cfg.job = JobSpec::new(64, 32, 16);
+            cfg.backend = ClusterBackend::Native;
+            cfg.seed = 3;
+            cfg.chaos = chaos;
+            cfg
+        };
+        let pristine = run_cluster_job(&mk(None)).unwrap();
+        let chaotic = run_cluster_job(&mk(Some(ChaosConfig {
+            seed: 11,
+            cmd: FaultRates { drop: 0.02, ..FaultRates::default() },
+            evt: FaultRates { drop: 0.05, corrupt: 0.05, ..FaultRates::default() },
+            crash: vec![CrashSpec { slot: 5, after: 1 }],
+            ack_timeout: 0.05,
+            retry_cap: 256,
+            ..ChaosConfig::default()
+        })))
+        .unwrap();
+        assert!(chaotic.recovered);
+        assert_eq!(chaotic.crashes_absorbed, 1);
+        assert!(chaotic.max_rel_err < 1e-3, "err={}", chaotic.max_rel_err);
+        assert!(pristine.max_rel_err < 1e-3);
+        assert_eq!(pristine.crashes_absorbed, 0);
+        assert_eq!(pristine.messages_dropped + pristine.corruptions_dropped, 0);
+    }
+
+    #[test]
+    fn chaos_counters_are_deterministic_per_seed_on_robust_fields() {
+        // Arrival order is racy, but the fault schedule and the crash are
+        // seed-determined: the robust outcome fields must agree run-to-run.
+        let run = || {
+            let mut cfg = sim_cfg(SchemeConfig::Bicec { k: 20, s_per_worker: 4 }, 8, 8);
+            cfg.chaos = Some(ChaosConfig {
+                seed: 5,
+                crash: vec![CrashSpec { slot: 7, after: 2 }],
+                ..ChaosConfig::default()
+            });
+            run_cluster_job(&cfg).unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert!(a.recovered && b.recovered);
+        assert_eq!(a.crashes_absorbed, b.crashes_absorbed);
+        assert_eq!(a.crashes_absorbed, 1);
+        assert_eq!(a.max_rel_err, 0.0, "simulated backend decodes nothing");
+        assert_eq!(b.max_rel_err, 0.0);
+    }
+
+    #[test]
+    fn rejects_invalid_chaos_config() {
+        let mut cfg = sim_cfg(SchemeConfig::Cec { k: 4, s: 6 }, 8, 8);
+        cfg.chaos = Some(ChaosConfig {
+            crash: vec![CrashSpec { slot: 9, after: 0 }],
+            ..ChaosConfig::default()
+        });
+        let err = run_cluster_job(&cfg).unwrap_err().to_string();
+        assert!(err.contains("chaos config"), "{err}");
+        assert!(err.contains("crash slot 9"), "{err}");
     }
 }

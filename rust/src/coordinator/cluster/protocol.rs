@@ -31,10 +31,11 @@ use std::time::Instant;
 use crate::linalg::Matrix;
 
 use super::backend::BackendSpec;
+use super::link::{ChaosRig, Link, MpscLink};
 pub use crate::coordinator::pool::WorkerTask;
 
 /// Master → worker.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Command {
     /// Initial to-do list for a (re)joined worker.
     Assign { tasks: Vec<WorkerTask> },
@@ -48,7 +49,7 @@ pub enum Command {
 }
 
 /// Worker → master (plus the master's own `Decoded` milestone).
-#[derive(Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Event {
     /// Sent once when the worker thread comes up.
     WorkerJoined { slot: usize },
@@ -83,22 +84,26 @@ impl Event {
     }
 }
 
-/// Handle to a spawned cluster worker.
+/// Handle to a spawned cluster worker. Commands cross a [`Link`] — the
+/// bare mpsc by default, or a fault-injecting `ChaosLink` when the job
+/// runs with a chaos rig.
 pub struct ClusterWorker {
     pub slot: usize,
-    cmd: Sender<Command>,
+    cmd: Box<dyn Link<Command>>,
     join: Option<JoinHandle<()>>,
 }
 
 impl ClusterWorker {
-    /// Send a command; returns false if the worker already exited.
+    /// Send a command; returns false if the worker already exited. (A
+    /// chaos link may silently consume the command and still return true —
+    /// the caller learns the worker is alive, not that the message landed.)
     pub fn send(&self, cmd: Command) -> bool {
-        self.cmd.send(cmd).is_ok()
+        self.cmd.send(cmd)
     }
 
     pub fn join(mut self) {
-        // Dropping the command sender unblocks a worker waiting for its
-        // first assignment.
+        // Dropping the command link drops the underlying sender, which
+        // unblocks a worker waiting for its first assignment.
         drop(self.cmd);
         if let Some(h) = self.join.take() {
             let _ = h.join();
@@ -114,6 +119,10 @@ impl ClusterWorker {
 /// each subtask). The backend itself is constructed *inside* the thread
 /// (PJRT handles are not `Send`). `stack_kib` bounds the thread stack —
 /// latency-only fleets at N = 2560 run on small stacks.
+///
+/// With a `chaos` rig, both channel directions are wrapped in fault-
+/// injecting `ChaosLink`s, and a matching `CrashSpec` makes the worker die
+/// with an error after that many deliveries.
 pub fn spawn_cluster_worker(
     slot: usize,
     spec: BackendSpec,
@@ -122,30 +131,50 @@ pub fn spawn_cluster_worker(
     multiplier: f64,
     stack_kib: usize,
     evt_tx: Sender<Event>,
+    chaos: Option<&ChaosRig>,
 ) -> ClusterWorker {
     assert!(multiplier >= 1.0, "multiplier {multiplier} < 1");
     let (cmd_tx, cmd_rx) = std::sync::mpsc::channel();
+    let cmd: Box<dyn Link<Command>> = match chaos {
+        Some(rig) => rig.wrap_cmd(slot, cmd_tx),
+        None => Box::new(MpscLink(cmd_tx)),
+    };
+    let evt: Box<dyn Link<Event>> = match chaos {
+        Some(rig) => rig.wrap_evt(slot, evt_tx),
+        None => Box::new(MpscLink(evt_tx)),
+    };
+    let crash_after = chaos.and_then(|rig| rig.crash_after(slot));
     let join = std::thread::Builder::new()
         .name(format!("hcec-cluster-{slot}"))
         .stack_size(stack_kib * 1024)
         .spawn(move || {
-            let _ = evt_tx.send(Event::WorkerJoined { slot });
-            let (delivered, error) =
-                worker_loop(slot, &spec, encoded.as_deref(), b.as_deref(), multiplier, &cmd_rx, &evt_tx);
-            let _ = evt_tx.send(Event::WorkerLeft { slot, delivered, error });
+            evt.send(Event::WorkerJoined { slot });
+            let (delivered, error) = worker_loop(
+                slot,
+                &spec,
+                encoded.as_deref(),
+                b.as_deref(),
+                multiplier,
+                crash_after,
+                &cmd_rx,
+                evt.as_ref(),
+            );
+            evt.send(Event::WorkerLeft { slot, delivered, error });
         })
         .expect("spawn cluster worker thread");
-    ClusterWorker { slot, cmd: cmd_tx, join: Some(join) }
+    ClusterWorker { slot, cmd, join: Some(join) }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     slot: usize,
     spec: &BackendSpec,
     encoded: Option<&Matrix>,
     b: Option<&Matrix>,
     multiplier: f64,
+    crash_after: Option<usize>,
     cmd_rx: &Receiver<Command>,
-    evt_tx: &Sender<Event>,
+    evt_tx: &dyn Link<Event>,
 ) -> (usize, Option<String>) {
     let mut backend = match spec.make_worker(slot) {
         Ok(bk) => bk,
@@ -156,6 +185,11 @@ fn worker_loop(
     let mut delivered = 0usize;
     let empty = Matrix::zeros(0, 0);
     'life: loop {
+        // Injected chaos crash: die loudly, mid-queue, exactly like a
+        // worker whose process was killed.
+        if crash_after.is_some_and(|n| delivered >= n) {
+            return (delivered, Some("injected chaos crash".into()));
+        }
         // Consume commands: block for the first assignment, then drain
         // whatever has queued up since the last subtask.
         loop {
@@ -210,10 +244,7 @@ fn worker_loop(
             ));
         }
         // Master gone (job already recovered): treat as a stop signal.
-        if evt_tx
-            .send(Event::SubtaskDone { slot, group: task.group, data, elapsed })
-            .is_err()
-        {
+        if !evt_tx.send(Event::SubtaskDone { slot, group: task.group, data, elapsed }) {
             break;
         }
         delivered += 1;
@@ -246,6 +277,7 @@ mod tests {
             1.0,
             512,
             tx,
+            None,
         );
         assert!(w.send(Command::Assign { tasks: tasks(4, 2) }));
         let mut groups = Vec::new();
@@ -282,6 +314,7 @@ mod tests {
             1.0,
             512,
             tx,
+            None,
         );
         w.send(Command::Assign { tasks: tasks(32, 2) });
         // Wait for the first delivery, then swap the rest of the queue for
@@ -333,6 +366,7 @@ mod tests {
                 1.0,
                 512,
                 tx,
+                None,
             );
             w.send(Command::Assign { tasks: tasks(32, 2) });
             // One completion through, then stop.
@@ -359,9 +393,45 @@ mod tests {
     }
 
     #[test]
+    fn injected_crash_kills_the_worker_mid_queue() {
+        use super::super::link::{ChaosConfig, ChaosRig, CrashSpec};
+        let rig = ChaosRig::new(ChaosConfig {
+            crash: vec![CrashSpec { slot: 2, after: 3 }],
+            ..ChaosConfig::default()
+        });
+        let (tx, rx) = std::sync::mpsc::channel();
+        let w = spawn_cluster_worker(
+            2,
+            BackendSpec::Simulated { subtask_secs: 0.0 },
+            None,
+            None,
+            1.0,
+            512,
+            tx,
+            Some(&rig),
+        );
+        w.send(Command::Assign { tasks: tasks(16, 2) });
+        let mut done = 0;
+        loop {
+            match rx.recv().unwrap() {
+                Event::WorkerJoined { .. } => {}
+                Event::SubtaskDone { .. } => done += 1,
+                Event::WorkerLeft { slot, delivered, error } => {
+                    assert_eq!((slot, delivered), (2, 3));
+                    assert_eq!(error.as_deref(), Some("injected chaos crash"));
+                    break;
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(done, 3, "exactly `after` deliveries precede the crash");
+        w.join();
+    }
+
+    #[test]
     fn dropping_command_sender_releases_unassigned_worker() {
         let (tx, rx) = std::sync::mpsc::channel();
-        let w = spawn_cluster_worker(9, BackendSpec::Native, None, None, 1.0, 512, tx);
+        let w = spawn_cluster_worker(9, BackendSpec::Native, None, None, 1.0, 512, tx, None);
         w.join(); // must not hang: drops the command sender
         let mut saw_left = false;
         while let Ok(ev) = rx.recv() {

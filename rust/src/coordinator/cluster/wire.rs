@@ -1,0 +1,516 @@
+//! Length-prefixed, checksummed wire codec for the cluster protocol.
+//!
+//! Every `Command` and `Event` has a canonical byte form:
+//!
+//! ```text
+//!   ┌───────┬──────┬─────────┬─────────┬───────────────┐
+//!   │ magic │ kind │ len u32 │ crc u32 │ payload (len) │
+//!   │ b"HC" │  u8  │   LE    │   LE    │               │
+//!   └───────┴──────┴─────────┴─────────┴───────────────┘
+//! ```
+//!
+//! `kind` distinguishes the two enums (0 = Command, 1 = Event) so a frame
+//! can never be decoded as the wrong direction; `crc` is CRC-32 (IEEE)
+//! over `kind ++ payload`, which guarantees detection of every single-bit
+//! flip (and all burst errors up to 32 bits) — the property the chaos
+//! layer's corruption injection leans on. The in-process `ChaosLink`
+//! round-trips every message through this codec, so the byte form is
+//! exercised on every chaotic run and is ready to become the on-wire form
+//! for future TCP/UDP multi-process backends unchanged.
+//!
+//! Decoding is strict: bad magic, bad kind, length mismatch (truncated or
+//! trailing bytes), checksum mismatch, unknown tags and non-UTF-8 error
+//! strings are all distinct [`WireError`]s, and no allocation is sized
+//! from an unverified length (element counts are bounds-checked against
+//! the remaining bytes first).
+
+use super::protocol::{Command, Event, WorkerTask};
+
+/// Frame header: magic(2) + kind(1) + len(4) + crc(4).
+const HEADER: usize = 11;
+const MAGIC: [u8; 2] = *b"HC";
+
+/// Decode failure — each variant names what the frame got wrong.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// Fewer bytes than the header + declared payload length.
+    Truncated,
+    /// Leading bytes are not `b"HC"`.
+    BadMagic,
+    /// The frame's kind byte is not this type's kind.
+    BadKind(u8),
+    /// CRC-32 over kind + payload does not match the header.
+    BadChecksum,
+    /// Unknown enum tag inside the payload.
+    BadTag(u8),
+    /// Bytes left over after a complete decode.
+    Trailing,
+    /// A declared element count exceeds the bytes that remain.
+    BadLength,
+    /// A `WorkerLeft` error string is not valid UTF-8.
+    BadUtf8,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "truncated frame"),
+            WireError::BadMagic => write!(f, "bad magic"),
+            WireError::BadKind(k) => write!(f, "wrong frame kind {k}"),
+            WireError::BadChecksum => write!(f, "checksum mismatch"),
+            WireError::BadTag(t) => write!(f, "unknown tag {t}"),
+            WireError::Trailing => write!(f, "trailing bytes"),
+            WireError::BadLength => write!(f, "length exceeds frame"),
+            WireError::BadUtf8 => write!(f, "invalid utf-8"),
+        }
+    }
+}
+
+/// CRC-32 (IEEE 802.3, reflected 0xEDB88320) with a const-built table.
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+pub fn crc32(seed: u32, bytes: &[u8]) -> u32 {
+    let mut c = !seed;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Types with a canonical framed byte form.
+pub trait Wire: Sized {
+    /// Frame kind byte (0 = Command, 1 = Event).
+    const KIND: u8;
+    fn encode_payload(&self, out: &mut Vec<u8>);
+    fn decode_payload(cur: &mut Cursor<'_>) -> Result<Self, WireError>;
+
+    /// Messages that model an out-of-band infrastructure signal rather
+    /// than a data frame: a chaotic link may delay or duplicate them but
+    /// never silently drop or corrupt them (an exit-with-error notice is
+    /// the peer observing a connection reset, which lossy transport
+    /// cannot eat).
+    fn exempt_from_loss(&self) -> bool {
+        false
+    }
+
+    fn to_wire(&self) -> Vec<u8> {
+        let mut payload = Vec::new();
+        self.encode_payload(&mut payload);
+        let mut out = Vec::with_capacity(HEADER + payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.push(Self::KIND);
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        let mut crc = crc32(0, &[Self::KIND]);
+        crc = crc32(crc, &payload);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    fn from_wire(bytes: &[u8]) -> Result<Self, WireError> {
+        if bytes.len() < HEADER {
+            return Err(WireError::Truncated);
+        }
+        if bytes[0..2] != MAGIC {
+            return Err(WireError::BadMagic);
+        }
+        let kind = bytes[2];
+        if kind != Self::KIND {
+            return Err(WireError::BadKind(kind));
+        }
+        let len = u32::from_le_bytes(bytes[3..7].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[7..11].try_into().unwrap());
+        match (HEADER + len).cmp(&bytes.len()) {
+            std::cmp::Ordering::Greater => return Err(WireError::Truncated),
+            std::cmp::Ordering::Less => return Err(WireError::Trailing),
+            std::cmp::Ordering::Equal => {}
+        }
+        let payload = &bytes[HEADER..];
+        let mut want = crc32(0, &[kind]);
+        want = crc32(want, payload);
+        if want != crc {
+            return Err(WireError::BadChecksum);
+        }
+        let mut cur = Cursor { bytes: payload, pos: 0 };
+        let value = Self::decode_payload(&mut cur)?;
+        if cur.pos != payload.len() {
+            return Err(WireError::Trailing);
+        }
+        Ok(value)
+    }
+}
+
+/// Bounds-checked payload reader.
+pub struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.pos.checked_add(n).ok_or(WireError::BadLength)?;
+        if end > self.bytes.len() {
+            return Err(WireError::BadLength);
+        }
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize64(&mut self) -> Result<usize, WireError> {
+        usize::try_from(self.u64()?).map_err(|_| WireError::BadLength)
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Element count for `elem_size`-byte items, verified against the
+    /// remaining bytes before any allocation.
+    fn count(&mut self, elem_size: usize) -> Result<usize, WireError> {
+        let n = self.u32()? as usize;
+        let need = n.checked_mul(elem_size).ok_or(WireError::BadLength)?;
+        if self.pos + need > self.bytes.len() {
+            return Err(WireError::BadLength);
+        }
+        Ok(n)
+    }
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_tasks(out: &mut Vec<u8>, tasks: &[WorkerTask]) {
+    out.extend_from_slice(&(tasks.len() as u32).to_le_bytes());
+    for t in tasks {
+        put_u64(out, t.group as u64);
+        put_u64(out, t.rows.start as u64);
+        put_u64(out, t.rows.end as u64);
+    }
+}
+
+fn get_tasks(cur: &mut Cursor<'_>) -> Result<Vec<WorkerTask>, WireError> {
+    let n = cur.count(24)?;
+    let mut tasks = Vec::with_capacity(n);
+    for _ in 0..n {
+        let group = cur.usize64()?;
+        let start = cur.usize64()?;
+        let end = cur.usize64()?;
+        tasks.push(WorkerTask { group, rows: start..end });
+    }
+    Ok(tasks)
+}
+
+impl Wire for Command {
+    const KIND: u8 = 0;
+
+    fn encode_payload(&self, out: &mut Vec<u8>) {
+        match self {
+            Command::Assign { tasks } => {
+                out.push(0);
+                put_tasks(out, tasks);
+            }
+            Command::Reassign { tasks } => {
+                out.push(1);
+                put_tasks(out, tasks);
+            }
+            Command::Preempt => out.push(2),
+            Command::Shutdown => out.push(3),
+        }
+    }
+
+    fn decode_payload(cur: &mut Cursor<'_>) -> Result<Self, WireError> {
+        match cur.u8()? {
+            0 => Ok(Command::Assign { tasks: get_tasks(cur)? }),
+            1 => Ok(Command::Reassign { tasks: get_tasks(cur)? }),
+            2 => Ok(Command::Preempt),
+            3 => Ok(Command::Shutdown),
+            t => Err(WireError::BadTag(t)),
+        }
+    }
+}
+
+impl Wire for Event {
+    const KIND: u8 = 1;
+
+    fn exempt_from_loss(&self) -> bool {
+        matches!(self, Event::WorkerLeft { error: Some(_), .. })
+    }
+
+    fn encode_payload(&self, out: &mut Vec<u8>) {
+        match self {
+            Event::WorkerJoined { slot } => {
+                out.push(0);
+                put_u64(out, *slot as u64);
+            }
+            Event::SubtaskDone { slot, group, data, elapsed } => {
+                out.push(1);
+                put_u64(out, *slot as u64);
+                put_u64(out, *group as u64);
+                out.extend_from_slice(&elapsed.to_le_bytes());
+                match data {
+                    None => out.push(0),
+                    Some(d) => {
+                        out.push(1);
+                        out.extend_from_slice(&(d.len() as u32).to_le_bytes());
+                        for x in d {
+                            out.extend_from_slice(&x.to_le_bytes());
+                        }
+                    }
+                }
+            }
+            Event::WorkerLeft { slot, delivered, error } => {
+                out.push(2);
+                put_u64(out, *slot as u64);
+                put_u64(out, *delivered as u64);
+                match error {
+                    None => out.push(0),
+                    Some(e) => {
+                        out.push(1);
+                        out.extend_from_slice(&(e.len() as u32).to_le_bytes());
+                        out.extend_from_slice(e.as_bytes());
+                    }
+                }
+            }
+            Event::Decoded { decode_wall, max_rel_err } => {
+                out.push(3);
+                out.extend_from_slice(&decode_wall.to_le_bytes());
+                out.extend_from_slice(&max_rel_err.to_le_bytes());
+            }
+        }
+    }
+
+    fn decode_payload(cur: &mut Cursor<'_>) -> Result<Self, WireError> {
+        match cur.u8()? {
+            0 => Ok(Event::WorkerJoined { slot: cur.usize64()? }),
+            1 => {
+                let slot = cur.usize64()?;
+                let group = cur.usize64()?;
+                let elapsed = cur.f64()?;
+                let data = match cur.u8()? {
+                    0 => None,
+                    _ => {
+                        let n = cur.count(4)?;
+                        let mut d = Vec::with_capacity(n);
+                        for _ in 0..n {
+                            d.push(f32::from_le_bytes(cur.take(4)?.try_into().unwrap()));
+                        }
+                        Some(d)
+                    }
+                };
+                Ok(Event::SubtaskDone { slot, group, data, elapsed })
+            }
+            2 => {
+                let slot = cur.usize64()?;
+                let delivered = cur.usize64()?;
+                let error = match cur.u8()? {
+                    0 => None,
+                    _ => {
+                        let n = cur.count(1)?;
+                        let bytes = cur.take(n)?;
+                        Some(
+                            std::str::from_utf8(bytes)
+                                .map_err(|_| WireError::BadUtf8)?
+                                .to_string(),
+                        )
+                    }
+                };
+                Ok(Event::WorkerLeft { slot, delivered, error })
+            }
+            3 => Ok(Event::Decoded { decode_wall: cur.f64()?, max_rel_err: cur.f64()? }),
+            t => Err(WireError::BadTag(t)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{check, Gen};
+
+    fn arb_tasks(g: &mut Gen) -> Vec<WorkerTask> {
+        let n = g.usize_in(0, 6);
+        (0..n)
+            .map(|_| {
+                let start = g.usize_in(0, 1000);
+                WorkerTask { group: g.usize_in(0, 5000), rows: start..start + g.usize_in(0, 64) }
+            })
+            .collect()
+    }
+
+    fn arb_command(g: &mut Gen) -> Command {
+        match g.usize_in(0, 3) {
+            0 => Command::Assign { tasks: arb_tasks(g) },
+            1 => Command::Reassign { tasks: arb_tasks(g) },
+            2 => Command::Preempt,
+            _ => Command::Shutdown,
+        }
+    }
+
+    fn arb_event(g: &mut Gen) -> Event {
+        match g.usize_in(0, 3) {
+            0 => Event::WorkerJoined { slot: g.usize_in(0, 4096) },
+            1 => {
+                let n = g.usize_in(0, 32);
+                Event::SubtaskDone {
+                    slot: g.usize_in(0, 4096),
+                    group: g.usize_in(0, 5000),
+                    data: if g.bool() {
+                        Some(g.vec_f64(n, -1e6, 1e6).iter().map(|&x| x as f32).collect())
+                    } else {
+                        None
+                    },
+                    elapsed: g.f64_in(0.0, 10.0),
+                }
+            }
+            2 => Event::WorkerLeft {
+                slot: g.usize_in(0, 4096),
+                delivered: g.usize_in(0, 10_000),
+                error: if g.bool() {
+                    Some(format!("slot {} broke at {}", g.usize_in(0, 99), g.usize_in(0, 99)))
+                } else {
+                    None
+                },
+            },
+            _ => Event::Decoded {
+                decode_wall: g.f64_in(0.0, 5.0),
+                max_rel_err: g.f64_in(0.0, 1e-3),
+            },
+        }
+    }
+
+    #[test]
+    fn prop_command_round_trips_identically() {
+        check(200, |g| {
+            let cmd = arb_command(g);
+            match Command::from_wire(&cmd.to_wire()) {
+                Ok(back) if back == cmd => Ok(()),
+                Ok(back) => Err(format!("{back:?} != {cmd:?}")),
+                Err(e) => Err(format!("decode failed: {e}")),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_event_round_trips_identically() {
+        check(200, |g| {
+            let ev = arb_event(g);
+            match Event::from_wire(&ev.to_wire()) {
+                Ok(back) if back == ev => Ok(()),
+                Ok(back) => Err(format!("{back:?} != {ev:?}")),
+                Err(e) => Err(format!("decode failed: {e}")),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_every_single_bit_flip_is_rejected() {
+        // CRC-32 detects every single-bit error; flips outside the
+        // payload hit the magic/kind/length checks instead. Either way a
+        // one-bit corruption must never decode cleanly.
+        check(40, |g| {
+            let frame = arb_event(g).to_wire();
+            let bit = g.usize_in(0, frame.len() * 8 - 1);
+            let mut bad = frame.clone();
+            bad[bit / 8] ^= 1 << (bit % 8);
+            if Event::from_wire(&bad).is_err() {
+                Ok(())
+            } else {
+                Err(format!("bit {bit} flip decoded cleanly in {frame:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn every_bit_flip_of_one_frame_is_rejected_exhaustively() {
+        let ev = Event::SubtaskDone {
+            slot: 3,
+            group: 17,
+            data: Some(vec![1.5, -2.25, 0.0]),
+            elapsed: 0.125,
+        };
+        let frame = ev.to_wire();
+        for bit in 0..frame.len() * 8 {
+            let mut bad = frame.clone();
+            bad[bit / 8] ^= 1 << (bit % 8);
+            assert!(Event::from_wire(&bad).is_err(), "bit {bit} slipped through");
+        }
+    }
+
+    #[test]
+    fn prop_truncated_frames_error_without_panic() {
+        check(60, |g| {
+            let frame = arb_command(g).to_wire();
+            let cut = g.usize_in(0, frame.len() - 1);
+            if Command::from_wire(&frame[..cut]).is_err() {
+                Ok(())
+            } else {
+                Err(format!("prefix {cut} of {} decoded", frame.len()))
+            }
+        });
+    }
+
+    #[test]
+    fn trailing_bytes_and_wrong_kind_are_rejected() {
+        let mut frame = Command::Preempt.to_wire();
+        assert_eq!(Event::from_wire(&frame), Err(WireError::BadKind(0)));
+        frame.push(0);
+        assert_eq!(Command::from_wire(&frame), Err(WireError::Trailing));
+        let mut bad_magic = Command::Shutdown.to_wire();
+        bad_magic[0] = b'X';
+        assert_eq!(Command::from_wire(&bad_magic), Err(WireError::BadMagic));
+        assert_eq!(Command::from_wire(&[]), Err(WireError::Truncated));
+    }
+
+    #[test]
+    fn crc32_matches_known_vector() {
+        // The classic IEEE check value.
+        assert_eq!(crc32(0, b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn payload_count_cannot_oversize_allocation() {
+        // A frame whose task count claims more elements than the payload
+        // holds must fail at the bounds check, not allocate.
+        let mut payload = vec![0u8]; // tag = Assign
+        payload.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        out.push(Command::KIND);
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        let mut crc = crc32(0, &[Command::KIND]);
+        crc = crc32(crc, &payload);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out.extend_from_slice(&payload);
+        assert_eq!(Command::from_wire(&out), Err(WireError::BadLength));
+    }
+}

@@ -91,6 +91,7 @@ impl JobConfig {
             elasticity: ClusterElasticity::Fixed,
             preempt_after_first: self.preempt_after_first,
             backfill: true,
+            chaos: None,
             seed: self.seed,
         }
     }

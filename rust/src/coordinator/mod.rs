@@ -25,9 +25,10 @@ pub mod recovery;
 pub mod service;
 
 pub use cluster::{
-    run_cluster_job, BackendSpec, ClusterBackend, ClusterConfig, ClusterElasticity,
-    ClusterReport, Command, Event, NativeGemm, RecoveryLedger, SimulatedLatency,
-    SpeedSource, WorkerBackend,
+    run_cluster_job, BackendSpec, ChaosConfig, ChaosLink, ClusterBackend,
+    ClusterConfig, ClusterElasticity, ClusterReport, Command, CrashSpec, Event,
+    FaultRates, Link, MpscLink, NativeGemm, Partition, RecoveryLedger,
+    SimulatedLatency, SpeedSource, Wire, WireError, WorkerBackend,
 };
 pub use master::{run_job, ExecBackend, JobConfig, JobReport, SchemeConfig};
 pub use service::{serve, ServiceConfig, ServiceReport};

@@ -39,7 +39,7 @@ pub enum Backend {
 }
 
 /// One unit of work: a contiguous row range of the worker's encoded task.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct WorkerTask {
     /// Recovery group (set index for CEC/MLCEC, global id for BICEC).
     pub group: usize,

@@ -102,6 +102,16 @@ pub struct TrialOutcome {
     /// the finish time (statics).
     pub completions: u64,
     pub max_rel_err: f64,
+    /// Robustness counters (cluster engine under `[chaos]`; 0 elsewhere):
+    /// injected worker crashes the reactor survived as unplanned leaves.
+    pub crashes_absorbed: usize,
+    /// Speculative re-dispatches spent (queue re-sends, respawned workers,
+    /// planner deficit drafts).
+    pub retries: usize,
+    /// Duplicate `SubtaskDone` deliveries the idempotence gate discarded.
+    pub duplicates_suppressed: usize,
+    /// Frames the wire checksum rejected at decode.
+    pub corruptions_dropped: usize,
 }
 
 impl TrialOutcome {
@@ -166,9 +176,11 @@ impl Outcome {
     }
 
     /// One row per scheme: trial counts and the headline summaries (the
-    /// `hcec run <scenario.toml>` output).
+    /// `hcec run <scenario.toml>` output). Cluster outcomes append the
+    /// robustness counters (summed over successful trials), so chaos runs
+    /// report what the reactor absorbed in the same table.
     pub fn table(&self) -> crate::metrics::Table {
-        let mut t = crate::metrics::Table::new(&[
+        let mut cols = vec![
             "scheme",
             "ok",
             "fail",
@@ -179,11 +191,16 @@ impl Outcome {
             "waste_mean",
             "encode_mean_s",
             "rel_err_max",
-        ]);
+        ];
+        let robust = self.engine == Engine::Cluster;
+        if robust {
+            cols.extend_from_slice(&["crashes", "retries", "dups_sup", "corrupt_drop"]);
+        }
+        let mut t = crate::metrics::Table::new(&cols);
         for s in &self.per_scheme {
             let fin = s.summary(Metric::Finishing);
             let rel = s.ok_trials().map(|t| t.max_rel_err).fold(0.0, f64::max);
-            t.row(vec![
+            let mut row = vec![
                 s.scheme.clone(),
                 (s.trials.len() - s.failures()).to_string(),
                 s.failures().to_string(),
@@ -194,9 +211,33 @@ impl Outcome {
                 format!("{:.4}", s.mean(Metric::TransitionWaste)),
                 format!("{:.4}", s.mean(Metric::Encode)),
                 format!("{:.2e}", rel),
-            ]);
+            ];
+            if robust {
+                let sum = |f: fn(&TrialOutcome) -> usize| -> usize {
+                    s.ok_trials().map(f).sum()
+                };
+                row.push(sum(|t| t.crashes_absorbed).to_string());
+                row.push(sum(|t| t.retries).to_string());
+                row.push(sum(|t| t.duplicates_suppressed).to_string());
+                row.push(sum(|t| t.corruptions_dropped).to_string());
+            }
+            t.row(row);
         }
         t
+    }
+
+    /// Robustness counters summed over every scheme's successful trials:
+    /// `(crashes_absorbed, retries, duplicates_suppressed,
+    /// corruptions_dropped)`. All zero outside chaos-injected cluster runs.
+    pub fn robustness_totals(&self) -> (usize, usize, usize, usize) {
+        let mut totals = (0, 0, 0, 0);
+        for t in self.per_scheme.iter().flat_map(|s| s.ok_trials()) {
+            totals.0 += t.crashes_absorbed;
+            totals.1 += t.retries;
+            totals.2 += t.duplicates_suppressed;
+            totals.3 += t.corruptions_dropped;
+        }
+        totals
     }
 }
 
@@ -234,6 +275,10 @@ fn run_statics(sc: &Scenario) -> Vec<SchemeOutcome> {
                     reallocations: 0,
                     completions: r.completions_total,
                     max_rel_err: 0.0,
+                    crashes_absorbed: 0,
+                    retries: 0,
+                    duplicates_suppressed: 0,
+                    corruptions_dropped: 0,
                 })
             })
             .collect();
@@ -322,6 +367,10 @@ fn trace_trial(r: crate::sim::TraceOutcome) -> TrialOutcome {
         reallocations: r.reallocations,
         completions: r.completions,
         max_rel_err: 0.0,
+        crashes_absorbed: 0,
+        retries: 0,
+        duplicates_suppressed: 0,
+        corruptions_dropped: 0,
     }
 }
 
@@ -378,6 +427,18 @@ fn run_cluster(sc: &Scenario) -> Vec<SchemeOutcome> {
                             ))
                         }
                     };
+                    // Fault streams get the same trial derivation as the
+                    // job seed: trial 0 runs the declared chaos seed
+                    // verbatim, later trials fold the index in so every
+                    // trial sees an independent (but reproducible) fault
+                    // schedule.
+                    let chaos = sc.chaos.as_ref().map(|c| {
+                        let mut c = c.clone();
+                        if trial > 0 {
+                            c.seed = fold_in(c.seed, trial as u64);
+                        }
+                        c
+                    });
                     let cfg = ClusterConfig {
                         job: sc.job,
                         scheme: spec.clone(),
@@ -389,6 +450,7 @@ fn run_cluster(sc: &Scenario) -> Vec<SchemeOutcome> {
                         elasticity,
                         preempt_after_first: sc.cluster.preempt_after_first,
                         backfill,
+                        chaos,
                         seed,
                     };
                     // Elastic runs have legitimate per-trial failures
@@ -417,6 +479,10 @@ fn cluster_trial(r: ClusterReport) -> TrialOutcome {
         reallocations: r.reallocations + r.workers_preempted,
         completions: r.completions_received as u64,
         max_rel_err: r.max_rel_err as f64,
+        crashes_absorbed: r.crashes_absorbed,
+        retries: r.retries,
+        duplicates_suppressed: r.duplicates_suppressed,
+        corruptions_dropped: r.corruptions_dropped,
     }
 }
 
@@ -457,6 +523,10 @@ fn run_coordinator(sc: &Scenario) -> Result<Vec<SchemeOutcome>, String> {
                 reallocations: report.workers_preempted,
                 completions: report.completions_received as u64,
                 max_rel_err: report.max_rel_err as f64,
+                crashes_absorbed: 0,
+                retries: 0,
+                duplicates_suppressed: 0,
+                corruptions_dropped: 0,
             }));
         }
         per_scheme.push(SchemeOutcome { scheme: spec.name().to_string(), trials });
@@ -706,6 +776,45 @@ mod tests {
         let trial = out.per_scheme[0].ok_trials().next().unwrap();
         assert!(trial.max_rel_err < 1e-3, "err {}", trial.max_rel_err);
         assert!(trial.finishing_time() > 0.0);
+    }
+
+    #[test]
+    fn cluster_chaos_scenario_reports_robustness_counters() {
+        use crate::coordinator::{ChaosConfig, CrashSpec, FaultRates};
+        use crate::scenario::{ClusterBackendSpec, ClusterSpec};
+        let sc = Scenario::builder("cluster_chaos")
+            .engine(Engine::Cluster)
+            .job(JobSpec::new(240, 240, 240))
+            .fleet(8, 8)
+            .schemes(vec![SchemeConfig::Bicec { k: 20, s_per_worker: 4 }])
+            .speed(SpeedSpec::Uniform)
+            .cluster(ClusterSpec {
+                backend: ClusterBackendSpec::SimulatedLatency,
+                time_scale: 0.002,
+                preempt_after_first: 0,
+                backfill: BackfillSpec::On,
+            })
+            .chaos(ChaosConfig {
+                seed: 5,
+                evt: FaultRates { duplicate: 0.5, ..Default::default() },
+                crash: vec![CrashSpec { slot: 7, after: 2 }],
+                ..Default::default()
+            })
+            .trials(1)
+            .seed(9)
+            .build()
+            .unwrap();
+        let out = sc.run().unwrap();
+        assert_eq!(out.per_scheme[0].failures(), 0, "{:?}", out.per_scheme[0].trials);
+        let (crashes, _retries, dups, _corrupt) = out.robustness_totals();
+        assert_eq!(crashes, 1, "the injected crash must be absorbed");
+        assert!(dups >= 1, "a 50% duplicate rate over >= 20 events must repeat one");
+        let rendered = out.table().render();
+        assert!(rendered.contains("crashes"), "{rendered}");
+        assert!(rendered.contains("dups_sup"), "{rendered}");
+        // Non-cluster outcomes keep the legacy column set.
+        let plain = small_statics().run().unwrap().table().render();
+        assert!(!plain.contains("crashes"), "{plain}");
     }
 
     #[test]

@@ -33,8 +33,9 @@ mod toml_io;
 
 pub use engine::{Engine, Outcome, SchemeOutcome, TrialOutcome};
 pub use spec::{
-    BackfillSpec, ClusterBackendSpec, ClusterSpec, CoordinatorSpec, ElasticitySpec,
-    Metric, SchemeConfig, SeedMode, SpeedSpec,
+    BackfillSpec, ChaosConfig, ClusterBackendSpec, ClusterSpec, CoordinatorSpec,
+    CrashSpec, ElasticitySpec, FaultRates, Metric, Partition, SchemeConfig, SeedMode,
+    SpeedSpec,
 };
 
 use crate::config::ExperimentConfig;
@@ -70,6 +71,10 @@ pub struct Scenario {
     pub threads: Option<usize>,
     pub coordinator: CoordinatorSpec,
     pub cluster: ClusterSpec,
+    /// Transport fault injection (`[chaos]`): cluster engine only. `None`
+    /// runs quiet verbatim links; `Some` wraps every command/event channel
+    /// in a seeded [`ChaosLink`](crate::coordinator::ChaosLink).
+    pub chaos: Option<ChaosConfig>,
 }
 
 impl Scenario {
@@ -234,6 +239,16 @@ impl Scenario {
         }
         if self.engine == Engine::Cluster {
             self.validate_cluster()?;
+        }
+        if let Some(chaos) = &self.chaos {
+            if self.engine != Engine::Cluster {
+                return Err(format!(
+                    "[chaos] fault injection only applies to engine \"cluster\" \
+                     (engine is {:?})",
+                    self.engine.as_str()
+                ));
+            }
+            chaos.validate(self.n_max).map_err(|e| format!("chaos: {e}"))?;
         }
         Ok(())
     }
@@ -560,6 +575,7 @@ impl ScenarioBuilder {
                 threads: None,
                 coordinator: CoordinatorSpec::default(),
                 cluster: ClusterSpec::default(),
+                chaos: None,
             },
         }
     }
@@ -649,6 +665,11 @@ impl ScenarioBuilder {
 
     pub fn cluster(mut self, spec: ClusterSpec) -> Self {
         self.inner.cluster = spec;
+        self
+    }
+
+    pub fn chaos(mut self, cfg: ChaosConfig) -> Self {
+        self.inner.chaos = Some(cfg);
         self
     }
 
@@ -868,6 +889,41 @@ mod tests {
             .elasticity(churn(2))
             .seed_mode(SeedMode::PerTrial)
             .trials(2)
+            .build();
+        assert!(ok.is_ok(), "{ok:?}");
+    }
+
+    #[test]
+    fn chaos_is_cluster_only_and_delegates_rate_checks() {
+        use crate::coordinator::{ChaosConfig, FaultRates};
+        // On statics, a chaos table is a configuration error.
+        let err = base().chaos(ChaosConfig::default()).build().unwrap_err();
+        assert!(err.contains("only applies to engine \"cluster\""), "{err}");
+        // On cluster, bad rates are rejected with the chaos prefix.
+        let bad = ChaosConfig {
+            evt: FaultRates { drop: 1.5, ..Default::default() },
+            ..Default::default()
+        };
+        let err = Scenario::builder("cl")
+            .engine(Engine::Cluster)
+            .fleet(8, 8)
+            .schemes(vec![SchemeConfig::Cec { k: 2, s: 4 }])
+            .trials(1)
+            .chaos(bad)
+            .build()
+            .unwrap_err();
+        assert!(err.contains("chaos:"), "{err}");
+        assert!(err.contains("evt.drop"), "{err}");
+        // A sane chaos config on the cluster engine validates.
+        let ok = Scenario::builder("cl")
+            .engine(Engine::Cluster)
+            .fleet(8, 8)
+            .schemes(vec![SchemeConfig::Cec { k: 2, s: 4 }])
+            .trials(1)
+            .chaos(ChaosConfig {
+                evt: FaultRates { drop: 0.05, ..Default::default() },
+                ..Default::default()
+            })
             .build();
         assert!(ok.is_ok(), "{ok:?}");
     }

@@ -10,6 +10,12 @@ use crate::coordinator::ExecBackend;
 use crate::sim::{Reassign, SpeedModel};
 use crate::tas::{Bicec, Cec, DLevelPolicy, HeteroCec, Mlcec, Scheme};
 
+/// The chaos axis (`[chaos]` in scenario TOML): the fault model the cluster
+/// engine injects into its transports. The types live with the transport
+/// layer (`coordinator::cluster::link`); re-exported here because the
+/// scenario surface is where experiments configure them.
+pub use crate::coordinator::{ChaosConfig, CrashSpec, FaultRates, Partition};
+
 /// Scheme selection for a run (the parsed form of the CLI/config options).
 /// Moved here from `coordinator::master` (still re-exported there): the
 /// scheme axis belongs to the experiment surface, not one engine.

@@ -55,6 +55,26 @@
 //! time_scale = 1.0              # simulated_latency only: wall s per model s
 //! preempt_after_first = 0
 //! backfill = "on"               # on | off | compare (two rows per scheme)
+//!
+//! [chaos]                       # cluster engine only; omit = quiet links
+//! seed = 0                      # fault-stream seed (independent of job seed)
+//! ack_timeout = 0.25            # stall watchdog, scaled wall seconds
+//! retry_cap = 64                # speculative re-dispatch budget
+//! crash_slots = [5]             # parallel arrays: kill slot 5 after it
+//! crash_after = [1]             #   delivers 1 completion
+//! # partition_slots = [2, 3]    # optional window of total packet loss
+//! # partition_from = 0.1
+//! # partition_to = 0.4
+//!
+//! [chaos.cmd]                   # master -> worker fault rates
+//! drop = 0.0
+//! duplicate = 0.0
+//! corrupt = 0.0
+//! delay_max = 0.0               # uniform delivery delay in [0, delay_max]
+//!
+//! [chaos.evt]                   # worker -> master fault rates (same keys)
+//! drop = 0.05
+//! corrupt = 0.02
 //! ```
 //!
 //! Unknown keys are an error — scenario-file typos must not silently run a
@@ -68,8 +88,9 @@ use crate::workload::JobSpec;
 
 use super::engine::Engine;
 use super::spec::{
-    BackfillSpec, ClusterBackendSpec, ClusterSpec, CoordinatorSpec, ElasticitySpec,
-    SchemeConfig, SeedMode, SpeedSpec,
+    BackfillSpec, ChaosConfig, ClusterBackendSpec, ClusterSpec, CoordinatorSpec,
+    CrashSpec, ElasticitySpec, FaultRates, Partition, SchemeConfig, SeedMode,
+    SpeedSpec,
 };
 use super::Scenario;
 
@@ -177,8 +198,43 @@ impl Scenario {
                 "cluster.backfill",
                 Value::Str(self.cluster.backfill.as_str().into()),
             );
+            if let Some(chaos) = &self.chaos {
+                write_chaos(&mut doc, chaos);
+            }
         }
         doc
+    }
+}
+
+fn write_chaos(doc: &mut Doc, c: &ChaosConfig) {
+    // Seeds are u64; TOML integers are i64 — two's complement, like
+    // scenario.seed.
+    doc.insert("chaos.seed", Value::Int(c.seed as i64));
+    doc.insert("chaos.ack_timeout", Value::Float(c.ack_timeout));
+    doc.insert("chaos.retry_cap", Value::Int(c.retry_cap as i64));
+    for (dir, rates) in [("cmd", &c.cmd), ("evt", &c.evt)] {
+        doc.insert(&format!("chaos.{dir}.drop"), Value::Float(rates.drop));
+        doc.insert(&format!("chaos.{dir}.duplicate"), Value::Float(rates.duplicate));
+        doc.insert(&format!("chaos.{dir}.corrupt"), Value::Float(rates.corrupt));
+        doc.insert(&format!("chaos.{dir}.delay_max"), Value::Float(rates.delay_max));
+    }
+    if !c.crash.is_empty() {
+        doc.insert(
+            "chaos.crash_slots",
+            Value::Array(c.crash.iter().map(|cr| Value::Int(cr.slot as i64)).collect()),
+        );
+        doc.insert(
+            "chaos.crash_after",
+            Value::Array(c.crash.iter().map(|cr| Value::Int(cr.after as i64)).collect()),
+        );
+    }
+    if let Some(p) = &c.partition {
+        doc.insert(
+            "chaos.partition_slots",
+            Value::Array(p.slots.iter().map(|&s| Value::Int(s as i64)).collect()),
+        );
+        doc.insert("chaos.partition_from", Value::Float(p.from));
+        doc.insert("chaos.partition_to", Value::Float(p.to));
     }
 }
 
@@ -380,6 +436,19 @@ impl<'a> Reader<'a> {
             .collect()
     }
 
+    fn usize_array_at(&mut self, path: &str) -> Result<Option<Vec<usize>>, String> {
+        match self.get(path) {
+            None => Ok(None),
+            Some(v) => v
+                .as_array()
+                .ok_or(format!("{path}: expected array"))?
+                .iter()
+                .map(|v| v.as_usize().ok_or(format!("{path}: expected integers >= 0")))
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+
     fn scenario(&mut self) -> Result<Scenario, String> {
         let name = self.req_str("scenario.name")?.to_string();
         let engine = Engine::parse(self.req_str("scenario.engine")?)?;
@@ -491,6 +560,9 @@ impl<'a> Reader<'a> {
                     BackfillSpec::parse(b).map_err(|e| format!("cluster.backfill: {e}"))?;
             }
             builder = builder.cluster(cl);
+            if let Some(chaos) = self.chaos_section()? {
+                builder = builder.chaos(chaos);
+            }
         }
         // Skip builder validation here: from_doc validates after the
         // unknown-key check so typos are reported before semantic errors.
@@ -554,6 +626,86 @@ impl<'a> Reader<'a> {
                 "{prefix}.kind: unknown scheme {other:?} (cec|mlcec|bicec|hetero)"
             )),
         }
+    }
+
+    /// The `[chaos]` table: absent entirely means no fault injection;
+    /// present keys override [`ChaosConfig::default`]. Semantic checks
+    /// (rates in range, crash slots in bounds) run in
+    /// `Scenario::validate` via `ChaosConfig::validate`.
+    fn chaos_section(&mut self) -> Result<Option<ChaosConfig>, String> {
+        if !self.doc.keys().any(|k| k.starts_with("chaos.")) {
+            return Ok(None);
+        }
+        let mut c = ChaosConfig::default();
+        if let Some(v) = self.get("chaos.seed") {
+            c.seed = v.as_int().ok_or("chaos.seed: expected integer")? as u64;
+        }
+        if let Some(t) = self.f64_at("chaos.ack_timeout")? {
+            c.ack_timeout = t;
+        }
+        if let Some(r) = self.usize_at("chaos.retry_cap")? {
+            c.retry_cap = r;
+        }
+        c.cmd = self.fault_rates("cmd")?;
+        c.evt = self.fault_rates("evt")?;
+        let slots = self.usize_array_at("chaos.crash_slots")?;
+        let after = self.usize_array_at("chaos.crash_after")?;
+        c.crash = match (slots, after) {
+            (None, None) => Vec::new(),
+            (Some(slots), Some(after)) => {
+                if slots.len() != after.len() {
+                    return Err(format!(
+                        "chaos.crash_slots ({} entries) and chaos.crash_after ({} \
+                         entries) must be parallel arrays",
+                        slots.len(),
+                        after.len()
+                    ));
+                }
+                slots
+                    .into_iter()
+                    .zip(after)
+                    .map(|(slot, after)| CrashSpec { slot, after })
+                    .collect()
+            }
+            _ => {
+                return Err(
+                    "chaos.crash_slots and chaos.crash_after must be given together"
+                        .into(),
+                )
+            }
+        };
+        let p_slots = self.usize_array_at("chaos.partition_slots")?;
+        let p_from = self.f64_at("chaos.partition_from")?;
+        let p_to = self.f64_at("chaos.partition_to")?;
+        c.partition = match (p_slots, p_from, p_to) {
+            (None, None, None) => None,
+            (Some(slots), Some(from), Some(to)) => Some(Partition { slots, from, to }),
+            _ => {
+                return Err(
+                    "chaos.partition_slots, chaos.partition_from and \
+                     chaos.partition_to must be given together"
+                        .into(),
+                )
+            }
+        };
+        Ok(Some(c))
+    }
+
+    fn fault_rates(&mut self, dir: &str) -> Result<FaultRates, String> {
+        let mut r = FaultRates::default();
+        if let Some(v) = self.f64_at(&format!("chaos.{dir}.drop"))? {
+            r.drop = v;
+        }
+        if let Some(v) = self.f64_at(&format!("chaos.{dir}.duplicate"))? {
+            r.duplicate = v;
+        }
+        if let Some(v) = self.f64_at(&format!("chaos.{dir}.corrupt"))? {
+            r.corrupt = v;
+        }
+        if let Some(v) = self.f64_at(&format!("chaos.{dir}.delay_max"))? {
+            r.delay_max = v;
+        }
+        Ok(r)
     }
 
     fn speed(&mut self) -> Result<SpeedSpec, String> {
@@ -873,6 +1025,97 @@ time_scale = 0.01
         let err = Scenario::from_toml(&bad).unwrap_err();
         assert!(err.contains("cluster.backfill"), "{err}");
         assert!(err.contains("on|off|compare"), "{err}");
+    }
+
+    #[test]
+    fn chaos_scenario_round_trips() {
+        use crate::coordinator::{ChaosConfig, CrashSpec, FaultRates, Partition};
+        let sc = ScenarioBuilder::new("chaos")
+            .engine(Engine::Cluster)
+            .fleet(8, 8)
+            .job(JobSpec::new(240, 240, 240))
+            .schemes(vec![SchemeConfig::Cec { k: 2, s: 4 }])
+            .speed(SpeedSpec::Uniform)
+            .trials(1)
+            .chaos(ChaosConfig {
+                seed: 11,
+                cmd: FaultRates { drop: 0.02, ..Default::default() },
+                evt: FaultRates {
+                    drop: 0.05,
+                    duplicate: 0.1,
+                    corrupt: 0.02,
+                    delay_max: 0.01,
+                },
+                crash: vec![CrashSpec { slot: 5, after: 1 }],
+                partition: Some(Partition { slots: vec![2, 3], from: 0.1, to: 0.4 }),
+                ack_timeout: 0.5,
+                retry_cap: 128,
+            })
+            .build()
+            .unwrap();
+        let text = sc.to_toml();
+        assert!(text.contains("crash_slots"), "{text}");
+        assert!(text.contains("partition_from"), "{text}");
+        let back = Scenario::from_toml(&text).unwrap();
+        assert_eq!(back.to_doc(), sc.to_doc());
+        assert_eq!(back.chaos, sc.chaos);
+    }
+
+    #[test]
+    fn chaos_defaults_fill_unstated_keys() {
+        use crate::coordinator::ChaosConfig;
+        let text = r#"
+[scenario]
+name = "cl"
+engine = "cluster"
+trials = 1
+seed = 1
+schemes = ["cec"]
+
+[job]
+u = 240
+w = 240
+v = 240
+
+[fleet]
+n_max = 8
+n_workers = 8
+
+[scheme.cec]
+kind = "cec"
+k = 2
+s = 4
+
+[speed]
+kind = "uniform"
+
+[chaos.evt]
+drop = 0.05
+"#;
+        let sc = Scenario::from_toml(text).unwrap();
+        let chaos = sc.chaos.expect("chaos table present");
+        assert_eq!(chaos.evt.drop, 0.05);
+        assert_eq!(chaos.ack_timeout, ChaosConfig::default().ack_timeout);
+        assert_eq!(chaos.retry_cap, ChaosConfig::default().retry_cap);
+        assert!(chaos.crash.is_empty());
+        assert!(chaos.cmd.is_quiet());
+        // Half a crash spec is named, not silently ignored.
+        let bad = format!("{text}\n[chaos]\ncrash_slots = [5]\n");
+        let err = Scenario::from_toml(&bad).unwrap_err();
+        assert!(err.contains("given together"), "{err}");
+        // Mismatched parallel arrays are named.
+        let bad =
+            format!("{text}\n[chaos]\ncrash_slots = [5, 6]\ncrash_after = [1]\n");
+        let err = Scenario::from_toml(&bad).unwrap_err();
+        assert!(err.contains("parallel arrays"), "{err}");
+    }
+
+    #[test]
+    fn chaos_section_rejected_for_other_engines() {
+        let text = format!("{FIG2A}\n[chaos]\nseed = 3\n");
+        let err = Scenario::from_toml(&text).unwrap_err();
+        assert!(err.contains("unknown scenario key"), "{err}");
+        assert!(err.contains("chaos.seed"), "{err}");
     }
 
     #[test]

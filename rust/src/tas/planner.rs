@@ -295,6 +295,63 @@ impl FrozenPlanner {
         plan
     }
 
+    /// Speculative re-dispatch for the cluster's chaos watchdog: draft
+    /// live holders for every incomplete set whose credited + live-holder
+    /// count has fallen below K. Transport losses can strand a set this
+    /// way with no elastic event firing (a worker exits believing its
+    /// queue done while its completions were dropped in flight). The
+    /// eligibility rules are the leave-backfill ones: a candidate must not
+    /// already queue the set, must not have delivered it (the MDS
+    /// distinct-slot constraint), and drained-queue holders are skipped
+    /// (they are about to exit). Unrescuable sets are *not* reported as
+    /// deficits — the caller keeps waiting (a respawned slot may yet
+    /// supply them); the plan only carries the drafts it could place.
+    /// Global/BICEC work is slot-bound, so the plan is always empty there.
+    pub fn plan_redispatch(
+        &self,
+        holders: &[HolderState],
+        live_holders: &[usize],
+        ledger: &dyn GroupState,
+        delivered: &HashSet<(usize, usize)>,
+    ) -> FrozenPlan {
+        let RecoveryRule::PerSet { sets, k } = self.rule else {
+            return FrozenPlan::default();
+        };
+        let measure = transition::frozen_item_measure(sets);
+        let mut queues: Vec<Vec<usize>> =
+            holders.iter().map(|h| h.queue.clone()).collect();
+        let mut plan = FrozenPlan::default();
+        for g in 0..sets {
+            if ledger.group_complete(g) {
+                continue;
+            }
+            let mut live = live_holders[g];
+            while ledger.have(g) + live < k {
+                let cand = (0..holders.len())
+                    .filter(|&i| {
+                        !holders[i].queue.is_empty()
+                            && !queues[i].contains(&g)
+                            && !delivered.contains(&(holders[i].slot, g))
+                    })
+                    .min_by(|&a, &b| {
+                        let ea = (queues[a].len() + 1) as f64 * holders[a].mult;
+                        let eb = (queues[b].len() + 1) as f64 * holders[b].mult;
+                        ea.partial_cmp(&eb)
+                            .unwrap()
+                            .then(holders[a].slot.cmp(&holders[b].slot))
+                    });
+                let Some(i) = cand else { break };
+                queues[i].push(g);
+                live += 1;
+                plan.backfills += 1;
+                plan.waste += measure;
+            }
+        }
+        plan.updates = queue_diff(holders, queues);
+        plan.reallocated = plan.backfills > 0;
+        plan
+    }
+
     /// Plan a join: the TAS answer for `joiner`'s slot under the frozen
     /// geometry, plus the survivor deltas it implies (sheds off
     /// strictly-slower loaded holders, ledger re-filtering).
@@ -555,6 +612,44 @@ mod tests {
         let plan = planner.plan_leave(&[5], &holders, &live, &ledger, &delivered);
         assert_eq!(plan.deficits, vec![5], "{plan:?}");
         assert_eq!(plan.backfills, 0);
+    }
+
+    #[test]
+    fn redispatch_drafts_holders_for_underheld_sets_only() {
+        // Set 5 was stranded by transport losses: nobody queues it and
+        // nothing was credited. Sets at or above threshold draw nothing.
+        let holders = vec![
+            HolderState { slot: 0, queue: vec![1, 2], mult: 1.0 },
+            HolderState { slot: 1, queue: vec![2, 3], mult: 1.0 },
+        ];
+        let live = vec![0, 1, 2, 1, 0, 0];
+        let ledger = FakeLedger { have: vec![2, 2, 1, 1, 2, 0], k: 2 };
+        let planner = per_set_planner(6, 2, 4, true);
+        let plan =
+            planner.plan_redispatch(&holders, &live, &ledger, &HashSet::new());
+        assert_eq!(plan.backfills, 2, "{plan:?}");
+        for up in &plan.updates {
+            let before = &holders.iter().find(|h| h.slot == up.slot).unwrap().queue;
+            assert_eq!(&up.queue[..before.len()], &before[..]);
+            assert_eq!(&up.queue[before.len()..], &[5]);
+        }
+        // The MDS distinct-slot constraint holds: a slot that already
+        // delivered set 5 is ineligible, capping the drafts at one.
+        let mut delivered = HashSet::new();
+        delivered.insert((0usize, 5usize));
+        let partial = planner.plan_redispatch(&holders, &live, &ledger, &delivered);
+        assert_eq!(partial.backfills, 1, "{partial:?}");
+        assert_eq!(partial.updates, vec![QueueUpdate { slot: 1, queue: vec![2, 3, 5] }]);
+        // Slot-bound BICEC work can never be re-dispatched cross-slot.
+        let bicec = FrozenPlanner {
+            rule: RecoveryRule::Global { k: 4 },
+            s_cap: 2,
+            bicec_s_per: Some(2),
+            backfill: true,
+        };
+        let none = bicec.plan_redispatch(&holders, &live, &ledger, &HashSet::new());
+        assert_eq!(none.backfills, 0);
+        assert!(none.updates.is_empty());
     }
 
     #[test]

@@ -1,0 +1,106 @@
+//! Integration acceptance for the chaos-injected transport layer (PR 7):
+//! the checked-in chaos example survives message loss, wire corruption and
+//! an injected crash end to end with a bit-correct decode, and the
+//! robustness counters surface through the scenario table.
+
+use hcec::coordinator::{ChaosConfig, CrashSpec, FaultRates};
+use hcec::scenario::{
+    ClusterBackendSpec, ClusterSpec, Engine, Scenario, SchemeConfig, SpeedSpec,
+};
+use hcec::workload::JobSpec;
+
+fn example_path() -> String {
+    format!(
+        "{}/../examples/scenario_cluster_chaos.toml",
+        env!("CARGO_MANIFEST_DIR")
+    )
+}
+
+/// The checked-in example parses, validates, and round-trips through the
+/// Doc unchanged — the chaos table included.
+#[test]
+fn chaos_example_parses_and_round_trips() {
+    let sc = Scenario::from_file(&example_path()).unwrap_or_else(|e| panic!("{e}"));
+    assert_eq!(sc.engine, Engine::Cluster);
+    let chaos = sc.chaos.as_ref().expect("example declares a [chaos] table");
+    assert!(chaos.evt.drop > 0.0, "the example must inject drops");
+    assert!(chaos.evt.corrupt > 0.0, "the example must inject corruption");
+    assert_eq!(chaos.crash, vec![CrashSpec { slot: 7, after: 1 }]);
+    let back = Scenario::from_toml(&sc.to_toml()).unwrap();
+    assert_eq!(back.to_doc(), sc.to_doc());
+    assert_eq!(back.chaos, sc.chaos);
+}
+
+/// Acceptance: the example runs to completion under drop + corruption +
+/// one crash, decodes bit-correctly, and reports the absorbed crash in the
+/// outcome (the CI chaos smoke asserts the same through the CLI).
+#[test]
+fn chaos_example_survives_with_bit_correct_decode() {
+    let sc = Scenario::from_file(&example_path()).unwrap();
+    let out = sc.run().unwrap();
+    assert_eq!(out.per_scheme.len(), 1);
+    let s = &out.per_scheme[0];
+    assert_eq!(s.failures(), 0, "{:?}", s.trials);
+    let trial = s.ok_trials().next().unwrap();
+    assert!(
+        trial.max_rel_err < 1e-3,
+        "decode must stay bit-correct under chaos: rel err {}",
+        trial.max_rel_err
+    );
+    let (crashes, _retries, _dups, _corrupt) = out.robustness_totals();
+    assert_eq!(crashes, 1, "the injected crash of worker 7 must be absorbed");
+    // The counters flow into the rendered scenario table.
+    let rendered = out.table().render();
+    assert!(rendered.contains("crashes"), "{rendered}");
+    assert!(rendered.contains("corrupt_drop"), "{rendered}");
+}
+
+fn sim_scenario(name: &str, chaos: Option<ChaosConfig>) -> Scenario {
+    let mut b = Scenario::builder(name)
+        .engine(Engine::Cluster)
+        .job(JobSpec::new(240, 240, 240))
+        .fleet(8, 8)
+        .schemes(vec![SchemeConfig::Bicec { k: 20, s_per_worker: 4 }])
+        .speed(SpeedSpec::Uniform)
+        .cluster(ClusterSpec {
+            backend: ClusterBackendSpec::SimulatedLatency,
+            time_scale: 0.002,
+            preempt_after_first: 0,
+            backfill: hcec::scenario::BackfillSpec::On,
+        })
+        .trials(1)
+        .seed(13);
+    if let Some(c) = chaos {
+        b = b.chaos(c);
+    }
+    b.build().unwrap()
+}
+
+/// A chaotic run and its chaos-free twin both recover exactly on the
+/// simulated backend (which ships no bytes, so rel err is exactly 0.0 —
+/// recovery arithmetic is unaffected by the fault layer), and the chaotic
+/// run's robust counters are deterministic across repeats.
+#[test]
+fn chaotic_and_quiet_twins_agree_on_recovery() {
+    let quiet = sim_scenario("quiet", None).run().unwrap();
+    let chaos_cfg = ChaosConfig {
+        seed: 3,
+        evt: FaultRates { duplicate: 0.4, ..Default::default() },
+        crash: vec![CrashSpec { slot: 6, after: 2 }],
+        ..Default::default()
+    };
+    let a = sim_scenario("chaotic", Some(chaos_cfg.clone())).run().unwrap();
+    let b = sim_scenario("chaotic", Some(chaos_cfg)).run().unwrap();
+    for out in [&quiet, &a, &b] {
+        assert_eq!(out.per_scheme[0].failures(), 0, "{:?}", out.per_scheme[0].trials);
+        let t = out.per_scheme[0].ok_trials().next().unwrap();
+        assert_eq!(t.max_rel_err, 0.0, "simulated backend ships no bytes");
+    }
+    assert_eq!(quiet.robustness_totals(), (0, 0, 0, 0), "quiet links count nothing");
+    assert_eq!(a.robustness_totals().0, 1, "crash absorbed");
+    assert_eq!(
+        a.robustness_totals().0,
+        b.robustness_totals().0,
+        "crash absorption is deterministic per seed"
+    );
+}

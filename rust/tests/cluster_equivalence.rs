@@ -204,6 +204,7 @@ fn des_cluster_waste_parity_on_swap_churn() {
         elasticity: ClusterElasticity::Trace(trace),
         preempt_after_first: 0,
         backfill: true,
+        chaos: None,
         seed: 1,
     };
     let cluster = run_cluster_job(&cfg).unwrap();
@@ -258,6 +259,7 @@ fn des_cluster_waste_parity_bicec_zero() {
         elasticity: ClusterElasticity::Trace(trace),
         preempt_after_first: 0,
         backfill: true,
+        chaos: None,
         seed: 1,
     };
     let cluster = run_cluster_job(&cfg).unwrap();
