@@ -172,6 +172,23 @@ fn run_scenario_file(path: &str, args: &Args) -> Result<(), String> {
              duplicates_suppressed={dups} corruptions_dropped={corrupt}"
         );
     }
+    // One greppable SLO line per scheme for service runs (the service
+    // smoke job asserts on it).
+    if scenario.engine == Engine::Service {
+        for s in &out.per_scheme {
+            let stats: Vec<_> = s.ok_trials().filter_map(|t| t.service).collect();
+            let n = stats.len().max(1) as f64;
+            let p99 = stats.iter().map(|v| v.latency_p99).sum::<f64>() / n;
+            let util = stats.iter().map(|v| v.utilisation).sum::<f64>() / n;
+            let jobs: usize = stats.iter().map(|v| v.jobs).sum();
+            let preempts: usize = stats.iter().map(|v| v.preemptions).sum();
+            println!(
+                "service: scheme={} jobs={jobs} p99={p99:.4} util={util:.3} \
+                 preemptions={preempts}",
+                s.scheme
+            );
+        }
+    }
     // Elastic engines record per-trial failures instead of aborting, but a
     // scheme with ZERO surviving trials means the scenario tested nothing —
     // exit nonzero so the CI smoke cannot stay green on a wholesale
@@ -194,7 +211,7 @@ fn run_scenario_file(path: &str, args: &Args) -> Result<(), String> {
     // Real-execution engines decode a real product: keep the legacy
     // verification gate so a numerics regression cannot exit 0 (CI smokes
     // this path). The simulated cluster backend reports 0.0 and passes.
-    if matches!(scenario.engine, Engine::Coordinator | Engine::Cluster)
+    if matches!(scenario.engine, Engine::Coordinator | Engine::Cluster | Engine::Service)
         && out.max_rel_err() > 1e-2
     {
         return Err(format!(
@@ -234,6 +251,36 @@ pub fn cluster(args: &Args) -> Result<(), String> {
     emit(
         &figures::cluster_table(&cfg, &ns, rate, trials, scale, backfill),
         "cluster_nsweep",
+        args,
+    )
+}
+
+/// `hcec service`: the multi-tenant SLO sweep — the paper's scheme trio
+/// as closed-loop job streams over one shared fleet, at rising
+/// concurrency. Real scheduler + per-tenant reactors with
+/// `SimulatedLatency` subtasks; reports latency percentiles, fleet
+/// utilisation and preemptions per (concurrency, scheme).
+pub fn service(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let n = args.parse_flag::<usize>("n")?.unwrap_or(40);
+    let concs = args
+        .parse_list::<usize>("conc")?
+        .unwrap_or_else(|| figures::SERVICE_CONCURRENCIES.to_vec());
+    if let Some(&bad) = concs.iter().find(|&&c| c == 0) {
+        return Err(format!("--conc {bad} must be >= 1"));
+    }
+    let jobs = args.parse_flag::<usize>("jobs")?.unwrap_or(4);
+    if jobs == 0 {
+        return Err("--jobs must be >= 1".into());
+    }
+    let scale = args.parse_flag::<f64>("scale")?.unwrap_or(0.05);
+    if !(scale > 0.0 && scale.is_finite()) {
+        return Err(format!("--scale {scale} must be finite and positive"));
+    }
+    let trials = args.parse_flag::<usize>("trials")?.unwrap_or(2);
+    emit(
+        &figures::service_table(&cfg, n, &concs, jobs, trials, scale),
+        "service_slo_sweep",
         args,
     )
 }

@@ -39,6 +39,9 @@ fn known_flags(command: &str) -> Option<&'static [&'static str]> {
             Some(&["config", "trials", "seed", "csv", "ns", "rate", "scale", "backfill"])
         }
         "reassign" => Some(&["config", "trials", "seed", "csv", "rate"]),
+        "service" => {
+            Some(&["config", "trials", "seed", "csv", "n", "conc", "jobs", "scale"])
+        }
         "serve" => Some(&["scheme", "backend", "jobs"]),
         "visualize" | "calibrate" | "help" => Some(&[]),
         _ => None,
@@ -73,6 +76,7 @@ pub fn dispatch(argv: &[String]) -> i32 {
         Some("cluster") => commands::cluster(&args),
         Some("dlevels") => commands::dlevels(&args),
         Some("serve") => commands::serve(&args),
+        Some("service") => commands::service(&args),
         Some("hierarchy") => commands::hierarchy(&args),
         Some("hetero") => commands::hetero(&args),
         Some("reassign") => commands::reassign(&args),
@@ -99,9 +103,11 @@ pub fn usage() -> &'static str {
 USAGE:
   hcec run <scenario.toml> [--csv DIR]
       Execute a scenario file on its declared engine (statics | trace |
-      coordinator) and print the unified outcome table. See
-      examples/scenario_*.toml and rust/EXPERIMENTS.md §Scenario-API for
-      the schema.
+      coordinator | cluster | service) and print the unified outcome
+      table. Service scenarios add latency SLO percentiles and fleet
+      utilisation columns plus a greppable `service:` line per scheme.
+      See examples/scenario_*.toml and rust/EXPERIMENTS.md §Scenario-API
+      for the schema.
   hcec run [--scheme cec|mlcec|bicec] [--backend native|pjrt] [--n N]
            [--preempt P] [--seed S]
       Execute a real coded job on the threaded pool (PJRT artifacts on the
@@ -136,6 +142,11 @@ USAGE:
   hcec serve [--jobs J] [--scheme cec|mlcec|bicec] [--backend native|pjrt]
       Serve a stream of coded jobs on an elastic pool; report latency
       and throughput.
+  hcec service [--n N] [--conc 1,2,4] [--jobs J] [--trials T] [--scale S]
+      Multi-tenant SLO sweep: closed-loop job streams over one shared
+      fleet at rising concurrency (real scheduler + per-tenant reactors,
+      SimulatedLatency subtasks). Reports latency p50/p95/p99, fleet
+      utilisation and preemptions per (concurrency, scheme).
   hcec visualize
       ASCII Fig. 1 allocation grids at N = 8, 6, 4.
   hcec calibrate

@@ -205,9 +205,39 @@ const TIMELINE_CAP: usize = 256;
 /// N = 2560 fleets stay cheap; numeric workers get room for gemm frames.
 const SIM_STACK_KIB: usize = 256;
 const NUMERIC_STACK_KIB: usize = 4096;
+/// Scheduler control-feed poll cadence: with an external `ctrl` channel the
+/// reactor never blocks longer than this, so fleet-level preemptions land
+/// within a couple of milliseconds even when every worker is mid-subtask.
+const CTRL_POLL: Duration = Duration::from_millis(2);
 
 /// Run one coded job end to end on the event-driven cluster.
 pub fn run_cluster_job(cfg: &ClusterConfig) -> Result<ClusterReport> {
+    run_cluster_job_with(cfg, None)
+}
+
+/// Like [`run_cluster_job`], but the reactor additionally drains `ctrl` — a
+/// live elastic-event feed from an external scheduler (the multi-tenant
+/// service layer, `coordinator::tenancy`). Control events use the same
+/// `Leave`/`Join` vocabulary as a pre-baked trace: a fleet-level preemption
+/// or departure arrives as `Leave(slot)` (a planned leave, backfilled via
+/// the `FrozenPlanner`), a granted slot as `Join(slot)`; slot indices are in
+/// this job's local `0..n_max` space. Event `time` stamps are informational
+/// (timeline messages only) — a control event applies as soon as it is
+/// drained, joining the same due batch as trace events so a preemption plus
+/// a rescue join delivered together are judged as one transition. With no
+/// messages ever sent, behaviour and numerics are identical to
+/// `run_cluster_job`.
+pub fn run_cluster_job_controlled(
+    cfg: &ClusterConfig,
+    ctrl: Receiver<ElasticEvent>,
+) -> Result<ClusterReport> {
+    run_cluster_job_with(cfg, Some(ctrl))
+}
+
+fn run_cluster_job_with(
+    cfg: &ClusterConfig,
+    ctrl: Option<Receiver<ElasticEvent>>,
+) -> Result<ClusterReport> {
     let scheme = cfg.scheme.build(cfg.n_max);
     let n = cfg.n_workers;
     ensure!(
@@ -381,6 +411,8 @@ pub fn run_cluster_job(cfg: &ClusterConfig) -> Result<ClusterReport> {
         enc,
         events,
         ev_idx: 0,
+        ctrl,
+        ctrl_count: 0,
         time_scale,
         n_initial: n,
         preempt_after_first: cfg.preempt_after_first,
@@ -553,6 +585,11 @@ struct Reactor {
     enc: Option<EncodeCtx>,
     events: Vec<ElasticEvent>,
     ev_idx: usize,
+    /// External control feed (multi-tenant scheduler); `None` = the classic
+    /// single-job reactor driven only by the pre-baked trace.
+    ctrl: Option<Receiver<ElasticEvent>>,
+    /// Control events drained so far (timeline event numbering only).
+    ctrl_count: usize,
     /// Wall seconds per trace-time second.
     time_scale: f64,
     n_initial: usize,
@@ -671,11 +708,32 @@ impl Reactor {
                 let ev = self.events[idx];
                 self.apply_event(ev, idx)?;
             }
+            // Drain scheduler control events (multi-tenant service): they
+            // join the same due batch, so a preemption and a backfill join
+            // delivered together are judged as one transition.
+            let mut ctrl_batch = Vec::new();
+            if let Some(rx) = self.ctrl.as_ref() {
+                while let Ok(ev) = rx.try_recv() {
+                    ctrl_batch.push(ev);
+                }
+            }
+            for ev in ctrl_batch {
+                let idx = self.events.len() + self.ctrl_count;
+                self.ctrl_count += 1;
+                self.apply_event(ev, idx)?;
+            }
             // Departure deficits are judged only after the whole due batch
             // has applied, so a simultaneous join can rescue a leave (the
             // DES batches same-timestamp events into one transition; this
             // is the reactor's equivalent).
             self.check_deficits()?;
+            // Under external control a drained pool cannot self-heal: the
+            // scheduler only grants joins to tenants with live workers, so
+            // fail deterministically instead of polling forever.
+            if self.ctrl.is_some() && self.live == 0 && self.ev_idx >= self.events.len()
+            {
+                bail!("pool drained before the recovery rule was met");
+            }
             // Wait for the next worker event, elastic deadline, or (chaos
             // only) the stall watchdog: no event for `ack_timeout` seconds
             // triggers a self-healing sweep over unacked work.
@@ -685,10 +743,8 @@ impl Reactor {
                 .chaos
                 .as_ref()
                 .map(|rig| self.last_progress + Duration::from_secs_f64(rig.cfg.ack_timeout));
-            let wake = match (elastic_due, watchdog_due) {
-                (Some(a), Some(b)) => Some(a.min(b)),
-                (a, b) => a.or(b),
-            };
+            let ctrl_due = self.ctrl.is_some().then(|| Instant::now() + CTRL_POLL);
+            let wake = [elastic_due, watchdog_due, ctrl_due].into_iter().flatten().min();
             let msg = match wake {
                 Some(due) => {
                     let now = Instant::now();

@@ -11,6 +11,13 @@
 //! answer for their slot, and pending queues are re-filtered against the
 //! ledger (`Command::Reassign`).
 //!
+//! One layer up sits the **multi-tenant service** (`tenancy`): a scheduler
+//! owning a shared fleet of slots, running one reactor per admitted job
+//! concurrently over `run_cluster_job_controlled`'s live control channel —
+//! admission/placement via a capacity ledger, cross-job re-planning (a
+//! fleet leave is a backfill problem for every affected tenant), priority
+//! preemption as planned leaves, and SLO latency accounting.
+//!
 //! `master::run_job` (one fixed-fleet job) and `service::serve` (a job
 //! stream with between-job elasticity) are thin facades over the core,
 //! preserving their historical `JobReport`/`ServiceReport` contracts.
@@ -23,14 +30,19 @@ pub mod master;
 pub mod pool;
 pub mod recovery;
 pub mod service;
+pub mod tenancy;
 
 pub use cluster::{
-    run_cluster_job, BackendSpec, ChaosConfig, ChaosLink, ClusterBackend,
-    ClusterConfig, ClusterElasticity, ClusterReport, Command, CrashSpec, Event,
-    FaultRates, Link, MpscLink, NativeGemm, Partition, RecoveryLedger,
-    SimulatedLatency, SpeedSource, Wire, WireError, WorkerBackend,
+    run_cluster_job, run_cluster_job_controlled, BackendSpec, ChaosConfig,
+    ChaosLink, ClusterBackend, ClusterConfig, ClusterElasticity, ClusterReport,
+    Command, CrashSpec, Event, FaultRates, Link, MpscLink, NativeGemm, Partition,
+    RecoveryLedger, SimulatedLatency, SpeedSource, Wire, WireError, WorkerBackend,
 };
 pub use master::{run_job, ExecBackend, JobConfig, JobReport, SchemeConfig};
 pub use service::{serve, ServiceConfig, ServiceReport};
 pub use pool::{WorkerHandle, WorkerMsg, WorkerTask};
 pub use recovery::RecoveryTracker;
+pub use tenancy::{
+    run_tenant_service, FleetLedger, JobOutcome, JobRequest, ServiceLoad,
+    TenancyConfig, TenancyReport, TenantSpeed,
+};

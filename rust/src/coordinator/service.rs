@@ -1,26 +1,32 @@
-//! Job-stream service: the paper's system as a long-running master — a
-//! thin facade over the event-driven cluster core.
+//! Job-stream service: the paper's system as a long-running master — now a
+//! thin facade over the multi-tenant scheduler (`coordinator::tenancy`).
 //!
 //! A sequence of coded matrix-product jobs is served on a pool whose
 //! availability evolves between jobs per an `ElasticTrace` (spot-market
-//! style; event times are job indices here). Each job runs on whatever
-//! workers are available at its start via `run_cluster_job` — the same
-//! core that absorbs *mid-job* churn under `Engine::Cluster`; this layer
-//! keeps the job-granularity model and the historical
-//! `ServiceConfig`/`ServiceReport` shapes.
+//! style; event times are job indices here). The historical
+//! `ServiceConfig`/`ServiceReport` contract is preserved exactly: the
+//! trace walk below computes each job's worker count and rejects
+//! below-threshold traces with the offending job and event named, then the
+//! jobs run one at a time (closed loop, concurrency 1) through
+//! `run_tenant_service` over a fleet of `n_max` unit-speed slots — the
+//! same scheduler that runs tenants concurrently under `Engine::Service`.
 //!
-//! Leave events that would drop the pool below the scheme's recovery
-//! threshold are rejected up front with the offending job and event named
-//! — the alternative is an underflowed `active` count or a job that can
-//! never recover.
+//! Per-job seeds fold the job index into the template seed (`fold_in`),
+//! so adjacent template seeds no longer produce overlapping job streams
+//! (the old `wrapping_add(j)` made seed 5's job 1 collide with seed 6's
+//! job 0).
 
 use anyhow::Result;
 
 use crate::metrics::Summary;
+use crate::rng::fold_in;
 use crate::sim::trace::{ElasticTrace, EventKind};
 
-use super::cluster::run_cluster_job;
-use super::master::{JobConfig, JobReport};
+use super::cluster::{ClusterBackend, SpeedSource};
+use super::master::{ExecBackend, JobConfig, JobReport};
+use super::tenancy::{
+    run_tenant_service, JobRequest, ServiceLoad, TenancyConfig, TenantSpeed,
+};
 
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
@@ -55,11 +61,23 @@ impl ServiceReport {
     }
 }
 
-/// Run the service loop.
-pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
-    cfg.trace
-        .validate()
-        .map_err(|e| anyhow::anyhow!("trace: {e}"))?;
+/// Per-job seed stream: job 0 inherits the template seed verbatim (the
+/// repo-wide trial-0 convention), later jobs fold the index in. Folding —
+/// not adding — keeps adjacent template seeds from overlapping: with the
+/// old `wrapping_add(j)`, seed 5's job 1 was seed 6's job 0.
+pub(crate) fn job_seed(base: u64, j: usize) -> u64 {
+    if j == 0 {
+        base
+    } else {
+        fold_in(base, j as u64)
+    }
+}
+
+/// Walk the trace and compute the pool size at each job start, rejecting
+/// traces that dip below the scheme's recovery threshold with the job and
+/// event named — the alternative is an underflowed `active` count or a job
+/// that can never recover.
+fn workers_per_job(cfg: &ServiceConfig) -> Result<Vec<usize>> {
     let threshold = cfg.job_template.scheme.min_workers();
     anyhow::ensure!(
         cfg.trace.n_initial >= threshold,
@@ -68,8 +86,6 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
         cfg.trace.n_initial,
         cfg.job_template.scheme.name()
     );
-    let t0 = std::time::Instant::now();
-    let mut per_job = Vec::with_capacity(cfg.jobs);
     let mut workers_at_job = Vec::with_capacity(cfg.jobs);
     let mut active = cfg.trace.n_initial;
     let mut ev_idx = 0;
@@ -110,22 +126,71 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
                 cfg.job_template.scheme.name()
             );
         }
-        let mut job_cfg = cfg.job_template.clone();
-        job_cfg.n_workers = active.min(job_cfg.n_max);
-        job_cfg.seed = cfg.job_template.seed.wrapping_add(j as u64);
-        // Thin facade: each job is one fixed-fleet run of the cluster core.
-        let report = run_cluster_job(&job_cfg.to_cluster())
-            .map(|r| JobReport::from_cluster(&r))?;
-        anyhow::ensure!(report.recovered, "job {j} failed to recover");
-        per_job.push(report);
         workers_at_job.push(active);
     }
-    Ok(ServiceReport { per_job, workers_at_job, total_wall: t0.elapsed().as_secs_f64() })
+    Ok(workers_at_job)
+}
+
+/// Run the service loop.
+pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
+    cfg.trace
+        .validate()
+        .map_err(|e| anyhow::anyhow!("trace: {e}"))?;
+    let workers_at_job = workers_per_job(cfg)?;
+    if workers_at_job.is_empty() {
+        return Ok(ServiceReport {
+            per_job: Vec::new(),
+            workers_at_job,
+            total_wall: 0.0,
+        });
+    }
+    let template = &cfg.job_template;
+    let requests: Vec<JobRequest> = workers_at_job
+        .iter()
+        .enumerate()
+        .map(|(j, &active)| JobRequest {
+            name: format!("job-{j}"),
+            job: template.job,
+            scheme: template.scheme.clone(),
+            n_max: template.n_max,
+            want: active.min(template.n_max),
+            priority: 0,
+            backend: match template.backend {
+                ExecBackend::Native => ClusterBackend::Native,
+                ExecBackend::Pjrt => ClusterBackend::Pjrt,
+            },
+            speed: TenantSpeed::Source(match &template.speed_model {
+                Some(m) => SpeedSource::Model(*m),
+                None => SpeedSource::Uniform,
+            }),
+            cost: crate::sim::CostModel::paper_default(),
+            backfill: true,
+            preempt_after_first: template.preempt_after_first,
+            seed: job_seed(template.seed, j),
+        })
+        .collect();
+    // One tenant at a time over a unit-speed fleet sized to the template:
+    // the between-job elasticity is already folded into each job's `want`.
+    let fleet = TenancyConfig::fixed(vec![1.0; template.n_max]);
+    let rep = run_tenant_service(&fleet, ServiceLoad::closed(requests, 1))
+        .map_err(|e| anyhow::anyhow!("service scheduler: {e}"))?;
+    let mut per_job = Vec::with_capacity(rep.per_job.len());
+    for o in &rep.per_job {
+        let cluster = o
+            .result
+            .as_ref()
+            .map_err(|e| anyhow::anyhow!("job {}: {e}", o.id))?;
+        let report = JobReport::from_cluster(cluster);
+        anyhow::ensure!(report.recovered, "job {} failed to recover", o.id);
+        per_job.push(report);
+    }
+    Ok(ServiceReport { per_job, workers_at_job, total_wall: rep.total_wall })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::cluster::run_cluster_job;
     use crate::coordinator::{ExecBackend, SchemeConfig};
     use crate::sim::trace::ElasticEvent;
     use crate::workload::JobSpec;
@@ -178,6 +243,47 @@ mod tests {
         // Just structural: both jobs ran and verified independently.
         assert!(report.per_job[0].max_rel_err < 1e-2);
         assert!(report.per_job[1].max_rel_err < 1e-2);
+    }
+
+    #[test]
+    fn adjacent_template_seeds_do_not_collide() {
+        // Regression: with `wrapping_add`, seed 5's job 1 == seed 6's job 0,
+        // so neighbouring service runs shared whole job streams.
+        assert_eq!(job_seed(5, 0), 5, "job 0 must inherit the seed verbatim");
+        assert_ne!(job_seed(5, 1), job_seed(6, 0));
+        assert_ne!(job_seed(5, 2), job_seed(6, 1));
+        assert_ne!(job_seed(5, 1), job_seed(5, 2));
+    }
+
+    #[test]
+    fn serve_matches_direct_cluster_runs() {
+        // The facade must be *equivalent* to looping run_cluster_job with
+        // the same per-job worker counts and seeds. CEC duplicates sets
+        // bit-identically across workers, so decode — hence max_rel_err —
+        // is deterministic regardless of completion races.
+        let trace = ElasticTrace {
+            n_max: 8,
+            n_initial: 8,
+            events: vec![ElasticEvent { time: 0.5, kind: EventKind::Leave(7) }],
+        };
+        let mut cfg = quick_service(2, trace);
+        cfg.job_template.scheme = SchemeConfig::Cec { k: 2, s: 4 };
+        let report = serve(&cfg).unwrap();
+        assert_eq!(report.workers_at_job, vec![8, 7]);
+        for (j, served) in report.per_job.iter().enumerate() {
+            let mut job_cfg = cfg.job_template.clone();
+            job_cfg.n_workers = report.workers_at_job[j].min(job_cfg.n_max);
+            job_cfg.seed = job_seed(cfg.job_template.seed, j);
+            let direct = JobReport::from_cluster(
+                &run_cluster_job(&job_cfg.to_cluster()).unwrap(),
+            );
+            assert_eq!(served.scheme, direct.scheme);
+            assert_eq!(served.recovered, direct.recovered);
+            assert_eq!(served.completions_used, direct.completions_used);
+            assert_eq!(served.max_rel_err, direct.max_rel_err, "job {j}");
+            assert_eq!(served.transition_waste, direct.transition_waste);
+            assert_eq!(served.reallocations, direct.reallocations);
+        }
     }
 
     #[test]

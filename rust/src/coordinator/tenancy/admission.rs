@@ -1,0 +1,550 @@
+//! Admission and placement over the shared fleet: the capacity ledger
+//! (which job leases which worker slot), the priority admission queue, and
+//! the preemption planner that carves slots from low-priority tenants to
+//! admit a high-priority one.
+//!
+//! Everything here is pure bookkeeping — no threads, no channels — so the
+//! scheduler invariants (no double lease, conservation across
+//! preempt/backfill, priority ordering) are property-tested directly.
+
+/// Index of an admitted job, assigned in submission order.
+pub type JobId = usize;
+
+/// One worker slot of the shared fleet.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SlotState {
+    /// Straggler multiplier (1.0 = nominal speed, larger = slower); used
+    /// for speed-aware placement: leases hand out the fastest free slots,
+    /// preemption reclaims a victim's slowest ones.
+    pub mult: f64,
+    /// Tenant currently holding the slot, if any.
+    pub lease: Option<JobId>,
+    /// Fleet-level liveness: a fleet `Leave` marks the slot dead; only a
+    /// fleet `Join` brings it back.
+    pub alive: bool,
+}
+
+/// Capacity ledger: the single source of truth for slot ownership.
+#[derive(Clone, Debug)]
+pub struct FleetLedger {
+    slots: Vec<SlotState>,
+}
+
+impl FleetLedger {
+    pub fn new(mults: Vec<f64>) -> Self {
+        let slots = mults
+            .into_iter()
+            .map(|mult| SlotState { mult, lease: None, alive: true })
+            .collect();
+        Self { slots }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn mult(&self, slot: usize) -> f64 {
+        self.slots[slot].mult
+    }
+
+    pub fn owner(&self, slot: usize) -> Option<JobId> {
+        self.slots[slot].lease
+    }
+
+    pub fn is_alive(&self, slot: usize) -> bool {
+        self.slots[slot].alive
+    }
+
+    /// Free (alive, unleased) slots, fastest first; index breaks ties so
+    /// placement is deterministic.
+    pub fn free_slots(&self) -> Vec<usize> {
+        let mut free: Vec<usize> = (0..self.slots.len())
+            .filter(|&i| self.slots[i].alive && self.slots[i].lease.is_none())
+            .collect();
+        free.sort_by(|&a, &b| {
+            self.slots[a]
+                .mult
+                .partial_cmp(&self.slots[b].mult)
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        free
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| s.alive && s.lease.is_none())
+            .count()
+    }
+
+    pub fn n_alive(&self) -> usize {
+        self.slots.iter().filter(|s| s.alive).count()
+    }
+
+    /// Slots currently leased to some tenant (busy slot-seconds accrue on
+    /// exactly these).
+    pub fn n_leased(&self) -> usize {
+        self.slots.iter().filter(|s| s.lease.is_some()).count()
+    }
+
+    /// Lease the `n` fastest free slots to `job`. Errs with the number of
+    /// free slots if fewer than `n` are available (nothing is leased).
+    pub fn lease(&mut self, job: JobId, n: usize) -> Result<Vec<usize>, usize> {
+        let free = self.free_slots();
+        if free.len() < n {
+            return Err(free.len());
+        }
+        let taken: Vec<usize> = free.into_iter().take(n).collect();
+        for &slot in &taken {
+            self.slots[slot].lease = Some(job);
+        }
+        Ok(taken)
+    }
+
+    /// Lease one specific slot (join hand-off to a chosen tenant).
+    pub fn lease_slot(&mut self, job: JobId, slot: usize) -> Result<(), String> {
+        let s = &mut self.slots[slot];
+        if !s.alive {
+            return Err(format!("slot {slot} is dead"));
+        }
+        if let Some(holder) = s.lease {
+            return Err(format!("slot {slot} already leased to job {holder}"));
+        }
+        s.lease = Some(job);
+        Ok(())
+    }
+
+    /// Return a slot to the free pool. Errs if `job` is not the holder —
+    /// a double release is a scheduler bug, never silent.
+    pub fn release(&mut self, job: JobId, slot: usize) -> Result<(), String> {
+        match self.slots[slot].lease {
+            Some(holder) if holder == job => {
+                self.slots[slot].lease = None;
+                Ok(())
+            }
+            Some(holder) => Err(format!(
+                "job {job} releasing slot {slot} held by job {holder}"
+            )),
+            None => Err(format!("job {job} releasing unleased slot {slot}")),
+        }
+    }
+
+    /// Release every slot `job` still holds (job completion); returns them.
+    pub fn release_all(&mut self, job: JobId) -> Vec<usize> {
+        let mut freed = Vec::new();
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            if s.lease == Some(job) {
+                s.lease = None;
+                freed.push(i);
+            }
+        }
+        freed
+    }
+
+    /// Fleet-level departure: the slot is gone until a fleet join revives
+    /// it. Returns the tenant that was holding it, if any (the scheduler
+    /// forwards the leave to that tenant's reactor).
+    pub fn kill(&mut self, slot: usize) -> Option<JobId> {
+        let s = &mut self.slots[slot];
+        s.alive = false;
+        s.lease.take()
+    }
+
+    /// Fleet-level arrival: revive a dead slot. Returns false if it was
+    /// already alive (duplicate join — ignored).
+    pub fn revive(&mut self, slot: usize) -> bool {
+        let s = &mut self.slots[slot];
+        if s.alive {
+            return false;
+        }
+        s.alive = true;
+        true
+    }
+
+    /// Slots currently held by `job`.
+    pub fn held_by(&self, job: JobId) -> Vec<usize> {
+        (0..self.slots.len())
+            .filter(|&i| self.slots[i].lease == Some(job))
+            .collect()
+    }
+}
+
+/// A job waiting for admission.
+#[derive(Clone, Debug)]
+pub struct QueuedJob<T> {
+    /// Larger = more important; ties broken FIFO by `seq`.
+    pub priority: u8,
+    /// Submission order, globally unique.
+    pub seq: u64,
+    pub payload: T,
+}
+
+/// Priority admission queue: `pop` order is priority descending, then
+/// submission order ascending (FIFO within a priority class).
+#[derive(Clone, Debug, Default)]
+pub struct AdmissionQueue<T> {
+    items: Vec<QueuedJob<T>>,
+}
+
+impl<T> AdmissionQueue<T> {
+    pub fn new() -> Self {
+        Self { items: Vec::new() }
+    }
+
+    pub fn push(&mut self, priority: u8, seq: u64, payload: T) {
+        self.items.push(QueuedJob { priority, seq, payload });
+        // Stable order: priority desc, seq asc. The queue stays tiny
+        // (bounded by in-flight submissions), so re-sorting is fine.
+        self.items
+            .sort_by(|a, b| b.priority.cmp(&a.priority).then(a.seq.cmp(&b.seq)));
+    }
+
+    pub fn peek(&self) -> Option<&QueuedJob<T>> {
+        self.items.first()
+    }
+
+    pub fn pop(&mut self) -> Option<QueuedJob<T>> {
+        if self.items.is_empty() {
+            None
+        } else {
+            Some(self.items.remove(0))
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+/// A running tenant as the preemption planner sees it.
+#[derive(Clone, Debug)]
+pub struct VictimView {
+    pub job: JobId,
+    pub priority: u8,
+    pub seq: u64,
+    /// Slots the tenant currently holds, any order.
+    pub held: Vec<usize>,
+    /// Floor the tenant must keep to stay recoverable mid-job
+    /// (`min_active_mid_job` of its scheme).
+    pub min_keep: usize,
+}
+
+/// Plan which slots to preempt so that `needed` more slots become free.
+/// Victims are drained lowest priority first (FIFO later within a class —
+/// the most recently admitted equal-priority job yields first), and within
+/// a victim its *slowest* slots go first (`mult` descending), so the
+/// surviving allocation is the speed-aware one. No victim is taken below
+/// its `min_keep` floor, and only strictly lower-priority tenants are
+/// eligible. Returns `None` if the demand cannot be met — the caller
+/// leaves the queue untouched.
+pub fn plan_preemption(
+    ledger: &FleetLedger,
+    victims: &[VictimView],
+    requester_priority: u8,
+    needed: usize,
+) -> Option<Vec<(JobId, usize)>> {
+    if needed == 0 {
+        return Some(Vec::new());
+    }
+    let mut eligible: Vec<&VictimView> = victims
+        .iter()
+        .filter(|v| v.priority < requester_priority)
+        .collect();
+    // Lowest priority drained first; within a class the newest admission
+    // yields first (it has had the least time to make progress).
+    eligible.sort_by(|a, b| a.priority.cmp(&b.priority).then(b.seq.cmp(&a.seq)));
+    let mut plan = Vec::new();
+    for v in eligible {
+        if plan.len() >= needed {
+            break;
+        }
+        let yieldable = v.held.len().saturating_sub(v.min_keep);
+        if yieldable == 0 {
+            continue;
+        }
+        let mut slots = v.held.clone();
+        // Slowest first: give up the stragglers, keep the fast slots.
+        slots.sort_by(|&a, &b| {
+            ledger
+                .mult(b)
+                .partial_cmp(&ledger.mult(a))
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        for slot in slots.into_iter().take(yieldable) {
+            if plan.len() >= needed {
+                break;
+            }
+            plan.push((v.job, slot));
+        }
+    }
+    if plan.len() >= needed {
+        Some(plan)
+    } else {
+        None
+    }
+}
+
+/// Pick the tenant a fleet join should be offered to: the largest relative
+/// deficit `(want - have) / want` wins; ties break priority descending,
+/// then submission order. Tenants at or above `want`, or with no local slot
+/// left to bind (`can_accept == false`), are skipped. Returns `None` when
+/// nobody needs the slot — it stays in the free pool for admission.
+pub fn pick_join_recipient(
+    tenants: &[(JobId, usize, usize, u8, u64, bool)],
+) -> Option<JobId> {
+    tenants
+        .iter()
+        .filter(|&&(_, have, want, _, _, can_accept)| can_accept && have < want)
+        .max_by(|a, b| {
+            let da = (a.2 - a.1) as f64 / a.2.max(1) as f64;
+            let db = (b.2 - b.1) as f64 / b.2.max(1) as f64;
+            da.partial_cmp(&db)
+                .unwrap()
+                .then(a.3.cmp(&b.3))
+                // Oldest submission wins ties: b.seq > a.seq must make `a`
+                // the max, so compare reversed.
+                .then(b.4.cmp(&a.4))
+        })
+        .map(|t| t.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    #[test]
+    fn lease_prefers_fast_slots_and_is_exclusive() {
+        let mut led = FleetLedger::new(vec![2.0, 1.0, 1.5, 1.0]);
+        let a = led.lease(0, 2).unwrap();
+        assert_eq!(a, vec![1, 3], "fastest (lowest-mult) slots first");
+        let b = led.lease(1, 2).unwrap();
+        assert_eq!(b, vec![2, 0]);
+        assert_eq!(led.lease(2, 1), Err(0));
+        led.release(0, 1).unwrap();
+        assert_eq!(led.lease(2, 1).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn release_rejects_wrong_owner_and_double_release() {
+        let mut led = FleetLedger::new(vec![1.0; 3]);
+        led.lease(7, 2).unwrap();
+        assert!(led.release(8, 0).unwrap_err().contains("held by job 7"));
+        led.release(7, 0).unwrap();
+        assert!(led.release(7, 0).unwrap_err().contains("unleased"));
+    }
+
+    #[test]
+    fn kill_and_revive_track_fleet_membership() {
+        let mut led = FleetLedger::new(vec![1.0; 4]);
+        led.lease(3, 4).unwrap();
+        assert_eq!(led.kill(2), Some(3));
+        assert_eq!(led.n_alive(), 3);
+        assert_eq!(led.held_by(3), vec![0, 1, 3]);
+        // Dead slots are not leasable until revived.
+        assert_eq!(led.lease(4, 1), Err(0));
+        assert!(led.revive(2));
+        assert!(!led.revive(2), "duplicate join is a no-op");
+        assert_eq!(led.lease(4, 1).unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn admission_queue_orders_by_priority_then_fifo() {
+        let mut q = AdmissionQueue::new();
+        q.push(0, 0, "a");
+        q.push(2, 1, "b");
+        q.push(2, 2, "c");
+        q.push(1, 3, "d");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|j| j.payload)).collect();
+        assert_eq!(order, vec!["b", "c", "d", "a"]);
+    }
+
+    #[test]
+    fn preemption_never_breaches_min_keep() {
+        let led = FleetLedger::new(vec![1.0, 3.0, 1.0, 2.0, 1.0, 1.0]);
+        let victims = vec![
+            VictimView { job: 0, priority: 0, seq: 0, held: vec![0, 1, 3], min_keep: 2 },
+            VictimView { job: 1, priority: 1, seq: 1, held: vec![2, 4], min_keep: 2 },
+        ];
+        // Job 1 has nothing to yield; job 0 yields exactly one slot — its
+        // slowest (slot 1, mult 3.0).
+        let plan = plan_preemption(&led, &victims, 2, 1).unwrap();
+        assert_eq!(plan, vec![(0, 1)]);
+        assert!(plan_preemption(&led, &victims, 2, 2).is_none());
+        // Equal priority is never preempted.
+        assert!(plan_preemption(&led, &victims, 1, 1).is_none());
+    }
+
+    #[test]
+    fn join_goes_to_neediest_tenant() {
+        // (job, have, want, priority, seq, can_accept)
+        let t = vec![
+            (0, 3, 4, 0, 0, true),  // deficit 1/4
+            (1, 1, 4, 0, 1, true),  // deficit 3/4  <- neediest
+            (2, 0, 2, 3, 2, false), // needy but cannot accept
+            (3, 4, 4, 5, 3, true),  // satisfied
+        ];
+        assert_eq!(pick_join_recipient(&t), Some(1));
+        assert_eq!(pick_join_recipient(&t[3..]), None);
+        // Equal deficit: higher priority wins, then older submission.
+        let tie = vec![(0, 2, 4, 0, 0, true), (1, 2, 4, 1, 1, true)];
+        assert_eq!(pick_join_recipient(&tie), Some(1));
+        let fifo = vec![(0, 2, 4, 1, 5, true), (1, 2, 4, 1, 2, true)];
+        assert_eq!(pick_join_recipient(&fifo), Some(1));
+    }
+
+    /// Random op sequences preserve the ledger invariants: a slot is never
+    /// leased to two jobs, releases return slots to the free pool, and
+    /// leased + free + dead slots always account for the whole fleet.
+    #[test]
+    fn prop_ledger_conservation() {
+        prop::check(80, |g| {
+            let n = g.usize_in(1, 24);
+            let mults: Vec<f64> = (0..n).map(|_| g.f64_in(1.0, 4.0)).collect();
+            let mut led = FleetLedger::new(mults);
+            let n_jobs = g.usize_in(1, 6);
+            for _ in 0..g.usize_in(1, 60) {
+                let job = g.usize_in(0, n_jobs - 1);
+                let slot = g.usize_in(0, n - 1);
+                match g.usize_in(0, 4) {
+                    0 => {
+                        let ask = g.usize_in(0, n);
+                        let before = led.n_free();
+                        match led.lease(job, ask) {
+                            Ok(got) => {
+                                if got.len() != ask || led.n_free() != before - ask {
+                                    return Err("lease miscounted".into());
+                                }
+                            }
+                            Err(avail) => {
+                                if avail >= ask || led.n_free() != before {
+                                    return Err("failed lease mutated state".into());
+                                }
+                            }
+                        }
+                    }
+                    1 => {
+                        let before = led.n_free();
+                        if led.release(job, slot).is_ok()
+                            && led.n_free() != before + 1
+                        {
+                            return Err("release did not free the slot".into());
+                        }
+                    }
+                    2 => {
+                        led.release_all(job);
+                        if !led.held_by(job).is_empty() {
+                            return Err("release_all left leases behind".into());
+                        }
+                    }
+                    3 => {
+                        led.kill(slot);
+                        if led.is_alive(slot) || led.owner(slot).is_some() {
+                            return Err("kill left the slot alive or leased".into());
+                        }
+                    }
+                    _ => {
+                        led.revive(slot);
+                    }
+                }
+                // Global conservation + exclusivity after every op.
+                let mut leased = 0;
+                for j in 0..n_jobs {
+                    leased += led.held_by(j).len();
+                }
+                let dead = n - led.n_alive();
+                if leased + led.n_free() + dead != n {
+                    return Err(format!(
+                        "conservation broke: {leased} leased + {} free + {dead} dead != {n}",
+                        led.n_free()
+                    ));
+                }
+                for s in 0..n {
+                    if led.owner(s).is_some() && !led.is_alive(s) {
+                        return Err(format!("dead slot {s} still leased"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Preemption plans free exactly the demanded count, take only from
+    /// strictly lower-priority victims, and never breach a victim's floor.
+    #[test]
+    fn prop_preemption_respects_floors_and_priority() {
+        prop::check(80, |g| {
+            let n = g.usize_in(4, 32);
+            let mults: Vec<f64> = (0..n).map(|_| g.f64_in(1.0, 4.0)).collect();
+            let mut led = FleetLedger::new(mults);
+            let n_jobs = g.usize_in(1, 4);
+            let mut victims = Vec::new();
+            for job in 0..n_jobs {
+                let ask = g.usize_in(0, 3);
+                let held = led.lease(job, ask.min(led.n_free())).unwrap();
+                let min_keep = g.usize_in(0, held.len().max(1));
+                victims.push(VictimView {
+                    job,
+                    priority: g.usize_in(0, 3) as u8,
+                    seq: job as u64,
+                    held,
+                    min_keep,
+                });
+            }
+            let req_prio = g.usize_in(0, 4) as u8;
+            let needed = g.usize_in(0, 6);
+            match plan_preemption(&led, &victims, req_prio, needed) {
+                None => {
+                    // Infeasible must mean the yieldable mass really is short.
+                    let yieldable: usize = victims
+                        .iter()
+                        .filter(|v| v.priority < req_prio)
+                        .map(|v| v.held.len().saturating_sub(v.min_keep))
+                        .sum();
+                    if yieldable >= needed {
+                        return Err("planner refused a feasible preemption".into());
+                    }
+                }
+                Some(plan) => {
+                    if plan.len() != needed {
+                        return Err(format!(
+                            "planned {} slots for demand {needed}",
+                            plan.len()
+                        ));
+                    }
+                    let mut taken_from = vec![0usize; n_jobs];
+                    for &(job, slot) in &plan {
+                        let v = &victims[job];
+                        if v.priority >= req_prio {
+                            return Err("preempted an equal/higher priority job".into());
+                        }
+                        if !v.held.contains(&slot) {
+                            return Err("preempted a slot the victim does not hold".into());
+                        }
+                        taken_from[job] += 1;
+                    }
+                    for (job, &taken) in taken_from.iter().enumerate() {
+                        let v = &victims[job];
+                        if v.held.len() - taken < v.min_keep && taken > 0 {
+                            return Err(format!(
+                                "job {job} taken below min_keep {}",
+                                v.min_keep
+                            ));
+                        }
+                    }
+                    // Applying the plan keeps the ledger consistent.
+                    for &(job, slot) in &plan {
+                        led.release(job, slot)?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

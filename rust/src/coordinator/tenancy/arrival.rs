@@ -1,0 +1,121 @@
+//! Arrival processes for the multi-tenant job service.
+//!
+//! Two classic load models: **open loop** — jobs arrive on a Poisson clock
+//! regardless of what the system is doing (queue wait grows unboundedly
+//! past saturation), and **closed loop** — a fixed number of clients, each
+//! submitting its next job the moment the previous one completes
+//! (concurrency, not rate, is the control knob). Times are service-clock
+//! seconds; the scheduler maps them to wall time via its `time_scale`.
+
+use crate::rng::{Exponential, Rng};
+
+/// How the job stream is released to the scheduler.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LoadModel {
+    /// Job `j` arrives at `times[j]` (nondecreasing, service-clock secs).
+    Open { times: Vec<f64> },
+    /// `concurrency` clients; the first `concurrency` jobs arrive at t=0,
+    /// every completion releases the next job in submission order.
+    Closed { concurrency: usize },
+}
+
+/// A job stream plus its release model.
+#[derive(Clone, Debug)]
+pub struct ServiceLoad<T> {
+    pub jobs: Vec<T>,
+    pub model: LoadModel,
+}
+
+impl<T> ServiceLoad<T> {
+    /// Open-loop Poisson arrivals at `rate` jobs per service-clock second:
+    /// cumulative sums of Exponential(rate) gaps, one per job. The stream
+    /// is a pure function of `rng`, so per-trial counter-derived streams
+    /// give reproducible yet independent arrival processes.
+    pub fn open_poisson<R: Rng>(jobs: Vec<T>, rate: f64, rng: &mut R) -> Self {
+        assert!(rate > 0.0 && rate.is_finite(), "arrival rate must be positive");
+        let exp = Exponential::new(rate);
+        let mut t = 0.0;
+        let times = jobs
+            .iter()
+            .map(|_| {
+                t += exp.sample(rng);
+                t
+            })
+            .collect();
+        Self { jobs, model: LoadModel::Open { times } }
+    }
+
+    /// Closed-loop stream with a fixed concurrency cap.
+    pub fn closed(jobs: Vec<T>, concurrency: usize) -> Self {
+        Self { jobs, model: LoadModel::Closed { concurrency } }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.jobs.is_empty() {
+            return Err("service load has no jobs".into());
+        }
+        match &self.model {
+            LoadModel::Open { times } => {
+                if times.len() != self.jobs.len() {
+                    return Err(format!(
+                        "{} arrival times for {} jobs",
+                        times.len(),
+                        self.jobs.len()
+                    ));
+                }
+                let mut prev = 0.0;
+                for (j, &t) in times.iter().enumerate() {
+                    if !t.is_finite() || t < prev {
+                        return Err(format!(
+                            "arrival time {t} of job {j} is not nondecreasing/finite"
+                        ));
+                    }
+                    prev = t;
+                }
+            }
+            LoadModel::Closed { concurrency } => {
+                if *concurrency == 0 {
+                    return Err("closed-loop concurrency must be >= 1".into());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::default_rng;
+
+    #[test]
+    fn poisson_arrivals_are_sorted_and_reproducible() {
+        let mut rng = default_rng(11);
+        let load = ServiceLoad::open_poisson(vec![(); 50], 2.0, &mut rng);
+        load.validate().unwrap();
+        let LoadModel::Open { times } = &load.model else { unreachable!() };
+        assert_eq!(times.len(), 50);
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+        // Mean gap of Exponential(2) is 0.5: the 50th arrival lands in a
+        // broad but bounded window.
+        assert!(*times.last().unwrap() > 5.0 && *times.last().unwrap() < 80.0);
+        // Same seed, same stream.
+        let mut rng2 = default_rng(11);
+        let again = ServiceLoad::open_poisson(vec![(); 50], 2.0, &mut rng2);
+        let LoadModel::Open { times: t2 } = &again.model else { unreachable!() };
+        assert_eq!(times, t2);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_loads() {
+        let empty: ServiceLoad<()> = ServiceLoad::closed(vec![], 2);
+        assert!(empty.validate().unwrap_err().contains("no jobs"));
+        let zero = ServiceLoad::closed(vec![(), ()], 0);
+        assert!(zero.validate().unwrap_err().contains("concurrency"));
+        let bad = ServiceLoad {
+            jobs: vec![(), ()],
+            model: LoadModel::Open { times: vec![1.0, 0.5] },
+        };
+        assert!(bad.validate().unwrap_err().contains("nondecreasing"));
+    }
+}

@@ -8,6 +8,7 @@ mod ablations;
 mod cluster;
 mod fig1;
 mod fig2;
+mod service;
 mod sweep;
 
 pub use ablations::{
@@ -17,4 +18,5 @@ pub use ablations::{
 pub use cluster::{cluster_scenario, cluster_table, CLUSTER_NS};
 pub use fig1::{fig1_grid, fig1_table};
 pub use fig2::{fig2_scenario, fig2_series, fig2_table, Fig2Point, Metric};
+pub use service::{service_scenario, service_table, SERVICE_CONCURRENCIES};
 pub use sweep::{scaling_scenarios, scaling_table, SCALING_NS};

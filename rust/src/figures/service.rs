@@ -1,0 +1,145 @@
+//! Multi-tenant service SLO sweep (`hcec service`) — the job-stream
+//! counterpart of `figures::cluster`'s single-job N-sweep.
+//!
+//! Each row runs the paper's scheme trio as a closed-loop job stream
+//! through `Engine::Service`: one shared fleet, `conc` tenants in flight
+//! at once, every job asking for the same slice of the fleet. The
+//! `SimulatedLatency` backend keeps subtask durations on the cost model
+//! (× `time_scale`) while the scheduler, the per-tenant reactors and the
+//! cross-job re-planning all run for real.
+//!
+//! Reported metrics are the service's headline SLOs: job latency
+//! percentiles (arrival → finish, queue wait included), fleet
+//! utilisation (busy slot-seconds over capacity), and preemptions. As
+//! concurrency rises, utilisation climbs while tail latency degrades —
+//! the coded-elasticity trade the tenancy layer is built to measure.
+
+use crate::config::ExperimentConfig;
+use crate::metrics::Table;
+use crate::rng::fold_in;
+use crate::scenario::{
+    ArrivalSpec, BackfillSpec, ClusterBackendSpec, ClusterSpec, Engine, Scenario,
+    SchemeConfig, SeedMode, ServiceSpec,
+};
+
+/// Default closed-loop concurrency grid for `hcec service`.
+pub const SERVICE_CONCURRENCIES: [usize; 3] = [1, 2, 4];
+
+/// The service-engine scenario for one sweep row: `jobs` jobs per scheme
+/// streamed through a fleet of `n` slots with `conc` in flight at once.
+/// Every job wants the largest scheme's recovery-threshold slice, so the
+/// trio is comparable at identical placement pressure.
+pub fn service_scenario(
+    cfg: &ExperimentConfig,
+    n: usize,
+    conc: usize,
+    jobs: usize,
+    trials: usize,
+    time_scale: f64,
+) -> Scenario {
+    let schemes = vec![
+        SchemeConfig::Cec { k: cfg.k_cec, s: cfg.s_cec },
+        SchemeConfig::mlcec_of(cfg),
+        SchemeConfig::Bicec { k: cfg.k_bicec, s_per_worker: cfg.s_bicec },
+    ];
+    let want = schemes.iter().map(|s| s.min_workers()).max().unwrap();
+    assert!(n >= want, "service sweep fleet {n} below the scheme floor {want}");
+    Scenario::builder(&format!("service_sim_n{n}_c{conc}"))
+        .engine(Engine::Service)
+        .job(cfg.job)
+        .fleet(n, n)
+        .schemes(schemes)
+        .speed_model(cfg.speed_model())
+        .cost(cfg.cost_model())
+        .cluster(ClusterSpec {
+            backend: ClusterBackendSpec::SimulatedLatency,
+            time_scale,
+            preempt_after_first: 0,
+            backfill: BackfillSpec::On,
+        })
+        .service(ServiceSpec {
+            arrival: ArrivalSpec::Closed { concurrency: conc },
+            jobs,
+            want,
+            high_priority_every: 0,
+        })
+        .trials(trials)
+        .seed(fold_in(cfg.seed, (n * 1000 + conc) as u64))
+        .seed_mode(SeedMode::PerTrial)
+        .build()
+        .expect("valid service sweep scenario")
+}
+
+/// One row per (concurrency, scheme): stream latency percentiles, fleet
+/// utilisation and preemption counts, averaged over trials.
+pub fn service_table(
+    cfg: &ExperimentConfig,
+    n: usize,
+    concurrencies: &[usize],
+    jobs: usize,
+    trials: usize,
+    time_scale: f64,
+) -> Table {
+    let mut t = Table::new(&[
+        "conc",
+        "scheme",
+        "jobs",
+        "lat_p50_s",
+        "lat_p95_s",
+        "lat_p99_s",
+        "util",
+        "preempts",
+        "failures",
+    ]);
+    for &conc in concurrencies {
+        let sc = service_scenario(cfg, n, conc, jobs, trials, time_scale);
+        let out = sc.run().expect("service engine records per-trial failures");
+        for s in &out.per_scheme {
+            let stats: Vec<_> = s.ok_trials().filter_map(|t| t.service).collect();
+            let k = stats.len().max(1) as f64;
+            let mean_of = |f: fn(&crate::scenario::ServiceStats) -> f64| -> f64 {
+                stats.iter().map(f).sum::<f64>() / k
+            };
+            t.row(vec![
+                conc.to_string(),
+                s.scheme.clone(),
+                stats.iter().map(|v| v.jobs).sum::<usize>().to_string(),
+                format!("{:.4}", mean_of(|v| v.latency_p50)),
+                format!("{:.4}", mean_of(|v| v.latency_p95)),
+                format!("{:.4}", mean_of(|v| v.latency_p99)),
+                format!("{:.3}", mean_of(|v| v.utilisation)),
+                stats.iter().map(|v| v.preemptions).sum::<usize>().to_string(),
+                s.failures().to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_scenario_round_trips_through_toml() {
+        let cfg = ExperimentConfig::default();
+        let sc = service_scenario(&cfg, 40, 2, 3, 1, 0.01);
+        let back = Scenario::from_toml(&sc.to_toml()).unwrap();
+        assert_eq!(back.to_doc(), sc.to_doc());
+        assert_eq!(back.engine, Engine::Service);
+        assert_eq!(back.service, sc.service);
+    }
+
+    #[test]
+    fn service_table_runs_one_small_sweep_point() {
+        // One concurrency level, short stream, aggressively scaled down:
+        // the scheduler + per-tenant reactors finish in well under a
+        // second of wall clock. The trio yields three rows.
+        let cfg = ExperimentConfig::default();
+        let t = service_table(&cfg, 40, &[2], 2, 1, 0.002);
+        assert_eq!(t.n_rows(), 3);
+        let r = t.render();
+        assert!(r.contains("bicec"), "{r}");
+        assert!(r.contains("lat_p99_s"), "{r}");
+    }
+}

@@ -42,6 +42,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
     pub max: f64,
 }
 
@@ -54,6 +55,7 @@ impl Summary {
             min: xs.iter().copied().fold(f64::INFINITY, f64::min),
             p50: percentile(xs, 50.0),
             p95: percentile(xs, 95.0),
+            p99: percentile(xs, 99.0),
             max: xs.iter().copied().fold(f64::NEG_INFINITY, f64::max),
         }
     }
@@ -71,12 +73,13 @@ impl std::fmt::Display for Summary {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "n={} mean={:.4} ±{:.4} (p50={:.4} p95={:.4} min={:.4} max={:.4})",
+            "n={} mean={:.4} ±{:.4} (p50={:.4} p95={:.4} p99={:.4} min={:.4} max={:.4})",
             self.n,
             self.mean,
             self.ci95(),
             self.p50,
             self.p95,
+            self.p99,
             self.min,
             self.max
         )
@@ -119,6 +122,20 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 100.0);
         assert!(s.ci95() > 0.0);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn p99_interpolates_between_order_statistics() {
+        // 1..=100: pos = 0.99 * 99 = 98.01, i.e. 1% of the way from the
+        // 99th to the 100th order statistic -> 99 + 0.01 * (100 - 99).
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 99.0) - 99.01).abs() < 1e-9);
+        let s = Summary::of(&xs);
+        assert!((s.p99 - 99.01).abs() < 1e-9);
+        // Ten equal samples: every quantile collapses to the value.
+        let flat = [7.0; 10];
+        assert_eq!(percentile(&flat, 99.0), 7.0);
     }
 
     #[test]

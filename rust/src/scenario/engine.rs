@@ -7,6 +7,7 @@
 //! | `Trace`       | `TraceMonteCarlo` / `TraceSimulator` (elastic DES) | `churn`, `trace` |
 //! | `Coordinator` | `coordinator::run_job` (real threads + numerics) | `fixed` (+ preempt knob) |
 //! | `Cluster`     | `coordinator::run_cluster_job` (event-driven reactor, pluggable backends) | `fixed`, `churn`, `trace` — mid-job |
+//! | `Service`     | `coordinator::run_tenant_service` (shared-fleet scheduler, one reactor per admitted job) | `fixed`, `churn`, `trace` — fleet-wide, fanned out across tenants |
 //!
 //! Determinism contract: an outcome is a pure function of the scenario
 //! descriptor (and, for `Coordinator`, wall-clock noise in the timing
@@ -14,16 +15,20 @@
 //! guarantees of the trial pools.
 
 use crate::coordinator::{
-    run_cluster_job, run_job, ClusterBackend, ClusterConfig, ClusterElasticity,
-    ClusterReport, JobConfig, SpeedSource,
+    run_cluster_job, run_job, run_tenant_service, ClusterBackend, ClusterConfig,
+    ClusterElasticity, ClusterReport, JobConfig, JobRequest, ServiceLoad,
+    SpeedSource, TenancyConfig, TenancyReport, TenantSpeed,
 };
 use crate::metrics::Summary;
 use crate::rng::{fold_in, trial_rng};
 use crate::sim::{
     simulate_many_with_threads, ElasticTrace, TraceMonteCarlo, TraceSimulator,
+    WorkerSpeeds,
 };
 
-use super::spec::{BackfillSpec, ClusterBackendSpec, ElasticitySpec, Metric, SpeedSpec};
+use super::spec::{
+    ArrivalSpec, BackfillSpec, ClusterBackendSpec, ElasticitySpec, Metric, SpeedSpec,
+};
 use super::Scenario;
 
 /// Which substrate executes the scenario.
@@ -41,6 +46,11 @@ pub enum Engine {
     /// pluggable worker backends, and mid-job join/leave re-allocation —
     /// churn and trace elasticity become legal on the real coordinator.
     Cluster,
+    /// The multi-tenant job service: a stream of jobs admitted onto one
+    /// shared fleet, each running its own cluster reactor; fleet-level
+    /// elasticity fans out through the scheduler as per-tenant re-plans,
+    /// and the outcome gains latency SLO / utilisation columns.
+    Service,
 }
 
 impl Engine {
@@ -50,6 +60,7 @@ impl Engine {
             Engine::Trace => "trace",
             Engine::Coordinator => "coordinator",
             Engine::Cluster => "cluster",
+            Engine::Service => "service",
         }
     }
 
@@ -59,8 +70,9 @@ impl Engine {
             "trace" => Ok(Engine::Trace),
             "coordinator" => Ok(Engine::Coordinator),
             "cluster" => Ok(Engine::Cluster),
+            "service" => Ok(Engine::Service),
             other => Err(format!(
-                "unknown engine {other:?} (expected statics|trace|coordinator|cluster)"
+                "unknown engine {other:?} (expected statics|trace|coordinator|cluster|service)"
             )),
         }
     }
@@ -80,6 +92,7 @@ impl Engine {
             Engine::Trace => run_trace(scenario),
             Engine::Coordinator => run_coordinator(scenario)?,
             Engine::Cluster => run_cluster(scenario),
+            Engine::Service => run_service(scenario),
         };
         Ok(Outcome { scenario: scenario.name.clone(), engine: *self, per_scheme })
     }
@@ -112,6 +125,28 @@ pub struct TrialOutcome {
     pub duplicates_suppressed: usize,
     /// Frames the wire checksum rejected at decode.
     pub corruptions_dropped: usize,
+    /// Service-engine extras (`None` elsewhere): the whole job stream's
+    /// latency SLO and fleet-utilisation numbers for this trial.
+    pub service: Option<ServiceStats>,
+}
+
+/// One service trial's stream-level numbers: what the scheduler measured
+/// across every job it admitted, beyond the per-job sums folded into the
+/// shared `TrialOutcome` fields.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServiceStats {
+    /// Jobs completed (every one, or the trial would be an `Err`).
+    pub jobs: usize,
+    /// Job latency (arrival → finish, queue wait included) percentiles.
+    pub latency_p50: f64,
+    pub latency_p95: f64,
+    pub latency_p99: f64,
+    /// Busy slot-seconds over fleet capacity: 1.0 = no slot ever idle.
+    pub utilisation: f64,
+    /// Slots preempted from running tenants for higher-priority arrivals.
+    pub preemptions: usize,
+    /// Mean admission queue wait over the stream.
+    pub queue_wait_mean: f64,
 }
 
 impl TrialOutcome {
@@ -196,6 +231,12 @@ impl Outcome {
         if robust {
             cols.extend_from_slice(&["crashes", "retries", "dups_sup", "corrupt_drop"]);
         }
+        let service = self.engine == Engine::Service;
+        if service {
+            cols.extend_from_slice(&[
+                "jobs", "lat_p50_s", "lat_p95_s", "lat_p99_s", "util", "preempts",
+            ]);
+        }
         let mut t = crate::metrics::Table::new(&cols);
         for s in &self.per_scheme {
             let fin = s.summary(Metric::Finishing);
@@ -220,6 +261,23 @@ impl Outcome {
                 row.push(sum(|t| t.retries).to_string());
                 row.push(sum(|t| t.duplicates_suppressed).to_string());
                 row.push(sum(|t| t.corruptions_dropped).to_string());
+            }
+            if service {
+                // Jobs and preemptions are stream totals; the SLO and
+                // utilisation columns average over trials (each trial is
+                // already a whole-stream percentile).
+                let stats: Vec<ServiceStats> =
+                    s.ok_trials().filter_map(|t| t.service).collect();
+                let n = stats.len().max(1) as f64;
+                let mean_of = |f: fn(&ServiceStats) -> f64| -> f64 {
+                    stats.iter().map(f).sum::<f64>() / n
+                };
+                row.push(stats.iter().map(|v| v.jobs).sum::<usize>().to_string());
+                row.push(format!("{:.4}", mean_of(|v| v.latency_p50)));
+                row.push(format!("{:.4}", mean_of(|v| v.latency_p95)));
+                row.push(format!("{:.4}", mean_of(|v| v.latency_p99)));
+                row.push(format!("{:.3}", mean_of(|v| v.utilisation)));
+                row.push(stats.iter().map(|v| v.preemptions).sum::<usize>().to_string());
             }
             t.row(row);
         }
@@ -279,6 +337,7 @@ fn run_statics(sc: &Scenario) -> Vec<SchemeOutcome> {
                     retries: 0,
                     duplicates_suppressed: 0,
                     corruptions_dropped: 0,
+                    service: None,
                 })
             })
             .collect();
@@ -371,6 +430,7 @@ fn trace_trial(r: crate::sim::TraceOutcome) -> TrialOutcome {
         retries: 0,
         duplicates_suppressed: 0,
         corruptions_dropped: 0,
+        service: None,
     }
 }
 
@@ -483,7 +543,162 @@ fn cluster_trial(r: ClusterReport) -> TrialOutcome {
         retries: r.retries,
         duplicates_suppressed: r.duplicates_suppressed,
         corruptions_dropped: r.corruptions_dropped,
+        service: None,
     }
+}
+
+/// Distinct counter streams for the service engine's arrival-process and
+/// fleet-speed draws, so neither correlates with the churn trace or the
+/// per-job operand streams.
+const ARRIVAL_STREAM: u64 = 0x6172_7269_7665_2121; // "arrive!!"
+const FLEET_STREAM: u64 = 0x666c_6565_7421_2121; // "fleet!!!"
+
+fn run_service(sc: &Scenario) -> Vec<SchemeOutcome> {
+    let backend = match sc.cluster.backend {
+        ClusterBackendSpec::Native => ClusterBackend::Native,
+        ClusterBackendSpec::Pjrt => ClusterBackend::Pjrt,
+        ClusterBackendSpec::SimulatedLatency => {
+            ClusterBackend::Simulated { time_scale: sc.cluster.time_scale }
+        }
+    };
+    let backfill = matches!(sc.cluster.backfill, BackfillSpec::On);
+    let sv = &sc.service;
+    sc.schemes
+        .iter()
+        .map(|spec| {
+            let trials = (0..sc.trials)
+                .map(|trial| {
+                    let trial_seed = if trial == 0 {
+                        sc.seed
+                    } else {
+                        fold_in(sc.seed, trial as u64)
+                    };
+                    // The fleet's slot speeds are a property of the fleet,
+                    // not of any tenant: drawn once per trial, shared by
+                    // every job admitted onto those slots.
+                    let fleet_mults: Vec<f64> = match &sc.speed {
+                        SpeedSpec::Uniform => vec![1.0; sc.n_max],
+                        SpeedSpec::Explicit(mult) => mult.clone(),
+                        SpeedSpec::Model(m) => {
+                            let mut trng =
+                                trial_rng(fold_in(sc.seed, FLEET_STREAM), trial as u64);
+                            let speeds = WorkerSpeeds::sample(m, sc.n_max, &mut trng);
+                            (0..sc.n_max).map(|w| speeds.multiplier(w)).collect()
+                        }
+                    };
+                    let fleet_trace = match &sc.elasticity {
+                        ElasticitySpec::Fixed => None,
+                        ElasticitySpec::Trace { trace, .. } => Some(trace.clone()),
+                        ElasticitySpec::Churn {
+                            n_min, n_initial, rate, horizon, ..
+                        } => {
+                            let mut trng =
+                                trial_rng(fold_in(sc.seed, CHURN_STREAM), trial as u64);
+                            Some(ElasticTrace::poisson(
+                                sc.n_max, *n_min, *n_initial, *rate, *horizon,
+                                &mut trng,
+                            ))
+                        }
+                    };
+                    let requests: Vec<JobRequest> = (0..sv.jobs)
+                        .map(|j| JobRequest {
+                            name: format!("{}-{j}", spec.name()),
+                            job: sc.job,
+                            scheme: spec.clone(),
+                            n_max: sv.want,
+                            want: sv.want,
+                            priority: if sv.high_priority_every > 0
+                                && (j + 1) % sv.high_priority_every == 0
+                            {
+                                1
+                            } else {
+                                0
+                            },
+                            backend: backend.clone(),
+                            speed: TenantSpeed::Fleet,
+                            cost: sc.cost,
+                            backfill,
+                            preempt_after_first: 0,
+                            seed: if j == 0 {
+                                trial_seed
+                            } else {
+                                fold_in(trial_seed, j as u64)
+                            },
+                        })
+                        .collect();
+                    let load = match sv.arrival {
+                        ArrivalSpec::Closed { concurrency } => {
+                            ServiceLoad::closed(requests, concurrency)
+                        }
+                        ArrivalSpec::Open { rate } => {
+                            let mut trng = trial_rng(
+                                fold_in(sc.seed, ARRIVAL_STREAM),
+                                trial as u64,
+                            );
+                            ServiceLoad::open_poisson(requests, rate, &mut trng)
+                        }
+                    };
+                    let tcfg = TenancyConfig {
+                        fleet_mults,
+                        fleet_trace,
+                        time_scale: sc.cluster.time_scale,
+                    };
+                    service_trial(spec.name(), trial, run_tenant_service(&tcfg, load))
+                })
+                .collect();
+            SchemeOutcome { scheme: spec.name().to_string(), trials }
+        })
+        .collect()
+}
+
+/// Fold one service trial's `TenancyReport` into the unified outcome: the
+/// stream's makespan is the computation time, per-job reactor numbers sum
+/// across the stream, and the SLO extras land in `ServiceStats`.
+fn service_trial(
+    scheme: &str,
+    trial: usize,
+    rep: Result<TenancyReport, String>,
+) -> Result<TrialOutcome, String> {
+    let rep = rep.map_err(|e| format!("{scheme} trial {trial}: {e}"))?;
+    if let Some((id, err)) = rep.failures().first() {
+        return Err(format!("{scheme} trial {trial}: job {id}: {err}"));
+    }
+    let mut out = TrialOutcome {
+        computation_time: rep.total_wall,
+        decode_time: 0.0,
+        encode_time: 0.0,
+        transition_waste: 0.0,
+        reallocations: 0,
+        completions: 0,
+        max_rel_err: 0.0,
+        crashes_absorbed: 0,
+        retries: 0,
+        duplicates_suppressed: 0,
+        corruptions_dropped: 0,
+        service: None,
+    };
+    let mut queue_wait = 0.0;
+    for j in &rep.per_job {
+        queue_wait += j.queue_wait;
+        let r = j.result.as_ref().expect("failures() checked above");
+        out.decode_time += r.decode_wall;
+        out.encode_time += r.encode_wall;
+        out.transition_waste += r.transition_waste;
+        out.reallocations += r.reallocations + r.workers_preempted;
+        out.completions += r.completions_received as u64;
+        out.max_rel_err = out.max_rel_err.max(r.max_rel_err as f64);
+    }
+    let lat = rep.latency_summary();
+    out.service = Some(ServiceStats {
+        jobs: rep.per_job.len(),
+        latency_p50: lat.p50,
+        latency_p95: lat.p95,
+        latency_p99: lat.p99,
+        utilisation: rep.utilisation(),
+        preemptions: rep.preemptions,
+        queue_wait_mean: queue_wait / rep.per_job.len().max(1) as f64,
+    });
+    Ok(out)
 }
 
 fn run_coordinator(sc: &Scenario) -> Result<Vec<SchemeOutcome>, String> {
@@ -527,6 +742,7 @@ fn run_coordinator(sc: &Scenario) -> Result<Vec<SchemeOutcome>, String> {
                 retries: 0,
                 duplicates_suppressed: 0,
                 corruptions_dropped: 0,
+                service: None,
             }));
         }
         per_scheme.push(SchemeOutcome { scheme: spec.name().to_string(), trials });
@@ -708,7 +924,13 @@ mod tests {
 
     #[test]
     fn engine_parse_round_trip() {
-        for e in [Engine::Statics, Engine::Trace, Engine::Coordinator, Engine::Cluster] {
+        for e in [
+            Engine::Statics,
+            Engine::Trace,
+            Engine::Coordinator,
+            Engine::Cluster,
+            Engine::Service,
+        ] {
             assert_eq!(Engine::parse(e.as_str()).unwrap(), e);
         }
         assert!(Engine::parse("mystery").is_err());
@@ -815,6 +1037,89 @@ mod tests {
         // Non-cluster outcomes keep the legacy column set.
         let plain = small_statics().run().unwrap().table().render();
         assert!(!plain.contains("crashes"), "{plain}");
+    }
+
+    #[test]
+    fn service_engine_runs_a_closed_loop_stream() {
+        use crate::scenario::{
+            ArrivalSpec, ClusterBackendSpec, ClusterSpec, ServiceSpec,
+        };
+        let sc = Scenario::builder("svc_closed")
+            .engine(Engine::Service)
+            .job(JobSpec::new(240, 240, 240))
+            .fleet(8, 8)
+            .schemes(vec![SchemeConfig::Cec { k: 2, s: 4 }])
+            .speed(SpeedSpec::Uniform)
+            .cluster(ClusterSpec {
+                backend: ClusterBackendSpec::SimulatedLatency,
+                time_scale: 1.0,
+                preempt_after_first: 0,
+                backfill: BackfillSpec::On,
+            })
+            .service(ServiceSpec {
+                arrival: ArrivalSpec::Closed { concurrency: 2 },
+                jobs: 3,
+                want: 4,
+                high_priority_every: 0,
+            })
+            .trials(1)
+            .seed(17)
+            .build()
+            .unwrap();
+        let out = sc.run().unwrap();
+        assert_eq!(out.per_scheme.len(), 1);
+        let s = &out.per_scheme[0];
+        assert_eq!(s.failures(), 0, "{:?}", s.trials);
+        let trial = s.ok_trials().next().unwrap();
+        let stats = trial.service.expect("service trials carry stream stats");
+        assert_eq!(stats.jobs, 3);
+        assert!(stats.utilisation > 0.0 && stats.utilisation <= 1.0, "{stats:?}");
+        assert!(stats.latency_p50 > 0.0, "{stats:?}");
+        assert!(stats.latency_p99 >= stats.latency_p50, "{stats:?}");
+        assert!(trial.computation_time > 0.0);
+        assert_eq!(trial.max_rel_err, 0.0, "simulated backend ships no bytes");
+        let rendered = out.table().render();
+        assert!(rendered.contains("lat_p99_s"), "{rendered}");
+        assert!(rendered.contains("util"), "{rendered}");
+        // Non-service outcomes keep the legacy column set.
+        let plain = small_statics().run().unwrap().table().render();
+        assert!(!plain.contains("lat_p99_s"), "{plain}");
+    }
+
+    #[test]
+    fn service_engine_runs_open_arrivals() {
+        use crate::scenario::{
+            ArrivalSpec, ClusterBackendSpec, ClusterSpec, ServiceSpec,
+        };
+        let sc = Scenario::builder("svc_open")
+            .engine(Engine::Service)
+            .job(JobSpec::new(240, 240, 240))
+            .fleet(8, 8)
+            .schemes(vec![SchemeConfig::Cec { k: 2, s: 4 }])
+            .speed(SpeedSpec::Uniform)
+            .cluster(ClusterSpec {
+                backend: ClusterBackendSpec::SimulatedLatency,
+                time_scale: 1.0,
+                preempt_after_first: 0,
+                backfill: BackfillSpec::On,
+            })
+            .service(ServiceSpec {
+                arrival: ArrivalSpec::Open { rate: 40.0 },
+                jobs: 3,
+                want: 4,
+                high_priority_every: 0,
+            })
+            .trials(1)
+            .seed(23)
+            .build()
+            .unwrap();
+        let out = sc.run().unwrap();
+        let s = &out.per_scheme[0];
+        assert_eq!(s.failures(), 0, "{:?}", s.trials);
+        let stats = s.ok_trials().next().unwrap().service.unwrap();
+        assert_eq!(stats.jobs, 3);
+        assert!(stats.latency_p99 >= stats.latency_p50, "{stats:?}");
+        assert!(stats.latency_p50 > 0.0, "{stats:?}");
     }
 
     #[test]

@@ -31,11 +31,11 @@ mod engine;
 mod spec;
 mod toml_io;
 
-pub use engine::{Engine, Outcome, SchemeOutcome, TrialOutcome};
+pub use engine::{Engine, Outcome, SchemeOutcome, ServiceStats, TrialOutcome};
 pub use spec::{
-    BackfillSpec, ChaosConfig, ClusterBackendSpec, ClusterSpec, CoordinatorSpec,
-    CrashSpec, ElasticitySpec, FaultRates, Metric, Partition, SchemeConfig, SeedMode,
-    SpeedSpec,
+    ArrivalSpec, BackfillSpec, ChaosConfig, ClusterBackendSpec, ClusterSpec,
+    CoordinatorSpec, CrashSpec, ElasticitySpec, FaultRates, Metric, Partition,
+    SchemeConfig, SeedMode, ServiceSpec, SpeedSpec,
 };
 
 use crate::config::ExperimentConfig;
@@ -71,6 +71,9 @@ pub struct Scenario {
     pub threads: Option<usize>,
     pub coordinator: CoordinatorSpec,
     pub cluster: ClusterSpec,
+    /// Job-stream knobs (`[service]`): service engine only. The service
+    /// engine also reads `[cluster]` for the per-tenant backend.
+    pub service: ServiceSpec,
     /// Transport fault injection (`[chaos]`): cluster engine only. `None`
     /// runs quiet verbatim links; `Some` wraps every command/event channel
     /// in a seeded [`ChaosLink`](crate::coordinator::ChaosLink).
@@ -188,8 +191,9 @@ impl Scenario {
                     );
                 }
             }
-            // The cluster engine absorbs every elasticity kind mid-job.
-            Engine::Cluster => {}
+            // The cluster engine absorbs every elasticity kind mid-job;
+            // the service engine absorbs them fleet-wide across tenants.
+            Engine::Cluster | Engine::Service => {}
         }
         // seed_mode must describe the derivation the engine actually runs:
         // churn trials are always counter-derived (`trial_rng(seed, i)` in
@@ -239,6 +243,9 @@ impl Scenario {
         }
         if self.engine == Engine::Cluster {
             self.validate_cluster()?;
+        }
+        if self.engine == Engine::Service {
+            self.validate_service()?;
         }
         if let Some(chaos) = &self.chaos {
             if self.engine != Engine::Cluster {
@@ -341,6 +348,147 @@ impl Scenario {
                             ev.time
                         ));
                     }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Service-engine checks: the scheduler owns the whole fleet, tenant
+    /// geometry is sized by `service.want`, and the `[cluster]` knobs it
+    /// reuses are restricted to the ones the tenancy layer forwards.
+    fn validate_service(&self) -> Result<(), String> {
+        let sv = &self.service;
+        if sv.jobs == 0 {
+            return Err("service.jobs must be >= 1".into());
+        }
+        if self.n_workers != self.n_max {
+            return Err(format!(
+                "the service engine owns the whole fleet: fleet.n_workers = {} \
+                 must equal fleet.n_max = {}",
+                self.n_workers, self.n_max
+            ));
+        }
+        if sv.want == 0 || sv.want > self.n_max {
+            return Err(format!(
+                "service.want = {} outside [1, fleet.n_max = {}]",
+                sv.want, self.n_max
+            ));
+        }
+        for (i, scheme) in self.schemes.iter().enumerate() {
+            let min = scheme.min_workers();
+            if sv.want < min {
+                return Err(format!(
+                    "scheme[{i}] ({}) needs {min} workers but service.want = {}",
+                    scheme.name(),
+                    sv.want
+                ));
+            }
+            if let SchemeConfig::Bicec { k, s_per_worker } = scheme {
+                // Tenants size their code for `want` local slots, not the
+                // whole fleet.
+                if *k > s_per_worker * sv.want {
+                    return Err(format!(
+                        "scheme[{i}] (bicec) code ({k}, {}) has n < k at \
+                         service.want = {}",
+                        s_per_worker * sv.want,
+                        sv.want
+                    ));
+                }
+            }
+        }
+        match sv.arrival {
+            ArrivalSpec::Open { rate } => {
+                if !(rate > 0.0 && rate.is_finite()) {
+                    return Err(format!(
+                        "service.rate = {rate} must be finite and positive"
+                    ));
+                }
+            }
+            ArrivalSpec::Closed { concurrency } => {
+                if concurrency == 0 {
+                    return Err("service.concurrency must be >= 1".into());
+                }
+            }
+        }
+        let c = &self.cluster;
+        if !(c.time_scale > 0.0 && c.time_scale.is_finite()) {
+            return Err(format!(
+                "cluster.time_scale = {} must be finite and positive",
+                c.time_scale
+            ));
+        }
+        if c.backend != ClusterBackendSpec::SimulatedLatency && c.time_scale != 1.0 {
+            return Err(format!(
+                "cluster.time_scale only applies to backend \"simulated_latency\" \
+                 (backend is {:?})",
+                c.backend
+            ));
+        }
+        if c.preempt_after_first != 0 {
+            return Err(
+                "the service engine schedules preemption itself; \
+                 cluster.preempt_after_first must be 0"
+                    .into(),
+            );
+        }
+        if c.backfill == BackfillSpec::Compare {
+            return Err(
+                "cluster.backfill = \"compare\" is a cluster-engine pairing; the \
+                 service engine takes \"on\" or \"off\""
+                    .into(),
+            );
+        }
+        if self.trials > 1 && self.seed_mode != SeedMode::PerTrial {
+            return Err(
+                "multi-trial service runs derive trial i's seed as \
+                 fold_in(seed, i); set seed_mode = \"per_trial\" (trial 0 still \
+                 runs the scenario seed verbatim)"
+                    .into(),
+            );
+        }
+        if self.threads.is_some() {
+            return Err(
+                "scenario.threads budgets the simulation trial pools; the \
+                 service engine runs real tenant reactors over the fleet — drop \
+                 the threads key"
+                    .into(),
+            );
+        }
+        // Fleet-level churn must keep the whole fleet alive at start (the
+        // scheduler leases from a fully-populated ledger) and never dip
+        // below the mid-job floor of the most demanding scheme.
+        let mid = self
+            .schemes
+            .iter()
+            .map(|s| s.min_active_mid_job())
+            .max()
+            .unwrap_or(1);
+        match &self.elasticity {
+            ElasticitySpec::Fixed => {}
+            ElasticitySpec::Churn { n_min, n_initial, .. } => {
+                if *n_initial != self.n_max {
+                    return Err(format!(
+                        "the service fleet starts fully populated: \
+                         elasticity.n_initial = {n_initial} must equal \
+                         fleet.n_max = {}",
+                        self.n_max
+                    ));
+                }
+                if *n_min < mid {
+                    return Err(format!(
+                        "elasticity.n_min = {n_min} is below the mid-job recovery \
+                         threshold {mid} (max over the scheme list)"
+                    ));
+                }
+            }
+            ElasticitySpec::Trace { trace, .. } => {
+                if trace.n_initial != self.n_max {
+                    return Err(format!(
+                        "the service fleet starts fully populated: the elasticity \
+                         trace starts with {} of fleet.n_max = {} slots",
+                        trace.n_initial, self.n_max
+                    ));
                 }
             }
         }
@@ -575,6 +723,7 @@ impl ScenarioBuilder {
                 threads: None,
                 coordinator: CoordinatorSpec::default(),
                 cluster: ClusterSpec::default(),
+                service: ServiceSpec::default(),
                 chaos: None,
             },
         }
@@ -665,6 +814,11 @@ impl ScenarioBuilder {
 
     pub fn cluster(mut self, spec: ClusterSpec) -> Self {
         self.inner.cluster = spec;
+        self
+    }
+
+    pub fn service(mut self, spec: ServiceSpec) -> Self {
+        self.inner.service = spec;
         self
     }
 
@@ -938,6 +1092,69 @@ mod tests {
             .build()
             .unwrap();
         assert_eq!(sc.cluster, crate::scenario::ClusterSpec::default());
+    }
+
+    #[test]
+    fn service_validation_guards_fleet_and_knobs() {
+        use crate::scenario::{ArrivalSpec, BackfillSpec, ClusterSpec, ServiceSpec};
+        let base_service = ServiceSpec {
+            arrival: ArrivalSpec::Closed { concurrency: 2 },
+            jobs: 4,
+            want: 4,
+            high_priority_every: 0,
+        };
+        let service_base = move || {
+            Scenario::builder("sv")
+                .engine(Engine::Service)
+                .fleet(8, 8)
+                .schemes(vec![SchemeConfig::Cec { k: 2, s: 4 }])
+                .job(crate::workload::JobSpec::new(240, 240, 240))
+                .service(base_service)
+                .trials(1)
+        };
+        assert!(service_base().build().is_ok());
+        // The service owns the whole fleet.
+        let err = service_base().fleet(8, 6).build().unwrap_err();
+        assert!(err.contains("must equal fleet.n_max"), "{err}");
+        // want below the scheme's start threshold is named.
+        let err = service_base()
+            .service(ServiceSpec { want: 3, ..base_service })
+            .build()
+            .unwrap_err();
+        assert!(err.contains("needs 4 workers"), "{err}");
+        // Open arrivals need a positive rate.
+        let err = service_base()
+            .service(ServiceSpec {
+                arrival: ArrivalSpec::Open { rate: 0.0 },
+                ..base_service
+            })
+            .build()
+            .unwrap_err();
+        assert!(err.contains("service.rate"), "{err}");
+        // Legacy preempt knob and the compare pairing are cluster-only.
+        let err = service_base()
+            .cluster(ClusterSpec { preempt_after_first: 1, ..Default::default() })
+            .build()
+            .unwrap_err();
+        assert!(err.contains("preempt_after_first"), "{err}");
+        let err = service_base()
+            .cluster(ClusterSpec { backfill: BackfillSpec::Compare, ..Default::default() })
+            .build()
+            .unwrap_err();
+        assert!(err.contains("compare"), "{err}");
+        // Fleet churn must start fully populated.
+        let err = service_base()
+            .elasticity(ElasticitySpec::Churn {
+                n_min: 4,
+                n_initial: 6,
+                rate: 1.0,
+                horizon: 5.0,
+                reassign: Reassign::Identity,
+            })
+            .seed_mode(SeedMode::PerTrial)
+            .build()
+            .unwrap_err();
+        assert!(err.contains("fully populated"), "{err}");
     }
 
     #[test]

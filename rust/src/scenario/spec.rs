@@ -273,6 +273,55 @@ impl Default for ClusterSpec {
     }
 }
 
+/// Arrival process for the service engine's job stream (`[service]` in
+/// scenario TOML).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalSpec {
+    /// Open loop: Poisson arrivals at `rate` jobs per cost-model second,
+    /// independent of completions (queue wait grows past saturation).
+    Open { rate: f64 },
+    /// Closed loop: `concurrency` clients, each submitting its next job
+    /// the moment the previous one completes.
+    Closed { concurrency: usize },
+}
+
+impl ArrivalSpec {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ArrivalSpec::Open { .. } => "open",
+            ArrivalSpec::Closed { .. } => "closed",
+        }
+    }
+}
+
+/// Knobs only the multi-tenant service engine reads. The service owns the
+/// whole fleet (`n_workers == n_max` slots) and streams `jobs` copies of
+/// the scenario job through the shared-fleet scheduler, `want` workers
+/// each; the `[cluster]` table supplies the per-tenant backend knobs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServiceSpec {
+    pub arrival: ArrivalSpec,
+    /// Jobs in the stream (per scheme, per trial).
+    pub jobs: usize,
+    /// Target workers per job: admission grants `min(want, free)` once
+    /// `free >= min_workers`; each tenant's local slot space is `want`.
+    pub want: usize,
+    /// Every `high_priority_every`-th job (1-based) is submitted at
+    /// priority 1 and may preempt priority-0 tenants; 0 disables.
+    pub high_priority_every: usize,
+}
+
+impl Default for ServiceSpec {
+    fn default() -> Self {
+        Self {
+            arrival: ArrivalSpec::Closed { concurrency: 1 },
+            jobs: 1,
+            want: 1,
+            high_priority_every: 0,
+        }
+    }
+}
+
 /// Which per-trial number a summary is taken over.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Metric {

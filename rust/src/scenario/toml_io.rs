@@ -5,7 +5,7 @@
 //! ```toml
 //! [scenario]
 //! name = "fig2a_n40"
-//! engine = "statics"            # statics | trace | coordinator | cluster
+//! engine = "statics"            # statics | trace | coordinator | cluster | service
 //! trials = 20
 //! seed = 2021
 //! seed_mode = "sequential"      # sequential | per_trial
@@ -50,11 +50,19 @@
 //! backend = "native"            # native | pjrt
 //! preempt_after_first = 0
 //!
-//! [cluster]                     # cluster engine only
+//! [cluster]                     # cluster + service engines (per-tenant knobs)
 //! backend = "native"            # native | pjrt | simulated_latency
 //! time_scale = 1.0              # simulated_latency only: wall s per model s
-//! preempt_after_first = 0
-//! backfill = "on"               # on | off | compare (two rows per scheme)
+//! preempt_after_first = 0       # must stay 0 for the service engine
+//! backfill = "on"               # on | off | compare (compare: cluster only)
+//!
+//! [service]                     # service engine only: the job stream
+//! arrival = "closed"            # open (Poisson) | closed (fixed concurrency)
+//! # rate = 20.0                 # open: mean arrivals per scaled second
+//! concurrency = 2               # closed: jobs in flight at once
+//! jobs = 8                      # stream length per scheme x trial
+//! want = 4                      # slots each job asks the shared fleet for
+//! high_priority_every = 0       # 0 = all equal; m = every m-th job preempts
 //!
 //! [chaos]                       # cluster engine only; omit = quiet links
 //! seed = 0                      # fault-stream seed (independent of job seed)
@@ -88,9 +96,9 @@ use crate::workload::JobSpec;
 
 use super::engine::Engine;
 use super::spec::{
-    BackfillSpec, ChaosConfig, ClusterBackendSpec, ClusterSpec, CoordinatorSpec,
-    CrashSpec, ElasticitySpec, FaultRates, Partition, SchemeConfig, SeedMode,
-    SpeedSpec,
+    ArrivalSpec, BackfillSpec, ChaosConfig, ClusterBackendSpec, ClusterSpec,
+    CoordinatorSpec, CrashSpec, ElasticitySpec, FaultRates, Partition,
+    SchemeConfig, SeedMode, ServiceSpec, SpeedSpec,
 };
 use super::Scenario;
 
@@ -182,7 +190,9 @@ impl Scenario {
                 Value::Int(self.coordinator.preempt_after_first as i64),
             );
         }
-        if self.engine == Engine::Cluster {
+        // The service engine shares the [cluster] per-tenant knobs; [chaos]
+        // stays cluster-only.
+        if self.engine == Engine::Cluster || self.engine == Engine::Service {
             doc.insert(
                 "cluster.backend",
                 Value::Str(self.cluster.backend.as_str().into()),
@@ -198,9 +208,31 @@ impl Scenario {
                 "cluster.backfill",
                 Value::Str(self.cluster.backfill.as_str().into()),
             );
-            if let Some(chaos) = &self.chaos {
-                write_chaos(&mut doc, chaos);
+            if self.engine == Engine::Cluster {
+                if let Some(chaos) = &self.chaos {
+                    write_chaos(&mut doc, chaos);
+                }
             }
+        }
+        if self.engine == Engine::Service {
+            doc.insert(
+                "service.arrival",
+                Value::Str(self.service.arrival.kind().into()),
+            );
+            match self.service.arrival {
+                ArrivalSpec::Open { rate } => {
+                    doc.insert("service.rate", Value::Float(rate));
+                }
+                ArrivalSpec::Closed { concurrency } => {
+                    doc.insert("service.concurrency", Value::Int(concurrency as i64));
+                }
+            }
+            doc.insert("service.jobs", Value::Int(self.service.jobs as i64));
+            doc.insert("service.want", Value::Int(self.service.want as i64));
+            doc.insert(
+                "service.high_priority_every",
+                Value::Int(self.service.high_priority_every as i64),
+            );
         }
         doc
     }
@@ -532,9 +564,10 @@ impl<'a> Reader<'a> {
             }
             builder = builder.coordinator(coord);
         }
-        // Same consumption rule for [cluster]: only the cluster engine
-        // reads it, so a misplaced section is an unknown-key error.
-        if engine == Engine::Cluster {
+        // Same consumption rule for [cluster]: only the engines that read
+        // it (cluster, and service for its per-tenant knobs) consume it,
+        // so a misplaced section is an unknown-key error.
+        if engine == Engine::Cluster || engine == Engine::Service {
             let mut cl = ClusterSpec::default();
             if let Some(backend) = self.str_at("cluster.backend")? {
                 cl.backend = match backend {
@@ -560,9 +593,17 @@ impl<'a> Reader<'a> {
                     BackfillSpec::parse(b).map_err(|e| format!("cluster.backfill: {e}"))?;
             }
             builder = builder.cluster(cl);
-            if let Some(chaos) = self.chaos_section()? {
-                builder = builder.chaos(chaos);
+            // [chaos] stays cluster-only: the service engine rejects fault
+            // injection (one chaotic tenant would blur every other
+            // tenant's SLO), so its keys fall through to unknown-key.
+            if engine == Engine::Cluster {
+                if let Some(chaos) = self.chaos_section()? {
+                    builder = builder.chaos(chaos);
+                }
             }
+        }
+        if engine == Engine::Service {
+            builder = builder.service(self.service_section()?);
         }
         // Skip builder validation here: from_doc validates after the
         // unknown-key check so typos are reported before semantic errors.
@@ -689,6 +730,32 @@ impl<'a> Reader<'a> {
             }
         };
         Ok(Some(c))
+    }
+
+    /// The `[service]` table: the job stream the service engine runs.
+    /// `arrival`, `jobs` and `want` are required — a service scenario with
+    /// no stream shape is a typo, not a default experiment. Semantic
+    /// checks (fleet fit, rate > 0) run in `Scenario::validate`.
+    fn service_section(&mut self) -> Result<ServiceSpec, String> {
+        let arrival = match self.req_str("service.arrival")? {
+            "open" => ArrivalSpec::Open { rate: self.req_f64("service.rate")? },
+            "closed" => ArrivalSpec::Closed {
+                concurrency: self.usize_at("service.concurrency")?.unwrap_or(1),
+            },
+            other => {
+                return Err(format!(
+                    "service.arrival: unknown process {other:?} (open|closed)"
+                ))
+            }
+        };
+        Ok(ServiceSpec {
+            arrival,
+            jobs: self.req_usize("service.jobs")?,
+            want: self.req_usize("service.want")?,
+            high_priority_every: self
+                .usize_at("service.high_priority_every")?
+                .unwrap_or(0),
+        })
     }
 
     fn fault_rates(&mut self, dir: &str) -> Result<FaultRates, String> {
@@ -1108,6 +1175,121 @@ drop = 0.05
             format!("{text}\n[chaos]\ncrash_slots = [5, 6]\ncrash_after = [1]\n");
         let err = Scenario::from_toml(&bad).unwrap_err();
         assert!(err.contains("parallel arrays"), "{err}");
+    }
+
+    const SERVICE_BASE: &str = r#"
+[scenario]
+name = "svc"
+engine = "service"
+trials = 1
+seed = 1
+schemes = ["cec"]
+
+[job]
+u = 240
+w = 240
+v = 240
+
+[fleet]
+n_max = 8
+n_workers = 8
+
+[scheme.cec]
+kind = "cec"
+k = 2
+s = 4
+
+[speed]
+kind = "uniform"
+
+[cluster]
+backend = "simulated_latency"
+time_scale = 1.0
+"#;
+
+    #[test]
+    fn service_scenario_round_trips() {
+        use crate::scenario::{ArrivalSpec, ServiceSpec};
+        let text = format!(
+            "{SERVICE_BASE}
+[service]
+arrival = \"open\"
+rate = 20.0
+jobs = 4
+want = 4
+high_priority_every = 2
+"
+        );
+        let sc = Scenario::from_toml(&text).unwrap();
+        assert_eq!(sc.engine, Engine::Service);
+        assert_eq!(
+            sc.service,
+            ServiceSpec {
+                arrival: ArrivalSpec::Open { rate: 20.0 },
+                jobs: 4,
+                want: 4,
+                high_priority_every: 2,
+            }
+        );
+        let back = Scenario::from_toml(&sc.to_toml()).unwrap();
+        assert_eq!(back.to_doc(), sc.to_doc());
+        assert_eq!(back.service, sc.service);
+        // Closed-loop spelling: concurrency defaults to 1.
+        let closed = format!(
+            "{SERVICE_BASE}
+[service]
+arrival = \"closed\"
+jobs = 2
+want = 4
+"
+        );
+        let sc = Scenario::from_toml(&closed).unwrap();
+        assert_eq!(sc.service.arrival, ArrivalSpec::Closed { concurrency: 1 });
+        let back = Scenario::from_toml(&sc.to_toml()).unwrap();
+        assert_eq!(back.to_doc(), sc.to_doc());
+    }
+
+    #[test]
+    fn service_section_requires_the_stream_shape() {
+        let missing = format!("{SERVICE_BASE}\n[service]\narrival = \"closed\"\nwant = 4\n");
+        let err = Scenario::from_toml(&missing).unwrap_err();
+        assert!(err.contains("service.jobs"), "{err}");
+        let bad = format!(
+            "{SERVICE_BASE}\n[service]\narrival = \"sometimes\"\njobs = 2\nwant = 4\n"
+        );
+        let err = Scenario::from_toml(&bad).unwrap_err();
+        assert!(err.contains("open|closed"), "{err}");
+        // Open arrivals need a rate.
+        let no_rate =
+            format!("{SERVICE_BASE}\n[service]\narrival = \"open\"\njobs = 2\nwant = 4\n");
+        let err = Scenario::from_toml(&no_rate).unwrap_err();
+        assert!(err.contains("service.rate"), "{err}");
+    }
+
+    #[test]
+    fn service_section_rejected_for_other_engines() {
+        let text = format!("{FIG2A}\n[service]\narrival = \"closed\"\njobs = 2\nwant = 4\n");
+        let err = Scenario::from_toml(&text).unwrap_err();
+        assert!(err.contains("unknown scenario key"), "{err}");
+        assert!(err.contains("service."), "{err}");
+    }
+
+    #[test]
+    fn chaos_section_rejected_for_the_service_engine() {
+        let text = format!(
+            "{SERVICE_BASE}
+[service]
+arrival = \"closed\"
+jobs = 2
+want = 4
+
+[chaos]
+seed = 3
+"
+        );
+        let err = Scenario::from_toml(&text).unwrap_err();
+        assert!(err.contains("unknown scenario key"), "{err}");
+        assert!(err.contains("chaos.seed"), "{err}");
     }
 
     #[test]

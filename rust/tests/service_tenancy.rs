@@ -1,0 +1,133 @@
+//! Integration acceptance for the multi-tenant elastic job service
+//! (PR 8): two concurrent tenants share one fleet, a fleet leave lands on
+//! both mid-job and fans out through the frozen-geometry planner as
+//! per-tenant backfill, the decode stays bit-correct on the native
+//! backend, and the SLO/utilisation accounting surfaces through the
+//! scenario table and the checked-in example files.
+
+use hcec::coordinator::{
+    run_tenant_service, ClusterBackend, JobRequest, SchemeConfig, ServiceLoad,
+    TenancyConfig, TenantSpeed,
+};
+use hcec::scenario::{ArrivalSpec, Engine, Scenario};
+use hcec::sim::{CostModel, ElasticEvent, ElasticTrace, EventKind};
+use hcec::workload::JobSpec;
+
+fn example_path(name: &str) -> String {
+    format!("{}/../examples/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
+/// A native-backend tenant: real encode, real gemm subtasks, real decode.
+/// 960^3 CEC k=2 s=4 keeps every worker busy for several subtask times
+/// (~1e8 MACs each), so a fleet leave 10ms in lands mid-job with a wide
+/// margin on any CI box.
+fn native_request(name: &str, seed: u64) -> JobRequest {
+    JobRequest {
+        name: name.into(),
+        job: JobSpec::new(960, 960, 960),
+        scheme: SchemeConfig::Cec { k: 2, s: 4 },
+        n_max: 4,
+        want: 4,
+        priority: 0,
+        backend: ClusterBackend::Native,
+        speed: TenantSpeed::Fleet,
+        cost: CostModel::paper_default(),
+        backfill: true,
+        preempt_after_first: 0,
+        seed,
+    }
+}
+
+/// Acceptance: two tenants of 4 slots run concurrently over a fleet of 8;
+/// at t = 10ms slots 0 and 4 leave — one leased by each tenant (leases
+/// are index-ordered on a uniform fleet). Each reactor absorbs its leave
+/// as a planner-priced backfill and still decodes the real product
+/// bit-correctly.
+#[test]
+fn two_tenants_survive_a_fleet_leave_with_bit_correct_decode() {
+    let trace = ElasticTrace {
+        n_max: 8,
+        n_initial: 8,
+        events: vec![
+            ElasticEvent { time: 0.010, kind: EventKind::Leave(0) },
+            ElasticEvent { time: 0.010, kind: EventKind::Leave(4) },
+        ],
+    };
+    let cfg = TenancyConfig {
+        fleet_mults: vec![1.0; 8],
+        fleet_trace: Some(trace),
+        time_scale: 1.0,
+    };
+    let reqs = vec![native_request("tenant-a", 11), native_request("tenant-b", 12)];
+    let rep = run_tenant_service(&cfg, ServiceLoad::closed(reqs, 2)).unwrap();
+    assert!(rep.failures().is_empty(), "{:?}", rep.failures());
+    assert_eq!(rep.per_job.len(), 2);
+    assert_eq!(rep.fleet_leaves, 2);
+    let util = rep.utilisation();
+    assert!(util > 0.0 && util <= 1.0, "util={util}");
+    for j in &rep.per_job {
+        assert_eq!(j.granted, 4);
+        assert_eq!(j.fleet_leaves, 1, "leave did not reach tenant {}", j.id);
+        let report = j.result.as_ref().unwrap();
+        assert_eq!(report.leaves, 1);
+        // CEC at n == s: every worker queues all S sets, so the mid-job
+        // leave abandons a tail the planner must price and re-plan.
+        assert!(
+            report.transition_waste > 0.0,
+            "tenant {} absorbed its leave without waste",
+            j.id
+        );
+        assert!(
+            report.max_rel_err < 1e-3,
+            "tenant {} decode drifted: rel err {}",
+            j.id,
+            report.max_rel_err
+        );
+    }
+    let lat = rep.latency_summary();
+    assert_eq!(lat.n, 2);
+    assert!(lat.p50 > 0.0 && lat.p50 <= lat.p99);
+}
+
+/// Both checked-in service examples parse, validate, and round-trip
+/// through the Doc unchanged.
+#[test]
+fn service_examples_parse_and_round_trip() {
+    let open =
+        Scenario::from_file(&example_path("scenario_service_openloop.toml")).unwrap();
+    assert_eq!(open.engine, Engine::Service);
+    assert!(matches!(open.service.arrival, ArrivalSpec::Open { rate } if rate > 0.0));
+    let back = Scenario::from_toml(&open.to_toml()).unwrap();
+    assert_eq!(back.to_doc(), open.to_doc());
+
+    let closed =
+        Scenario::from_file(&example_path("scenario_service_closedloop.toml")).unwrap();
+    assert_eq!(closed.engine, Engine::Service);
+    assert_eq!(closed.service.arrival, ArrivalSpec::Closed { concurrency: 2 });
+    assert_eq!(closed.service.high_priority_every, 4);
+    let back = Scenario::from_toml(&closed.to_toml()).unwrap();
+    assert_eq!(back.to_doc(), closed.to_doc());
+}
+
+/// The closed-loop example (fleet churn + priority stream) runs end to
+/// end through the scenario engine, and the outcome table carries the
+/// service SLO and utilisation columns (what the CI smoke greps via the
+/// CLI's `service:` line).
+#[test]
+fn closedloop_example_reports_slo_columns() {
+    let sc =
+        Scenario::from_file(&example_path("scenario_service_closedloop.toml")).unwrap();
+    let out = sc.run().unwrap();
+    assert_eq!(out.per_scheme.len(), 1);
+    let s = &out.per_scheme[0];
+    assert_eq!(s.failures(), 0, "{:?}", s.trials);
+    let trial = s.ok_trials().next().unwrap();
+    let stats = trial.service.expect("service trials carry stream stats");
+    assert_eq!(stats.jobs, 4);
+    assert!(stats.utilisation > 0.0 && stats.utilisation <= 1.0, "{stats:?}");
+    assert!(stats.latency_p50 > 0.0 && stats.latency_p50 <= stats.latency_p99);
+    let rendered = out.table().render();
+    for col in ["jobs", "lat_p50_s", "lat_p95_s", "lat_p99_s", "util", "preempts"] {
+        assert!(rendered.contains(col), "missing {col} in\n{rendered}");
+    }
+}
