@@ -6,7 +6,9 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::{ExecBackend, JobConfig, SchemeConfig};
 use crate::figures;
 use crate::metrics::write_csv;
-use crate::scenario::{CoordinatorSpec, ElasticitySpec, Engine, Scenario, SpeedSpec};
+use crate::scenario::{
+    CoordinatorSpec, ElasticitySpec, Engine, Scenario, SpeedSpec, TransportKind,
+};
 use crate::sim::{CostModel, Reassign};
 use crate::tas::DLevelPolicy;
 
@@ -161,6 +163,16 @@ fn run_scenario_file(path: &str, args: &Args) -> Result<(), String> {
         scenario.trials,
         scenario.seed
     );
+    // One greppable transport line for the worker-spawning engines (the
+    // tcp smoke job asserts on it).
+    if matches!(scenario.engine, Engine::Cluster | Engine::Service) {
+        match scenario.transport.kind {
+            TransportKind::Mpsc => println!("transport: kind=mpsc"),
+            TransportKind::Tcp => {
+                println!("transport: kind=tcp bind={}", scenario.transport.bind)
+            }
+        }
+    }
     let out = scenario.run()?;
     emit(&out.table(), &scenario.name, args)?;
     // One greppable robustness line for chaos-injected cluster runs (the
@@ -222,6 +234,24 @@ fn run_scenario_file(path: &str, args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `hcec worker --connect <addr> --slot <i> --generation <g>`: the
+/// multi-process worker runtime. Dials a coordinator's TCP transport
+/// endpoint, handshakes a lease on the named slot, then runs the standard
+/// worker loop with the socket as its command/event links. Cluster runs
+/// with `[transport] kind = "tcp"` spawn these themselves; running one by
+/// hand is for debugging a handshake.
+pub fn worker(args: &Args) -> Result<(), String> {
+    let addr = args
+        .flag("connect")
+        .ok_or("worker: --connect <host:port> is required")?;
+    let slot = args
+        .parse_flag::<usize>("slot")?
+        .ok_or("worker: --slot <index> is required")?;
+    let generation = args.parse_flag::<u64>("generation")?.unwrap_or(0);
+    crate::coordinator::worker_runtime(addr, slot, generation)
+        .map_err(|e| format!("worker slot {slot}: {e}"))
+}
+
 /// `hcec cluster`: the service-layer N-sweep — the paper's scheme trio on
 /// the event-driven cluster core with `SimulatedLatency` workers and
 /// fleet-proportional mid-job churn (real reactor + threads, cost-model
@@ -281,6 +311,36 @@ pub fn service(args: &Args) -> Result<(), String> {
     emit(
         &figures::service_table(&cfg, n, &concs, jobs, trials, scale),
         "service_slo_sweep",
+        args,
+    )
+}
+
+/// `hcec transport`: the drop-rate-vs-recovery sweep — the scheme trio
+/// under escalating symmetric packet loss on the worker links
+/// (`figures::transport_table`). `--kind tcp` reruns the identical
+/// scenarios over real sockets and spawned `hcec worker` processes.
+pub fn transport(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let n = args.parse_flag::<usize>("n")?.unwrap_or(40);
+    if n < cfg.s_cec {
+        return Err(format!("--n {n} below S={} (CEC/MLCEC need N >= S)", cfg.s_cec));
+    }
+    let drops = args
+        .parse_list::<f64>("drops")?
+        .unwrap_or_else(|| figures::TRANSPORT_DROP_RATES.to_vec());
+    if let Some(&bad) = drops.iter().find(|&&d| !(0.0..=1.0).contains(&d)) {
+        return Err(format!("--drops {bad} outside [0, 1]"));
+    }
+    let scale = args.parse_flag::<f64>("scale")?.unwrap_or(0.05);
+    if !(scale > 0.0 && scale.is_finite()) {
+        return Err(format!("--scale {scale} must be finite and positive"));
+    }
+    let trials = args.parse_flag::<usize>("trials")?.unwrap_or(2);
+    let kind = TransportKind::parse(args.flag_or("kind", "mpsc"))
+        .map_err(|e| format!("--kind: {e}"))?;
+    emit(
+        &figures::transport_table(&cfg, n, &drops, trials, scale, kind),
+        "transport_drop_sweep",
         args,
     )
 }

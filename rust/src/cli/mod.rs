@@ -8,6 +8,7 @@
 //! hcec figure <1|2a|2b|2c|2d|all> [--config F] [--csv DIR] [--trials N]
 //! hcec run [--scheme cec|mlcec|bicec] [--backend native|pjrt]
 //!          [--n N] [--preempt P] [--seed S]
+//! hcec worker --connect ADDR --slot I [--generation G]
 //! hcec trace [--rate R] [--trials N] [--seed S]
 //! hcec sweep [--slowdowns 2,5,10] [--probs 0.25,0.5,0.75] [--trials N]
 //! hcec dlevels [--trials N]
@@ -43,6 +44,10 @@ fn known_flags(command: &str) -> Option<&'static [&'static str]> {
             Some(&["config", "trials", "seed", "csv", "n", "conc", "jobs", "scale"])
         }
         "serve" => Some(&["scheme", "backend", "jobs"]),
+        "worker" => Some(&["connect", "slot", "generation"]),
+        "transport" => {
+            Some(&["config", "trials", "seed", "csv", "drops", "n", "scale", "kind"])
+        }
         "visualize" | "calibrate" | "help" => Some(&[]),
         _ => None,
     }
@@ -76,6 +81,8 @@ pub fn dispatch(argv: &[String]) -> i32 {
         Some("cluster") => commands::cluster(&args),
         Some("dlevels") => commands::dlevels(&args),
         Some("serve") => commands::serve(&args),
+        Some("worker") => commands::worker(&args),
+        Some("transport") => commands::transport(&args),
         Some("service") => commands::service(&args),
         Some("hierarchy") => commands::hierarchy(&args),
         Some("hetero") => commands::hetero(&args),
@@ -142,6 +149,19 @@ USAGE:
   hcec serve [--jobs J] [--scheme cec|mlcec|bicec] [--backend native|pjrt]
       Serve a stream of coded jobs on an elastic pool; report latency
       and throughput.
+  hcec worker --connect ADDR --slot I [--generation G]
+      TCP worker runtime: dial a coordinator's [transport] endpoint,
+      handshake a lease on slot I, and run coded subtasks over the
+      socket until told to shut down. Cluster/service runs with
+      [transport] kind = \"tcp\" spawn these automatically; running one
+      by hand is for debugging.
+  hcec transport [--drops 0.0,0.02,0.05] [--n N] [--trials T] [--scale S]
+                 [--kind mpsc|tcp]
+      Drop-rate-vs-recovery sweep: the scheme trio under escalating
+      symmetric packet loss on the worker links, reporting watchdog
+      retries, crashes absorbed and failures per (drop, scheme);
+      --kind tcp reruns the sweep over real sockets and spawned worker
+      processes.
   hcec service [--n N] [--conc 1,2,4] [--jobs J] [--trials T] [--scale S]
       Multi-tenant SLO sweep: closed-loop job streams over one shared
       fleet at rising concurrency (real scheduler + per-tenant reactors,

@@ -4,9 +4,10 @@
 //! [`Link`] is the one-method trait both channel directions cross: the
 //! reactor sends `Command`s through a per-worker link, workers send
 //! `Event`s through their own handle on the shared link. [`MpscLink`] is
-//! the default (today's in-process transport, zero overhead). [`ChaosLink`]
-//! wraps the same sender but round-trips every message through the wire
-//! codec and injects seeded faults per direction:
+//! the default (in-process transport, zero overhead); `net::TcpLink` is the
+//! socket form. [`ChaosLink`] decorates *any* inner link — it round-trips
+//! every message through the wire codec and injects seeded faults per
+//! direction:
 //!
 //! | fault     | knob                | effect                                     |
 //! |-----------|---------------------|--------------------------------------------|
@@ -56,6 +57,15 @@ pub struct MpscLink<T>(pub Sender<T>);
 impl<T: Send> Link<T> for MpscLink<T> {
     fn send(&self, msg: T) -> bool {
         self.0.send(msg).is_ok()
+    }
+}
+
+/// A shared link is still a link — lets a transport hand out one socket
+/// writer (e.g. `Arc<TcpLink<Command>>`) to both a chaos decorator and the
+/// reactor's plain command path.
+impl<T, L: Link<T> + Sync + ?Sized> Link<T> for Arc<L> {
+    fn send(&self, msg: T) -> bool {
+        (**self).send(msg)
     }
 }
 
@@ -257,8 +267,12 @@ impl FaultGen {
 /// round-tripping every message through the wire codec (so the byte form
 /// is what actually crosses, and corruption is detected the way a real
 /// transport would detect it: at decode, by checksum).
+///
+/// The decorated transport is any `Link<T>` — the in-process mpsc sender
+/// by default, or a `TcpLink` when the job runs over sockets — so one
+/// fault model composes with every transport kind.
 pub struct ChaosLink<T: Wire + Clone + Send + 'static> {
-    inner: Sender<T>,
+    inner: Arc<dyn Link<T> + Sync>,
     /// FIFO forwarder for delayed delivery; `None` when `delay_max == 0`.
     delay_tx: Option<Sender<(Duration, T)>>,
     gen: Mutex<FaultGen>,
@@ -272,7 +286,7 @@ pub struct ChaosLink<T: Wire + Clone + Send + 'static> {
 impl<T: Wire + Clone + Send + 'static> ChaosLink<T> {
     #[allow(clippy::too_many_arguments)]
     pub fn new(
-        inner: Sender<T>,
+        inner: Arc<dyn Link<T> + Sync>,
         slot: usize,
         dir: u64,
         seed: u64,
@@ -283,7 +297,7 @@ impl<T: Wire + Clone + Send + 'static> ChaosLink<T> {
     ) -> Self {
         let delay_tx = (rates.delay_max > 0.0).then(|| {
             let (tx, rx) = std::sync::mpsc::channel::<(Duration, T)>();
-            let fwd = inner.clone();
+            let fwd = Arc::clone(&inner);
             std::thread::Builder::new()
                 .name(format!("hcec-chaos-delay-{slot}"))
                 .stack_size(64 * 1024)
@@ -292,7 +306,7 @@ impl<T: Wire + Clone + Send + 'static> ChaosLink<T> {
                     // jitter without reordering one link's messages.
                     while let Ok((d, msg)) = rx.recv() {
                         std::thread::sleep(d);
-                        if fwd.send(msg).is_err() {
+                        if !fwd.send(msg) {
                             break;
                         }
                     }
@@ -372,7 +386,7 @@ impl<T: Wire + Clone + Send + 'static> Link<T> for ChaosLink<T> {
                     stats.delayed.fetch_add(1, Ordering::Relaxed);
                     tx.send((Duration::from_secs_f64(d), msg.clone())).is_ok()
                 }
-                _ => self.inner.send(msg.clone()).is_ok(),
+                _ => self.inner.send(msg.clone()),
             };
             if !delivered {
                 return false;
@@ -416,9 +430,15 @@ impl ChaosRig {
         seed
     }
 
-    pub fn wrap_cmd(&self, slot: usize, tx: Sender<Command>) -> Box<dyn Link<Command>> {
+    /// Decorate an arbitrary command-direction transport (mpsc, TCP, ...)
+    /// with this rig's fault schedule.
+    pub fn wrap_cmd_link(
+        &self,
+        slot: usize,
+        inner: Arc<dyn Link<Command> + Sync>,
+    ) -> Box<dyn Link<Command>> {
         Box::new(ChaosLink::new(
-            tx,
+            inner,
             slot,
             DIR_CMD,
             self.stream_seed(DIR_CMD, slot),
@@ -429,9 +449,15 @@ impl ChaosRig {
         ))
     }
 
-    pub fn wrap_evt(&self, slot: usize, tx: Sender<Event>) -> Box<dyn Link<Event>> {
+    /// Decorate an arbitrary event-direction transport with this rig's
+    /// fault schedule.
+    pub fn wrap_evt_link(
+        &self,
+        slot: usize,
+        inner: Arc<dyn Link<Event> + Sync>,
+    ) -> Box<dyn Link<Event>> {
         Box::new(ChaosLink::new(
-            tx,
+            inner,
             slot,
             DIR_EVT,
             self.stream_seed(DIR_EVT, slot),
@@ -440,6 +466,14 @@ impl ChaosRig {
             self.epoch,
             Arc::clone(&self.stats),
         ))
+    }
+
+    pub fn wrap_cmd(&self, slot: usize, tx: Sender<Command>) -> Box<dyn Link<Command>> {
+        self.wrap_cmd_link(slot, Arc::new(MpscLink(tx)))
+    }
+
+    pub fn wrap_evt(&self, slot: usize, tx: Sender<Event>) -> Box<dyn Link<Event>> {
+        self.wrap_evt_link(slot, Arc::new(MpscLink(tx)))
     }
 
     pub fn crash_after(&self, slot: usize) -> Option<usize> {

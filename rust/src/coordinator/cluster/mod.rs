@@ -31,6 +31,7 @@
 mod backend;
 mod ledger;
 mod link;
+mod net;
 mod protocol;
 mod wire;
 
@@ -39,6 +40,10 @@ pub use ledger::RecoveryLedger;
 pub use link::{
     ChaosConfig, ChaosCounts, ChaosLink, ChaosRig, ChaosStats, CrashSpec, FaultGen,
     FaultRates, Link, MpscLink, Partition,
+};
+pub use net::{
+    spawn_worker_process, worker_runtime, Endpoint, FrameReader, KillSpec, NetMsg,
+    TcpLink, TcpTransport, TransportConfig, NET_VERSION,
 };
 pub use protocol::{spawn_cluster_worker, ClusterWorker, Command, Event};
 pub use wire::{Wire, WireError};
@@ -119,6 +124,9 @@ pub struct ClusterConfig {
     /// the named workers, and arm the reactor's stall watchdog. `None`
     /// runs the pristine transport (no watchdog, no codec round-trips).
     pub chaos: Option<ChaosConfig>,
+    /// What the worker channels cross: in-process mpsc (default) or one
+    /// OS process per worker over localhost/LAN TCP (`cluster::net`).
+    pub transport: TransportConfig,
     pub seed: u64,
 }
 
@@ -137,6 +145,7 @@ impl ClusterConfig {
             preempt_after_first: 0,
             backfill: true,
             chaos: None,
+            transport: TransportConfig::default(),
             seed: 0,
         }
     }
@@ -380,6 +389,15 @@ fn run_cluster_job_with(
         }
         None => None,
     };
+    let endpoint = match &cfg.transport {
+        TransportConfig::Mpsc => None,
+        TransportConfig::Tcp(tcp) => {
+            tcp.validate().map_err(|e| anyhow!("transport config: {e}"))?;
+            let ep = Endpoint::bind(tcp)
+                .map_err(|e| anyhow!("transport: bind {}: {e}", tcp.bind))?;
+            Some(ep)
+        }
+    };
     let (evt_tx, evt_rx) = std::sync::mpsc::channel();
     let mut reactor = Reactor {
         rule,
@@ -429,12 +447,16 @@ fn run_cluster_job_with(
         deficits: Vec::new(),
         t_comp: Instant::now(),
         chaos,
+        endpoint,
         crashes_absorbed: 0,
         retries: 0,
         dup_suppressed: 0,
         fruitless_respins: 0,
         last_progress: Instant::now(),
     };
+    if let Some(addr) = reactor.endpoint.as_ref().map(|ep| ep.addr()) {
+        reactor.note(format!("transport: kind=tcp bind={addr}"));
+    }
     for (slot, list) in alloc.lists.iter().enumerate() {
         let groups: Vec<usize> = list.iter().map(|item| item.group).collect();
         reactor.spawn(slot, groups, false);
@@ -612,6 +634,10 @@ struct Reactor {
     /// seeded `ChaosLink`s and arms the stall watchdog. `None` = pristine
     /// transport, no watchdog, exactly the pre-chaos reactor.
     chaos: Option<ChaosRig>,
+    /// TCP session endpoint (`cluster::net`): `Some` = every spawned slot
+    /// is a separate `hcec worker` process dialing back over TCP, and the
+    /// links below the reactor are socket-framed instead of mpsc.
+    endpoint: Option<Endpoint>,
     /// Worker crashes absorbed as unplanned leaves (backfill kept every
     /// affected group above threshold).
     crashes_absorbed: usize,
@@ -672,16 +698,21 @@ impl Reactor {
             Some(ctx) => (Some(ctx.encoded_for(slot)), Some(ctx.b.clone())),
             None => (None, None),
         };
-        let worker = spawn_cluster_worker(
-            slot,
-            self.backend_spec.clone(),
-            encoded,
-            b,
-            self.speeds.multiplier(slot).max(1.0),
-            self.stack_kib,
-            self.evt_tx.clone(),
-            self.chaos.as_ref(),
-        );
+        let multiplier = self.speeds.multiplier(slot).max(1.0);
+        let worker = if self.endpoint.is_some() {
+            self.spawn_remote(slot, encoded, b, multiplier)
+        } else {
+            spawn_cluster_worker(
+                slot,
+                self.backend_spec.clone(),
+                encoded,
+                b,
+                multiplier,
+                self.stack_kib,
+                self.evt_tx.clone(),
+                self.chaos.as_ref(),
+            )
+        };
         worker.send(Command::Assign { tasks });
         match self.rule {
             RecoveryRule::PerSet { .. } => {
@@ -694,6 +725,57 @@ impl Reactor {
         self.slots[slot] =
             Some(SlotEntry { worker, pending: groups, leaving: None, joined_mid });
         self.live += 1;
+    }
+
+    /// TCP path of `spawn`: offer the slot, fork an `hcec worker` process,
+    /// and wire its session into the reactor's event channel (with the
+    /// chaos decorators on both directions when a rig is armed). A failed
+    /// bring-up degrades to a dead command link plus a synthesized crash
+    /// notice, so the ordinary crash-as-leave machinery absorbs it.
+    fn spawn_remote(
+        &self,
+        slot: usize,
+        encoded: Option<Arc<Matrix>>,
+        b: Option<Arc<Matrix>>,
+        multiplier: f64,
+    ) -> ClusterWorker {
+        let endpoint = self.endpoint.as_ref().expect("tcp transport");
+        let to_wire_mat =
+            |m: &Matrix| (m.rows() as u64, m.cols() as u64, m.as_slice().to_vec());
+        let job = NetMsg::Job {
+            spec: self.backend_spec.clone(),
+            multiplier,
+            crash_after: self
+                .chaos
+                .as_ref()
+                .and_then(|rig| rig.crash_after(slot))
+                .map(|n| n as u64),
+            encoded: encoded.as_deref().map(to_wire_mat),
+            b: b.as_deref().map(to_wire_mat),
+        };
+        let evt: Box<dyn Link<Event>> = match self.chaos.as_ref() {
+            Some(rig) => {
+                rig.wrap_evt_link(slot, Arc::new(MpscLink(self.evt_tx.clone())))
+            }
+            None => Box::new(MpscLink(self.evt_tx.clone())),
+        };
+        match endpoint.spawn_session(slot, &job, evt) {
+            Ok(session) => {
+                let cmd: Box<dyn Link<Command>> = match self.chaos.as_ref() {
+                    Some(rig) => rig.wrap_cmd_link(slot, session.cmd),
+                    None => Box::new(session.cmd),
+                };
+                ClusterWorker::from_parts(slot, cmd, Some(session.reader))
+            }
+            Err(e) => {
+                let _ = self.evt_tx.send(Event::WorkerLeft {
+                    slot,
+                    delivered: 0,
+                    error: Some(e),
+                });
+                ClusterWorker::from_parts(slot, Box::new(net::DeadLink), None)
+            }
+        }
     }
 
     /// The reactor loop. Returns the computation wall time on recovery.
@@ -1478,6 +1560,7 @@ mod tests {
             preempt_after_first: 0,
             backfill: true,
             chaos: None,
+            transport: TransportConfig::default(),
             seed: 1,
         }
     }

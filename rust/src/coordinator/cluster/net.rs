@@ -1,0 +1,1133 @@
+//! Socket transport: real worker processes over localhost/LAN TCP, behind
+//! the same [`Link`] trait the in-process mpsc transport implements — the
+//! reactor, `FrozenPlanner` backfill, stall watchdog and chaos machinery
+//! all run unchanged over real sockets.
+//!
+//! ```text
+//!   coordinator process                         worker process (hcec worker)
+//!   ┌──────────────────────────────┐            ┌──────────────────────────┐
+//!   │ Reactor                      │            │ worker_runtime           │
+//!   │   spawn ──► Endpoint         │  TCP       │   dial ──► Hello{v,slot, │
+//!   │     register(slot, Job)      │◄──────────►│            generation}   │
+//!   │     spawn_worker_process ────┼── fork ───►│   ◄── Welcome{generation}│
+//!   │     accept ► handshake ✓     │            │   ◄── Job{spec,operands} │
+//!   │   cmd: TcpLink<Command> ─────┼── frames ─►│   cmd_feed ► worker_loop │
+//!   │   session reader ◄───────────┼◄─ frames ──┤   evt: TcpLink<Event>    │
+//!   │     (EOF ⇒ crash-as-leave)   │            │                          │
+//!   └──────────────────────────────┘            └──────────────────────────┘
+//! ```
+//!
+//! Both directions speak the `wire.rs` frames (magic + kind + len + CRC);
+//! [`FrameReader`] reassembles them from arbitrary TCP read boundaries. The
+//! handshake adds a third frame kind ([`NetMsg`], kind 2): the worker dials
+//! in and claims a slot; the coordinator validates the claim against its
+//! session table — an unoffered slot or a second live claim on a leased
+//! slot is rejected with a named error, while a stale-generation claim on
+//! an *offered* slot is accepted and re-keyed to the current generation
+//! (the `Welcome` carries the authoritative generation). A session whose
+//! connection drops without a clean `WorkerLeft` is synthesized into
+//! `WorkerLeft { error: Some(..) }` — the reactor's crash-as-leave path,
+//! identical to an injected chaos crash.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::backend::BackendSpec;
+use super::link::Link;
+use super::protocol::{Command, Event};
+use super::wire::{frame_len, put_u64, Cursor, Wire, WireError};
+
+/// Handshake protocol version; bump on any incompatible `NetMsg` change.
+pub const NET_VERSION: u32 = 1;
+
+/// How the accept thread polls its non-blocking listener.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+/// Socket read buffer for frame reassembly.
+const READ_BUF: usize = 64 * 1024;
+
+/// Which transport a cluster job's worker channels cross.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum TransportConfig {
+    /// In-process worker threads over mpsc channels (the PR 4 runtime).
+    #[default]
+    Mpsc,
+    /// One OS process per worker, dialing back over TCP.
+    Tcp(TcpTransport),
+}
+
+impl TransportConfig {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TransportConfig::Mpsc => "mpsc",
+            TransportConfig::Tcp(_) => "tcp",
+        }
+    }
+}
+
+/// Socket transport knobs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TcpTransport {
+    /// Coordinator bind address. Port 0 picks an ephemeral port (the
+    /// worker command line gets the resolved address), which is what CI
+    /// and multi-tenant runs should use to avoid collisions.
+    pub bind: String,
+    /// Seconds a freshly spawned worker process has to dial in and finish
+    /// its handshake before the spawn is declared failed.
+    pub accept_timeout: f64,
+    /// Per-connection handshake read timeout (seconds) on the coordinator
+    /// side — bounds how long a dialer can sit half-shaken.
+    pub handshake_timeout: f64,
+    /// Worker executable; `None` = this very binary (`current_exe`).
+    /// Integration tests running under `cargo test` must pass the real
+    /// `hcec` path (`env!("CARGO_BIN_EXE_hcec")`) — their own process is
+    /// the test harness, not the CLI.
+    pub worker_exe: Option<PathBuf>,
+    /// Test harness: SIGKILL the named slot's worker *process* after its
+    /// n-th completion crosses the session — exercises the crash-as-leave
+    /// path with a real process death instead of an injected error.
+    pub kill_after: Option<KillSpec>,
+}
+
+impl Default for TcpTransport {
+    fn default() -> Self {
+        Self {
+            bind: "127.0.0.1:0".into(),
+            accept_timeout: 10.0,
+            handshake_timeout: 5.0,
+            worker_exe: None,
+            kill_after: None,
+        }
+    }
+}
+
+impl TcpTransport {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.bind.is_empty() {
+            return Err("bind address is empty".into());
+        }
+        if !self.accept_timeout.is_finite() || self.accept_timeout <= 0.0 {
+            return Err(format!(
+                "accept_timeout = {} must be positive",
+                self.accept_timeout
+            ));
+        }
+        if !self.handshake_timeout.is_finite() || self.handshake_timeout <= 0.0 {
+            return Err(format!(
+                "handshake_timeout = {} must be positive",
+                self.handshake_timeout
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// SIGKILL the worker process on `slot` after `after` completions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KillSpec {
+    pub slot: usize,
+    pub after: usize,
+}
+
+/// Session-layer messages (frame kind 2 — never decodable as a `Command`
+/// or `Event`). `Job` ships everything `spawn_cluster_worker` passed as
+/// in-process arguments: backend spec, straggler multiplier, chaos crash
+/// countdown, and the slot's coded operands.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NetMsg {
+    Hello { version: u32, slot: u64, generation: u64 },
+    Welcome { generation: u64 },
+    Reject { reason: String },
+    Job {
+        spec: BackendSpec,
+        multiplier: f64,
+        crash_after: Option<u64>,
+        /// `(rows, cols, data)` — the slot's coded task; `None` for
+        /// latency-only backends.
+        encoded: Option<(u64, u64, Vec<f32>)>,
+        /// The shared right operand, same layout.
+        b: Option<(u64, u64, Vec<f32>)>,
+    },
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(cur: &mut Cursor<'_>) -> Result<String, WireError> {
+    let n = cur.count(1)?;
+    let bytes = cur.take(n)?;
+    String::from_utf8(bytes.to_vec()).map_err(|_| WireError::BadUtf8)
+}
+
+fn put_mat(out: &mut Vec<u8>, m: &Option<(u64, u64, Vec<f32>)>) {
+    match m {
+        None => out.push(0),
+        Some((rows, cols, data)) => {
+            out.push(1);
+            put_u64(out, *rows);
+            put_u64(out, *cols);
+            out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+            for v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+}
+
+fn get_mat(cur: &mut Cursor<'_>) -> Result<Option<(u64, u64, Vec<f32>)>, WireError> {
+    match cur.u8()? {
+        0 => Ok(None),
+        1 => {
+            let rows = cur.u64()?;
+            let cols = cur.u64()?;
+            let n = cur.count(4)?;
+            if rows.checked_mul(cols) != Some(n as u64) {
+                return Err(WireError::BadLength);
+            }
+            let mut data = Vec::with_capacity(n);
+            for _ in 0..n {
+                data.push(f32::from_le_bytes(cur.take(4)?.try_into().unwrap()));
+            }
+            Ok(Some((rows, cols, data)))
+        }
+        t => Err(WireError::BadTag(t)),
+    }
+}
+
+impl Wire for NetMsg {
+    const KIND: u8 = 2;
+
+    fn encode_payload(&self, out: &mut Vec<u8>) {
+        match self {
+            NetMsg::Hello { version, slot, generation } => {
+                out.push(0);
+                out.extend_from_slice(&version.to_le_bytes());
+                put_u64(out, *slot);
+                put_u64(out, *generation);
+            }
+            NetMsg::Welcome { generation } => {
+                out.push(1);
+                put_u64(out, *generation);
+            }
+            NetMsg::Reject { reason } => {
+                out.push(2);
+                put_str(out, reason);
+            }
+            NetMsg::Job { spec, multiplier, crash_after, encoded, b } => {
+                out.push(3);
+                match spec {
+                    BackendSpec::Native => out.push(0),
+                    BackendSpec::Simulated { subtask_secs } => {
+                        out.push(1);
+                        out.extend_from_slice(&subtask_secs.to_le_bytes());
+                    }
+                    BackendSpec::Pjrt { artifact, dir } => {
+                        out.push(2);
+                        put_str(out, artifact);
+                        put_str(out, &dir.to_string_lossy());
+                    }
+                }
+                out.extend_from_slice(&multiplier.to_le_bytes());
+                match crash_after {
+                    None => out.push(0),
+                    Some(n) => {
+                        out.push(1);
+                        put_u64(out, *n);
+                    }
+                }
+                put_mat(out, encoded);
+                put_mat(out, b);
+            }
+        }
+    }
+
+    fn decode_payload(cur: &mut Cursor<'_>) -> Result<Self, WireError> {
+        match cur.u8()? {
+            0 => Ok(NetMsg::Hello {
+                version: cur.u32()?,
+                slot: cur.u64()?,
+                generation: cur.u64()?,
+            }),
+            1 => Ok(NetMsg::Welcome { generation: cur.u64()? }),
+            2 => Ok(NetMsg::Reject { reason: get_str(cur)? }),
+            3 => {
+                let spec = match cur.u8()? {
+                    0 => BackendSpec::Native,
+                    1 => BackendSpec::Simulated { subtask_secs: cur.f64()? },
+                    2 => BackendSpec::Pjrt {
+                        artifact: get_str(cur)?,
+                        dir: PathBuf::from(get_str(cur)?),
+                    },
+                    t => return Err(WireError::BadTag(t)),
+                };
+                let multiplier = cur.f64()?;
+                let crash_after = match cur.u8()? {
+                    0 => None,
+                    1 => Some(cur.u64()?),
+                    t => return Err(WireError::BadTag(t)),
+                };
+                Ok(NetMsg::Job {
+                    spec,
+                    multiplier,
+                    crash_after,
+                    encoded: get_mat(cur)?,
+                    b: get_mat(cur)?,
+                })
+            }
+            t => Err(WireError::BadTag(t)),
+        }
+    }
+}
+
+/// Incremental frame reassembly: TCP delivers bytes at arbitrary
+/// boundaries; `feed` buffers them and `next_frame` splits off one whole
+/// frame at a time. Desync (bad magic) and oversized declared lengths
+/// surface immediately as errors — a byte stream that has lost framing
+/// can never heal.
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>, WireError> {
+        match frame_len(&self.buf)? {
+            Some(total) if self.buf.len() >= total => {
+                let rest = self.buf.split_off(total);
+                Ok(Some(std::mem::replace(&mut self.buf, rest)))
+            }
+            _ => Ok(None),
+        }
+    }
+}
+
+/// Read whole frames from `stream` through `fr` until one decodes as `T`.
+fn read_msg<T: Wire>(stream: &mut TcpStream, fr: &mut FrameReader) -> Result<T, String> {
+    let mut buf = [0u8; READ_BUF];
+    loop {
+        if let Some(frame) = fr.next_frame().map_err(|e| format!("bad frame: {e}"))? {
+            return T::from_wire(&frame).map_err(|e| format!("bad frame: {e}"));
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => return Err("connection closed".into()),
+            Ok(n) => fr.feed(&buf[..n]),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(format!("read: {e}")),
+        }
+    }
+}
+
+/// A [`Link`] that frames each message onto a TCP stream. `send` returns
+/// `false` once the peer is gone (write error), mirroring the mpsc
+/// contract. Dropping the link shuts down the socket's write half, which
+/// the peer observes as EOF — the socket equivalent of dropping an mpsc
+/// sender.
+pub struct TcpLink<T: Wire> {
+    stream: Mutex<TcpStream>,
+    _direction: std::marker::PhantomData<fn(T)>,
+}
+
+impl<T: Wire> TcpLink<T> {
+    pub fn new(stream: TcpStream) -> Self {
+        Self { stream: Mutex::new(stream), _direction: std::marker::PhantomData }
+    }
+}
+
+impl<T: Wire + Send> Link<T> for TcpLink<T> {
+    fn send(&self, msg: T) -> bool {
+        let frame = msg.to_wire();
+        let mut s = self.stream.lock().unwrap();
+        s.write_all(&frame).and_then(|_| s.flush()).is_ok()
+    }
+}
+
+impl<T: Wire> Drop for TcpLink<T> {
+    fn drop(&mut self) {
+        let _ = self.stream.lock().unwrap().shutdown(Shutdown::Write);
+    }
+}
+
+/// A command link whose worker is already gone; every send reports the
+/// disconnect. Installed when a session fails to come up, so the reactor's
+/// ordinary crash-as-leave machinery (fed a synthesized `WorkerLeft`)
+/// handles the failure without a special case.
+pub struct DeadLink;
+
+impl<T: Send> Link<T> for DeadLink {
+    fn send(&self, _msg: T) -> bool {
+        false
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum SlotStatus {
+    /// Offered: a worker process was spawned for it and may claim it.
+    Awaiting,
+    /// Claimed by a live session.
+    Live,
+    /// The session ended (cleanly or by connection loss).
+    Dead,
+}
+
+struct SlotState {
+    generation: u64,
+    status: SlotStatus,
+    /// Pre-encoded `NetMsg::Job` frame, written right after `Welcome`.
+    job: Arc<Vec<u8>>,
+    /// Hands the handshake-complete stream back to `spawn_session`.
+    reply: Option<Sender<TcpStream>>,
+}
+
+struct EndpointShared {
+    stop: AtomicBool,
+    slots: Mutex<HashMap<usize, SlotState>>,
+    /// Next session generation per slot (1-based).
+    gens: Mutex<HashMap<usize, u64>>,
+    /// Handshakes rejected for claiming an already-leased slot.
+    double_claims: AtomicU64,
+    /// The `kill_after` harness has fired (at most one kill per endpoint).
+    killed: AtomicBool,
+}
+
+impl EndpointShared {
+    /// Mark `slot` dead iff it still belongs to `generation` — a respawn
+    /// may already have re-registered the slot under a newer generation.
+    fn mark_dead(&self, slot: usize, generation: u64) {
+        let mut slots = self.slots.lock().unwrap();
+        if let Some(st) = slots.get_mut(&slot) {
+            if st.generation == generation {
+                st.status = SlotStatus::Dead;
+                st.reply = None;
+            }
+        }
+    }
+}
+
+/// A live coordinator-side session: the command link into the worker
+/// process and the session-reader thread to join at shutdown.
+pub struct SessionHandle {
+    pub cmd: Arc<TcpLink<Command>>,
+    pub reader: JoinHandle<()>,
+}
+
+/// The coordinator's listening endpoint: owns the session table and the
+/// accept/handshake thread. One endpoint per cluster job (multi-tenant
+/// runs bind one per tenant — use port 0).
+pub struct Endpoint {
+    addr: SocketAddr,
+    shared: Arc<EndpointShared>,
+    accept_join: Option<JoinHandle<()>>,
+    cfg: TcpTransport,
+}
+
+impl Endpoint {
+    pub fn bind(cfg: &TcpTransport) -> io::Result<Self> {
+        let listener = TcpListener::bind(&cfg.bind)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(EndpointShared {
+            stop: AtomicBool::new(false),
+            slots: Mutex::new(HashMap::new()),
+            gens: Mutex::new(HashMap::new()),
+            double_claims: AtomicU64::new(0),
+            killed: AtomicBool::new(false),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let handshake_timeout = cfg.handshake_timeout;
+        let accept_join = std::thread::Builder::new()
+            .name("hcec-net-accept".into())
+            .spawn(move || accept_loop(listener, accept_shared, handshake_timeout))?;
+        Ok(Self { addr, shared, accept_join: Some(accept_join), cfg: cfg.clone() })
+    }
+
+    /// The resolved listen address (port 0 in the config becomes the
+    /// kernel-assigned ephemeral port here).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Handshakes rejected for claiming an already-leased slot.
+    pub fn double_claims(&self) -> u64 {
+        self.shared.double_claims.load(Ordering::Relaxed)
+    }
+
+    /// Offer `slot` to the next dialer: bump its generation and stage the
+    /// job frame. Returns the new generation and the channel on which the
+    /// accept thread delivers the handshake-complete stream.
+    fn register(&self, slot: usize, job: &NetMsg) -> (u64, Receiver<TcpStream>) {
+        let generation = {
+            let mut gens = self.shared.gens.lock().unwrap();
+            let g = gens.entry(slot).or_insert(0);
+            *g += 1;
+            *g
+        };
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.shared.slots.lock().unwrap().insert(
+            slot,
+            SlotState {
+                generation,
+                status: SlotStatus::Awaiting,
+                job: Arc::new(job.to_wire()),
+                reply: Some(tx),
+            },
+        );
+        (generation, rx)
+    }
+
+    /// Bring up one worker session: offer the slot, spawn the worker
+    /// process, wait for its handshake, and start the session reader that
+    /// pumps its events into `evt` (synthesizing crash-as-leave on
+    /// connection loss).
+    pub fn spawn_session(
+        &self,
+        slot: usize,
+        job: &NetMsg,
+        evt: Box<dyn Link<Event>>,
+    ) -> Result<SessionHandle, String> {
+        let (generation, reply_rx) = self.register(slot, job);
+        let mut child = spawn_worker_process(
+            self.cfg.worker_exe.as_deref(),
+            &self.addr.to_string(),
+            slot,
+            generation,
+        )
+        .map_err(|e| {
+            self.shared.mark_dead(slot, generation);
+            format!("slot {slot}: spawn worker process: {e}")
+        })?;
+        let timeout = Duration::from_secs_f64(self.cfg.accept_timeout);
+        let stream = match reply_rx.recv_timeout(timeout) {
+            Ok(s) => s,
+            Err(_) => {
+                self.shared.mark_dead(slot, generation);
+                let _ = child.kill();
+                let _ = child.wait();
+                return Err(format!(
+                    "slot {slot}: worker did not complete its handshake within \
+                     {}s",
+                    self.cfg.accept_timeout
+                ));
+            }
+        };
+        let reader_stream = stream.try_clone().map_err(|e| {
+            self.shared.mark_dead(slot, generation);
+            let _ = child.kill();
+            let _ = child.wait();
+            format!("slot {slot}: clone session stream: {e}")
+        })?;
+        let shared = Arc::clone(&self.shared);
+        let kill = self.cfg.kill_after;
+        let reader = std::thread::Builder::new()
+            .name(format!("hcec-net-session-{slot}"))
+            .spawn(move || {
+                session_reader(reader_stream, child, slot, generation, evt, shared, kill)
+            })
+            .map_err(|e| format!("slot {slot}: spawn session reader: {e}"))?;
+        Ok(SessionHandle { cmd: Arc::new(TcpLink::new(stream)), reader })
+    }
+}
+
+impl Drop for Endpoint {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_join.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<EndpointShared>, handshake_timeout: f64) {
+    while !shared.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => handshake(stream, &shared, handshake_timeout),
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+fn reject(mut stream: TcpStream, reason: String) {
+    let frame = NetMsg::Reject { reason }.to_wire();
+    let _ = stream.write_all(&frame);
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Validate one dialer against the session table. Runs on the accept
+/// thread; handshakes are tiny, so sequential processing keeps the table
+/// logic single-writer simple.
+fn handshake(mut stream: TcpStream, shared: &Arc<EndpointShared>, timeout: f64) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs_f64(timeout)));
+    let mut fr = FrameReader::default();
+    let hello: NetMsg = match read_msg(&mut stream, &mut fr) {
+        Ok(m) => m,
+        Err(_) => return, // dialer vanished mid-handshake
+    };
+    let NetMsg::Hello { version, slot, generation: claimed } = hello else {
+        reject(stream, "handshake must open with hello".into());
+        return;
+    };
+    if version != NET_VERSION {
+        reject(
+            stream,
+            format!("protocol version {version} unsupported (want {NET_VERSION})"),
+        );
+        return;
+    }
+    let slot = slot as usize;
+    // Decide under the lock; write outside it.
+    let (generation, job) = {
+        let mut slots = shared.slots.lock().unwrap();
+        match slots.get_mut(&slot) {
+            None => {
+                drop(slots);
+                reject(stream, format!("slot {slot} not offered by this coordinator"));
+                return;
+            }
+            Some(st) if st.status == SlotStatus::Live => {
+                let gen = st.generation;
+                drop(slots);
+                shared.double_claims.fetch_add(1, Ordering::Relaxed);
+                reject(
+                    stream,
+                    format!(
+                        "duplicate-lease: slot {slot} already leased by a live \
+                         session (generation {gen})"
+                    ),
+                );
+                return;
+            }
+            Some(st) if st.status == SlotStatus::Dead => {
+                drop(slots);
+                reject(stream, format!("slot {slot} lease expired"));
+                return;
+            }
+            Some(st) => {
+                // Awaiting: accept. A stale `claimed` generation (a worker
+                // re-dialing after its predecessor crashed) is re-keyed to
+                // the current one — the Welcome is authoritative.
+                let _ = claimed;
+                st.status = SlotStatus::Live;
+                (st.generation, Arc::clone(&st.job))
+            }
+        }
+    };
+    let _ = stream.set_read_timeout(None);
+    let welcome = NetMsg::Welcome { generation }.to_wire();
+    if stream.write_all(&welcome).and_then(|_| stream.write_all(&job)).is_err() {
+        shared.mark_dead(slot, generation);
+        return;
+    }
+    let reply = {
+        let mut slots = shared.slots.lock().unwrap();
+        slots.get_mut(&slot).and_then(|st| st.reply.take())
+    };
+    let delivered = reply.is_some_and(|tx| tx.send(stream).is_ok());
+    if !delivered {
+        // spawn_session already gave up (timeout) — expire the lease.
+        shared.mark_dead(slot, generation);
+    }
+}
+
+/// Pump one session's events off the socket into the reactor. A clean
+/// `WorkerLeft` ends the session; EOF or any stream error without one is
+/// a worker death, synthesized as `WorkerLeft { error: Some(..) }` so the
+/// reactor runs its crash-as-leave backfill. Also hosts the `kill_after`
+/// harness (a real SIGKILL of the worker process) and reaps the child.
+fn session_reader(
+    mut stream: TcpStream,
+    mut child: Child,
+    slot: usize,
+    generation: u64,
+    evt: Box<dyn Link<Event>>,
+    shared: Arc<EndpointShared>,
+    kill: Option<KillSpec>,
+) {
+    let mut fr = FrameReader::default();
+    let mut buf = [0u8; READ_BUF];
+    let mut completions = 0usize;
+    let mut clean = false;
+    'session: loop {
+        loop {
+            match fr.next_frame() {
+                Ok(Some(frame)) => {
+                    let ev = match Event::from_wire(&frame) {
+                        Ok(e) => e,
+                        Err(_) => break 'session, // desync — treat as lost
+                    };
+                    if matches!(ev, Event::SubtaskDone { .. }) {
+                        completions += 1;
+                        if kill.is_some_and(|k| k.slot == slot && completions >= k.after)
+                            && !shared.killed.swap(true, Ordering::SeqCst)
+                        {
+                            let _ = child.kill();
+                        }
+                    }
+                    if matches!(ev, Event::WorkerLeft { .. }) {
+                        // Mark dead BEFORE forwarding: the reactor may
+                        // respawn this slot the moment it sees the exit.
+                        shared.mark_dead(slot, generation);
+                        clean = true;
+                        evt.send(ev);
+                        break 'session;
+                    }
+                    evt.send(ev);
+                }
+                Ok(None) => break,
+                Err(_) => break 'session,
+            }
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => fr.feed(&buf[..n]),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        }
+    }
+    if !clean {
+        // Connection lost without a goodbye: make sure the process is
+        // actually gone (a hung worker must not block the reap below).
+        let _ = child.kill();
+        shared.mark_dead(slot, generation);
+        evt.send(Event::WorkerLeft {
+            slot,
+            delivered: completions,
+            error: Some(format!("transport: connection to worker {slot} lost")),
+        });
+    }
+    let _ = child.wait();
+}
+
+/// Launch one `hcec worker` process pointed at the coordinator. `exe =
+/// None` re-executes the current binary (correct when the coordinator is
+/// the `hcec` CLI itself).
+pub fn spawn_worker_process(
+    exe: Option<&Path>,
+    addr: &str,
+    slot: usize,
+    generation: u64,
+) -> io::Result<Child> {
+    let exe = match exe {
+        Some(p) => p.to_path_buf(),
+        None => std::env::current_exe()?,
+    };
+    std::process::Command::new(exe)
+        .arg("worker")
+        .arg("--connect")
+        .arg(addr)
+        .arg("--slot")
+        .arg(slot.to_string())
+        .arg("--generation")
+        .arg(generation.to_string())
+        .stdin(Stdio::null())
+        .spawn()
+}
+
+/// The worker process's whole life: dial, handshake, receive the job,
+/// then run the shared `worker_loop` with a socket-fed command channel
+/// and a socket-framed event link. Returns `Err` with the coordinator's
+/// named reason when the slot claim is rejected.
+pub fn worker_runtime(addr: &str, slot: usize, generation: u64) -> Result<(), String> {
+    let mut stream =
+        TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let _ = stream.set_nodelay(true);
+    let hello =
+        NetMsg::Hello { version: NET_VERSION, slot: slot as u64, generation }.to_wire();
+    stream.write_all(&hello).map_err(|e| format!("send hello: {e}"))?;
+    let mut fr = FrameReader::default();
+    let generation = match read_msg::<NetMsg>(&mut stream, &mut fr)? {
+        NetMsg::Welcome { generation } => generation,
+        NetMsg::Reject { reason } => return Err(format!("rejected: {reason}")),
+        other => return Err(format!("unexpected handshake reply: {other:?}")),
+    };
+    let NetMsg::Job { spec, multiplier, crash_after, encoded, b } =
+        read_msg::<NetMsg>(&mut stream, &mut fr)?
+    else {
+        return Err("expected a job after the welcome".into());
+    };
+    let _ = generation;
+    let to_matrix = |(rows, cols, data): (u64, u64, Vec<f32>)| {
+        crate::linalg::Matrix::from_vec(rows as usize, cols as usize, data)
+    };
+    let encoded = encoded.map(to_matrix);
+    let b = b.map(to_matrix);
+    // Socket → channel command feed: the shared worker_loop keeps its
+    // blocking-first / drain-between-subtasks semantics, and a dropped
+    // connection closes the channel exactly like a dropped mpsc sender.
+    let cmd_stream = stream.try_clone().map_err(|e| format!("clone stream: {e}"))?;
+    let (cmd_tx, cmd_rx) = std::sync::mpsc::channel();
+    std::thread::Builder::new()
+        .name(format!("hcec-worker-cmd-{slot}"))
+        .spawn(move || cmd_feed(cmd_stream, fr, cmd_tx))
+        .map_err(|e| format!("spawn command feed: {e}"))?;
+    let evt = TcpLink::<Event>::new(stream);
+    evt.send(Event::WorkerJoined { slot });
+    let (delivered, error) = super::protocol::worker_loop(
+        slot,
+        &spec,
+        encoded.as_ref(),
+        b.as_ref(),
+        multiplier,
+        crash_after.map(|n| n as usize),
+        &cmd_rx,
+        &evt,
+    );
+    evt.send(Event::WorkerLeft { slot, delivered, error });
+    // Dropping `evt` shuts the write half down; process exit closes the
+    // rest (the command feed thread dies with it).
+    Ok(())
+}
+
+fn cmd_feed(mut stream: TcpStream, mut fr: FrameReader, tx: Sender<Command>) {
+    let mut buf = [0u8; READ_BUF];
+    loop {
+        loop {
+            match fr.next_frame() {
+                Ok(Some(frame)) => match Command::from_wire(&frame) {
+                    Ok(c) => {
+                        if tx.send(c).is_err() {
+                            return;
+                        }
+                    }
+                    Err(_) => return,
+                },
+                Ok(None) => break,
+                Err(_) => return,
+            }
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => return,
+            Ok(n) => fr.feed(&buf[..n]),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::link::MpscLink;
+    use super::super::protocol::WorkerTask;
+    use super::*;
+
+    fn sample_frames() -> Vec<Vec<u8>> {
+        vec![
+            Command::Assign {
+                tasks: vec![WorkerTask { group: 3, rows: 6..9 }],
+            }
+            .to_wire(),
+            Event::SubtaskDone {
+                slot: 2,
+                group: 5,
+                data: Some(vec![1.5, -2.0, 0.25]),
+                elapsed: 0.125,
+            }
+            .to_wire(),
+            NetMsg::Hello { version: NET_VERSION, slot: 7, generation: 2 }.to_wire(),
+        ]
+    }
+
+    #[test]
+    fn netmsg_round_trips_every_variant() {
+        let msgs = vec![
+            NetMsg::Hello { version: NET_VERSION, slot: 11, generation: 3 },
+            NetMsg::Welcome { generation: 9 },
+            NetMsg::Reject { reason: "duplicate-lease: slot 4".into() },
+            NetMsg::Job {
+                spec: BackendSpec::Simulated { subtask_secs: 0.0125 },
+                multiplier: 2.5,
+                crash_after: Some(4),
+                encoded: Some((2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])),
+                b: None,
+            },
+            NetMsg::Job {
+                spec: BackendSpec::Pjrt {
+                    artifact: "m240".into(),
+                    dir: PathBuf::from("/tmp/artifacts"),
+                },
+                multiplier: 1.0,
+                crash_after: None,
+                encoded: None,
+                b: Some((1, 2, vec![-0.5, 0.5])),
+            },
+        ];
+        for msg in msgs {
+            let wire = msg.to_wire();
+            assert_eq!(NetMsg::from_wire(&wire).unwrap(), msg, "{msg:?}");
+        }
+    }
+
+    #[test]
+    fn job_with_inconsistent_matrix_shape_is_rejected() {
+        let msg = NetMsg::Job {
+            spec: BackendSpec::Native,
+            multiplier: 1.0,
+            crash_after: None,
+            encoded: Some((2, 4, vec![0.0; 8])),
+            b: None,
+        };
+        let mut wire = msg.to_wire();
+        // Shrink the declared row count so rows*cols no longer matches the
+        // element count; refresh the CRC so only the shape check can trip.
+        let base = super::super::wire::HEADER;
+        // payload: tag(1) spec(1) mult(8) crash(1) encflag(1) rows(8)...
+        let rows_off = base + 1 + 1 + 8 + 1 + 1;
+        wire[rows_off..rows_off + 8].copy_from_slice(&3u64.to_le_bytes());
+        let len = wire.len() - base;
+        let mut crc = super::super::wire::crc32(0, &[NetMsg::KIND]);
+        crc = super::super::wire::crc32(crc, &wire[base..base + len]);
+        wire[7..11].copy_from_slice(&crc.to_le_bytes());
+        assert_eq!(NetMsg::from_wire(&wire), Err(WireError::BadLength));
+    }
+
+    #[test]
+    fn frame_reader_survives_every_split_boundary() {
+        // Frames arrive over TCP split/coalesced arbitrarily: for every
+        // possible two-chunk split of the concatenated byte stream, and
+        // for the fully coalesced and byte-at-a-time feeds, the reader
+        // must produce the identical frame sequence.
+        let frames = sample_frames();
+        let stream: Vec<u8> = frames.concat();
+        let drain = |fr: &mut FrameReader| {
+            let mut out = Vec::new();
+            while let Some(f) = fr.next_frame().unwrap() {
+                out.push(f);
+            }
+            out
+        };
+        for split in 0..=stream.len() {
+            let mut fr = FrameReader::default();
+            let mut got = Vec::new();
+            fr.feed(&stream[..split]);
+            got.extend(drain(&mut fr));
+            fr.feed(&stream[split..]);
+            got.extend(drain(&mut fr));
+            assert_eq!(got, frames, "split at byte {split}");
+        }
+        let mut fr = FrameReader::default();
+        let mut got = Vec::new();
+        for b in &stream {
+            fr.feed(std::slice::from_ref(b));
+            got.extend(drain(&mut fr));
+        }
+        assert_eq!(got, frames, "byte-at-a-time");
+    }
+
+    #[test]
+    fn frame_reader_rejects_desync_and_hostile_lengths() {
+        let mut fr = FrameReader::default();
+        fr.feed(b"XX junk that is not a frame");
+        assert_eq!(fr.next_frame(), Err(WireError::BadMagic));
+        // A valid header whose declared length would drive a huge
+        // allocation is refused before any buffering happens.
+        let mut hostile = Vec::new();
+        hostile.extend_from_slice(b"HC");
+        hostile.push(1);
+        hostile.extend_from_slice(&(u32::MAX).to_le_bytes());
+        hostile.extend_from_slice(&0u32.to_le_bytes());
+        let mut fr = FrameReader::default();
+        fr.feed(&hostile);
+        assert_eq!(fr.next_frame(), Err(WireError::BadLength));
+    }
+
+    #[test]
+    fn tcp_link_round_trips_events_over_a_real_socket() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let sent = vec![
+            Event::WorkerJoined { slot: 4 },
+            Event::SubtaskDone { slot: 4, group: 1, data: None, elapsed: 0.5 },
+            Event::WorkerLeft { slot: 4, delivered: 1, error: Some("boom".into()) },
+        ];
+        let expect = sent.clone();
+        let reader = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut fr = FrameReader::default();
+            let mut got = Vec::new();
+            for _ in 0..expect.len() {
+                got.push(read_msg::<Event>(&mut s, &mut fr).unwrap());
+            }
+            got
+        });
+        let link = TcpLink::<Event>::new(TcpStream::connect(addr).unwrap());
+        for ev in &sent {
+            assert!(link.send(ev.clone()));
+        }
+        assert_eq!(reader.join().unwrap(), sent);
+    }
+
+    fn test_endpoint() -> Endpoint {
+        Endpoint::bind(&TcpTransport {
+            bind: "127.0.0.1:0".into(),
+            accept_timeout: 5.0,
+            handshake_timeout: 5.0,
+            worker_exe: None,
+            kill_after: None,
+        })
+        .unwrap()
+    }
+
+    fn dial(addr: SocketAddr, slot: u64, generation: u64) -> (TcpStream, NetMsg) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&NetMsg::Hello { version: NET_VERSION, slot, generation }.to_wire())
+            .unwrap();
+        let mut fr = FrameReader::default();
+        let reply = read_msg::<NetMsg>(&mut s, &mut fr).unwrap();
+        (s, reply)
+    }
+
+    fn job() -> NetMsg {
+        NetMsg::Job {
+            spec: BackendSpec::Simulated { subtask_secs: 0.0 },
+            multiplier: 1.0,
+            crash_after: None,
+            encoded: None,
+            b: None,
+        }
+    }
+
+    #[test]
+    fn handshake_rejects_unoffered_slots_and_bad_versions() {
+        let ep = test_endpoint();
+        let (_s, reply) = dial(ep.addr(), 3, 1);
+        let NetMsg::Reject { reason } = reply else { panic!("{reply:?}") };
+        assert!(reason.contains("slot 3 not offered"), "{reason}");
+        let mut s = TcpStream::connect(ep.addr()).unwrap();
+        s.write_all(
+            &NetMsg::Hello { version: NET_VERSION + 1, slot: 0, generation: 1 }.to_wire(),
+        )
+        .unwrap();
+        let mut fr = FrameReader::default();
+        let NetMsg::Reject { reason } = read_msg::<NetMsg>(&mut s, &mut fr).unwrap()
+        else {
+            panic!("expected rejection")
+        };
+        assert!(reason.contains("protocol version"), "{reason}");
+    }
+
+    #[test]
+    fn second_live_claim_is_rejected_with_a_named_error() {
+        // Satellite bugfix: no silent double-lease. The first claim wins
+        // the slot; a second dialer claiming it while the session is live
+        // gets the named duplicate-lease error.
+        let ep = test_endpoint();
+        let (_gen, reply_rx) = ep.register(4, &job());
+        let (mut first, reply) = dial(ep.addr(), 4, 1);
+        assert!(matches!(reply, NetMsg::Welcome { .. }), "{reply:?}");
+        let mut fr = FrameReader::default();
+        let got_job = read_msg::<NetMsg>(&mut first, &mut fr).unwrap();
+        assert_eq!(got_job, job());
+        let _session_stream = reply_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let (_s, second) = dial(ep.addr(), 4, 1);
+        let NetMsg::Reject { reason } = second else { panic!("{second:?}") };
+        assert!(reason.contains("duplicate-lease"), "{reason}");
+        assert!(reason.contains("slot 4"), "{reason}");
+        assert_eq!(ep.double_claims(), 1);
+    }
+
+    #[test]
+    fn stale_generation_reconnect_is_accepted_and_rekeyed() {
+        // Satellite bugfix: after a crash the slot is re-offered under a
+        // bumped generation; a worker re-dialing with the OLD generation
+        // must be accepted and re-keyed (the Welcome is authoritative),
+        // not bounced for staleness.
+        let ep = test_endpoint();
+        let (gen1, rx1) = ep.register(2, &job());
+        let (_s1, reply1) = dial(ep.addr(), 2, gen1);
+        assert_eq!(reply1, NetMsg::Welcome { generation: gen1 });
+        let _stream1 = rx1.recv_timeout(Duration::from_secs(5)).unwrap();
+        // Crash: the session dies; the reactor re-offers the slot.
+        ep.shared.mark_dead(2, gen1);
+        let (gen2, rx2) = ep.register(2, &job());
+        assert!(gen2 > gen1);
+        // The replacement dials in still carrying the stale generation.
+        let (_s2, reply2) = dial(ep.addr(), 2, gen1);
+        assert_eq!(
+            reply2,
+            NetMsg::Welcome { generation: gen2 },
+            "stale claim must be re-keyed to the current generation"
+        );
+        let _stream2 = rx2.recv_timeout(Duration::from_secs(5)).unwrap();
+    }
+
+    #[test]
+    fn session_reader_synthesizes_crash_as_leave_on_connection_loss() {
+        // A worker whose connection drops without a clean WorkerLeft must
+        // surface as WorkerLeft { error: Some } — the crash-as-leave path.
+        // A sleeping child stands in for the worker process (the reader
+        // only needs something to reap).
+        let ep = test_endpoint();
+        let child = std::process::Command::new("sleep")
+            .arg("30")
+            .stdin(Stdio::null())
+            .spawn()
+            .unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let dialer = std::thread::spawn(move || TcpStream::connect(addr).unwrap());
+        let (session_side, _) = listener.accept().unwrap();
+        let worker_side = dialer.join().unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let shared = Arc::clone(&ep.shared);
+        ep.register(6, &job());
+        let reader = std::thread::spawn(move || {
+            session_reader(
+                session_side,
+                child,
+                6,
+                1,
+                Box::new(MpscLink(tx)),
+                shared,
+                Some(KillSpec { slot: 6, after: 2 }),
+            )
+        });
+        // One completion crosses, then the "process" dies mid-job.
+        let link = TcpLink::<Event>::new(worker_side);
+        assert!(link.send(Event::SubtaskDone { slot: 6, group: 0, data: None, elapsed: 0.0 }));
+        drop(link); // connection lost without a WorkerLeft
+        reader.join().unwrap();
+        let got: Vec<Event> = rx.try_iter().collect();
+        assert_eq!(got.len(), 2, "{got:?}");
+        assert_eq!(
+            got[0],
+            Event::SubtaskDone { slot: 6, group: 0, data: None, elapsed: 0.0 }
+        );
+        let Event::WorkerLeft { slot, delivered, error: Some(e) } = &got[1] else {
+            panic!("expected synthesized crash notice, got {:?}", got[1]);
+        };
+        assert_eq!((*slot, *delivered), (6, 1));
+        assert!(e.contains("connection to worker 6 lost"), "{e}");
+        // The slot's lease expired with the session.
+        let slots = ep.shared.slots.lock().unwrap();
+        assert!(slots.get(&6).is_some_and(|st| st.status == SlotStatus::Dead));
+    }
+
+    #[test]
+    fn transport_config_validation_and_kind() {
+        assert_eq!(TransportConfig::Mpsc.kind(), "mpsc");
+        let tcp = TcpTransport::default();
+        assert_eq!(TransportConfig::Tcp(tcp.clone()).kind(), "tcp");
+        assert!(tcp.validate().is_ok());
+        let bad = TcpTransport { bind: String::new(), ..TcpTransport::default() };
+        assert!(bad.validate().unwrap_err().contains("bind"));
+        let bad = TcpTransport { accept_timeout: 0.0, ..TcpTransport::default() };
+        assert!(bad.validate().unwrap_err().contains("accept_timeout"));
+        let bad = TcpTransport { handshake_timeout: -1.0, ..TcpTransport::default() };
+        assert!(bad.validate().unwrap_err().contains("handshake_timeout"));
+    }
+}

@@ -94,6 +94,19 @@ pub struct ClusterWorker {
 }
 
 impl ClusterWorker {
+    /// Assemble a worker handle from an already-built command link and an
+    /// optional thread to join on shutdown. The socket transport uses this:
+    /// its command side is a `TcpLink` into the worker *process* and the
+    /// joinable thread is the coordinator-side session reader, not the
+    /// worker itself.
+    pub(crate) fn from_parts(
+        slot: usize,
+        cmd: Box<dyn Link<Command>>,
+        join: Option<JoinHandle<()>>,
+    ) -> Self {
+        ClusterWorker { slot, cmd, join }
+    }
+
     /// Send a command; returns false if the worker already exited. (A
     /// chaos link may silently consume the command and still return true —
     /// the caller learns the worker is alive, not that the message landed.)
@@ -165,8 +178,12 @@ pub fn spawn_cluster_worker(
     ClusterWorker { slot, cmd, join: Some(join) }
 }
 
+/// The worker's subtask loop, shared between the in-process thread runtime
+/// above and the multi-process socket runtime (`cluster::net`), which feeds
+/// `cmd_rx` from a socket-reader thread and hands an `evt_tx` that frames
+/// events back onto the wire.
 #[allow(clippy::too_many_arguments)]
-fn worker_loop(
+pub(crate) fn worker_loop(
     slot: usize,
     spec: &BackendSpec,
     encoded: Option<&Matrix>,

@@ -15,8 +15,9 @@
 //! flip (and all burst errors up to 32 bits) — the property the chaos
 //! layer's corruption injection leans on. The in-process `ChaosLink`
 //! round-trips every message through this codec, so the byte form is
-//! exercised on every chaotic run and is ready to become the on-wire form
-//! for future TCP/UDP multi-process backends unchanged.
+//! exercised on every chaotic run; `cluster::net` puts the same frames on
+//! real TCP sockets (plus a third frame kind for its session handshake)
+//! for the multi-process worker runtime.
 //!
 //! Decoding is strict: bad magic, bad kind, length mismatch (truncated or
 //! trailing bytes), checksum mismatch, unknown tags and non-UTF-8 error
@@ -26,9 +27,35 @@
 
 use super::protocol::{Command, Event, WorkerTask};
 
-/// Frame header: magic(2) + kind(1) + len(4) + crc(4).
-const HEADER: usize = 11;
-const MAGIC: [u8; 2] = *b"HC";
+/// Frame header: magic(2) + kind(1) + len(4) + crc(4). Shared with the
+/// socket transport's incremental frame reader (`cluster::net`).
+pub(crate) const HEADER: usize = 11;
+pub(crate) const MAGIC: [u8; 2] = *b"HC";
+
+/// Largest payload a peer may declare (64 MiB). Generously above any real
+/// frame (the biggest is an encoded operand block inside a `NetMsg::Job`),
+/// while keeping a corrupt or hostile length field from driving a
+/// multi-gigabyte buffer allocation in the stream reader.
+pub(crate) const MAX_PAYLOAD: usize = 64 << 20;
+
+/// Incremental framing: how many bytes the frame starting at `buf[0]`
+/// occupies in total, or `Ok(None)` if the header is not complete yet.
+/// Rejects bad magic and oversized declared lengths immediately so a
+/// desynchronised or corrupt TCP stream fails fast instead of waiting
+/// forever for bytes that will never come.
+pub(crate) fn frame_len(buf: &[u8]) -> Result<Option<usize>, WireError> {
+    if buf.len() >= 2 && buf[0..2] != MAGIC {
+        return Err(WireError::BadMagic);
+    }
+    if buf.len() < HEADER {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[3..7].try_into().unwrap()) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(WireError::BadLength);
+    }
+    Ok(Some(HEADER + len))
+}
 
 /// Decode failure — each variant names what the frame got wrong.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -163,7 +190,7 @@ pub struct Cursor<'a> {
 }
 
 impl<'a> Cursor<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
         let end = self.pos.checked_add(n).ok_or(WireError::BadLength)?;
         if end > self.bytes.len() {
             return Err(WireError::BadLength);
@@ -173,29 +200,29 @@ impl<'a> Cursor<'a> {
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8, WireError> {
+    pub(crate) fn u8(&mut self) -> Result<u8, WireError> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32, WireError> {
+    pub(crate) fn u32(&mut self) -> Result<u32, WireError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> Result<u64, WireError> {
+    pub(crate) fn u64(&mut self) -> Result<u64, WireError> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn usize64(&mut self) -> Result<usize, WireError> {
+    pub(crate) fn usize64(&mut self) -> Result<usize, WireError> {
         usize::try_from(self.u64()?).map_err(|_| WireError::BadLength)
     }
 
-    fn f64(&mut self) -> Result<f64, WireError> {
+    pub(crate) fn f64(&mut self) -> Result<f64, WireError> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     /// Element count for `elem_size`-byte items, verified against the
     /// remaining bytes before any allocation.
-    fn count(&mut self, elem_size: usize) -> Result<usize, WireError> {
+    pub(crate) fn count(&mut self, elem_size: usize) -> Result<usize, WireError> {
         let n = self.u32()? as usize;
         let need = n.checked_mul(elem_size).ok_or(WireError::BadLength)?;
         if self.pos + need > self.bytes.len() {
@@ -205,7 +232,7 @@ impl<'a> Cursor<'a> {
     }
 }
 
-fn put_u64(out: &mut Vec<u8>, v: u64) {
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 

@@ -18,7 +18,7 @@ use crate::workload::JobSpec;
 
 use super::cluster::{
     run_cluster_job, ClusterBackend, ClusterConfig, ClusterElasticity, ClusterReport,
-    SpeedSource,
+    SpeedSource, TransportConfig,
 };
 
 // The scheme axis now lives on the unified experiment surface; re-exported
@@ -92,6 +92,7 @@ impl JobConfig {
             preempt_after_first: self.preempt_after_first,
             backfill: true,
             chaos: None,
+            transport: TransportConfig::default(),
             seed: self.seed,
         }
     }

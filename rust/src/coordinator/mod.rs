@@ -33,10 +33,11 @@ pub mod service;
 pub mod tenancy;
 
 pub use cluster::{
-    run_cluster_job, run_cluster_job_controlled, BackendSpec, ChaosConfig,
-    ChaosLink, ClusterBackend, ClusterConfig, ClusterElasticity, ClusterReport,
-    Command, CrashSpec, Event, FaultRates, Link, MpscLink, NativeGemm, Partition,
-    RecoveryLedger, SimulatedLatency, SpeedSource, Wire, WireError, WorkerBackend,
+    run_cluster_job, run_cluster_job_controlled, worker_runtime, BackendSpec,
+    ChaosConfig, ChaosLink, ClusterBackend, ClusterConfig, ClusterElasticity,
+    ClusterReport, Command, CrashSpec, Event, FaultRates, KillSpec, Link, MpscLink,
+    NativeGemm, Partition, RecoveryLedger, SimulatedLatency, SpeedSource,
+    TcpTransport, TransportConfig, Wire, WireError, WorkerBackend,
 };
 pub use master::{run_job, ExecBackend, JobConfig, JobReport, SchemeConfig};
 pub use service::{serve, ServiceConfig, ServiceReport};

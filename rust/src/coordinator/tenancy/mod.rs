@@ -44,7 +44,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::cluster::{
     run_cluster_job_controlled, ClusterBackend, ClusterConfig, ClusterElasticity,
-    ClusterReport, SpeedSource,
+    ClusterReport, SpeedSource, TransportConfig,
 };
 use crate::metrics::Summary;
 use crate::scenario::SchemeConfig;
@@ -97,11 +97,20 @@ pub struct TenancyConfig {
     /// Wall seconds per service-clock second (arrival + fleet event
     /// times); 1.0 for real-time backends.
     pub time_scale: f64,
+    /// Worker transport for every tenant reactor. With `Tcp`, each
+    /// admitted tenant binds its own listener, so the bind address must
+    /// use port 0 (ephemeral) to avoid collisions between tenants.
+    pub transport: TransportConfig,
 }
 
 impl TenancyConfig {
     pub fn fixed(fleet_mults: Vec<f64>) -> Self {
-        Self { fleet_mults, fleet_trace: None, time_scale: 1.0 }
+        Self {
+            fleet_mults,
+            fleet_trace: None,
+            time_scale: 1.0,
+            transport: TransportConfig::default(),
+        }
     }
 }
 
@@ -467,6 +476,7 @@ pub fn run_tenant_service(
                 preempt_after_first: req.preempt_after_first,
                 backfill: req.backfill,
                 chaos: None,
+                transport: cfg.transport.clone(),
                 seed: req.seed,
             };
             let tx = done_tx.clone();
@@ -684,6 +694,7 @@ mod tests {
             fleet_mults: vec![1.0; 8],
             fleet_trace: Some(trace),
             time_scale: 1.0,
+            transport: TransportConfig::default(),
         };
         let reqs: Vec<JobRequest> =
             (0..2).map(|j| sim_request(&format!("j{j}"), 4, 0, 40 + j as u64)).collect();
@@ -758,6 +769,7 @@ mod tests {
             fleet_mults: vec![1.0; 6],
             fleet_trace: Some(trace),
             time_scale: 1.0,
+            transport: TransportConfig::default(),
         };
         // CEC s=4 admits at 4 workers; want 6 leaves a deficit of 2.
         let mut req = sim_request("needy", 4, 0, 5);

@@ -10,6 +10,7 @@ mod fig1;
 mod fig2;
 mod service;
 mod sweep;
+mod transport;
 
 pub use ablations::{
     dlevel_table, hetero_table, hierarchy_table, reassign_table, straggler_sweep_table,
@@ -20,3 +21,4 @@ pub use fig1::{fig1_grid, fig1_table};
 pub use fig2::{fig2_scenario, fig2_series, fig2_table, Fig2Point, Metric};
 pub use service::{service_scenario, service_table, SERVICE_CONCURRENCIES};
 pub use sweep::{scaling_scenarios, scaling_table, SCALING_NS};
+pub use transport::{transport_scenario, transport_table, TRANSPORT_DROP_RATES};

@@ -1,0 +1,147 @@
+//! Drop-rate-vs-recovery sweep for the socket transport (PR 9) — how much
+//! event/command loss the retry + crash-as-leave machinery absorbs before
+//! jobs start failing outright.
+//!
+//! Each row runs the paper's scheme trio through `Engine::Cluster` with a
+//! symmetric `[chaos]` drop rate on both link directions and the
+//! `SimulatedLatency` backend (the loss model and the recovery ledger are
+//! transport-generic, so the cheap backend measures the same machinery the
+//! native one ships). The `kind` parameter selects the transport under
+//! test: `Mpsc` keeps the sweep self-contained in-process (what the unit
+//! tests run); `Tcp` reruns the identical scenario over real sockets and
+//! spawned worker processes — the cross-check that loss behaves the same
+//! on both sides of the `Link` trait.
+//!
+//! Reported per (drop, scheme): mean wall computation, mean transition
+//! waste, watchdog retries, crashes absorbed (a connection loss lands
+//! here as crash-as-leave), and per-trial failures.
+
+use crate::config::ExperimentConfig;
+use crate::metrics::Table;
+use crate::rng::fold_in;
+use crate::scenario::{
+    ChaosConfig, ClusterBackendSpec, ClusterSpec, Engine, FaultRates, Metric, Scenario,
+    SchemeConfig, SeedMode, TransportKind, TransportSpec,
+};
+
+/// Default drop-rate grid for the transport sweep: quiet links, then
+/// escalating symmetric loss up to one packet in ten.
+pub const TRANSPORT_DROP_RATES: [f64; 4] = [0.0, 0.02, 0.05, 0.10];
+
+/// The cluster-engine scenario for one sweep point: the scheme trio at
+/// fleet size `n` with symmetric drop rate `drop` on both directions and
+/// the transport `kind` under test.
+pub fn transport_scenario(
+    cfg: &ExperimentConfig,
+    n: usize,
+    drop: f64,
+    trials: usize,
+    time_scale: f64,
+    kind: TransportKind,
+) -> Scenario {
+    assert!(n >= cfg.s_cec, "transport sweep N={n} below S={}", cfg.s_cec);
+    let schemes = vec![
+        SchemeConfig::Cec { k: cfg.k_cec, s: cfg.s_cec },
+        SchemeConfig::mlcec_of(cfg),
+        SchemeConfig::Bicec { k: cfg.k_bicec, s_per_worker: cfg.s_bicec },
+    ];
+    let rates = FaultRates { drop, ..Default::default() };
+    let chaos = ChaosConfig {
+        // Fault stream independent of the job seed, folded per drop point
+        // so the loss pattern varies across the sweep.
+        seed: fold_in(cfg.seed, (drop * 1000.0) as u64),
+        cmd: rates,
+        evt: rates,
+        ..Default::default()
+    };
+    Scenario::builder(&format!("transport_drop{}", (drop * 100.0) as usize))
+        .engine(Engine::Cluster)
+        .job(cfg.job)
+        .fleet(n, n)
+        .schemes(schemes)
+        .speed_model(cfg.speed_model())
+        .cost(cfg.cost_model())
+        .cluster(ClusterSpec {
+            backend: ClusterBackendSpec::SimulatedLatency,
+            time_scale,
+            preempt_after_first: 0,
+            backfill: crate::scenario::BackfillSpec::On,
+        })
+        .chaos(chaos)
+        .transport(TransportSpec { kind, ..Default::default() })
+        .trials(trials)
+        .seed(fold_in(cfg.seed, (drop * 10_000.0) as u64))
+        .seed_mode(SeedMode::PerTrial)
+        .build()
+        .expect("valid transport sweep scenario")
+}
+
+/// One row per (drop rate, scheme): mean wall computation, mean transition
+/// waste, watchdog retries spent recovering lost packets, crashes absorbed
+/// and per-trial failures.
+pub fn transport_table(
+    cfg: &ExperimentConfig,
+    n: usize,
+    drops: &[f64],
+    trials: usize,
+    time_scale: f64,
+    kind: TransportKind,
+) -> Table {
+    let mut t = Table::new(&[
+        "drop",
+        "scheme",
+        "wall_mean_s",
+        "waste_mean",
+        "retries",
+        "crashes",
+        "failures",
+    ]);
+    for &drop in drops {
+        let sc = transport_scenario(cfg, n, drop, trials, time_scale, kind);
+        let out = sc.run().expect("cluster engine records per-trial failures");
+        for s in &out.per_scheme {
+            let retries: usize = s.ok_trials().map(|t| t.retries).sum();
+            let crashes: usize = s.ok_trials().map(|t| t.crashes_absorbed).sum();
+            t.row(vec![
+                format!("{drop:.2}"),
+                s.scheme.clone(),
+                format!("{:.4}", s.mean(Metric::Computation)),
+                format!("{:.4}", s.mean(Metric::TransitionWaste)),
+                retries.to_string(),
+                crashes.to_string(),
+                s.failures().to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_scenario_round_trips_through_toml() {
+        let cfg = ExperimentConfig::default();
+        let sc = transport_scenario(&cfg, 40, 0.05, 2, 0.05, TransportKind::Tcp);
+        let text = sc.to_toml();
+        assert!(text.contains("kind = \"tcp\""), "{text}");
+        let back = Scenario::from_toml(&text).unwrap();
+        assert_eq!(back.to_doc(), sc.to_doc());
+        assert_eq!(back.transport.kind, TransportKind::Tcp);
+        assert!(back.chaos.is_some());
+    }
+
+    #[test]
+    fn transport_table_runs_one_lossy_point_in_process() {
+        // One sweep point over mpsc links (no processes spawned in unit
+        // tests), 5% symmetric drop, aggressively scaled down. The trio
+        // yields three rows and nothing fails outright at this rate.
+        let cfg = ExperimentConfig::default();
+        let t = transport_table(&cfg, 40, &[0.05], 1, 0.02, TransportKind::Mpsc);
+        assert_eq!(t.n_rows(), 3);
+        let r = t.render();
+        assert!(r.contains("0.05"), "{r}");
+        assert!(r.contains("bicec"), "{r}");
+    }
+}

@@ -17,7 +17,8 @@
 use crate::coordinator::{
     run_cluster_job, run_job, run_tenant_service, ClusterBackend, ClusterConfig,
     ClusterElasticity, ClusterReport, JobConfig, JobRequest, ServiceLoad,
-    SpeedSource, TenancyConfig, TenancyReport, TenantSpeed,
+    SpeedSource, TcpTransport, TenancyConfig, TenancyReport, TenantSpeed,
+    TransportConfig,
 };
 use crate::metrics::Summary;
 use crate::rng::{fold_in, trial_rng};
@@ -28,8 +29,25 @@ use crate::sim::{
 
 use super::spec::{
     ArrivalSpec, BackfillSpec, ClusterBackendSpec, ElasticitySpec, Metric, SpeedSpec,
+    TransportKind, TransportSpec,
 };
 use super::Scenario;
+
+/// Map the scenario's `[transport]` axis onto the runtime config. The
+/// worker executable defaults to the current binary (correct for the
+/// `hcec` CLI; tests override via `ClusterConfig` directly).
+fn transport_config(t: &TransportSpec) -> TransportConfig {
+    match t.kind {
+        TransportKind::Mpsc => TransportConfig::Mpsc,
+        TransportKind::Tcp => TransportConfig::Tcp(TcpTransport {
+            bind: t.bind.clone(),
+            accept_timeout: t.accept_timeout,
+            handshake_timeout: t.handshake_timeout,
+            worker_exe: None,
+            kill_after: None,
+        }),
+    }
+}
 
 /// Which substrate executes the scenario.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -511,6 +529,7 @@ fn run_cluster(sc: &Scenario) -> Vec<SchemeOutcome> {
                         preempt_after_first: sc.cluster.preempt_after_first,
                         backfill,
                         chaos,
+                        transport: transport_config(&sc.transport),
                         seed,
                     };
                     // Elastic runs have legitimate per-trial failures
@@ -642,6 +661,7 @@ fn run_service(sc: &Scenario) -> Vec<SchemeOutcome> {
                         fleet_mults,
                         fleet_trace,
                         time_scale: sc.cluster.time_scale,
+                        transport: transport_config(&sc.transport),
                     };
                     service_trial(spec.name(), trial, run_tenant_service(&tcfg, load))
                 })

@@ -35,7 +35,7 @@ pub use engine::{Engine, Outcome, SchemeOutcome, ServiceStats, TrialOutcome};
 pub use spec::{
     ArrivalSpec, BackfillSpec, ChaosConfig, ClusterBackendSpec, ClusterSpec,
     CoordinatorSpec, CrashSpec, ElasticitySpec, FaultRates, Metric, Partition,
-    SchemeConfig, SeedMode, ServiceSpec, SpeedSpec,
+    SchemeConfig, SeedMode, ServiceSpec, SpeedSpec, TransportKind, TransportSpec,
 };
 
 use crate::config::ExperimentConfig;
@@ -78,6 +78,10 @@ pub struct Scenario {
     /// runs quiet verbatim links; `Some` wraps every command/event channel
     /// in a seeded [`ChaosLink`](crate::coordinator::ChaosLink).
     pub chaos: Option<ChaosConfig>,
+    /// Worker transport (`[transport]`): cluster and service engines. The
+    /// default (`mpsc`) is the in-process runtime; `tcp` forks one worker
+    /// process per slot over localhost TCP.
+    pub transport: TransportSpec,
 }
 
 impl Scenario {
@@ -256,6 +260,37 @@ impl Scenario {
                 ));
             }
             chaos.validate(self.n_max).map_err(|e| format!("chaos: {e}"))?;
+        }
+        if self.transport.kind == TransportKind::Tcp {
+            if !matches!(self.engine, Engine::Cluster | Engine::Service) {
+                return Err(format!(
+                    "[transport] kind = \"tcp\" only applies to engines \"cluster\" \
+                     and \"service\" (engine is {:?})",
+                    self.engine.as_str()
+                ));
+            }
+            if self.transport.bind.is_empty()
+                || self.transport.bind.contains('"')
+                || self.transport.bind.chars().any(|c| c.is_control())
+            {
+                return Err(format!(
+                    "transport.bind {:?} must be a non-empty address without quotes \
+                     or control characters",
+                    self.transport.bind
+                ));
+            }
+            if !finite_pos(self.transport.accept_timeout) {
+                return Err(format!(
+                    "transport.accept_timeout = {} must be finite and positive",
+                    self.transport.accept_timeout
+                ));
+            }
+            if !finite_pos(self.transport.handshake_timeout) {
+                return Err(format!(
+                    "transport.handshake_timeout = {} must be finite and positive",
+                    self.transport.handshake_timeout
+                ));
+            }
         }
         Ok(())
     }
@@ -725,6 +760,7 @@ impl ScenarioBuilder {
                 cluster: ClusterSpec::default(),
                 service: ServiceSpec::default(),
                 chaos: None,
+                transport: TransportSpec::default(),
             },
         }
     }
@@ -824,6 +860,11 @@ impl ScenarioBuilder {
 
     pub fn chaos(mut self, cfg: ChaosConfig) -> Self {
         self.inner.chaos = Some(cfg);
+        self
+    }
+
+    pub fn transport(mut self, spec: TransportSpec) -> Self {
+        self.inner.transport = spec;
         self
     }
 

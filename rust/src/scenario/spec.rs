@@ -248,6 +248,60 @@ impl BackfillSpec {
     }
 }
 
+/// Worker transport selection (`[transport]` in scenario TOML), read by
+/// the cluster and service engines.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process worker threads over mpsc channels (the default).
+    #[default]
+    Mpsc,
+    /// One OS process per worker over localhost/LAN TCP
+    /// (`coordinator::cluster::net`).
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TransportKind::Mpsc => "mpsc",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "mpsc" => Ok(TransportKind::Mpsc),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => Err(format!("unknown transport kind {other:?} (mpsc|tcp)")),
+        }
+    }
+}
+
+/// The transport axis. For `kind = "tcp"` the coordinator binds `bind`
+/// (port 0 = ephemeral; required for the service engine, where every
+/// tenant binds its own listener) and re-executes itself as `hcec worker`
+/// processes that dial back.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TransportSpec {
+    pub kind: TransportKind,
+    pub bind: String,
+    /// Seconds a spawned worker has to dial in and finish its handshake.
+    pub accept_timeout: f64,
+    /// Coordinator-side per-connection handshake read timeout (seconds).
+    pub handshake_timeout: f64,
+}
+
+impl Default for TransportSpec {
+    fn default() -> Self {
+        Self {
+            kind: TransportKind::default(),
+            bind: "127.0.0.1:0".into(),
+            accept_timeout: 10.0,
+            handshake_timeout: 5.0,
+        }
+    }
+}
+
 /// Knobs that only the event-driven cluster engine reads.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ClusterSpec {

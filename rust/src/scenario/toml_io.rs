@@ -83,6 +83,13 @@
 //! [chaos.evt]                   # worker -> master fault rates (same keys)
 //! drop = 0.05
 //! corrupt = 0.02
+//!
+//! [transport]                   # cluster + service engines
+//! kind = "mpsc"                 # mpsc (in-process) | tcp (socket workers)
+//! # tcp adds:
+//! # bind = "127.0.0.1:0"        # coordinator listen addr (port 0 = ephemeral)
+//! # accept_timeout = 10.0       # seconds to wait for each worker's dial
+//! # handshake_timeout = 5.0     # seconds a dialed socket may take to hello
 //! ```
 //!
 //! Unknown keys are an error — scenario-file typos must not silently run a
@@ -98,7 +105,7 @@ use super::engine::Engine;
 use super::spec::{
     ArrivalSpec, BackfillSpec, ChaosConfig, ClusterBackendSpec, ClusterSpec,
     CoordinatorSpec, CrashSpec, ElasticitySpec, FaultRates, Partition,
-    SchemeConfig, SeedMode, ServiceSpec, SpeedSpec,
+    SchemeConfig, SeedMode, ServiceSpec, SpeedSpec, TransportKind, TransportSpec,
 };
 use super::Scenario;
 
@@ -208,6 +215,24 @@ impl Scenario {
                 "cluster.backfill",
                 Value::Str(self.cluster.backfill.as_str().into()),
             );
+            // [transport] travels with the [cluster] knobs: both engines
+            // that spawn workers accept it. The tcp-only keys are written
+            // only for tcp, like cluster.time_scale for simulated_latency.
+            doc.insert(
+                "transport.kind",
+                Value::Str(self.transport.kind.as_str().into()),
+            );
+            if self.transport.kind == TransportKind::Tcp {
+                doc.insert("transport.bind", Value::Str(self.transport.bind.clone()));
+                doc.insert(
+                    "transport.accept_timeout",
+                    Value::Float(self.transport.accept_timeout),
+                );
+                doc.insert(
+                    "transport.handshake_timeout",
+                    Value::Float(self.transport.handshake_timeout),
+                );
+            }
             if self.engine == Engine::Cluster {
                 if let Some(chaos) = &self.chaos {
                     write_chaos(&mut doc, chaos);
@@ -593,6 +618,7 @@ impl<'a> Reader<'a> {
                     BackfillSpec::parse(b).map_err(|e| format!("cluster.backfill: {e}"))?;
             }
             builder = builder.cluster(cl);
+            builder = builder.transport(self.transport_section()?);
             // [chaos] stays cluster-only: the service engine rejects fault
             // injection (one chaotic tenant would blur every other
             // tenant's SLO), so its keys fall through to unknown-key.
@@ -730,6 +756,29 @@ impl<'a> Reader<'a> {
             }
         };
         Ok(Some(c))
+    }
+
+    /// The `[transport]` table: what the worker channels cross. Absent
+    /// keys fall back to [`TransportSpec::default`] (in-process mpsc).
+    /// Only the cluster and service engines consume it, so a misplaced
+    /// section is an unknown-key error. Semantic checks (bind shape,
+    /// timeout ranges, engine fit) run in `Scenario::validate`.
+    fn transport_section(&mut self) -> Result<TransportSpec, String> {
+        let mut t = TransportSpec::default();
+        if let Some(kind) = self.str_at("transport.kind")? {
+            t.kind = TransportKind::parse(kind)
+                .map_err(|e| format!("transport.kind: {e}"))?;
+        }
+        if let Some(bind) = self.str_at("transport.bind")? {
+            t.bind = bind.to_string();
+        }
+        if let Some(v) = self.f64_at("transport.accept_timeout")? {
+            t.accept_timeout = v;
+        }
+        if let Some(v) = self.f64_at("transport.handshake_timeout")? {
+            t.handshake_timeout = v;
+        }
+        Ok(t)
     }
 
     /// The `[service]` table: the job stream the service engine runs.
@@ -1306,6 +1355,111 @@ seed = 3
         let err = Scenario::from_toml(&text).unwrap_err();
         assert!(err.contains("unknown scenario key"), "{err}");
         assert!(err.contains("cluster.backend"), "{err}");
+    }
+
+    const CLUSTER_BASE: &str = r#"
+[scenario]
+name = "cl"
+engine = "cluster"
+trials = 1
+seed = 1
+schemes = ["cec"]
+
+[job]
+u = 240
+w = 240
+v = 240
+
+[fleet]
+n_max = 8
+n_workers = 8
+
+[scheme.cec]
+kind = "cec"
+k = 2
+s = 4
+
+[speed]
+kind = "uniform"
+
+[cluster]
+backend = "native"
+"#;
+
+    #[test]
+    fn transport_scenario_round_trips() {
+        use crate::scenario::{TransportKind, TransportSpec};
+        let sc = ScenarioBuilder::new("tcp_cluster")
+            .engine(Engine::Cluster)
+            .fleet(8, 8)
+            .job(JobSpec::new(240, 240, 240))
+            .schemes(vec![SchemeConfig::Cec { k: 2, s: 4 }])
+            .speed(SpeedSpec::Uniform)
+            .trials(1)
+            .transport(TransportSpec {
+                kind: TransportKind::Tcp,
+                bind: "127.0.0.1:0".into(),
+                accept_timeout: 20.0,
+                handshake_timeout: 2.5,
+            })
+            .build()
+            .unwrap();
+        let text = sc.to_toml();
+        assert!(text.contains("kind = \"tcp\""), "{text}");
+        assert!(text.contains("bind = \"127.0.0.1:0\""), "{text}");
+        let back = Scenario::from_toml(&text).unwrap();
+        assert_eq!(back.to_doc(), sc.to_doc());
+        assert_eq!(back.transport, sc.transport);
+    }
+
+    #[test]
+    fn transport_defaults_to_mpsc_and_omits_tcp_keys() {
+        use crate::scenario::TransportKind;
+        let sc = Scenario::from_toml(CLUSTER_BASE).unwrap();
+        assert_eq!(sc.transport.kind, TransportKind::Mpsc);
+        let text = sc.to_toml();
+        assert!(text.contains("kind = \"mpsc\""), "{text}");
+        assert!(!text.contains("transport.bind"), "{text}");
+        assert!(!text.contains("accept_timeout"), "{text}");
+        let back = Scenario::from_toml(&text).unwrap();
+        assert_eq!(back.to_doc(), sc.to_doc());
+    }
+
+    #[test]
+    fn transport_section_rejects_unknown_kinds() {
+        let bad = format!("{CLUSTER_BASE}\n[transport]\nkind = \"carrier_pigeon\"\n");
+        let err = Scenario::from_toml(&bad).unwrap_err();
+        assert!(err.contains("transport.kind"), "{err}");
+        assert!(err.contains("mpsc|tcp"), "{err}");
+    }
+
+    #[test]
+    fn transport_section_rejected_for_other_engines() {
+        let text = format!("{FIG2A}\n[transport]\nkind = \"tcp\"\n");
+        let err = Scenario::from_toml(&text).unwrap_err();
+        assert!(err.contains("unknown scenario key"), "{err}");
+        assert!(err.contains("transport.kind"), "{err}");
+    }
+
+    #[test]
+    fn transport_section_accepted_for_the_service_engine() {
+        use crate::scenario::TransportKind;
+        let text = format!(
+            "{SERVICE_BASE}
+[service]
+arrival = \"closed\"
+jobs = 2
+want = 4
+
+[transport]
+kind = \"tcp\"
+bind = \"127.0.0.1:0\"
+"
+        );
+        let sc = Scenario::from_toml(&text).unwrap();
+        assert_eq!(sc.transport.kind, TransportKind::Tcp);
+        let back = Scenario::from_toml(&sc.to_toml()).unwrap();
+        assert_eq!(back.to_doc(), sc.to_doc());
     }
 
     #[test]

@@ -12,6 +12,7 @@
 use hcec::coordinator::{
     run_cluster_job, run_job, serve, ClusterBackend, ClusterConfig, ClusterElasticity,
     ExecBackend, JobConfig, JobReport, SchemeConfig, ServiceConfig, SpeedSource,
+    TransportConfig,
 };
 use hcec::scenario::{
     BackfillSpec, ClusterBackendSpec, ClusterSpec, ElasticitySpec, Engine, Metric,
@@ -205,6 +206,7 @@ fn des_cluster_waste_parity_on_swap_churn() {
         preempt_after_first: 0,
         backfill: true,
         chaos: None,
+        transport: TransportConfig::default(),
         seed: 1,
     };
     let cluster = run_cluster_job(&cfg).unwrap();
@@ -260,6 +262,7 @@ fn des_cluster_waste_parity_bicec_zero() {
         preempt_after_first: 0,
         backfill: true,
         chaos: None,
+        transport: TransportConfig::default(),
         seed: 1,
     };
     let cluster = run_cluster_job(&cfg).unwrap();

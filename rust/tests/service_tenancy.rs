@@ -7,7 +7,7 @@
 
 use hcec::coordinator::{
     run_tenant_service, ClusterBackend, JobRequest, SchemeConfig, ServiceLoad,
-    TenancyConfig, TenantSpeed,
+    TenancyConfig, TenantSpeed, TransportConfig,
 };
 use hcec::scenario::{ArrivalSpec, Engine, Scenario};
 use hcec::sim::{CostModel, ElasticEvent, ElasticTrace, EventKind};
@@ -57,6 +57,7 @@ fn two_tenants_survive_a_fleet_leave_with_bit_correct_decode() {
         fleet_mults: vec![1.0; 8],
         fleet_trace: Some(trace),
         time_scale: 1.0,
+        transport: TransportConfig::default(),
     };
     let reqs = vec![native_request("tenant-a", 11), native_request("tenant-b", 12)];
     let rep = run_tenant_service(&cfg, ServiceLoad::closed(reqs, 2)).unwrap();
