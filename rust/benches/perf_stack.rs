@@ -412,6 +412,86 @@ fn main() {
     r.print();
     report.push(&r, &[("n", cluster_n as f64)]);
 
+    println!("\n-- data plane: Arc'd dispatch, pooled frames, batched reactor --");
+    // Paired rows measure each zero-copy mechanism against the legacy
+    // behaviour it replaced, in one process (no env knobs): the clone arm
+    // re-creates the old per-spawn operand copy, the fresh arm the old
+    // allocate-per-frame wire encode, and the batch pair runs the same
+    // fixed-fleet cluster job at drain cap 1 (the pre-batching oracle)
+    // vs the default 64.
+    use std::sync::Arc;
+    let enc = Matrix::random(160, 3200, &mut rng); // one CEC share at n640
+    let enc_arc = Arc::new(enc.clone());
+    let task_rows = 0..enc.rows() / 20; // S = 20 subtasks per share
+    let r = Bench::new("dispatch clone n640").run(|| enc.clone());
+    r.print();
+    report.push(&r, &[]);
+    let mut scratch = Matrix::zeros(0, 0);
+    let r = Bench::new("dispatch arc n640").run(|| {
+        let shared = Arc::clone(&enc_arc);
+        scratch.assign_rows(&shared, task_rows.clone());
+        shared.rows()
+    });
+    r.print();
+    println!("    -> arc dispatch stages one task, clone copies the whole share");
+    report.push(&r, &[]);
+
+    let done = hcec::coordinator::Event::SubtaskDone {
+        slot: 3,
+        group: 7,
+        data: Some(vec![1.5f32; 1024]),
+        elapsed: 0.25,
+    };
+    use hcec::coordinator::Wire;
+    let r = Bench::new("frame encode fresh").run(|| done.to_wire());
+    r.print();
+    report.push(&r, &[]);
+    let mut frame_buf = Vec::new();
+    let r = Bench::new("frame encode pooled").run(|| {
+        done.to_wire_into(&mut frame_buf);
+        frame_buf.len()
+    });
+    r.print();
+    println!("    -> pooled encode reuses one buffer; fresh allocates per frame");
+    report.push(&r, &[]);
+
+    use hcec::coordinator::{
+        run_cluster_job, ClusterBackend, ClusterConfig, ClusterElasticity,
+        SpeedSource, TransportConfig,
+    };
+    for batch in [1usize, 64] {
+        let cfg = ClusterConfig {
+            job,
+            scheme: SchemeConfig::Cec { k: 10, s: 20 },
+            n_max: cluster_n,
+            n_workers: cluster_n,
+            backend: ClusterBackend::Simulated { time_scale: 0.05 },
+            speed: SpeedSource::Uniform,
+            cost,
+            elasticity: ClusterElasticity::Fixed,
+            preempt_after_first: 0,
+            backfill: true,
+            chaos: None,
+            transport: TransportConfig::default(),
+            evt_batch: batch,
+            seed: 11,
+        };
+        let r = Bench::new(format!("reactor batch{batch} n{cluster_n}"))
+            .samples(3, 50)
+            .run(|| run_cluster_job(&cfg).expect("fixed-fleet cluster cannot fail"));
+        r.print();
+        let events = (cluster_n * 10) as f64;
+        println!("    -> {:.2e} protocol events/s", events_per_sec(&r, events));
+        report.push(
+            &r,
+            &[
+                ("n", cluster_n as f64),
+                ("batch", batch as f64),
+                ("protocol_events_per_sec", events_per_sec(&r, events)),
+            ],
+        );
+    }
+
     if artifacts_available() {
         println!("\n-- PJRT execute latency (compiled-once artifacts) --");
         let mut rt = Runtime::open(default_artifact_dir()).unwrap();

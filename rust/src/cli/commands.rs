@@ -184,6 +184,13 @@ fn run_scenario_file(path: &str, args: &Args) -> Result<(), String> {
              duplicates_suppressed={dups} corruptions_dropped={corrupt}"
         );
     }
+    // One greppable data-plane line for the cluster-core engines (the
+    // pool-oracle CI arm greps it): reactor queue high-water mark and
+    // soft-backpressure stalls.
+    if matches!(scenario.engine, Engine::Cluster | Engine::Service) {
+        let (q_peak, bp_waits) = out.dataplane_totals();
+        println!("dataplane: q_peak={q_peak} bp_waits={bp_waits}");
+    }
     // One greppable SLO line per scheme for service runs (the service
     // smoke job asserts on it).
     if scenario.engine == Engine::Service {

@@ -327,12 +327,24 @@ impl RealMdsCode {
     /// Inverse of the decode submatrix as f32 rows — handed to the PJRT
     /// `decode_*` artifact by the coordinator.
     pub fn decode_coeffs_f32(&self, subset: &[usize]) -> Result<Vec<f32>, DecodeError> {
-        Ok(self
-            .checked_inverse(subset)?
-            .0
-            .iter()
-            .map(|&v| v as f32)
-            .collect())
+        let mut out = Vec::new();
+        self.decode_coeffs_f32_into(subset, &mut out)?;
+        Ok(out)
+    }
+
+    /// Buffer-reusing form of [`decode_coeffs_f32`](Self::decode_coeffs_f32):
+    /// the cluster decode loop runs this once per completion set with a
+    /// pooled scratch buffer, so the per-set coefficient allocation
+    /// disappears from the steady state.
+    pub fn decode_coeffs_f32_into(
+        &self,
+        subset: &[usize],
+        out: &mut Vec<f32>,
+    ) -> Result<(), DecodeError> {
+        let inv = self.checked_inverse(subset)?;
+        out.clear();
+        out.extend(inv.0.iter().map(|&v| v as f32));
+        Ok(())
     }
 }
 

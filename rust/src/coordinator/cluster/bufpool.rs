@@ -1,0 +1,198 @@
+//! Buffer pools + data-plane knobs for the cluster hot paths.
+//!
+//! [`Pool`] is a deliberately small free-list of `Vec<T>` scratch buffers:
+//! the frame reader, the wire encoder and the worker result paths check a
+//! buffer out, fill it, and check it back in instead of allocating per
+//! frame/subtask. Checked-in buffers are always `clear()`ed, so a reused
+//! buffer can never leak stale bytes across checkouts (invariant-tested
+//! below); capacity is bounded both per buffer ([`MAX_POOLED_BYTES`] — a
+//! jumbo operand frame is dropped, not retained) and per pool
+//! ([`MAX_POOLED_BUFS`]).
+//!
+//! Two process-wide knobs gate the data plane, mirroring the
+//! `HCEC_FORCE_SCALAR` oracle discipline (read once per process):
+//!
+//! * `HCEC_NO_POOL=1` (or `HCEC_POOL=0`) — disable pooling everywhere:
+//!   `get` always returns a fresh `Vec`, `put` drops. This is the
+//!   allocate-per-frame oracle path the pooled paths are bit-identity
+//!   tested against (CI runs the full suite on both arms).
+//! * `HCEC_EVT_BATCH=<n>` — the reactor's event-drain batch cap
+//!   (default [`EVT_BATCH_DEFAULT`]; `1` reproduces the pre-batching
+//!   one-message-per-wakeup reactor exactly).
+
+use std::sync::{Mutex, OnceLock};
+
+/// Largest buffer (in bytes) the pool will retain. Job frames carrying
+/// operand matrices can run to tens of MiB; retaining those would pin a
+/// job-sized allocation per pooled slot for the life of the process, and
+/// the job path is once-per-worker, not per-subtask — so jumbo buffers
+/// fall back to the allocator.
+pub const MAX_POOLED_BYTES: usize = 1 << 20;
+
+/// Largest number of buffers one pool retains; overflow is dropped.
+pub const MAX_POOLED_BUFS: usize = 32;
+
+/// Default reactor event-drain batch cap (see `HCEC_EVT_BATCH`).
+pub const EVT_BATCH_DEFAULT: usize = 64;
+
+/// Event-channel depth above which senders start soft-yielding (counted
+/// as `backpressure_waits` in the cluster report).
+pub const BACKPRESSURE_DEPTH: usize = 1024;
+
+/// Pooling enabled for this process? `HCEC_NO_POOL=1` / `HCEC_POOL=0`
+/// pin the allocate-per-frame oracle path. Read once (OnceLock), like
+/// `HCEC_FORCE_SCALAR`.
+pub fn pool_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        if std::env::var("HCEC_NO_POOL").map(|v| v == "1").unwrap_or(false) {
+            return false;
+        }
+        !std::env::var("HCEC_POOL").map(|v| v == "0").unwrap_or(false)
+    })
+}
+
+/// Process-default reactor drain batch cap: `HCEC_EVT_BATCH` if set to a
+/// positive integer, else [`EVT_BATCH_DEFAULT`]. A `ClusterConfig` may
+/// override per job (`evt_batch > 0`); `1` is the pre-batching oracle.
+pub fn evt_batch_default() -> usize {
+    static B: OnceLock<usize> = OnceLock::new();
+    *B.get_or_init(|| {
+        std::env::var("HCEC_EVT_BATCH")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&b| b >= 1)
+            .unwrap_or(EVT_BATCH_DEFAULT)
+    })
+}
+
+/// A bounded free-list of reusable `Vec<T>` buffers. `get` pops a cleared
+/// buffer (or returns a fresh empty `Vec`); `put` clears and retains the
+/// buffer if it is non-trivial and under the size caps. With pooling
+/// disabled the pool is a transparent no-op (fresh `Vec` out, drop in).
+pub struct Pool<T> {
+    items: Mutex<Vec<Vec<T>>>,
+}
+
+impl<T> Pool<T> {
+    pub const fn new() -> Self {
+        Self { items: Mutex::new(Vec::new()) }
+    }
+
+    /// Check a buffer out. Always empty (`len == 0`); capacity is
+    /// whatever a previous checkout grew it to.
+    pub fn get(&self) -> Vec<T> {
+        if !pool_enabled() {
+            return Vec::new();
+        }
+        self.items
+            .lock()
+            .ok()
+            .and_then(|mut v| v.pop())
+            .unwrap_or_default()
+    }
+
+    /// Check a buffer back in. The buffer is cleared before retention, so
+    /// stale contents cannot leak into the next checkout.
+    pub fn put(&self, mut buf: Vec<T>) {
+        if !pool_enabled() {
+            return;
+        }
+        buf.clear();
+        let bytes = buf.capacity().saturating_mul(std::mem::size_of::<T>());
+        if buf.capacity() == 0 || bytes > MAX_POOLED_BYTES {
+            return;
+        }
+        if let Ok(mut v) = self.items.lock() {
+            if v.len() < MAX_POOLED_BUFS {
+                v.push(buf);
+            }
+        }
+    }
+
+    /// Buffers currently retained (test/introspection hook).
+    pub fn retained(&self) -> usize {
+        self.items.lock().map(|v| v.len()).unwrap_or(0)
+    }
+}
+
+impl<T> Default for Pool<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Shared byte-buffer pool for wire frames (reader reassembly + encode).
+pub fn frame_pool() -> &'static Pool<u8> {
+    static P: Pool<u8> = Pool::new();
+    &P
+}
+
+/// Shared f32 scratch pool for decode-combine / result staging.
+pub fn f32_pool() -> &'static Pool<f32> {
+    static P: Pool<f32> = Pool::new();
+    &P
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_is_always_empty_and_reuse_leaks_no_stale_bytes() {
+        let pool: Pool<u8> = Pool::new();
+        let mut a = pool.get();
+        assert!(a.is_empty());
+        a.extend_from_slice(b"stale secret bytes that must not leak");
+        let cap = a.capacity();
+        pool.put(a);
+        // Whatever arm the process runs on, a checkout is logically empty:
+        // no previous contents are observable.
+        let b = pool.get();
+        assert!(b.is_empty(), "pooled buffer leaked {} stale bytes", b.len());
+        if pool_enabled() {
+            assert_eq!(b.capacity(), cap, "pooled capacity must be reused");
+            assert_eq!(pool.retained(), 0, "the one pooled buffer was checked out");
+        } else {
+            assert_eq!(pool.retained(), 0, "disabled pool retains nothing");
+        }
+        pool.put(b);
+    }
+
+    #[test]
+    fn oversized_and_trivial_buffers_are_not_retained() {
+        let pool: Pool<u8> = Pool::new();
+        pool.put(Vec::new()); // capacity 0: nothing to reuse
+        assert_eq!(pool.retained(), 0);
+        let jumbo = Vec::with_capacity(MAX_POOLED_BYTES + 1);
+        pool.put(jumbo); // over the byte cap: dropped, not pinned
+        assert_eq!(pool.retained(), 0);
+        let ok = Vec::with_capacity(64);
+        pool.put(ok);
+        assert_eq!(pool.retained(), usize::from(pool_enabled()));
+    }
+
+    #[test]
+    fn pool_depth_is_bounded() {
+        let pool: Pool<u8> = Pool::new();
+        for _ in 0..2 * MAX_POOLED_BUFS {
+            pool.put(Vec::with_capacity(8));
+        }
+        assert!(pool.retained() <= MAX_POOLED_BUFS);
+    }
+
+    #[test]
+    fn element_size_counts_toward_the_byte_cap() {
+        let pool: Pool<f32> = Pool::new();
+        // 512 Ki f32 = 2 MiB > MAX_POOLED_BYTES even though the element
+        // count alone is under it.
+        let big: Vec<f32> = Vec::with_capacity(512 * 1024);
+        pool.put(big);
+        assert_eq!(pool.retained(), 0);
+    }
+
+    #[test]
+    fn batch_default_is_positive() {
+        assert!(evt_batch_default() >= 1);
+    }
+}

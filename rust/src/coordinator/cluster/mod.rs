@@ -29,27 +29,33 @@
 //! virtual and intervals are exact.
 
 mod backend;
+mod bufpool;
 mod ledger;
 mod link;
 mod net;
 mod protocol;
+mod store;
 mod wire;
 
 pub use backend::{BackendSpec, NativeGemm, PjrtWorker, SimulatedLatency, WorkerBackend};
+pub use bufpool::{
+    evt_batch_default, f32_pool, frame_pool, pool_enabled, Pool, BACKPRESSURE_DEPTH,
+    EVT_BATCH_DEFAULT, MAX_POOLED_BUFS, MAX_POOLED_BYTES,
+};
 pub use ledger::RecoveryLedger;
 pub use link::{
     ChaosConfig, ChaosCounts, ChaosLink, ChaosRig, ChaosStats, CrashSpec, FaultGen,
     FaultRates, Link, MpscLink, Partition,
 };
 pub use net::{
-    spawn_worker_process, worker_runtime, Endpoint, FrameReader, KillSpec, NetMsg,
-    TcpLink, TcpTransport, TransportConfig, NET_VERSION,
+    spawn_worker_process, worker_runtime, Endpoint, FrameReader, JobFrame, KillSpec,
+    NetMsg, TcpLink, TcpTransport, TransportConfig, NET_VERSION,
 };
-pub use protocol::{spawn_cluster_worker, ClusterWorker, Command, Event};
+pub use protocol::{spawn_cluster_worker, ClusterWorker, Command, Event, EventSender};
 pub use wire::{Wire, WireError};
 
 use std::collections::HashSet;
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -127,6 +133,12 @@ pub struct ClusterConfig {
     /// What the worker channels cross: in-process mpsc (default) or one
     /// OS process per worker over localhost/LAN TCP (`cluster::net`).
     pub transport: TransportConfig,
+    /// Reactor event-drain batch cap: how many already-queued worker
+    /// events one wakeup may handle before walking deadlines again. `0`
+    /// defers to the process default (`HCEC_EVT_BATCH`, else
+    /// [`EVT_BATCH_DEFAULT`]); `1` reproduces the pre-batching
+    /// one-event-per-wakeup reactor exactly.
+    pub evt_batch: usize,
     pub seed: u64,
 }
 
@@ -146,6 +158,7 @@ impl ClusterConfig {
             backfill: true,
             chaos: None,
             transport: TransportConfig::default(),
+            evt_batch: 0,
             seed: 0,
         }
     }
@@ -191,6 +204,12 @@ pub struct ClusterReport {
     pub corruptions_dropped: usize,
     /// Messages dropped in flight (loss + partition windows).
     pub messages_dropped: usize,
+    /// High-water mark of undrained events on the reactor's counted
+    /// channel — how far producers ran ahead of the drain loop.
+    pub evt_queue_peak: usize,
+    /// Producer yields taken above the backpressure depth threshold
+    /// ([`BACKPRESSURE_DEPTH`] undrained events).
+    pub backpressure_waits: usize,
     pub max_rel_err: f32,
     pub recovered: bool,
     /// Human-readable protocol milestones (elastic events, preemptions,
@@ -317,7 +336,7 @@ fn run_cluster_job_with(
             b: Arc::new(b),
             rows_per_item,
             bicec_s_per,
-            encoded: vec![None; cfg.n_max],
+            encoded: store::ShareStore::new(cfg.n_max),
         };
         for slot in 0..n {
             ctx.encoded_for(slot);
@@ -398,7 +417,8 @@ fn run_cluster_job_with(
             Some(ep)
         }
     };
-    let (evt_tx, evt_rx) = std::sync::mpsc::channel();
+    let (tx, evt_rx) = std::sync::mpsc::channel();
+    let evt_tx = EventSender::new(tx);
     let mut reactor = Reactor {
         rule,
         ledger: RecoveryLedger::new(rule),
@@ -410,7 +430,7 @@ fn run_cluster_job_with(
         },
         pending_total: 0,
         delivered: HashSet::new(),
-        payloads: Vec::new(),
+        payloads: store::PayloadStore::new(),
         received: 0,
         preempted: 0,
         joins: 0,
@@ -422,6 +442,8 @@ fn run_cluster_job_with(
         timeline: Vec::new(),
         evt_tx,
         evt_rx,
+        evt_batch: if cfg.evt_batch > 0 { cfg.evt_batch } else { evt_batch_default() },
+        job_tail: None,
         speeds,
         backend_spec,
         stack_kib,
@@ -478,6 +500,7 @@ fn run_cluster_job_with(
     // --- decode + verify (numeric backends only) --------------------------
     let (decode_wall, max_rel_err) = if let (Some(ctx), Some(a)) = (&reactor.enc, &a) {
         let t_dec = Instant::now();
+        debug_assert!(reactor.payloads.len() >= reactor.ledger.credited());
         let recovered_a_b = decode(
             &ctx.code,
             &reactor.ledger,
@@ -527,6 +550,8 @@ fn run_cluster_job_with(
         duplicates_suppressed: reactor.dup_suppressed,
         corruptions_dropped: chaos_counts.corruptions_dropped as usize,
         messages_dropped: (chaos_counts.dropped + chaos_counts.partitioned) as usize,
+        evt_queue_peak: reactor.evt_tx.queue_peak(),
+        backpressure_waits: reactor.evt_tx.backpressure_waits(),
         max_rel_err,
         recovered: true,
         timeline: std::mem::take(&mut reactor.timeline),
@@ -543,25 +568,24 @@ struct EncodeCtx {
     b: Arc<Matrix>,
     rows_per_item: usize,
     bicec_s_per: Option<usize>,
-    encoded: Vec<Option<Arc<Matrix>>>,
+    encoded: store::ShareStore,
 }
 
 impl EncodeCtx {
     fn encoded_for(&mut self, slot: usize) -> Arc<Matrix> {
-        if self.encoded[slot].is_none() {
-            let m = match self.bicec_s_per {
-                // BICEC: the slot's s_per_worker coded subtasks, stacked.
-                Some(sp) => {
-                    let blocks: Vec<Matrix> = (slot * sp..(slot + 1) * sp)
-                        .map(|id| self.code.encode_one(&self.data_blocks, id))
-                        .collect();
-                    stack_rows(&blocks)
-                }
-                None => self.code.encode_one(&self.data_blocks, slot),
-            };
-            self.encoded[slot] = Some(Arc::new(m));
-        }
-        self.encoded[slot].as_ref().unwrap().clone()
+        let code = &self.code;
+        let blocks = &self.data_blocks;
+        let sp = self.bicec_s_per;
+        self.encoded.get_or_insert(slot, || match sp {
+            // BICEC: the slot's s_per_worker coded subtasks, stacked.
+            Some(sp) => {
+                let built: Vec<Matrix> = (slot * sp..(slot + 1) * sp)
+                    .map(|id| code.encode_one(blocks, id))
+                    .collect();
+                stack_rows(&built)
+            }
+            None => code.encode_one(blocks, slot),
+        })
     }
 }
 
@@ -587,7 +611,7 @@ struct Reactor {
     pending_total: usize,
     /// (slot, group) pairs already completed — joiner-list filtering.
     delivered: HashSet<(usize, usize)>,
-    payloads: Vec<((usize, usize), Vec<f32>)>,
+    payloads: store::PayloadStore,
     received: usize,
     preempted: usize,
     joins: usize,
@@ -598,8 +622,17 @@ struct Reactor {
     deferred_joins: Vec<(usize, usize)>,
     live: usize,
     timeline: Vec<String>,
-    evt_tx: Sender<Event>,
+    /// Counted producer side of the event channel: every worker thread,
+    /// session reader and chaos decorator sends through a clone, so queue
+    /// depth / peak / backpressure stalls are visible to the report.
+    evt_tx: EventSender,
     evt_rx: Receiver<Event>,
+    /// Resolved drain-batch cap (`ClusterConfig::evt_batch`, else the
+    /// process default).
+    evt_batch: usize,
+    /// The shared `Job`-frame tail (the B operand's wire bytes), encoded
+    /// once per job and borrowed by every TCP session handshake.
+    job_tail: Option<Arc<Vec<u8>>>,
     speeds: WorkerSpeeds,
     backend_spec: BackendSpec,
     stack_kib: usize,
@@ -732,33 +765,38 @@ impl Reactor {
     /// chaos decorators on both directions when a rig is armed). A failed
     /// bring-up degrades to a dead command link plus a synthesized crash
     /// notice, so the ordinary crash-as-leave machinery absorbs it.
+    ///
+    /// The `Job` frame is assembled zero-copy: the per-slot head borrows
+    /// the `Arc`-shared encoded rows straight out of the operand store,
+    /// and the B-operand tail is encoded once per job and shared across
+    /// every session's vectored handshake write.
     fn spawn_remote(
-        &self,
+        &mut self,
         slot: usize,
         encoded: Option<Arc<Matrix>>,
         b: Option<Arc<Matrix>>,
         multiplier: f64,
     ) -> ClusterWorker {
-        let endpoint = self.endpoint.as_ref().expect("tcp transport");
-        let to_wire_mat =
-            |m: &Matrix| (m.rows() as u64, m.cols() as u64, m.as_slice().to_vec());
-        let job = NetMsg::Job {
-            spec: self.backend_spec.clone(),
+        let borrow = |m: &Matrix| (m.rows() as u64, m.cols() as u64, m.as_slice());
+        if self.job_tail.is_none() {
+            self.job_tail = Some(JobFrame::shared_tail(b.as_deref().map(borrow)));
+        }
+        let tail = Arc::clone(self.job_tail.as_ref().unwrap());
+        let job = JobFrame::new(
+            &self.backend_spec,
             multiplier,
-            crash_after: self
-                .chaos
+            self.chaos
                 .as_ref()
                 .and_then(|rig| rig.crash_after(slot))
                 .map(|n| n as u64),
-            encoded: encoded.as_deref().map(to_wire_mat),
-            b: b.as_deref().map(to_wire_mat),
-        };
+            encoded.as_deref().map(borrow),
+            tail,
+        );
         let evt: Box<dyn Link<Event>> = match self.chaos.as_ref() {
-            Some(rig) => {
-                rig.wrap_evt_link(slot, Arc::new(MpscLink(self.evt_tx.clone())))
-            }
-            None => Box::new(MpscLink(self.evt_tx.clone())),
+            Some(rig) => rig.wrap_evt_link(slot, Arc::new(self.evt_tx.clone())),
+            None => Box::new(self.evt_tx.clone()),
         };
+        let endpoint = self.endpoint.as_ref().expect("tcp transport");
         match endpoint.spawn_session(slot, &job, evt) {
             Ok(session) => {
                 let cmd: Box<dyn Link<Command>> = match self.chaos.as_ref() {
@@ -768,7 +806,7 @@ impl Reactor {
                 ClusterWorker::from_parts(slot, cmd, Some(session.reader))
             }
             Err(e) => {
-                let _ = self.evt_tx.send(Event::WorkerLeft {
+                self.evt_tx.send(Event::WorkerLeft {
                     slot,
                     delivered: 0,
                     error: Some(e),
@@ -855,8 +893,24 @@ impl Reactor {
                         .map_err(|_| anyhow!("event channel closed before recovery"))?
                 }
             };
+            self.evt_tx.on_recv();
             if self.handle(msg)? {
                 return Ok(self.t_comp.elapsed().as_secs_f64());
+            }
+            // Batched drain: handle whatever else is already queued, up to
+            // the batch cap, before walking the deadline logic again — one
+            // wakeup amortises over a completion burst instead of paying
+            // the loop top per event. Strict channel FIFO order is
+            // preserved, so `evt_batch = 1` (the oracle arm) and any
+            // larger cap handle the same events in the same order.
+            let mut batched = 1;
+            while batched < self.evt_batch {
+                let Ok(m) = self.evt_rx.try_recv() else { break };
+                self.evt_tx.on_recv();
+                batched += 1;
+                if self.handle(m)? {
+                    return Ok(self.t_comp.elapsed().as_secs_f64());
+                }
             }
         }
     }
@@ -983,6 +1037,11 @@ impl Reactor {
                 // never double-push a payload or double-count a credit.
                 if !self.delivered.insert((slot, group)) {
                     self.dup_suppressed += 1;
+                    // The duplicate's payload is dead weight — feed its
+                    // allocation back to the scratch pool.
+                    if let Some(d) = data {
+                        f32_pool().put(d);
+                    }
                     return Ok(false);
                 }
                 let credited_before = self.ledger.credited();
@@ -993,7 +1052,7 @@ impl Reactor {
                     self.joiner_credits += 1;
                 }
                 if let Some(d) = data {
-                    self.payloads.push(((group, slot), d));
+                    self.payloads.insert(group, slot, d);
                 }
                 if complete {
                     return Ok(true);
@@ -1479,32 +1538,31 @@ impl Reactor {
 fn decode(
     code: &RealMdsCode,
     ledger: &RecoveryLedger,
-    payloads: &[((usize, usize), Vec<f32>)],
+    payloads: &store::PayloadStore,
     u: usize,
     v: usize,
     rows_per_item: usize,
 ) -> Result<Matrix> {
     let k = code.k();
     let mut out = Matrix::zeros(u, v);
-    let fetch = |group: usize, slot: usize| -> Result<&Vec<f32>> {
-        payloads
-            .iter()
-            .find(|((g, s), _)| *g == group && *s == slot)
-            .map(|(_, d)| d)
-            .ok_or_else(|| anyhow!("missing payload for group {group} slot {slot}"))
-    };
+    // Pooled coefficient scratch: one checkout serves every completion
+    // set (k*k f32 per set on the old path).
+    let mut inv = f32_pool().get();
     match ledger.rule() {
         RecoveryRule::PerSet { sets, .. } => {
             // Set m: K completed blocks (rows_per_item x v) from distinct
             // slots; decode -> the m-th slice of each data block A_i·B.
             for m in 0..sets {
                 let slots = &ledger.set_contributors(m)[..k];
-                let inv = code
-                    .decode_coeffs_f32(slots)
+                code.decode_coeffs_f32_into(slots, &mut inv)
                     .map_err(|e| anyhow!("set {m}: {e}"))?;
                 let blocks: Vec<&[f32]> = slots
                     .iter()
-                    .map(|&s| fetch(m, s).map(|b| b.as_slice()))
+                    .map(|&s| {
+                        payloads.fetch(m, s).ok_or_else(|| {
+                            anyhow!("missing payload for group {m} slot {s}")
+                        })
+                    })
                     .collect::<Result<Vec<_>>>()?;
                 for j in 0..k {
                     // Global row offset of data block j's m-th slice.
@@ -1521,14 +1579,13 @@ fn decode(
         }
         RecoveryRule::Global { .. } => {
             let ids = &ledger.global_ids()[..k];
-            let inv = code.decode_coeffs_f32(ids).map_err(|e| anyhow!("global: {e}"))?;
+            code.decode_coeffs_f32_into(ids, &mut inv)
+                .map_err(|e| anyhow!("global: {e}"))?;
             let blocks: Vec<&[f32]> = ids
                 .iter()
                 .map(|&id| {
                     payloads
-                        .iter()
-                        .find(|((g, _), _)| *g == id)
-                        .map(|(_, d)| d.as_slice())
+                        .first_for_group(id)
                         .ok_or_else(|| anyhow!("missing payload for id {id}"))
                 })
                 .collect::<Result<Vec<_>>>()?;
@@ -1539,6 +1596,7 @@ fn decode(
             }
         }
     }
+    f32_pool().put(inv);
     Ok(out)
 }
 
@@ -1561,6 +1619,7 @@ mod tests {
             backfill: true,
             chaos: None,
             transport: TransportConfig::default(),
+            evt_batch: 0,
             seed: 1,
         }
     }

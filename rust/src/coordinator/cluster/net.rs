@@ -30,7 +30,7 @@
 //! identical to an injected chaos crash.
 
 use std::collections::HashMap;
-use std::io::{self, Read, Write};
+use std::io::{self, IoSlice, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::process::{Child, Stdio};
@@ -41,9 +41,10 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use super::backend::BackendSpec;
+use super::bufpool;
 use super::link::Link;
 use super::protocol::{Command, Event};
-use super::wire::{frame_len, put_u64, Cursor, Wire, WireError};
+use super::wire::{crc32, frame_len, put_u64, Cursor, Wire, WireError, HEADER, MAGIC};
 
 /// Handshake protocol version; bump on any incompatible `NetMsg` change.
 pub const NET_VERSION: u32 = 1;
@@ -169,16 +170,55 @@ fn get_str(cur: &mut Cursor<'_>) -> Result<String, WireError> {
 }
 
 fn put_mat(out: &mut Vec<u8>, m: &Option<(u64, u64, Vec<f32>)>) {
+    put_mat_ref(out, m.as_ref().map(|(r, c, d)| (*r, *c, d.as_slice())));
+}
+
+/// Borrowing twin of [`put_mat`]: encodes a matrix field straight from a
+/// `&[f32]`, so the zero-copy job path ([`JobFrame`]) serializes operand
+/// data without first cloning it into an owned tuple.
+fn put_mat_ref(out: &mut Vec<u8>, m: Option<(u64, u64, &[f32])>) {
     match m {
         None => out.push(0),
         Some((rows, cols, data)) => {
             out.push(1);
-            put_u64(out, *rows);
-            put_u64(out, *cols);
+            put_u64(out, rows);
+            put_u64(out, cols);
             out.extend_from_slice(&(data.len() as u32).to_le_bytes());
             for v in data {
                 out.extend_from_slice(&v.to_le_bytes());
             }
+        }
+    }
+}
+
+/// The `Job` payload up to (not including) the two matrix fields — the
+/// single source of truth shared by `NetMsg::encode_payload` and the
+/// split [`JobFrame`] builder.
+fn put_job_prefix(
+    out: &mut Vec<u8>,
+    spec: &BackendSpec,
+    multiplier: f64,
+    crash_after: Option<u64>,
+) {
+    out.push(3);
+    match spec {
+        BackendSpec::Native => out.push(0),
+        BackendSpec::Simulated { subtask_secs } => {
+            out.push(1);
+            out.extend_from_slice(&subtask_secs.to_le_bytes());
+        }
+        BackendSpec::Pjrt { artifact, dir } => {
+            out.push(2);
+            put_str(out, artifact);
+            put_str(out, &dir.to_string_lossy());
+        }
+    }
+    out.extend_from_slice(&multiplier.to_le_bytes());
+    match crash_after {
+        None => out.push(0),
+        Some(n) => {
+            out.push(1);
+            put_u64(out, n);
         }
     }
 }
@@ -223,27 +263,7 @@ impl Wire for NetMsg {
                 put_str(out, reason);
             }
             NetMsg::Job { spec, multiplier, crash_after, encoded, b } => {
-                out.push(3);
-                match spec {
-                    BackendSpec::Native => out.push(0),
-                    BackendSpec::Simulated { subtask_secs } => {
-                        out.push(1);
-                        out.extend_from_slice(&subtask_secs.to_le_bytes());
-                    }
-                    BackendSpec::Pjrt { artifact, dir } => {
-                        out.push(2);
-                        put_str(out, artifact);
-                        put_str(out, &dir.to_string_lossy());
-                    }
-                }
-                out.extend_from_slice(&multiplier.to_le_bytes());
-                match crash_after {
-                    None => out.push(0),
-                    Some(n) => {
-                        out.push(1);
-                        put_u64(out, *n);
-                    }
-                }
+                put_job_prefix(out, spec, *multiplier, *crash_after);
                 put_mat(out, encoded);
                 put_mat(out, b);
             }
@@ -288,11 +308,112 @@ impl Wire for NetMsg {
     }
 }
 
+/// A pre-framed `NetMsg::Job`, split so each slot's private prefix
+/// (`head`: header + backend spec + multiplier + crash countdown + coded
+/// operand) and the shared right-operand bytes (`tail`) are separate
+/// `Arc`'d segments. The tail is encoded ONCE per job and shared by every
+/// slot's frame, and the handshake emits `[welcome, head, tail]` in one
+/// vectored syscall instead of materializing a contiguous job buffer per
+/// worker. `head ++ tail` is byte-identical to the canonical
+/// `NetMsg::Job { .. }.to_wire()` — the length and CRC in the header are
+/// patched across the split (the CRC chains:
+/// `crc32(crc32(s, a), b) == crc32(s, a ++ b)`); tested below.
+#[derive(Clone)]
+pub struct JobFrame {
+    head: Arc<Vec<u8>>,
+    tail: Arc<Vec<u8>>,
+}
+
+impl JobFrame {
+    /// Encode the shared right operand once; every slot's frame borrows
+    /// the result through an `Arc` instead of re-encoding (or cloning)
+    /// it per worker.
+    pub fn shared_tail(b: Option<(u64, u64, &[f32])>) -> Arc<Vec<u8>> {
+        let mut out = Vec::new();
+        put_mat_ref(&mut out, b);
+        Arc::new(out)
+    }
+
+    /// Frame one slot's job around the shared tail, borrowing the coded
+    /// operand slice — neither matrix is cloned to serialize it.
+    pub fn new(
+        spec: &BackendSpec,
+        multiplier: f64,
+        crash_after: Option<u64>,
+        encoded: Option<(u64, u64, &[f32])>,
+        tail: Arc<Vec<u8>>,
+    ) -> Self {
+        let mut head = Vec::new();
+        head.extend_from_slice(&MAGIC);
+        head.push(NetMsg::KIND);
+        head.extend_from_slice(&[0u8; 8]); // len + crc, patched below
+        put_job_prefix(&mut head, spec, multiplier, crash_after);
+        put_mat_ref(&mut head, encoded);
+        let plen = head.len() - HEADER + tail.len();
+        head[3..7].copy_from_slice(&(plen as u32).to_le_bytes());
+        let mut crc = crc32(0, &[NetMsg::KIND]);
+        crc = crc32(crc, &head[HEADER..]);
+        crc = crc32(crc, &tail);
+        head[7..11].copy_from_slice(&crc.to_le_bytes());
+        Self { head: Arc::new(head), tail }
+    }
+}
+
+/// `Write::write_all_vectored` is unstable; this is the same loop — skip
+/// fully written segments, re-slice the partially written one, retry on
+/// interrupt, and treat `Ok(0)` as `WriteZero`.
+fn write_all_vectored(w: &mut impl Write, bufs: &[&[u8]]) -> io::Result<()> {
+    let mut idx = 0;
+    let mut off = 0;
+    while idx < bufs.len() {
+        if off == bufs[idx].len() {
+            idx += 1;
+            off = 0;
+            continue;
+        }
+        let slices: Vec<IoSlice<'_>> = std::iter::once(IoSlice::new(&bufs[idx][off..]))
+            .chain(bufs[idx + 1..].iter().map(|b| IoSlice::new(b)))
+            .collect();
+        match w.write_vectored(&slices) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::WriteZero,
+                    "failed to write whole vectored frame",
+                ))
+            }
+            Ok(mut n) => {
+                while n > 0 && idx < bufs.len() {
+                    let rem = bufs[idx].len() - off;
+                    if n >= rem {
+                        n -= rem;
+                        idx += 1;
+                        off = 0;
+                    } else {
+                        off += n;
+                        n = 0;
+                    }
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Cap on the reassembly capacity a [`FrameReader`] keeps across frames —
+/// a jumbo operand frame must not pin its footprint on the session for
+/// the rest of its life (satellite bugfix: the buffer previously never
+/// shrank).
+const FRAME_READER_MAX_RETAINED: usize = 4 * READ_BUF;
+
 /// Incremental frame reassembly: TCP delivers bytes at arbitrary
 /// boundaries; `feed` buffers them and `next_frame` splits off one whole
 /// frame at a time. Desync (bad magic) and oversized declared lengths
 /// surface immediately as errors — a byte stream that has lost framing
-/// can never heal.
+/// can never heal. The reassembly buffer cycles through the shared
+/// [`bufpool::frame_pool`] (steady state: zero allocations per frame) and
+/// its retained capacity is capped at [`FRAME_READER_MAX_RETAINED`].
 #[derive(Default)]
 pub struct FrameReader {
     buf: Vec<u8>,
@@ -306,11 +427,21 @@ impl FrameReader {
     pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>, WireError> {
         match frame_len(&self.buf)? {
             Some(total) if self.buf.len() >= total => {
-                let rest = self.buf.split_off(total);
-                Ok(Some(std::mem::replace(&mut self.buf, rest)))
+                let mut rest = bufpool::frame_pool().get();
+                rest.extend_from_slice(&self.buf[total..]);
+                self.buf.truncate(total);
+                let frame = std::mem::replace(&mut self.buf, rest);
+                self.buf.shrink_to(FRAME_READER_MAX_RETAINED);
+                Ok(Some(frame))
             }
             _ => Ok(None),
         }
+    }
+}
+
+impl Drop for FrameReader {
+    fn drop(&mut self) {
+        bufpool::frame_pool().put(std::mem::take(&mut self.buf));
     }
 }
 
@@ -319,7 +450,9 @@ fn read_msg<T: Wire>(stream: &mut TcpStream, fr: &mut FrameReader) -> Result<T, 
     let mut buf = [0u8; READ_BUF];
     loop {
         if let Some(frame) = fr.next_frame().map_err(|e| format!("bad frame: {e}"))? {
-            return T::from_wire(&frame).map_err(|e| format!("bad frame: {e}"));
+            let msg = T::from_wire(&frame).map_err(|e| format!("bad frame: {e}"));
+            bufpool::frame_pool().put(frame);
+            return msg;
         }
         match stream.read(&mut buf) {
             Ok(0) => return Err("connection closed".into()),
@@ -341,16 +474,25 @@ pub struct TcpLink<T: Wire> {
 }
 
 impl<T: Wire> TcpLink<T> {
+    /// Wrap a connected stream. Command/event frames are small and carry
+    /// the latency-critical short-notice path, so Nagle is disabled on
+    /// every link (coordinator session sockets and the worker dialer).
     pub fn new(stream: TcpStream) -> Self {
+        let _ = stream.set_nodelay(true);
         Self { stream: Mutex::new(stream), _direction: std::marker::PhantomData }
     }
 }
 
 impl<T: Wire + Send> Link<T> for TcpLink<T> {
     fn send(&self, msg: T) -> bool {
-        let frame = msg.to_wire();
-        let mut s = self.stream.lock().unwrap();
-        s.write_all(&frame).and_then(|_| s.flush()).is_ok()
+        let mut frame = bufpool::frame_pool().get();
+        msg.to_wire_into(&mut frame);
+        let ok = {
+            let mut s = self.stream.lock().unwrap();
+            s.write_all(&frame).and_then(|_| s.flush()).is_ok()
+        };
+        bufpool::frame_pool().put(frame);
+        ok
     }
 }
 
@@ -385,8 +527,9 @@ enum SlotStatus {
 struct SlotState {
     generation: u64,
     status: SlotStatus,
-    /// Pre-encoded `NetMsg::Job` frame, written right after `Welcome`.
-    job: Arc<Vec<u8>>,
+    /// Pre-framed `NetMsg::Job` (shared-tail [`JobFrame`]), written in
+    /// the same vectored syscall as the `Welcome`.
+    job: JobFrame,
     /// Hands the handshake-complete stream back to `spawn_session`.
     reply: Option<Sender<TcpStream>>,
 }
@@ -467,7 +610,7 @@ impl Endpoint {
     /// Offer `slot` to the next dialer: bump its generation and stage the
     /// job frame. Returns the new generation and the channel on which the
     /// accept thread delivers the handshake-complete stream.
-    fn register(&self, slot: usize, job: &NetMsg) -> (u64, Receiver<TcpStream>) {
+    fn register(&self, slot: usize, job: &JobFrame) -> (u64, Receiver<TcpStream>) {
         let generation = {
             let mut gens = self.shared.gens.lock().unwrap();
             let g = gens.entry(slot).or_insert(0);
@@ -480,7 +623,7 @@ impl Endpoint {
             SlotState {
                 generation,
                 status: SlotStatus::Awaiting,
-                job: Arc::new(job.to_wire()),
+                job: job.clone(),
                 reply: Some(tx),
             },
         );
@@ -494,7 +637,7 @@ impl Endpoint {
     pub fn spawn_session(
         &self,
         slot: usize,
-        job: &NetMsg,
+        job: &JobFrame,
         evt: Box<dyn Link<Event>>,
     ) -> Result<SessionHandle, String> {
         let (generation, reply_rx) = self.register(slot, job);
@@ -623,13 +766,17 @@ fn handshake(mut stream: TcpStream, shared: &Arc<EndpointShared>, timeout: f64) 
                 // the current one — the Welcome is authoritative.
                 let _ = claimed;
                 st.status = SlotStatus::Live;
-                (st.generation, Arc::clone(&st.job))
+                (st.generation, st.job.clone())
             }
         }
     };
     let _ = stream.set_read_timeout(None);
     let welcome = NetMsg::Welcome { generation }.to_wire();
-    if stream.write_all(&welcome).and_then(|_| stream.write_all(&job)).is_err() {
+    // Welcome + job head + shared operand tail leave in ONE vectored
+    // syscall (this was two unvectored write_alls of independently
+    // materialized buffers — the satellite bugfix).
+    let segments: [&[u8]; 3] = [&welcome, &job.head, &job.tail];
+    if write_all_vectored(&mut stream, &segments).is_err() {
         shared.mark_dead(slot, generation);
         return;
     }
@@ -670,6 +817,7 @@ fn session_reader(
                         Ok(e) => e,
                         Err(_) => break 'session, // desync — treat as lost
                     };
+                    bufpool::frame_pool().put(frame);
                     if matches!(ev, Event::SubtaskDone { .. }) {
                         completions += 1;
                         if kill.is_some_and(|k| k.slot == slot && completions >= k.after)
@@ -800,6 +948,7 @@ fn cmd_feed(mut stream: TcpStream, mut fr: FrameReader, tx: Sender<Command>) {
             match fr.next_frame() {
                 Ok(Some(frame)) => match Command::from_wire(&frame) {
                     Ok(c) => {
+                        bufpool::frame_pool().put(frame);
                         if tx.send(c).is_err() {
                             return;
                         }
@@ -1001,6 +1150,17 @@ mod tests {
         }
     }
 
+    /// The split-frame form of [`job`] (same bytes on the wire).
+    fn job_frame() -> JobFrame {
+        JobFrame::new(
+            &BackendSpec::Simulated { subtask_secs: 0.0 },
+            1.0,
+            None,
+            None,
+            JobFrame::shared_tail(None),
+        )
+    }
+
     #[test]
     fn handshake_rejects_unoffered_slots_and_bad_versions() {
         let ep = test_endpoint();
@@ -1026,7 +1186,7 @@ mod tests {
         // the slot; a second dialer claiming it while the session is live
         // gets the named duplicate-lease error.
         let ep = test_endpoint();
-        let (_gen, reply_rx) = ep.register(4, &job());
+        let (_gen, reply_rx) = ep.register(4, &job_frame());
         let (mut first, reply) = dial(ep.addr(), 4, 1);
         assert!(matches!(reply, NetMsg::Welcome { .. }), "{reply:?}");
         let mut fr = FrameReader::default();
@@ -1047,13 +1207,13 @@ mod tests {
         // must be accepted and re-keyed (the Welcome is authoritative),
         // not bounced for staleness.
         let ep = test_endpoint();
-        let (gen1, rx1) = ep.register(2, &job());
+        let (gen1, rx1) = ep.register(2, &job_frame());
         let (_s1, reply1) = dial(ep.addr(), 2, gen1);
         assert_eq!(reply1, NetMsg::Welcome { generation: gen1 });
         let _stream1 = rx1.recv_timeout(Duration::from_secs(5)).unwrap();
         // Crash: the session dies; the reactor re-offers the slot.
         ep.shared.mark_dead(2, gen1);
-        let (gen2, rx2) = ep.register(2, &job());
+        let (gen2, rx2) = ep.register(2, &job_frame());
         assert!(gen2 > gen1);
         // The replacement dials in still carrying the stale generation.
         let (_s2, reply2) = dial(ep.addr(), 2, gen1);
@@ -1084,7 +1244,7 @@ mod tests {
         let worker_side = dialer.join().unwrap();
         let (tx, rx) = std::sync::mpsc::channel();
         let shared = Arc::clone(&ep.shared);
-        ep.register(6, &job());
+        ep.register(6, &job_frame());
         let reader = std::thread::spawn(move || {
             session_reader(
                 session_side,
@@ -1115,6 +1275,150 @@ mod tests {
         // The slot's lease expired with the session.
         let slots = ep.shared.slots.lock().unwrap();
         assert!(slots.get(&6).is_some_and(|st| st.status == SlotStatus::Dead));
+    }
+
+    #[test]
+    fn job_frame_bytes_match_the_contiguous_encoding() {
+        // The vectored split (per-slot head + shared tail, patched
+        // length/chained CRC) must be byte-identical to the canonical
+        // one-buffer `to_wire` frame for every field shape.
+        let msgs = vec![
+            NetMsg::Job {
+                spec: BackendSpec::Simulated { subtask_secs: 0.0125 },
+                multiplier: 2.5,
+                crash_after: Some(4),
+                encoded: Some((2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])),
+                b: Some((3, 2, vec![-1.0, 0.5, 2.0, -2.5, 0.0, 9.0])),
+            },
+            NetMsg::Job {
+                spec: BackendSpec::Native,
+                multiplier: 1.0,
+                crash_after: None,
+                encoded: None,
+                b: Some((1, 2, vec![-0.5, 0.5])),
+            },
+            NetMsg::Job {
+                spec: BackendSpec::Pjrt {
+                    artifact: "m240".into(),
+                    dir: PathBuf::from("/tmp/artifacts"),
+                },
+                multiplier: 1.5,
+                crash_after: Some(1),
+                encoded: Some((1, 1, vec![7.0])),
+                b: None,
+            },
+        ];
+        for msg in msgs {
+            let NetMsg::Job { spec, multiplier, crash_after, encoded, b } = &msg
+            else {
+                unreachable!()
+            };
+            let tail = JobFrame::shared_tail(
+                b.as_ref().map(|(r, c, d)| (*r, *c, d.as_slice())),
+            );
+            let frame = JobFrame::new(
+                spec,
+                *multiplier,
+                *crash_after,
+                encoded.as_ref().map(|(r, c, d)| (*r, *c, d.as_slice())),
+                tail,
+            );
+            let mut joined = frame.head.to_vec();
+            joined.extend_from_slice(&frame.tail);
+            assert_eq!(joined, msg.to_wire(), "head ++ tail != to_wire: {msg:?}");
+            assert_eq!(NetMsg::from_wire(&joined).unwrap(), msg);
+        }
+    }
+
+    /// Writes at most `max` bytes per call, across segment boundaries —
+    /// forces `write_all_vectored` through every re-slicing path.
+    struct Dribble {
+        out: Vec<u8>,
+        max: usize,
+    }
+
+    impl Write for Dribble {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            let n = buf.len().min(self.max);
+            self.out.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn write_vectored(&mut self, bufs: &[IoSlice<'_>]) -> io::Result<usize> {
+            let mut left = self.max;
+            let mut wrote = 0;
+            for b in bufs {
+                let n = b.len().min(left);
+                self.out.extend_from_slice(&b[..n]);
+                wrote += n;
+                left -= n;
+                if left == 0 {
+                    break;
+                }
+            }
+            Ok(wrote)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn write_all_vectored_survives_partial_writes_and_empty_segments() {
+        let segs: [&[u8]; 4] = [b"hand", b"", b"shake", b"frames!"];
+        let want: Vec<u8> = segs.concat();
+        for max in 1..=want.len() {
+            let mut w = Dribble { out: Vec::new(), max };
+            write_all_vectored(&mut w, &segs).unwrap();
+            assert_eq!(w.out, want, "max write {max}");
+        }
+        struct Zero;
+        impl Write for Zero {
+            fn write(&mut self, _buf: &[u8]) -> io::Result<usize> {
+                Ok(0)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let err = write_all_vectored(&mut Zero, &[b"x"]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::WriteZero);
+    }
+
+    #[test]
+    fn tcp_link_disables_nagle() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let dialer = std::thread::spawn(move || TcpStream::connect(addr).unwrap());
+        let _accepted = listener.accept().unwrap();
+        let link = TcpLink::<Event>::new(dialer.join().unwrap());
+        assert!(link.stream.lock().unwrap().nodelay().unwrap());
+    }
+
+    #[test]
+    fn frame_reader_caps_retained_capacity_after_a_jumbo_frame() {
+        // ~2.4 MiB operand-sized frame followed by a tiny one: after the
+        // jumbo frame leaves, the reader's reassembly buffer must not
+        // keep a jumbo-sized capacity pinned for the rest of the session.
+        let jumbo = Event::SubtaskDone {
+            slot: 0,
+            group: 0,
+            data: Some(vec![1.0; 600_000]),
+            elapsed: 0.0,
+        }
+        .to_wire();
+        let small = Event::WorkerJoined { slot: 1 }.to_wire();
+        let mut fr = FrameReader::default();
+        fr.feed(&jumbo);
+        fr.feed(&small);
+        let got = fr.next_frame().unwrap().unwrap();
+        assert_eq!(got, jumbo);
+        assert_eq!(fr.next_frame().unwrap().unwrap(), small);
+        assert!(fr.next_frame().unwrap().is_none());
+        assert!(
+            fr.buf.capacity() <= FRAME_READER_MAX_RETAINED,
+            "reader retained {} bytes of capacity",
+            fr.buf.capacity()
+        );
     }
 
     #[test]

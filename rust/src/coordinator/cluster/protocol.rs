@@ -23,6 +23,7 @@
 //! timeline is one event type end to end.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -31,6 +32,7 @@ use std::time::Instant;
 use crate::linalg::Matrix;
 
 use super::backend::BackendSpec;
+use super::bufpool;
 use super::link::{ChaosRig, Link, MpscLink};
 pub use crate::coordinator::pool::WorkerTask;
 
@@ -80,6 +82,68 @@ impl Event {
             Event::Decoded { max_rel_err, .. } => {
                 format!("decoded (rel err {max_rel_err:.2e})")
             }
+        }
+    }
+}
+
+/// The reactor-facing event sender: a plain mpsc sender plus shared
+/// depth/peak/wait counters, so every producer feeding the reactor —
+/// in-process worker threads, socket session readers, chaos links —
+/// crosses one *counted* queue. The channel itself stays unbounded (a
+/// hard bound could deadlock the reactor against its own producers);
+/// instead, a producer that observes more than
+/// [`bufpool::BACKPRESSURE_DEPTH`] undrained events yields its timeslice
+/// once and counts the stall. Depth peak and stall count surface as
+/// `evt_queue_peak` / `backpressure_waits` in `ClusterReport`.
+#[derive(Clone)]
+pub struct EventSender {
+    tx: Sender<Event>,
+    depth: Arc<AtomicUsize>,
+    peak: Arc<AtomicUsize>,
+    waits: Arc<AtomicUsize>,
+}
+
+impl EventSender {
+    pub fn new(tx: Sender<Event>) -> Self {
+        Self {
+            tx,
+            depth: Arc::new(AtomicUsize::new(0)),
+            peak: Arc::new(AtomicUsize::new(0)),
+            waits: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    /// The reactor calls this once per event it dequeues.
+    pub fn on_recv(&self) {
+        self.depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// High-water mark of undrained events across the job.
+    pub fn queue_peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Producer yields taken above [`bufpool::BACKPRESSURE_DEPTH`].
+    pub fn backpressure_waits(&self) -> usize {
+        self.waits.load(Ordering::Relaxed)
+    }
+}
+
+impl Link<Event> for EventSender {
+    fn send(&self, msg: Event) -> bool {
+        let depth = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak.fetch_max(depth, Ordering::Relaxed);
+        if depth > bufpool::BACKPRESSURE_DEPTH {
+            // Soft backpressure: hand the reactor a scheduling turn and
+            // count the stall — never block.
+            self.waits.fetch_add(1, Ordering::Relaxed);
+            std::thread::yield_now();
+        }
+        if self.tx.send(msg).is_ok() {
+            true
+        } else {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+            false
         }
     }
 }
@@ -143,7 +207,7 @@ pub fn spawn_cluster_worker(
     b: Option<Arc<Matrix>>,
     multiplier: f64,
     stack_kib: usize,
-    evt_tx: Sender<Event>,
+    evt_tx: EventSender,
     chaos: Option<&ChaosRig>,
 ) -> ClusterWorker {
     assert!(multiplier >= 1.0, "multiplier {multiplier} < 1");
@@ -153,8 +217,8 @@ pub fn spawn_cluster_worker(
         None => Box::new(MpscLink(cmd_tx)),
     };
     let evt: Box<dyn Link<Event>> = match chaos {
-        Some(rig) => rig.wrap_evt(slot, evt_tx),
-        None => Box::new(MpscLink(evt_tx)),
+        Some(rig) => rig.wrap_evt_link(slot, Arc::new(evt_tx)),
+        None => Box::new(evt_tx),
     };
     let crash_after = chaos.and_then(|rig| rig.crash_after(slot));
     let join = std::thread::Builder::new()
@@ -201,6 +265,12 @@ pub(crate) fn worker_loop(
     let mut assigned = false;
     let mut delivered = 0usize;
     let empty = Matrix::zeros(0, 0);
+    // Staging scratch, reused across subtasks: once grown to the largest
+    // task the steady-state dispatch loop stops allocating. The no-pool
+    // oracle arm re-allocates it per subtask, reproducing the pre-pool
+    // staging exactly (bit-identical either way — assign_rows copies the
+    // same bytes).
+    let mut scratch = Matrix::zeros(0, 0);
     'life: loop {
         // Injected chaos crash: die loudly, mid-queue, exactly like a
         // worker whose process was killed.
@@ -234,21 +304,23 @@ pub(crate) fn worker_loop(
             break; // drained
         };
         let t0 = Instant::now();
-        // Numeric backends get the task's row slice of the encoded copy;
+        // Numeric backends get the task's row slice of the shared encoded
+        // matrix staged into the scratch block (one contiguous memcpy —
+        // rows are a `Range`, so the source region is contiguous);
         // latency-only backends model the time without the bytes.
         let block = match encoded {
             Some(enc) => {
-                let mut blk = Matrix::zeros(task.rows.len(), enc.cols());
-                for (i, r) in task.rows.clone().enumerate() {
-                    blk.row_mut(i).copy_from_slice(enc.row(r));
+                if !bufpool::pool_enabled() {
+                    scratch = Matrix::zeros(0, 0); // oracle: fresh per subtask
                 }
-                Some(blk)
+                scratch.assign_rows(enc, task.rows.clone());
+                Some(&scratch)
             }
             None => None,
         };
         let data = match backend.execute(
             task.group,
-            block.as_ref().unwrap_or(&empty),
+            block.unwrap_or(&empty),
             b.unwrap_or(&empty),
         ) {
             Ok(d) => d,
@@ -293,7 +365,7 @@ mod tests {
             Some(b),
             1.0,
             512,
-            tx,
+            EventSender::new(tx),
             None,
         );
         assert!(w.send(Command::Assign { tasks: tasks(4, 2) }));
@@ -330,7 +402,7 @@ mod tests {
             None,
             1.0,
             512,
-            tx,
+            EventSender::new(tx),
             None,
         );
         w.send(Command::Assign { tasks: tasks(32, 2) });
@@ -382,7 +454,7 @@ mod tests {
                 Some(b),
                 1.0,
                 512,
-                tx,
+                EventSender::new(tx),
                 None,
             );
             w.send(Command::Assign { tasks: tasks(32, 2) });
@@ -424,7 +496,7 @@ mod tests {
             None,
             1.0,
             512,
-            tx,
+            EventSender::new(tx),
             Some(&rig),
         );
         w.send(Command::Assign { tasks: tasks(16, 2) });
@@ -446,9 +518,43 @@ mod tests {
     }
 
     #[test]
+    fn event_sender_counts_depth_peak_and_backpressure() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let s = EventSender::new(tx);
+        for _ in 0..5 {
+            assert!(s.send(Event::WorkerJoined { slot: 0 }));
+        }
+        assert_eq!(s.queue_peak(), 5);
+        assert_eq!(s.backpressure_waits(), 0, "below the depth cap: no stalls");
+        for _ in 0..5 {
+            rx.recv().unwrap();
+            s.on_recv();
+        }
+        // Push past the backpressure threshold: every send above the cap
+        // counts exactly one soft yield.
+        for _ in 0..bufpool::BACKPRESSURE_DEPTH + 3 {
+            assert!(s.send(Event::WorkerJoined { slot: 0 }));
+        }
+        assert_eq!(s.queue_peak(), bufpool::BACKPRESSURE_DEPTH + 3);
+        assert_eq!(s.backpressure_waits(), 3);
+        // A dead receiver still reports the mpsc contract (send = false).
+        drop(rx);
+        assert!(!s.send(Event::WorkerJoined { slot: 0 }));
+    }
+
+    #[test]
     fn dropping_command_sender_releases_unassigned_worker() {
         let (tx, rx) = std::sync::mpsc::channel();
-        let w = spawn_cluster_worker(9, BackendSpec::Native, None, None, 1.0, 512, tx, None);
+        let w = spawn_cluster_worker(
+            9,
+            BackendSpec::Native,
+            None,
+            None,
+            1.0,
+            512,
+            EventSender::new(tx),
+            None,
+        );
         w.join(); // must not hang: drops the command sender
         let mut saw_left = false;
         while let Ok(ev) = rx.recv() {

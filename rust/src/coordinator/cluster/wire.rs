@@ -137,17 +137,28 @@ pub trait Wire: Sized {
     }
 
     fn to_wire(&self) -> Vec<u8> {
-        let mut payload = Vec::new();
-        self.encode_payload(&mut payload);
-        let mut out = Vec::with_capacity(HEADER + payload.len());
+        let mut out = Vec::new();
+        self.to_wire_into(&mut out);
+        out
+    }
+
+    /// Encode the frame into a reused buffer (cleared first) — one
+    /// encode, zero intermediate payload `Vec`: the payload is written in
+    /// place after an 8-byte placeholder, then the length and CRC are
+    /// patched into the header. Byte-identical to [`Wire::to_wire`]
+    /// (reference-oracle tested), so pooled and fresh encodes are
+    /// interchangeable on the wire.
+    fn to_wire_into(&self, out: &mut Vec<u8>) {
+        out.clear();
         out.extend_from_slice(&MAGIC);
         out.push(Self::KIND);
-        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&[0u8; 8]); // len + crc, patched below
+        self.encode_payload(out);
+        let plen = out.len() - HEADER;
+        out[3..7].copy_from_slice(&(plen as u32).to_le_bytes());
         let mut crc = crc32(0, &[Self::KIND]);
-        crc = crc32(crc, &payload);
-        out.extend_from_slice(&crc.to_le_bytes());
-        out.extend_from_slice(&payload);
-        out
+        crc = crc32(crc, &out[HEADER..]);
+        out[7..11].copy_from_slice(&crc.to_le_bytes());
     }
 
     fn from_wire(bytes: &[u8]) -> Result<Self, WireError> {
@@ -516,6 +527,47 @@ mod tests {
         bad_magic[0] = b'X';
         assert_eq!(Command::from_wire(&bad_magic), Err(WireError::BadMagic));
         assert_eq!(Command::from_wire(&[]), Err(WireError::Truncated));
+    }
+
+    /// The pre-pooling frame construction, kept verbatim as the byte
+    /// oracle for `to_wire_into` (encode payload separately, then
+    /// assemble header + payload).
+    fn reference_wire<T: Wire>(msg: &T) -> Vec<u8> {
+        let mut payload = Vec::new();
+        msg.encode_payload(&mut payload);
+        let mut out = Vec::with_capacity(HEADER + payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.push(T::KIND);
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        let mut crc = crc32(0, &[T::KIND]);
+        crc = crc32(crc, &payload);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    #[test]
+    fn prop_to_wire_into_matches_the_reference_oracle_in_a_dirty_buffer() {
+        // A pooled buffer arrives with arbitrary capacity and stale
+        // garbage from its previous life; the in-place encode must still
+        // produce the exact oracle bytes.
+        check(200, |g| {
+            let mut buf = vec![0xA5u8; g.usize_in(0, 200)];
+            let (got, want) = if g.bool() {
+                let ev = arb_event(g);
+                ev.to_wire_into(&mut buf);
+                (buf, reference_wire(&ev))
+            } else {
+                let cmd = arb_command(g);
+                cmd.to_wire_into(&mut buf);
+                (buf, reference_wire(&cmd))
+            };
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("in-place encode diverged: {got:?} != {want:?}"))
+            }
+        });
     }
 
     #[test]

@@ -93,6 +93,7 @@ impl JobConfig {
             backfill: true,
             chaos: None,
             transport: TransportConfig::default(),
+            evt_batch: 0,
             seed: self.seed,
         }
     }

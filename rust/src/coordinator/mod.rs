@@ -33,11 +33,13 @@ pub mod service;
 pub mod tenancy;
 
 pub use cluster::{
-    run_cluster_job, run_cluster_job_controlled, worker_runtime, BackendSpec,
-    ChaosConfig, ChaosLink, ClusterBackend, ClusterConfig, ClusterElasticity,
-    ClusterReport, Command, CrashSpec, Event, FaultRates, KillSpec, Link, MpscLink,
-    NativeGemm, Partition, RecoveryLedger, SimulatedLatency, SpeedSource,
+    evt_batch_default, f32_pool, frame_pool, pool_enabled, run_cluster_job,
+    run_cluster_job_controlled, worker_runtime, BackendSpec, ChaosConfig, ChaosLink,
+    ClusterBackend, ClusterConfig, ClusterElasticity, ClusterReport, Command,
+    CrashSpec, Event, EventSender, FaultRates, JobFrame, KillSpec, Link, MpscLink,
+    NativeGemm, Partition, Pool, RecoveryLedger, SimulatedLatency, SpeedSource,
     TcpTransport, TransportConfig, Wire, WireError, WorkerBackend,
+    BACKPRESSURE_DEPTH, EVT_BATCH_DEFAULT, MAX_POOLED_BUFS, MAX_POOLED_BYTES,
 };
 pub use master::{run_job, ExecBackend, JobConfig, JobReport, SchemeConfig};
 pub use service::{serve, ServiceConfig, ServiceReport};

@@ -477,6 +477,7 @@ pub fn run_tenant_service(
                 backfill: req.backfill,
                 chaos: None,
                 transport: cfg.transport.clone(),
+                evt_batch: 0,
                 seed: req.seed,
             };
             let tx = done_tx.clone();

@@ -101,6 +101,8 @@ pub fn cluster_table(
         "replans",
         "completions",
         "failures",
+        "q_peak",
+        "bp_waits",
     ]);
     for &n in ns {
         let sc = cluster_scenario(cfg, n, events_per_node, trials, time_scale, backfill);
@@ -108,6 +110,10 @@ pub fn cluster_table(
         for s in &out.per_scheme {
             let replans: usize = s.ok_trials().map(|t| t.reallocations).sum();
             let completions: u64 = s.ok_trials().map(|t| t.completions).sum();
+            // Queue high-water mark is a gauge (worst trial); backpressure
+            // stalls accumulate across trials.
+            let q_peak = s.ok_trials().map(|t| t.evt_queue_peak).max().unwrap_or(0);
+            let bp_waits: usize = s.ok_trials().map(|t| t.backpressure_waits).sum();
             t.row(vec![
                 n.to_string(),
                 s.scheme.clone(),
@@ -116,6 +122,8 @@ pub fn cluster_table(
                 replans.to_string(),
                 completions.to_string(),
                 s.failures().to_string(),
+                q_peak.to_string(),
+                bp_waits.to_string(),
             ]);
         }
     }

@@ -84,6 +84,26 @@ impl Matrix {
         &self.data
     }
 
+    /// Contiguous row-major view of rows `r` — a worker task's row range
+    /// is one slice, not a per-row walk.
+    #[inline]
+    pub fn rows_slice(&self, r: std::ops::Range<usize>) -> &[f32] {
+        debug_assert!(r.end <= self.rows);
+        &self.data[r.start * self.cols..r.end * self.cols]
+    }
+
+    /// Reuse `self`'s allocation as a staging block: reshape to
+    /// `r.len() x src.cols()` and overwrite with one contiguous copy of
+    /// `src`'s rows `r`. This is the cluster worker's steady-state
+    /// dispatch path — once the scratch has grown to the largest task it
+    /// never allocates again.
+    pub fn assign_rows(&mut self, src: &Matrix, r: std::ops::Range<usize>) {
+        self.rows = r.len();
+        self.cols = src.cols;
+        self.data.clear();
+        self.data.extend_from_slice(src.rows_slice(r));
+    }
+
     /// Mutable view of the full row-major buffer. The parallel gemm splits
     /// this into disjoint row bands, one per worker thread.
     pub fn as_mut_slice(&mut self) -> &mut [f32] {
@@ -185,6 +205,27 @@ mod tests {
     #[should_panic]
     fn from_vec_rejects_bad_shape() {
         let _ = Matrix::from_vec(2, 2, vec![1.0; 5]);
+    }
+
+    #[test]
+    fn assign_rows_matches_per_row_copy_and_reuses_capacity() {
+        let mut rng = default_rng(3);
+        let src = Matrix::random(16, 5, &mut rng);
+        let mut scratch = Matrix::zeros(0, 0);
+        for r in [0..4usize, 7..16, 2..3, 0..16] {
+            // Reference: the pre-refactor per-row staging loop.
+            let mut want = Matrix::zeros(r.len(), src.cols());
+            for (i, row) in r.clone().enumerate() {
+                want.row_mut(i).copy_from_slice(src.row(row));
+            }
+            scratch.assign_rows(&src, r.clone());
+            assert_eq!(scratch, want, "rows {r:?}");
+            assert_eq!(scratch.rows_slice(0..scratch.rows()), want.as_slice());
+        }
+        // Shrinking reassignments keep the grown allocation.
+        let cap = scratch.data.capacity();
+        scratch.assign_rows(&src, 1..2);
+        assert_eq!(scratch.data.capacity(), cap, "scratch must not reallocate");
     }
 
     #[test]

@@ -143,6 +143,13 @@ pub struct TrialOutcome {
     pub duplicates_suppressed: usize,
     /// Frames the wire checksum rejected at decode.
     pub corruptions_dropped: usize,
+    /// Data-plane gauge (cluster/service engines; 0 elsewhere): high-water
+    /// mark of undrained events on the reactor's counted channel.
+    pub evt_queue_peak: usize,
+    /// Producer yields taken above the reactor's backpressure depth
+    /// threshold (soft backpressure stalls; 0 = producers never outran
+    /// the drain loop by more than the threshold).
+    pub backpressure_waits: usize,
     /// Service-engine extras (`None` elsewhere): the whole job stream's
     /// latency SLO and fleet-utilisation numbers for this trial.
     pub service: Option<ServiceStats>,
@@ -247,7 +254,9 @@ impl Outcome {
         ];
         let robust = self.engine == Engine::Cluster;
         if robust {
-            cols.extend_from_slice(&["crashes", "retries", "dups_sup", "corrupt_drop"]);
+            cols.extend_from_slice(&[
+                "crashes", "retries", "dups_sup", "corrupt_drop", "q_peak", "bp_waits",
+            ]);
         }
         let service = self.engine == Engine::Service;
         if service {
@@ -279,6 +288,10 @@ impl Outcome {
                 row.push(sum(|t| t.retries).to_string());
                 row.push(sum(|t| t.duplicates_suppressed).to_string());
                 row.push(sum(|t| t.corruptions_dropped).to_string());
+                // Queue peak is a gauge (worst trial), stalls accumulate.
+                let peak = s.ok_trials().map(|t| t.evt_queue_peak).max().unwrap_or(0);
+                row.push(peak.to_string());
+                row.push(sum(|t| t.backpressure_waits).to_string());
             }
             if service {
                 // Jobs and preemptions are stream totals; the SLO and
@@ -314,6 +327,19 @@ impl Outcome {
             totals.3 += t.corruptions_dropped;
         }
         totals
+    }
+
+    /// Data-plane gauges over every scheme's successful trials:
+    /// `(evt_queue_peak, backpressure_waits)` — the queue peak is the
+    /// worst single trial's high-water mark, the stall count accumulates.
+    pub fn dataplane_totals(&self) -> (usize, usize) {
+        let mut peak = 0;
+        let mut waits = 0;
+        for t in self.per_scheme.iter().flat_map(|s| s.ok_trials()) {
+            peak = peak.max(t.evt_queue_peak);
+            waits += t.backpressure_waits;
+        }
+        (peak, waits)
     }
 }
 
@@ -355,6 +381,8 @@ fn run_statics(sc: &Scenario) -> Vec<SchemeOutcome> {
                     retries: 0,
                     duplicates_suppressed: 0,
                     corruptions_dropped: 0,
+                    evt_queue_peak: 0,
+                    backpressure_waits: 0,
                     service: None,
                 })
             })
@@ -448,6 +476,8 @@ fn trace_trial(r: crate::sim::TraceOutcome) -> TrialOutcome {
         retries: 0,
         duplicates_suppressed: 0,
         corruptions_dropped: 0,
+        evt_queue_peak: 0,
+        backpressure_waits: 0,
         service: None,
     }
 }
@@ -530,6 +560,7 @@ fn run_cluster(sc: &Scenario) -> Vec<SchemeOutcome> {
                         backfill,
                         chaos,
                         transport: transport_config(&sc.transport),
+                        evt_batch: 0,
                         seed,
                     };
                     // Elastic runs have legitimate per-trial failures
@@ -562,6 +593,8 @@ fn cluster_trial(r: ClusterReport) -> TrialOutcome {
         retries: r.retries,
         duplicates_suppressed: r.duplicates_suppressed,
         corruptions_dropped: r.corruptions_dropped,
+        evt_queue_peak: r.evt_queue_peak,
+        backpressure_waits: r.backpressure_waits,
         service: None,
     }
 }
@@ -695,6 +728,8 @@ fn service_trial(
         retries: 0,
         duplicates_suppressed: 0,
         corruptions_dropped: 0,
+        evt_queue_peak: 0,
+        backpressure_waits: 0,
         service: None,
     };
     let mut queue_wait = 0.0;
@@ -707,6 +742,8 @@ fn service_trial(
         out.reallocations += r.reallocations + r.workers_preempted;
         out.completions += r.completions_received as u64;
         out.max_rel_err = out.max_rel_err.max(r.max_rel_err as f64);
+        out.evt_queue_peak = out.evt_queue_peak.max(r.evt_queue_peak);
+        out.backpressure_waits += r.backpressure_waits;
     }
     let lat = rep.latency_summary();
     out.service = Some(ServiceStats {
@@ -762,6 +799,8 @@ fn run_coordinator(sc: &Scenario) -> Result<Vec<SchemeOutcome>, String> {
                 retries: 0,
                 duplicates_suppressed: 0,
                 corruptions_dropped: 0,
+                evt_queue_peak: 0,
+                backpressure_waits: 0,
                 service: None,
             }));
         }

@@ -1,0 +1,136 @@
+//! Counting-allocator smoke for the zero-copy data plane (feature
+//! `count-alloc`, off by default — a counting allocator taxes every test
+//! in the binary, so CI runs this file as its own step):
+//!
+//! ```text
+//! cargo test -q --features count-alloc --test alloc_counter
+//! HCEC_NO_POOL=1 cargo test -q --features count-alloc --test alloc_counter
+//! ```
+//!
+//! The claim under test: once warmed, the reactor's per-event hot paths
+//! (worker staging scratch, frame encode into a pooled buffer, pooled
+//! decode-combine coefficient buffer) allocate nothing per subtask event.
+//! The assertion is knob-agnostic — on the `HCEC_NO_POOL=1` oracle arm
+//! the very same loop MUST allocate, which also proves the counter is
+//! live (a silently-broken counter would read zero on both arms and the
+//! oracle arm's `> 0` assertion would catch it).
+#![cfg(feature = "count-alloc")]
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use hcec::coordinator::{f32_pool, frame_pool, pool_enabled, Event, Wire};
+use hcec::linalg::Matrix;
+
+/// System allocator with a thread-local tracking gate: only allocations
+/// made by a thread inside [`counted`] are tallied, so the parallel test
+/// harness's other threads never pollute the count.
+struct CountingAlloc;
+
+thread_local! {
+    // const-init: reading the gate inside `alloc` must itself be
+    // allocation-free (lazy TLS init could recurse into the allocator).
+    static TRACK: Cell<bool> = const { Cell::new(false) };
+}
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+fn tracking() -> bool {
+    TRACK.with(|t| t.get())
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if tracking() {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if tracking() {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Run `f` with this thread's allocations counted; returns the count.
+fn counted<R>(f: impl FnOnce() -> R) -> (usize, R) {
+    let before = ALLOCS.load(Ordering::Relaxed);
+    TRACK.with(|t| t.set(true));
+    let r = f();
+    TRACK.with(|t| t.set(false));
+    (ALLOCS.load(Ordering::Relaxed) - before, r)
+}
+
+#[test]
+fn the_counter_itself_is_live() {
+    let (n, v) = counted(|| Vec::<u8>::with_capacity(4096));
+    assert!(n > 0, "a fresh 4 KiB Vec must register");
+    drop(v);
+    let (n, _) = counted(|| 2 + 2);
+    assert_eq!(n, 0, "pure arithmetic must not register");
+}
+
+/// The steady-state dispatch loop, distilled: per subtask event the
+/// worker stages its coded rows into a reused scratch matrix
+/// (`protocol::worker_loop`), the TCP path encodes a frame into a pooled
+/// buffer (`net`), and decode refills a pooled coefficient buffer
+/// (`cluster::decode`). After one warm-up lap, a full lap allocates
+/// nothing — unless the `HCEC_NO_POOL=1` oracle arm forces the legacy
+/// fresh-allocation behaviour, in which case it must allocate every lap.
+#[test]
+fn warm_dispatch_lap_is_allocation_free_when_pooled() {
+    let enc = Matrix::identity(64);
+    let rows = 8..24;
+    let event = Event::SubtaskDone {
+        slot: 3,
+        group: 7,
+        data: Some(vec![1.5f32; 256]),
+        elapsed: 0.25,
+    };
+    let coeffs = [0.5f64; 32];
+
+    // Warm-up lap: grows the scratch, charges the pools.
+    let mut scratch = Matrix::zeros(0, 0);
+    scratch.assign_rows(&enc, rows.clone());
+    let mut frame = frame_pool().get();
+    event.to_wire_into(&mut frame);
+    frame_pool().put(frame);
+    let mut inv = f32_pool().get();
+    inv.extend(coeffs.iter().map(|&v| v as f32));
+    f32_pool().put(inv);
+
+    // Ten steady-state laps, mimicking the worker/reactor paths exactly —
+    // including the oracle arm's scratch reset (worker_loop does the same
+    // so `HCEC_NO_POOL=1` reproduces the historical clone-per-task path).
+    let (n, _) = counted(|| {
+        for _ in 0..10 {
+            if !pool_enabled() {
+                scratch = Matrix::zeros(0, 0);
+            }
+            scratch.assign_rows(&enc, rows.clone());
+            let mut frame = frame_pool().get();
+            event.to_wire_into(&mut frame);
+            frame_pool().put(frame);
+            let mut inv = f32_pool().get();
+            inv.clear();
+            inv.extend(coeffs.iter().map(|&v| v as f32));
+            f32_pool().put(inv);
+        }
+    });
+    if pool_enabled() {
+        assert_eq!(n, 0, "pooled steady state allocated {n} times in 10 laps");
+    } else {
+        assert!(n > 0, "the HCEC_NO_POOL oracle arm must allocate per lap");
+    }
+}

@@ -163,6 +163,109 @@ fn cluster_engine_simulated_latency_at_n640() {
     assert!(trial.computation_time > 0.0);
 }
 
+/// Batched event drain is a pure latency optimisation: at `evt_batch = 1`
+/// the reactor is bit-for-bit the pre-batching loop (one recv, one
+/// handle), and any larger batch must land on the identical deterministic
+/// outcome — same credited completions, same priced waste, same re-plan
+/// count — because batching only changes *when* the reactor drains the
+/// queue, never what it does with each event.
+#[test]
+fn batched_reactor_matches_the_batch_one_oracle() {
+    let job = JobSpec::new(240, 240, 240);
+    let n_max = 9usize;
+    let scheme = hcec::tas::Cec::new(3, 6);
+    let tau = 0.060;
+    let ops = scheme.subtask_ops(job.u, job.w, job.v, 8);
+    let cost =
+        CostModel { worker_ops_per_sec: ops as f64 / tau, decode_ops_per_sec: 1e10 };
+    let trace = ElasticTrace {
+        n_max,
+        n_initial: 8,
+        events: vec![
+            ElasticEvent { time: 1.5 * tau, kind: EventKind::Leave(7) },
+            ElasticEvent { time: 1.5 * tau, kind: EventKind::Join(8) },
+        ],
+    };
+    let run = |evt_batch: usize| {
+        let cfg = ClusterConfig {
+            job,
+            scheme: SchemeConfig::Cec { k: 3, s: 6 },
+            n_max,
+            n_workers: 8,
+            backend: ClusterBackend::Simulated { time_scale: 1.0 },
+            speed: SpeedSource::Uniform,
+            cost,
+            elasticity: ClusterElasticity::Trace(trace.clone()),
+            preempt_after_first: 0,
+            backfill: true,
+            chaos: None,
+            transport: TransportConfig::default(),
+            evt_batch,
+            seed: 1,
+        };
+        run_cluster_job(&cfg).unwrap()
+    };
+    let oracle = run(1);
+    for batch in [0, 64] {
+        let batched = run(batch);
+        assert_eq!(batched.scheme, oracle.scheme);
+        assert_eq!(
+            batched.completions_used, oracle.completions_used,
+            "batch {batch} changed the credited completions"
+        );
+        assert_eq!(batched.recovered, oracle.recovered);
+        assert_eq!(
+            batched.transition_waste, oracle.transition_waste,
+            "batch {batch} changed the priced waste"
+        );
+        assert_eq!(batched.reallocations, oracle.reallocations);
+        assert_eq!((batched.joins, batched.leaves), (oracle.joins, oracle.leaves));
+    }
+}
+
+#[test]
+fn cluster_engine_simulated_latency_batched_at_n2560() {
+    // The data-plane acceptance bar: 2560 real worker threads through the
+    // batched reactor (default drain cap) with the Arc'd share store and
+    // pooled frames on the hot path. Same shape as the N=640 bar, 4x the
+    // fleet; the cost-model subtask shrinks with N so the wall sleeps stay
+    // in the tens of microseconds.
+    let sc = Scenario::builder("test_cluster_n2560")
+        .engine(Engine::Cluster)
+        .job(JobSpec::paper_square())
+        .fleet(2560, 2560)
+        .schemes(vec![SchemeConfig::Cec { k: 10, s: 20 }])
+        .elasticity(ElasticitySpec::Churn {
+            n_min: 1280,
+            n_initial: 2560,
+            rate: 1111.0,
+            horizon: 0.0288,
+            reassign: Reassign::Identity,
+        })
+        .cluster(ClusterSpec {
+            backend: ClusterBackendSpec::SimulatedLatency,
+            time_scale: 0.05,
+            preempt_after_first: 0,
+            backfill: BackfillSpec::On,
+        })
+        .trials(1)
+        .seed(11)
+        .seed_mode(SeedMode::PerTrial)
+        .build()
+        .unwrap();
+    let out = sc.run().unwrap();
+    let s = &out.per_scheme[0];
+    assert_eq!(s.failures(), 0, "{:?}", s.trials);
+    let trial = s.ok_trials().next().unwrap();
+    // 2560 sets x K=10 credited completions is the floor.
+    assert!(trial.completions >= 25600, "completions {}", trial.completions);
+    assert_eq!(trial.max_rel_err, 0.0, "latency backend ships no bytes");
+    assert!(trial.computation_time > 0.0);
+    // The counted event channel saw traffic: every completion passes
+    // through it, so the high-water mark is at least one.
+    assert!(trial.evt_queue_peak >= 1, "queue peak {}", trial.evt_queue_peak);
+}
+
 /// DES <-> cluster transition-waste parity on a granularity-preserving
 /// trace. Both engines route elastic events through `tas::planner` and
 /// price them with `tas::transition`'s metric; they only diverge when the
@@ -207,6 +310,7 @@ fn des_cluster_waste_parity_on_swap_churn() {
         backfill: true,
         chaos: None,
         transport: TransportConfig::default(),
+        evt_batch: 0,
         seed: 1,
     };
     let cluster = run_cluster_job(&cfg).unwrap();
@@ -263,6 +367,7 @@ fn des_cluster_waste_parity_bicec_zero() {
         backfill: true,
         chaos: None,
         transport: TransportConfig::default(),
+        evt_batch: 0,
         seed: 1,
     };
     let cluster = run_cluster_job(&cfg).unwrap();

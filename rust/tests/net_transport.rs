@@ -38,6 +38,7 @@ fn tcp_config(job: JobSpec, seed: u64) -> ClusterConfig {
         backfill: true,
         chaos: None,
         transport: tcp_transport(None),
+        evt_batch: 0,
         seed,
     }
 }
